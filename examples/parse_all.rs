@@ -1,0 +1,16 @@
+//! Artifact sanity: parse every manifest entry's HLO text through the same
+//! XLA text parser the runtime uses (`HloModuleProto::from_text_file`).
+//! Catches jax-emitted instructions the pinned xla_extension 0.5.1 cannot
+//! parse (e.g. `topk(..., largest=true)`) without paying full compilation.
+fn main() {
+    let rt = fedselect::runtime::PjrtRuntime::load("artifacts").unwrap();
+    let names: Vec<String> = rt.manifest().names().iter().map(|s| s.to_string()).collect();
+    for name in names {
+        let art = rt.artifact(&name).unwrap().clone();
+        let path = format!("artifacts/{}", art.path);
+        match xla::HloModuleProto::from_text_file(path.as_str()) {
+            Ok(_) => println!("OK   {name}"),
+            Err(e) => println!("FAIL {name}: {}", e.to_string().lines().next().unwrap_or("")),
+        }
+    }
+}

@@ -1,0 +1,391 @@
+"""AOT compiler: lower every (model, shape) variant to HLO text + manifest.
+
+This is the single build-time entry point (``make artifacts``). It enumerates
+the variant grid needed by the experiment harness (one artifact per static
+shape configuration: FedSelect slice sizes are static per variant, the
+learning rate is a runtime scalar input), lowers each jitted L2 function to
+**HLO text**, and writes ``artifacts/manifest.json`` describing argument
+order/shapes/dtypes for the Rust runtime.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32, I32 = "f32", "i32"
+
+# ---------------------------------------------------------------------------
+# Variant grid (scaled-down defaults; see DESIGN.md §4 for the mapping to the
+# paper's scales — flags below extend toward paper scale).
+# ---------------------------------------------------------------------------
+
+LOGREG_TAGS = 50
+LOGREG_CU_M = [64, 256, 1024, 2048, 8192]
+LOGREG_EVAL_N = [512, 2048, 8192]
+LOGREG_S, LOGREG_MB = 4, 16
+LOGREG_EVAL_B = 256
+
+MLP_HIDDEN, MLP_CLASSES = 200, 62
+MLP_CU_M = [10, 50, 100, 200]
+MLP_S, MLP_MB = 4, 16
+MLP_EVAL_B = 256
+
+CNN_CLASSES = 62
+CNN_CU_M = [4, 8, 16, 32, 64]
+CNN_S, CNN_MB = 2, 10
+CNN_EVAL_B = 64
+
+TF_VOCAB, TF_D, TF_SEQ, TF_LAYERS, TF_HEADS, TF_FFN = 2048, 128, 20, 2, 4, 512
+TF_ALPHAS = [16, 8, 4, 2]  # denominators: mv = vocab/a, dh = ffn/a
+TF_S, TF_MB = 2, 8
+TF_EVAL_MB = 32
+
+E2E_VOCAB, E2E_D, E2E_SEQ, E2E_LAYERS, E2E_HEADS, E2E_FFN = 65536, 256, 32, 4, 8, 1024
+E2E_MV, E2E_DH = 1024, 256
+E2E_S, E2E_MB = 2, 8
+E2E_EVAL_MB = 4
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(s):
+    return I32 if s.dtype == jnp.int32 else F32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Registry:
+    def __init__(self):
+        self.entries = []
+
+    def add(self, name, fn, in_named, out_names, model, kind, meta):
+        """in_named: list of (arg_name, ShapeDtypeStruct)."""
+        self.entries.append(
+            dict(
+                name=name,
+                fn=fn,
+                in_named=in_named,
+                out_names=out_names,
+                model=model,
+                kind=kind,
+                meta=meta,
+            )
+        )
+
+
+def build_registry(quick: bool = False) -> Registry:
+    reg = Registry()
+
+    # -- logreg ------------------------------------------------------------
+    t = LOGREG_TAGS
+    s_, mb = LOGREG_S, LOGREG_MB
+    cu_ms = LOGREG_CU_M if not quick else LOGREG_CU_M[:2]
+    for m in cu_ms:
+        ins = [
+            ("w", spec((m, t))),
+            ("b", spec((t,))),
+            ("x", spec((s_, mb, m))),
+            ("y", spec((s_, mb, t))),
+            ("wgt", spec((s_, mb))),
+            ("lr", spec(())),
+        ]
+        reg.add(
+            f"logreg_cu_m{m}",
+            M.logreg_client_update,
+            ins,
+            ["dw", "db"],
+            "logreg",
+            "client_update",
+            dict(m=m, t=t, s=s_, mb=mb),
+        )
+    eval_ns = LOGREG_EVAL_N if not quick else LOGREG_EVAL_N[:1]
+    for n in eval_ns:
+        ins = [
+            ("w", spec((n, t))),
+            ("b", spec((t,))),
+            ("x", spec((LOGREG_EVAL_B, n))),
+            ("y", spec((LOGREG_EVAL_B, t))),
+            ("wgt", spec((LOGREG_EVAL_B,))),
+        ]
+        reg.add(
+            f"logreg_eval_n{n}",
+            M.logreg_eval,
+            ins,
+            ["loss_sum", "rec5_sum", "wsum"],
+            "logreg",
+            "eval",
+            dict(n=n, t=t, b=LOGREG_EVAL_B),
+        )
+
+    # -- mlp2nn --------------------------------------------------------------
+    h, c = MLP_HIDDEN, MLP_CLASSES
+    s_, mb = MLP_S, MLP_MB
+    cu_ms = MLP_CU_M if not quick else MLP_CU_M[:1]
+    for m in cu_ms:
+        ins = [
+            ("w1", spec((784, m))),
+            ("b1", spec((m,))),
+            ("w2", spec((m, h))),
+            ("b2", spec((h,))),
+            ("w3", spec((h, c))),
+            ("b3", spec((c,))),
+            ("x", spec((s_, mb, 784))),
+            ("y", spec((s_, mb), jnp.int32)),
+            ("wgt", spec((s_, mb))),
+            ("lr", spec(())),
+        ]
+        reg.add(
+            f"mlp_cu_m{m}",
+            M.mlp2nn_client_update,
+            ins,
+            ["dw1", "db1", "dw2", "db2", "dw3", "db3"],
+            "mlp2nn",
+            "client_update",
+            dict(m=m, hidden=h, classes=c, s=s_, mb=mb),
+        )
+    ins = [
+        ("w1", spec((784, h))),
+        ("b1", spec((h,))),
+        ("w2", spec((h, h))),
+        ("b2", spec((h,))),
+        ("w3", spec((h, c))),
+        ("b3", spec((c,))),
+        ("x", spec((MLP_EVAL_B, 784))),
+        ("y", spec((MLP_EVAL_B,), jnp.int32)),
+        ("wgt", spec((MLP_EVAL_B,))),
+    ]
+    reg.add(
+        "mlp_eval",
+        M.mlp2nn_eval,
+        ins,
+        ["loss_sum", "correct", "wsum"],
+        "mlp2nn",
+        "eval",
+        dict(m=h, hidden=h, classes=c, b=MLP_EVAL_B),
+    )
+
+    # -- cnn ---------------------------------------------------------------
+    if not quick:
+        c = CNN_CLASSES
+        s_, mb = CNN_S, CNN_MB
+        for m in CNN_CU_M:
+            ins = [
+                ("k1", spec((5, 5, 1, 32))),
+                ("c1", spec((32,))),
+                ("k2", spec((5, 5, 32, m))),
+                ("c2", spec((m,))),
+                ("w1", spec((7 * 7 * m, 512))),
+                ("d1", spec((512,))),
+                ("w2", spec((512, c))),
+                ("d2", spec((c,))),
+                ("x", spec((s_, mb, 28, 28, 1))),
+                ("y", spec((s_, mb), jnp.int32)),
+                ("wgt", spec((s_, mb))),
+                ("lr", spec(())),
+            ]
+            reg.add(
+                f"cnn_cu_m{m}",
+                M.cnn_client_update,
+                ins,
+                ["dk1", "dc1", "dk2", "dc2", "dw1", "dd1", "dw2", "dd2"],
+                "cnn",
+                "client_update",
+                dict(m=m, classes=c, s=s_, mb=mb),
+            )
+        m = 64
+        ins = [
+            ("k1", spec((5, 5, 1, 32))),
+            ("c1", spec((32,))),
+            ("k2", spec((5, 5, 32, m))),
+            ("c2", spec((m,))),
+            ("w1", spec((7 * 7 * m, 512))),
+            ("d1", spec((512,))),
+            ("w2", spec((512, c))),
+            ("d2", spec((c,))),
+            ("x", spec((CNN_EVAL_B, 28, 28, 1))),
+            ("y", spec((CNN_EVAL_B,), jnp.int32)),
+            ("wgt", spec((CNN_EVAL_B,))),
+        ]
+        reg.add(
+            "cnn_eval",
+            M.cnn_eval,
+            ins,
+            ["loss_sum", "correct", "wsum"],
+            "cnn",
+            "eval",
+            dict(m=m, classes=c, b=CNN_EVAL_B),
+        )
+
+    # -- transformer ---------------------------------------------------------
+    def add_tf(name, cfg: M.TransformerCfg, s_, mb, vocab, kind, eval_mb=None):
+        names = list(cfg.param_names())
+        shapes = list(cfg.param_shapes())
+        pins = [(n, spec(sh)) for n, sh in zip(names, shapes)]
+        meta = dict(
+            mv=cfg.mv,
+            d=cfg.d,
+            seq=cfg.seq,
+            layers=cfg.layers,
+            heads=cfg.heads,
+            dh=cfg.dh,
+            vocab=vocab,
+            param_names=names,
+        )
+        if kind == "client_update":
+            ins = pins + [
+                ("x", spec((s_, mb, cfg.seq), jnp.int32)),
+                ("y", spec((s_, mb, cfg.seq), jnp.int32)),
+                ("wgt", spec((s_, mb, cfg.seq))),
+                ("lr", spec(())),
+            ]
+            meta.update(s=s_, mb=mb)
+            reg.add(
+                name,
+                M.make_transformer_client_update(cfg),
+                ins,
+                ["d_" + n for n in names],
+                "transformer",
+                kind,
+                meta,
+            )
+        else:
+            ins = pins + [
+                ("x", spec((eval_mb, cfg.seq), jnp.int32)),
+                ("y", spec((eval_mb, cfg.seq), jnp.int32)),
+                ("wgt", spec((eval_mb, cfg.seq))),
+            ]
+            meta.update(b=eval_mb)
+            reg.add(
+                name,
+                M.make_transformer_eval(cfg),
+                ins,
+                ["loss_sum", "correct", "wsum"],
+                "transformer",
+                kind,
+                meta,
+            )
+
+    if not quick:
+        combos = set()
+        for a in TF_ALPHAS:
+            combos.add((TF_VOCAB // a, TF_FFN))  # structured only
+            combos.add((TF_VOCAB, TF_FFN // a))  # random only
+            combos.add((TF_VOCAB // a, TF_FFN // a))  # mixed
+        combos.add((TF_VOCAB, TF_FFN))  # no selection (baseline)
+        for mv, dh in sorted(combos):
+            cfg = M.TransformerCfg(
+                mv=mv, d=TF_D, seq=TF_SEQ, layers=TF_LAYERS, heads=TF_HEADS, dh=dh
+            )
+            add_tf(
+                f"tf_cu_v{mv}_h{dh}", cfg, TF_S, TF_MB, TF_VOCAB, "client_update"
+            )
+        full = M.TransformerCfg(
+            mv=TF_VOCAB, d=TF_D, seq=TF_SEQ, layers=TF_LAYERS, heads=TF_HEADS, dh=TF_FFN
+        )
+        add_tf("tf_eval", full, 0, 0, TF_VOCAB, "eval", eval_mb=TF_EVAL_MB)
+
+        # end-to-end driver variant (large server model, small client slice)
+        e2e_cfg = M.TransformerCfg(
+            mv=E2E_MV, d=E2E_D, seq=E2E_SEQ, layers=E2E_LAYERS, heads=E2E_HEADS, dh=E2E_DH
+        )
+        add_tf("e2e_cu", e2e_cfg, E2E_S, E2E_MB, E2E_VOCAB, "client_update")
+        e2e_full = M.TransformerCfg(
+            mv=E2E_VOCAB, d=E2E_D, seq=E2E_SEQ, layers=E2E_LAYERS, heads=E2E_HEADS, dh=E2E_FFN
+        )
+        add_tf("e2e_eval", e2e_full, 0, 0, E2E_VOCAB, "eval", eval_mb=E2E_EVAL_MB)
+
+    return reg
+
+
+def lower_entry(entry, out_dir):
+    specs = [s for _, s in entry["in_named"]]
+    lowered = jax.jit(entry["fn"]).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, entry["name"] + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(entry["fn"], *specs)
+    flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+    manifest_entry = dict(
+        name=entry["name"],
+        path=entry["name"] + ".hlo.txt",
+        model=entry["model"],
+        kind=entry["kind"],
+        meta=entry["meta"],
+        inputs=[
+            dict(name=n, shape=list(s.shape), dtype=_dt(s))
+            for n, s in entry["in_named"]
+        ],
+        outputs=[
+            dict(name=n, shape=list(s.shape), dtype=_dt(s))
+            for n, s in zip(entry["out_names"], flat_out)
+        ],
+        hlo_sha256=hashlib.sha256(text.encode()).hexdigest(),
+    )
+    return manifest_entry, len(text)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument(
+        "--quick", action="store_true", help="small subset (CI / python tests)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    reg = build_registry(quick=args.quick)
+    entries = reg.entries
+    if args.only:
+        rx = re.compile(args.only)
+        entries = [e for e in entries if rx.search(e["name"])]
+    manifest = []
+    t_start = time.time()
+    for i, e in enumerate(entries):
+        t0 = time.time()
+        me, nchars = lower_entry(e, args.out_dir)
+        manifest.append(me)
+        print(
+            f"[{i + 1}/{len(entries)}] {e['name']}: {nchars} chars "
+            f"({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(dict(version=1, artifacts=manifest), f, indent=1)
+    print(f"wrote {len(manifest)} artifacts in {time.time() - t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT artifacts).
+
+All kernels run with ``interpret=True`` so the emitted HLO executes on the
+CPU PJRT plugin used by the Rust runtime; the BlockSpecs are written for the
+TPU memory hierarchy (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .embed import embed_lookup
+from .gather_rows import gather_rows
+from .scatter_add_rows import scatter_add_rows
+from .tiled_matmul import matmul, pmatmul
+
+__all__ = [
+    "embed_lookup",
+    "gather_rows",
+    "scatter_add_rows",
+    "matmul",
+    "pmatmul",
+]

@@ -1,0 +1,33 @@
+"""Differentiable embedding lookup built from the gather/scatter kernel pair.
+
+FedSelect's ψ (select) and φ (deselect) have an exact analogue inside the
+model graph: the forward embedding lookup is a row-gather, and its vjp is a
+row scatter-add. Pairing the two Pallas kernels through ``jax.custom_vjp``
+means the transformer's embedding layer exercises both kernels in the single
+AOT-compiled client-update executable.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .gather_rows import gather_rows
+from .scatter_add_rows import scatter_add_rows
+
+
+@jax.custom_vjp
+def embed_lookup(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """``table[idx]`` with a scatter-add backward, both as Pallas kernels."""
+    return gather_rows(table, idx)
+
+
+def _embed_fwd(table, idx):
+    return gather_rows(table, idx), (idx, table.shape[0])
+
+
+def _embed_bwd(res, g):
+    idx, num_rows = res
+    return scatter_add_rows(g, idx, num_rows), None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)

@@ -1,0 +1,53 @@
+"""Pallas row-gather kernel: the select function ψ as an on-device gather.
+
+``gather_rows(table, idx)`` returns ``out`` with ``out[i, :] = table[idx[i], :]``.
+
+This is the Layer-1 realisation of FedSelect's ψ for row-keyed parameters
+(embedding rows, logistic-regression weight rows): each select key picks one
+row of a server-side table. The kernel is written TPU-first:
+
+* the grid iterates over *output* rows (one select key per grid step), which
+  on TPU is a sequential per-core schedule — no atomics or warp shuffles;
+* the table is presented as a single VMEM-resident block (for the sliced
+  sub-models this library feeds it, the table is the *client* slice, well
+  under the ~16 MiB VMEM budget; the server-scale gather happens in Rust);
+* ``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; on a real TPU the same BlockSpec schedule applies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    r = idx_ref[i]
+    row = pl.load(table_ref, (pl.dslice(r, 1), slice(None)))
+    out_ref[...] = row
+
+
+def gather_rows(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows of ``table`` (shape [k, d]) at ``idx`` (shape [m], int32).
+
+    Returns an array of shape [m, d] and ``table.dtype``.
+    """
+    if table.ndim != 2:
+        raise ValueError(f"table must be rank-2, got shape {table.shape}")
+    if idx.ndim != 1:
+        raise ValueError(f"idx must be rank-1, got shape {idx.shape}")
+    k, d = table.shape
+    m = idx.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=True,
+    )(idx.astype(jnp.int32), table)

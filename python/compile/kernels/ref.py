@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float tolerance across the hypothesis shape/dtype sweep
+in ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i, :] = table[idx[i], :]"""
+    return jnp.take(table, idx.astype(jnp.int32), axis=0)
+
+
+def scatter_add_rows_ref(
+    updates: jax.Array, idx: jax.Array, num_rows: int
+) -> jax.Array:
+    """out[r, :] = sum over i with idx[i] == r of updates[i, :]"""
+    return jax.ops.segment_sum(
+        updates, idx.astype(jnp.int32), num_segments=num_rows
+    ).astype(updates.dtype)
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,58 @@
+"""Pallas row scatter-add kernel: the deselection function φ on device.
+
+``scatter_add_rows(updates, idx, num_rows)`` computes, for ``updates`` of
+shape [b, d] and ``idx`` of shape [b]::
+
+    out = zeros((num_rows, d));  out[idx[i], :] += updates[i, :]
+
+This is FedSelect's deselect/aggregate primitive (paper §4, eq. 5) expressed
+as a kernel, and doubles as the backward pass of the embedding lookup
+(``embed.py``): the gradient w.r.t. an embedding table is exactly a
+scatter-add of the per-token output gradients.
+
+TPU mapping: the grid iterates over *update* rows. TPU grid iterations are
+sequential per core, so read-modify-write accumulation into the output block
+is race-free without atomics (unlike the CUDA ``atomicAdd`` formulation this
+replaces). The accumulator block stays resident in VMEM across the grid.
+``interpret=True`` for CPU-PJRT executability (see gather_rows.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(idx_ref, upd_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    r = idx_ref[i]
+    row = pl.load(out_ref, (pl.dslice(r, 1), slice(None)))
+    pl.store(out_ref, (pl.dslice(r, 1), slice(None)), row + upd_ref[...])
+
+
+def scatter_add_rows(updates: jax.Array, idx: jax.Array, num_rows: int) -> jax.Array:
+    """Scatter-add ``updates`` ([b, d]) into a fresh [num_rows, d] array."""
+    if updates.ndim != 2:
+        raise ValueError(f"updates must be rank-2, got shape {updates.shape}")
+    if idx.ndim != 1 or idx.shape[0] != updates.shape[0]:
+        raise ValueError(
+            f"idx shape {idx.shape} incompatible with updates {updates.shape}"
+        )
+    b, d = updates.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_rows, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, d), updates.dtype),
+        interpret=True,
+    )(idx.astype(jnp.int32), updates)

@@ -1,0 +1,384 @@
+"""Layer-2 JAX models: the paper's four experiment model families.
+
+Each family exposes
+
+* ``<name>_init(key, ...)``          — parameter init (python tests only),
+* ``<name>_client_update(...)``      — one local epoch of minibatch SGD on the
+  *sliced* sub-model, returning the model delta ``initial - final`` (the
+  paper's model-delta ClientUpdate, §2.2/§5.1). Minibatches are walked with
+  ``lax.scan`` so the lowered HLO stays compact,
+* ``<name>_eval(...)``               — full-model evaluation metrics.
+
+Every function is pure and shape-static, so ``aot.py`` can lower one HLO
+artifact per variant. Batches carry a per-example weight so the Rust side can
+pad variable-size client datasets to the static batch shape (weight 0 ==
+padding row; a fully-padded minibatch contributes a zero SGD step).
+
+Dense projections run through the Pallas ``pmatmul`` kernel; the transformer
+embedding runs through the Pallas gather/scatter pair (``embed_lookup``).
+Model families:
+
+1. ``logreg``      — multi-label one-vs-rest logistic regression (Stack
+   Overflow tag prediction, paper §5.2). Slice = rows of W by word key.
+2. ``mlp2nn``      — 2×200 hidden-layer MLP ("2NN" of McMahan et al., §5.3).
+   Slice = hidden-1 neurons (couples W1 cols, b1, W2 rows).
+3. ``cnn``         — 2-conv CNN (McMahan et al., §5.3). Slice = conv2
+   filters (couples conv2 kernel out-channels, conv2 bias, dense1 rows).
+4. ``transformer`` — next-word-prediction transformer (§5.4). Structured
+   keys slice embedding rows + output columns; random keys slice FFN
+   neurons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import embed_lookup, pmatmul
+
+
+def _sgd_epoch(loss_fn, params, batches, lr):
+    """Scan minibatch SGD over ``batches``; return delta = initial - final."""
+
+    grad_fn = jax.grad(loss_fn)
+
+    def step(p, b):
+        g = grad_fn(p, *b)
+        return jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g), None
+
+    final, _ = jax.lax.scan(step, params, batches)
+    return jax.tree_util.tree_map(lambda w0, w1: w0 - w1, params, final)
+
+
+def _wmean(per_example: jax.Array, wgt: jax.Array) -> jax.Array:
+    """Weighted mean that is exactly 0 on an all-padding minibatch."""
+    return (per_example * wgt).sum() / jnp.maximum(wgt.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# 1. Multi-label logistic regression (tag prediction, §5.2)
+# ---------------------------------------------------------------------------
+
+
+def logreg_init(key, vocab: int, tags: int):
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (vocab, tags), jnp.float32) * 0.01
+    b = jnp.zeros((tags,), jnp.float32)
+    return w, b
+
+
+def _logreg_loss(params, x, y, wgt):
+    w, b = params
+    logits = pmatmul(x, w) + b
+    # Numerically-stable elementwise sigmoid BCE, summed over tags.
+    per = jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return _wmean(per.sum(axis=-1), wgt)
+
+
+def logreg_client_update(w, b, x, y, wgt, lr):
+    """One epoch over [S, mb, ...] minibatches. Returns (dW, db)."""
+    return _sgd_epoch(_logreg_loss, (w, b), (x, y, wgt), lr)
+
+
+def logreg_eval(w, b, x, y, wgt):
+    """Full-model eval: (loss_sum, recall@5_sum, weight_sum).
+
+    Top-5 is computed by 5 iterated argmaxes rather than ``lax.top_k``: jax
+    lowers top_k to the ``topk(..., largest=true)`` HLO instruction, which
+    the xla_extension 0.5.1 text parser (the Rust runtime's loader) rejects.
+    Argmax lowers to a plain reduce and round-trips cleanly.
+    """
+    logits = pmatmul(x, w) + b
+    per = jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    loss_sum = (per.sum(axis=-1) * wgt).sum()
+    rows = jnp.arange(logits.shape[0])
+    scratch = logits
+    in_top5 = jnp.zeros((logits.shape[0],), jnp.float32)
+    for _ in range(5):
+        idx = jnp.argmax(scratch, axis=-1)
+        in_top5 = in_top5 + jnp.take_along_axis(y, idx[:, None], axis=-1)[:, 0]
+        scratch = scratch.at[rows, idx].set(-jnp.inf)
+    ntags = jnp.maximum(y.sum(axis=-1), 1.0)
+    rec5 = in_top5 / ntags
+    return loss_sum, (rec5 * wgt).sum(), wgt.sum()
+
+
+# ---------------------------------------------------------------------------
+# 2. 2NN MLP (EMNIST, §5.3)
+# ---------------------------------------------------------------------------
+
+
+def mlp2nn_init(key, m: int, hidden: int, classes: int, in_dim: int = 784):
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def glorot(k, fi, fo):
+        return jax.random.normal(k, (fi, fo), jnp.float32) * jnp.sqrt(2.0 / (fi + fo))
+
+    return (
+        glorot(k1, in_dim, m),
+        jnp.zeros((m,), jnp.float32),
+        glorot(k2, m, hidden),
+        jnp.zeros((hidden,), jnp.float32),
+        glorot(k3, hidden, classes),
+        jnp.zeros((classes,), jnp.float32),
+    )
+
+
+def _xent(logits, y, wgt):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return _wmean(-ll, wgt)
+
+
+def _mlp_logits(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(pmatmul(x, w1) + b1)
+    h2 = jax.nn.relu(pmatmul(h1, w2) + b2)
+    return pmatmul(h2, w3) + b3
+
+
+def _mlp_loss(params, x, y, wgt):
+    return _xent(_mlp_logits(params, x), y, wgt)
+
+
+def mlp2nn_client_update(w1, b1, w2, b2, w3, b3, x, y, wgt, lr):
+    return _sgd_epoch(_mlp_loss, (w1, b1, w2, b2, w3, b3), (x, y, wgt), lr)
+
+
+def mlp2nn_eval(w1, b1, w2, b2, w3, b3, x, y, wgt):
+    """(loss_sum, weighted_correct, weight_sum)"""
+    logits = _mlp_logits((w1, b1, w2, b2, w3, b3), x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    return (-ll * wgt).sum(), (correct * wgt).sum(), wgt.sum()
+
+
+# ---------------------------------------------------------------------------
+# 3. CNN (EMNIST, §5.3)
+# ---------------------------------------------------------------------------
+
+_CONV_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x, k):
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1), padding="SAME", dimension_numbers=_CONV_DN
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_init(key, m: int, classes: int, c1: int = 32, dense: int = 512):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return (
+        he(k1, (5, 5, 1, c1), 25),
+        jnp.zeros((c1,), jnp.float32),
+        he(k2, (5, 5, c1, m), 25 * c1),
+        jnp.zeros((m,), jnp.float32),
+        he(k3, (7 * 7 * m, dense), 7 * 7 * m),
+        jnp.zeros((dense,), jnp.float32),
+        he(k4, (dense, classes), dense),
+        jnp.zeros((classes,), jnp.float32),
+    )
+
+
+def _cnn_logits(params, x):
+    k1, c1, k2, c2, w1, d1, w2, d2 = params
+    h = _maxpool2(jax.nn.relu(_conv(x, k1) + c1))  # 28 -> 14
+    h = _maxpool2(jax.nn.relu(_conv(h, k2) + c2))  # 14 -> 7
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(pmatmul(h, w1) + d1)
+    return pmatmul(h, w2) + d2
+
+
+def _cnn_loss(params, x, y, wgt):
+    return _xent(_cnn_logits(params, x), y, wgt)
+
+
+def cnn_client_update(k1, c1, k2, c2, w1, d1, w2, d2, x, y, wgt, lr):
+    return _sgd_epoch(_cnn_loss, (k1, c1, k2, c2, w1, d1, w2, d2), (x, y, wgt), lr)
+
+
+def cnn_eval(k1, c1, k2, c2, w1, d1, w2, d2, x, y, wgt):
+    logits = _cnn_logits((k1, c1, k2, c2, w1, d1, w2, d2), x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    return (-ll * wgt).sum(), (correct * wgt).sum(), wgt.sum()
+
+
+# ---------------------------------------------------------------------------
+# 4. Transformer LM (next-word prediction, §5.4)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    """Static transformer shape configuration for one AOT variant.
+
+    ``mv`` is the client-visible vocabulary (structured slice size; ``mv ==
+    vocab`` means no structured selection) and ``dh`` the client-visible FFN
+    width (random slice size; ``dh == ffn`` means no random selection).
+    """
+
+    mv: int  # sliced vocab size (embedding rows / output cols)
+    d: int = 128  # model width
+    seq: int = 20  # sequence length
+    layers: int = 2
+    heads: int = 4
+    dh: int = 512  # sliced FFN hidden width
+
+    def param_names(self) -> Sequence[str]:
+        names = ["emb", "pos"]
+        for i in range(self.layers):
+            names += [
+                f"l{i}_ln1_s",
+                f"l{i}_ln1_b",
+                f"l{i}_wq",
+                f"l{i}_wk",
+                f"l{i}_wv",
+                f"l{i}_wo",
+                f"l{i}_ln2_s",
+                f"l{i}_ln2_b",
+                f"l{i}_w1",
+                f"l{i}_bf1",
+                f"l{i}_w2",
+                f"l{i}_bf2",
+            ]
+        names += ["lnf_s", "lnf_b", "wout", "bout"]
+        return names
+
+    def param_shapes(self) -> Sequence[tuple]:
+        d, dh = self.d, self.dh
+        shapes = [(self.mv, d), (self.seq, d)]
+        for _ in range(self.layers):
+            shapes += [
+                (d,),
+                (d,),
+                (d, d),
+                (d, d),
+                (d, d),
+                (d, d),
+                (d,),
+                (d,),
+                (d, dh),
+                (dh,),
+                (dh, d),
+                (d,),
+            ]
+        shapes += [(d,), (d,), (d, self.mv), (self.mv,)]
+        return shapes
+
+
+def transformer_init(key, cfg: TransformerCfg):
+    params = []
+    for name, shape in zip(cfg.param_names(), cfg.param_shapes()):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_s",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", "bf1", "bf2", "bout")) or name in ("pos",):
+            if name == "pos":
+                params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return tuple(params)
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * s + b
+
+
+def _attention(h, wq, wk, wv, wo, heads):
+    mb, L, d = h.shape
+    hd = d // heads
+    flat = h.reshape(-1, d)
+    q = pmatmul(flat, wq).reshape(mb, L, heads, hd).transpose(0, 2, 1, 3)
+    k = pmatmul(flat, wk).reshape(mb, L, heads, hd).transpose(0, 2, 1, 3)
+    v = pmatmul(flat, wv).reshape(mb, L, heads, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(h.dtype)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(-1, d)
+    return pmatmul(out, wo).reshape(mb, L, d)
+
+
+def _transformer_logits(params, x, cfg: TransformerCfg):
+    """x: [mb, L] int32 of *local* (slice-relative) token ids."""
+    emb, pos = params[0], params[1]
+    mb, L = x.shape
+    h = embed_lookup(emb, x.reshape(-1)).reshape(mb, L, cfg.d) + pos
+    off = 2
+    for _ in range(cfg.layers):
+        ln1_s, ln1_b, wq, wk, wv, wo, ln2_s, ln2_b, w1, bf1, w2, bf2 = params[
+            off : off + 12
+        ]
+        off += 12
+        a = _attention(_layernorm(h, ln1_s, ln1_b), wq, wk, wv, wo, cfg.heads)
+        h = h + a
+        f = _layernorm(h, ln2_s, ln2_b).reshape(-1, cfg.d)
+        f = jax.nn.relu(pmatmul(f, w1) + bf1)
+        f = pmatmul(f, w2) + bf2
+        h = h + f.reshape(mb, L, cfg.d)
+    lnf_s, lnf_b, wout, bout = params[off : off + 4]
+    h = _layernorm(h, lnf_s, lnf_b).reshape(-1, cfg.d)
+    return (pmatmul(h, wout) + bout).reshape(mb, L, cfg.mv)
+
+
+def make_transformer_loss(cfg: TransformerCfg):
+    def loss(params, x, y, wgt):
+        logits = _transformer_logits(params, x, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return _wmean(-ll.reshape(-1), wgt.reshape(-1))
+
+    return loss
+
+
+def make_transformer_client_update(cfg: TransformerCfg):
+    """Returns fn(*params, x, y, wgt, lr) -> tuple of deltas."""
+    loss = make_transformer_loss(cfg)
+    nparams = len(cfg.param_names())
+
+    def client_update(*args):
+        params = tuple(args[:nparams])
+        x, y, wgt, lr = args[nparams:]
+        return _sgd_epoch(loss, params, (x, y, wgt), lr)
+
+    return client_update
+
+
+def make_transformer_eval(cfg: TransformerCfg):
+    """Returns fn(*params, x, y, wgt) -> (loss_sum, correct, weight_sum)."""
+    nparams = len(cfg.param_names())
+
+    def evaluate(*args):
+        params = tuple(args[:nparams])
+        x, y, wgt = args[nparams:]
+        logits = _transformer_logits(params, x, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return (-ll * wgt).sum(), (correct * wgt).sum(), wgt.sum()
+
+    return evaluate

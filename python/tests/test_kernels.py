@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against the
+oracle. This is the core correctness signal for the kernels that end up
+inside the AOT artifacts the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import embed_lookup, gather_rows, matmul, pmatmul, scatter_add_rows
+from compile.kernels.ref import gather_rows_ref, matmul_ref, scatter_add_rows_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+FLOAT_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@st.composite
+def gather_case(draw):
+    k = draw(st.integers(1, 64))
+    d = draw(st.integers(1, 48))
+    m = draw(st.integers(1, 40))
+    idx = draw(st.lists(st.integers(0, k - 1), min_size=m, max_size=m))
+    seed = draw(st.integers(0, 2**31 - 1))
+    dt = draw(st.sampled_from(FLOAT_DTYPES))
+    return k, d, idx, seed, dt
+
+
+@given(gather_case())
+@settings(**SETTINGS)
+def test_gather_rows_matches_ref(case):
+    k, d, idx, seed, dt = case
+    table = rand(seed, (k, d), dt)
+    idx = jnp.array(idx, jnp.int32)
+    got = gather_rows(table, idx)
+    want = gather_rows_ref(table, idx)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=1e-6
+    )
+
+
+@given(gather_case())
+@settings(**SETTINGS)
+def test_scatter_add_matches_ref(case):
+    k, d, idx, seed, dt = case
+    b = len(idx)
+    updates = rand(seed, (b, d), dt)
+    idx = jnp.array(idx, jnp.int32)
+    got = scatter_add_rows(updates, idx, k)
+    want = scatter_add_rows_ref(updates, idx, k)
+    assert got.shape == (k, d)
+    # bf16 accumulation order can differ; loose tolerance for bf16.
+    tol = 1e-5 if dt == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k), jnp.float32)
+    y = rand(seed + 1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_matmul_large_block_boundary(m, k, n, seed):
+    """Shapes straddling the 128 tile boundary exercise the padding path."""
+    m, k, n = m + 120, k + 120, n + 120
+    x = rand(seed, (m, k), jnp.float32)
+    y = rand(seed + 1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, y), matmul_ref(x, y), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_matmul_shape_errors():
+    x = jnp.zeros((3, 4))
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((5, 2)))
+    with pytest.raises(ValueError):
+        gather_rows(jnp.zeros((3,)), jnp.zeros((2,), jnp.int32))
+    with pytest.raises(ValueError):
+        scatter_add_rows(jnp.zeros((3, 4)), jnp.zeros((2,), jnp.int32), 5)
+
+
+def test_pmatmul_grads_match_dot_grads():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (9, 17))
+    y = jax.random.normal(key, (17, 5))
+
+    def f_pallas(x, y):
+        return (pmatmul(x, y) ** 2).sum()
+
+    def f_ref(x, y):
+        return (x @ y) ** 2
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(lambda x, y: f_ref(x, y).sum(), argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, gy_r, rtol=1e-4, atol=1e-4)
+
+
+def test_embed_lookup_fwd_bwd():
+    key = jax.random.PRNGKey(3)
+    table = jax.random.normal(key, (11, 6))
+    idx = jnp.array([1, 1, 4, 10, 0], jnp.int32)
+    np.testing.assert_allclose(embed_lookup(table, idx), gather_rows_ref(table, idx))
+    g = jax.random.normal(key, (5, 6))
+    (gt,) = jax.vjp(lambda t: embed_lookup(t, idx), table)[1](g)
+    np.testing.assert_allclose(
+        gt, scatter_add_rows_ref(g, idx, 11), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_kernels_under_jit():
+    """The kernels must lower inside jit (the AOT path) with identical output."""
+    key = jax.random.PRNGKey(4)
+    table = jax.random.normal(key, (13, 7))
+    idx = jnp.array([0, 12, 5], jnp.int32)
+    np.testing.assert_allclose(
+        jax.jit(gather_rows)(table, idx), gather_rows_ref(table, idx)
+    )
+    x = jax.random.normal(key, (31, 19))
+    y = jax.random.normal(key, (19, 23))
+    np.testing.assert_allclose(
+        jax.jit(matmul)(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_scatter_add_duplicate_keys_accumulate():
+    updates = jnp.ones((4, 3))
+    idx = jnp.array([2, 2, 2, 2], jnp.int32)
+    out = scatter_add_rows(updates, idx, 5)
+    np.testing.assert_allclose(out[2], 4.0 * jnp.ones(3))
+    assert float(jnp.abs(out).sum()) == pytest.approx(12.0)

@@ -1,0 +1,91 @@
+//! Aggregation bench (§4.2 ablation): plain sparse deselect vs client-side-φ
+//! + dense secure aggregation vs IBLT sparse encoding — wall time and upload
+//! bytes per client.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedselect::aggregation::iblt::Iblt;
+use fedselect::aggregation::{AggMode, Aggregator, SecureAggSim, SparseAccumulator};
+use fedselect::metrics::human_bytes;
+use fedselect::model::ModelArch;
+use fedselect::tensor::rng::Rng;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let cohort = if b.quick { 6 } else { 20 };
+    let vocab = 4096;
+    let m = 256;
+    let arch = ModelArch::logreg(vocab);
+    let store = arch.init_store(&mut Rng::new(2, 0));
+    let spec = arch.select_spec();
+    let t = 50usize;
+
+    let mut rng = Rng::new(11, 1);
+    let clients: Vec<(Vec<Vec<u32>>, Vec<Vec<f32>>)> = (0..cohort)
+        .map(|_| {
+            let keys = vec![rng
+                .sample_without_replacement(vocab, m)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect::<Vec<u32>>()];
+            let ups = vec![
+                (0..m * t).map(|_| rng.normal()).collect::<Vec<f32>>(),
+                (0..t).map(|_| rng.normal()).collect::<Vec<f32>>(),
+            ];
+            (keys, ups)
+        })
+        .collect();
+
+    b.run(&format!("sparse_deselect/cohort={cohort},m={m}"), 20, || {
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        for (keys, ups) in &clients {
+            agg.add_client(&spec, keys, ups).unwrap();
+        }
+        let u = agg.finalize(AggMode::CohortMean);
+        std::hint::black_box(u);
+    });
+
+    b.run(&format!("secure_agg/cohort={cohort},m={m}"), 5, || {
+        let ids: Vec<u64> = (0..cohort as u64).collect();
+        let mut agg = Box::new(SecureAggSim::new(&store, ids, 77));
+        for (keys, ups) in &clients {
+            agg.add_client(&spec, keys, ups).unwrap();
+        }
+        let u = agg.finalize(AggMode::CohortMean);
+        std::hint::black_box(u);
+    });
+
+    // IBLT path: per-key rows as values, capacity sized for distinct keys
+    b.run(&format!("iblt_encode_merge_decode/cohort={cohort},m={m}"), 5, || {
+        let mut total = Iblt::new(cohort * m, t, 3);
+        for (keys, ups) in &clients {
+            let mut tab = Iblt::new(cohort * m, t, 3);
+            for (j, &k) in keys[0].iter().enumerate() {
+                tab.insert(k as u64, &ups[0][j * t..(j + 1) * t]);
+            }
+            total.merge(&tab);
+        }
+        let decoded = total.decode().expect("decode");
+        std::hint::black_box(decoded);
+    });
+
+    // upload-byte comparison (the paper's §4.2 communication argument)
+    let plain_up = (m * t + t + m) * 4;
+    let secure_up = store.bytes();
+    let iblt_up = Iblt::new(cohort * m, t, 3).wire_bytes();
+    println!("-- per-client upload --");
+    println!("  sparse (update+keys): {}", human_bytes(plain_up as u64));
+    println!("  secure dense (φ at client): {}", human_bytes(secure_up as u64));
+    println!("  IBLT table: {}", human_bytes(iblt_up));
+    println!(
+        "  dense/sparse = {:.1}x",
+        secure_up as f64 / plain_up as f64
+    );
+    if let Some(r) = b.ratio(
+        &format!("secure_agg/cohort={cohort},m={m}"),
+        &format!("sparse_deselect/cohort={cohort},m={m}"),
+    ) {
+        b.note(&format!("secure/sparse wall ratio: {r:.1}x"));
+    }
+}

@@ -1,0 +1,72 @@
+//! End-to-end round latency: the full Algorithm-2 loop (sample cohort,
+//! pre-generate, fetch, client updates, deselect-aggregate, server step),
+//! native vs PJRT engines. L3 overhead is isolated by comparing against the
+//! pure client-update cost.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedselect::config::{DatasetConfig, EngineKind, TrainConfig};
+use fedselect::coordinator::Trainer;
+use fedselect::data::bow::BowConfig;
+use fedselect::data::images::ImageConfig;
+
+fn main() {
+    let mut b = harness::Bench::new();
+
+    // logreg round: native engine across m
+    for &m in &[64usize, 256, 1024] {
+        let mut cfg = TrainConfig::logreg_default(2048, m);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(2048, 50).with_clients(60, 0, 10));
+        cfg.cohort = 20;
+        cfg.rounds = 1;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run(&format!("round/logreg/native/m={m}"), 10, || {
+            let rec = tr.run_round().unwrap();
+            std::hint::black_box(rec);
+        });
+    }
+
+    // mlp round: native engine
+    for &m in &[50usize, 200] {
+        let mut cfg = TrainConfig::mlp_default(m);
+        cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(40, 8));
+        cfg.cohort = 10;
+        cfg.rounds = 1;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run(&format!("round/mlp/native/m={m}"), 5, || {
+            let rec = tr.run_round().unwrap();
+            std::hint::black_box(rec);
+        });
+    }
+
+    // PJRT rounds when artifacts are present
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for &m in &[64usize, 1024] {
+            let mut cfg = TrainConfig::logreg_default(2048, m);
+            cfg.dataset = DatasetConfig::Bow(BowConfig::new(2048, 50).with_clients(60, 0, 10));
+            cfg.cohort = 20;
+            cfg.rounds = 1;
+            cfg.engine = EngineKind::pjrt_default();
+            let mut tr = Trainer::new(cfg).unwrap();
+            b.run(&format!("round/logreg/pjrt/m={m}"), 10, || {
+                let rec = tr.run_round().unwrap();
+                std::hint::black_box(rec);
+            });
+        }
+        let mut cfg = TrainConfig::cnn_default(16);
+        cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(40, 8));
+        cfg.cohort = 10;
+        cfg.rounds = 1;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run("round/cnn/pjrt/m=16", 5, || {
+            let rec = tr.run_round().unwrap();
+            std::hint::black_box(rec);
+        });
+        if let Some(r) = b.ratio("round/logreg/pjrt/m=64", "round/logreg/native/m=64") {
+            b.note(&format!("pjrt/native round ratio (logreg m=64): {r:.2}x"));
+        }
+    } else {
+        b.note("artifacts missing: skipping PJRT round benches (run `make artifacts`)");
+    }
+}

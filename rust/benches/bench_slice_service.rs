@@ -1,0 +1,95 @@
+//! Slice-service bench: Option 1 vs 2 vs 3 fetch cost + byte ledgers across
+//! (K, m, cohort), plus the §6 PIR-overhead trade-off table. This is the
+//! systems ablation behind the paper's §3.2/§6 discussion.
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedselect::cdn::pir::{client_down_bytes, PirScheme};
+use fedselect::fedselect::{SliceImpl, SliceService};
+use fedselect::metrics::human_bytes;
+use fedselect::model::ModelArch;
+use fedselect::tensor::rng::Rng;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let cohort = if b.quick { 8 } else { 32 };
+
+    for &(vocab, m) in &[(2048usize, 64usize), (8192, 256), (8192, 2048)] {
+        let arch = ModelArch::logreg(vocab);
+        let store = arch.init_store(&mut Rng::new(1, 0));
+        let spec = arch.select_spec();
+        // per-client distinct key sets (realistic overlap via zipf-ish reuse)
+        let mut rng = Rng::new(7, 1);
+        let keysets: Vec<Vec<Vec<u32>>> = (0..cohort)
+            .map(|_| {
+                vec![rng
+                    .sample_without_replacement(vocab, m)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()]
+            })
+            .collect();
+
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let name = format!("fetch/{imp:?}/K={vocab},m={m},cohort={cohort}");
+            let mut svc = imp.build();
+            b.run(&name, 10, || {
+                svc.begin_round(&store, &spec).unwrap();
+                for ks in &keysets {
+                    let out = svc.fetch(&store, &spec, ks).unwrap();
+                    std::hint::black_box(&out);
+                }
+                let ledger = svc.end_round();
+                std::hint::black_box(ledger);
+            });
+        }
+        // ledger comparison (single round)
+        println!("-- ledger K={vocab} m={m} cohort={cohort} --");
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            svc.begin_round(&store, &spec).unwrap();
+            for ks in &keysets {
+                svc.fetch(&store, &spec, ks).unwrap();
+            }
+            let l = svc.end_round();
+            println!(
+                "  {:>10?}: down={} up_keys={} psi={} cache_hits={} pregen={} cdn_q={} service_us={}",
+                imp,
+                human_bytes(l.down_bytes),
+                human_bytes(l.up_key_bytes),
+                l.psi_evals,
+                l.cache_hits,
+                l.pregen_slices,
+                l.cdn_queries,
+                l.service_us
+            );
+        }
+    }
+
+    // PIR trade-off: private selection vs plain broadcast (paper §6)
+    println!("-- PIR overhead (per client, K records of B bytes, m queries) --");
+    for &(k, rec_bytes, m) in &[
+        (1usize << 13, 200usize, 256usize),
+        (1 << 16, 200, 256),
+        (1 << 20, 512, 100),
+    ] {
+        let full = (k * rec_bytes) as u64;
+        for scheme in [PirScheme::Trivial, PirScheme::SqrtComm, PirScheme::LogComm] {
+            let down = client_down_bytes(scheme, m, k, rec_bytes);
+            println!(
+                "  K=2^{:<2} B={rec_bytes:<4} m={m:<4} {scheme:?}: down={} vs broadcast={} -> {}",
+                (k as f64).log2() as u32,
+                human_bytes(down),
+                human_bytes(full),
+                if down < full { "PIR still saves" } else { "broadcast cheaper" }
+            );
+        }
+    }
+    if let Some(r) = b.ratio(
+        "fetch/Broadcast/K=8192,m=256,cohort=8",
+        "fetch/PregenCdn/K=8192,m=256,cohort=8",
+    ) {
+        b.note(&format!("broadcast/pregen wall ratio at K=8192,m=256: {r:.2}x"));
+    }
+}

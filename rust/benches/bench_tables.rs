@@ -1,0 +1,105 @@
+//! One bench per paper table/figure workload: times a representative round
+//! of each experiment's configuration (the regeneration itself runs via
+//! `fedselect experiment --id …`; this bench tracks the *cost* of each
+//! workload so perf regressions in any figure path are visible).
+
+#[path = "harness.rs"]
+mod harness;
+
+use fedselect::config::{DatasetConfig, EngineKind, TrainConfig};
+use fedselect::coordinator::Trainer;
+use fedselect::data::bow::BowConfig;
+use fedselect::data::images::ImageConfig;
+use fedselect::data::text::TextConfig;
+use fedselect::fedselect::KeyPolicy;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+
+    // fig2/fig3: tag prediction, structured keys
+    {
+        let mut cfg = TrainConfig::logreg_default(8192, 1024);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(8192, 50).with_clients(80, 8, 10));
+        cfg.cohort = 30;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run("table/fig2_fig3 tag-prediction round (n=8192, m=1024)", 8, || {
+            std::hint::black_box(tr.run_round().unwrap());
+        });
+        b.run("table/fig2 eval pass (2048 examples, n=8192)", 5, || {
+            std::hint::black_box(tr.evaluate().unwrap());
+        });
+    }
+
+    // fig4: key strategy ablation — RandomLocal arm
+    {
+        let mut cfg = TrainConfig::logreg_default(2048, 256);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(2048, 50).with_clients(60, 6, 8));
+        cfg.policies = vec![KeyPolicy::RandomLocal { m: 256 }];
+        cfg.cohort = 30;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run("table/fig4 random-local round (n=2048, m=256)", 8, || {
+            std::hint::black_box(tr.run_round().unwrap());
+        });
+    }
+
+    // table3 / fig5 (2NN arm): random neuron keys
+    {
+        let mut cfg = TrainConfig::mlp_default(100);
+        cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(40, 8));
+        cfg.cohort = 15;
+        let mut tr = Trainer::new(cfg).unwrap();
+        b.run("table/table3_fig5 2NN round (m=100)", 5, || {
+            std::hint::black_box(tr.run_round().unwrap());
+        });
+    }
+
+    if artifacts {
+        // table2 / fig5 (CNN arm) + fig6: random filter keys
+        {
+            let mut cfg = TrainConfig::cnn_default(32);
+            cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(40, 8));
+            cfg.cohort = 10;
+            let mut tr = Trainer::new(cfg).unwrap();
+            b.run("table/table2_fig5_fig6 CNN round (m=32, pjrt)", 5, || {
+                std::hint::black_box(tr.run_round().unwrap());
+            });
+        }
+        // fig7: transformer mixed selection
+        {
+            let mut cfg = TrainConfig::transformer_default(512, 128);
+            cfg.dataset = DatasetConfig::Text(TextConfig::new(2048, 20).with_clients(30, 4, 6));
+            cfg.cohort = 6;
+            cfg.engine = EngineKind::pjrt_default();
+            let mut tr = Trainer::new(cfg).unwrap();
+            b.run("table/fig7 transformer round (mv=512, dh=128, pjrt)", 5, || {
+                std::hint::black_box(tr.run_round().unwrap());
+            });
+        }
+        // end-to-end driver round (large server model)
+        {
+            use fedselect::model::ModelArch;
+            let arch = ModelArch::transformer_e2e();
+            let (vocab, seq) = match &arch {
+                ModelArch::Transformer { shape, .. } => (shape.vocab, shape.seq),
+                _ => unreachable!(),
+            };
+            let mut cfg = TrainConfig::transformer_default(1024, 256);
+            cfg.arch = arch;
+            cfg.dataset =
+                DatasetConfig::Text(TextConfig::new(vocab, seq).with_clients(30, 0, 6));
+            cfg.policies = vec![
+                KeyPolicy::TopFreq { m: 1024 },
+                KeyPolicy::RandomGlobal { m: 256 },
+            ];
+            cfg.cohort = 4;
+            cfg.engine = EngineKind::pjrt_default();
+            let mut tr = Trainer::new(cfg).unwrap();
+            b.run("table/e2e 40M-param transformer round (pjrt)", 3, || {
+                std::hint::black_box(tr.run_round().unwrap());
+            });
+        }
+    } else {
+        b.note("artifacts missing: CNN/transformer table benches skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,68 @@
+//! Minimal benchmark harness (offline substitute for criterion).
+//!
+//! Each measurement warms up, then runs timed iterations and reports
+//! mean / p50 / p95 wall time. `--quick` (or BENCH_QUICK=1) cuts iteration
+//! counts for CI. Output is line-oriented: `bench <name>: mean=… p50=… p95=…`.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub quick: bool,
+    results: Vec<(String, f64)>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `iters` is scaled down by 4 in quick mode.
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        let iters = if self.quick { (iters / 4).max(3) } else { iters.max(5) };
+        // warmup
+        for _ in 0..iters.min(3) {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+        println!(
+            "bench {name}: mean={mean:.3}ms p50={p50:.3}ms p95={p95:.3}ms (n={})",
+            samples.len()
+        );
+        self.results.push((name.to_string(), mean));
+    }
+
+    /// Report a derived ratio between two recorded benches.
+    pub fn ratio(&self, num: &str, den: &str) -> Option<f64> {
+        let find = |n: &str| {
+            self.results
+                .iter()
+                .find(|(name, _)| name == n)
+                .map(|(_, v)| *v)
+        };
+        Some(find(num)? / find(den)?)
+    }
+
+    pub fn note(&self, s: &str) {
+        println!("note: {s}");
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}

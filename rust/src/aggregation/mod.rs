@@ -1,0 +1,209 @@
+//! `AGGREGATE*` — aggregation with deselection (paper §4, eq. 5), plus the
+//! privacy-preserving aggregation substrates of §4.2.
+//!
+//! [`SparseAccumulator`] implements
+//! `AGGREGATE*_mean({u_n}@C, {z_n}@C, φ) = (1/N) Σ φ(u_n, z_n)` —
+//! clients' sliced updates are scattered into full model space via the
+//! model's [`SelectSpec`] and averaged. Two averaging semantics:
+//!
+//! * [`AggMode::CohortMean`] — divide by cohort size N (the paper's eq. 5;
+//!   with all-keys clients this is exactly dense FedAvg averaging).
+//! * [`AggMode::PerCoordMean`] — divide each coordinate by its selection
+//!   count (an ablation: see `bench_aggregation`).
+//!
+//! [`secure`] simulates the pairwise-mask Secure Aggregation protocol and
+//! [`iblt`] provides the invertible-Bloom-lookup-table sparse aggregation
+//! the paper cites (Bell et al. 2020) for private *sparse* sums.
+
+pub mod iblt;
+pub mod secure;
+
+pub use secure::SecureAggSim;
+
+use crate::error::Result;
+use crate::model::{ParamStore, SelectSpec};
+
+/// Averaging semantics for `AGGREGATE*`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggMode {
+    /// (1/N) Σ φ(u_n, z_n) — the paper's eq. (5).
+    CohortMean,
+    /// Per-coordinate mean over the clients that selected that coordinate.
+    PerCoordMean,
+}
+
+impl std::str::FromStr for AggMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "cohort" | "cohort-mean" => Ok(AggMode::CohortMean),
+            "per-coord" | "per-coord-mean" => Ok(AggMode::PerCoordMean),
+            other => Err(format!("unknown agg mode {other:?}")),
+        }
+    }
+}
+
+/// Generic aggregator interface (dense or sparse).
+pub trait Aggregator {
+    /// Absorb one client's update (sliced tensors in binding order).
+    fn add_client(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()>;
+
+    /// Produce the server update `u` in full model space.
+    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore;
+
+    fn num_clients(&self) -> usize;
+}
+
+/// Plain (trusted-server) sparse accumulator.
+pub struct SparseAccumulator {
+    acc: ParamStore,
+    counts: ParamStore,
+    clients: usize,
+    /// bytes a client uploads: sliced update + its keys
+    pub up_bytes: u64,
+}
+
+impl SparseAccumulator {
+    pub fn new(store: &ParamStore) -> Self {
+        SparseAccumulator {
+            acc: store.zeros_like(),
+            counts: store.zeros_like(),
+            clients: 0,
+            up_bytes: 0,
+        }
+    }
+
+    /// Direct access for tests / secure-agg comparison.
+    pub fn raw(&self) -> (&ParamStore, &ParamStore) {
+        (&self.acc, &self.counts)
+    }
+}
+
+impl Aggregator for SparseAccumulator {
+    fn add_client(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        spec.deselect_add(&mut self.acc, &mut self.counts, keys, updates)?;
+        self.clients += 1;
+        self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
+            + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore {
+        finalize_mean(self.acc, &self.counts, self.clients, mode)
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients
+    }
+}
+
+pub(crate) fn finalize_mean(
+    mut acc: ParamStore,
+    counts: &ParamStore,
+    clients: usize,
+    mode: AggMode,
+) -> ParamStore {
+    match mode {
+        AggMode::CohortMean => {
+            let n = (clients.max(1)) as f32;
+            for seg in &mut acc.segments {
+                for v in &mut seg.data {
+                    *v /= n;
+                }
+            }
+        }
+        AggMode::PerCoordMean => {
+            for (seg, cseg) in acc.segments.iter_mut().zip(counts.segments.iter()) {
+                for (v, &c) in seg.data.iter_mut().zip(cseg.data.iter()) {
+                    if c > 0.0 {
+                        *v /= c;
+                    }
+                }
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    fn setup() -> (ParamStore, SelectSpec) {
+        let arch = ModelArch::logreg(8);
+        let store = arch.init_store(&mut Rng::new(4, 0));
+        (store.clone(), arch.select_spec())
+    }
+
+    #[test]
+    fn cohort_mean_with_all_keys_equals_dense_fedavg() {
+        let (store, spec) = setup();
+        let all: Vec<u32> = (0..8).collect();
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        // two clients, updates = all ones and all twos
+        for v in [1.0f32, 2.0] {
+            let ups = vec![vec![v; 8 * 50], vec![v; 50]];
+            agg.add_client(&spec, &[all.clone()], &ups).unwrap();
+        }
+        let u = agg.finalize(AggMode::CohortMean);
+        assert!(u.segments[0].data.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+        assert!(u.segments[1].data.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn cohort_vs_per_coord_on_disjoint_keys() {
+        let (store, spec) = setup();
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        // client A selects row 0, client B selects row 1
+        agg.add_client(&spec, &[vec![0]], &[vec![3.0; 50], vec![0.0; 50]])
+            .unwrap();
+        agg.add_client(&spec, &[vec![1]], &[vec![5.0; 50], vec![0.0; 50]])
+            .unwrap();
+        let (acc, counts) = agg.raw();
+        assert_eq!(acc.segments[0].data[0], 3.0);
+        assert_eq!(counts.segments[0].data[0], 1.0);
+        let u_cohort = Box::new(SparseAccumulator {
+            acc: acc.clone(),
+            counts: counts.clone(),
+            clients: 2,
+            up_bytes: 0,
+        })
+        .finalize(AggMode::CohortMean);
+        // cohort mean divides by N=2 even though each row was touched once
+        assert_eq!(u_cohort.segments[0].data[0], 1.5);
+        assert_eq!(u_cohort.segments[0].data[50], 2.5);
+        let u_coord = Box::new(SparseAccumulator {
+            acc: acc.clone(),
+            counts: counts.clone(),
+            clients: 2,
+            up_bytes: 0,
+        })
+        .finalize(AggMode::PerCoordMean);
+        assert_eq!(u_coord.segments[0].data[0], 3.0);
+        assert_eq!(u_coord.segments[0].data[50], 5.0);
+        // untouched rows stay zero under both
+        assert_eq!(u_cohort.segments[0].data[100], 0.0);
+        assert_eq!(u_coord.segments[0].data[100], 0.0);
+    }
+
+    #[test]
+    fn up_bytes_track_slice_plus_keys() {
+        let (store, spec) = setup();
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        agg.add_client(&spec, &[vec![0, 3]], &[vec![0.0; 100], vec![0.0; 50]])
+            .unwrap();
+        assert_eq!(agg.up_bytes, (150 * 4 + 2 * 4) as u64);
+    }
+}

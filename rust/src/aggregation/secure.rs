@@ -1,0 +1,230 @@
+//! Secure Aggregation simulation (Bonawitz et al. 2017; paper §4.2).
+//!
+//! Simulates the pairwise-mask protocol over the *deselected* (full model
+//! space) client updates — the "apply φ at the client, then dense secure
+//! aggregation" strategy §4.2 describes as directly inheriting the system's
+//! dense-aggregation privacy, at the cost of full-model-sized uploads.
+//!
+//! The crypto is replaced by its algebra: client i and j derive a shared
+//! pairwise mask vector from a shared seed; i adds it, j subtracts it, so
+//! the server-visible sum of masked vectors equals the true sum while no
+//! individual vector is ever in the clear. Dropout recovery is simulated by
+//! reconstructing (removing) a dropped client's pairwise masks from the
+//! survivors' shares, as the real protocol does with Shamir shares.
+
+use crate::error::Result;
+use crate::model::{ParamStore, SelectSpec};
+use crate::tensor::rng::Rng;
+
+use super::{finalize_mean, AggMode, Aggregator};
+
+/// One client's masked submission (full model space, flattened per segment).
+struct Masked {
+    client: u64,
+    vecs: Vec<Vec<f32>>,
+    counts: Vec<Vec<f32>>,
+}
+
+/// Pairwise-mask secure aggregation over deselected updates.
+pub struct SecureAggSim {
+    template: ParamStore,
+    cohort: Vec<u64>,
+    round_seed: u64,
+    submissions: Vec<Masked>,
+    dropped: std::collections::HashSet<u64>,
+    /// bytes a client uploads under this scheme (full model!, §4.2).
+    pub up_bytes_per_client: u64,
+}
+
+impl SecureAggSim {
+    /// `cohort` is the set of client ids that agreed on pairwise seeds.
+    pub fn new(store: &ParamStore, cohort: Vec<u64>, round_seed: u64) -> Self {
+        SecureAggSim {
+            template: store.zeros_like(),
+            up_bytes_per_client: store.bytes() as u64,
+            cohort,
+            round_seed,
+            submissions: Vec::new(),
+            dropped: std::collections::HashSet::new(),
+        }
+    }
+
+    fn pair_mask(&self, a: u64, b: u64, seg_len: usize, seg_idx: usize) -> Vec<f32> {
+        // deterministic mask for the ordered pair (min, max)
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let seed = self
+            .round_seed
+            .wrapping_mul(0x2545F4914F6CDD1D)
+            .wrapping_add(lo.wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add(hi.wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(seg_idx as u64);
+        let mut rng = Rng::new(seed, 77);
+        (0..seg_len).map(|_| rng.normal()).collect()
+    }
+
+    /// Client-side: deselect locally, mask, submit.
+    pub fn submit(
+        &mut self,
+        client: u64,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        // φ at the client: expand to full model space
+        let mut acc = self.template.clone();
+        let mut cnt = self.template.clone();
+        spec.deselect_add(&mut acc, &mut cnt, keys, updates)?;
+        let mut vecs: Vec<Vec<f32>> = acc.segments.into_iter().map(|s| s.data).collect();
+        let counts: Vec<Vec<f32>> = cnt.segments.into_iter().map(|s| s.data).collect();
+        // pairwise masks with every other cohort member
+        for &other in &self.cohort {
+            if other == client {
+                continue;
+            }
+            let sign = if client < other { 1.0f32 } else { -1.0f32 };
+            for (si, v) in vecs.iter_mut().enumerate() {
+                let mask = self.pair_mask(client, other, v.len(), si);
+                for (x, m) in v.iter_mut().zip(mask.iter()) {
+                    *x += sign * m;
+                }
+            }
+        }
+        self.submissions.push(Masked {
+            client,
+            vecs,
+            counts,
+        });
+        Ok(())
+    }
+
+    /// A cohort member dropped after seed agreement but before submitting:
+    /// survivors' masks with it must be reconstructed and removed.
+    pub fn mark_dropped(&mut self, client: u64) {
+        self.dropped.insert(client);
+    }
+
+    /// Server-side: sum masked submissions; pairwise masks cancel, masks
+    /// involving dropped clients are reconstructed (simulated) and removed.
+    pub fn unmask_sum(&self) -> (ParamStore, ParamStore) {
+        let mut acc = self.template.clone();
+        let mut counts = self.template.clone();
+        for sub in &self.submissions {
+            for (seg, v) in acc.segments.iter_mut().zip(sub.vecs.iter()) {
+                for (d, &x) in seg.data.iter_mut().zip(v.iter()) {
+                    *d += x;
+                }
+            }
+            for (seg, v) in counts.segments.iter_mut().zip(sub.counts.iter()) {
+                for (d, &x) in seg.data.iter_mut().zip(v.iter()) {
+                    *d += x;
+                }
+            }
+        }
+        // remove masks shared with dropped clients (they never submitted the
+        // cancelling half)
+        for sub in &self.submissions {
+            for &dropped in &self.dropped {
+                if dropped == sub.client {
+                    continue;
+                }
+                let sign = if sub.client < dropped { 1.0f32 } else { -1.0 };
+                for (si, seg) in acc.segments.iter_mut().enumerate() {
+                    let mask = self.pair_mask(sub.client, dropped, seg.data.len(), si);
+                    for (d, m) in seg.data.iter_mut().zip(mask.iter()) {
+                        *d -= sign * m;
+                    }
+                }
+            }
+        }
+        (acc, counts)
+    }
+}
+
+impl Aggregator for SecureAggSim {
+    fn add_client(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        let id = self
+            .cohort
+            .get(self.submissions.len())
+            .copied()
+            .unwrap_or(self.submissions.len() as u64);
+        self.submit(id, spec, keys, updates)
+    }
+
+    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore {
+        let n = self.submissions.len();
+        let (acc, counts) = self.unmask_sum();
+        finalize_mean(acc, &counts, n, mode)
+    }
+
+    fn num_clients(&self) -> usize {
+        self.submissions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+
+    fn setup() -> (ParamStore, SelectSpec) {
+        let arch = ModelArch::logreg(8);
+        let store = arch.init_store(&mut Rng::new(4, 0));
+        (store, arch.select_spec())
+    }
+
+    #[test]
+    fn masks_cancel_and_match_plain_sum() {
+        let (store, spec) = setup();
+        let cohort = vec![10u64, 20, 30];
+        let mut sec = SecureAggSim::new(&store, cohort.clone(), 999);
+        let mut plain = super::super::SparseAccumulator::new(&store);
+        for (i, &cid) in cohort.iter().enumerate() {
+            let keys = vec![vec![i as u32, (i + 3) as u32]];
+            let ups = vec![vec![(i + 1) as f32; 2 * 50], vec![0.5; 50]];
+            sec.submit(cid, &spec, &keys, &ups).unwrap();
+            plain.add_client(&spec, &keys, &ups).unwrap();
+        }
+        let (sum, counts) = sec.unmask_sum();
+        let (psum, pcounts) = plain.raw();
+        for (a, b) in sum.segments.iter().zip(psum.segments.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 2e-3, "masked sum {x} != plain {y}");
+            }
+        }
+        for (a, b) in counts.segments.iter().zip(pcounts.segments.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn individual_submissions_are_masked() {
+        let (store, spec) = setup();
+        let mut sec = SecureAggSim::new(&store, vec![1, 2], 7);
+        let ups = vec![vec![0.0; 50], vec![0.0; 50]];
+        sec.submit(1, &spec, &[vec![0]], &ups).unwrap();
+        // an all-zero update must NOT be visible as all-zero on the wire
+        let wire = &sec.submissions[0].vecs[0];
+        assert!(wire.iter().any(|&x| x.abs() > 1e-3));
+    }
+
+    #[test]
+    fn dropout_recovery_removes_orphan_masks() {
+        let (store, spec) = setup();
+        let cohort = vec![1u64, 2, 3];
+        let mut sec = SecureAggSim::new(&store, cohort, 42);
+        let ups1 = vec![vec![1.0; 50], vec![1.0; 50]];
+        let ups2 = vec![vec![2.0; 50], vec![2.0; 50]];
+        sec.submit(1, &spec, &[vec![0]], &ups1).unwrap();
+        sec.submit(2, &spec, &[vec![0]], &ups2).unwrap();
+        // client 3 drops without submitting
+        sec.mark_dropped(3);
+        let (sum, _) = sec.unmask_sum();
+        assert!((sum.segments[0].data[0] - 3.0).abs() < 2e-3);
+        assert!((sum.segments[1].data[0] - 3.0).abs() < 2e-3);
+    }
+}

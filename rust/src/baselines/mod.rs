@@ -1,0 +1,58 @@
+//! Baseline configurations the paper compares against.
+//!
+//! * [`full_broadcast`] — plain FedAvg-style training without FedSelect:
+//!   every client takes all keys and the slice service is Option 1
+//!   (BROADCAST). By §3.3 this is exactly `m = K`; the paper's "m = n
+//!   recovers training without FEDSELECT".
+//! * [`federated_dropout`] — Caldas et al. 2018-style baseline: one random
+//!   sub-model per round shared by all clients (`FixedPerRound` keys), which
+//!   the server could implement with BROADCAST of the sub-model (Fig. 6's
+//!   "fixed" arm).
+
+use crate::config::TrainConfig;
+use crate::fedselect::{KeyPolicy, SliceImpl};
+
+/// Turn a FedSelect run into its no-selection (full broadcast) baseline.
+pub fn full_broadcast(mut cfg: TrainConfig) -> TrainConfig {
+    cfg.policies = cfg.policies.iter().map(|_| KeyPolicy::AllKeys).collect();
+    cfg.slice_impl = SliceImpl::Broadcast;
+    cfg
+}
+
+/// Turn per-client random selection into Federated-Dropout-style shared
+/// random sub-models (same m, one key set per round for everyone).
+pub fn federated_dropout(mut cfg: TrainConfig) -> TrainConfig {
+    cfg.policies = cfg
+        .policies
+        .iter()
+        .map(|p| match *p {
+            KeyPolicy::RandomGlobal { m }
+            | KeyPolicy::RandomLocal { m }
+            | KeyPolicy::RandomTopLocal { m }
+            | KeyPolicy::TopFreq { m }
+            | KeyPolicy::FixedPerRound { m } => KeyPolicy::FixedPerRound { m },
+            KeyPolicy::AllKeys => KeyPolicy::AllKeys,
+        })
+        .collect();
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_broadcast_has_relative_size_one() {
+        let cfg = full_broadcast(TrainConfig::logreg_default(128, 16));
+        assert_eq!(cfg.policies, vec![KeyPolicy::AllKeys]);
+        assert_eq!(cfg.slice_impl, SliceImpl::Broadcast);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn federated_dropout_shares_keys_per_round() {
+        let cfg = federated_dropout(TrainConfig::mlp_default(50));
+        assert_eq!(cfg.policies, vec![KeyPolicy::FixedPerRound { m: 50 }]);
+        cfg.validate().unwrap();
+    }
+}

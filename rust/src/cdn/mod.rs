@@ -1,0 +1,180 @@
+//! CDN substrate for Option 3 (paper §3.2/§6): a sharded, read-only slice
+//! store that clients query by key, decoupled from the training server.
+//!
+//! The simulator models what the paper's trade-off discussion depends on:
+//! per-shard query/byte accounting (peak-demand behaviour), a publish step
+//! with its own cost (the pre-generation the server must finish before the
+//! round), a simple latency model, and optional PIR cost accounting
+//! ([`pir`]) for private queries.
+
+pub mod pir;
+
+use std::collections::HashMap;
+
+/// Latency/bandwidth accounting model (all simulated, not wall-clock).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    /// Fixed per-query overhead (µs).
+    pub per_query_us: u64,
+    /// Serving bandwidth per shard (bytes/µs ≈ MB/ms).
+    pub bytes_per_us: u64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            per_query_us: 200,
+            bytes_per_us: 100, // ~100 MB/s per shard
+        }
+    }
+}
+
+/// Per-shard counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    pub queries: u64,
+    pub bytes: u64,
+    pub busy_us: u64,
+}
+
+/// A versioned, sharded content-delivery store of per-key slice pieces.
+pub struct CdnStore {
+    shards: usize,
+    latency: LatencyModel,
+    /// (keyspace, key) -> piece, for the current published version.
+    pieces: HashMap<(usize, u32), Vec<f32>>,
+    version: u64,
+    stats: Vec<ShardStats>,
+    publish_bytes: u64,
+}
+
+impl CdnStore {
+    pub fn new(shards: usize) -> Self {
+        CdnStore {
+            shards: shards.max(1),
+            latency: LatencyModel::default(),
+            pieces: HashMap::new(),
+            version: 0,
+            stats: vec![ShardStats::default(); shards.max(1)],
+            publish_bytes: 0,
+        }
+    }
+
+    pub fn with_latency(mut self, latency: LatencyModel) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    fn shard_of(&self, keyspace: usize, key: u32) -> usize {
+        let h = (key as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(keyspace as u64);
+        (h % self.shards as u64) as usize
+    }
+
+    /// Publish a new model version's slices (replaces the previous version).
+    pub fn publish(&mut self, pieces: HashMap<(usize, u32), Vec<f32>>) -> u64 {
+        self.publish_bytes += pieces.values().map(|p| p.len() as u64 * 4).sum::<u64>();
+        self.pieces = pieces;
+        self.version += 1;
+        self.version
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn num_pieces(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Serve one key query; returns the piece and records shard load.
+    pub fn query(&mut self, keyspace: usize, key: u32) -> Option<&[f32]> {
+        let shard = self.shard_of(keyspace, key);
+        let piece = self.pieces.get(&(keyspace, key))?;
+        let bytes = piece.len() as u64 * 4;
+        let st = &mut self.stats[shard];
+        st.queries += 1;
+        st.bytes += bytes;
+        st.busy_us += self.latency.per_query_us + bytes / self.latency.bytes_per_us.max(1);
+        Some(piece.as_slice())
+    }
+
+    pub fn shard_stats(&self) -> &[ShardStats] {
+        &self.stats
+    }
+
+    pub fn total_queries(&self) -> u64 {
+        self.stats.iter().map(|s| s.queries).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Simulated makespan of the round: the busiest shard bounds service
+    /// completion (the peak-demand bottleneck §6 worries about).
+    pub fn makespan_us(&self) -> u64 {
+        self.stats.iter().map(|s| s.busy_us).max().unwrap_or(0)
+    }
+
+    pub fn publish_bytes(&self) -> u64 {
+        self.publish_bytes
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = vec![ShardStats::default(); self.shards];
+        self.publish_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(n: usize) -> CdnStore {
+        let mut cdn = CdnStore::new(4);
+        let mut pieces = HashMap::new();
+        for k in 0..n as u32 {
+            pieces.insert((0usize, k), vec![k as f32; 8]);
+        }
+        cdn.publish(pieces);
+        cdn
+    }
+
+    #[test]
+    fn publish_and_query_roundtrip() {
+        let mut cdn = store_with(10);
+        assert_eq!(cdn.version(), 1);
+        assert_eq!(cdn.num_pieces(), 10);
+        let p = cdn.query(0, 3).unwrap();
+        assert_eq!(p, &[3.0; 8]);
+        assert!(cdn.query(0, 99).is_none());
+        assert_eq!(cdn.total_queries(), 1);
+        assert_eq!(cdn.total_bytes(), 32);
+    }
+
+    #[test]
+    fn republish_replaces_version() {
+        let mut cdn = store_with(4);
+        let mut pieces = HashMap::new();
+        pieces.insert((0usize, 0u32), vec![7.0; 8]);
+        cdn.publish(pieces);
+        assert_eq!(cdn.version(), 2);
+        assert_eq!(cdn.num_pieces(), 1);
+        assert_eq!(cdn.query(0, 0).unwrap()[0], 7.0);
+        assert!(cdn.query(0, 3).is_none());
+    }
+
+    #[test]
+    fn load_spreads_across_shards() {
+        let mut cdn = store_with(256);
+        for k in 0..256u32 {
+            cdn.query(0, k);
+        }
+        let loaded = cdn.shard_stats().iter().filter(|s| s.queries > 0).count();
+        assert!(loaded >= 3, "only {loaded} shards loaded");
+        assert!(cdn.makespan_us() > 0);
+        assert!(cdn.makespan_us() < cdn.shard_stats().iter().map(|s| s.busy_us).sum::<u64>());
+    }
+}

@@ -1,0 +1,102 @@
+//! Private-information-retrieval cost model (paper §6).
+//!
+//! The paper notes PIR can hide *which* slices a client fetches from the
+//! CDN, at a communication overhead it leaves unquantified ("we leave a
+//! formal evaluation of the trade-off ... to future work"). This module
+//! quantifies that trade-off with standard cost models so
+//! `bench_slice_service` can chart fedselect-savings vs PIR-overhead.
+//!
+//! Models:
+//! * [`PirScheme::Trivial`] — download the whole database (information-
+//!   theoretic, single server): per-query down = K · piece_bytes.
+//! * [`PirScheme::SqrtComm`] — classic single-server computational PIR with
+//!   O(√(K·B)) communication per query (e.g. Kushilevitz-Ostrovsky shaped).
+//! * [`PirScheme::LogComm`] — modern lattice-based schemes with
+//!   polylogarithmic communication and a fixed ciphertext floor.
+
+/// Cost model selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PirScheme {
+    Trivial,
+    SqrtComm,
+    LogComm,
+}
+
+/// Per-query PIR communication estimate for a database of `k` records of
+/// `record_bytes` each. Returns (up_bytes, down_bytes).
+pub fn query_cost(scheme: PirScheme, k: usize, record_bytes: usize) -> (u64, u64) {
+    let db = (k as u64) * record_bytes as u64;
+    match scheme {
+        PirScheme::Trivial => (8, db),
+        PirScheme::SqrtComm => {
+            let c = (db as f64).sqrt().ceil() as u64;
+            // query vector up, one "row" down; both ~sqrt(db)
+            (c.max(64), c.max(record_bytes as u64))
+        }
+        PirScheme::LogComm => {
+            // ~2KB ciphertext floor, log2(K) ciphertexts up, response is a
+            // small constant factor over the record.
+            let ct = 2048u64;
+            let logk = (k.max(2) as f64).log2().ceil() as u64;
+            (ct * logk, (record_bytes as u64 * 4).max(ct))
+        }
+    }
+}
+
+/// Total per-client download with PIR for `m` key queries.
+pub fn client_down_bytes(scheme: PirScheme, m: usize, k: usize, record_bytes: usize) -> u64 {
+    (0..m).map(|_| query_cost(scheme, k, record_bytes).1).sum()
+}
+
+/// Break-even analysis: FedSelect+PIR beats plain broadcast when
+/// `m * pir_down(K, B) < full_model_bytes`. Returns true if private
+/// selection still saves download bytes.
+pub fn pir_still_saves(
+    scheme: PirScheme,
+    m: usize,
+    k: usize,
+    record_bytes: usize,
+    full_model_bytes: u64,
+) -> bool {
+    client_down_bytes(scheme, m, k, record_bytes) < full_model_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_pir_downloads_database() {
+        let (_, down) = query_cost(PirScheme::Trivial, 1000, 400);
+        assert_eq!(down, 400_000);
+    }
+
+    #[test]
+    fn sqrt_pir_is_sublinear() {
+        let (_, down) = query_cost(PirScheme::SqrtComm, 10_000, 400);
+        assert!(down < 10_000 * 400 / 10);
+        assert!(down >= 400);
+    }
+
+    #[test]
+    fn log_pir_has_ciphertext_floor() {
+        let (up, down) = query_cost(PirScheme::LogComm, 1 << 16, 4);
+        assert!(up >= 2048 * 16);
+        assert!(down >= 2048);
+    }
+
+    #[test]
+    fn breakeven_matches_intuition() {
+        // Large model, few keys: log-PIR still saves.
+        let full = 1_000_000_000u64;
+        assert!(pir_still_saves(PirScheme::LogComm, 100, 1 << 20, 512, full));
+        // Trivial PIR never saves (m >= 1 downloads the whole DB).
+        assert!(!pir_still_saves(
+            PirScheme::Trivial,
+            1,
+            1 << 20,
+            512,
+            (1u64 << 20) * 512
+        ));
+    }
+}

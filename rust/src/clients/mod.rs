@@ -1,0 +1,320 @@
+//! Client simulation: local batch assembly and the client-update engine.
+//!
+//! [`build_cu_batch`] turns a client's raw examples into the static-shape
+//! `[steps, mb, ...]` tensors the AOT client-update artifacts expect —
+//! including the FedSelect-specific parts: BOW features are *projected onto
+//! the client's selected keys* (the π_A of §2.3) and transformer tokens are
+//! remapped to slice-local ids (out-of-slice tokens hit the UNK key).
+//! Variable-size client datasets are padded with zero-weight rows.
+//!
+//! [`Engine`] dispatches `ClientUpdate`/eval either to the PJRT runtime
+//! (the compiled XLA artifacts — the production path) or to the native Rust
+//! mirror (logreg/MLP only; the test oracle and artifact-free sweep path).
+
+use std::collections::HashMap;
+
+use crate::data::{ClientData, Example};
+use crate::error::{Error, Result};
+use crate::model::{ModelArch, ParamStore};
+use crate::native::{self, Buf};
+use crate::runtime::PjrtRuntime;
+use crate::tensor::rng::Rng;
+
+/// Client-update engine backend.
+pub enum Engine {
+    /// Pure-Rust mirror (logreg/MLP only).
+    Native,
+    /// Compiled AOT artifacts through PJRT.
+    Pjrt(Box<PjrtRuntime>),
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            Engine::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Run one local epoch; returns the model delta per binding.
+    pub fn client_update(
+        &mut self,
+        arch: &ModelArch,
+        ms: &[usize],
+        slices: Vec<Vec<f32>>,
+        batch: &[Buf],
+        lr: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Engine::Native => native::client_update(arch, ms, &slices, batch, lr),
+            Engine::Pjrt(rt) => {
+                let name = arch.cu_name(ms);
+                let mut inputs: Vec<Buf> = slices.into_iter().map(Buf::F32).collect();
+                inputs.extend(batch.iter().cloned());
+                inputs.push(Buf::F32(vec![lr]));
+                rt.execute(&name, &inputs)
+            }
+        }
+    }
+
+    /// Evaluate the full server model on one padded eval batch.
+    /// Returns (loss_sum, metric_sum, weight_sum).
+    pub fn eval(
+        &mut self,
+        arch: &ModelArch,
+        store: &ParamStore,
+        batch: &[Buf],
+    ) -> Result<(f64, f64, f64)> {
+        match self {
+            Engine::Native => {
+                let params: Vec<Vec<f32>> =
+                    store.segments.iter().map(|s| s.data.clone()).collect();
+                native::eval(arch, &params, batch)
+            }
+            Engine::Pjrt(rt) => {
+                let name = arch.eval_name();
+                let mut inputs: Vec<Buf> = store
+                    .segments
+                    .iter()
+                    .map(|s| Buf::F32(s.data.clone()))
+                    .collect();
+                inputs.extend(batch.iter().cloned());
+                let out = rt.execute(&name, &inputs)?;
+                Ok((out[0][0] as f64, out[1][0] as f64, out[2][0] as f64))
+            }
+        }
+    }
+}
+
+/// Select up to `cap` example indices for a local epoch (shuffled, no
+/// replacement; datasets smaller than `cap` are padded at batch build).
+fn epoch_indices(n: usize, cap: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(cap);
+    idx
+}
+
+/// Build the `[steps, mb, ...]` client-update batch for one client.
+///
+/// Returns batch buffers in artifact order plus the number of real
+/// (non-padding) examples used.
+pub fn build_cu_batch(
+    arch: &ModelArch,
+    client: &ClientData,
+    keys: &[Vec<u32>],
+    rng: &mut Rng,
+) -> Result<(Vec<Buf>, usize)> {
+    let bs = arch.cu_batch();
+    let cap = bs.capacity();
+    let idx = epoch_indices(client.examples.len(), cap, rng);
+    let used = idx.len();
+    match arch {
+        ModelArch::Logreg { tags, .. } => {
+            let m = keys[0].len();
+            let pos: HashMap<u32, usize> =
+                keys[0].iter().enumerate().map(|(j, &k)| (k, j)).collect();
+            let mut x = vec![0.0f32; cap * m];
+            let mut y = vec![0.0f32; cap * tags];
+            let mut wgt = vec![0.0f32; cap];
+            for (row, &ei) in idx.iter().enumerate() {
+                let Example::Bow { words, tags: tg } = &client.examples[ei] else {
+                    return Err(Error::Data("logreg needs BOW examples".into()));
+                };
+                for w in words {
+                    if let Some(&j) = pos.get(w) {
+                        x[row * m + j] = 1.0;
+                    }
+                }
+                for &t in tg {
+                    y[row * tags + t as usize] = 1.0;
+                }
+                wgt[row] = 1.0;
+            }
+            Ok((vec![Buf::F32(x), Buf::F32(y), Buf::F32(wgt)], used))
+        }
+        ModelArch::Mlp { .. } | ModelArch::Cnn { .. } => {
+            let mut x = vec![0.0f32; cap * 784];
+            let mut y = vec![0i32; cap];
+            let mut wgt = vec![0.0f32; cap];
+            for (row, &ei) in idx.iter().enumerate() {
+                let Example::Image { pixels, label } = &client.examples[ei] else {
+                    return Err(Error::Data("image model needs image examples".into()));
+                };
+                x[row * 784..(row + 1) * 784].copy_from_slice(pixels);
+                y[row] = *label as i32;
+                wgt[row] = 1.0;
+            }
+            Ok((vec![Buf::F32(x), Buf::I32(y), Buf::F32(wgt)], used))
+        }
+        ModelArch::Transformer { shape, .. } => {
+            let seq = shape.seq;
+            let local: HashMap<u32, i32> = keys[0]
+                .iter()
+                .enumerate()
+                .map(|(j, &k)| (k, j as i32))
+                .collect();
+            let unk = *local.get(&0).unwrap_or(&0);
+            let mut x = vec![0i32; cap * seq];
+            let mut y = vec![0i32; cap * seq];
+            let mut wgt = vec![0.0f32; cap * seq];
+            for (row, &ei) in idx.iter().enumerate() {
+                let Example::Text { tokens } = &client.examples[ei] else {
+                    return Err(Error::Data("transformer needs text examples".into()));
+                };
+                if tokens.len() < seq + 1 {
+                    return Err(Error::Data(format!(
+                        "text example too short: {} < {}",
+                        tokens.len(),
+                        seq + 1
+                    )));
+                }
+                for p in 0..seq {
+                    let xi = *local.get(&tokens[p]).unwrap_or(&unk);
+                    let yi = *local.get(&tokens[p + 1]).unwrap_or(&unk);
+                    x[row * seq + p] = xi;
+                    y[row * seq + p] = yi;
+                    wgt[row * seq + p] = 1.0;
+                }
+            }
+            Ok((vec![Buf::I32(x), Buf::I32(y), Buf::F32(wgt)], used))
+        }
+    }
+}
+
+/// Build padded eval batches of the arch's eval batch size from a pool of
+/// examples (full-model space: no key projection/remapping beyond vocab).
+pub fn build_eval_batches(arch: &ModelArch, examples: &[&Example]) -> Result<Vec<Vec<Buf>>> {
+    let b = arch.eval_batch();
+    let mut out = Vec::new();
+    for chunk in examples.chunks(b) {
+        match arch {
+            ModelArch::Logreg { vocab, tags } => {
+                let mut x = vec![0.0f32; b * vocab];
+                let mut y = vec![0.0f32; b * tags];
+                let mut wgt = vec![0.0f32; b];
+                for (row, ex) in chunk.iter().enumerate() {
+                    let Example::Bow { words, tags: tg } = ex else {
+                        return Err(Error::Data("logreg eval needs BOW".into()));
+                    };
+                    for &w in words {
+                        if (w as usize) < *vocab {
+                            x[row * vocab + w as usize] = 1.0;
+                        }
+                    }
+                    for &t in tg {
+                        y[row * tags + t as usize] = 1.0;
+                    }
+                    wgt[row] = 1.0;
+                }
+                out.push(vec![Buf::F32(x), Buf::F32(y), Buf::F32(wgt)]);
+            }
+            ModelArch::Mlp { .. } | ModelArch::Cnn { .. } => {
+                let mut x = vec![0.0f32; b * 784];
+                let mut y = vec![0i32; b];
+                let mut wgt = vec![0.0f32; b];
+                for (row, ex) in chunk.iter().enumerate() {
+                    let Example::Image { pixels, label } = ex else {
+                        return Err(Error::Data("image eval needs images".into()));
+                    };
+                    x[row * 784..(row + 1) * 784].copy_from_slice(pixels);
+                    y[row] = *label as i32;
+                    wgt[row] = 1.0;
+                }
+                out.push(vec![Buf::F32(x), Buf::I32(y), Buf::F32(wgt)]);
+            }
+            ModelArch::Transformer { shape, .. } => {
+                let seq = shape.seq;
+                let mut x = vec![0i32; b * seq];
+                let mut y = vec![0i32; b * seq];
+                let mut wgt = vec![0.0f32; b * seq];
+                for (row, ex) in chunk.iter().enumerate() {
+                    let Example::Text { tokens } = ex else {
+                        return Err(Error::Data("transformer eval needs text".into()));
+                    };
+                    for p in 0..seq {
+                        x[row * seq + p] = tokens[p] as i32;
+                        y[row * seq + p] = tokens[p + 1] as i32;
+                        wgt[row * seq + p] = 1.0;
+                    }
+                }
+                out.push(vec![Buf::I32(x), Buf::I32(y), Buf::F32(wgt)]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Client-side peak memory estimate in bytes: sub-model + batch + one
+/// gradient-sized buffer (what the paper's client memory argument counts).
+pub fn client_memory_bytes(slice_floats: usize, batch: &[Buf]) -> usize {
+    let batch_bytes: usize = batch.iter().map(|b| b.bytes()).sum();
+    slice_floats * 4 * 2 + batch_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::bow::{generate, BowConfig};
+
+    #[test]
+    fn logreg_batch_projects_onto_keys() {
+        let ds = generate(&BowConfig::new(64, 8).with_clients(2, 0, 0));
+        let arch = ModelArch::Logreg { vocab: 64, tags: 8 };
+        let client = &ds.train[0];
+        let keys = vec![client.features_by_frequency()[..4.min(client.feature_counts.len())].to_vec()];
+        let mut rng = Rng::new(1, 0);
+        let (batch, used) = build_cu_batch(&arch, client, &keys, &mut rng).unwrap();
+        assert!(used > 0);
+        let cap = arch.cu_batch().capacity();
+        let m = keys[0].len();
+        let x = batch[0].as_f32().unwrap();
+        assert_eq!(x.len(), cap * m);
+        // at least one selected word must appear
+        assert!(x.iter().any(|&v| v == 1.0));
+        // padding rows have zero weight
+        let wgt = batch[2].as_f32().unwrap();
+        assert_eq!(wgt.iter().filter(|&&w| w > 0.0).count(), used);
+    }
+
+    #[test]
+    fn transformer_batch_remaps_to_local_ids() {
+        use crate::data::text::{generate as gen_text, TextConfig};
+        let cfg = TextConfig::new(128, 20).with_clients(2, 0, 0);
+        let ds = gen_text(&cfg);
+        let arch = ModelArch::transformer();
+        let client = &ds.train[0];
+        // keys: UNK + top-7 local tokens
+        let mut keys0 = vec![0u32];
+        for f in client.features_by_frequency() {
+            if f != 0 && keys0.len() < 8 {
+                keys0.push(f);
+            }
+        }
+        let keys = vec![keys0.clone(), (0..16u32).collect()];
+        let mut rng = Rng::new(1, 0);
+        let (batch, _) = build_cu_batch(&arch, client, &keys, &mut rng).unwrap();
+        let x = batch[0].as_i32().unwrap();
+        // every id must be a valid local slice index
+        assert!(x.iter().all(|&v| (v as usize) < keys0.len()));
+    }
+
+    #[test]
+    fn eval_batches_cover_all_examples() {
+        let ds = generate(&BowConfig::new(64, 8).with_clients(4, 0, 2));
+        let arch = ModelArch::Logreg { vocab: 64, tags: 8 };
+        let pool: Vec<&Example> = ds.test.iter().flat_map(|c| c.examples.iter()).collect();
+        let batches = build_eval_batches(&arch, &pool).unwrap();
+        let total_w: f32 = batches
+            .iter()
+            .map(|b| b[2].as_f32().unwrap().iter().sum::<f32>())
+            .sum();
+        assert_eq!(total_w as usize, pool.len());
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_slice() {
+        let b = [Buf::F32(vec![0.0; 100])];
+        assert!(client_memory_bytes(1000, &b) > client_memory_bytes(10, &b));
+    }
+}

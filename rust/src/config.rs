@@ -1,0 +1,284 @@
+//! Experiment/training configuration: the single description of a training
+//! run that the [`crate::coordinator::Trainer`] consumes, with validation
+//! and the canonical per-figure defaults.
+
+use crate::aggregation::AggMode;
+use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
+use crate::error::{Error, Result};
+use crate::fedselect::{KeyPolicy, SliceImpl};
+use crate::model::ModelArch;
+use crate::optim::ServerOpt;
+
+/// Which dataset generator feeds the run.
+#[derive(Clone, Debug)]
+pub enum DatasetConfig {
+    Bow(BowConfig),
+    Image(ImageConfig),
+    Text(TextConfig),
+}
+
+/// Engine selection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust mirror (logreg / MLP families only).
+    Native,
+    /// AOT artifacts through PJRT; the directory holds manifest.json.
+    Pjrt { artifacts_dir: String },
+}
+
+impl EngineKind {
+    pub fn pjrt_default() -> Self {
+        EngineKind::Pjrt {
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Evaluation schedule.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Evaluate every `every` rounds (0 = only at the end).
+    pub every: usize,
+    /// Cap on pooled eval examples (keeps eval cost bounded).
+    pub max_examples: usize,
+    /// Use validation split when available (else test).
+    pub use_val: bool,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            every: 10,
+            max_examples: 2048,
+            use_val: false,
+        }
+    }
+}
+
+/// Full description of one federated training run (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub arch: ModelArch,
+    pub dataset: DatasetConfig,
+    pub rounds: usize,
+    /// Clients sampled per round (the paper uses 50).
+    pub cohort: usize,
+    /// One key policy per keyspace of the arch.
+    pub policies: Vec<KeyPolicy>,
+    pub slice_impl: SliceImpl,
+    pub agg: AggMode,
+    /// Route aggregation through the secure-aggregation simulation.
+    pub secure_agg: bool,
+    pub server_opt: ServerOpt,
+    pub client_lr: f32,
+    /// Probability a client drops after fetching its slice (failure injection).
+    pub dropout_rate: f32,
+    pub eval: EvalConfig,
+    pub engine: EngineKind,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Canonical §5.2-style run: logreg tag prediction with structured keys,
+    /// FedAdagrad, native engine (artifact-free).
+    pub fn logreg_default(vocab: usize, m: usize) -> Self {
+        TrainConfig {
+            arch: ModelArch::logreg(vocab),
+            dataset: DatasetConfig::Bow(BowConfig::new(vocab, 50)),
+            rounds: 30,
+            cohort: 50,
+            policies: vec![KeyPolicy::TopFreq { m }],
+            slice_impl: SliceImpl::PregenCdn,
+            agg: AggMode::CohortMean,
+            secure_agg: false,
+            server_opt: ServerOpt::fedadagrad(0.1),
+            client_lr: 0.5,
+            dropout_rate: 0.0,
+            eval: EvalConfig::default(),
+            engine: EngineKind::Native,
+            seed: 7,
+        }
+    }
+
+    /// §5.3-style run: MLP with random keys, FedAvg.
+    pub fn mlp_default(m: usize) -> Self {
+        TrainConfig {
+            arch: ModelArch::mlp2nn(),
+            dataset: DatasetConfig::Image(ImageConfig::new(62)),
+            rounds: 40,
+            cohort: 50,
+            policies: vec![KeyPolicy::RandomGlobal { m }],
+            slice_impl: SliceImpl::PregenCdn,
+            agg: AggMode::CohortMean,
+            secure_agg: false,
+            server_opt: ServerOpt::fedavg(1.0),
+            client_lr: 0.05,
+            dropout_rate: 0.0,
+            eval: EvalConfig::default(),
+            engine: EngineKind::Native,
+            seed: 11,
+        }
+    }
+
+    /// §5.3-style run: CNN with random filter keys (PJRT required).
+    pub fn cnn_default(m: usize) -> Self {
+        TrainConfig {
+            arch: ModelArch::cnn(),
+            dataset: DatasetConfig::Image(ImageConfig::new(62)),
+            rounds: 30,
+            cohort: 20,
+            policies: vec![KeyPolicy::RandomGlobal { m }],
+            slice_impl: SliceImpl::PregenCdn,
+            agg: AggMode::CohortMean,
+            secure_agg: false,
+            server_opt: ServerOpt::fedavg(1.0),
+            client_lr: 0.05,
+            dropout_rate: 0.0,
+            eval: EvalConfig::default(),
+            engine: EngineKind::pjrt_default(),
+            seed: 13,
+        }
+    }
+
+    /// §5.4-style run: transformer with mixed structured+random keys.
+    pub fn transformer_default(mv: usize, dh: usize) -> Self {
+        let arch = ModelArch::transformer();
+        let (vocab, seq) = match &arch {
+            ModelArch::Transformer { shape, .. } => (shape.vocab, shape.seq),
+            _ => unreachable!(),
+        };
+        TrainConfig {
+            arch,
+            dataset: DatasetConfig::Text(TextConfig::new(vocab, seq)),
+            rounds: 30,
+            cohort: 20,
+            policies: vec![
+                KeyPolicy::TopFreq { m: mv },
+                KeyPolicy::RandomGlobal { m: dh },
+            ],
+            slice_impl: SliceImpl::PregenCdn,
+            agg: AggMode::CohortMean,
+            secure_agg: false,
+            server_opt: ServerOpt::fedadam(0.02),
+            client_lr: 0.1,
+            dropout_rate: 0.0,
+            eval: EvalConfig::default(),
+            engine: EngineKind::pjrt_default(),
+            seed: 23,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Validate cross-field consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be > 0".into()));
+        }
+        if self.cohort == 0 {
+            return Err(Error::Config("cohort must be > 0".into()));
+        }
+        if self.policies.len() != self.arch.num_keyspaces() {
+            return Err(Error::Config(format!(
+                "arch has {} keyspaces but {} key policies given",
+                self.arch.num_keyspaces(),
+                self.policies.len()
+            )));
+        }
+        if !(0.0..1.0).contains(&self.dropout_rate) {
+            return Err(Error::Config("dropout_rate must be in [0, 1)".into()));
+        }
+        match (&self.arch, &self.dataset) {
+            (ModelArch::Logreg { vocab, tags }, DatasetConfig::Bow(b)) => {
+                if b.vocab != *vocab || b.tags != *tags {
+                    return Err(Error::Config(format!(
+                        "logreg arch (v={vocab},t={tags}) vs bow data (v={},t={})",
+                        b.vocab, b.tags
+                    )));
+                }
+            }
+            (ModelArch::Mlp { classes, .. }, DatasetConfig::Image(i))
+            | (ModelArch::Cnn { classes, .. }, DatasetConfig::Image(i)) => {
+                if i.classes != *classes {
+                    return Err(Error::Config(format!(
+                        "model classes {classes} vs image classes {}",
+                        i.classes
+                    )));
+                }
+            }
+            (ModelArch::Transformer { shape, .. }, DatasetConfig::Text(t)) => {
+                if t.vocab != shape.vocab || t.seq != shape.seq {
+                    return Err(Error::Config(format!(
+                        "transformer (v={},L={}) vs text data (v={},L={})",
+                        shape.vocab, shape.seq, t.vocab, t.seq
+                    )));
+                }
+            }
+            (a, d) => {
+                return Err(Error::Config(format!(
+                    "arch {a:?} incompatible with dataset {}",
+                    match d {
+                        DatasetConfig::Bow(_) => "bow",
+                        DatasetConfig::Image(_) => "image",
+                        DatasetConfig::Text(_) => "text",
+                    }
+                )))
+            }
+        }
+        if self.engine == EngineKind::Native
+            && matches!(self.arch, ModelArch::Cnn { .. } | ModelArch::Transformer { .. })
+        {
+            return Err(Error::Config(
+                "native engine supports logreg/MLP only; use --engine pjrt".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::logreg_default(512, 64).validate().unwrap();
+        TrainConfig::mlp_default(50).validate().unwrap();
+        TrainConfig::cnn_default(16).validate().unwrap();
+        TrainConfig::transformer_default(256, 128).validate().unwrap();
+    }
+
+    #[test]
+    fn mismatched_dataset_rejected() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.dataset = DatasetConfig::Image(ImageConfig::new(62));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_policy_count_rejected() {
+        let mut cfg = TrainConfig::transformer_default(256, 128);
+        cfg.policies.pop();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn native_cnn_rejected() {
+        let mut cfg = TrainConfig::cnn_default(16);
+        cfg.engine = EngineKind::Native;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! The round driver: federated model training with FedSelect (Algorithm 2).
+//!
+//! Each round:
+//! 1. sample a cohort of clients (§5.1: uniform without replacement),
+//! 2. `begin_round` on the slice service (Option 3 pre-generates here),
+//! 3. each client chooses select keys via its [`KeyPolicy`], fetches its
+//!    sub-model through FEDSELECT, runs `ClientUpdate` (one local epoch of
+//!    SGD through the engine), and submits its sliced delta,
+//! 4. `AGGREGATE*` scatters deltas into full model space (plain or
+//!    secure-masked) and averages,
+//! 5. `ServerUpdate` applies the server optimizer to the pseudo-gradient.
+//!
+//! Failure injection: with `dropout_rate`, a client drops *after* fetching
+//! its slice (download wasted, no contribution) — the paper's §6 dropout
+//! pattern.
+
+use std::time::Instant;
+
+use crate::aggregation::{Aggregator, SecureAggSim, SparseAccumulator};
+use crate::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, Engine};
+use crate::config::{DatasetConfig, EngineKind, TrainConfig};
+use crate::data::{bow, images, text, Example, FederatedDataset};
+use crate::error::{Error, Result};
+use crate::fedselect::{RoundComm, SliceService};
+use crate::metrics::human_bytes;
+use crate::model::{ModelArch, ParamStore, SelectSpec};
+use crate::optim::Optimizer;
+use crate::runtime::PjrtRuntime;
+use crate::tensor::rng::Rng;
+
+/// Per-round ledger.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub comm: RoundComm,
+    /// Client->server upload bytes (updates + keys, or masked vectors).
+    pub up_bytes: u64,
+    /// Max client memory this round (bytes).
+    pub max_client_mem: usize,
+    pub wall_ms: f64,
+}
+
+/// Periodic evaluation snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub round: usize,
+    pub loss: f64,
+    /// recall@5 (logreg) or accuracy (MLP/CNN/transformer).
+    pub metric: f64,
+    pub examples: usize,
+}
+
+/// Full run report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub rounds: Vec<RoundRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub final_eval: EvalRecord,
+    /// client sub-model floats / server selectable+broadcast floats
+    pub rel_model_size: f64,
+    pub server_params: usize,
+    pub total_down_bytes: u64,
+    pub total_up_bytes: u64,
+}
+
+impl TrainReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "final metric {:.4} | loss {:.4} | rel size {:.3} | down {} | up {}",
+            self.final_eval.metric,
+            self.final_eval.loss,
+            self.rel_model_size,
+            human_bytes(self.total_down_bytes),
+            human_bytes(self.total_up_bytes),
+        )
+    }
+}
+
+/// Federated trainer (Algorithm 2).
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    arch: ModelArch,
+    store: ParamStore,
+    spec: SelectSpec,
+    dataset: FederatedDataset,
+    service: Box<dyn SliceService>,
+    engine: Engine,
+    optimizer: Optimizer,
+    rng: Rng,
+    round: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let arch = cfg.arch.clone();
+        let dataset = build_dataset(&cfg.dataset);
+        if dataset.train.is_empty() {
+            return Err(Error::Data("dataset has no training clients".into()));
+        }
+        let mut rng = Rng::new(cfg.seed, 100);
+        let store = arch.init_store(&mut rng);
+        let spec = arch.select_spec();
+        spec.validate(&store)?;
+        let service = cfg.slice_impl.build();
+        let engine = match &cfg.engine {
+            EngineKind::Native => Engine::Native,
+            EngineKind::Pjrt { artifacts_dir } => {
+                Engine::Pjrt(Box::new(PjrtRuntime::load(artifacts_dir)?))
+            }
+        };
+        let optimizer = Optimizer::new(cfg.server_opt, &store);
+        Ok(Trainer {
+            cfg,
+            arch,
+            store,
+            spec,
+            dataset,
+            service,
+            engine,
+            optimizer,
+            rng,
+            round: 0,
+        })
+    }
+
+    /// Construct with an externally built dataset (reused across a sweep).
+    pub fn with_dataset(cfg: TrainConfig, dataset: FederatedDataset) -> Result<Self> {
+        cfg.validate()?;
+        let arch = cfg.arch.clone();
+        let mut rng = Rng::new(cfg.seed, 100);
+        let store = arch.init_store(&mut rng);
+        let spec = arch.select_spec();
+        spec.validate(&store)?;
+        let service = cfg.slice_impl.build();
+        let engine = match &cfg.engine {
+            EngineKind::Native => Engine::Native,
+            EngineKind::Pjrt { artifacts_dir } => {
+                Engine::Pjrt(Box::new(PjrtRuntime::load(artifacts_dir)?))
+            }
+        };
+        let optimizer = Optimizer::new(cfg.server_opt, &store);
+        Ok(Trainer {
+            cfg,
+            arch,
+            store,
+            spec,
+            dataset,
+            service,
+            engine,
+            optimizer,
+            rng,
+            round: 0,
+        })
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    pub fn dataset(&self) -> &FederatedDataset {
+        &self.dataset
+    }
+
+    /// Per-keyspace key counts of the configured policies.
+    pub fn key_counts(&self) -> Vec<usize> {
+        self.spec
+            .keyspaces
+            .iter()
+            .zip(self.cfg.policies.iter())
+            .map(|(ks, p)| p.m(ks.size))
+            .collect()
+    }
+
+    /// Client/server relative model size (the paper's Fig. 3 x-axis).
+    pub fn rel_model_size(&self) -> f64 {
+        let ms = self.key_counts();
+        self.spec.client_floats(&self.store, &ms) as f64
+            / self.spec.server_floats(&self.store) as f64
+    }
+
+    /// Run one round of Algorithm 2.
+    pub fn run_round(&mut self) -> Result<RoundRecord> {
+        let t0 = Instant::now();
+        self.round += 1;
+        let mut round_rng = self.rng.fork(self.round as u64);
+        let cohort = self.dataset.sample_cohort(&mut round_rng, self.cfg.cohort);
+
+        self.service.begin_round(&self.store, &self.spec)?;
+
+        // shared per-round key sets (Fig. 6 "fixed" ablation)
+        let shared: Vec<Option<Vec<u32>>> = self
+            .cfg
+            .policies
+            .iter()
+            .zip(self.spec.keyspaces.iter())
+            .map(|(p, ks)| p.round_keys(ks.size, &mut round_rng))
+            .collect();
+
+        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
+            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
+            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
+        } else {
+            Box::new(SparseAccumulator::new(&self.store))
+        };
+
+        let force_unk = matches!(self.arch, ModelArch::Transformer { .. });
+        let mut dropped = 0usize;
+        let mut completed = 0usize;
+        let mut up_bytes_plain = 0u64;
+        let mut max_mem = 0usize;
+        for &ci in &cohort {
+            let client = &self.dataset.train[ci];
+            let mut crng = round_rng.fork(client.id ^ 0xC11E47);
+            let keys: Vec<Vec<u32>> = self
+                .cfg
+                .policies
+                .iter()
+                .enumerate()
+                .map(|(ksi, p)| {
+                    p.keys_for(
+                        client,
+                        self.spec.keyspaces[ksi].size,
+                        &mut crng,
+                        shared[ksi].as_deref(),
+                        force_unk && ksi == 0,
+                    )
+                })
+                .collect();
+
+            let slices = self.service.fetch(&self.store, &self.spec, &keys)?;
+
+            // failure injection: drop after download
+            if self.cfg.dropout_rate > 0.0 && crng.f32() < self.cfg.dropout_rate {
+                dropped += 1;
+                continue;
+            }
+
+            let (batch, _used) = build_cu_batch(&self.arch, client, &keys, &mut crng)?;
+            let slice_floats: usize = slices.iter().map(|s| s.len()).sum();
+            max_mem = max_mem.max(client_memory_bytes(slice_floats, &batch));
+            let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
+            let deltas =
+                self.engine
+                    .client_update(&self.arch, &ms, slices, &batch, self.cfg.client_lr)?;
+            up_bytes_plain += deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
+                + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+            agg.add_client(&self.spec, &keys, &deltas)?;
+            completed += 1;
+        }
+
+        let comm = self.service.end_round();
+        let up_bytes = if self.cfg.secure_agg {
+            // §4.2: client-side φ + dense secure agg uploads full-model-sized
+            // masked vectors.
+            completed as u64 * self.store.bytes() as u64
+        } else {
+            up_bytes_plain
+        };
+
+        if completed > 0 {
+            let update = agg.finalize(self.cfg.agg);
+            self.optimizer.step(&mut self.store, &update);
+        }
+
+        Ok(RoundRecord {
+            round: self.round,
+            completed,
+            dropped,
+            comm,
+            up_bytes,
+            max_client_mem: max_mem,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Evaluate the full server model on held-out clients.
+    pub fn evaluate(&mut self) -> Result<EvalRecord> {
+        let split = if self.cfg.eval.use_val && !self.dataset.val.is_empty() {
+            &self.dataset.val
+        } else if !self.dataset.test.is_empty() {
+            &self.dataset.test
+        } else {
+            &self.dataset.train
+        };
+        let mut pool: Vec<&Example> = split.iter().flat_map(|c| c.examples.iter()).collect();
+        pool.truncate(self.cfg.eval.max_examples);
+        if pool.is_empty() {
+            return Err(Error::Data("no eval examples".into()));
+        }
+        let batches = build_eval_batches(&self.arch, &pool)?;
+        let (mut loss, mut metric, mut wsum) = (0.0f64, 0.0f64, 0.0f64);
+        for b in &batches {
+            let (l, m, w) = self.engine.eval(&self.arch, &self.store, b)?;
+            loss += l;
+            metric += m;
+            wsum += w;
+        }
+        let w = wsum.max(1.0);
+        Ok(EvalRecord {
+            round: self.round,
+            loss: loss / w,
+            metric: metric / w,
+            examples: wsum as usize,
+        })
+    }
+
+    /// Run the configured number of rounds with periodic evaluation.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        let mut evals = Vec::new();
+        for r in 0..self.cfg.rounds {
+            let rec = self.run_round()?;
+            rounds.push(rec);
+            let every = self.cfg.eval.every;
+            if every > 0 && (r + 1) % every == 0 && r + 1 < self.cfg.rounds {
+                evals.push(self.evaluate()?);
+            }
+        }
+        let final_eval = self.evaluate()?;
+        evals.push(final_eval);
+        Ok(TrainReport {
+            rel_model_size: self.rel_model_size(),
+            server_params: self.store.num_params(),
+            total_down_bytes: rounds.iter().map(|r| r.comm.down_bytes).sum(),
+            total_up_bytes: rounds.iter().map(|r| r.up_bytes).sum(),
+            rounds,
+            evals,
+            final_eval,
+        })
+    }
+}
+
+/// Materialize the configured dataset.
+pub fn build_dataset(cfg: &DatasetConfig) -> FederatedDataset {
+    match cfg {
+        DatasetConfig::Bow(c) => bow::generate(c),
+        DatasetConfig::Image(c) => images::generate(c),
+        DatasetConfig::Text(c) => text::generate(c),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::data::bow::BowConfig;
+
+    fn tiny_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::logreg_default(128, 32);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(24, 4, 8));
+        cfg.rounds = 4;
+        cfg.cohort = 6;
+        cfg.eval.every = 0;
+        cfg.eval.max_examples = 256;
+        cfg
+    }
+
+    #[test]
+    fn trainer_runs_and_improves() {
+        let mut t = Trainer::new(tiny_cfg()).unwrap();
+        let before = t.evaluate().unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.rounds.len(), 4);
+        assert!(report.final_eval.loss.is_finite());
+        assert!(
+            report.final_eval.loss < before.loss,
+            "loss {} !< {}",
+            report.final_eval.loss,
+            before.loss
+        );
+        assert!(report.rel_model_size < 0.5);
+        assert!(report.total_down_bytes > 0);
+        assert!(report.total_up_bytes > 0);
+    }
+
+    #[test]
+    fn dropout_reduces_completions() {
+        let mut cfg = tiny_cfg();
+        cfg.dropout_rate = 0.9;
+        let mut t = Trainer::new(cfg).unwrap();
+        let rec = t.run_round().unwrap();
+        assert!(rec.dropped > 0);
+        assert_eq!(rec.completed + rec.dropped, 6);
+    }
+
+    #[test]
+    fn secure_agg_matches_plain_training() {
+        // same seed, same clients: masked aggregation must yield (nearly)
+        // the same model trajectory as plain aggregation
+        let mut cfg_a = tiny_cfg();
+        cfg_a.rounds = 2;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.secure_agg = true;
+        let ra = Trainer::new(cfg_a).unwrap().run().unwrap();
+        let rb = Trainer::new(cfg_b).unwrap().run().unwrap();
+        assert!(
+            (ra.final_eval.loss - rb.final_eval.loss).abs() < 0.05 * ra.final_eval.loss.abs(),
+            "plain {} vs secure {}",
+            ra.final_eval.loss,
+            rb.final_eval.loss
+        );
+        // secure agg uploads full-model-sized vectors
+        assert!(rb.total_up_bytes > ra.total_up_bytes);
+    }
+
+    #[test]
+    fn all_keys_recovers_fedavg_sizes() {
+        let mut cfg = tiny_cfg();
+        cfg.policies = vec![crate::fedselect::KeyPolicy::AllKeys];
+        let t = Trainer::new(cfg).unwrap();
+        assert!((t.rel_model_size() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,255 @@
+//! Synthetic Stack-Overflow-like tag-prediction corpus.
+//!
+//! What FedSelect's §5.2 behaviour depends on, and what this generator
+//! reproduces (DESIGN.md §4):
+//!
+//! 1. global word frequencies are Zipfian,
+//! 2. clients are heterogeneous: each client's vocabulary is a topic-skewed,
+//!    small subset of the global vocabulary,
+//! 3. tags are predictable from word co-occurrence (a sparse ground-truth
+//!    teacher), so a logistic model can actually learn.
+//!
+//! Each tag owns a set of indicator words; an example's tags are the tags
+//! whose indicators sufficiently overlap its word set.
+
+use super::{skewed_count, ClientData, Example, FederatedDataset};
+use crate::tensor::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct BowConfig {
+    pub vocab: usize,
+    pub tags: usize,
+    pub train_clients: usize,
+    pub val_clients: usize,
+    pub test_clients: usize,
+    /// Latent topics driving client heterogeneity.
+    pub topics: usize,
+    /// Zipf exponent of the global word distribution.
+    pub zipf_s: f64,
+    /// Mean words per example (distinct).
+    pub words_per_example: usize,
+    /// Indicator words per tag in the teacher.
+    pub indicators_per_tag: usize,
+    pub seed: u64,
+}
+
+impl BowConfig {
+    pub fn new(vocab: usize, tags: usize) -> Self {
+        BowConfig {
+            vocab,
+            tags,
+            train_clients: 400,
+            val_clients: 40,
+            test_clients: 80,
+            topics: 16,
+            zipf_s: 1.07,
+            words_per_example: 24,
+            indicators_per_tag: 16,
+            seed: 17,
+        }
+    }
+
+    pub fn with_clients(mut self, train: usize, val: usize, test: usize) -> Self {
+        self.train_clients = train;
+        self.val_clients = val;
+        self.test_clients = test;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+struct Teacher {
+    /// tag -> sorted indicator words
+    indicators: Vec<Vec<u32>>,
+}
+
+impl Teacher {
+    fn new(cfg: &BowConfig, rng: &mut Rng, zipf: &Zipf) -> Self {
+        // never demand more distinct words than the vocabulary can provide
+        let per_tag = cfg.indicators_per_tag.min(cfg.vocab / 3).max(2);
+        let indicators = (0..cfg.tags)
+            .map(|_| {
+                let mut set = std::collections::BTreeSet::new();
+                while set.len() < per_tag {
+                    set.insert(zipf.sample(rng) as u32);
+                }
+                set.into_iter().collect()
+            })
+            .collect();
+        Teacher { indicators }
+    }
+
+    /// Tags whose indicator overlap with `words` is >= 2, else the argmax tag.
+    fn tags_for(&self, words: &[u32]) -> Vec<u32> {
+        let wset: std::collections::HashSet<u32> = words.iter().copied().collect();
+        let mut best = (0u32, 0usize);
+        let mut out = Vec::new();
+        for (t, ind) in self.indicators.iter().enumerate() {
+            let ov = ind.iter().filter(|w| wset.contains(w)).count();
+            if ov >= 2 {
+                out.push(t as u32);
+            }
+            if ov > best.1 {
+                best = (t as u32, ov);
+            }
+        }
+        if out.is_empty() {
+            out.push(best.0);
+        }
+        out.truncate(8);
+        out
+    }
+}
+
+/// Per-topic preferred word lists (client heterogeneity source).
+fn topic_words(cfg: &BowConfig, rng: &mut Rng, zipf: &Zipf) -> Vec<Vec<u32>> {
+    let per_topic = (cfg.vocab / cfg.topics).clamp(32, 4096).min(cfg.vocab / 2).max(2);
+    (0..cfg.topics)
+        .map(|_| {
+            let mut set = std::collections::BTreeSet::new();
+            while set.len() < per_topic {
+                set.insert(zipf.sample(rng) as u32);
+            }
+            set.into_iter().collect()
+        })
+        .collect()
+}
+
+fn gen_client(
+    id: u64,
+    cfg: &BowConfig,
+    rng: &mut Rng,
+    zipf: &Zipf,
+    topics: &[Vec<u32>],
+    teacher: &Teacher,
+) -> ClientData {
+    let theta = rng.dirichlet(0.3, cfg.topics);
+    let n_examples = skewed_count(rng, 3.0, 0.9, 4, 120);
+    let mut examples = Vec::with_capacity(n_examples);
+    for _ in 0..n_examples {
+        // cap by vocab/3 so the distinct-word draw below always terminates
+        let hi = (cfg.words_per_example * 3).min(cfg.vocab / 3).max(2);
+        let n_words = skewed_count(rng, (cfg.words_per_example as f32).ln(), 0.4, 2.min(hi), hi);
+        let mut words = std::collections::BTreeSet::new();
+        while words.len() < n_words {
+            if rng.f32() < 0.55 {
+                // topic-conditioned draw
+                let t = rng.categorical(&theta);
+                let tw = &topics[t];
+                words.insert(tw[rng.below(tw.len())]);
+            } else {
+                // global Zipf draw
+                words.insert(zipf.sample(rng) as u32);
+            }
+        }
+        let words: Vec<u32> = words.into_iter().collect();
+        let tags = teacher.tags_for(&words);
+        examples.push(Example::Bow { words, tags });
+    }
+    let feature_counts = ClientData::compute_feature_counts(&examples);
+    ClientData {
+        id,
+        examples,
+        feature_counts,
+    }
+}
+
+/// Generate the full federated tag-prediction corpus.
+pub fn generate(cfg: &BowConfig) -> FederatedDataset {
+    let mut rng = Rng::new(cfg.seed, 1001);
+    let zipf = Zipf::new(cfg.vocab, cfg.zipf_s);
+    let teacher = Teacher::new(cfg, &mut rng, &zipf);
+    let topics = topic_words(cfg, &mut rng, &zipf);
+    let gen_split = |count: usize, salt: u64| -> Vec<ClientData> {
+        (0..count)
+            .map(|i| {
+                let mut crng = Rng::new(cfg.seed ^ (salt << 32) ^ i as u64, salt * 7 + 3);
+                gen_client(i as u64, cfg, &mut crng, &zipf, &topics, &teacher)
+            })
+            .collect()
+    };
+    FederatedDataset {
+        name: format!("synth-stackoverflow(v={},t={})", cfg.vocab, cfg.tags),
+        train: gen_split(cfg.train_clients, 1),
+        val: gen_split(cfg.val_clients, 2),
+        test: gen_split(cfg.test_clients, 3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> FederatedDataset {
+        generate(&BowConfig::new(256, 10).with_clients(20, 4, 6))
+    }
+
+    #[test]
+    fn splits_have_requested_sizes() {
+        let ds = small();
+        assert_eq!(ds.train.len(), 20);
+        assert_eq!(ds.val.len(), 4);
+        assert_eq!(ds.test.len(), 6);
+        assert!(ds.stats().train_examples > 20);
+    }
+
+    #[test]
+    fn examples_are_valid_and_tagged() {
+        let ds = small();
+        for c in &ds.train {
+            assert!(!c.examples.is_empty());
+            for ex in &c.examples {
+                match ex {
+                    Example::Bow { words, tags } => {
+                        assert!(!words.is_empty());
+                        assert!(!tags.is_empty());
+                        assert!(words.iter().all(|&w| (w as usize) < 256));
+                        assert!(tags.iter().all(|&t| (t as usize) < 10));
+                        // words are distinct & sorted (BTreeSet order)
+                        assert!(words.windows(2).all(|w| w[0] < w[1]));
+                    }
+                    _ => panic!("wrong example kind"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn client_vocab_is_much_smaller_than_global() {
+        let ds = generate(&BowConfig::new(2048, 20).with_clients(10, 0, 0));
+        for c in &ds.train {
+            assert!(
+                c.feature_counts.len() < 2048 / 2,
+                "client vocab {} too large",
+                c.feature_counts.len()
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = small();
+        let b = small();
+        for (ca, cb) in a.train.iter().zip(b.train.iter()) {
+            assert_eq!(ca.feature_counts, cb.feature_counts);
+        }
+    }
+
+    #[test]
+    fn global_word_frequency_is_zipf_like() {
+        let ds = generate(&BowConfig::new(512, 10).with_clients(60, 0, 0));
+        let mut counts = vec![0u32; 512];
+        for c in &ds.train {
+            for &(w, n) in &c.feature_counts {
+                counts[w as usize] += n;
+            }
+        }
+        let head: u32 = counts[..32].iter().sum();
+        let tail: u32 = counts[256..].iter().sum();
+        assert!(head > tail, "head {head} should dominate tail {tail}");
+    }
+}

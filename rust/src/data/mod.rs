@@ -1,0 +1,159 @@
+//! Synthetic federated datasets (the paper's Stack Overflow / EMNIST
+//! substitutes — see DESIGN.md §4 for the substitution rationale).
+//!
+//! A [`FederatedDataset`] is a train/val/test partition of [`ClientData`],
+//! where each client holds raw [`Example`]s plus cached feature-frequency
+//! statistics (what structured key selection operates on). Generators:
+//!
+//! * [`bow`]    — Zipfian bag-of-words tag-prediction corpus (§5.2),
+//! * [`images`] — writer-styled 28×28 glyph classification (§5.3),
+//! * [`text`]   — Markov-chain token corpus for next-word prediction (§5.4).
+
+pub mod bow;
+pub mod images;
+pub mod text;
+
+use crate::tensor::rng::Rng;
+
+/// One training example, across all model families.
+#[derive(Clone, Debug)]
+pub enum Example {
+    /// Sparse binary bag-of-words with a set of true tags.
+    Bow { words: Vec<u32>, tags: Vec<u32> },
+    /// Dense 28x28 grayscale image with a class label.
+    Image { pixels: Vec<f32>, label: u32 },
+    /// Token sequence of length seq+1 (inputs = [..seq], targets = [1..]).
+    Text { tokens: Vec<u32> },
+}
+
+/// One client's local dataset.
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    pub id: u64,
+    pub examples: Vec<Example>,
+    /// Occurrence count per feature index (word / token), for structured key
+    /// selection. Empty for image clients.
+    pub feature_counts: Vec<(u32, u32)>,
+}
+
+impl ClientData {
+    /// Feature indices sorted by descending local frequency (ties by index).
+    pub fn features_by_frequency(&self) -> Vec<u32> {
+        let mut fc = self.feature_counts.clone();
+        fc.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        fc.into_iter().map(|(f, _)| f).collect()
+    }
+
+    pub fn num_examples(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn compute_feature_counts(examples: &[Example]) -> Vec<(u32, u32)> {
+        let mut counts = std::collections::HashMap::new();
+        for ex in examples {
+            match ex {
+                Example::Bow { words, .. } => {
+                    for &w in words {
+                        *counts.entry(w).or_insert(0u32) += 1;
+                    }
+                }
+                Example::Text { tokens } => {
+                    for &t in tokens {
+                        *counts.entry(t).or_insert(0u32) += 1;
+                    }
+                }
+                Example::Image { .. } => {}
+            }
+        }
+        let mut v: Vec<(u32, u32)> = counts.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Train/val/test client partition (paper Table 1 shape).
+#[derive(Clone, Debug, Default)]
+pub struct FederatedDataset {
+    pub name: String,
+    pub train: Vec<ClientData>,
+    pub val: Vec<ClientData>,
+    pub test: Vec<ClientData>,
+}
+
+/// Summary row for the Table 1 regeneration.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub name: String,
+    pub train_clients: usize,
+    pub train_examples: usize,
+    pub val_clients: usize,
+    pub val_examples: usize,
+    pub test_clients: usize,
+    pub test_examples: usize,
+}
+
+impl FederatedDataset {
+    pub fn stats(&self) -> DatasetStats {
+        let count = |cs: &[ClientData]| cs.iter().map(|c| c.num_examples()).sum();
+        DatasetStats {
+            name: self.name.clone(),
+            train_clients: self.train.len(),
+            train_examples: count(&self.train),
+            val_clients: self.val.len(),
+            val_examples: count(&self.val),
+            test_clients: self.test.len(),
+            test_examples: count(&self.test),
+        }
+    }
+
+    /// Sample a cohort of `k` distinct train-client indices.
+    pub fn sample_cohort(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        rng.sample_without_replacement(self.train.len(), k.min(self.train.len()))
+    }
+}
+
+/// Log-normal example count, clamped — cross-device datasets are heavily
+/// skewed in per-client quantity (paper §1's data heterogeneity).
+pub(crate) fn skewed_count(rng: &mut Rng, mu: f32, sigma: f32, lo: usize, hi: usize) -> usize {
+    (rng.lognormal(mu, sigma) as usize).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_counts_count_occurrences() {
+        let exs = vec![
+            Example::Bow {
+                words: vec![3, 5, 3],
+                tags: vec![0],
+            },
+            Example::Bow {
+                words: vec![5],
+                tags: vec![1],
+            },
+        ];
+        let fc = ClientData::compute_feature_counts(&exs);
+        assert_eq!(fc, vec![(3, 2), (5, 2)]);
+    }
+
+    #[test]
+    fn frequency_ordering_breaks_ties_by_index() {
+        let c = ClientData {
+            id: 0,
+            examples: vec![],
+            feature_counts: vec![(9, 2), (1, 5), (4, 2)],
+        };
+        assert_eq!(c.features_by_frequency(), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn skewed_count_respects_bounds() {
+        let mut rng = Rng::new(2, 0);
+        for _ in 0..200 {
+            let n = skewed_count(&mut rng, 3.0, 1.0, 5, 50);
+            assert!((5..=50).contains(&n));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Synthetic token corpus for next-word prediction (§5.4 substitute).
+//!
+//! A single *global* stochastic bigram process (learnable by any LM) with
+//! per-client topic skew (so structured vocabulary selection helps):
+//!
+//! * transition: with prob `p_det` the next token is `succ(cur)` under a
+//!   fixed global permutation-ish successor map (the learnable structure);
+//!   otherwise a fresh draw from the client's topic-skewed Zipf mixture.
+//! * Client token distributions concentrate on a topic band of the
+//!   vocabulary, so the most frequent local tokens (structured select keys)
+//!   cover most of the client's text.
+//!
+//! Token 0 is a reserved UNK: structured selection always includes it, and
+//! tokens outside a client's selected slice are mapped onto it.
+
+use super::{skewed_count, ClientData, Example, FederatedDataset};
+use crate::tensor::rng::{Rng, Zipf};
+
+pub const UNK: u32 = 0;
+
+#[derive(Clone, Debug)]
+pub struct TextConfig {
+    pub vocab: usize,
+    /// Sequence length of each example (tokens per example = seq + 1).
+    pub seq: usize,
+    pub train_clients: usize,
+    pub val_clients: usize,
+    pub test_clients: usize,
+    pub topics: usize,
+    pub zipf_s: f64,
+    /// Probability the bigram successor map fires (learnable signal).
+    pub p_det: f32,
+    pub seed: u64,
+}
+
+impl TextConfig {
+    pub fn new(vocab: usize, seq: usize) -> Self {
+        TextConfig {
+            vocab,
+            seq,
+            train_clients: 300,
+            val_clients: 30,
+            test_clients: 60,
+            topics: 12,
+            zipf_s: 1.05,
+            p_det: 0.65,
+            seed: 41,
+        }
+    }
+
+    pub fn with_clients(mut self, train: usize, val: usize, test: usize) -> Self {
+        self.train_clients = train;
+        self.val_clients = val;
+        self.test_clients = test;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Fixed global successor map: a seeded pseudo-permutation biased toward
+/// frequent tokens so successors are themselves Zipf-plausible.
+fn successor(cur: u32, vocab: usize, seed: u64) -> u32 {
+    let h = (cur as u64)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(seed)
+        .rotate_left(23)
+        .wrapping_mul(0xBF58476D1CE4E5B9);
+    // bias toward the Zipf head: square the uniform variate
+    let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+    let r = (u * u * (vocab as f64 - 1.0)) as u32 + 1;
+    r.min(vocab as u32 - 1)
+}
+
+fn gen_client(
+    id: u64,
+    cfg: &TextConfig,
+    zipf: &Zipf,
+    topic_bands: &[(usize, usize)],
+    rng: &mut Rng,
+) -> ClientData {
+    // Client draws fresh tokens from a mixture of global Zipf and its topic
+    // band (a contiguous rank range, i.e. a coherent subset of vocabulary).
+    let topic = rng.below(cfg.topics);
+    let (lo, hi) = topic_bands[topic];
+    let n = skewed_count(rng, 2.8, 0.8, 4, 80);
+    let mut examples = Vec::with_capacity(n);
+    let mut cur = zipf.sample(rng) as u32;
+    for _ in 0..n {
+        let mut tokens = Vec::with_capacity(cfg.seq + 1);
+        for _ in 0..cfg.seq + 1 {
+            tokens.push(cur);
+            cur = if rng.f32() < cfg.p_det {
+                successor(cur, cfg.vocab, cfg.seed)
+            } else if rng.f32() < 0.6 {
+                (lo + rng.below(hi - lo)) as u32
+            } else {
+                zipf.sample(rng) as u32
+            };
+        }
+        examples.push(Example::Text { tokens });
+    }
+    let feature_counts = ClientData::compute_feature_counts(&examples);
+    ClientData {
+        id,
+        examples,
+        feature_counts,
+    }
+}
+
+pub fn generate(cfg: &TextConfig) -> FederatedDataset {
+    let zipf = Zipf::new(cfg.vocab, cfg.zipf_s);
+    // Topic bands: overlapping rank ranges, denser near the head.
+    let bands: Vec<(usize, usize)> = (0..cfg.topics)
+        .map(|t| {
+            let span = (cfg.vocab / 4).max(16);
+            let lo = 1 + (t * (cfg.vocab - span - 1)) / cfg.topics.max(1);
+            (lo, (lo + span).min(cfg.vocab))
+        })
+        .collect();
+    let split = |count: usize, salt: u64| -> Vec<ClientData> {
+        (0..count)
+            .map(|i| {
+                let mut rng = Rng::new(cfg.seed ^ (salt << 36) ^ i as u64, salt * 13 + 5);
+                gen_client(i as u64, cfg, &zipf, &bands, &mut rng)
+            })
+            .collect()
+    };
+    FederatedDataset {
+        name: format!("synth-textcorpus(v={},L={})", cfg.vocab, cfg.seq),
+        train: split(cfg.train_clients, 1),
+        val: split(cfg.val_clients, 2),
+        test: split(cfg.test_clients, 3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_have_right_length_and_range() {
+        let cfg = TextConfig::new(512, 20).with_clients(10, 2, 3);
+        let ds = generate(&cfg);
+        for c in &ds.train {
+            for e in &c.examples {
+                if let Example::Text { tokens } = e {
+                    assert_eq!(tokens.len(), 21);
+                    assert!(tokens.iter().all(|&t| (t as usize) < 512));
+                } else {
+                    panic!("wrong kind");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn successor_map_is_deterministic_and_in_range() {
+        for cur in 0..100u32 {
+            let a = successor(cur, 512, 7);
+            let b = successor(cur, 512, 7);
+            assert_eq!(a, b);
+            assert!((1..512).contains(&(a as usize)));
+        }
+    }
+
+    #[test]
+    fn bigram_structure_is_present() {
+        // successor(cur) must appear after cur far more often than chance
+        let cfg = TextConfig::new(256, 20).with_clients(30, 0, 0);
+        let ds = generate(&cfg);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for c in &ds.train {
+            for e in &c.examples {
+                if let Example::Text { tokens } = e {
+                    for w in tokens.windows(2) {
+                        total += 1;
+                        if w[1] == successor(w[0], cfg.vocab, cfg.seed) {
+                            hits += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.4, "deterministic-successor rate {rate}");
+    }
+
+    #[test]
+    fn clients_concentrate_on_topic_bands() {
+        let cfg = TextConfig::new(2048, 20).with_clients(10, 0, 0);
+        let ds = generate(&cfg);
+        for c in &ds.train {
+            let total: u32 = c.feature_counts.iter().map(|&(_, n)| n).sum();
+            let top_m: u32 = {
+                let mut f = c.features_by_frequency();
+                f.truncate(256);
+                let set: std::collections::HashSet<u32> = f.into_iter().collect();
+                c.feature_counts
+                    .iter()
+                    .filter(|(w, _)| set.contains(w))
+                    .map(|&(_, n)| n)
+                    .sum()
+            };
+            // top-256 of 2048 tokens should cover most of the client's text
+            assert!(
+                top_m as f64 / total as f64 > 0.5,
+                "coverage {}",
+                top_m as f64 / total as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for the fedselect coordinator.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration rejected by validation.
+    Config(String),
+    /// An artifact referenced by name is missing from the manifest, or the
+    /// artifacts directory has not been built (`make artifacts`).
+    Artifact(String),
+    /// Shape/ordering mismatch between manifest and supplied buffers.
+    Shape(String),
+    /// PJRT / XLA failure.
+    Xla(String),
+    /// Dataset construction failure.
+    Data(String),
+    /// I/O failure.
+    Io(std::io::Error),
+    /// JSON (de)serialization failure.
+    Json(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[macro_export]
+macro_rules! bail_config {
+    ($($arg:tt)*) => { return Err($crate::error::Error::Config(format!($($arg)*))) };
+}

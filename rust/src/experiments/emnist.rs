@@ -1,0 +1,256 @@
+//! §5.3 regenerations: EMNIST-style image classification with random select
+//! keys — Fig. 5 curves, Tables 2/3 final accuracies, Fig. 6 fixed-vs-
+//! independent ablation.
+//!
+//! The 2NN family runs on either engine; the CNN family requires the PJRT
+//! artifacts (conv backward lives in XLA). In `--quick` mode the CNN arms
+//! are skipped unless the engine is PJRT.
+
+use crate::config::{DatasetConfig, EngineKind, TrainConfig};
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::images::ImageConfig;
+use crate::data::FederatedDataset;
+use crate::error::Result;
+use crate::fedselect::KeyPolicy;
+use crate::metrics::{mean_std, Table};
+use crate::model::ModelArch;
+
+use super::ExpOptions;
+
+fn image_cfg(quick: bool) -> ImageConfig {
+    let c = ImageConfig::new(62);
+    if quick {
+        c.with_clients(30, 10)
+    } else {
+        c.with_clients(200, 40)
+    }
+}
+
+struct Arm {
+    model: &'static str,
+    m: usize,
+    fixed: bool,
+}
+
+fn run_arm(
+    opts: &ExpOptions,
+    arm: &Arm,
+    rounds: usize,
+    cohort: usize,
+    eval_every: usize,
+    dataset: &FederatedDataset,
+    img: &ImageConfig,
+) -> Result<(Vec<(usize, usize, f64)>, Vec<f64>, f64)> {
+    let mut curves = Vec::new();
+    let mut finals = Vec::new();
+    let mut rel = 0.0;
+    for trial in 0..opts.trials {
+        let mut cfg = match arm.model {
+            "cnn" => TrainConfig::cnn_default(arm.m),
+            _ => TrainConfig::mlp_default(arm.m),
+        };
+        cfg.dataset = DatasetConfig::Image(img.clone());
+        cfg.engine = if arm.model == "cnn" {
+            match &opts.engine {
+                EngineKind::Native => EngineKind::pjrt_default(),
+                e => e.clone(),
+            }
+        } else {
+            opts.engine.clone()
+        };
+        cfg.policies = vec![if arm.fixed {
+            KeyPolicy::FixedPerRound { m: arm.m }
+        } else {
+            KeyPolicy::RandomGlobal { m: arm.m }
+        }];
+        cfg.rounds = rounds;
+        cfg.cohort = cohort;
+        cfg.eval.every = eval_every;
+        cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
+        cfg.seed = 2000 + trial as u64;
+        let mut tr = Trainer::with_dataset(cfg, dataset.clone())?;
+        rel = tr.rel_model_size();
+        let report = tr.run()?;
+        for e in &report.evals {
+            curves.push((trial, e.round, e.metric));
+        }
+        finals.push(report.final_eval.metric);
+    }
+    Ok((curves, finals, rel))
+}
+
+fn cnn_available(opts: &ExpOptions) -> bool {
+    // CNN arms need artifacts; probe for the manifest.
+    let dir = match &opts.engine {
+        EngineKind::Pjrt { artifacts_dir } => artifacts_dir.clone(),
+        EngineKind::Native => "artifacts".to_string(),
+    };
+    std::path::Path::new(&dir).join("manifest.json").exists()
+}
+
+fn grids(quick: bool) -> (Vec<usize>, Vec<usize>, usize, usize, usize) {
+    // (cnn_ms, mlp_ms, rounds, cohort, eval_every)
+    if quick {
+        (vec![16, 64], vec![50, 200], 5, 6, 2)
+    } else {
+        (
+            vec![4, 8, 16, 32, 64],
+            vec![10, 50, 100, 200],
+            25,
+            25,
+            5,
+        )
+    }
+}
+
+/// Fig. 5: test accuracy across rounds for CNN and 2NN, random keys.
+pub fn fig5(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (cnn_ms, mlp_ms, rounds, cohort, eval_every) = grids(opts.quick);
+    let img = image_cfg(opts.quick);
+    let dataset = build_dataset(&DatasetConfig::Image(img.clone()));
+    let mut t = Table::new(
+        "EMNIST test accuracy vs rounds (random keys)",
+        &["model", "m", "trial", "round", "accuracy"],
+    );
+    let mut arms: Vec<Arm> = mlp_ms
+        .iter()
+        .map(|&m| Arm {
+            model: "2nn",
+            m,
+            fixed: false,
+        })
+        .collect();
+    if cnn_available(opts) {
+        arms.extend(cnn_ms.iter().map(|&m| Arm {
+            model: "cnn",
+            m,
+            fixed: false,
+        }));
+    } else {
+        eprintln!("[fig5] artifacts missing: skipping CNN arms (run `make artifacts`)");
+    }
+    for arm in &arms {
+        let (curves, _, _) = run_arm(opts, arm, rounds, cohort, eval_every, &dataset, &img)?;
+        for (trial, round, acc) in curves {
+            t.push(vec![
+                arm.model.to_string(),
+                arm.m.to_string(),
+                trial.to_string(),
+                round.to_string(),
+                format!("{acc:.4}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+fn final_table(
+    opts: &ExpOptions,
+    model: &'static str,
+    ms: &[usize],
+    rounds: usize,
+    cohort: usize,
+    title: &str,
+) -> Result<Table> {
+    let img = image_cfg(opts.quick);
+    let dataset = build_dataset(&DatasetConfig::Image(img.clone()));
+    let mut t = Table::new(title, &["m", "accuracy_mean", "accuracy_std", "rel_model_size"]);
+    for &m in ms {
+        let arm = Arm {
+            model,
+            m,
+            fixed: false,
+        };
+        let (_, finals, rel) = run_arm(opts, &arm, rounds, cohort, 0, &dataset, &img)?;
+        let (mean, std) = mean_std(&finals);
+        t.push(vec![
+            m.to_string(),
+            format!("{:.4}", mean),
+            format!("{:.4}", std),
+            format!("{rel:.3}"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 2: CNN final accuracy ± std and relative model size per m.
+pub fn table2(opts: &ExpOptions) -> Result<Vec<Table>> {
+    if !cnn_available(opts) {
+        return Err(crate::error::Error::Artifact(
+            "table2 (CNN) requires artifacts; run `make artifacts`".into(),
+        ));
+    }
+    let (cnn_ms, _, rounds, cohort, _) = grids(opts.quick);
+    Ok(vec![final_table(
+        opts,
+        "cnn",
+        &cnn_ms,
+        rounds,
+        cohort,
+        "CNN final accuracy vs m (random filter keys, Table 2 analogue)",
+    )?])
+}
+
+/// Table 3: 2NN final accuracy ± std and relative model size per m.
+pub fn table3(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (_, mlp_ms, rounds, cohort, _) = grids(opts.quick);
+    Ok(vec![final_table(
+        opts,
+        "2nn",
+        &mlp_ms,
+        rounds,
+        cohort,
+        "2NN final accuracy vs m (random neuron keys, Table 3 analogue)",
+    )?])
+}
+
+/// Fig. 6: fixed-per-round (shared) vs independently sampled random keys.
+pub fn fig6(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (cnn_ms, mlp_ms, rounds, cohort, eval_every) = grids(opts.quick);
+    let img = image_cfg(opts.quick);
+    let dataset = build_dataset(&DatasetConfig::Image(img.clone()));
+    let mut t = Table::new(
+        "Fixed-per-round vs independent random keys",
+        &["model", "m", "fixed", "trial", "round", "accuracy"],
+    );
+    let mut arms = Vec::new();
+    let mid_mlp = mlp_ms[mlp_ms.len() / 2];
+    for fixed in [false, true] {
+        arms.push(Arm {
+            model: "2nn",
+            m: mid_mlp,
+            fixed,
+        });
+    }
+    if cnn_available(opts) {
+        let mid_cnn = cnn_ms[cnn_ms.len() / 2];
+        for fixed in [false, true] {
+            arms.push(Arm {
+                model: "cnn",
+                m: mid_cnn,
+                fixed,
+            });
+        }
+    } else {
+        eprintln!("[fig6] artifacts missing: skipping CNN arms");
+    }
+    for arm in &arms {
+        let (curves, _, _) = run_arm(opts, arm, rounds, cohort, eval_every, &dataset, &img)?;
+        for (trial, round, acc) in curves {
+            t.push(vec![
+                arm.model.to_string(),
+                arm.m.to_string(),
+                arm.fixed.to_string(),
+                trial.to_string(),
+                round.to_string(),
+                format!("{acc:.4}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[allow(dead_code)]
+fn arch_sanity() -> (ModelArch, ModelArch) {
+    (ModelArch::cnn(), ModelArch::mlp2nn())
+}

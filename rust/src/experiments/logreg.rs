@@ -1,0 +1,202 @@
+//! §5.2 regenerations: tag prediction with structured select keys
+//! (Fig. 2 curves, Fig. 3 size/recall frontier, Fig. 4 key-strategy
+//! ablation). Runs on the native engine by default — the logreg family has
+//! a bit-faithful Rust mirror — or on PJRT artifacts via `--engine pjrt`.
+
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::bow::BowConfig;
+use crate::data::FederatedDataset;
+use crate::error::Result;
+use crate::fedselect::KeyPolicy;
+use crate::metrics::{mean_std, Table};
+use crate::model::ModelArch;
+
+use super::ExpOptions;
+
+fn grid(quick: bool) -> (Vec<usize>, Vec<usize>, usize, usize, usize) {
+    // (vocab sizes n, key counts m, rounds, cohort, eval_every)
+    if quick {
+        (vec![512, 2048], vec![64, 256], 6, 10, 2)
+    } else {
+        (vec![512, 2048, 8192], vec![64, 256, 1024, 8192], 25, 30, 5)
+    }
+}
+
+fn base_cfg(n: usize, m: usize, opts: &ExpOptions, ds: &BowConfig) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(n, m);
+    cfg.dataset = DatasetConfig::Bow(ds.clone());
+    cfg.engine = opts.engine.clone();
+    cfg
+}
+
+fn dataset_cfg(n: usize, quick: bool) -> BowConfig {
+    let c = BowConfig::new(n, 50);
+    if quick {
+        c.with_clients(40, 8, 12)
+    } else {
+        c.with_clients(300, 30, 60)
+    }
+}
+
+/// One (n, m, policy) sweep cell: run trials, return (per-eval curves,
+/// final metrics, rel size).
+struct Cell {
+    curves: Vec<(usize, usize, f64, f64)>, // (trial, round, recall, loss)
+    finals: Vec<f64>,
+    rel_size: f64,
+}
+
+fn run_cell(
+    opts: &ExpOptions,
+    n: usize,
+    policy: KeyPolicy,
+    rounds: usize,
+    cohort: usize,
+    eval_every: usize,
+    dataset: &FederatedDataset,
+    ds_cfg: &BowConfig,
+) -> Result<Cell> {
+    let mut curves = Vec::new();
+    let mut finals = Vec::new();
+    let mut rel_size = 0.0;
+    for trial in 0..opts.trials {
+        let mut cfg = base_cfg(n, policy.m(n), opts, ds_cfg);
+        cfg.policies = vec![policy];
+        cfg.rounds = rounds;
+        cfg.cohort = cohort;
+        cfg.eval.every = eval_every;
+        cfg.eval.use_val = true;
+        cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
+        cfg.seed = 1000 + trial as u64;
+        let mut tr = Trainer::with_dataset(cfg, dataset.clone())?;
+        rel_size = tr.rel_model_size();
+        let report = tr.run()?;
+        for e in &report.evals {
+            curves.push((trial, e.round, e.metric, e.loss));
+        }
+        finals.push(report.final_eval.metric);
+    }
+    Ok(Cell {
+        curves,
+        finals,
+        rel_size,
+    })
+}
+
+/// Fig. 2: validation recall@5 across rounds, varying n and m (Top keys).
+pub fn fig2(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (ns, ms, rounds, cohort, eval_every) = grid(opts.quick);
+    let mut t = Table::new(
+        "Validation recall@5 vs rounds (FedAdagrad, Top-m keys)",
+        &["n", "m", "trial", "round", "recall5", "loss"],
+    );
+    for &n in &ns {
+        let ds_cfg = dataset_cfg(n, opts.quick);
+        let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+        for &m in &ms {
+            if m > n {
+                continue;
+            }
+            let cell = run_cell(
+                opts,
+                n,
+                KeyPolicy::TopFreq { m },
+                rounds,
+                cohort,
+                eval_every,
+                &dataset,
+                &ds_cfg,
+            )?;
+            for (trial, round, rec, loss) in cell.curves {
+                t.push(vec![
+                    n.to_string(),
+                    m.to_string(),
+                    trial.to_string(),
+                    round.to_string(),
+                    format!("{rec:.4}"),
+                    format!("{loss:.4}"),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 3: relative model size and final test recall per (n, m).
+pub fn fig3(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (ns, ms, rounds, cohort, _) = grid(opts.quick);
+    let mut t = Table::new(
+        "Relative model size and test recall (Top-m keys)",
+        &["n", "m", "rel_model_size", "recall5_mean", "recall5_std"],
+    );
+    for &n in &ns {
+        let ds_cfg = dataset_cfg(n, opts.quick);
+        let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+        for &m in &ms {
+            if m > n {
+                continue;
+            }
+            let cell = run_cell(
+                opts,
+                n,
+                KeyPolicy::TopFreq { m },
+                rounds,
+                cohort,
+                0,
+                &dataset,
+                &ds_cfg,
+            )?;
+            let (mean, std) = mean_std(&cell.finals);
+            t.push(vec![
+                n.to_string(),
+                m.to_string(),
+                format!("{:.4}", cell.rel_size),
+                format!("{mean:.4}"),
+                format!("{std:.4}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 4: key-selection strategy ablation at fixed m.
+pub fn fig4(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (ns, rounds, cohort, eval_every, m) = if opts.quick {
+        (vec![512], 6, 10, 2, 64)
+    } else {
+        (vec![2048, 8192], 25, 30, 5, 1024)
+    };
+    let mut t = Table::new(
+        "Key selection strategies (m fixed)",
+        &["n", "strategy", "trial", "round", "recall5"],
+    );
+    for &n in &ns {
+        let ds_cfg = dataset_cfg(n, opts.quick);
+        let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+        for (name, policy) in [
+            ("top", KeyPolicy::TopFreq { m }),
+            ("random", KeyPolicy::RandomLocal { m }),
+            ("random_top", KeyPolicy::RandomTopLocal { m }),
+        ] {
+            let cell = run_cell(
+                opts, n, policy, rounds, cohort, eval_every, &dataset, &ds_cfg,
+            )?;
+            for (trial, round, rec, _) in cell.curves {
+                t.push(vec![
+                    n.to_string(),
+                    name.to_string(),
+                    trial.to_string(),
+                    round.to_string(),
+                    format!("{rec:.4}"),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+#[allow(dead_code)]
+fn assert_arch_matches(n: usize) -> ModelArch {
+    ModelArch::logreg(n)
+}

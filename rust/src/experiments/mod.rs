@@ -1,0 +1,137 @@
+//! Experiment registry: regenerate every table and figure of the paper's §5.
+//!
+//! `fedselect experiment --id <id> [--quick]` runs the workload and prints
+//! the same rows/series the paper reports, writing CSVs to `results/`.
+//! Absolute numbers differ (synthetic data, scaled dimensions — DESIGN.md
+//! §4); the *shape* — who wins, by what factor, where curves cross — is the
+//! reproduction target.
+//!
+//! | id | paper artifact |
+//! |---|---|
+//! | `table1` | dataset statistics |
+//! | `fig2`   | tag-prediction recall@5 vs rounds, vary (n, m) |
+//! | `fig3`   | final recall + relative model size vs (n, m) |
+//! | `fig4`   | key-strategy ablation (Top / Random / RandomTop) |
+//! | `fig5`   | EMNIST accuracy vs rounds (CNN + 2NN, random keys) |
+//! | `table2` | CNN final accuracy ± std vs m |
+//! | `table3` | 2NN final accuracy ± std vs m |
+//! | `fig6`   | fixed-per-round vs independent random keys |
+//! | `fig7`   | transformer: structured / random / mixed frontier |
+
+mod emnist;
+mod logreg;
+mod table1;
+mod transformer;
+
+use crate::config::EngineKind;
+use crate::coordinator::{TrainReport, Trainer};
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+
+/// Shared knobs for a regeneration run.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub quick: bool,
+    pub engine: EngineKind,
+    pub out_dir: String,
+    pub trials: usize,
+}
+
+impl ExpOptions {
+    pub fn new(quick: bool, engine: EngineKind) -> Self {
+        ExpOptions {
+            quick,
+            engine,
+            out_dir: "results".to_string(),
+            trials: if quick { 1 } else { 2 },
+        }
+    }
+}
+
+/// All known experiment ids.
+pub const ALL_IDS: &[&str] = &[
+    "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7",
+];
+
+/// Run one experiment by id; returns the rendered tables (already written
+/// as CSV to `opts.out_dir`).
+pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
+    let tables = match id {
+        "table1" => table1::run(opts)?,
+        "fig2" => logreg::fig2(opts)?,
+        "fig3" => logreg::fig3(opts)?,
+        "fig4" => logreg::fig4(opts)?,
+        "fig5" => emnist::fig5(opts)?,
+        "table2" => emnist::table2(opts)?,
+        "table3" => emnist::table3(opts)?,
+        "fig6" => emnist::fig6(opts)?,
+        "fig7" => transformer::fig7(opts)?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment {other:?}; known: {}",
+                ALL_IDS.join(", ")
+            )))
+        }
+    };
+    for t in &tables {
+        let name = format!("{}_{}", id, slug(&t.title));
+        t.write_csv(&opts.out_dir, &name)?;
+    }
+    Ok(tables)
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect::<String>()
+        .split('_')
+        .filter(|p| !p.is_empty())
+        .collect::<Vec<_>>()
+        .join("_")
+}
+
+/// Run `trials` seeds of a config-producing closure; returns reports.
+/// (Used by downstream sweeps and the examples; the figure modules manage
+/// dataset reuse themselves via `Trainer::with_dataset`.)
+pub fn run_trials(
+    opts: &ExpOptions,
+    mut make: impl FnMut(u64) -> crate::config::TrainConfig,
+) -> Result<Vec<TrainReport>> {
+    let mut out = Vec::with_capacity(opts.trials);
+    for trial in 0..opts.trials {
+        let cfg = make(1000 + trial as u64);
+        let mut tr = Trainer::new(cfg)?;
+        out.push(tr.run()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        let opts = ExpOptions::new(true, EngineKind::Native);
+        assert!(run("fig99", &opts).is_err());
+    }
+
+    #[test]
+    fn slug_sanitizes() {
+        assert_eq!(slug("Recall@5 vs rounds (n=512)"), "recall_5_vs_rounds_n_512");
+    }
+
+    #[test]
+    fn table1_runs_quick() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_test_results")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let tables = run("table1", &opts).unwrap();
+        assert!(!tables.is_empty());
+        assert!(!tables[0].rows.is_empty());
+    }
+}

@@ -1,0 +1,50 @@
+//! Table 1 regeneration: dataset statistics (clients / examples per split)
+//! for the synthetic Stack Overflow and EMNIST substitutes.
+
+use crate::coordinator::build_dataset;
+use crate::config::DatasetConfig;
+use crate::data::bow::BowConfig;
+use crate::data::images::ImageConfig;
+use crate::data::text::TextConfig;
+use crate::error::Result;
+use crate::metrics::Table;
+
+use super::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let scale = if opts.quick { 1 } else { 4 };
+    let datasets = vec![
+        DatasetConfig::Bow(
+            BowConfig::new(8192, 50).with_clients(100 * scale, 10 * scale, 20 * scale),
+        ),
+        DatasetConfig::Image(ImageConfig::new(62).with_clients(75 * scale, 15 * scale)),
+        DatasetConfig::Text(
+            TextConfig::new(2048, 20).with_clients(75 * scale, 8 * scale, 15 * scale),
+        ),
+    ];
+    let mut t = Table::new(
+        "Dataset statistics (Table 1 analogue)",
+        &[
+            "dataset",
+            "train_clients",
+            "train_examples",
+            "val_clients",
+            "val_examples",
+            "test_clients",
+            "test_examples",
+        ],
+    );
+    for d in &datasets {
+        let s = build_dataset(d).stats();
+        t.push(vec![
+            s.name,
+            s.train_clients.to_string(),
+            s.train_examples.to_string(),
+            s.val_clients.to_string(),
+            s.val_examples.to_string(),
+            s.test_clients.to_string(),
+            s.test_examples.to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}

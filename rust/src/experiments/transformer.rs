@@ -1,0 +1,112 @@
+//! §5.4 regeneration (Fig. 7): transformer next-word prediction under
+//! structured / random / mixed key selection — the accuracy vs client-model-
+//! size frontier. Requires the PJRT artifacts (`tf_cu_*`, `tf_eval`).
+
+use crate::config::{DatasetConfig, EngineKind, TrainConfig};
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::text::TextConfig;
+use crate::error::{Error, Result};
+use crate::fedselect::KeyPolicy;
+use crate::metrics::{mean_std, Table};
+use crate::model::ModelArch;
+
+use super::ExpOptions;
+
+/// The α grid: mv = vocab/α, dh = ffn/α (matches the AOT variant grid).
+const ALPHAS: &[usize] = &[16, 8, 4, 2, 1];
+
+pub fn fig7(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let dir = match &opts.engine {
+        EngineKind::Pjrt { artifacts_dir } => artifacts_dir.clone(),
+        EngineKind::Native => "artifacts".to_string(),
+    };
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        return Err(Error::Artifact(
+            "fig7 (transformer) requires artifacts; run `make artifacts`".into(),
+        ));
+    }
+    let engine = EngineKind::Pjrt {
+        artifacts_dir: dir,
+    };
+
+    let arch = ModelArch::transformer();
+    let (vocab, seq, ffn) = match &arch {
+        ModelArch::Transformer { shape, .. } => (shape.vocab, shape.seq, shape.ffn),
+        _ => unreachable!(),
+    };
+    let text = if opts.quick {
+        TextConfig::new(vocab, seq).with_clients(24, 4, 8)
+    } else {
+        TextConfig::new(vocab, seq).with_clients(150, 15, 30)
+    };
+    let dataset = build_dataset(&DatasetConfig::Text(text.clone()));
+    let (rounds, cohort) = if opts.quick { (3, 4) } else { (20, 12) };
+    let alphas: &[usize] = if opts.quick { &[4, 1] } else { ALPHAS };
+
+    let mut t = Table::new(
+        "Transformer NWP: accuracy vs client model size",
+        &[
+            "scheme",
+            "alpha_inv",
+            "mv",
+            "dh",
+            "rel_model_size",
+            "accuracy_mean",
+            "accuracy_std",
+        ],
+    );
+
+    // (scheme, mv, dh) arms; alpha=1 is the shared no-selection point.
+    let mut arms: Vec<(&str, usize, usize, usize)> = Vec::new();
+    for &a in alphas {
+        if a == 1 {
+            arms.push(("none", 1, vocab, ffn));
+        } else {
+            arms.push(("structured", a, vocab / a, ffn));
+            arms.push(("random", a, vocab, ffn / a));
+            arms.push(("mixed", a, vocab / a, ffn / a));
+        }
+    }
+
+    for (scheme, a, mv, dh) in arms {
+        let mut finals = Vec::new();
+        let mut rel = 0.0;
+        for trial in 0..opts.trials {
+            let mut cfg = TrainConfig::transformer_default(mv, dh);
+            cfg.dataset = DatasetConfig::Text(text.clone());
+            cfg.engine = engine.clone();
+            cfg.policies = vec![
+                if mv == vocab {
+                    KeyPolicy::AllKeys
+                } else {
+                    KeyPolicy::TopFreq { m: mv }
+                },
+                if dh == ffn {
+                    KeyPolicy::AllKeys
+                } else {
+                    KeyPolicy::RandomGlobal { m: dh }
+                },
+            ];
+            cfg.rounds = rounds;
+            cfg.cohort = cohort;
+            cfg.eval.every = 0;
+            cfg.eval.max_examples = if opts.quick { 64 } else { 512 };
+            cfg.seed = 3000 + trial as u64;
+            let mut tr = Trainer::with_dataset(cfg, dataset.clone())?;
+            rel = tr.rel_model_size();
+            let report = tr.run()?;
+            finals.push(report.final_eval.metric);
+        }
+        let (mean, std) = mean_std(&finals);
+        t.push(vec![
+            scheme.to_string(),
+            a.to_string(),
+            mv.to_string(),
+            dh.to_string(),
+            format!("{rel:.4}"),
+            format!("{mean:.4}"),
+            format!("{std:.4}"),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,45 @@
+//! Option 1 (paper §3.2): broadcast the full value, compute ψ on clients.
+//!
+//! Maximal key privacy (keys never leave the device), no communication
+//! savings: every client downloads the entire server model.
+
+use super::{RoundComm, SliceService};
+use crate::error::Result;
+use crate::model::{ParamStore, SelectSpec};
+
+#[derive(Default)]
+pub struct BroadcastService {
+    ledger: RoundComm,
+}
+
+impl BroadcastService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SliceService for BroadcastService {
+    fn name(&self) -> &'static str {
+        "broadcast"
+    }
+
+    fn begin_round(&mut self, _store: &ParamStore, _spec: &SelectSpec) -> Result<()> {
+        Ok(())
+    }
+
+    fn fetch(
+        &mut self,
+        store: &ParamStore,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // Full model over the wire; ψ runs client-side (not counted as
+        // server psi_evals).
+        self.ledger.down_bytes += store.bytes() as u64;
+        spec.slice(store, keys)
+    }
+
+    fn end_round(&mut self) -> RoundComm {
+        std::mem::take(&mut self.ledger)
+    }
+}

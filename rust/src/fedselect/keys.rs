@@ -1,0 +1,255 @@
+//! Client select-key policies (paper §4.1 and the §5 ablations).
+//!
+//! Structured policies derive keys from the client's local feature
+//! frequencies (§4.1.1); random policies sample the keyspace (§4.1.2);
+//! `FixedPerRound` reproduces the Fig. 6 ablation where all clients in a
+//! round share one random key set (which a server could serve with plain
+//! BROADCAST). `AllKeys` (m = K) recovers training without FedSelect.
+
+use crate::data::ClientData;
+use crate::tensor::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyPolicy {
+    /// "Top": the client's m most frequent local features (§5.2).
+    TopFreq { m: usize },
+    /// "Random": m uniform draws from the client's local feature set.
+    RandomLocal { m: usize },
+    /// "Random Top": m uniform draws from the client's top-2m features.
+    RandomTopLocal { m: usize },
+    /// m uniform draws from the whole keyspace [K] (no local structure, §5.3).
+    RandomGlobal { m: usize },
+    /// One random key set per round, shared by every client (Fig. 6 "True").
+    FixedPerRound { m: usize },
+    /// All K keys in order — recovers BROADCAST (§3.3).
+    AllKeys,
+}
+
+impl KeyPolicy {
+    /// Number of keys this policy yields for a keyspace of size `k`.
+    pub fn m(&self, k: usize) -> usize {
+        match *self {
+            KeyPolicy::TopFreq { m }
+            | KeyPolicy::RandomLocal { m }
+            | KeyPolicy::RandomTopLocal { m }
+            | KeyPolicy::RandomGlobal { m }
+            | KeyPolicy::FixedPerRound { m } => m.min(k),
+            KeyPolicy::AllKeys => k,
+        }
+    }
+
+    /// Whether the coordinator must draw one shared key set per round.
+    pub fn needs_round_keys(&self) -> bool {
+        matches!(self, KeyPolicy::FixedPerRound { .. })
+    }
+
+    /// Draw the shared per-round key set (for [`KeyPolicy::FixedPerRound`]).
+    pub fn round_keys(&self, k: usize, rng: &mut Rng) -> Option<Vec<u32>> {
+        match *self {
+            KeyPolicy::FixedPerRound { m } => Some(
+                rng.sample_without_replacement(k, m.min(k))
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// Select this client's keys.
+    ///
+    /// * `k` — keyspace size.
+    /// * `round_shared` — the per-round key set when `FixedPerRound`.
+    /// * `force_key_zero` — guarantee key 0 is *included* (the transformer's
+    ///   UNK token embedding; see `data::text`). Position is irrelevant —
+    ///   the batch builder looks the UNK slot up by key value.
+    ///
+    /// Always returns exactly `self.m(k)` *distinct* keys (structured
+    /// policies pad with globally-frequent indices when the client's local
+    /// feature set is too small — global rank order == index order in the
+    /// synthetic corpora).
+    pub fn keys_for(
+        &self,
+        client: &ClientData,
+        k: usize,
+        rng: &mut Rng,
+        round_shared: Option<&[u32]>,
+        force_key_zero: bool,
+    ) -> Vec<u32> {
+        let m = self.m(k);
+        let mut keys: Vec<u32> = match *self {
+            KeyPolicy::TopFreq { .. } => {
+                let mut f = client.features_by_frequency();
+                f.retain(|&w| (w as usize) < k);
+                f.truncate(m);
+                f
+            }
+            KeyPolicy::RandomLocal { .. } => {
+                let mut f = client.features_by_frequency();
+                f.retain(|&w| (w as usize) < k);
+                rng.shuffle(&mut f);
+                f.truncate(m);
+                f
+            }
+            KeyPolicy::RandomTopLocal { .. } => {
+                let mut f = client.features_by_frequency();
+                f.retain(|&w| (w as usize) < k);
+                f.truncate(2 * m);
+                rng.shuffle(&mut f);
+                f.truncate(m);
+                f
+            }
+            KeyPolicy::RandomGlobal { .. } => rng
+                .sample_without_replacement(k, m)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect(),
+            KeyPolicy::FixedPerRound { .. } => round_shared
+                .expect("FixedPerRound requires round_keys()")
+                .to_vec(),
+            KeyPolicy::AllKeys => (0..k as u32).collect(),
+        };
+        // pad with globally-frequent (low-index) keys not already present
+        if keys.len() < m {
+            let present: std::collections::HashSet<u32> = keys.iter().copied().collect();
+            for cand in 0..k as u32 {
+                if keys.len() >= m {
+                    break;
+                }
+                if !present.contains(&cand) {
+                    keys.push(cand);
+                }
+            }
+        }
+        if force_key_zero && !keys.contains(&0) {
+            let last = keys.len() - 1;
+            keys[last] = 0;
+            keys.swap(0, last);
+        }
+        debug_assert_eq!(keys.len(), m);
+        keys
+    }
+}
+
+impl std::str::FromStr for KeyPolicy {
+    type Err = String;
+
+    /// e.g. "top:1000", "random-local:1000", "random-global:32",
+    /// "fixed-round:32", "all".
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "all" {
+            return Ok(KeyPolicy::AllKeys);
+        }
+        let (kind, m) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad key policy {s:?} (want kind:m)"))?;
+        let m: usize = m.parse().map_err(|e| format!("bad m in {s:?}: {e}"))?;
+        match kind {
+            "top" => Ok(KeyPolicy::TopFreq { m }),
+            "random-local" => Ok(KeyPolicy::RandomLocal { m }),
+            "random-top" => Ok(KeyPolicy::RandomTopLocal { m }),
+            "random-global" => Ok(KeyPolicy::RandomGlobal { m }),
+            "fixed-round" => Ok(KeyPolicy::FixedPerRound { m }),
+            other => Err(format!("unknown key policy kind {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Example;
+
+    fn client() -> ClientData {
+        let examples = vec![
+            Example::Bow {
+                words: vec![7, 3, 9],
+                tags: vec![0],
+            },
+            Example::Bow {
+                words: vec![3, 9],
+                tags: vec![0],
+            },
+            Example::Bow {
+                words: vec![3],
+                tags: vec![0],
+            },
+        ];
+        let feature_counts = ClientData::compute_feature_counts(&examples);
+        ClientData {
+            id: 1,
+            examples,
+            feature_counts,
+        }
+    }
+
+    #[test]
+    fn top_freq_orders_by_local_frequency() {
+        let c = client();
+        let mut rng = Rng::new(0, 0);
+        let keys = KeyPolicy::TopFreq { m: 2 }.keys_for(&c, 16, &mut rng, None, false);
+        assert_eq!(keys, vec![3, 9]); // 3 appears 3x, 9 2x, 7 1x
+    }
+
+    #[test]
+    fn policies_always_return_exactly_m_distinct_keys() {
+        let c = client();
+        let mut rng = Rng::new(1, 0);
+        for pol in [
+            KeyPolicy::TopFreq { m: 8 },
+            KeyPolicy::RandomLocal { m: 8 },
+            KeyPolicy::RandomTopLocal { m: 8 },
+            KeyPolicy::RandomGlobal { m: 8 },
+        ] {
+            let keys = pol.keys_for(&c, 16, &mut rng, None, false);
+            assert_eq!(keys.len(), 8, "{pol:?}");
+            let set: std::collections::HashSet<_> = keys.iter().collect();
+            assert_eq!(set.len(), 8, "{pol:?} duplicated keys");
+            assert!(keys.iter().all(|&k| k < 16));
+        }
+    }
+
+    #[test]
+    fn all_keys_is_identity() {
+        let c = client();
+        let mut rng = Rng::new(1, 0);
+        let keys = KeyPolicy::AllKeys.keys_for(&c, 5, &mut rng, None, false);
+        assert_eq!(keys, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fixed_per_round_uses_shared_keys() {
+        let c = client();
+        let mut rng = Rng::new(1, 0);
+        let pol = KeyPolicy::FixedPerRound { m: 3 };
+        let shared = pol.round_keys(16, &mut rng).unwrap();
+        let k1 = pol.keys_for(&c, 16, &mut rng, Some(&shared), false);
+        let k2 = pol.keys_for(&c, 16, &mut rng, Some(&shared), false);
+        assert_eq!(k1, shared);
+        assert_eq!(k1, k2);
+    }
+
+    #[test]
+    fn force_key_zero_puts_unk_first() {
+        let c = client();
+        let mut rng = Rng::new(1, 0);
+        let keys = KeyPolicy::TopFreq { m: 2 }.keys_for(&c, 16, &mut rng, None, true);
+        assert_eq!(keys[0], 0);
+        assert_eq!(keys.len(), 2);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(
+            "top:100".parse::<KeyPolicy>().unwrap(),
+            KeyPolicy::TopFreq { m: 100 }
+        );
+        assert_eq!("all".parse::<KeyPolicy>().unwrap(), KeyPolicy::AllKeys);
+        assert!("bogus:1".parse::<KeyPolicy>().is_err());
+    }
+
+    #[test]
+    fn clamps_m_to_keyspace() {
+        assert_eq!(KeyPolicy::RandomGlobal { m: 100 }.m(16), 16);
+    }
+}

@@ -1,0 +1,180 @@
+//! The FEDSELECT primitive (paper §3) and its system implementations (§3.2).
+//!
+//! `FEDSELECT(x@S, {z_n}@C, ψ) = {[ψ(x, z_n,1), …, ψ(x, z_n,m)]}@C`
+//!
+//! A [`SliceService`] delivers each client its sub-model given its select
+//! keys. Three implementations, mirroring the paper's Options 1–3:
+//!
+//! | impl | communication | server ψ cost | key privacy |
+//! |---|---|---|---|
+//! | [`broadcast::BroadcastService`] | full model down | none (client-side ψ) | keys never leave device |
+//! | [`on_demand::OnDemandService`]  | keys up, slice down | per distinct key (memoized) | server sees keys |
+//! | [`pregen::PregenCdnService`]    | keys to CDN, slice down | all K keys before the round | CDN sees keys (PIR optional) |
+//!
+//! Every implementation returns byte-identical slices (property-tested), so
+//! they are interchangeable behind the trait; they differ only in the
+//! communication/computation/privacy ledger they produce.
+
+pub mod broadcast;
+pub mod keys;
+pub mod on_demand;
+pub mod piece;
+pub mod pregen;
+
+pub use broadcast::BroadcastService;
+pub use keys::KeyPolicy;
+pub use on_demand::OnDemandService;
+pub use pregen::PregenCdnService;
+
+use crate::error::Result;
+use crate::model::{ParamStore, SelectSpec};
+
+/// Which implementation to instantiate (config-level knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SliceImpl {
+    /// Option 1: broadcast everything, clients slice locally.
+    Broadcast,
+    /// Option 2: clients upload keys, server slices on demand (with a
+    /// per-round memo cache).
+    OnDemand,
+    /// Option 3: server pre-generates all K slices to a CDN before the round.
+    PregenCdn,
+}
+
+impl SliceImpl {
+    pub fn build(self) -> Box<dyn SliceService> {
+        match self {
+            SliceImpl::Broadcast => Box::new(BroadcastService::new()),
+            SliceImpl::OnDemand => Box::new(OnDemandService::new(true)),
+            SliceImpl::PregenCdn => Box::new(PregenCdnService::new()),
+        }
+    }
+}
+
+impl std::str::FromStr for SliceImpl {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "broadcast" => Ok(SliceImpl::Broadcast),
+            "on-demand" | "on_demand" => Ok(SliceImpl::OnDemand),
+            "pregen" | "pregen-cdn" | "cdn" => Ok(SliceImpl::PregenCdn),
+            other => Err(format!("unknown slice impl {other:?}")),
+        }
+    }
+}
+
+/// Per-round communication/computation ledger of a slice service.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundComm {
+    /// Bytes sent server->clients (or CDN->clients) this round.
+    pub down_bytes: u64,
+    /// Bytes of select keys sent clients->server/CDN.
+    pub up_key_bytes: u64,
+    /// Server-side ψ evaluations (per key).
+    pub psi_evals: u64,
+    /// ψ evaluations avoided by the on-demand memo cache.
+    pub cache_hits: u64,
+    /// Slices pre-generated before the round (Option 3).
+    pub pregen_slices: u64,
+    /// CDN queries served.
+    pub cdn_queries: u64,
+    /// Simulated CDN/network service latency (µs, accounting model).
+    pub service_us: u64,
+}
+
+impl RoundComm {
+    pub fn accumulate(&mut self, other: &RoundComm) {
+        self.down_bytes += other.down_bytes;
+        self.up_key_bytes += other.up_key_bytes;
+        self.psi_evals += other.psi_evals;
+        self.cache_hits += other.cache_hits;
+        self.pregen_slices += other.pregen_slices;
+        self.cdn_queries += other.cdn_queries;
+        self.service_us += other.service_us;
+    }
+}
+
+/// A FEDSELECT implementation: delivers client sub-models for select keys.
+pub trait SliceService: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called once per round before any client fetches (pre-generation hook).
+    fn begin_round(&mut self, store: &ParamStore, spec: &SelectSpec) -> Result<()>;
+
+    /// Deliver the sub-model for one client (`keys[ks]` per keyspace `ks`),
+    /// in artifact parameter order.
+    fn fetch(
+        &mut self,
+        store: &ParamStore,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Drain and return this round's ledger.
+    fn end_round(&mut self) -> RoundComm;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    /// All three implementations must produce byte-identical slices.
+    #[test]
+    fn implementations_agree() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(3, 0));
+        let spec = arch.select_spec();
+        let keys = vec![vec![5u32, 0, 63, 17]];
+
+        let mut results = Vec::new();
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            svc.begin_round(&store, &spec).unwrap();
+            let slices = svc.fetch(&store, &spec, &keys).unwrap();
+            results.push((imp, slices));
+        }
+        for w in results.windows(2) {
+            assert_eq!(w[0].1, w[1].1, "{:?} vs {:?}", w[0].0, w[1].0);
+        }
+    }
+
+    #[test]
+    fn ledgers_reflect_design_tradeoffs() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(3, 0));
+        let spec = arch.select_spec();
+        let keys = vec![vec![5u32, 0, 63, 17]];
+
+        let mut bc = SliceImpl::Broadcast.build();
+        bc.begin_round(&store, &spec).unwrap();
+        bc.fetch(&store, &spec, &keys).unwrap();
+        let lc_bc = bc.end_round();
+
+        let mut od = SliceImpl::OnDemand.build();
+        od.begin_round(&store, &spec).unwrap();
+        od.fetch(&store, &spec, &keys).unwrap();
+        od.fetch(&store, &spec, &keys).unwrap();
+        let lc_od = od.end_round();
+
+        let mut pg = SliceImpl::PregenCdn.build();
+        pg.begin_round(&store, &spec).unwrap();
+        pg.fetch(&store, &spec, &keys).unwrap();
+        let lc_pg = pg.end_round();
+
+        // broadcast: full model down, no keys up, no server psi
+        assert_eq!(lc_bc.down_bytes, store.bytes() as u64);
+        assert_eq!(lc_bc.up_key_bytes, 0);
+        assert_eq!(lc_bc.psi_evals, 0);
+        // on-demand: far less down, keys visible, cache hits on 2nd fetch
+        assert!(lc_od.down_bytes < lc_bc.down_bytes);
+        assert!(lc_od.up_key_bytes > 0);
+        assert_eq!(lc_od.psi_evals, 4);
+        assert_eq!(lc_od.cache_hits, 4);
+        // pregen: all K slices computed ahead of time
+        assert_eq!(lc_pg.pregen_slices, 64);
+        assert_eq!(lc_pg.cdn_queries, 4);
+        assert!(lc_pg.down_bytes < lc_bc.down_bytes);
+    }
+}

@@ -1,0 +1,149 @@
+//! Option 2 (paper §3.2/§6): on-demand slice generation.
+//!
+//! Clients upload their select keys; the server computes ψ per key and ships
+//! back exactly the requested slice. A per-round memo cache amortizes
+//! repeated keys across clients (the "more complicated distributed caching
+//! system" the paper mentions — here a single-node memo whose hit statistics
+//! the benches report). The server sees every client's keys: the weakest key
+//! privacy of the three options.
+
+use std::collections::HashMap;
+
+use super::piece::{assemble, piece_bytes, piece_for_key};
+use super::{RoundComm, SliceService};
+use crate::error::Result;
+use crate::model::{Binding, ParamStore, SelectSpec};
+
+pub struct OnDemandService {
+    /// Memoize per-key pieces within a round (cleared by `begin_round`).
+    memoize: bool,
+    cache: HashMap<(usize, u32), Vec<f32>>,
+    ledger: RoundComm,
+}
+
+impl OnDemandService {
+    pub fn new(memoize: bool) -> Self {
+        OnDemandService {
+            memoize,
+            cache: HashMap::new(),
+            ledger: RoundComm::default(),
+        }
+    }
+}
+
+impl SliceService for OnDemandService {
+    fn name(&self) -> &'static str {
+        "on-demand"
+    }
+
+    fn begin_round(&mut self, _store: &ParamStore, _spec: &SelectSpec) -> Result<()> {
+        // The model changed: all cached slices are stale.
+        self.cache.clear();
+        Ok(())
+    }
+
+    fn fetch(
+        &mut self,
+        store: &ParamStore,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // keys go up: 4 bytes per key
+        let total_keys: usize = keys.iter().map(|k| k.len()).sum();
+        self.ledger.up_key_bytes += (total_keys * 4) as u64;
+
+        // compute / reuse per-key pieces
+        for (ks, kk) in keys.iter().enumerate() {
+            for &k in kk {
+                if self.memoize && self.cache.contains_key(&(ks, k)) {
+                    self.ledger.cache_hits += 1;
+                    continue;
+                }
+                let piece = piece_for_key(store, spec, ks, k);
+                self.ledger.psi_evals += 1;
+                self.ledger.service_us += 1 + piece.len() as u64 / 256; // ~1GB/s ψ model
+                if self.memoize {
+                    self.cache.insert((ks, k), piece);
+                } else {
+                    // still pay for it below via direct assembly
+                    self.cache.insert((ks, k), piece);
+                }
+            }
+        }
+
+        // downlink: broadcast segments + selected slice bytes
+        let bcast = spec.broadcast_floats(store) * 4;
+        let keyed: u64 = keys
+            .iter()
+            .enumerate()
+            .map(|(ks, kk)| kk.len() as u64 * piece_bytes(spec, ks))
+            .sum();
+        self.ledger.down_bytes += bcast as u64 + keyed;
+
+        let out = assemble(store, spec, keys, |ks, k| {
+            self.cache.get(&(ks, k)).expect("piece computed above")
+        });
+        if !self.memoize {
+            self.cache.clear();
+        }
+        // sanity: bundle covers every binding
+        debug_assert_eq!(out.len(), spec.bindings.len());
+        debug_assert!(spec
+            .bindings
+            .iter()
+            .zip(out.iter())
+            .all(|(b, o)| match b {
+                Binding::Full { seg } => o.len() == store.segments[*seg].len(),
+                Binding::Keyed { keyspace, map, .. } =>
+                    o.len() == map.sliced_len(keys[*keyspace].len()),
+            }));
+        Ok(out)
+    }
+
+    fn end_round(&mut self) -> RoundComm {
+        std::mem::take(&mut self.ledger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn memoization_counts_hits_and_resets_per_round() {
+        let arch = ModelArch::mlp2nn();
+        let store = arch.init_store(&mut Rng::new(1, 0));
+        let spec = arch.select_spec();
+        let keys = vec![vec![0u32, 5, 9]];
+        let mut svc = OnDemandService::new(true);
+        svc.begin_round(&store, &spec).unwrap();
+        svc.fetch(&store, &spec, &keys).unwrap();
+        svc.fetch(&store, &spec, &keys).unwrap();
+        let l1 = svc.end_round();
+        assert_eq!(l1.psi_evals, 3);
+        assert_eq!(l1.cache_hits, 3);
+        // new round: cache cleared
+        svc.begin_round(&store, &spec).unwrap();
+        svc.fetch(&store, &spec, &keys).unwrap();
+        let l2 = svc.end_round();
+        assert_eq!(l2.psi_evals, 3);
+        assert_eq!(l2.cache_hits, 0);
+    }
+
+    #[test]
+    fn without_memoization_every_fetch_pays() {
+        let arch = ModelArch::logreg(16);
+        let store = arch.init_store(&mut Rng::new(1, 0));
+        let spec = arch.select_spec();
+        let keys = vec![vec![1u32, 2]];
+        let mut svc = OnDemandService::new(false);
+        svc.begin_round(&store, &spec).unwrap();
+        svc.fetch(&store, &spec, &keys).unwrap();
+        svc.fetch(&store, &spec, &keys).unwrap();
+        let l = svc.end_round();
+        assert_eq!(l.psi_evals, 4);
+        assert_eq!(l.cache_hits, 0);
+    }
+}

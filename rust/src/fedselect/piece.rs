@@ -1,0 +1,128 @@
+//! Per-key slice "pieces": the unit of storage for on-demand memoization and
+//! CDN pre-generation.
+//!
+//! For keyspace `ks`, the piece of key `k` is the concatenation, over the
+//! keyed bindings of `ks` in binding order, of that key's `groups × row_len`
+//! elements (group-major). [`assemble`] reconstructs a client's full slice
+//! bundle from pieces plus the broadcast segments — the exact inverse used
+//! by both [`super::on_demand`] and [`super::pregen`], so the two options
+//! are byte-identical with Option 1.
+
+use crate::model::{Binding, ParamStore, SelectSpec};
+
+/// Compute the piece for (`keyspace`, `key`).
+pub fn piece_for_key(store: &ParamStore, spec: &SelectSpec, keyspace: usize, key: u32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(spec.per_key_floats(keyspace));
+    for b in &spec.bindings {
+        if let Binding::Keyed {
+            seg,
+            keyspace: ks,
+            map,
+        } = b
+        {
+            if *ks != keyspace {
+                continue;
+            }
+            let src = &store.segments[*seg].data;
+            let rl = map.row_len;
+            for g in 0..map.groups {
+                let s = (g * map.keys_total + key as usize) * rl;
+                out.extend_from_slice(&src[s..s + rl]);
+            }
+        }
+    }
+    out
+}
+
+/// Bytes of one piece of `keyspace`.
+pub fn piece_bytes(spec: &SelectSpec, keyspace: usize) -> u64 {
+    (spec.per_key_floats(keyspace) * 4) as u64
+}
+
+/// Assemble the client slice bundle (artifact parameter order) from pieces.
+///
+/// `get_piece(ks, key)` must return the piece produced by [`piece_for_key`].
+pub fn assemble<'a>(
+    store: &ParamStore,
+    spec: &SelectSpec,
+    keys: &[Vec<u32>],
+    mut get_piece: impl FnMut(usize, u32) -> &'a [f32],
+) -> Vec<Vec<f32>> {
+    // Per-keyspace offset of each keyed binding within a piece.
+    let nks = spec.keyspaces.len();
+    let mut offsets = vec![0usize; spec.bindings.len()];
+    let mut acc = vec![0usize; nks];
+    for (i, b) in spec.bindings.iter().enumerate() {
+        if let Binding::Keyed { keyspace, map, .. } = b {
+            offsets[i] = acc[*keyspace];
+            acc[*keyspace] += map.per_key();
+        }
+    }
+    let mut out = Vec::with_capacity(spec.bindings.len());
+    for (i, b) in spec.bindings.iter().enumerate() {
+        match b {
+            Binding::Full { seg } => out.push(store.segments[*seg].data.clone()),
+            Binding::Keyed { keyspace, map, .. } => {
+                let ks_keys = &keys[*keyspace];
+                let m = ks_keys.len();
+                let rl = map.row_len;
+                // append in (g, j) order: destination is strictly sequential
+                let mut buf = Vec::with_capacity(map.sliced_len(m));
+                for g in 0..map.groups {
+                    let s = offsets[i] + g * rl;
+                    for &k in ks_keys {
+                        let piece = get_piece(*keyspace, k);
+                        buf.extend_from_slice(&piece[s..s + rl]);
+                    }
+                }
+                debug_assert_eq!(buf.len(), map.sliced_len(m));
+                out.push(buf);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn assemble_from_pieces_equals_direct_slice() {
+        for arch in [
+            ModelArch::logreg(32),
+            ModelArch::mlp2nn(),
+            ModelArch::cnn(),
+            ModelArch::transformer(),
+        ] {
+            let store = arch.init_store(&mut Rng::new(9, 0));
+            let spec = arch.select_spec();
+            let keys: Vec<Vec<u32>> = spec
+                .keyspaces
+                .iter()
+                .map(|ks| {
+                    let m = (ks.size / 4).max(1);
+                    Rng::new(ks.size as u64, 1)
+                        .sample_without_replacement(ks.size, m)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect()
+                })
+                .collect();
+            // precompute all needed pieces
+            let mut pieces = std::collections::HashMap::new();
+            for (ks, kk) in keys.iter().enumerate() {
+                for &k in kk {
+                    pieces.insert((ks, k), piece_for_key(&store, &spec, ks, k));
+                }
+            }
+            let assembled = assemble(&store, &spec, &keys, |ks, k| {
+                pieces.get(&(ks, k)).unwrap().as_slice()
+            });
+            let direct = spec.slice(&store, &keys).unwrap();
+            assert_eq!(assembled, direct, "{arch:?}");
+        }
+    }
+}

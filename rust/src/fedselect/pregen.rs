@@ -1,0 +1,150 @@
+//! Option 3 (paper §3.2/§6): pre-generation of slices to a CDN.
+//!
+//! Before each round the server evaluates ψ for *every* key in every
+//! keyspace and publishes the pieces to the [`crate::cdn::CdnStore`];
+//! clients then query the CDN directly. Amortizes ψ across overlapping
+//! client key sets, moves serving off the training server, and enables the
+//! data-minimization barrier / PIR discussion of §6 — at the cost of
+//! computing slices nobody may download when K is large.
+
+use std::collections::HashMap;
+
+use super::piece::{assemble, piece_bytes, piece_for_key};
+use super::{RoundComm, SliceService};
+use crate::cdn::CdnStore;
+use crate::error::{Error, Result};
+use crate::model::{ParamStore, SelectSpec};
+
+pub struct PregenCdnService {
+    cdn: CdnStore,
+    ledger: RoundComm,
+}
+
+impl PregenCdnService {
+    pub fn new() -> Self {
+        PregenCdnService {
+            cdn: CdnStore::new(8),
+            ledger: RoundComm::default(),
+        }
+    }
+
+    pub fn with_cdn(cdn: CdnStore) -> Self {
+        PregenCdnService {
+            cdn,
+            ledger: RoundComm::default(),
+        }
+    }
+
+    pub fn cdn(&self) -> &CdnStore {
+        &self.cdn
+    }
+}
+
+impl Default for PregenCdnService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SliceService for PregenCdnService {
+    fn name(&self) -> &'static str {
+        "pregen-cdn"
+    }
+
+    fn begin_round(&mut self, store: &ParamStore, spec: &SelectSpec) -> Result<()> {
+        // ψ(x, k) for all k in all keyspaces, published as one version.
+        let mut pieces = HashMap::new();
+        for (ks, keyspace) in spec.keyspaces.iter().enumerate() {
+            for k in 0..keyspace.size as u32 {
+                let piece = piece_for_key(store, spec, ks, k);
+                self.ledger.psi_evals += 1;
+                self.ledger.service_us += 1 + piece.len() as u64 / 256;
+                pieces.insert((ks, k), piece);
+            }
+        }
+        self.ledger.pregen_slices += pieces.len() as u64;
+        self.cdn.publish(pieces);
+        Ok(())
+    }
+
+    fn fetch(
+        &mut self,
+        store: &ParamStore,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // keys go up to the CDN (not the training server)
+        let total_keys: usize = keys.iter().map(|k| k.len()).sum();
+        self.ledger.up_key_bytes += (total_keys * 4) as u64;
+        self.ledger.cdn_queries += total_keys as u64;
+
+        let bcast = spec.broadcast_floats(store) * 4;
+        let keyed: u64 = keys
+            .iter()
+            .enumerate()
+            .map(|(ks, kk)| kk.len() as u64 * piece_bytes(spec, ks))
+            .sum();
+        self.ledger.down_bytes += bcast as u64 + keyed;
+
+        // pull pieces through the CDN (records shard load / latency)
+        let mut fetched: HashMap<(usize, u32), Vec<f32>> = HashMap::new();
+        for (ks, kk) in keys.iter().enumerate() {
+            for &k in kk {
+                if fetched.contains_key(&(ks, k)) {
+                    continue;
+                }
+                let piece = self
+                    .cdn
+                    .query(ks, k)
+                    .ok_or_else(|| Error::Shape(format!("CDN missing piece ({ks}, {k})")))?
+                    .to_vec();
+                fetched.insert((ks, k), piece);
+            }
+        }
+        self.ledger.service_us = self.ledger.service_us.max(self.cdn.makespan_us());
+        Ok(assemble(store, spec, keys, |ks, k| {
+            fetched.get(&(ks, k)).expect("fetched above").as_slice()
+        }))
+    }
+
+    fn end_round(&mut self) -> RoundComm {
+        self.cdn.reset_stats();
+        std::mem::take(&mut self.ledger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn pregen_publishes_every_key_once() {
+        let arch = ModelArch::transformer();
+        let store = arch.init_store(&mut Rng::new(2, 0));
+        let spec = arch.select_spec();
+        let mut svc = PregenCdnService::new();
+        svc.begin_round(&store, &spec).unwrap();
+        // vocab (2048) + ffn (512) pieces
+        assert_eq!(svc.cdn().num_pieces(), 2048 + 512);
+        let keys = vec![vec![0u32, 7, 2047], vec![3u32, 500]];
+        let got = svc.fetch(&store, &spec, &keys).unwrap();
+        let want = spec.slice(&store, &keys).unwrap();
+        assert_eq!(got, want);
+        let ledger = svc.end_round();
+        assert_eq!(ledger.pregen_slices, 2560);
+        assert_eq!(ledger.cdn_queries, 5);
+    }
+
+    #[test]
+    fn missing_key_is_an_error() {
+        let arch = ModelArch::logreg(8);
+        let store = arch.init_store(&mut Rng::new(2, 0));
+        let spec = arch.select_spec();
+        let mut svc = PregenCdnService::new();
+        svc.begin_round(&store, &spec).unwrap();
+        let bad = vec![vec![255u32]];
+        assert!(svc.fetch(&store, &spec, &bad).is_err());
+    }
+}

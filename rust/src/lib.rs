@@ -1,0 +1,59 @@
+//! # fedselect
+//!
+//! A production-shaped reproduction of *Federated Select: A Primitive for
+//! Communication- and Memory-Efficient Federated Learning* (Charles et al.,
+//! 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) is the federated coordinator: the `FEDSELECT`
+//! primitive and its three system implementations, sparse deselection
+//! aggregation (plain / secure-masked / IBLT), server optimizers, the round
+//! driver of the paper's Algorithm 2, synthetic federated datasets, a CDN
+//! substrate with a PIR cost model, and the experiment harness regenerating
+//! every table and figure of the paper's §5.
+//!
+//! Layers 2 and 1 (JAX models and Pallas kernels) are compiled once at build
+//! time (`make artifacts`) into HLO-text artifacts which [`runtime`] loads
+//! and executes through the PJRT C API. Python is never on the request path.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use fedselect::prelude::*;
+//!
+//! let cfg = TrainConfig::logreg_default(512, 64);
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final recall@5 = {:.3}", report.final_eval.metric);
+//! ```
+
+pub mod aggregation;
+pub mod baselines;
+pub mod cdn;
+pub mod clients;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod fedselect;
+pub mod metrics;
+pub mod model;
+pub mod native;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator};
+    pub use crate::clients::Engine;
+    pub use crate::config::{DatasetConfig, EngineKind, EvalConfig, TrainConfig};
+    pub use crate::coordinator::{RoundRecord, TrainReport, Trainer};
+    pub use crate::data::FederatedDataset;
+    pub use crate::error::{Error, Result};
+    pub use crate::fedselect::{KeyPolicy, SliceImpl, SliceService};
+    pub use crate::model::{ModelArch, ParamStore, SelectSpec};
+    pub use crate::optim::ServerOpt;
+    pub use crate::tensor::rng::Rng;
+}

@@ -1,0 +1,218 @@
+//! `fedselect` — CLI entrypoint for the Federated Select coordinator.
+//!
+//! ```text
+//! fedselect train       [--model logreg|mlp|cnn|transformer] [--vocab N]
+//!                       [--policy top:M] [--policy2 random-global:D]
+//!                       [--rounds R] [--cohort C] [--slice-impl pregen]
+//!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
+//!                       [--agg cohort|per-coord] [--secure-agg]
+//!                       [--dropout P] [--engine native|pjrt]
+//!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
+//! fedselect experiment  --id table1|fig2..fig7|table2|table3|all|list
+//!                       [--quick] [--engine native|pjrt] [--trials T]
+//!                       [--out-dir results] [--artifacts-dir DIR]
+//! fedselect artifacts   [--dir artifacts]
+//! fedselect info
+//! ```
+
+use fedselect::aggregation::AggMode;
+use fedselect::config::{EngineKind, TrainConfig};
+use fedselect::coordinator::Trainer;
+use fedselect::error::{Error, Result};
+use fedselect::experiments::{self, ExpOptions};
+use fedselect::fedselect::{KeyPolicy, SliceImpl};
+use fedselect::metrics::human_bytes;
+use fedselect::optim::ServerOpt;
+use fedselect::runtime::PjrtRuntime;
+use fedselect::util::cli::Args;
+
+fn parse_engine(engine: &str, dir: &str) -> Result<EngineKind> {
+    match engine {
+        "native" => Ok(EngineKind::Native),
+        "pjrt" => Ok(EngineKind::Pjrt {
+            artifacts_dir: dir.to_string(),
+        }),
+        other => Err(Error::Config(format!(
+            "unknown engine {other:?} (native | pjrt)"
+        ))),
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let model = a.str_or("model", "logreg");
+    let vocab = a.parse_or("vocab", 2048usize).map_err(Error::Config)?;
+    let p0: KeyPolicy = a
+        .str_or("policy", "top:256")
+        .parse()
+        .map_err(Error::Config)?;
+    let mut cfg = match model.as_str() {
+        "logreg" => {
+            let mut c = TrainConfig::logreg_default(vocab, p0.m(vocab));
+            c.policies = vec![p0];
+            c
+        }
+        "mlp" => {
+            let mut c = TrainConfig::mlp_default(p0.m(200));
+            c.policies = vec![p0];
+            c
+        }
+        "cnn" => {
+            let mut c = TrainConfig::cnn_default(p0.m(64));
+            c.policies = vec![p0];
+            c
+        }
+        "transformer" => {
+            let p1: KeyPolicy = a
+                .str_or("policy2", "random-global:128")
+                .parse()
+                .map_err(Error::Config)?;
+            let mut c = TrainConfig::transformer_default(p0.m(2048), p1.m(512));
+            c.policies = vec![p0, p1];
+            c
+        }
+        other => return Err(Error::Config(format!("unknown model {other:?}"))),
+    };
+    if model != "transformer" {
+        let _ = a.get("policy2");
+    }
+    cfg.rounds = a.parse_or("rounds", 20usize).map_err(Error::Config)?;
+    cfg.cohort = a.parse_or("cohort", 50usize).map_err(Error::Config)?;
+    cfg.slice_impl = a
+        .str_or("slice-impl", "pregen")
+        .parse::<SliceImpl>()
+        .map_err(Error::Config)?;
+    cfg.server_opt = a
+        .str_or("server-opt", "fedadagrad:0.1")
+        .parse::<ServerOpt>()
+        .map_err(Error::Config)?;
+    cfg.client_lr = a.parse_or("client-lr", 0.5f32).map_err(Error::Config)?;
+    cfg.agg = a
+        .str_or("agg", "cohort")
+        .parse::<AggMode>()
+        .map_err(Error::Config)?;
+    cfg.secure_agg = a.flag("secure-agg");
+    cfg.dropout_rate = a.parse_or("dropout", 0.0f32).map_err(Error::Config)?;
+    let dir = a.str_or("artifacts-dir", "artifacts");
+    cfg.engine = parse_engine(&a.str_or("engine", "native"), &dir)?;
+    cfg.seed = a.parse_or("seed", 7u64).map_err(Error::Config)?;
+    cfg.eval.every = a.parse_or("eval-every", 10usize).map_err(Error::Config)?;
+    a.reject_unknown().map_err(Error::Config)?;
+
+    let mut tr = Trainer::new(cfg)?;
+    println!(
+        "server model: {} params ({}), client slice ratio {:.4}",
+        tr.store().num_params(),
+        human_bytes(tr.store().bytes() as u64),
+        tr.rel_model_size()
+    );
+    let report = tr.run()?;
+    for e in &report.evals {
+        println!(
+            "round {:>4}: loss {:.4}  metric {:.4}",
+            e.round, e.loss, e.metric
+        );
+    }
+    if let Some(last) = report.rounds.last() {
+        println!(
+            "per-round comm (last): down {} | up {} | psi {} | cache hits {} | cdn q {}",
+            human_bytes(last.comm.down_bytes),
+            human_bytes(last.up_bytes),
+            last.comm.psi_evals,
+            last.comm.cache_hits,
+            last.comm.cdn_queries
+        );
+    }
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_experiment(a: &Args) -> Result<()> {
+    let id = a
+        .get("id")
+        .ok_or_else(|| Error::Config("--id required (or --id list)".into()))?
+        .to_string();
+    if id == "list" {
+        for i in experiments::ALL_IDS {
+            println!("{i}");
+        }
+        return Ok(());
+    }
+    let dir = a.str_or("artifacts-dir", "artifacts");
+    let mut opts = ExpOptions::new(a.flag("quick"), parse_engine(&a.str_or("engine", "native"), &dir)?);
+    opts.out_dir = a.str_or("out-dir", "results");
+    if let Some(t) = a.get("trials") {
+        opts.trials = t
+            .parse()
+            .map_err(|e| Error::Config(format!("bad --trials: {e}")))?;
+    }
+    a.reject_unknown().map_err(Error::Config)?;
+    let ids: Vec<String> = if id == "all" {
+        experiments::ALL_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("=== experiment {id} ===");
+        match experiments::run(&id, &opts) {
+            Ok(tables) => {
+                for t in tables {
+                    println!("{}", t.to_pretty());
+                }
+            }
+            Err(e) => eprintln!("[{id}] failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(a: &Args) -> Result<()> {
+    let dir = a.str_or("dir", "artifacts");
+    a.reject_unknown().map_err(Error::Config)?;
+    let rt = PjrtRuntime::load(&dir)?;
+    println!("{} artifacts in {dir}:", rt.manifest().len());
+    for name in rt.manifest().names() {
+        let art = rt.artifact(name)?;
+        let in_elems: usize = art
+            .inputs
+            .iter()
+            .map(|i| i.shape.iter().product::<usize>().max(1))
+            .sum();
+        println!(
+            "  {name:<24} {:<14} {:>2} inputs ({} floats) -> {} outputs",
+            art.kind,
+            art.inputs.len(),
+            in_elems,
+            art.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(Error::Config)?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("info") | None => {
+            println!(
+                "fedselect {} — Federated Select reproduction",
+                env!("CARGO_PKG_VERSION")
+            );
+            println!("three-layer stack: rust coordinator -> XLA/PJRT -> pallas kernels");
+            println!("subcommands: train, experiment, artifacts, info");
+            println!("experiments: {}", experiments::ALL_IDS.join(", "));
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand {other:?} (train | experiment | artifacts | info)"
+        ))),
+    }
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

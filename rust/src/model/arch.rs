@@ -1,0 +1,516 @@
+//! The four experiment model families and their FedSelect specifications.
+//!
+//! Shapes here must match `python/compile/aot.py` exactly — the manifest is
+//! cross-checked at runtime, and `rust/tests/pjrt_parity.rs` pins numerics.
+
+use super::{Binding, KeyMap, Keyspace, ParamStore, Segment, SelectSpec};
+use crate::tensor::rng::Rng;
+
+/// Static training-batch geometry of a client-update artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpec {
+    /// SGD steps per local epoch (scan length).
+    pub steps: usize,
+    /// Minibatch size per step.
+    pub mb: usize,
+}
+
+impl BatchSpec {
+    pub fn capacity(&self) -> usize {
+        self.steps * self.mb
+    }
+}
+
+/// Transformer shape configuration (mirrors `model.TransformerCfg`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerShape {
+    pub vocab: usize,
+    pub d: usize,
+    pub seq: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+}
+
+/// Model family + full-model hyperparameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelArch {
+    /// Multi-label logistic regression over a `vocab`-word BOW, `tags` labels.
+    Logreg { vocab: usize, tags: usize },
+    /// 2NN: 784 -> K -> hidden -> classes, hidden-1 neurons keyed (K = 200).
+    Mlp {
+        neurons: usize,
+        hidden: usize,
+        classes: usize,
+    },
+    /// CNN: conv(32) -> conv(`filters`, keyed) -> dense 512 -> classes.
+    Cnn { filters: usize, classes: usize },
+    /// Next-word-prediction transformer; `prefix` selects the artifact family
+    /// ("tf" for the §5.4 grid, "e2e" for the large end-to-end driver).
+    Transformer {
+        shape: TransformerShape,
+        prefix: &'static str,
+    },
+}
+
+impl ModelArch {
+    // -- canonical experiment configurations (match aot.py) ----------------
+
+    pub fn logreg(vocab: usize) -> Self {
+        ModelArch::Logreg { vocab, tags: 50 }
+    }
+
+    pub fn mlp2nn() -> Self {
+        ModelArch::Mlp {
+            neurons: 200,
+            hidden: 200,
+            classes: 62,
+        }
+    }
+
+    pub fn cnn() -> Self {
+        ModelArch::Cnn {
+            filters: 64,
+            classes: 62,
+        }
+    }
+
+    pub fn transformer() -> Self {
+        ModelArch::Transformer {
+            shape: TransformerShape {
+                vocab: 2048,
+                d: 128,
+                seq: 20,
+                layers: 2,
+                heads: 4,
+                ffn: 512,
+            },
+            prefix: "tf",
+        }
+    }
+
+    pub fn transformer_e2e() -> Self {
+        ModelArch::Transformer {
+            shape: TransformerShape {
+                vocab: 65536,
+                d: 256,
+                seq: 32,
+                layers: 4,
+                heads: 8,
+                ffn: 1024,
+            },
+            prefix: "e2e",
+        }
+    }
+
+    /// Keyspace count: 1 for row/filter/neuron models, 2 for the transformer
+    /// (0 = structured vocab keys, 1 = random FFN keys).
+    pub fn num_keyspaces(&self) -> usize {
+        match self {
+            ModelArch::Transformer { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Client-update batch geometry (matches aot.py).
+    pub fn cu_batch(&self) -> BatchSpec {
+        match self {
+            ModelArch::Logreg { .. } => BatchSpec { steps: 4, mb: 16 },
+            ModelArch::Mlp { .. } => BatchSpec { steps: 4, mb: 16 },
+            ModelArch::Cnn { .. } => BatchSpec { steps: 2, mb: 10 },
+            ModelArch::Transformer { .. } => BatchSpec { steps: 2, mb: 8 },
+        }
+    }
+
+    /// Eval artifact batch size.
+    pub fn eval_batch(&self) -> usize {
+        match self {
+            ModelArch::Logreg { .. } | ModelArch::Mlp { .. } => 256,
+            ModelArch::Cnn { .. } => 64,
+            ModelArch::Transformer { prefix, .. } => {
+                if *prefix == "e2e" {
+                    4
+                } else {
+                    32
+                }
+            }
+        }
+    }
+
+    /// Client-update artifact name for per-keyspace key counts `ms`.
+    pub fn cu_name(&self, ms: &[usize]) -> String {
+        match self {
+            ModelArch::Logreg { .. } => format!("logreg_cu_m{}", ms[0]),
+            ModelArch::Mlp { .. } => format!("mlp_cu_m{}", ms[0]),
+            ModelArch::Cnn { .. } => format!("cnn_cu_m{}", ms[0]),
+            ModelArch::Transformer { prefix, .. } => {
+                if *prefix == "e2e" {
+                    "e2e_cu".to_string()
+                } else {
+                    format!("tf_cu_v{}_h{}", ms[0], ms[1])
+                }
+            }
+        }
+    }
+
+    /// Eval artifact name.
+    pub fn eval_name(&self) -> String {
+        match self {
+            ModelArch::Logreg { vocab, .. } => format!("logreg_eval_n{vocab}"),
+            ModelArch::Mlp { .. } => "mlp_eval".to_string(),
+            ModelArch::Cnn { .. } => "cnn_eval".to_string(),
+            ModelArch::Transformer { prefix, .. } => format!("{prefix}_eval"),
+        }
+    }
+
+    /// Initialize the full server model. Distributions mirror the python
+    /// inits (exact bit-equality is not required — the server owns init).
+    pub fn init_store(&self, rng: &mut Rng) -> ParamStore {
+        match *self {
+            ModelArch::Logreg { vocab, tags } => {
+                let mut w = Segment::zeros("w", &[vocab, tags]);
+                for v in &mut w.data {
+                    *v = rng.normal() * 0.01;
+                }
+                let b = Segment::zeros("b", &[tags]);
+                ParamStore {
+                    segments: vec![w, b],
+                }
+            }
+            ModelArch::Mlp {
+                neurons,
+                hidden,
+                classes,
+            } => {
+                let mut segs = Vec::new();
+                segs.push(glorot(rng, "w1", 784, neurons));
+                segs.push(Segment::zeros("b1", &[neurons]));
+                segs.push(glorot(rng, "w2", neurons, hidden));
+                segs.push(Segment::zeros("b2", &[hidden]));
+                segs.push(glorot(rng, "w3", hidden, classes));
+                segs.push(Segment::zeros("b3", &[classes]));
+                ParamStore { segments: segs }
+            }
+            ModelArch::Cnn { filters, classes } => {
+                let mut segs = Vec::new();
+                segs.push(he(rng, "k1", &[5, 5, 1, 32], 25));
+                segs.push(Segment::zeros("c1", &[32]));
+                segs.push(he(rng, "k2", &[5, 5, 32, filters], 25 * 32));
+                segs.push(Segment::zeros("c2", &[filters]));
+                segs.push(he(rng, "w1", &[49 * filters, 512], 49 * filters));
+                segs.push(Segment::zeros("d1", &[512]));
+                segs.push(he(rng, "w2", &[512, classes], 512));
+                segs.push(Segment::zeros("d2", &[classes]));
+                ParamStore { segments: segs }
+            }
+            ModelArch::Transformer { shape, .. } => {
+                let TransformerShape {
+                    vocab,
+                    d,
+                    seq,
+                    layers,
+                    ffn,
+                    ..
+                } = shape;
+                let mut segs = Vec::new();
+                segs.push(fan_in_normal(rng, "emb", &[vocab, d], vocab));
+                segs.push(scaled_normal(rng, "pos", &[seq, d], 0.02));
+                for l in 0..layers {
+                    segs.push(ones(&format!("l{l}_ln1_s"), &[d]));
+                    segs.push(Segment::zeros(&format!("l{l}_ln1_b"), &[d]));
+                    for nm in ["wq", "wk", "wv", "wo"] {
+                        segs.push(fan_in_normal(rng, &format!("l{l}_{nm}"), &[d, d], d));
+                    }
+                    segs.push(ones(&format!("l{l}_ln2_s"), &[d]));
+                    segs.push(Segment::zeros(&format!("l{l}_ln2_b"), &[d]));
+                    segs.push(fan_in_normal(rng, &format!("l{l}_w1"), &[d, ffn], d));
+                    segs.push(Segment::zeros(&format!("l{l}_bf1"), &[ffn]));
+                    segs.push(fan_in_normal(rng, &format!("l{l}_w2"), &[ffn, d], ffn));
+                    segs.push(Segment::zeros(&format!("l{l}_bf2"), &[d]));
+                }
+                segs.push(ones("lnf_s", &[d]));
+                segs.push(Segment::zeros("lnf_b", &[d]));
+                segs.push(fan_in_normal(rng, "wout", &[d, vocab], d));
+                segs.push(Segment::zeros("bout", &[vocab]));
+                ParamStore { segments: segs }
+            }
+        }
+    }
+
+    /// Build the SelectSpec matching the artifact parameter order.
+    pub fn select_spec(&self) -> SelectSpec {
+        match *self {
+            ModelArch::Logreg { vocab, tags } => SelectSpec {
+                bindings: vec![
+                    Binding::Keyed {
+                        seg: 0,
+                        keyspace: 0,
+                        map: KeyMap::rows(vocab, tags),
+                    },
+                    Binding::Full { seg: 1 },
+                ],
+                keyspaces: vec![Keyspace {
+                    name: "vocab".into(),
+                    size: vocab,
+                }],
+            },
+            ModelArch::Mlp {
+                neurons, hidden, ..
+            } => SelectSpec {
+                bindings: vec![
+                    Binding::Keyed {
+                        seg: 0,
+                        keyspace: 0,
+                        map: KeyMap::cols(784, neurons),
+                    },
+                    Binding::Keyed {
+                        seg: 1,
+                        keyspace: 0,
+                        map: KeyMap::rows(neurons, 1),
+                    },
+                    Binding::Keyed {
+                        seg: 2,
+                        keyspace: 0,
+                        map: KeyMap::rows(neurons, hidden),
+                    },
+                    Binding::Full { seg: 3 },
+                    Binding::Full { seg: 4 },
+                    Binding::Full { seg: 5 },
+                ],
+                keyspaces: vec![Keyspace {
+                    name: "neurons".into(),
+                    size: neurons,
+                }],
+            },
+            ModelArch::Cnn { filters, .. } => SelectSpec {
+                bindings: vec![
+                    Binding::Full { seg: 0 },
+                    Binding::Full { seg: 1 },
+                    Binding::Keyed {
+                        seg: 2,
+                        keyspace: 0,
+                        map: KeyMap::cols(5 * 5 * 32, filters),
+                    },
+                    Binding::Keyed {
+                        seg: 3,
+                        keyspace: 0,
+                        map: KeyMap::rows(filters, 1),
+                    },
+                    Binding::Keyed {
+                        seg: 4,
+                        keyspace: 0,
+                        map: KeyMap::grouped_rows(49, filters, 512),
+                    },
+                    Binding::Full { seg: 5 },
+                    Binding::Full { seg: 6 },
+                    Binding::Full { seg: 7 },
+                ],
+                keyspaces: vec![Keyspace {
+                    name: "filters".into(),
+                    size: filters,
+                }],
+            },
+            ModelArch::Transformer { shape, .. } => {
+                let TransformerShape {
+                    vocab,
+                    d,
+                    layers,
+                    ffn,
+                    ..
+                } = shape;
+                let mut bindings = Vec::new();
+                // emb [vocab, d]: structured rows
+                bindings.push(Binding::Keyed {
+                    seg: 0,
+                    keyspace: 0,
+                    map: KeyMap::rows(vocab, d),
+                });
+                bindings.push(Binding::Full { seg: 1 }); // pos
+                let mut seg = 2;
+                for _ in 0..layers {
+                    for _ in 0..8 {
+                        // ln1_s, ln1_b, wq, wk, wv, wo, ln2_s, ln2_b
+                        bindings.push(Binding::Full { seg });
+                        seg += 1;
+                    }
+                    // w1 [d, ffn]: random FFN cols
+                    bindings.push(Binding::Keyed {
+                        seg,
+                        keyspace: 1,
+                        map: KeyMap::cols(d, ffn),
+                    });
+                    seg += 1;
+                    // bf1 [ffn]
+                    bindings.push(Binding::Keyed {
+                        seg,
+                        keyspace: 1,
+                        map: KeyMap::rows(ffn, 1),
+                    });
+                    seg += 1;
+                    // w2 [ffn, d]: random FFN rows
+                    bindings.push(Binding::Keyed {
+                        seg,
+                        keyspace: 1,
+                        map: KeyMap::rows(ffn, d),
+                    });
+                    seg += 1;
+                    // bf2 [d]
+                    bindings.push(Binding::Full { seg });
+                    seg += 1;
+                }
+                bindings.push(Binding::Full { seg }); // lnf_s
+                bindings.push(Binding::Full { seg: seg + 1 }); // lnf_b
+                // wout [d, vocab]: structured cols (tied keyspace with emb)
+                bindings.push(Binding::Keyed {
+                    seg: seg + 2,
+                    keyspace: 0,
+                    map: KeyMap::cols(d, vocab),
+                });
+                bindings.push(Binding::Keyed {
+                    seg: seg + 3,
+                    keyspace: 0,
+                    map: KeyMap::rows(vocab, 1),
+                });
+                SelectSpec {
+                    bindings,
+                    keyspaces: vec![
+                        Keyspace {
+                            name: "vocab".into(),
+                            size: vocab,
+                        },
+                        Keyspace {
+                            name: "ffn".into(),
+                            size: ffn,
+                        },
+                    ],
+                }
+            }
+        }
+    }
+}
+
+fn glorot(rng: &mut Rng, name: &str, fi: usize, fo: usize) -> Segment {
+    let mut s = Segment::zeros(name, &[fi, fo]);
+    let std = (2.0 / (fi + fo) as f32).sqrt();
+    for v in &mut s.data {
+        *v = rng.normal() * std;
+    }
+    s
+}
+
+fn he(rng: &mut Rng, name: &str, shape: &[usize], fan_in: usize) -> Segment {
+    let mut s = Segment::zeros(name, shape);
+    let std = (2.0 / fan_in as f32).sqrt();
+    for v in &mut s.data {
+        *v = rng.normal() * std;
+    }
+    s
+}
+
+fn fan_in_normal(rng: &mut Rng, name: &str, shape: &[usize], fan_in: usize) -> Segment {
+    let mut s = Segment::zeros(name, shape);
+    let std = 1.0 / (fan_in as f32).sqrt();
+    for v in &mut s.data {
+        *v = rng.normal() * std;
+    }
+    s
+}
+
+fn scaled_normal(rng: &mut Rng, name: &str, shape: &[usize], std: f32) -> Segment {
+    let mut s = Segment::zeros(name, shape);
+    for v in &mut s.data {
+        *v = rng.normal() * std;
+    }
+    s
+}
+
+fn ones(name: &str, shape: &[usize]) -> Segment {
+    let mut s = Segment::zeros(name, shape);
+    s.data.fill(1.0);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_validate_against_inits() {
+        let mut rng = Rng::new(1, 0);
+        for arch in [
+            ModelArch::logreg(512),
+            ModelArch::mlp2nn(),
+            ModelArch::cnn(),
+            ModelArch::transformer(),
+        ] {
+            let store = arch.init_store(&mut rng);
+            let spec = arch.select_spec();
+            spec.validate(&store)
+                .unwrap_or_else(|e| panic!("{arch:?}: {e}"));
+            assert_eq!(
+                spec.bindings.len(),
+                store.segments.len(),
+                "{arch:?} binds every segment"
+            );
+        }
+    }
+
+    #[test]
+    fn transformer_param_order_matches_python() {
+        let arch = ModelArch::transformer();
+        let store = arch.init_store(&mut Rng::new(0, 0));
+        let names: Vec<&str> = store.segments.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names[0], "emb");
+        assert_eq!(names[1], "pos");
+        assert_eq!(names[2], "l0_ln1_s");
+        assert_eq!(names[13], "l0_bf2");
+        assert_eq!(names[names.len() - 2], "wout");
+        assert_eq!(names[names.len() - 1], "bout");
+        assert_eq!(names.len(), 2 + 12 * 2 + 4);
+    }
+
+    #[test]
+    fn client_floats_shrink_with_m() {
+        let arch = ModelArch::logreg(512);
+        let store = arch.init_store(&mut Rng::new(0, 0));
+        let spec = arch.select_spec();
+        let full = spec.client_floats(&store, &[512]);
+        let small = spec.client_floats(&store, &[64]);
+        assert_eq!(full, store.num_params());
+        assert!(small < full / 7);
+    }
+
+    #[test]
+    fn mlp_slice_shapes_match_artifacts() {
+        let arch = ModelArch::mlp2nn();
+        let store = arch.init_store(&mut Rng::new(0, 0));
+        let spec = arch.select_spec();
+        let ms = [50usize];
+        assert_eq!(spec.sliced_shape(&store, 0, &ms), vec![784, 50]);
+        assert_eq!(spec.sliced_shape(&store, 1, &ms), vec![50]);
+        assert_eq!(spec.sliced_shape(&store, 2, &ms), vec![50, 200]);
+        assert_eq!(spec.sliced_shape(&store, 3, &ms), vec![200]);
+    }
+
+    #[test]
+    fn cnn_slice_shapes_match_artifacts() {
+        let arch = ModelArch::cnn();
+        let store = arch.init_store(&mut Rng::new(0, 0));
+        let spec = arch.select_spec();
+        let ms = [16usize];
+        assert_eq!(spec.sliced_shape(&store, 2, &ms), vec![5, 5, 32, 16]);
+        assert_eq!(spec.sliced_shape(&store, 3, &ms), vec![16]);
+        assert_eq!(spec.sliced_shape(&store, 4, &ms), vec![49 * 16, 512]);
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(ModelArch::logreg(2048).cu_name(&[256]), "logreg_cu_m256");
+        assert_eq!(ModelArch::logreg(2048).eval_name(), "logreg_eval_n2048");
+        assert_eq!(
+            ModelArch::transformer().cu_name(&[512, 128]),
+            "tf_cu_v512_h128"
+        );
+        assert_eq!(ModelArch::transformer_e2e().cu_name(&[1024, 256]), "e2e_cu");
+    }
+}

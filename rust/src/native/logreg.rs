@@ -1,0 +1,223 @@
+//! Native multi-label logistic regression: one epoch of minibatch SGD and
+//! the recall@5 eval, mirroring `model.logreg_client_update` / `logreg_eval`.
+
+use crate::error::{Error, Result};
+use crate::tensor::ops::{bce_with_logits, matmul, matmul_at_b, sigmoid, top_k_indices};
+
+use super::Buf;
+
+/// params: [w (m*t), b (t)]; batch: [x (s*mb*m), y (s*mb*t), wgt (s*mb)].
+/// Returns deltas [dw, db] with delta = initial - final.
+#[allow(clippy::too_many_arguments)]
+pub fn logreg_client_update(
+    params: &[Vec<f32>],
+    batch: &[Buf],
+    m: usize,
+    t: usize,
+    steps: usize,
+    mb: usize,
+    lr: f32,
+) -> Result<Vec<Vec<f32>>> {
+    if params.len() != 2 || batch.len() != 3 {
+        return Err(Error::Shape("logreg expects 2 params, 3 batch bufs".into()));
+    }
+    let (w0, b0) = (&params[0], &params[1]);
+    if w0.len() != m * t || b0.len() != t {
+        return Err(Error::Shape(format!(
+            "logreg param sizes w={} b={} vs m*t={} t={}",
+            w0.len(),
+            b0.len(),
+            m * t,
+            t
+        )));
+    }
+    let x = batch[0].as_f32()?;
+    let y = batch[1].as_f32()?;
+    let wgt = batch[2].as_f32()?;
+    if x.len() != steps * mb * m || y.len() != steps * mb * t || wgt.len() != steps * mb {
+        return Err(Error::Shape("logreg batch sizes mismatch".into()));
+    }
+
+    let mut w = w0.clone();
+    let mut b = b0.clone();
+    let mut logits = vec![0.0f32; mb * t];
+    let mut gz = vec![0.0f32; mb * t];
+    for s in 0..steps {
+        let xs = &x[s * mb * m..(s + 1) * mb * m];
+        let ys = &y[s * mb * t..(s + 1) * mb * t];
+        let ws = &wgt[s * mb..(s + 1) * mb];
+        let wsum: f32 = ws.iter().sum::<f32>().max(1.0);
+        // logits = xs @ w + b
+        matmul(xs, &w, &mut logits, mb, m, t);
+        for i in 0..mb {
+            let f = ws[i] / wsum;
+            for j in 0..t {
+                let z = logits[i * t + j] + b[j];
+                gz[i * t + j] = (sigmoid(z) - ys[i * t + j]) * f;
+            }
+        }
+        // w -= lr * xsᵀ @ gz ; b -= lr * Σ_i gz[i]
+        matmul_at_b(xs, &gz, &mut w, mb, m, t, -lr);
+        for i in 0..mb {
+            for j in 0..t {
+                b[j] -= lr * gz[i * t + j];
+            }
+        }
+    }
+    let dw: Vec<f32> = w0.iter().zip(w.iter()).map(|(a, b)| a - b).collect();
+    let db: Vec<f32> = b0.iter().zip(b.iter()).map(|(a, b)| a - b).collect();
+    Ok(vec![dw, db])
+}
+
+/// params: [w (n*t), b (t)]; batch: [x (bsz*n), y (bsz*t), wgt (bsz)].
+/// Returns (loss_sum, recall@5_sum, weight_sum).
+pub fn logreg_eval(
+    params: &[Vec<f32>],
+    batch: &[Buf],
+    n: usize,
+    t: usize,
+) -> Result<(f64, f64, f64)> {
+    let (w, b) = (&params[0], &params[1]);
+    if w.len() != n * t || b.len() != t {
+        return Err(Error::Shape("logreg eval param sizes".into()));
+    }
+    let x = batch[0].as_f32()?;
+    let y = batch[1].as_f32()?;
+    let wgt = batch[2].as_f32()?;
+    let bsz = wgt.len();
+    if x.len() != bsz * n || y.len() != bsz * t {
+        return Err(Error::Shape("logreg eval batch sizes".into()));
+    }
+    let mut logits = vec![0.0f32; bsz * t];
+    matmul(x, w, &mut logits, bsz, n, t);
+    let mut loss_sum = 0.0f64;
+    let mut rec5_sum = 0.0f64;
+    let mut wsum = 0.0f64;
+    for i in 0..bsz {
+        let wi = wgt[i];
+        let row = &mut logits[i * t..(i + 1) * t];
+        for (j, l) in row.iter_mut().enumerate() {
+            *l += b[j];
+        }
+        let yrow = &y[i * t..(i + 1) * t];
+        let loss: f32 = row
+            .iter()
+            .zip(yrow.iter())
+            .map(|(&z, &yy)| bce_with_logits(z, yy))
+            .sum();
+        let top5 = top_k_indices(row, 5);
+        let hits: f32 = top5.iter().map(|&j| yrow[j]).sum();
+        let ntags: f32 = yrow.iter().sum::<f32>().max(1.0);
+        loss_sum += (loss * wi) as f64;
+        rec5_sum += (hits / ntags * wi) as f64;
+        wsum += wi as f64;
+    }
+    Ok((loss_sum, rec5_sum, wsum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    fn setup(m: usize, t: usize, steps: usize, mb: usize) -> (Vec<Vec<f32>>, Vec<Buf>) {
+        let mut rng = Rng::new(8, 0);
+        let w = rand_vec(&mut rng, m * t, 0.01);
+        let b = vec![0.0; t];
+        let x: Vec<f32> = (0..steps * mb * m)
+            .map(|_| if rng.f32() < 0.1 { 1.0 } else { 0.0 })
+            .collect();
+        let y: Vec<f32> = (0..steps * mb * t)
+            .map(|_| if rng.f32() < 0.2 { 1.0 } else { 0.0 })
+            .collect();
+        let wgt = vec![1.0f32; steps * mb];
+        (
+            vec![w, b],
+            vec![Buf::F32(x), Buf::F32(y), Buf::F32(wgt)],
+        )
+    }
+
+    #[test]
+    fn zero_lr_zero_delta() {
+        let (p, batch) = setup(16, 4, 2, 4);
+        let d = logreg_client_update(&p, &batch, 16, 4, 2, 4, 0.0).unwrap();
+        assert!(d[0].iter().all(|&v| v == 0.0));
+        assert!(d[1].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn training_reduces_eval_loss() {
+        let (p, batch) = setup(16, 4, 4, 8);
+        // evaluate on the training batch (flattened to one eval batch)
+        let flat_eval = |params: &[Vec<f32>]| {
+            let x = batch[0].as_f32().unwrap().to_vec();
+            let y = batch[1].as_f32().unwrap().to_vec();
+            let wgt = vec![1.0f32; 32];
+            let eb = vec![Buf::F32(x), Buf::F32(y), Buf::F32(wgt)];
+            logreg_eval(params, &eb, 16, 4).unwrap().0
+        };
+        let loss0 = flat_eval(&p);
+        let d = logreg_client_update(&p, &batch, 16, 4, 4, 8, 0.5).unwrap();
+        let p1: Vec<Vec<f32>> = p
+            .iter()
+            .zip(d.iter())
+            .map(|(pp, dd)| pp.iter().zip(dd.iter()).map(|(a, b)| a - b).collect())
+            .collect();
+        let loss1 = flat_eval(&p1);
+        assert!(loss1 < loss0, "{loss1} !< {loss0}");
+    }
+
+    #[test]
+    fn padded_examples_do_not_matter() {
+        let (p, batch) = setup(16, 4, 2, 4);
+        let mut wgt = vec![1.0f32; 8];
+        wgt[3] = 0.0;
+        wgt[7] = 0.0;
+        let mk = |x: Vec<f32>| {
+            vec![
+                Buf::F32(x),
+                batch[1].clone(),
+                Buf::F32(wgt.clone()),
+            ]
+        };
+        let x0 = batch[0].as_f32().unwrap().to_vec();
+        let mut x1 = x0.clone();
+        for v in &mut x1[3 * 16..4 * 16] {
+            *v = 42.0;
+        }
+        let d0 = logreg_client_update(&p, &mk(x0), 16, 4, 2, 4, 0.1).unwrap();
+        let d1 = logreg_client_update(&p, &mk(x1), 16, 4, 2, 4, 0.1).unwrap();
+        for (a, b) in d0[0].iter().zip(d1[0].iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eval_perfect_model_has_recall_one() {
+        let t = 8;
+        let n = 4;
+        let w = vec![0.0f32; n * t];
+        let mut b = vec![-10.0f32; t];
+        b[0] = 10.0;
+        b[1] = 10.0;
+        let x = vec![0.0f32; 2 * n];
+        let mut y = vec![0.0f32; 2 * t];
+        y[0] = 1.0; // ex0: tag 0
+        y[t] = 1.0;
+        y[t + 1] = 1.0; // ex1: tags 0,1
+        let batch = vec![Buf::F32(x), Buf::F32(y), Buf::F32(vec![1.0, 1.0])];
+        let (_, rec, ws) = logreg_eval(&[w, b], &batch, n, t).unwrap();
+        assert!((rec / ws - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let (p, batch) = setup(16, 4, 2, 4);
+        assert!(logreg_client_update(&p, &batch, 17, 4, 2, 4, 0.1).is_err());
+        assert!(logreg_client_update(&p[..1], &batch, 16, 4, 2, 4, 0.1).is_err());
+    }
+}

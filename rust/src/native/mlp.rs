@@ -1,0 +1,294 @@
+//! Native 2NN MLP: one epoch of minibatch SGD and eval, mirroring
+//! `model.mlp2nn_client_update` / `mlp2nn_eval` (784 -> m -> hidden -> C,
+//! ReLU activations, weighted softmax cross-entropy).
+
+use crate::error::{Error, Result};
+use crate::tensor::ops::{log_softmax_rows, matmul, matmul_at_b, matmul_b_t, relu_inplace};
+
+use super::Buf;
+
+const IN_DIM: usize = 784;
+
+struct Dims {
+    m: usize,
+    h: usize,
+    c: usize,
+}
+
+fn check_params(params: &[Vec<f32>], d: &Dims) -> Result<()> {
+    let want = [
+        IN_DIM * d.m,
+        d.m,
+        d.m * d.h,
+        d.h,
+        d.h * d.c,
+        d.c,
+    ];
+    if params.len() != 6 {
+        return Err(Error::Shape(format!("mlp expects 6 params, got {}", params.len())));
+    }
+    for (i, (p, &w)) in params.iter().zip(want.iter()).enumerate() {
+        if p.len() != w {
+            return Err(Error::Shape(format!(
+                "mlp param {i} has len {}, want {w}",
+                p.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Forward pass for a minibatch; returns (h1, mask1, h2, mask2, logits).
+fn forward(
+    params: &[Vec<f32>],
+    x: &[f32],
+    bsz: usize,
+    d: &Dims,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (w1, b1, w2, b2, w3, b3) = (
+        &params[0], &params[1], &params[2], &params[3], &params[4], &params[5],
+    );
+    let mut h1 = vec![0.0f32; bsz * d.m];
+    matmul(x, w1, &mut h1, bsz, IN_DIM, d.m);
+    for i in 0..bsz {
+        for j in 0..d.m {
+            h1[i * d.m + j] += b1[j];
+        }
+    }
+    let mask1 = relu_inplace(&mut h1);
+    let mut h2 = vec![0.0f32; bsz * d.h];
+    matmul(&h1, w2, &mut h2, bsz, d.m, d.h);
+    for i in 0..bsz {
+        for j in 0..d.h {
+            h2[i * d.h + j] += b2[j];
+        }
+    }
+    let mask2 = relu_inplace(&mut h2);
+    let mut logits = vec![0.0f32; bsz * d.c];
+    matmul(&h2, w3, &mut logits, bsz, d.h, d.c);
+    for i in 0..bsz {
+        for j in 0..d.c {
+            logits[i * d.c + j] += b3[j];
+        }
+    }
+    (h1, mask1, h2, mask2, logits)
+}
+
+/// params: [w1, b1, w2, b2, w3, b3]; batch: [x (s*mb*784) f32,
+/// y (s*mb) i32, wgt (s*mb) f32]. Returns 6 deltas (initial - final).
+#[allow(clippy::too_many_arguments)]
+pub fn mlp_client_update(
+    params: &[Vec<f32>],
+    batch: &[Buf],
+    m: usize,
+    h: usize,
+    c: usize,
+    steps: usize,
+    mb: usize,
+    lr: f32,
+) -> Result<Vec<Vec<f32>>> {
+    let d = Dims { m, h, c };
+    check_params(params, &d)?;
+    if batch.len() != 3 {
+        return Err(Error::Shape("mlp expects 3 batch bufs".into()));
+    }
+    let x = batch[0].as_f32()?;
+    let y = batch[1].as_i32()?;
+    let wgt = batch[2].as_f32()?;
+    if x.len() != steps * mb * IN_DIM || y.len() != steps * mb || wgt.len() != steps * mb {
+        return Err(Error::Shape("mlp batch sizes mismatch".into()));
+    }
+
+    let p0 = params.to_vec();
+    let mut p: Vec<Vec<f32>> = params.to_vec();
+    for s in 0..steps {
+        let xs = &x[s * mb * IN_DIM..(s + 1) * mb * IN_DIM];
+        let ys = &y[s * mb..(s + 1) * mb];
+        let ws = &wgt[s * mb..(s + 1) * mb];
+        let wsum: f32 = ws.iter().sum::<f32>().max(1.0);
+
+        let (h1, mask1, h2, mask2, mut logits) = forward(&p, xs, mb, &d);
+        // dlogits = (softmax - onehot) * w / wsum
+        log_softmax_rows(&mut logits, mb, c);
+        let mut dlogits = logits;
+        for i in 0..mb {
+            let f = ws[i] / wsum;
+            for j in 0..c {
+                let sm = dlogits[i * c + j].exp();
+                let oh = if ys[i] as usize == j { 1.0 } else { 0.0 };
+                dlogits[i * c + j] = (sm - oh) * f;
+            }
+        }
+        // grads layer 3
+        let mut dh2 = vec![0.0f32; mb * d.h];
+        matmul_b_t(&dlogits, &p[4], &mut dh2, mb, c, d.h);
+        for (v, msk) in dh2.iter_mut().zip(mask2.iter()) {
+            *v *= msk;
+        }
+        // grads layer 2
+        let mut dh1 = vec![0.0f32; mb * d.m];
+        matmul_b_t(&dh2, &p[2], &mut dh1, mb, d.h, d.m);
+        for (v, msk) in dh1.iter_mut().zip(mask1.iter()) {
+            *v *= msk;
+        }
+        // SGD updates (weights via xᵀ·g accumulation with -lr)
+        matmul_at_b(&h2, &dlogits, &mut p[4], mb, d.h, c, -lr);
+        for i in 0..mb {
+            for j in 0..c {
+                p[5][j] -= lr * dlogits[i * c + j];
+            }
+        }
+        matmul_at_b(&h1, &dh2, &mut p[2], mb, d.m, d.h, -lr);
+        for i in 0..mb {
+            for j in 0..d.h {
+                p[3][j] -= lr * dh2[i * d.h + j];
+            }
+        }
+        matmul_at_b(xs, &dh1, &mut p[0], mb, IN_DIM, d.m, -lr);
+        for i in 0..mb {
+            for j in 0..d.m {
+                p[1][j] -= lr * dh1[i * d.m + j];
+            }
+        }
+    }
+    Ok(p0
+        .iter()
+        .zip(p.iter())
+        .map(|(a, b)| a.iter().zip(b.iter()).map(|(x0, x1)| x0 - x1).collect())
+        .collect())
+}
+
+/// Full-model eval. Returns (loss_sum, weighted_correct, weight_sum).
+pub fn mlp_eval(
+    params: &[Vec<f32>],
+    batch: &[Buf],
+    m: usize,
+    h: usize,
+    c: usize,
+) -> Result<(f64, f64, f64)> {
+    let d = Dims { m, h, c };
+    check_params(params, &d)?;
+    let x = batch[0].as_f32()?;
+    let y = batch[1].as_i32()?;
+    let wgt = batch[2].as_f32()?;
+    let bsz = wgt.len();
+    if x.len() != bsz * IN_DIM || y.len() != bsz {
+        return Err(Error::Shape("mlp eval batch sizes".into()));
+    }
+    let (_, _, _, _, mut logits) = forward(&params.to_vec(), x, bsz, &d);
+    log_softmax_rows(&mut logits, bsz, c);
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut wsum = 0.0f64;
+    for i in 0..bsz {
+        let wi = wgt[i] as f64;
+        let row = &logits[i * c..(i + 1) * c];
+        let yi = y[i] as usize;
+        loss += -row[yi] as f64 * wi;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == yi {
+            correct += wi;
+        }
+        wsum += wi;
+    }
+    Ok((loss, correct, wsum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+    use crate::tensor::rng::Rng;
+
+    fn setup(m: usize, steps: usize, mb: usize, c: usize) -> (Vec<Vec<f32>>, Vec<Buf>) {
+        let mut rng = Rng::new(12, 0);
+        let arch = ModelArch::Mlp {
+            neurons: m,
+            hidden: 32,
+            classes: c,
+        };
+        let store = arch.init_store(&mut rng);
+        let params: Vec<Vec<f32>> = store.segments.into_iter().map(|s| s.data).collect();
+        let x: Vec<f32> = (0..steps * mb * IN_DIM).map(|_| rng.normal() * 0.5).collect();
+        let y: Vec<i32> = (0..steps * mb).map(|_| rng.below(c) as i32).collect();
+        let wgt = vec![1.0f32; steps * mb];
+        (params, vec![Buf::F32(x), Buf::I32(y), Buf::F32(wgt)])
+    }
+
+    #[test]
+    fn zero_lr_zero_delta() {
+        let (p, b) = setup(16, 2, 4, 5);
+        let d = mlp_client_update(&p, &b, 16, 32, 5, 2, 4, 0.0).unwrap();
+        assert!(d.iter().all(|t| t.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let (p, b) = setup(32, 4, 8, 4);
+        let eval_batch = vec![
+            Buf::F32(b[0].as_f32().unwrap().to_vec()),
+            Buf::I32(b[1].as_i32().unwrap().to_vec()),
+            Buf::F32(vec![1.0; 32]),
+        ];
+        let (l0, _, w0) = mlp_eval(&p, &eval_batch, 32, 32, 4).unwrap();
+        let d = mlp_client_update(&p, &b, 32, 32, 4, 4, 8, 0.1).unwrap();
+        let p1: Vec<Vec<f32>> = p
+            .iter()
+            .zip(d.iter())
+            .map(|(pp, dd)| pp.iter().zip(dd.iter()).map(|(a, x)| a - x).collect())
+            .collect();
+        let (l1, _, _) = mlp_eval(&p1, &eval_batch, 32, 32, 4).unwrap();
+        assert!(l1 / w0 < l0 / w0, "loss {l1} !< {l0}");
+    }
+
+    #[test]
+    fn eval_counts_are_bounded() {
+        let (p, _) = setup(16, 1, 1, 5);
+        let mut rng = Rng::new(3, 0);
+        let bsz = 10;
+        let x: Vec<f32> = (0..bsz * IN_DIM).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..bsz).map(|_| rng.below(5) as i32).collect();
+        let batch = vec![Buf::F32(x), Buf::I32(y), Buf::F32(vec![1.0; bsz])];
+        let (loss, correct, wsum) = mlp_eval(&p, &batch, 16, 32, 5).unwrap();
+        assert!(loss > 0.0);
+        assert!(correct >= 0.0 && correct <= wsum);
+        assert_eq!(wsum, 10.0);
+    }
+
+    #[test]
+    fn gradient_check_single_step_full_batch() {
+        // numeric gradient of the loss wrt one w3 entry ≈ delta / lr
+        let (p, b) = setup(8, 1, 4, 3);
+        let lr = 1e-3f32;
+        let d = mlp_client_update(&p, &b, 8, 32, 3, 1, 4, lr).unwrap();
+        // loss fn on the same single minibatch
+        let loss_of = |params: &[Vec<f32>]| -> f64 {
+            let eb = vec![
+                Buf::F32(b[0].as_f32().unwrap().to_vec()),
+                Buf::I32(b[1].as_i32().unwrap().to_vec()),
+                Buf::F32(vec![1.0; 4]),
+            ];
+            let (l, _, w) = mlp_eval(params, &eb, 8, 32, 3).unwrap();
+            l / w
+        };
+        let eps = 1e-3f32;
+        for &idx in &[0usize, 17, 40] {
+            let mut pp = p.clone();
+            pp[4][idx] += eps;
+            let lp = loss_of(&pp);
+            pp[4][idx] -= 2.0 * eps;
+            let lm = loss_of(&pp);
+            let num_grad = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let ana_grad = d[4][idx] / lr;
+            assert!(
+                (num_grad - ana_grad).abs() < 2e-2 * (1.0 + num_grad.abs()),
+                "idx {idx}: numeric {num_grad} vs analytic {ana_grad}"
+            );
+        }
+    }
+}

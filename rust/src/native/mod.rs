@@ -1,0 +1,114 @@
+//! Pure-Rust compute engine mirroring the L2 JAX math.
+//!
+//! Two roles:
+//!
+//! 1. **Test oracle** — `rust/tests/pjrt_parity.rs` asserts the PJRT path
+//!    (AOT artifacts) and this implementation agree to float tolerance on
+//!    identical inputs, pinning the cross-language numeric contract.
+//! 2. **Fast sweep engine** — the logreg/MLP experiment grids can run
+//!    without artifacts (`--engine native`), useful for CI and for the
+//!    criterion benches that isolate coordinator overhead from XLA.
+//!
+//! Supports the logreg and 2NN families (training + eval). The CNN and
+//! transformer families are PJRT-only by design: their client updates run
+//! through the compiled artifacts (conv/attention backward is exactly what
+//! we delegate to XLA), and the native engine returns a descriptive error.
+//!
+//! The math matches `python/compile/model.py` op-for-op: one epoch of
+//! minibatch SGD over `[steps, mb, ...]` batches, weighted losses with the
+//! `max(Σw, 1)` padding guard, delta = initial − final.
+
+mod logreg;
+mod mlp;
+
+pub use logreg::{logreg_client_update, logreg_eval};
+pub use mlp::{mlp_client_update, mlp_eval};
+
+use crate::error::{Error, Result};
+use crate::model::ModelArch;
+
+/// Raw engine input buffer (matches artifact input dtypes).
+#[derive(Clone, Debug)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buf::F32(v) => Ok(v),
+            Buf::I32(_) => Err(Error::Shape("expected f32 buffer, got i32".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Buf::I32(v) => Ok(v),
+            Buf::F32(_) => Err(Error::Shape("expected i32 buffer, got f32".into())),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// Native client-update dispatch (slices in artifact parameter order,
+/// batch in artifact batch order).
+pub fn client_update(
+    arch: &ModelArch,
+    ms: &[usize],
+    params: &[Vec<f32>],
+    batch: &[Buf],
+    lr: f32,
+) -> Result<Vec<Vec<f32>>> {
+    match arch {
+        ModelArch::Logreg { tags, .. } => {
+            let b = arch.cu_batch();
+            logreg_client_update(params, batch, ms[0], *tags, b.steps, b.mb, lr)
+        }
+        ModelArch::Mlp {
+            hidden, classes, ..
+        } => {
+            let b = arch.cu_batch();
+            mlp_client_update(params, batch, ms[0], *hidden, *classes, b.steps, b.mb, lr)
+        }
+        other => Err(Error::Artifact(format!(
+            "native engine does not implement {other:?} client updates; \
+             build artifacts and use the PJRT engine"
+        ))),
+    }
+}
+
+/// Native eval dispatch over one padded eval batch.
+/// Returns (loss_sum, metric_sum, weight_sum).
+pub fn eval(
+    arch: &ModelArch,
+    params: &[Vec<f32>],
+    batch: &[Buf],
+) -> Result<(f64, f64, f64)> {
+    match arch {
+        ModelArch::Logreg { vocab, tags } => logreg_eval(params, batch, *vocab, *tags),
+        ModelArch::Mlp {
+            neurons,
+            hidden,
+            classes,
+        } => mlp_eval(params, batch, *neurons, *hidden, *classes),
+        other => Err(Error::Artifact(format!(
+            "native engine does not implement {other:?} eval; \
+             build artifacts and use the PJRT engine"
+        ))),
+    }
+}

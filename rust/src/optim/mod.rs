@@ -1,0 +1,302 @@
+//! Server optimizers (Reddi et al. 2021; paper §2.2/§5.1).
+//!
+//! The aggregated client delta `u` is treated as a pseudo-gradient of the
+//! server model: `x ← ServerUpdate(x, u)`. SGD at the server with η = 1
+//! recovers FedAvg; Adagrad/Adam give FedAdagrad/FedAdam (the optimizers
+//! §5.2/§5.4 use). Yogi is included as the paper-adjacent extension from the
+//! same work.
+
+use crate::model::ParamStore;
+
+/// Server optimizer configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServerOpt {
+    Sgd { lr: f32, momentum: f32 },
+    Adagrad { lr: f32, eps: f32 },
+    Adam { lr: f32, b1: f32, b2: f32, eps: f32 },
+    Yogi { lr: f32, b1: f32, b2: f32, eps: f32 },
+}
+
+impl ServerOpt {
+    pub fn fedavg(lr: f32) -> Self {
+        ServerOpt::Sgd { lr, momentum: 0.0 }
+    }
+
+    pub fn fedadagrad(lr: f32) -> Self {
+        ServerOpt::Adagrad { lr, eps: 1e-3 }
+    }
+
+    pub fn fedadam(lr: f32) -> Self {
+        ServerOpt::Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.99,
+            eps: 1e-3,
+        }
+    }
+
+    pub fn fedyogi(lr: f32) -> Self {
+        ServerOpt::Yogi {
+            lr,
+            b1: 0.9,
+            b2: 0.99,
+            eps: 1e-3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServerOpt::Sgd { .. } => "fedavg",
+            ServerOpt::Adagrad { .. } => "fedadagrad",
+            ServerOpt::Adam { .. } => "fedadam",
+            ServerOpt::Yogi { .. } => "fedyogi",
+        }
+    }
+}
+
+impl std::str::FromStr for ServerOpt {
+    type Err = String;
+
+    /// "fedavg:1.0" / "fedadagrad:0.1" / "fedadam:0.01" / "fedyogi:0.01"
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (kind, lr) = s.split_once(':').unwrap_or((s, "1.0"));
+        let lr: f32 = lr.parse().map_err(|e| format!("bad lr in {s:?}: {e}"))?;
+        match kind {
+            "fedavg" | "sgd" => Ok(ServerOpt::fedavg(lr)),
+            "fedadagrad" | "adagrad" => Ok(ServerOpt::fedadagrad(lr)),
+            "fedadam" | "adam" => Ok(ServerOpt::fedadam(lr)),
+            "fedyogi" | "yogi" => Ok(ServerOpt::fedyogi(lr)),
+            other => Err(format!("unknown server optimizer {other:?}")),
+        }
+    }
+}
+
+/// Stateful optimizer instance bound to one model.
+pub struct Optimizer {
+    pub opt: ServerOpt,
+    m: Option<ParamStore>,
+    v: Option<ParamStore>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(opt: ServerOpt, store: &ParamStore) -> Self {
+        let needs_m = matches!(opt, ServerOpt::Adam { .. } | ServerOpt::Yogi { .. })
+            || matches!(opt, ServerOpt::Sgd { momentum, .. } if momentum != 0.0);
+        let needs_v = matches!(
+            opt,
+            ServerOpt::Adagrad { .. } | ServerOpt::Adam { .. } | ServerOpt::Yogi { .. }
+        );
+        Optimizer {
+            opt,
+            m: needs_m.then(|| store.zeros_like()),
+            v: needs_v.then(|| store.zeros_like()),
+            t: 0,
+        }
+    }
+
+    /// Optimizer state memory in bytes (server memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.m.as_ref().map_or(0, |s| s.bytes()) + self.v.as_ref().map_or(0, |s| s.bytes())
+    }
+
+    /// Apply one server update: `x ← x - step(u)`.
+    pub fn step(&mut self, store: &mut ParamStore, update: &ParamStore) {
+        self.t += 1;
+        match self.opt {
+            ServerOpt::Sgd { lr, momentum } => {
+                if momentum != 0.0 {
+                    let mstore = self.m.as_mut().expect("momentum state");
+                    for ((xs, us), ms) in store
+                        .segments
+                        .iter_mut()
+                        .zip(update.segments.iter())
+                        .zip(mstore.segments.iter_mut())
+                    {
+                        for ((x, &u), mm) in
+                            xs.data.iter_mut().zip(us.data.iter()).zip(ms.data.iter_mut())
+                        {
+                            *mm = momentum * *mm + u;
+                            *x -= lr * *mm;
+                        }
+                    }
+                } else {
+                    for (xs, us) in store.segments.iter_mut().zip(update.segments.iter()) {
+                        for (x, &u) in xs.data.iter_mut().zip(us.data.iter()) {
+                            *x -= lr * u;
+                        }
+                    }
+                }
+            }
+            ServerOpt::Adagrad { lr, eps } => {
+                let vstore = self.v.as_mut().expect("adagrad state");
+                for ((xs, us), vs) in store
+                    .segments
+                    .iter_mut()
+                    .zip(update.segments.iter())
+                    .zip(vstore.segments.iter_mut())
+                {
+                    for ((x, &u), vv) in
+                        xs.data.iter_mut().zip(us.data.iter()).zip(vs.data.iter_mut())
+                    {
+                        *vv += u * u;
+                        *x -= lr * u / (vv.sqrt() + eps);
+                    }
+                }
+            }
+            ServerOpt::Adam { lr, b1, b2, eps } => {
+                let t = self.t as i32;
+                let bc1 = 1.0 - b1.powi(t);
+                let bc2 = 1.0 - b2.powi(t);
+                let mstore = self.m.as_mut().expect("adam m");
+                let vstore = self.v.as_mut().expect("adam v");
+                for (((xs, us), ms), vs) in store
+                    .segments
+                    .iter_mut()
+                    .zip(update.segments.iter())
+                    .zip(mstore.segments.iter_mut())
+                    .zip(vstore.segments.iter_mut())
+                {
+                    for (((x, &u), mm), vv) in xs
+                        .data
+                        .iter_mut()
+                        .zip(us.data.iter())
+                        .zip(ms.data.iter_mut())
+                        .zip(vs.data.iter_mut())
+                    {
+                        *mm = b1 * *mm + (1.0 - b1) * u;
+                        *vv = b2 * *vv + (1.0 - b2) * u * u;
+                        let mhat = *mm / bc1;
+                        let vhat = *vv / bc2;
+                        *x -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+            ServerOpt::Yogi { lr, b1, b2, eps } => {
+                let t = self.t as i32;
+                let bc1 = 1.0 - b1.powi(t);
+                let bc2 = 1.0 - b2.powi(t);
+                let mstore = self.m.as_mut().expect("yogi m");
+                let vstore = self.v.as_mut().expect("yogi v");
+                for (((xs, us), ms), vs) in store
+                    .segments
+                    .iter_mut()
+                    .zip(update.segments.iter())
+                    .zip(mstore.segments.iter_mut())
+                    .zip(vstore.segments.iter_mut())
+                {
+                    for (((x, &u), mm), vv) in xs
+                        .data
+                        .iter_mut()
+                        .zip(us.data.iter())
+                        .zip(ms.data.iter_mut())
+                        .zip(vs.data.iter_mut())
+                    {
+                        *mm = b1 * *mm + (1.0 - b1) * u;
+                        let u2 = u * u;
+                        *vv -= (1.0 - b2) * u2 * (*vv - u2).signum();
+                        let mhat = *mm / bc1;
+                        let vhat = *vv / bc2;
+                        *x -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ParamStore, Segment};
+
+    fn store(vals: &[f32]) -> ParamStore {
+        ParamStore {
+            segments: vec![Segment {
+                name: "w".into(),
+                shape: vec![vals.len()],
+                data: vals.to_vec(),
+            }],
+        }
+    }
+
+    #[test]
+    fn sgd_step_is_x_minus_lr_u() {
+        let mut x = store(&[1.0, 2.0]);
+        let u = store(&[0.5, -0.5]);
+        let mut opt = Optimizer::new(ServerOpt::fedavg(1.0), &x);
+        opt.step(&mut x, &u);
+        assert_eq!(x.segments[0].data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut x = store(&[0.0]);
+        let u = store(&[1.0]);
+        let mut opt = Optimizer::new(
+            ServerOpt::Sgd {
+                lr: 1.0,
+                momentum: 0.5,
+            },
+            &x,
+        );
+        opt.step(&mut x, &u); // m=1, x=-1
+        opt.step(&mut x, &u); // m=1.5, x=-2.5
+        assert!((x.segments[0].data[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr() {
+        let mut x = store(&[0.0]);
+        let u = store(&[1.0]);
+        let mut opt = Optimizer::new(ServerOpt::fedadagrad(1.0), &x);
+        opt.step(&mut x, &u);
+        let d1 = -x.segments[0].data[0];
+        let before = x.segments[0].data[0];
+        opt.step(&mut x, &u);
+        let d2 = before - x.segments[0].data[0];
+        assert!(d2 < d1, "second step {d2} should be smaller than first {d1}");
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        let mut x = store(&[0.0]);
+        let u = store(&[0.3]);
+        let mut opt = Optimizer::new(ServerOpt::fedadam(0.1), &x);
+        opt.step(&mut x, &u);
+        // bias-corrected first step ≈ lr * sign(u)
+        let step = -x.segments[0].data[0];
+        assert!((step - 0.1).abs() < 0.04, "step {step}");
+    }
+
+    #[test]
+    fn yogi_moves_toward_gradient() {
+        let mut x = store(&[1.0]);
+        let u = store(&[1.0]);
+        let mut opt = Optimizer::new(ServerOpt::fedyogi(0.1), &x);
+        for _ in 0..5 {
+            opt.step(&mut x, &u);
+        }
+        assert!(x.segments[0].data[0] < 1.0);
+    }
+
+    #[test]
+    fn zero_update_is_a_fixed_point_for_sgd_and_adagrad() {
+        for opt_cfg in [ServerOpt::fedavg(1.0), ServerOpt::fedadagrad(0.1)] {
+            let mut x = store(&[3.0, -4.0]);
+            let u = store(&[0.0, 0.0]);
+            let mut opt = Optimizer::new(opt_cfg, &x);
+            opt.step(&mut x, &u);
+            assert_eq!(x.segments[0].data, vec![3.0, -4.0]);
+        }
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!(
+            "fedadam:0.01".parse::<ServerOpt>().unwrap().name(),
+            "fedadam"
+        );
+        assert!("nope:1".parse::<ServerOpt>().is_err());
+    }
+}

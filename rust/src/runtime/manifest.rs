@@ -1,0 +1,202 @@
+//! `artifacts/manifest.json` schema — the cross-language shape contract
+//! written by `python/compile/aot.py`. Parsed with the crate's own JSON
+//! parser (offline build; see Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: String,
+    pub model: String,
+    pub kind: String,
+    pub meta: Json,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub hlo_sha256: String,
+}
+
+impl Artifact {
+    /// Fetch an integer meta field (e.g. "m", "t", "vocab").
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// Parsed manifest with name lookup.
+#[derive(Debug)]
+pub struct Manifest {
+    pub version: u32,
+    by_name: HashMap<String, Artifact>,
+}
+
+fn io_spec(j: &Json, what: &str) -> Result<IoSpec> {
+    let err = |m: &str| Error::Artifact(format!("manifest {what}: {m}"));
+    Ok(IoSpec {
+        name: j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err("missing name"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| err("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| err("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?,
+        dtype: j
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err("missing dtype"))?
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?}: {e}. Run `make artifacts` first."
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(Error::Json)?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::Artifact("manifest missing version".into()))?
+            as u32;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?;
+        let mut by_name = HashMap::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+                .to_string();
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::Artifact(format!("artifact {name}: missing {k}")))
+            };
+            let ios = |k: &str| -> Result<Vec<IoSpec>> {
+                a.get(k)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::Artifact(format!("artifact {name}: missing {k}")))?
+                    .iter()
+                    .map(|x| io_spec(x, &name))
+                    .collect()
+            };
+            let art = Artifact {
+                path: get_str("path")?,
+                model: get_str("model")?,
+                kind: get_str("kind")?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                inputs: ios("inputs")?,
+                outputs: ios("outputs")?,
+                hlo_sha256: get_str("hlo_sha256").unwrap_or_default(),
+                name: name.clone(),
+            };
+            for io in art.inputs.iter().chain(art.outputs.iter()) {
+                if io.dtype != "f32" && io.dtype != "i32" {
+                    return Err(Error::Artifact(format!(
+                        "artifact {name}: unsupported dtype {}",
+                        io.dtype
+                    )));
+                }
+            }
+            by_name.insert(name, art);
+        }
+        Ok(Manifest { version, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.by_name.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "artifact {name:?} not in manifest ({} available); \
+                 re-run `make artifacts`",
+                self.by_name.len()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_name.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "logreg_cu_m64", "path": "logreg_cu_m64.hlo.txt",
+         "model": "logreg", "kind": "client_update",
+         "meta": {"m": 64, "t": 50},
+         "inputs": [{"name": "w", "shape": [64, 50], "dtype": "f32"},
+                    {"name": "lr", "shape": [], "dtype": "f32"}],
+         "outputs": [{"name": "dw", "shape": [64, 50], "dtype": "f32"}],
+         "hlo_sha256": "abc"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("logreg_cu_m64").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![64, 50]);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.meta_usize("m"), Some(64));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//!
+//! * artifacts are HLO **text** (xla_extension 0.5.1 rejects jax≥0.5
+//!   serialized protos with 64-bit instruction ids; the text parser
+//!   reassigns ids — see /opt/xla-example/README.md),
+//! * `manifest.json` pins argument order, shapes and dtypes per artifact,
+//! * outputs are a tuple (lowered with `return_tuple=True`).
+//!
+//! Executables are compiled lazily on first use and cached for the life of
+//! the process — one compiled executable per model variant.
+
+pub mod manifest;
+
+pub use manifest::{Artifact, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::native::Buf;
+
+/// A PJRT CPU runtime bound to an artifacts directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions served, per artifact (perf accounting)
+    exec_counts: HashMap<String, u64>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = self.manifest.get(name)?;
+        let path = self.dir.join(&art.path);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with inputs given as raw buffers in manifest order.
+    /// Returns output buffers in manifest output order.
+    pub fn execute(&mut self, name: &str, inputs: &[Buf]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let art = self.manifest.get(name)?.clone();
+        if inputs.len() != art.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(art.inputs.iter()) {
+            literals.push(to_literal(buf, spec)?);
+        }
+        let exe = self.cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != art.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: expected {} outputs, got {}",
+                art.outputs.len(),
+                parts.len()
+            )));
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for (p, spec) in parts.into_iter().zip(art.outputs.iter()) {
+            let n: usize = spec.shape.iter().product::<usize>().max(1);
+            let v = if p.element_count() == 1 && spec.shape.is_empty() {
+                vec![p.get_first_element::<f32>()?]
+            } else {
+                p.to_vec::<f32>()?
+            };
+            if v.len() != n {
+                return Err(Error::Shape(format!(
+                    "{name} output {}: got {} elements, want {n}",
+                    spec.name,
+                    v.len()
+                )));
+            }
+            vecs.push(v);
+        }
+        Ok(vecs)
+    }
+
+    /// Executions served per artifact so far.
+    pub fn exec_counts(&self) -> &HashMap<String, u64> {
+        &self.exec_counts
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn to_literal(buf: &Buf, spec: &IoSpec) -> Result<xla::Literal> {
+    let n: usize = spec.shape.iter().product::<usize>().max(1);
+    if buf.len() != n {
+        return Err(Error::Shape(format!(
+            "input {}: got {} elements, want {n} (shape {:?})",
+            spec.name,
+            buf.len(),
+            spec.shape
+        )));
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (buf, spec.dtype.as_str()) {
+        (Buf::F32(v), "f32") => {
+            if spec.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        }
+        (Buf::I32(v), "i32") => {
+            if spec.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        }
+        (b, dt) => {
+            return Err(Error::Shape(format!(
+                "input {}: buffer kind {:?} does not match manifest dtype {dt}",
+                spec.name,
+                match b {
+                    Buf::F32(_) => "f32",
+                    Buf::I32(_) => "i32",
+                }
+            )))
+        }
+    };
+    Ok(lit)
+}

@@ -1,0 +1,12 @@
+//! Minimal numeric substrate: deterministic RNG and dense f32 ops.
+//!
+//! Everything the native engine and the synthetic data generators need,
+//! without pulling in an external linear-algebra dependency. Matrices are
+//! row-major `Vec<f32>` with explicit dimensions, matching the layouts the
+//! AOT artifacts use.
+
+pub mod ops;
+pub mod rng;
+
+pub use ops::*;
+pub use rng::Rng;

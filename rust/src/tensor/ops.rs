@@ -1,0 +1,206 @@
+//! Dense f32 matrix/vector ops for the native engine (row-major layout).
+//!
+//! These mirror the JAX math exactly (same reduction order per row where it
+//! matters for the parity tests' tolerances) and are the only linear algebra
+//! the coordinator itself needs — the heavy path goes through PJRT.
+
+/// C[m,n] = A[m,k] @ B[k,n] (row-major). `c` is overwritten.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse BOW rows are mostly zero
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += alpha * A^T[m,k']... specifically: C[k,n] += alpha * A[m,k]^T @ B[m,n].
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, alpha: f32) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[l * n..(l + 1) * n];
+            let f = alpha * av;
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += f * bv;
+            }
+        }
+    }
+}
+
+/// C[m,k] = A[m,n] @ B[k,n]^T.
+pub fn matmul_b_t(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for j in 0..k {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for l in 0..n {
+                acc += arow[l] * brow[l];
+            }
+            c[i * k + j] = acc;
+        }
+    }
+}
+
+/// y += x elementwise.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x.iter()) {
+        *a += b;
+    }
+}
+
+/// y -= alpha * x elementwise.
+pub fn axpy_neg(y: &mut [f32], x: &[f32], alpha: f32) {
+    assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x.iter()) {
+        *a -= alpha * b;
+    }
+}
+
+/// In-place ReLU; returns a 0/1 activation mask for the backward pass.
+pub fn relu_inplace(x: &mut [f32]) -> Vec<f32> {
+    let mut mask = vec![0.0f32; x.len()];
+    for (v, m) in x.iter_mut().zip(mask.iter_mut()) {
+        if *v > 0.0 {
+            *m = 1.0;
+        } else {
+            *v = 0.0;
+        }
+    }
+    mask
+}
+
+/// Row-wise log-softmax over an [m, n] matrix, in place.
+pub fn log_softmax_rows(x: &mut [f32], m: usize, n: usize) {
+    assert_eq!(x.len(), m * n);
+    for i in 0..m {
+        let row = &mut x[i * n..(i + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut lse = 0.0f32;
+        for v in row.iter() {
+            lse += (v - max).exp();
+        }
+        let lse = lse.ln() + max;
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// Numerically-stable sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Stable elementwise BCE-with-logits: max(z,0) - z*y + log1p(exp(-|z|)).
+pub fn bce_with_logits(z: f32, y: f32) -> f32 {
+    z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()
+}
+
+/// Indices of the k largest values (ties broken by lower index first).
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    let k = k.min(x.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        x[b].partial_cmp(&x[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut top = idx[..k].to_vec();
+    top.sort_by(|&a, &b| x[b].partial_cmp(&x[a]).unwrap().then(a.cmp(&b)));
+    top
+}
+
+/// L2 norm.
+pub fn l2(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, a);
+        let mut c2 = [0.0; 4];
+        matmul_b_t(&a, &b, &mut c2, 2, 2, 2);
+        assert_eq!(c2, a);
+    }
+
+    #[test]
+    fn matmul_at_b_is_transpose_product() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3,2]
+        let b = [1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0]; // [3,3]
+        let mut c = vec![0.0; 2 * 3];
+        matmul_at_b(&a, &b, &mut c, 3, 2, 3, 1.0);
+        // A^T @ B: row0 = [1,3,5]·cols => [1*1+3*2+5*3, ...] = [22,22,22]
+        assert_eq!(&c[..3], &[22.0, 22.0, 22.0]);
+        assert_eq!(&c[3..], &[28.0, 28.0, 28.0]);
+    }
+
+    #[test]
+    fn log_softmax_rows_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        log_softmax_rows(&mut x, 2, 3);
+        for i in 0..2 {
+            let s: f32 = x[i * 3..(i + 1) * 3].iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let x = [0.1, 5.0, 3.0, 4.0, 2.0];
+        assert_eq!(top_k_indices(&x, 3), vec![1, 3, 2]);
+        assert_eq!(top_k_indices(&x, 10).len(), 5);
+    }
+
+    #[test]
+    fn bce_matches_naive_in_stable_region() {
+        for &(z, y) in &[(0.3f32, 1.0f32), (-0.7, 0.0), (2.0, 1.0)] {
+            let p = sigmoid(z);
+            let naive = -(y * p.ln() + (1.0 - y) * (1.0 - p).ln());
+            assert!((bce_with_logits(z, y) - naive).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_mask() {
+        let mut x = vec![-1.0, 2.0, 0.0, 3.0];
+        let m = relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(m, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny `--flag value` argument parser (offline substitute for clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a leading
+//! subcommand word. Unknown flags are an error (catches typos in sweeps).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (not including argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut it = raw.into_iter().peekable();
+        let mut a = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                a.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                a.flags.insert(stripped.to_string(), it.next().unwrap());
+            } else {
+                a.flags.insert(stripped.to_string(), "true".to_string());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| format!("bad value for --{key}: {e}")),
+        }
+    }
+
+    /// Error on any flag never queried (typo detection). Call last.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--rounds", "20", "--quick", "--m=64"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.parse_or("rounds", 0usize).unwrap(), 20);
+        assert!(a.flag("quick"));
+        assert_eq!(a.str_or("m", "0"), "64");
+        assert_eq!(a.parse_or("missing", 5usize).unwrap(), 5);
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let a = parse(&["--oops", "1"]);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn positional_after_flags_is_error() {
+        assert!(Args::parse(vec!["--a".into(), "--b".into(), "stray2".into(),]).is_ok());
+        assert!(Args::parse(vec!["cmd".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_numeric_is_error() {
+        let a = parse(&["--rounds", "abc"]);
+        assert!(a.parse_or("rounds", 0usize).is_err());
+    }
+}

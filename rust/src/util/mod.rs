@@ -1,0 +1,5 @@
+//! Small self-contained utilities (the offline build ships its own JSON and
+//! CLI parsing — see Cargo.toml).
+
+pub mod cli;
+pub mod json;

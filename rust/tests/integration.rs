@@ -1,0 +1,179 @@
+//! Integration tests across modules: end-to-end tiny training runs on the
+//! native engine, slice-service interchangeability at the Trainer level,
+//! failure injection, baselines, and the experiment harness's quick paths.
+
+use fedselect::baselines::{federated_dropout, full_broadcast};
+use fedselect::config::{DatasetConfig, EngineKind, TrainConfig};
+use fedselect::coordinator::{build_dataset, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::data::images::ImageConfig;
+use fedselect::fedselect::{KeyPolicy, SliceImpl};
+use fedselect::optim::ServerOpt;
+
+fn logreg_cfg(vocab: usize, m: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(vocab, m);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(40, 6, 10));
+    cfg.rounds = 8;
+    cfg.cohort = 10;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 512;
+    cfg
+}
+
+#[test]
+fn logreg_fedselect_learns() {
+    let mut tr = Trainer::new(logreg_cfg(512, 64)).unwrap();
+    let before = tr.evaluate().unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_eval.metric > before.metric + 0.05);
+    assert!(report.final_eval.loss < before.loss);
+}
+
+#[test]
+fn mlp_random_keys_learn() {
+    let mut cfg = TrainConfig::mlp_default(50);
+    cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(30, 8));
+    cfg.rounds = 10;
+    cfg.cohort = 8;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 512;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let before = tr.evaluate().unwrap();
+    let report = tr.run().unwrap();
+    assert!(
+        report.final_eval.metric > before.metric,
+        "{} !> {}",
+        report.final_eval.metric,
+        before.metric
+    );
+}
+
+#[test]
+fn slice_impls_identical_training_through_trainer() {
+    let mut finals = Vec::new();
+    for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+        let mut cfg = logreg_cfg(256, 32);
+        cfg.rounds = 3;
+        cfg.slice_impl = imp;
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        finals.push(report.final_eval.loss);
+    }
+    assert!((finals[0] - finals[1]).abs() < 1e-9);
+    assert!((finals[1] - finals[2]).abs() < 1e-9);
+}
+
+#[test]
+fn broadcast_downloads_more_than_selection() {
+    let mut sel = logreg_cfg(512, 32);
+    sel.rounds = 2;
+    let rep_sel = Trainer::new(sel.clone()).unwrap().run().unwrap();
+    let rep_bc = Trainer::new(full_broadcast(sel)).unwrap().run().unwrap();
+    assert!(rep_bc.total_down_bytes > 4 * rep_sel.total_down_bytes);
+    assert!((rep_bc.rel_model_size - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn federated_dropout_baseline_runs() {
+    let mut cfg = TrainConfig::mlp_default(50);
+    cfg.dataset = DatasetConfig::Image(ImageConfig::new(62).with_clients(16, 4));
+    cfg.rounds = 3;
+    cfg.cohort = 5;
+    cfg.eval.every = 0;
+    let report = Trainer::new(federated_dropout(cfg)).unwrap().run().unwrap();
+    assert!(report.final_eval.metric >= 0.0);
+}
+
+#[test]
+fn dropout_injection_still_converges() {
+    let mut cfg = logreg_cfg(256, 32);
+    cfg.dropout_rate = 0.3;
+    cfg.rounds = 8;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let before = tr.evaluate().unwrap();
+    let report = tr.run().unwrap();
+    let total_dropped: usize = report.rounds.iter().map(|r| r.dropped).sum();
+    assert!(total_dropped > 0, "no dropouts injected");
+    assert!(report.final_eval.loss < before.loss);
+}
+
+#[test]
+fn per_coord_mean_also_learns() {
+    let mut cfg = logreg_cfg(256, 32);
+    cfg.agg = fedselect::aggregation::AggMode::PerCoordMean;
+    cfg.server_opt = ServerOpt::fedadagrad(0.05);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let before = tr.evaluate().unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_eval.loss < before.loss);
+}
+
+#[test]
+fn key_policy_top_beats_random_local_early() {
+    // the Fig. 4 shape: Top strictly dominates Random in early rounds
+    let ds = BowConfig::new(1024, 50).with_clients(60, 6, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds.clone()));
+    let mut run_with = |pol: KeyPolicy| {
+        let mut cfg = logreg_cfg(1024, 64);
+        cfg.dataset = DatasetConfig::Bow(ds.clone());
+        cfg.policies = vec![pol];
+        cfg.rounds = 6;
+        Trainer::with_dataset(cfg, dataset.clone())
+            .unwrap()
+            .run()
+            .unwrap()
+            .final_eval
+            .metric
+    };
+    let top = run_with(KeyPolicy::TopFreq { m: 64 });
+    let rand = run_with(KeyPolicy::RandomLocal { m: 64 });
+    assert!(
+        top >= rand - 0.02,
+        "Top ({top}) should not lose to RandomLocal ({rand}) early"
+    );
+}
+
+#[test]
+fn pregen_ledger_shows_amortization() {
+    let mut cfg = logreg_cfg(512, 64);
+    cfg.rounds = 1;
+    cfg.cohort = 12;
+    cfg.slice_impl = SliceImpl::PregenCdn;
+    let mut tr = Trainer::new(cfg.clone()).unwrap();
+    let rec = tr.run_round().unwrap();
+    // pre-generation computed each key exactly once...
+    assert_eq!(rec.comm.pregen_slices, 512);
+    assert_eq!(rec.comm.psi_evals, 512);
+    // ...while on-demand computes at most (distinct keys requested)
+    cfg.slice_impl = SliceImpl::OnDemand;
+    let mut tr2 = Trainer::new(cfg).unwrap();
+    let rec2 = tr2.run_round().unwrap();
+    assert!(rec2.comm.psi_evals + rec2.comm.cache_hits >= 12 * 64 - 64);
+    assert!(rec2.comm.psi_evals <= 512);
+}
+
+#[test]
+fn trainer_rejects_invalid_configs() {
+    let mut cfg = logreg_cfg(256, 32);
+    cfg.rounds = 0;
+    assert!(Trainer::new(cfg).is_err());
+    let mut cfg = TrainConfig::cnn_default(16);
+    cfg.engine = EngineKind::Native;
+    assert!(Trainer::new(cfg).is_err());
+}
+
+#[test]
+fn experiments_quick_native_subset() {
+    use fedselect::experiments::{run, ExpOptions};
+    let mut opts = ExpOptions::new(true, EngineKind::Native);
+    opts.out_dir = std::env::temp_dir()
+        .join("fedselect_it_results")
+        .to_string_lossy()
+        .into_owned();
+    // native-only quick experiments (CNN/transformer arms need artifacts and
+    // are covered by pjrt_parity.rs when available)
+    for id in ["table1", "fig4", "table3"] {
+        let tables = run(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!tables.is_empty(), "{id}");
+        assert!(!tables[0].rows.is_empty(), "{id}");
+    }
+}

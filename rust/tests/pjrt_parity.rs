@@ -1,0 +1,238 @@
+//! PJRT <-> native parity: the cross-language numeric contract.
+//!
+//! These tests load the AOT artifacts (HLO text lowered from the JAX models,
+//! with the Pallas kernels inside) and assert that, on identical inputs, the
+//! compiled XLA executables and the pure-Rust mirrors produce the same
+//! client-update deltas and eval metrics to float tolerance.
+//!
+//! All tests skip (pass trivially, with a stderr note) when `artifacts/`
+//! has not been built — run `make artifacts` for full coverage.
+
+use fedselect::clients::{build_cu_batch, build_eval_batches, Engine};
+use fedselect::config::{DatasetConfig, EngineKind, TrainConfig};
+use fedselect::coordinator::{build_dataset, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::KeyPolicy;
+use fedselect::model::ModelArch;
+use fedselect::native::Buf;
+use fedselect::runtime::PjrtRuntime;
+use fedselect::tensor::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("FEDSELECT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[pjrt_parity] {dir}/manifest.json missing — skipping (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_every_experiment_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    for name in [
+        "logreg_cu_m64",
+        "logreg_cu_m1024",
+        "logreg_eval_n512",
+        "logreg_eval_n8192",
+        "mlp_cu_m10",
+        "mlp_cu_m200",
+        "mlp_eval",
+        "cnn_cu_m4",
+        "cnn_cu_m64",
+        "cnn_eval",
+        "tf_cu_v2048_h512",
+        "tf_eval",
+        "e2e_cu",
+        "e2e_eval",
+    ] {
+        rt.artifact(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn logreg_client_update_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(31, 0);
+    let arch = ModelArch::logreg(512);
+    let store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let ds = build_dataset(&DatasetConfig::Bow(
+        BowConfig::new(512, 50).with_clients(4, 0, 0),
+    ));
+    let client = &ds.train[0];
+    let keys = vec![KeyPolicy::TopFreq { m: 64 }.keys_for(client, 512, &mut rng, None, false)];
+    let slices = spec.slice(&store, &keys).unwrap();
+    let (batch, _) = build_cu_batch(&arch, client, &keys, &mut rng).unwrap();
+
+    let mut native = Engine::Native;
+    let d_native = native
+        .client_update(&arch, &[64], slices.clone(), &batch, 0.3)
+        .unwrap();
+    let mut pjrt = Engine::Pjrt(Box::new(PjrtRuntime::load(&dir).unwrap()));
+    let d_pjrt = pjrt
+        .client_update(&arch, &[64], slices, &batch, 0.3)
+        .unwrap();
+
+    assert_eq!(d_native.len(), d_pjrt.len());
+    for (i, (a, b)) in d_native.iter().zip(d_pjrt.iter()).enumerate() {
+        assert_eq!(a.len(), b.len(), "output {i} len");
+        for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4 + 1e-3 * x.abs(),
+                "output {i}[{j}]: native {x} vs pjrt {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn logreg_eval_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(33, 0);
+    let arch = ModelArch::logreg(512);
+    let store = arch.init_store(&mut rng);
+    let ds = build_dataset(&DatasetConfig::Bow(
+        BowConfig::new(512, 50).with_clients(4, 0, 4),
+    ));
+    let pool: Vec<&fedselect::data::Example> = ds
+        .test
+        .iter()
+        .flat_map(|c| c.examples.iter())
+        .take(200)
+        .collect();
+    let batches = build_eval_batches(&arch, &pool).unwrap();
+
+    let mut native = Engine::Native;
+    let mut pjrt = Engine::Pjrt(Box::new(PjrtRuntime::load(&dir).unwrap()));
+    for b in &batches {
+        let (l1, m1, w1) = native.eval(&arch, &store, b).unwrap();
+        let (l2, m2, w2) = pjrt.eval(&arch, &store, b).unwrap();
+        assert!((w1 - w2).abs() < 1e-6);
+        assert!((l1 - l2).abs() < 1e-2 * (1.0 + l1.abs()), "loss {l1} vs {l2}");
+        assert!((m1 - m2).abs() < 1e-3 * w1.max(1.0), "recall {m1} vs {m2}");
+    }
+}
+
+#[test]
+fn mlp_client_update_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(37, 0);
+    let arch = ModelArch::mlp2nn();
+    let store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let m = 50;
+    let keys = vec![Rng::new(5, 5)
+        .sample_without_replacement(200, m)
+        .into_iter()
+        .map(|x| x as u32)
+        .collect::<Vec<u32>>()];
+    let slices = spec.slice(&store, &keys).unwrap();
+    // synthetic image batch
+    let bs = arch.cu_batch();
+    let cap = bs.capacity();
+    let x: Vec<f32> = (0..cap * 784).map(|_| rng.f32()).collect();
+    let y: Vec<i32> = (0..cap).map(|_| rng.below(62) as i32).collect();
+    let wgt: Vec<f32> = (0..cap).map(|i| if i < cap - 3 { 1.0 } else { 0.0 }).collect();
+    let batch = vec![Buf::F32(x), Buf::I32(y), Buf::F32(wgt)];
+
+    let mut native = Engine::Native;
+    let d_native = native
+        .client_update(&arch, &[m], slices.clone(), &batch, 0.05)
+        .unwrap();
+    let mut pjrt = Engine::Pjrt(Box::new(PjrtRuntime::load(&dir).unwrap()));
+    let d_pjrt = pjrt.client_update(&arch, &[m], slices, &batch, 0.05).unwrap();
+    for (i, (a, b)) in d_native.iter().zip(d_pjrt.iter()).enumerate() {
+        let max_diff = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-4, "output {i}: max diff {max_diff}");
+    }
+}
+
+#[test]
+fn cnn_client_update_executes_and_is_finite() {
+    // No native CNN mirror (by design); validate execution + sanity.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(41, 0);
+    let arch = ModelArch::cnn();
+    let store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let m = 16;
+    let keys = vec![(0..m as u32).collect::<Vec<u32>>()];
+    let slices = spec.slice(&store, &keys).unwrap();
+    let bs = arch.cu_batch();
+    let cap = bs.capacity();
+    let x: Vec<f32> = (0..cap * 784).map(|_| rng.f32()).collect();
+    let y: Vec<i32> = (0..cap).map(|_| rng.below(62) as i32).collect();
+    let batch = vec![Buf::F32(x), Buf::I32(y), Buf::F32(vec![1.0; cap])];
+    let mut pjrt = Engine::Pjrt(Box::new(PjrtRuntime::load(&dir).unwrap()));
+    let d0 = pjrt
+        .client_update(&arch, &[m], slices.clone(), &batch, 0.0)
+        .unwrap();
+    assert!(d0.iter().all(|t| t.iter().all(|&v| v == 0.0)), "lr=0 => zero delta");
+    let d = pjrt.client_update(&arch, &[m], slices, &batch, 0.05).unwrap();
+    assert_eq!(d.len(), 8);
+    let total: f32 = d.iter().flat_map(|t| t.iter()).map(|v| v.abs()).sum();
+    assert!(total.is_finite() && total > 0.0);
+}
+
+#[test]
+fn transformer_client_update_executes_and_learns_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(43, 0);
+    let arch = ModelArch::transformer();
+    let store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let keys = vec![
+        {
+            let mut k: Vec<u32> = (0..512).collect();
+            k[0] = 0;
+            k
+        },
+        (0..128u32).collect::<Vec<u32>>(),
+    ];
+    let slices = spec.slice(&store, &keys).unwrap();
+    let bs = arch.cu_batch();
+    let cap = bs.capacity();
+    let seq = 20;
+    let x: Vec<i32> = (0..cap * seq).map(|_| rng.below(512) as i32).collect();
+    let y: Vec<i32> = (0..cap * seq).map(|_| rng.below(512) as i32).collect();
+    let batch = vec![
+        Buf::I32(x),
+        Buf::I32(y),
+        Buf::F32(vec![1.0; cap * seq]),
+    ];
+    let mut pjrt = Engine::Pjrt(Box::new(PjrtRuntime::load(&dir).unwrap()));
+    let ms = [512usize, 128usize];
+    let d = pjrt
+        .client_update(&arch, &ms, slices, &batch, 0.1)
+        .unwrap();
+    assert_eq!(d.len(), store.segments.len());
+    // the embedding delta only touches rows whose local ids appeared
+    let demb = &d[0];
+    assert!(demb.iter().any(|&v| v != 0.0));
+    assert!(demb.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pjrt_end_to_end_training_improves_logreg() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = TrainConfig::logreg_default(512, 64);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+    cfg.rounds = 4;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 256;
+    cfg.engine = EngineKind::Pjrt {
+        artifacts_dir: dir,
+    };
+    let mut tr = Trainer::new(cfg).unwrap();
+    let before = tr.evaluate().unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_eval.loss < before.loss);
+}

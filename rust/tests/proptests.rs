@@ -1,0 +1,319 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline build has no external proptest crate, so this file drives
+//! randomized cases from the crate's own deterministic PCG — every failure
+//! reports the case seed, and re-running with the same build reproduces it.
+//!
+//! Invariants covered (DESIGN.md §2):
+//! 1. deselect(select(x)) is identity on selected coords, zero elsewhere
+//! 2. FEDSELECT with all keys == BROADCAST (paper §3.3)
+//! 3. all three slice-service implementations are byte-identical
+//! 4. Aggregate* with all-keys clients == dense mean
+//! 5. secure-agg masked sum == plain sum (mask cancellation), with dropouts
+//! 6. IBLT merge/decode round-trips sparse (key, value) multisets
+//! 7. merged keyspaces == separate FedSelects (paper §3.3 composition)
+//! 8. key policies always yield m distinct in-range keys
+
+use fedselect::aggregation::{AggMode, Aggregator, SecureAggSim, SparseAccumulator};
+use fedselect::aggregation::iblt::Iblt;
+use fedselect::data::{ClientData, Example};
+use fedselect::fedselect::{KeyPolicy, SliceImpl, SliceService};
+use fedselect::model::{Binding, KeyMap, Keyspace, ModelArch, ParamStore, Segment, SelectSpec};
+use fedselect::tensor::rng::Rng;
+
+const CASES: usize = 40;
+
+fn rand_keys(rng: &mut Rng, k: usize, m: usize) -> Vec<u32> {
+    rng.sample_without_replacement(k, m)
+        .into_iter()
+        .map(|x| x as u32)
+        .collect()
+}
+
+fn rand_store_spec(rng: &mut Rng) -> (ParamStore, SelectSpec) {
+    // random keyed segment geometry
+    let k = 2 + rng.below(40);
+    let row = 1 + rng.below(6);
+    let groups = 1 + rng.below(5);
+    let mut seg = Segment::zeros("w", &[groups * k, row]);
+    for v in &mut seg.data {
+        *v = rng.normal();
+    }
+    let mut bias = Segment::zeros("b", &[3]);
+    for v in &mut bias.data {
+        *v = rng.normal();
+    }
+    let store = ParamStore {
+        segments: vec![seg, bias],
+    };
+    let spec = SelectSpec {
+        bindings: vec![
+            Binding::Keyed {
+                seg: 0,
+                keyspace: 0,
+                map: KeyMap::grouped_rows(groups, k, row),
+            },
+            Binding::Full { seg: 1 },
+        ],
+        keyspaces: vec![Keyspace {
+            name: "k".into(),
+            size: k,
+        }],
+    };
+    spec.validate(&store).unwrap();
+    (store, spec)
+}
+
+#[test]
+fn prop_select_then_deselect_is_partial_identity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xA11CE + case as u64, 1);
+        let (store, spec) = rand_store_spec(&mut rng);
+        let k = spec.keyspaces[0].size;
+        let m = 1 + rng.below(k);
+        let keys = vec![rand_keys(&mut rng, k, m)];
+        let slices = spec.slice(&store, &keys).unwrap();
+        let mut acc = store.zeros_like();
+        let mut cnt = store.zeros_like();
+        spec.deselect_add(&mut acc, &mut cnt, &keys, &slices).unwrap();
+        for (si, (a, c)) in acc
+            .segments
+            .iter()
+            .zip(cnt.segments.iter())
+            .enumerate()
+            .take(1)
+        {
+            for (i, ((&av, &cv), &orig)) in a
+                .data
+                .iter()
+                .zip(c.data.iter())
+                .zip(store.segments[si].data.iter())
+                .enumerate()
+            {
+                if cv > 0.0 {
+                    assert!(
+                        (av - orig * cv).abs() < 1e-5,
+                        "case {case} seg {si} idx {i}: {av} vs {orig}*{cv}"
+                    );
+                } else {
+                    assert_eq!(av, 0.0, "case {case}: unselected coord nonzero");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_all_keys_recovers_broadcast() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xB0B + case as u64, 2);
+        let (store, spec) = rand_store_spec(&mut rng);
+        let k = spec.keyspaces[0].size;
+        let keys = vec![(0..k as u32).collect::<Vec<_>>()];
+        let slices = spec.slice(&store, &keys).unwrap();
+        assert_eq!(slices[0], store.segments[0].data, "case {case}");
+        assert_eq!(slices[1], store.segments[1].data, "case {case}");
+    }
+}
+
+#[test]
+fn prop_slice_services_are_interchangeable() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::new(0x5E1EC7 + case as u64, 3);
+        let (store, spec) = rand_store_spec(&mut rng);
+        let k = spec.keyspaces[0].size;
+        let m = 1 + rng.below(k);
+        let keys = vec![rand_keys(&mut rng, k, m)];
+        let mut outs = Vec::new();
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            svc.begin_round(&store, &spec).unwrap();
+            outs.push(svc.fetch(&store, &spec, &keys).unwrap());
+        }
+        assert_eq!(outs[0], outs[1], "case {case} broadcast vs on-demand");
+        assert_eq!(outs[1], outs[2], "case {case} on-demand vs pregen");
+    }
+}
+
+#[test]
+fn prop_aggregate_star_with_all_keys_is_dense_mean() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::new(0xA66u64.wrapping_add(case as u64), 4);
+        let (store, spec) = rand_store_spec(&mut rng);
+        let k = spec.keyspaces[0].size;
+        let all: Vec<u32> = (0..k as u32).collect();
+        let n_clients = 2 + rng.below(5);
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        let mut expect0 = vec![0.0f32; store.segments[0].len()];
+        let mut expect1 = vec![0.0f32; store.segments[1].len()];
+        for _ in 0..n_clients {
+            let u0: Vec<f32> = (0..expect0.len()).map(|_| rng.normal()).collect();
+            let u1: Vec<f32> = (0..expect1.len()).map(|_| rng.normal()).collect();
+            for (e, &v) in expect0.iter_mut().zip(u0.iter()) {
+                *e += v / n_clients as f32;
+            }
+            for (e, &v) in expect1.iter_mut().zip(u1.iter()) {
+                *e += v / n_clients as f32;
+            }
+            agg.add_client(&spec, &[all.clone()], &[u0, u1]).unwrap();
+        }
+        let u = agg.finalize(AggMode::CohortMean);
+        for (got, want) in u.segments[0].data.iter().zip(expect0.iter()) {
+            assert!((got - want).abs() < 1e-4, "case {case}");
+        }
+        for (got, want) in u.segments[1].data.iter().zip(expect1.iter()) {
+            assert!((got - want).abs() < 1e-4, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_secure_agg_equals_plain_with_random_dropouts() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::new(0x5EC + case as u64, 5);
+        let (store, spec) = rand_store_spec(&mut rng);
+        let k = spec.keyspaces[0].size;
+        let n = 3 + rng.below(4);
+        let cohort: Vec<u64> = (0..n as u64).map(|i| i * 7 + 1).collect();
+        let mut sec = SecureAggSim::new(&store, cohort.clone(), 0xFEED + case as u64);
+        let mut plain = SparseAccumulator::new(&store);
+        for &cid in cohort.iter().take(n - 1) {
+            // last member drops
+            let m = 1 + rng.below(k);
+            let keys = vec![rand_keys(&mut rng, k, m)];
+            let len0 = {
+                let Binding::Keyed { map, .. } = &spec.bindings[0] else {
+                    unreachable!()
+                };
+                map.sliced_len(m)
+            };
+            let ups = vec![
+                (0..len0).map(|_| rng.normal()).collect::<Vec<f32>>(),
+                (0..3).map(|_| rng.normal()).collect::<Vec<f32>>(),
+            ];
+            sec.submit(cid, &spec, &keys, &ups).unwrap();
+            plain.add_client(&spec, &keys, &ups).unwrap();
+        }
+        sec.mark_dropped(cohort[n - 1]);
+        let (ssum, scnt) = sec.unmask_sum();
+        let (psum, pcnt) = plain.raw();
+        for (a, b) in ssum.segments.iter().zip(psum.segments.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 5e-3, "case {case}: {x} vs {y}");
+            }
+        }
+        for (a, b) in scnt.segments.iter().zip(pcnt.segments.iter()) {
+            assert_eq!(a.data, b.data, "case {case} counts");
+        }
+    }
+}
+
+#[test]
+fn prop_iblt_roundtrips_random_multisets() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x1B17 + case as u64, 6);
+        let dim = 1 + rng.below(4);
+        let n_clients = 1 + rng.below(6);
+        let keys_per = 1 + rng.below(12);
+        let keyspace = 64;
+        let mut total = Iblt::new(keyspace, dim, 99);
+        let mut expect: std::collections::HashMap<u64, Vec<f32>> = Default::default();
+        for _ in 0..n_clients {
+            let mut t = Iblt::new(keyspace, dim, 99);
+            for _ in 0..keys_per {
+                let key = rng.below(keyspace) as u64;
+                let val: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                t.insert(key, &val);
+                let e = expect.entry(key).or_insert_with(|| vec![0.0; dim]);
+                for (a, b) in e.iter_mut().zip(val.iter()) {
+                    *a += b;
+                }
+            }
+            total.merge(&t);
+        }
+        let got = total.decode().unwrap_or_else(|r| {
+            panic!("case {case}: decode stalled with {r} residual cells")
+        });
+        assert_eq!(got.len(), expect.len(), "case {case}");
+        for (k, _, v) in got {
+            for (a, b) in v.iter().zip(expect[&k].iter()) {
+                assert!((a - b).abs() < 1e-3, "case {case} key {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_merged_keyspaces_equal_separate_selects() {
+    // paper §3.3: two FedSelects over [K1], [K2] == one over [K1]x[K2].
+    // The transformer spec has exactly this structure (vocab + ffn).
+    for case in 0..8 {
+        let mut rng = Rng::new(0x333 + case as u64, 7);
+        let arch = ModelArch::transformer();
+        let store = arch.init_store(&mut rng);
+        let spec = arch.select_spec();
+        let k0 = spec.keyspaces[0].size;
+        let k1 = spec.keyspaces[1].size;
+        let keys = vec![rand_keys(&mut rng, k0, 16), rand_keys(&mut rng, k1, 8)];
+        // merged: both keyspaces at once
+        let merged = spec.slice(&store, &keys).unwrap();
+        // separate: keyspace 0 with all of 1, then keyspace 1 with all of 0,
+        // picking each binding from the run that sliced it.
+        let all1: Vec<u32> = (0..k1 as u32).collect();
+        let all0: Vec<u32> = (0..k0 as u32).collect();
+        let only0 = spec
+            .slice(&store, &[keys[0].clone(), all1])
+            .unwrap();
+        let only1 = spec
+            .slice(&store, &[all0, keys[1].clone()])
+            .unwrap();
+        for (i, b) in spec.bindings.iter().enumerate() {
+            match b {
+                Binding::Keyed { keyspace: 0, .. } => {
+                    assert_eq!(merged[i], only0[i], "case {case} binding {i}")
+                }
+                Binding::Keyed { keyspace: 1, .. } => {
+                    assert_eq!(merged[i], only1[i], "case {case} binding {i}")
+                }
+                _ => assert_eq!(merged[i], only0[i], "case {case} binding {i}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_key_policies_yield_distinct_inrange_keys() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x4E1u64.wrapping_add(case as u64), 8);
+        let k = 4 + rng.below(100);
+        let m = 1 + rng.below(k);
+        // synthetic client with a random feature profile
+        let nw = 1 + rng.below(k);
+        let words: Vec<u32> = rand_keys(&mut rng, k, nw);
+        let examples = vec![Example::Bow {
+            words: words.clone(),
+            tags: vec![0],
+        }];
+        let feature_counts = ClientData::compute_feature_counts(&examples);
+        let client = ClientData {
+            id: case as u64,
+            examples,
+            feature_counts,
+        };
+        for pol in [
+            KeyPolicy::TopFreq { m },
+            KeyPolicy::RandomLocal { m },
+            KeyPolicy::RandomTopLocal { m },
+            KeyPolicy::RandomGlobal { m },
+        ] {
+            let keys = pol.keys_for(&client, k, &mut rng, None, case % 2 == 0);
+            assert_eq!(keys.len(), m, "case {case} {pol:?}");
+            let set: std::collections::HashSet<u32> = keys.iter().copied().collect();
+            assert_eq!(set.len(), m, "case {case} {pol:?} dup keys");
+            assert!(keys.iter().all(|&x| (x as usize) < k), "case {case} {pol:?}");
+            if case % 2 == 0 {
+                assert!(keys.contains(&0), "case {case} {pol:?} force_key_zero");
+            }
+        }
+    }
+}
