@@ -19,7 +19,7 @@ use fedselect::coordinator::build_dataset;
 use fedselect::config::DatasetConfig;
 use fedselect::data::bow::BowConfig;
 use fedselect::error::Result;
-use fedselect::fedselect::{KeyPolicy, SliceImpl, SliceService};
+use fedselect::fedselect::{ClientKeys, KeyPolicy, RoundSession, SliceImpl, SliceService};
 use fedselect::metrics::{human_bytes, Table};
 use fedselect::model::ModelArch;
 use fedselect::optim::{Optimizer, ServerOpt};
@@ -48,30 +48,50 @@ fn main() -> Result<()> {
     let mut dropped_total = 0usize;
 
     for round in 0..ROUNDS {
-        service.begin_round(&store, &spec)?;
         let mut agg = SparseAccumulator::new(&store);
         let cohort = dataset.sample_cohort(&mut rng, PER_TIER * TIERS.len());
+
+        // per-tier key budgets drawn up front: FedSelect serves
+        // different-*sized* sub-models from the same round session
+        let mut cohort_keys: Vec<ClientKeys> = Vec::with_capacity(cohort.len());
+        let mut cohort_rngs = Vec::with_capacity(cohort.len());
         for (slot, &ci) in cohort.iter().enumerate() {
+            let (_, m) = TIERS[slot % TIERS.len()];
+            let client = &dataset.train[ci];
+            let mut crng = rng.fork(client.id ^ round as u64);
+            cohort_keys.push(vec![KeyPolicy::TopFreq { m }.keys_for(
+                client,
+                VOCAB,
+                &mut crng,
+                None,
+                false,
+            )]);
+            cohort_rngs.push(crng);
+        }
+
+        // one immutable session slices the whole heterogeneous cohort,
+        // 4 threads at a time
+        let session = service.begin_round(&store, &spec)?;
+        let bundles = session.fetch_batch(&cohort_keys, 4)?;
+
+        for (slot, (&ci, bundle)) in cohort.iter().zip(bundles.into_iter()).enumerate() {
             let tier = slot % TIERS.len();
             let (_, m) = TIERS[tier];
             let client = &dataset.train[ci];
-            let mut crng = rng.fork(client.id ^ round as u64);
-            let keys =
-                vec![KeyPolicy::TopFreq { m }.keys_for(client, VOCAB, &mut crng, None, false)];
-            let slices = service.fetch(&store, &spec, &keys)?;
-            let bytes: u64 = slices.iter().map(|s| s.len() as u64 * 4).sum();
-            tier_down[tier] += bytes;
+            let crng = &mut cohort_rngs[slot];
+            let keys = &cohort_keys[slot];
+            tier_down[tier] += bundle.bytes();
             if crng.f32() < DROPOUT {
                 dropped_total += 1;
                 continue; // downloaded, then dropped (§6 failure pattern)
             }
-            let (batch, _) = build_cu_batch(&arch, client, &keys, &mut crng)?;
-            let slice_floats: usize = slices.iter().map(|s| s.len()).sum();
-            tier_mem[tier] = tier_mem[tier].max(client_memory_bytes(slice_floats, &batch));
-            let deltas = engine.client_update(&arch, &[m], slices, &batch, 0.5)?;
-            agg.add_client(&spec, &keys, &deltas)?;
+            let (batch, _) = build_cu_batch(&arch, client, keys, crng)?;
+            tier_mem[tier] =
+                tier_mem[tier].max(client_memory_bytes(bundle.total_floats(), &batch));
+            let deltas = engine.client_update(&arch, &[m], bundle.into_vecs(), &batch, 0.5)?;
+            agg.add_client(&spec, keys, &deltas)?;
         }
-        let _ = service.end_round();
+        let _ = session.finish();
         let n = agg.num_clients();
         if n > 0 {
             let update = Box::new(agg).finalize(AggMode::CohortMean);

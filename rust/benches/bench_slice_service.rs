@@ -1,12 +1,16 @@
 //! Slice-service bench: Option 1 vs 2 vs 3 fetch cost + byte ledgers across
-//! (K, m, cohort), plus the §6 PIR-overhead trade-off table. This is the
-//! systems ablation behind the paper's §3.2/§6 discussion.
+//! (K, m, cohort), a threaded cohort-slicing sweep on a transformer-sized
+//! store (the scale axis the session API exists for), plus the §6
+//! PIR-overhead trade-off table. This is the systems ablation behind the
+//! paper's §3.2/§6 discussion.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::time::{Duration, Instant};
+
 use fedselect::cdn::pir::{client_down_bytes, PirScheme};
-use fedselect::fedselect::{SliceImpl, SliceService};
+use fedselect::fedselect::{ClientKeys, RoundSession, SliceImpl, SliceService};
 use fedselect::metrics::human_bytes;
 use fedselect::model::ModelArch;
 use fedselect::tensor::rng::Rng;
@@ -21,7 +25,7 @@ fn main() {
         let spec = arch.select_spec();
         // per-client distinct key sets (realistic overlap via zipf-ish reuse)
         let mut rng = Rng::new(7, 1);
-        let keysets: Vec<Vec<Vec<u32>>> = (0..cohort)
+        let keysets: Vec<ClientKeys> = (0..cohort)
             .map(|_| {
                 vec![rng
                     .sample_without_replacement(vocab, m)
@@ -35,12 +39,12 @@ fn main() {
             let name = format!("fetch/{imp:?}/K={vocab},m={m},cohort={cohort}");
             let mut svc = imp.build();
             b.run(&name, 10, || {
-                svc.begin_round(&store, &spec).unwrap();
+                let session = svc.begin_round(&store, &spec).unwrap();
                 for ks in &keysets {
-                    let out = svc.fetch(&store, &spec, ks).unwrap();
+                    let out = session.fetch(ks).unwrap();
                     std::hint::black_box(&out);
                 }
-                let ledger = svc.end_round();
+                let ledger = session.finish();
                 std::hint::black_box(ledger);
             });
         }
@@ -48,11 +52,11 @@ fn main() {
         println!("-- ledger K={vocab} m={m} cohort={cohort} --");
         for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
             let mut svc = imp.build();
-            svc.begin_round(&store, &spec).unwrap();
+            let session = svc.begin_round(&store, &spec).unwrap();
             for ks in &keysets {
-                svc.fetch(&store, &spec, ks).unwrap();
+                session.fetch(ks).unwrap();
             }
-            let l = svc.end_round();
+            let l = session.finish();
             println!(
                 "  {:>10?}: down={} up_keys={} psi={} cache_hits={} pregen={} cdn_q={} service_us={}",
                 imp,
@@ -64,6 +68,69 @@ fn main() {
                 l.cdn_queries,
                 l.service_us
             );
+        }
+    }
+
+    // threaded cohort slicing on a transformer-sized store: the session API's
+    // scale axis. Wall time covers fetch_batch only (pre-generation is
+    // charged to begin_round, outside the timer, for every impl equally).
+    {
+        let arch = ModelArch::transformer();
+        let store = arch.init_store(&mut Rng::new(2, 0));
+        let spec = arch.select_spec();
+        let cohort_n = if b.quick { 16 } else { 64 };
+        let (mv, mh) = (256usize, 128usize);
+        let mut rng = Rng::new(11, 2);
+        let batch: Vec<ClientKeys> = (0..cohort_n)
+            .map(|_| {
+                vec![
+                    rng.sample_without_replacement(2048, mv)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect(),
+                    rng.sample_without_replacement(512, mh)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect(),
+                ]
+            })
+            .collect();
+        println!(
+            "-- cohort slicing throughput (transformer store, cohort={cohort_n}, m=({mv},{mh})) --"
+        );
+        let iters = if b.quick { 3 } else { 8 };
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut base_cps = 0.0f64;
+            for &threads in &[1usize, 2, 4, 8] {
+                let mut svc = imp.build();
+                // warmup round
+                {
+                    let session = svc.begin_round(&store, &spec).unwrap();
+                    std::hint::black_box(session.fetch_batch(&batch, threads).unwrap());
+                    session.finish();
+                }
+                let mut elapsed = Duration::ZERO;
+                let mut bytes = 0u64;
+                for _ in 0..iters {
+                    let session = svc.begin_round(&store, &spec).unwrap();
+                    let t0 = Instant::now();
+                    let out = session.fetch_batch(&batch, threads).unwrap();
+                    elapsed += t0.elapsed();
+                    bytes += out.iter().map(|s| s.bytes()).sum::<u64>();
+                    std::hint::black_box(&out);
+                    session.finish();
+                }
+                let secs = elapsed.as_secs_f64().max(1e-9);
+                let cps = (cohort_n * iters) as f64 / secs;
+                let mbps = bytes as f64 / 1e6 / secs;
+                if threads == 1 {
+                    base_cps = cps;
+                }
+                println!(
+                    "  {imp} x{threads}: {cps:>8.0} clients/s  {mbps:>8.0} MB/s  ({:.2}x vs 1 thread)",
+                    cps / base_cps.max(1e-9)
+                );
+            }
         }
     }
 

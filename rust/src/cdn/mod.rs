@@ -6,10 +6,18 @@
 //! with its own cost (the pre-generation the server must finish before the
 //! round), a simple latency model, and optional PIR cost accounting
 //! ([`pir`]) for private queries.
+//!
+//! Serving is read-only by construction: [`CdnStore::query`] takes `&self`
+//! (pieces are immutable between publishes, shard counters are relaxed
+//! atomics), so a whole cohort's fetch threads can hit the CDN concurrently.
+//! Only [`CdnStore::publish`] — the between-rounds version bump — needs
+//! `&mut self`.
 
 pub mod pir;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
 
 /// Latency/bandwidth accounting model (all simulated, not wall-clock).
 #[derive(Clone, Copy, Debug)]
@@ -29,7 +37,7 @@ impl Default for LatencyModel {
     }
 }
 
-/// Per-shard counters.
+/// Per-shard counters (point-in-time snapshot).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ShardStats {
     pub queries: u64,
@@ -37,26 +45,47 @@ pub struct ShardStats {
     pub busy_us: u64,
 }
 
+/// Live per-shard counters: relaxed atomics so queries record through
+/// `&self` from any thread.
+#[derive(Debug, Default)]
+struct ShardLoad {
+    queries: AtomicU64,
+    bytes: AtomicU64,
+    busy_us: AtomicU64,
+}
+
+impl ShardLoad {
+    fn snapshot(&self) -> ShardStats {
+        ShardStats {
+            queries: self.queries.load(Relaxed),
+            bytes: self.bytes.load(Relaxed),
+            busy_us: self.busy_us.load(Relaxed),
+        }
+    }
+}
+
 /// A versioned, sharded content-delivery store of per-key slice pieces.
 pub struct CdnStore {
     shards: usize,
     latency: LatencyModel,
     /// (keyspace, key) -> piece, for the current published version.
-    pieces: HashMap<(usize, u32), Vec<f32>>,
+    /// `Arc`-wrapped so queries hand out references without copying.
+    pieces: HashMap<(usize, u32), Arc<Vec<f32>>>,
     version: u64,
-    stats: Vec<ShardStats>,
-    publish_bytes: u64,
+    stats: Vec<ShardLoad>,
+    publish_bytes: AtomicU64,
 }
 
 impl CdnStore {
     pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
         CdnStore {
-            shards: shards.max(1),
+            shards,
             latency: LatencyModel::default(),
             pieces: HashMap::new(),
             version: 0,
-            stats: vec![ShardStats::default(); shards.max(1)],
-            publish_bytes: 0,
+            stats: (0..shards).map(|_| ShardLoad::default()).collect(),
+            publish_bytes: AtomicU64::new(0),
         }
     }
 
@@ -74,8 +103,9 @@ impl CdnStore {
 
     /// Publish a new model version's slices (replaces the previous version).
     pub fn publish(&mut self, pieces: HashMap<(usize, u32), Vec<f32>>) -> u64 {
-        self.publish_bytes += pieces.values().map(|p| p.len() as u64 * 4).sum::<u64>();
-        self.pieces = pieces;
+        let bytes: u64 = pieces.values().map(|p| p.len() as u64 * 4).sum();
+        self.publish_bytes.fetch_add(bytes, Relaxed);
+        self.pieces = pieces.into_iter().map(|(k, v)| (k, Arc::new(v))).collect();
         self.version += 1;
         self.version
     }
@@ -88,43 +118,57 @@ impl CdnStore {
         self.pieces.len()
     }
 
-    /// Serve one key query; returns the piece and records shard load.
-    pub fn query(&mut self, keyspace: usize, key: u32) -> Option<&[f32]> {
+    /// Serve one key query; returns the piece (zero-copy, `Arc`-shared) and
+    /// records shard load. Safe to call from many threads at once.
+    pub fn query(&self, keyspace: usize, key: u32) -> Option<Arc<Vec<f32>>> {
         let shard = self.shard_of(keyspace, key);
         let piece = self.pieces.get(&(keyspace, key))?;
         let bytes = piece.len() as u64 * 4;
-        let st = &mut self.stats[shard];
-        st.queries += 1;
-        st.bytes += bytes;
-        st.busy_us += self.latency.per_query_us + bytes / self.latency.bytes_per_us.max(1);
-        Some(piece.as_slice())
+        let st = &self.stats[shard];
+        st.queries.fetch_add(1, Relaxed);
+        st.bytes.fetch_add(bytes, Relaxed);
+        st.busy_us.fetch_add(
+            self.latency.per_query_us + bytes / self.latency.bytes_per_us.max(1),
+            Relaxed,
+        );
+        Some(piece.clone())
     }
 
-    pub fn shard_stats(&self) -> &[ShardStats] {
-        &self.stats
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.stats.iter().map(|s| s.snapshot()).collect()
     }
 
     pub fn total_queries(&self) -> u64 {
-        self.stats.iter().map(|s| s.queries).sum()
+        self.stats.iter().map(|s| s.queries.load(Relaxed)).sum()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.stats.iter().map(|s| s.bytes).sum()
+        self.stats.iter().map(|s| s.bytes.load(Relaxed)).sum()
     }
 
     /// Simulated makespan of the round: the busiest shard bounds service
     /// completion (the peak-demand bottleneck §6 worries about).
     pub fn makespan_us(&self) -> u64 {
-        self.stats.iter().map(|s| s.busy_us).max().unwrap_or(0)
+        self.stats
+            .iter()
+            .map(|s| s.busy_us.load(Relaxed))
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn publish_bytes(&self) -> u64 {
-        self.publish_bytes
+        self.publish_bytes.load(Relaxed)
     }
 
-    pub fn reset_stats(&mut self) {
-        self.stats = vec![ShardStats::default(); self.shards];
-        self.publish_bytes = 0;
+    /// Clear counters between rounds. `&self`: counters are atomic, and the
+    /// per-round session only holds a shared borrow of the store.
+    pub fn reset_stats(&self) {
+        for s in &self.stats {
+            s.queries.store(0, Relaxed);
+            s.bytes.store(0, Relaxed);
+            s.busy_us.store(0, Relaxed);
+        }
+        self.publish_bytes.store(0, Relaxed);
     }
 }
 
@@ -144,11 +188,11 @@ mod tests {
 
     #[test]
     fn publish_and_query_roundtrip() {
-        let mut cdn = store_with(10);
+        let cdn = store_with(10);
         assert_eq!(cdn.version(), 1);
         assert_eq!(cdn.num_pieces(), 10);
         let p = cdn.query(0, 3).unwrap();
-        assert_eq!(p, &[3.0; 8]);
+        assert_eq!(*p, vec![3.0; 8]);
         assert!(cdn.query(0, 99).is_none());
         assert_eq!(cdn.total_queries(), 1);
         assert_eq!(cdn.total_bytes(), 32);
@@ -168,13 +212,28 @@ mod tests {
 
     #[test]
     fn load_spreads_across_shards() {
-        let mut cdn = store_with(256);
+        let cdn = store_with(256);
         for k in 0..256u32 {
             cdn.query(0, k);
         }
         let loaded = cdn.shard_stats().iter().filter(|s| s.queries > 0).count();
         assert!(loaded >= 3, "only {loaded} shards loaded");
         assert!(cdn.makespan_us() > 0);
-        assert!(cdn.makespan_us() < cdn.shard_stats().iter().map(|s| s.busy_us).sum::<u64>());
+        assert!(
+            cdn.makespan_us() < cdn.shard_stats().iter().map(|s| s.busy_us).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn reset_clears_counters_through_shared_ref() {
+        let cdn = store_with(16);
+        for k in 0..16u32 {
+            cdn.query(0, k);
+        }
+        assert!(cdn.total_queries() > 0);
+        cdn.reset_stats();
+        assert_eq!(cdn.total_queries(), 0);
+        assert_eq!(cdn.makespan_us(), 0);
+        assert_eq!(cdn.publish_bytes(), 0);
     }
 }

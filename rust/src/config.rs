@@ -66,6 +66,9 @@ pub struct TrainConfig {
     /// One key policy per keyspace of the arch.
     pub policies: Vec<KeyPolicy>,
     pub slice_impl: SliceImpl,
+    /// Threads slicing the cohort through the round session (1 = serial;
+    /// results are byte-identical at any thread count).
+    pub fetch_threads: usize,
     pub agg: AggMode,
     /// Route aggregation through the secure-aggregation simulation.
     pub secure_agg: bool,
@@ -89,6 +92,7 @@ impl TrainConfig {
             cohort: 50,
             policies: vec![KeyPolicy::TopFreq { m }],
             slice_impl: SliceImpl::PregenCdn,
+            fetch_threads: 1,
             agg: AggMode::CohortMean,
             secure_agg: false,
             server_opt: ServerOpt::fedadagrad(0.1),
@@ -109,6 +113,7 @@ impl TrainConfig {
             cohort: 50,
             policies: vec![KeyPolicy::RandomGlobal { m }],
             slice_impl: SliceImpl::PregenCdn,
+            fetch_threads: 1,
             agg: AggMode::CohortMean,
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
@@ -129,6 +134,7 @@ impl TrainConfig {
             cohort: 20,
             policies: vec![KeyPolicy::RandomGlobal { m }],
             slice_impl: SliceImpl::PregenCdn,
+            fetch_threads: 1,
             agg: AggMode::CohortMean,
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
@@ -157,6 +163,7 @@ impl TrainConfig {
                 KeyPolicy::RandomGlobal { m: dh },
             ],
             slice_impl: SliceImpl::PregenCdn,
+            fetch_threads: 1,
             agg: AggMode::CohortMean,
             secure_agg: false,
             server_opt: ServerOpt::fedadam(0.02),
@@ -183,6 +190,11 @@ impl TrainConfig {
         self
     }
 
+    pub fn with_fetch_threads(mut self, threads: usize) -> Self {
+        self.fetch_threads = threads;
+        self
+    }
+
     /// Validate cross-field consistency.
     pub fn validate(&self) -> Result<()> {
         if self.rounds == 0 {
@@ -200,6 +212,11 @@ impl TrainConfig {
         }
         if !(0.0..1.0).contains(&self.dropout_rate) {
             return Err(Error::Config("dropout_rate must be in [0, 1)".into()));
+        }
+        if self.fetch_threads == 0 {
+            return Err(Error::Config(
+                "fetch_threads must be >= 1 (1 = serial cohort slicing)".into(),
+            ));
         }
         match (&self.arch, &self.dataset) {
             (ModelArch::Logreg { vocab, tags }, DatasetConfig::Bow(b)) => {
@@ -273,6 +290,14 @@ mod tests {
         let mut cfg = TrainConfig::transformer_default(256, 128);
         cfg.policies.pop();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn zero_fetch_threads_rejected() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.fetch_threads = 0;
+        assert!(cfg.validate().is_err());
+        assert!(cfg.with_fetch_threads(8).validate().is_ok());
     }
 
     #[test]

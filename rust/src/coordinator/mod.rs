@@ -1,14 +1,19 @@
 //! The round driver: federated model training with FedSelect (Algorithm 2).
 //!
-//! Each round:
-//! 1. sample a cohort of clients (§5.1: uniform without replacement),
-//! 2. `begin_round` on the slice service (Option 3 pre-generates here),
-//! 3. each client chooses select keys via its [`KeyPolicy`], fetches its
-//!    sub-model through FEDSELECT, runs `ClientUpdate` (one local epoch of
-//!    SGD through the engine), and submits its sliced delta,
-//! 4. `AGGREGATE*` scatters deltas into full model space (plain or
-//!    secure-masked) and averages,
-//! 5. `ServerUpdate` applies the server optimizer to the pseudo-gradient.
+//! Each round runs in three phases:
+//! 1. **Keys** — sample a cohort (§5.1: uniform without replacement), fork
+//!    each client's RNG and draw its select keys via its [`KeyPolicy`], in
+//!    cohort order (the only phase that consumes the round RNG);
+//! 2. **Slice** — `begin_round` on the slice service (Option 3
+//!    pre-generates here) yields one immutable session, and the whole
+//!    cohort is sliced through [`RoundSession::fetch_batch`] across
+//!    `fetch_threads` workers;
+//! 3. **Update** — each surviving client runs `ClientUpdate` (one local
+//!    epoch of SGD through the engine) and `AGGREGATE*` scatters its delta
+//!    into full model space (plain or secure-masked); updates are applied
+//!    sequentially in cohort-index order so the trajectory is byte-identical
+//!    at any `fetch_threads`; then `ServerUpdate` applies the server
+//!    optimizer to the pseudo-gradient.
 //!
 //! Failure injection: with `dropout_rate`, a client drops *after* fetching
 //! its slice (download wasted, no contribution) — the paper's §6 dropout
@@ -21,7 +26,7 @@ use crate::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, En
 use crate::config::{DatasetConfig, EngineKind, TrainConfig};
 use crate::data::{bow, images, text, Example, FederatedDataset};
 use crate::error::{Error, Result};
-use crate::fedselect::{RoundComm, SliceService};
+use crate::fedselect::{ClientKeys, RoundComm, RoundSession, SliceService};
 use crate::metrics::human_bytes;
 use crate::model::{ModelArch, ParamStore, SelectSpec};
 use crate::optim::Optimizer;
@@ -188,8 +193,6 @@ impl Trainer {
         let mut round_rng = self.rng.fork(self.round as u64);
         let cohort = self.dataset.sample_cohort(&mut round_rng, self.cfg.cohort);
 
-        self.service.begin_round(&self.store, &self.spec)?;
-
         // shared per-round key sets (Fig. 6 "fixed" ablation)
         let shared: Vec<Option<Vec<u32>>> = self
             .cfg
@@ -199,22 +202,16 @@ impl Trainer {
             .map(|(p, ks)| p.round_keys(ks.size, &mut round_rng))
             .collect();
 
-        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
-            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
-            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
-        } else {
-            Box::new(SparseAccumulator::new(&self.store))
-        };
-
         let force_unk = matches!(self.arch, ModelArch::Transformer { .. });
-        let mut dropped = 0usize;
-        let mut completed = 0usize;
-        let mut up_bytes_plain = 0u64;
-        let mut max_mem = 0usize;
+
+        // Phase 1 — keys: fork each client's RNG and draw its select keys,
+        // in cohort order (the only phase that consumes round_rng).
+        let mut client_keys: Vec<ClientKeys> = Vec::with_capacity(cohort.len());
+        let mut client_rngs: Vec<Rng> = Vec::with_capacity(cohort.len());
         for &ci in &cohort {
             let client = &self.dataset.train[ci];
             let mut crng = round_rng.fork(client.id ^ 0xC11E47);
-            let keys: Vec<Vec<u32>> = self
+            let keys: ClientKeys = self
                 .cfg
                 .policies
                 .iter()
@@ -229,8 +226,36 @@ impl Trainer {
                     )
                 })
                 .collect();
+            client_keys.push(keys);
+            client_rngs.push(crng);
+        }
 
-            let slices = self.service.fetch(&self.store, &self.spec, &keys)?;
+        // Phase 2 — slice: one immutable session for the round, the whole
+        // cohort fetched through it in parallel. Bundle order == cohort
+        // order, so downstream aggregation is deterministic.
+        let (bundles, comm) = {
+            let session = self.service.begin_round(&self.store, &self.spec)?;
+            let bundles = session.fetch_batch(&client_keys, self.cfg.fetch_threads)?;
+            (bundles, session.finish())
+        };
+
+        // Phase 3 — update: client updates + aggregation, sequential in
+        // cohort-index order (byte-identical at any fetch_threads).
+        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
+            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
+            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
+        } else {
+            Box::new(SparseAccumulator::new(&self.store))
+        };
+
+        let mut dropped = 0usize;
+        let mut completed = 0usize;
+        let mut up_bytes_plain = 0u64;
+        let mut max_mem = 0usize;
+        for (i, bundle) in bundles.into_iter().enumerate() {
+            let client = &self.dataset.train[cohort[i]];
+            let crng = &mut client_rngs[i];
+            let keys = &client_keys[i];
 
             // failure injection: drop after download
             if self.cfg.dropout_rate > 0.0 && crng.f32() < self.cfg.dropout_rate {
@@ -238,20 +263,22 @@ impl Trainer {
                 continue;
             }
 
-            let (batch, _used) = build_cu_batch(&self.arch, client, &keys, &mut crng)?;
-            let slice_floats: usize = slices.iter().map(|s| s.len()).sum();
-            max_mem = max_mem.max(client_memory_bytes(slice_floats, &batch));
+            let (batch, _used) = build_cu_batch(&self.arch, client, keys, crng)?;
+            max_mem = max_mem.max(client_memory_bytes(bundle.total_floats(), &batch));
             let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
-            let deltas =
-                self.engine
-                    .client_update(&self.arch, &ms, slices, &batch, self.cfg.client_lr)?;
+            let deltas = self.engine.client_update(
+                &self.arch,
+                &ms,
+                bundle.into_vecs(),
+                &batch,
+                self.cfg.client_lr,
+            )?;
             up_bytes_plain += deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
                 + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
-            agg.add_client(&self.spec, &keys, &deltas)?;
+            agg.add_client(&self.spec, keys, &deltas)?;
             completed += 1;
         }
 
-        let comm = self.service.end_round();
         let up_bytes = if self.cfg.secure_agg {
             // §4.2: client-side φ + dense secure agg uploads full-model-sized
             // masked vectors.
@@ -404,6 +431,30 @@ mod tests {
         );
         // secure agg uploads full-model-sized vectors
         assert!(rb.total_up_bytes > ra.total_up_bytes);
+    }
+
+    #[test]
+    fn fetch_threads_do_not_change_the_trajectory() {
+        // byte-identical training at any thread count, for every impl
+        for imp in [
+            crate::fedselect::SliceImpl::Broadcast,
+            crate::fedselect::SliceImpl::OnDemand,
+            crate::fedselect::SliceImpl::PregenCdn,
+        ] {
+            let mut cfg = tiny_cfg();
+            cfg.rounds = 2;
+            cfg.slice_impl = imp;
+            let serial = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+            cfg.fetch_threads = 4;
+            let parallel = Trainer::new(cfg).unwrap().run().unwrap();
+            assert_eq!(
+                serial.final_eval.loss.to_bits(),
+                parallel.final_eval.loss.to_bits(),
+                "{imp}"
+            );
+            assert_eq!(serial.total_down_bytes, parallel.total_down_bytes, "{imp}");
+            assert_eq!(serial.total_up_bytes, parallel.total_up_bytes, "{imp}");
+        }
     }
 
     #[test]

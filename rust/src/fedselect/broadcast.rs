@@ -1,21 +1,30 @@
 //! Option 1 (paper §3.2): broadcast the full value, compute ψ on clients.
 //!
 //! Maximal key privacy (keys never leave the device), no communication
-//! savings: every client downloads the entire server model.
+//! savings: every client downloads the entire server model. The session is
+//! a thin wrapper over the round's [`SlicePlan`] — broadcast segments are
+//! `Arc`-shared instead of cloned per client, so the simulator no longer
+//! pays a full-model copy per fetch (the wire ledger still charges one).
 
-use super::{RoundComm, SliceService};
+use super::piece::{SliceBundle, SlicePlan};
+use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};
 
 #[derive(Default)]
-pub struct BroadcastService {
-    ledger: RoundComm,
-}
+pub struct BroadcastService;
 
 impl BroadcastService {
     pub fn new() -> Self {
-        Self::default()
+        Self
     }
+}
+
+struct BroadcastSession<'a> {
+    store: &'a ParamStore,
+    plan: SlicePlan,
+    full_bytes: u64,
+    ledger: CommLedger,
 }
 
 impl SliceService for BroadcastService {
@@ -23,23 +32,33 @@ impl SliceService for BroadcastService {
         "broadcast"
     }
 
-    fn begin_round(&mut self, _store: &ParamStore, _spec: &SelectSpec) -> Result<()> {
-        Ok(())
+    fn begin_round<'a>(
+        &'a mut self,
+        store: &'a ParamStore,
+        spec: &'a SelectSpec,
+    ) -> Result<Box<dyn RoundSession + 'a>> {
+        Ok(Box::new(BroadcastSession {
+            store,
+            plan: SlicePlan::new(store, spec),
+            full_bytes: store.bytes() as u64,
+            ledger: CommLedger::default(),
+        }))
+    }
+}
+
+impl RoundSession for BroadcastSession<'_> {
+    fn name(&self) -> &'static str {
+        "broadcast"
     }
 
-    fn fetch(
-        &mut self,
-        store: &ParamStore,
-        spec: &SelectSpec,
-        keys: &[Vec<u32>],
-    ) -> Result<Vec<Vec<f32>>> {
+    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
         // Full model over the wire; ψ runs client-side (not counted as
         // server psi_evals).
-        self.ledger.down_bytes += store.bytes() as u64;
-        spec.slice(store, keys)
+        self.ledger.add_down_bytes(self.full_bytes);
+        self.plan.fetch(self.store, keys)
     }
 
-    fn end_round(&mut self) -> RoundComm {
-        std::mem::take(&mut self.ledger)
+    fn finish(self: Box<Self>) -> RoundComm {
+        self.ledger.snapshot()
     }
 }

@@ -131,18 +131,33 @@ impl KeyPolicy {
     }
 }
 
+/// Canonical CLI spelling (`kind:m`, or `all`); round-trips with `FromStr`.
+impl std::fmt::Display for KeyPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            KeyPolicy::TopFreq { m } => write!(f, "top:{m}"),
+            KeyPolicy::RandomLocal { m } => write!(f, "random-local:{m}"),
+            KeyPolicy::RandomTopLocal { m } => write!(f, "random-top:{m}"),
+            KeyPolicy::RandomGlobal { m } => write!(f, "random-global:{m}"),
+            KeyPolicy::FixedPerRound { m } => write!(f, "fixed-round:{m}"),
+            KeyPolicy::AllKeys => f.write_str("all"),
+        }
+    }
+}
+
 impl std::str::FromStr for KeyPolicy {
     type Err = String;
 
     /// e.g. "top:1000", "random-local:1000", "random-global:32",
-    /// "fixed-round:32", "all".
+    /// "fixed-round:32", "all". Kinds are case-insensitive.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        if s == "all" {
+        let lower = s.to_ascii_lowercase();
+        if lower == "all" {
             return Ok(KeyPolicy::AllKeys);
         }
-        let (kind, m) = s
+        let (kind, m) = lower
             .split_once(':')
-            .ok_or_else(|| format!("bad key policy {s:?} (want kind:m)"))?;
+            .ok_or_else(|| format!("bad key policy {s:?} (want kind:m, or \"all\")"))?;
         let m: usize = m.parse().map_err(|e| format!("bad m in {s:?}: {e}"))?;
         match kind {
             "top" => Ok(KeyPolicy::TopFreq { m }),
@@ -150,7 +165,10 @@ impl std::str::FromStr for KeyPolicy {
             "random-top" => Ok(KeyPolicy::RandomTopLocal { m }),
             "random-global" => Ok(KeyPolicy::RandomGlobal { m }),
             "fixed-round" => Ok(KeyPolicy::FixedPerRound { m }),
-            other => Err(format!("unknown key policy kind {other:?}")),
+            other => Err(format!(
+                "unknown key policy kind {other:?} (want top, random-local, \
+                 random-top, random-global, fixed-round, or all)"
+            )),
         }
     }
 }
@@ -246,6 +264,23 @@ mod tests {
         );
         assert_eq!("all".parse::<KeyPolicy>().unwrap(), KeyPolicy::AllKeys);
         assert!("bogus:1".parse::<KeyPolicy>().is_err());
+    }
+
+    #[test]
+    fn display_round_trips_every_policy() {
+        for pol in [
+            KeyPolicy::TopFreq { m: 7 },
+            KeyPolicy::RandomLocal { m: 9 },
+            KeyPolicy::RandomTopLocal { m: 11 },
+            KeyPolicy::RandomGlobal { m: 13 },
+            KeyPolicy::FixedPerRound { m: 15 },
+            KeyPolicy::AllKeys,
+        ] {
+            let shown = pol.to_string();
+            assert_eq!(shown.parse::<KeyPolicy>().unwrap(), pol, "{shown}");
+            // parsing is case-insensitive
+            assert_eq!(shown.to_uppercase().parse::<KeyPolicy>().unwrap(), pol);
+        }
     }
 
     #[test]

@@ -2,18 +2,34 @@
 //!
 //! `FEDSELECT(x@S, {z_n}@C, ψ) = {[ψ(x, z_n,1), …, ψ(x, z_n,m)]}@C`
 //!
-//! A [`SliceService`] delivers each client its sub-model given its select
-//! keys. Three implementations, mirroring the paper's Options 1–3:
+//! FEDSELECT is defined over a *cohort*: one server state `x` is mapped to
+//! per-client slices for all N clients of a round at once. The API mirrors
+//! that. A [`SliceService`] is the long-lived implementation choice; calling
+//! [`SliceService::begin_round`] snapshots the model into an immutable
+//! [`RoundSession`] which any number of threads can slice through
+//! concurrently ([`RoundSession::fetch_batch`]); consuming the session with
+//! [`RoundSession::finish`] drains the round's [`RoundComm`] ledger.
 //!
-//! | impl | communication | server ψ cost | key privacy |
+//! Three implementations, mirroring the paper's §3.2 Options 1–3 — they
+//! differ precisely in *where* the cohort-level ψ work happens and in the
+//! ledger each session accumulates:
+//!
+//! | impl | ψ happens | session ledger semantics | key privacy |
 //! |---|---|---|---|
-//! | [`broadcast::BroadcastService`] | full model down | none (client-side ψ) | keys never leave device |
-//! | [`on_demand::OnDemandService`]  | keys up, slice down | per distinct key (memoized) | server sees keys |
-//! | [`pregen::PregenCdnService`]    | keys to CDN, slice down | all K keys before the round | CDN sees keys (PIR optional) |
+//! | [`broadcast::BroadcastService`] | on clients, after a full-model download | `down_bytes` += full model per fetch; no server `psi_evals` | keys never leave device |
+//! | [`on_demand::OnDemandService`]  | on the server, per distinct key, at fetch time | `psi_evals` per computed piece, `cache_hits` for memoized ones (shared across the cohort's threads), `up_key_bytes` for uploaded keys | server sees keys |
+//! | [`pregen::PregenCdnService`]    | on the server, for *all* K keys, inside `begin_round` | `pregen_slices`/`psi_evals` charged at session start; fetches only count `cdn_queries` and bytes; `service_us` is bounded below by the busiest CDN shard | CDN sees keys (PIR optional) |
 //!
-//! Every implementation returns byte-identical slices (property-tested), so
-//! they are interchangeable behind the trait; they differ only in the
-//! communication/computation/privacy ledger they produce.
+//! Every implementation returns byte-identical slices — property-tested both
+//! sequentially and across threads — so they are interchangeable behind the
+//! trait; they differ only in the communication/computation/privacy ledger
+//! they produce.
+//!
+//! Slices are delivered as [`SliceBundle`]s built from a per-round
+//! [`SlicePlan`]: broadcast-in-full segments are cloned **once per round**
+//! and shared across the whole cohort via `Arc` (zero per-client copies),
+//! keyed rows are copied directly out of the [`ParamStore`] spans the plan
+//! resolved up front.
 
 pub mod broadcast;
 pub mod keys;
@@ -24,10 +40,16 @@ pub mod pregen;
 pub use broadcast::BroadcastService;
 pub use keys::KeyPolicy;
 pub use on_demand::OnDemandService;
+pub use piece::{SliceBundle, SlicePlan, SliceSeg};
 pub use pregen::PregenCdnService;
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};
+
+/// One client's select keys: `keys[ks]` per keyspace `ks`.
+pub type ClientKeys = Vec<Vec<u32>>;
 
 /// Which implementation to instantiate (config-level knob).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +57,7 @@ pub enum SliceImpl {
     /// Option 1: broadcast everything, clients slice locally.
     Broadcast,
     /// Option 2: clients upload keys, server slices on demand (with a
-    /// per-round memo cache).
+    /// per-round memo cache shared across fetch threads).
     OnDemand,
     /// Option 3: server pre-generates all K slices to a CDN before the round.
     PregenCdn,
@@ -51,14 +73,32 @@ impl SliceImpl {
     }
 }
 
+/// Canonical CLI names; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for SliceImpl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SliceImpl::Broadcast => "broadcast",
+            SliceImpl::OnDemand => "on-demand",
+            SliceImpl::PregenCdn => "pregen-cdn",
+        })
+    }
+}
+
 impl std::str::FromStr for SliceImpl {
     type Err = String;
+    /// Case-insensitive; accepts the canonical `Display` names plus the
+    /// historical aliases (`on_demand`, `pregen`, `cdn`).
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "broadcast" => Ok(SliceImpl::Broadcast),
-            "on-demand" | "on_demand" => Ok(SliceImpl::OnDemand),
-            "pregen" | "pregen-cdn" | "cdn" => Ok(SliceImpl::PregenCdn),
-            other => Err(format!("unknown slice impl {other:?}")),
+            "on-demand" | "on_demand" | "ondemand" => Ok(SliceImpl::OnDemand),
+            "pregen" | "pregen-cdn" | "pregen_cdn" | "cdn" => Ok(SliceImpl::PregenCdn),
+            other => Err(format!(
+                "unknown slice impl {other:?} (want {}, {} or {})",
+                SliceImpl::Broadcast,
+                SliceImpl::OnDemand,
+                SliceImpl::PregenCdn
+            )),
         }
     }
 }
@@ -94,24 +134,121 @@ impl RoundComm {
     }
 }
 
-/// A FEDSELECT implementation: delivers client sub-models for select keys.
+/// Interior-mutable [`RoundComm`] accumulator: sessions record through
+/// `&self` (relaxed atomics — the counters are independent tallies), so a
+/// cohort can be sliced from many threads without locks.
+#[derive(Debug, Default)]
+pub struct CommLedger {
+    down_bytes: AtomicU64,
+    up_key_bytes: AtomicU64,
+    psi_evals: AtomicU64,
+    cache_hits: AtomicU64,
+    pregen_slices: AtomicU64,
+    cdn_queries: AtomicU64,
+    service_us: AtomicU64,
+}
+
+impl CommLedger {
+    pub fn add_down_bytes(&self, n: u64) {
+        self.down_bytes.fetch_add(n, Relaxed);
+    }
+    pub fn add_up_key_bytes(&self, n: u64) {
+        self.up_key_bytes.fetch_add(n, Relaxed);
+    }
+    pub fn add_psi_evals(&self, n: u64) {
+        self.psi_evals.fetch_add(n, Relaxed);
+    }
+    pub fn add_cache_hits(&self, n: u64) {
+        self.cache_hits.fetch_add(n, Relaxed);
+    }
+    pub fn add_pregen_slices(&self, n: u64) {
+        self.pregen_slices.fetch_add(n, Relaxed);
+    }
+    pub fn add_cdn_queries(&self, n: u64) {
+        self.cdn_queries.fetch_add(n, Relaxed);
+    }
+    pub fn add_service_us(&self, n: u64) {
+        self.service_us.fetch_add(n, Relaxed);
+    }
+    /// Raise `service_us` to at least `n` (peak-bound accounting).
+    pub fn max_service_us(&self, n: u64) {
+        self.service_us.fetch_max(n, Relaxed);
+    }
+
+    /// Read the ledger out as a plain [`RoundComm`].
+    pub fn snapshot(&self) -> RoundComm {
+        RoundComm {
+            down_bytes: self.down_bytes.load(Relaxed),
+            up_key_bytes: self.up_key_bytes.load(Relaxed),
+            psi_evals: self.psi_evals.load(Relaxed),
+            cache_hits: self.cache_hits.load(Relaxed),
+            pregen_slices: self.pregen_slices.load(Relaxed),
+            cdn_queries: self.cdn_queries.load(Relaxed),
+            service_us: self.service_us.load(Relaxed),
+        }
+    }
+}
+
+/// A FEDSELECT implementation: turns one model snapshot into an immutable
+/// per-round slicing session.
 pub trait SliceService: Send {
     fn name(&self) -> &'static str;
 
-    /// Called once per round before any client fetches (pre-generation hook).
-    fn begin_round(&mut self, store: &ParamStore, spec: &SelectSpec) -> Result<()>;
+    /// Start a round against the current model. Option 3 pre-generates its
+    /// CDN content here. The returned session borrows `store`/`spec` (and
+    /// the service) immutably and is `Sync`: the whole cohort can fetch
+    /// through it concurrently.
+    fn begin_round<'a>(
+        &'a mut self,
+        store: &'a ParamStore,
+        spec: &'a SelectSpec,
+    ) -> Result<Box<dyn RoundSession + 'a>>;
+}
+
+/// One round's slicing session. All methods take `&self`; ledgers use
+/// interior mutability ([`CommLedger`]) so [`fetch`](Self::fetch) can run
+/// from any number of threads.
+pub trait RoundSession: Send + Sync {
+    fn name(&self) -> &'static str;
 
     /// Deliver the sub-model for one client (`keys[ks]` per keyspace `ks`),
     /// in artifact parameter order.
-    fn fetch(
-        &mut self,
-        store: &ParamStore,
-        spec: &SelectSpec,
-        keys: &[Vec<u32>],
-    ) -> Result<Vec<Vec<f32>>>;
+    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle>;
 
-    /// Drain and return this round's ledger.
-    fn end_round(&mut self) -> RoundComm;
+    /// Slice a whole cohort, preserving input order. With `threads > 1` the
+    /// batch is split into contiguous chunks sliced concurrently via
+    /// `std::thread::scope`; output is byte-identical to the sequential
+    /// per-client path (property-tested).
+    fn fetch_batch(&self, batch: &[ClientKeys], threads: usize) -> Result<Vec<SliceBundle>> {
+        let threads = threads.max(1).min(batch.len().max(1));
+        if threads <= 1 {
+            return batch.iter().map(|keys| self.fetch(keys)).collect();
+        }
+        // split into exactly `threads` near-equal chunks (sizes differ by at
+        // most one), so the requested parallelism is actually reached
+        let base = batch.len() / threads;
+        let extra = batch.len() % threads;
+        let mut results: Vec<Result<SliceBundle>> = Vec::with_capacity(batch.len());
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            let mut rest = batch;
+            for i in 0..threads {
+                let take = base + usize::from(i < extra);
+                let (ch, tail) = rest.split_at(take);
+                rest = tail;
+                handles.push(
+                    s.spawn(move || ch.iter().map(|keys| self.fetch(keys)).collect::<Vec<_>>()),
+                );
+            }
+            for h in handles {
+                results.extend(h.join().expect("slice fetch worker panicked"));
+            }
+        });
+        results.into_iter().collect()
+    }
+
+    /// End the round and drain its ledger.
+    fn finish(self: Box<Self>) -> RoundComm;
 }
 
 #[cfg(test)]
@@ -131,12 +268,45 @@ mod tests {
         let mut results = Vec::new();
         for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
             let mut svc = imp.build();
-            svc.begin_round(&store, &spec).unwrap();
-            let slices = svc.fetch(&store, &spec, &keys).unwrap();
+            let session = svc.begin_round(&store, &spec).unwrap();
+            let slices = session.fetch(&keys).unwrap().to_vecs();
+            assert_eq!(slices, spec.slice(&store, &keys).unwrap(), "{imp} vs ψ");
             results.push((imp, slices));
         }
         for w in results.windows(2) {
-            assert_eq!(w[0].1, w[1].1, "{:?} vs {:?}", w[0].0, w[1].0);
+            assert_eq!(w[0].1, w[1].1, "{} vs {}", w[0].0, w[1].0);
+        }
+    }
+
+    /// fetch_batch across threads == per-client fetch, in order.
+    #[test]
+    fn fetch_batch_matches_sequential_fetch() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(5, 0));
+        let spec = arch.select_spec();
+        let mut rng = Rng::new(9, 1);
+        let batch: Vec<ClientKeys> = (0..10)
+            .map(|_| {
+                vec![rng
+                    .sample_without_replacement(64, 8)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()]
+            })
+            .collect();
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            let session = svc.begin_round(&store, &spec).unwrap();
+            let seq: Vec<_> = batch.iter().map(|k| session.fetch(k).unwrap().to_vecs()).collect();
+            for threads in [1usize, 3, 8] {
+                let par: Vec<_> = session
+                    .fetch_batch(&batch, threads)
+                    .unwrap()
+                    .into_iter()
+                    .map(|b| b.to_vecs())
+                    .collect();
+                assert_eq!(seq, par, "{imp} threads={threads}");
+            }
         }
     }
 
@@ -148,20 +318,20 @@ mod tests {
         let keys = vec![vec![5u32, 0, 63, 17]];
 
         let mut bc = SliceImpl::Broadcast.build();
-        bc.begin_round(&store, &spec).unwrap();
-        bc.fetch(&store, &spec, &keys).unwrap();
-        let lc_bc = bc.end_round();
+        let sess = bc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        let lc_bc = sess.finish();
 
         let mut od = SliceImpl::OnDemand.build();
-        od.begin_round(&store, &spec).unwrap();
-        od.fetch(&store, &spec, &keys).unwrap();
-        od.fetch(&store, &spec, &keys).unwrap();
-        let lc_od = od.end_round();
+        let sess = od.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        sess.fetch(&keys).unwrap();
+        let lc_od = sess.finish();
 
         let mut pg = SliceImpl::PregenCdn.build();
-        pg.begin_round(&store, &spec).unwrap();
-        pg.fetch(&store, &spec, &keys).unwrap();
-        let lc_pg = pg.end_round();
+        let sess = pg.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        let lc_pg = sess.finish();
 
         // broadcast: full model down, no keys up, no server psi
         assert_eq!(lc_bc.down_bytes, store.bytes() as u64);
@@ -176,5 +346,17 @@ mod tests {
         assert_eq!(lc_pg.pregen_slices, 64);
         assert_eq!(lc_pg.cdn_queries, 4);
         assert!(lc_pg.down_bytes < lc_bc.down_bytes);
+    }
+
+    #[test]
+    fn slice_impl_display_round_trips_case_insensitively() {
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let shown = imp.to_string();
+            assert_eq!(shown.parse::<SliceImpl>().unwrap(), imp);
+            assert_eq!(shown.to_uppercase().parse::<SliceImpl>().unwrap(), imp);
+        }
+        assert_eq!("Pregen".parse::<SliceImpl>().unwrap(), SliceImpl::PregenCdn);
+        let err = "bogus".parse::<SliceImpl>().unwrap_err();
+        assert!(err.contains("broadcast") && err.contains("on-demand"), "{err}");
     }
 }

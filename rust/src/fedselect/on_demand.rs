@@ -3,32 +3,76 @@
 //! Clients upload their select keys; the server computes ψ per key and ships
 //! back exactly the requested slice. A per-round memo cache amortizes
 //! repeated keys across clients (the "more complicated distributed caching
-//! system" the paper mentions — here a single-node memo whose hit statistics
-//! the benches report). The server sees every client's keys: the weakest key
-//! privacy of the three options.
+//! system" the paper mentions — here a striped, read-mostly map the whole
+//! cohort's fetch threads share: lookups take a shard read-lock, which is
+//! uncontended once the working set is warm). The server sees every client's
+//! keys: the weakest key privacy of the three options.
+//!
+//! A new session (== a new round) starts with an empty cache: the model
+//! changed, so every memoized piece is stale by construction.
 
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
-use super::piece::{assemble, piece_bytes, piece_for_key};
-use super::{RoundComm, SliceService};
+use super::piece::{piece_for_key, SliceBundle, SlicePlan};
+use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::error::Result;
-use crate::model::{Binding, ParamStore, SelectSpec};
+use crate::model::{ParamStore, SelectSpec};
+
+/// Striped read-mostly memo map. 16 shards keeps write contention negligible
+/// at realistic thread counts while reads stay a single uncontended RwLock
+/// read-acquire.
+struct PieceCache {
+    shards: Vec<RwLock<HashMap<(usize, u32), Arc<Vec<f32>>>>>,
+}
+
+impl PieceCache {
+    fn new(shards: usize) -> Self {
+        PieceCache {
+            shards: (0..shards.max(1)).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: (usize, u32)) -> &RwLock<HashMap<(usize, u32), Arc<Vec<f32>>>> {
+        let h = (key.1 as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(key.0 as u64);
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    fn get(&self, key: (usize, u32)) -> Option<Arc<Vec<f32>>> {
+        self.shard(key).read().expect("piece cache poisoned").get(&key).cloned()
+    }
+
+    /// First writer wins; a racing duplicate insert is dropped (both threads
+    /// already paid the ψ, which the ledger faithfully records).
+    fn insert(&self, key: (usize, u32), val: Arc<Vec<f32>>) {
+        self.shard(key)
+            .write()
+            .expect("piece cache poisoned")
+            .entry(key)
+            .or_insert(val);
+    }
+}
 
 pub struct OnDemandService {
-    /// Memoize per-key pieces within a round (cleared by `begin_round`).
+    /// Memoize per-key pieces within a round.
     memoize: bool,
-    cache: HashMap<(usize, u32), Vec<f32>>,
-    ledger: RoundComm,
 }
 
 impl OnDemandService {
     pub fn new(memoize: bool) -> Self {
-        OnDemandService {
-            memoize,
-            cache: HashMap::new(),
-            ledger: RoundComm::default(),
-        }
+        OnDemandService { memoize }
     }
+}
+
+struct OnDemandSession<'a> {
+    store: &'a ParamStore,
+    spec: &'a SelectSpec,
+    plan: SlicePlan,
+    memoize: bool,
+    cache: PieceCache,
+    ledger: CommLedger,
 }
 
 impl SliceService for OnDemandService {
@@ -36,72 +80,77 @@ impl SliceService for OnDemandService {
         "on-demand"
     }
 
-    fn begin_round(&mut self, _store: &ParamStore, _spec: &SelectSpec) -> Result<()> {
-        // The model changed: all cached slices are stale.
-        self.cache.clear();
-        Ok(())
+    fn begin_round<'a>(
+        &'a mut self,
+        store: &'a ParamStore,
+        spec: &'a SelectSpec,
+    ) -> Result<Box<dyn RoundSession + 'a>> {
+        Ok(Box::new(OnDemandSession {
+            store,
+            spec,
+            plan: SlicePlan::new(store, spec),
+            memoize: self.memoize,
+            cache: PieceCache::new(16),
+            ledger: CommLedger::default(),
+        }))
+    }
+}
+
+impl RoundSession for OnDemandSession<'_> {
+    fn name(&self) -> &'static str {
+        "on-demand"
     }
 
-    fn fetch(
-        &mut self,
-        store: &ParamStore,
-        spec: &SelectSpec,
-        keys: &[Vec<u32>],
-    ) -> Result<Vec<Vec<f32>>> {
+    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+        self.plan.check_keys(keys)?;
         // keys go up: 4 bytes per key
         let total_keys: usize = keys.iter().map(|k| k.len()).sum();
-        self.ledger.up_key_bytes += (total_keys * 4) as u64;
+        self.ledger.add_up_key_bytes((total_keys * 4) as u64);
 
-        // compute / reuse per-key pieces
+        // resolve this client's pieces: reuse from the shared memo when
+        // possible, compute (and publish) otherwise. Exactly one of
+        // psi_evals / cache_hits is charged per requested key occurrence
+        // (duplicates included), matching the sequential accounting.
+        let mut local: HashMap<(usize, u32), Arc<Vec<f32>>> =
+            HashMap::with_capacity(total_keys);
         for (ks, kk) in keys.iter().enumerate() {
             for &k in kk {
-                if self.memoize && self.cache.contains_key(&(ks, k)) {
-                    self.ledger.cache_hits += 1;
+                if self.memoize {
+                    // covers duplicates within this fetch too: the first
+                    // occurrence published the piece to the shared memo
+                    if let Some(piece) = self.cache.get((ks, k)) {
+                        self.ledger.add_cache_hits(1);
+                        local.insert((ks, k), piece);
+                        continue;
+                    }
+                } else if local.contains_key(&(ks, k)) {
+                    // without the memo a duplicate key pays ψ again; charge
+                    // it without redoing the copy
+                    self.ledger.add_psi_evals(1);
+                    self.ledger
+                        .add_service_us(1 + self.plan.per_key_floats(ks) as u64 / 256);
                     continue;
                 }
-                let piece = piece_for_key(store, spec, ks, k);
-                self.ledger.psi_evals += 1;
-                self.ledger.service_us += 1 + piece.len() as u64 / 256; // ~1GB/s ψ model
+                let piece = Arc::new(piece_for_key(self.store, self.spec, ks, k));
+                self.ledger.add_psi_evals(1);
+                self.ledger.add_service_us(1 + piece.len() as u64 / 256); // ~1GB/s ψ model
                 if self.memoize {
-                    self.cache.insert((ks, k), piece);
-                } else {
-                    // still pay for it below via direct assembly
-                    self.cache.insert((ks, k), piece);
+                    self.cache.insert((ks, k), piece.clone());
                 }
+                local.insert((ks, k), piece);
             }
         }
 
         // downlink: broadcast segments + selected slice bytes
-        let bcast = spec.broadcast_floats(store) * 4;
-        let keyed: u64 = keys
-            .iter()
-            .enumerate()
-            .map(|(ks, kk)| kk.len() as u64 * piece_bytes(spec, ks))
-            .sum();
-        self.ledger.down_bytes += bcast as u64 + keyed;
+        self.ledger
+            .add_down_bytes(self.plan.broadcast_bytes() + self.plan.keyed_bytes(keys));
 
-        let out = assemble(store, spec, keys, |ks, k| {
-            self.cache.get(&(ks, k)).expect("piece computed above")
-        });
-        if !self.memoize {
-            self.cache.clear();
-        }
-        // sanity: bundle covers every binding
-        debug_assert_eq!(out.len(), spec.bindings.len());
-        debug_assert!(spec
-            .bindings
-            .iter()
-            .zip(out.iter())
-            .all(|(b, o)| match b {
-                Binding::Full { seg } => o.len() == store.segments[*seg].len(),
-                Binding::Keyed { keyspace, map, .. } =>
-                    o.len() == map.sliced_len(keys[*keyspace].len()),
-            }));
-        Ok(out)
+        self.plan
+            .assemble(keys, |ks, k| local[&(ks, k)].as_slice())
     }
 
-    fn end_round(&mut self) -> RoundComm {
-        std::mem::take(&mut self.ledger)
+    fn finish(self: Box<Self>) -> RoundComm {
+        self.ledger.snapshot()
     }
 }
 
@@ -118,16 +167,16 @@ mod tests {
         let spec = arch.select_spec();
         let keys = vec![vec![0u32, 5, 9]];
         let mut svc = OnDemandService::new(true);
-        svc.begin_round(&store, &spec).unwrap();
-        svc.fetch(&store, &spec, &keys).unwrap();
-        svc.fetch(&store, &spec, &keys).unwrap();
-        let l1 = svc.end_round();
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        sess.fetch(&keys).unwrap();
+        let l1 = sess.finish();
         assert_eq!(l1.psi_evals, 3);
         assert_eq!(l1.cache_hits, 3);
-        // new round: cache cleared
-        svc.begin_round(&store, &spec).unwrap();
-        svc.fetch(&store, &spec, &keys).unwrap();
-        let l2 = svc.end_round();
+        // new round == new session: cache starts empty
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        let l2 = sess.finish();
         assert_eq!(l2.psi_evals, 3);
         assert_eq!(l2.cache_hits, 0);
     }
@@ -139,11 +188,48 @@ mod tests {
         let spec = arch.select_spec();
         let keys = vec![vec![1u32, 2]];
         let mut svc = OnDemandService::new(false);
-        svc.begin_round(&store, &spec).unwrap();
-        svc.fetch(&store, &spec, &keys).unwrap();
-        svc.fetch(&store, &spec, &keys).unwrap();
-        let l = svc.end_round();
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&keys).unwrap();
+        sess.fetch(&keys).unwrap();
+        let l = sess.finish();
         assert_eq!(l.psi_evals, 4);
         assert_eq!(l.cache_hits, 0);
+    }
+
+    #[test]
+    fn duplicate_keys_are_charged_per_occurrence() {
+        let arch = ModelArch::logreg(16);
+        let store = arch.init_store(&mut Rng::new(1, 0));
+        let spec = arch.select_spec();
+        let dup = vec![vec![3u32, 3]];
+
+        let mut svc = OnDemandService::new(true);
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&dup).unwrap();
+        let l = sess.finish();
+        assert_eq!((l.psi_evals, l.cache_hits), (1, 1));
+
+        let mut svc = OnDemandService::new(false);
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        sess.fetch(&dup).unwrap();
+        let l = sess.finish();
+        assert_eq!((l.psi_evals, l.cache_hits), (2, 0));
+    }
+
+    #[test]
+    fn concurrent_fetches_share_the_memo() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(7, 0));
+        let spec = arch.select_spec();
+        let batch: Vec<Vec<Vec<u32>>> = (0..8).map(|_| vec![vec![1u32, 2, 3, 4]]).collect();
+        let mut svc = OnDemandService::new(true);
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        let out = sess.fetch_batch(&batch, 4).unwrap();
+        assert_eq!(out.len(), 8);
+        let l = sess.finish();
+        // every fetch asked for the same 4 keys: at most one ψ per key per
+        // racing thread, and at least the 4 required; the rest were hits
+        assert!(l.psi_evals >= 4, "psi {}", l.psi_evals);
+        assert_eq!(l.psi_evals + l.cache_hits, 8 * 4);
     }
 }

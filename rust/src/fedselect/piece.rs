@@ -1,14 +1,107 @@
-//! Per-key slice "pieces": the unit of storage for on-demand memoization and
-//! CDN pre-generation.
+//! Slice plans, bundles, and per-key "pieces".
 //!
-//! For keyspace `ks`, the piece of key `k` is the concatenation, over the
-//! keyed bindings of `ks` in binding order, of that key's `groups × row_len`
-//! elements (group-major). [`assemble`] reconstructs a client's full slice
-//! bundle from pieces plus the broadcast segments — the exact inverse used
-//! by both [`super::on_demand`] and [`super::pregen`], so the two options
-//! are byte-identical with Option 1.
+//! [`SlicePlan`] is the per-round resolution of a [`SelectSpec`] against one
+//! model snapshot: every binding is resolved once to either a shared
+//! broadcast segment (cloned **once per round** into an `Arc`, then handed
+//! to every client for free) or to the `(segment, group, row-range)` spans a
+//! key selects. Sessions build one plan in `begin_round` and serve the whole
+//! cohort from it — the plan is immutable, so fetches can run concurrently.
+//!
+//! [`SliceBundle`] is the unit of delivery: one [`SliceSeg`] per binding in
+//! artifact parameter order, `Arc`-shared for broadcast segments and owned
+//! for keyed slices.
+//!
+//! A *piece* is the unit of storage for on-demand memoization and CDN
+//! pre-generation: for keyspace `ks`, the piece of key `k` is the
+//! concatenation, over the keyed bindings of `ks` in binding order, of that
+//! key's `groups × row_len` elements (group-major). [`SlicePlan::assemble`]
+//! reconstructs a client's bundle from pieces — the exact inverse used by
+//! both [`super::on_demand`] and [`super::pregen`], so Options 2 and 3 are
+//! byte-identical with Option 1's direct [`SlicePlan::fetch`].
 
-use crate::model::{Binding, ParamStore, SelectSpec};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::model::{Binding, KeyMap, ParamStore, SelectSpec};
+
+/// One delivered buffer: a broadcast segment shared across the cohort, or a
+/// keyed slice owned by this client.
+#[derive(Clone, Debug)]
+pub enum SliceSeg {
+    /// Broadcast-in-full segment, cloned once per round and `Arc`-shared.
+    Shared(Arc<Vec<f32>>),
+    /// Keyed slice materialized for one client.
+    Owned(Vec<f32>),
+}
+
+impl SliceSeg {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            SliceSeg::Shared(a) => a,
+            SliceSeg::Owned(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Take the data by value; a shared segment is unwrapped without a copy
+    /// when this is the last reference.
+    pub fn into_vec(self) -> Vec<f32> {
+        match self {
+            SliceSeg::Owned(v) => v,
+            SliceSeg::Shared(a) => Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()),
+        }
+    }
+}
+
+impl PartialEq for SliceSeg {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// A client's sub-model: one segment per binding, artifact parameter order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SliceBundle {
+    pub segs: Vec<SliceSeg>,
+}
+
+impl SliceBundle {
+    pub fn num_segs(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Total floats delivered (what the client must hold in memory).
+    pub fn total_floats(&self) -> usize {
+        self.segs.iter().map(|s| s.len()).sum()
+    }
+
+    /// Logical wire size of the bundle.
+    pub fn bytes(&self) -> u64 {
+        self.total_floats() as u64 * 4
+    }
+
+    pub fn as_slices(&self) -> Vec<&[f32]> {
+        self.segs.iter().map(|s| s.as_slice()).collect()
+    }
+
+    /// Consume into plain vectors (engine input); shared segments are only
+    /// copied if still aliased by other clients.
+    pub fn into_vecs(self) -> Vec<Vec<f32>> {
+        self.segs.into_iter().map(|s| s.into_vec()).collect()
+    }
+
+    /// Copy out as plain vectors (test/inspection helper).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        self.segs.iter().map(|s| s.as_slice().to_vec()).collect()
+    }
+}
 
 /// Compute the piece for (`keyspace`, `key`).
 pub fn piece_for_key(store: &ParamStore, spec: &SelectSpec, keyspace: usize, key: u32) -> Vec<f32> {
@@ -39,48 +132,181 @@ pub fn piece_bytes(spec: &SelectSpec, keyspace: usize) -> u64 {
     (spec.per_key_floats(keyspace) * 4) as u64
 }
 
-/// Assemble the client slice bundle (artifact parameter order) from pieces.
-///
-/// `get_piece(ks, key)` must return the piece produced by [`piece_for_key`].
-pub fn assemble<'a>(
-    store: &ParamStore,
-    spec: &SelectSpec,
-    keys: &[Vec<u32>],
-    mut get_piece: impl FnMut(usize, u32) -> &'a [f32],
-) -> Vec<Vec<f32>> {
-    // Per-keyspace offset of each keyed binding within a piece.
-    let nks = spec.keyspaces.len();
-    let mut offsets = vec![0usize; spec.bindings.len()];
-    let mut acc = vec![0usize; nks];
-    for (i, b) in spec.bindings.iter().enumerate() {
-        if let Binding::Keyed { keyspace, map, .. } = b {
-            offsets[i] = acc[*keyspace];
-            acc[*keyspace] += map.per_key();
-        }
-    }
-    let mut out = Vec::with_capacity(spec.bindings.len());
-    for (i, b) in spec.bindings.iter().enumerate() {
-        match b {
-            Binding::Full { seg } => out.push(store.segments[*seg].data.clone()),
-            Binding::Keyed { keyspace, map, .. } => {
-                let ks_keys = &keys[*keyspace];
-                let m = ks_keys.len();
-                let rl = map.row_len;
-                // append in (g, j) order: destination is strictly sequential
-                let mut buf = Vec::with_capacity(map.sliced_len(m));
-                for g in 0..map.groups {
-                    let s = offsets[i] + g * rl;
-                    for &k in ks_keys {
-                        let piece = get_piece(*keyspace, k);
-                        buf.extend_from_slice(&piece[s..s + rl]);
-                    }
+/// Resolved form of one binding inside a [`SlicePlan`].
+enum PlanEntry {
+    /// Broadcast segment, cloned once at plan build and shared from then on.
+    Full { data: Arc<Vec<f32>> },
+    /// Keyed binding: source segment + geometry + its offset inside a piece
+    /// of its keyspace.
+    Keyed {
+        seg: usize,
+        keyspace: usize,
+        map: KeyMap,
+        piece_offset: usize,
+    },
+}
+
+/// Per-round, immutable resolution of a [`SelectSpec`] against one
+/// [`ParamStore`] snapshot. Shared by every fetch of a round.
+pub struct SlicePlan {
+    entries: Vec<PlanEntry>,
+    keyspace_sizes: Vec<usize>,
+    /// Piece length (floats) per keyspace.
+    per_key_floats: Vec<usize>,
+    broadcast_floats: usize,
+}
+
+impl SlicePlan {
+    pub fn new(store: &ParamStore, spec: &SelectSpec) -> SlicePlan {
+        let nks = spec.keyspaces.len();
+        let mut acc = vec![0usize; nks];
+        let mut broadcast_floats = 0usize;
+        let mut entries = Vec::with_capacity(spec.bindings.len());
+        for b in &spec.bindings {
+            match b {
+                Binding::Full { seg } => {
+                    // the one and only per-round copy of a broadcast segment
+                    let data = Arc::new(store.segments[*seg].data.clone());
+                    broadcast_floats += data.len();
+                    entries.push(PlanEntry::Full { data });
                 }
-                debug_assert_eq!(buf.len(), map.sliced_len(m));
-                out.push(buf);
+                Binding::Keyed { seg, keyspace, map } => {
+                    entries.push(PlanEntry::Keyed {
+                        seg: *seg,
+                        keyspace: *keyspace,
+                        map: *map,
+                        piece_offset: acc[*keyspace],
+                    });
+                    acc[*keyspace] += map.per_key();
+                }
             }
         }
+        SlicePlan {
+            entries,
+            keyspace_sizes: spec.keyspaces.iter().map(|k| k.size).collect(),
+            per_key_floats: acc,
+            broadcast_floats,
+        }
     }
-    out
+
+    pub fn num_keyspaces(&self) -> usize {
+        self.keyspace_sizes.len()
+    }
+
+    /// Piece length (floats) of one key of `keyspace`.
+    pub fn per_key_floats(&self, keyspace: usize) -> usize {
+        self.per_key_floats[keyspace]
+    }
+
+    /// Bytes of one piece of `keyspace`.
+    pub fn piece_bytes(&self, keyspace: usize) -> u64 {
+        (self.per_key_floats[keyspace] * 4) as u64
+    }
+
+    /// Bytes broadcast to every client regardless of keys.
+    pub fn broadcast_bytes(&self) -> u64 {
+        self.broadcast_floats as u64 * 4
+    }
+
+    /// Keyed downlink bytes for one client's key sets.
+    pub fn keyed_bytes(&self, keys: &[Vec<u32>]) -> u64 {
+        keys.iter()
+            .enumerate()
+            .map(|(ks, kk)| kk.len() as u64 * self.piece_bytes(ks))
+            .sum()
+    }
+
+    /// Validate key-set arity and ranges up front (so concurrent fetches
+    /// fail with an error instead of an out-of-bounds panic).
+    pub fn check_keys(&self, keys: &[Vec<u32>]) -> Result<()> {
+        if keys.len() != self.keyspace_sizes.len() {
+            return Err(Error::Shape(format!(
+                "expected keys for {} keyspaces, got {}",
+                self.keyspace_sizes.len(),
+                keys.len()
+            )));
+        }
+        for (ks, kk) in keys.iter().enumerate() {
+            let size = self.keyspace_sizes[ks];
+            if let Some(&bad) = kk.iter().find(|&&k| k as usize >= size) {
+                return Err(Error::Shape(format!(
+                    "key {bad} out of range for keyspace {ks} (size {size})"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// ψ for one client, straight out of the store: broadcast segments are
+    /// `Arc`-shared (no per-client copy), keyed rows are copied directly
+    /// from their resolved spans — no intermediate per-key pieces.
+    pub fn fetch(&self, store: &ParamStore, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+        self.check_keys(keys)?;
+        let mut segs = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            match e {
+                PlanEntry::Full { data } => segs.push(SliceSeg::Shared(data.clone())),
+                PlanEntry::Keyed {
+                    seg, keyspace, map, ..
+                } => {
+                    let src = &store.segments[*seg].data;
+                    let kk = &keys[*keyspace];
+                    let rl = map.row_len;
+                    // destination (g, j) order is strictly sequential: build
+                    // by append, no zero-fill pass (§Perf)
+                    let mut buf = Vec::with_capacity(map.sliced_len(kk.len()));
+                    for g in 0..map.groups {
+                        let base = g * map.keys_total;
+                        for &k in kk {
+                            let s = (base + k as usize) * rl;
+                            buf.extend_from_slice(&src[s..s + rl]);
+                        }
+                    }
+                    debug_assert_eq!(buf.len(), map.sliced_len(kk.len()));
+                    segs.push(SliceSeg::Owned(buf));
+                }
+            }
+        }
+        Ok(SliceBundle { segs })
+    }
+
+    /// Assemble one client's bundle from per-key pieces.
+    ///
+    /// `get_piece(ks, key)` must return the piece produced by
+    /// [`piece_for_key`] against the same store/spec this plan was built on.
+    pub fn assemble<'p>(
+        &self,
+        keys: &[Vec<u32>],
+        mut get_piece: impl FnMut(usize, u32) -> &'p [f32],
+    ) -> Result<SliceBundle> {
+        self.check_keys(keys)?;
+        let mut segs = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            match e {
+                PlanEntry::Full { data } => segs.push(SliceSeg::Shared(data.clone())),
+                PlanEntry::Keyed {
+                    keyspace,
+                    map,
+                    piece_offset,
+                    ..
+                } => {
+                    let kk = &keys[*keyspace];
+                    let rl = map.row_len;
+                    let mut buf = Vec::with_capacity(map.sliced_len(kk.len()));
+                    for g in 0..map.groups {
+                        let s = piece_offset + g * rl;
+                        for &k in kk {
+                            let piece = get_piece(*keyspace, k);
+                            buf.extend_from_slice(&piece[s..s + rl]);
+                        }
+                    }
+                    debug_assert_eq!(buf.len(), map.sliced_len(kk.len()));
+                    segs.push(SliceSeg::Owned(buf));
+                }
+            }
+        }
+        Ok(SliceBundle { segs })
+    }
 }
 
 #[cfg(test)]
@@ -89,8 +315,22 @@ mod tests {
     use crate::model::ModelArch;
     use crate::tensor::rng::Rng;
 
+    fn random_keys(spec: &SelectSpec) -> Vec<Vec<u32>> {
+        spec.keyspaces
+            .iter()
+            .map(|ks| {
+                let m = (ks.size / 4).max(1);
+                Rng::new(ks.size as u64, 1)
+                    .sample_without_replacement(ks.size, m)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()
+            })
+            .collect()
+    }
+
     #[test]
-    fn assemble_from_pieces_equals_direct_slice() {
+    fn plan_fetch_and_assembly_equal_direct_slice() {
         for arch in [
             ModelArch::logreg(32),
             ModelArch::mlp2nn(),
@@ -99,30 +339,74 @@ mod tests {
         ] {
             let store = arch.init_store(&mut Rng::new(9, 0));
             let spec = arch.select_spec();
-            let keys: Vec<Vec<u32>> = spec
-                .keyspaces
-                .iter()
-                .map(|ks| {
-                    let m = (ks.size / 4).max(1);
-                    Rng::new(ks.size as u64, 1)
-                        .sample_without_replacement(ks.size, m)
-                        .into_iter()
-                        .map(|x| x as u32)
-                        .collect()
-                })
-                .collect();
-            // precompute all needed pieces
+            let keys = random_keys(&spec);
+            let plan = SlicePlan::new(&store, &spec);
+            let direct = spec.slice(&store, &keys).unwrap();
+
+            // Option 1 path: spans straight out of the store
+            let fetched = plan.fetch(&store, &keys).unwrap();
+            assert_eq!(fetched.to_vecs(), direct, "{arch:?} fetch");
+            assert_eq!(fetched.total_floats() as u64 * 4, fetched.bytes());
+
+            // Options 2/3 path: via precomputed pieces
             let mut pieces = std::collections::HashMap::new();
             for (ks, kk) in keys.iter().enumerate() {
                 for &k in kk {
                     pieces.insert((ks, k), piece_for_key(&store, &spec, ks, k));
                 }
             }
-            let assembled = assemble(&store, &spec, &keys, |ks, k| {
-                pieces.get(&(ks, k)).unwrap().as_slice()
-            });
-            let direct = spec.slice(&store, &keys).unwrap();
-            assert_eq!(assembled, direct, "{arch:?}");
+            let assembled = plan
+                .assemble(&keys, |ks, k| pieces.get(&(ks, k)).unwrap().as_slice())
+                .unwrap();
+            assert_eq!(assembled.to_vecs(), direct, "{arch:?} assemble");
         }
+    }
+
+    #[test]
+    fn broadcast_segments_are_shared_not_recopied() {
+        let arch = ModelArch::logreg(32);
+        let store = arch.init_store(&mut Rng::new(2, 0));
+        let spec = arch.select_spec();
+        let plan = SlicePlan::new(&store, &spec);
+        let keys = vec![vec![1u32, 3]];
+        let a = plan.fetch(&store, &keys).unwrap();
+        let b = plan.fetch(&store, &keys).unwrap();
+        // logreg binding 1 is the Full bias segment
+        match (&a.segs[1], &b.segs[1]) {
+            (SliceSeg::Shared(x), SliceSeg::Shared(y)) => {
+                assert!(Arc::ptr_eq(x, y), "clients must share one Arc per round")
+            }
+            other => panic!("expected shared segments, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_rejects_bad_keys() {
+        let arch = ModelArch::logreg(8);
+        let store = arch.init_store(&mut Rng::new(2, 0));
+        let spec = arch.select_spec();
+        let plan = SlicePlan::new(&store, &spec);
+        assert!(plan.fetch(&store, &[vec![255u32]]).is_err());
+        assert!(plan.fetch(&store, &[]).is_err());
+        assert!(plan
+            .assemble(&[vec![0u32], vec![0u32]], |_, _| &[])
+            .is_err());
+    }
+
+    #[test]
+    fn ledger_geometry_helpers_match_spec() {
+        let arch = ModelArch::transformer();
+        let store = arch.init_store(&mut Rng::new(4, 0));
+        let spec = arch.select_spec();
+        let plan = SlicePlan::new(&store, &spec);
+        assert_eq!(plan.num_keyspaces(), 2);
+        for ks in 0..2 {
+            assert_eq!(plan.per_key_floats(ks), spec.per_key_floats(ks));
+            assert_eq!(plan.piece_bytes(ks), piece_bytes(&spec, ks));
+        }
+        assert_eq!(
+            plan.broadcast_bytes(),
+            (spec.broadcast_floats(&store) * 4) as u64
+        );
     }
 }

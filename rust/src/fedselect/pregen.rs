@@ -1,38 +1,36 @@
 //! Option 3 (paper §3.2/§6): pre-generation of slices to a CDN.
 //!
-//! Before each round the server evaluates ψ for *every* key in every
-//! keyspace and publishes the pieces to the [`crate::cdn::CdnStore`];
-//! clients then query the CDN directly. Amortizes ψ across overlapping
-//! client key sets, moves serving off the training server, and enables the
-//! data-minimization barrier / PIR discussion of §6 — at the cost of
-//! computing slices nobody may download when K is large.
+//! `begin_round` evaluates ψ for *every* key in every keyspace and publishes
+//! the pieces to the [`crate::cdn::CdnStore`] as one version; the session
+//! then serves the whole cohort straight off the CDN (queries are `&self`
+//! and `Arc`-shared, so fetch threads contend on nothing but atomic
+//! counters). Amortizes ψ across overlapping client key sets, moves serving
+//! off the training server, and enables the data-minimization barrier / PIR
+//! discussion of §6 — at the cost of computing slices nobody may download
+//! when K is large.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use super::piece::{assemble, piece_bytes, piece_for_key};
-use super::{RoundComm, SliceService};
+use super::piece::{piece_for_key, SliceBundle, SlicePlan};
+use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::cdn::CdnStore;
 use crate::error::{Error, Result};
 use crate::model::{ParamStore, SelectSpec};
 
 pub struct PregenCdnService {
     cdn: CdnStore,
-    ledger: RoundComm,
 }
 
 impl PregenCdnService {
     pub fn new() -> Self {
         PregenCdnService {
             cdn: CdnStore::new(8),
-            ledger: RoundComm::default(),
         }
     }
 
     pub fn with_cdn(cdn: CdnStore) -> Self {
-        PregenCdnService {
-            cdn,
-            ledger: RoundComm::default(),
-        }
+        PregenCdnService { cdn }
     }
 
     pub fn cdn(&self) -> &CdnStore {
@@ -46,48 +44,67 @@ impl Default for PregenCdnService {
     }
 }
 
+struct PregenSession<'a> {
+    plan: SlicePlan,
+    cdn: &'a CdnStore,
+    ledger: CommLedger,
+}
+
 impl SliceService for PregenCdnService {
     fn name(&self) -> &'static str {
         "pregen-cdn"
     }
 
-    fn begin_round(&mut self, store: &ParamStore, spec: &SelectSpec) -> Result<()> {
+    fn begin_round<'a>(
+        &'a mut self,
+        store: &'a ParamStore,
+        spec: &'a SelectSpec,
+    ) -> Result<Box<dyn RoundSession + 'a>> {
         // ψ(x, k) for all k in all keyspaces, published as one version.
         let mut pieces = HashMap::new();
+        let mut psi = 0u64;
+        let mut us = 0u64;
         for (ks, keyspace) in spec.keyspaces.iter().enumerate() {
             for k in 0..keyspace.size as u32 {
                 let piece = piece_for_key(store, spec, ks, k);
-                self.ledger.psi_evals += 1;
-                self.ledger.service_us += 1 + piece.len() as u64 / 256;
+                psi += 1;
+                us += 1 + piece.len() as u64 / 256;
                 pieces.insert((ks, k), piece);
             }
         }
-        self.ledger.pregen_slices += pieces.len() as u64;
+        let pregen = pieces.len() as u64;
         self.cdn.publish(pieces);
-        Ok(())
+
+        let ledger = CommLedger::default();
+        ledger.add_psi_evals(psi);
+        ledger.add_service_us(us);
+        ledger.add_pregen_slices(pregen);
+        Ok(Box::new(PregenSession {
+            plan: SlicePlan::new(store, spec),
+            cdn: &self.cdn,
+            ledger,
+        }))
+    }
+}
+
+impl RoundSession for PregenSession<'_> {
+    fn name(&self) -> &'static str {
+        "pregen-cdn"
     }
 
-    fn fetch(
-        &mut self,
-        store: &ParamStore,
-        spec: &SelectSpec,
-        keys: &[Vec<u32>],
-    ) -> Result<Vec<Vec<f32>>> {
+    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+        self.plan.check_keys(keys)?;
         // keys go up to the CDN (not the training server)
         let total_keys: usize = keys.iter().map(|k| k.len()).sum();
-        self.ledger.up_key_bytes += (total_keys * 4) as u64;
-        self.ledger.cdn_queries += total_keys as u64;
+        self.ledger.add_up_key_bytes((total_keys * 4) as u64);
+        self.ledger.add_cdn_queries(total_keys as u64);
 
-        let bcast = spec.broadcast_floats(store) * 4;
-        let keyed: u64 = keys
-            .iter()
-            .enumerate()
-            .map(|(ks, kk)| kk.len() as u64 * piece_bytes(spec, ks))
-            .sum();
-        self.ledger.down_bytes += bcast as u64 + keyed;
+        self.ledger
+            .add_down_bytes(self.plan.broadcast_bytes() + self.plan.keyed_bytes(keys));
 
         // pull pieces through the CDN (records shard load / latency)
-        let mut fetched: HashMap<(usize, u32), Vec<f32>> = HashMap::new();
+        let mut fetched: HashMap<(usize, u32), Arc<Vec<f32>>> =
+            HashMap::with_capacity(total_keys);
         for (ks, kk) in keys.iter().enumerate() {
             for &k in kk {
                 if fetched.contains_key(&(ks, k)) {
@@ -96,20 +113,19 @@ impl SliceService for PregenCdnService {
                 let piece = self
                     .cdn
                     .query(ks, k)
-                    .ok_or_else(|| Error::Shape(format!("CDN missing piece ({ks}, {k})")))?
-                    .to_vec();
+                    .ok_or_else(|| Error::Shape(format!("CDN missing piece ({ks}, {k})")))?;
                 fetched.insert((ks, k), piece);
             }
         }
-        self.ledger.service_us = self.ledger.service_us.max(self.cdn.makespan_us());
-        Ok(assemble(store, spec, keys, |ks, k| {
-            fetched.get(&(ks, k)).expect("fetched above").as_slice()
-        }))
+        self.plan.assemble(keys, |ks, k| fetched[&(ks, k)].as_slice())
     }
 
-    fn end_round(&mut self) -> RoundComm {
+    fn finish(self: Box<Self>) -> RoundComm {
+        // the busiest shard bounds round completion (peak-demand accounting)
+        self.ledger.max_service_us(self.cdn.makespan_us());
+        let comm = self.ledger.snapshot();
         self.cdn.reset_stats();
-        std::mem::take(&mut self.ledger)
+        comm
     }
 }
 
@@ -125,14 +141,14 @@ mod tests {
         let store = arch.init_store(&mut Rng::new(2, 0));
         let spec = arch.select_spec();
         let mut svc = PregenCdnService::new();
-        svc.begin_round(&store, &spec).unwrap();
-        // vocab (2048) + ffn (512) pieces
-        assert_eq!(svc.cdn().num_pieces(), 2048 + 512);
+        let sess = svc.begin_round(&store, &spec).unwrap();
         let keys = vec![vec![0u32, 7, 2047], vec![3u32, 500]];
-        let got = svc.fetch(&store, &spec, &keys).unwrap();
+        let got = sess.fetch(&keys).unwrap().to_vecs();
         let want = spec.slice(&store, &keys).unwrap();
         assert_eq!(got, want);
-        let ledger = svc.end_round();
+        let ledger = sess.finish();
+        // vocab (2048) + ffn (512) pieces
+        assert_eq!(svc.cdn().num_pieces(), 2048 + 512);
         assert_eq!(ledger.pregen_slices, 2560);
         assert_eq!(ledger.cdn_queries, 5);
     }
@@ -143,8 +159,8 @@ mod tests {
         let store = arch.init_store(&mut Rng::new(2, 0));
         let spec = arch.select_spec();
         let mut svc = PregenCdnService::new();
-        svc.begin_round(&store, &spec).unwrap();
+        let sess = svc.begin_round(&store, &spec).unwrap();
         let bad = vec![vec![255u32]];
-        assert!(svc.fetch(&store, &spec, &bad).is_err());
+        assert!(sess.fetch(&bad).is_err());
     }
 }

@@ -52,7 +52,9 @@ pub mod prelude {
     pub use crate::coordinator::{RoundRecord, TrainReport, Trainer};
     pub use crate::data::FederatedDataset;
     pub use crate::error::{Error, Result};
-    pub use crate::fedselect::{KeyPolicy, SliceImpl, SliceService};
+    pub use crate::fedselect::{
+        ClientKeys, KeyPolicy, RoundSession, SliceBundle, SliceImpl, SliceService,
+    };
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
     pub use crate::optim::ServerOpt;
     pub use crate::tensor::rng::Rng;

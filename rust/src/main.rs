@@ -4,6 +4,7 @@
 //! fedselect train       [--model logreg|mlp|cnn|transformer] [--vocab N]
 //!                       [--policy top:M] [--policy2 random-global:D]
 //!                       [--rounds R] [--cohort C] [--slice-impl pregen]
+//!                       [--fetch-threads N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
 //!                       [--dropout P] [--engine native|pjrt]
@@ -81,6 +82,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         .str_or("slice-impl", "pregen")
         .parse::<SliceImpl>()
         .map_err(Error::Config)?;
+    cfg.fetch_threads = a.parse_or("fetch-threads", 1usize).map_err(Error::Config)?;
     cfg.server_opt = a
         .str_or("server-opt", "fedadagrad:0.1")
         .parse::<ServerOpt>()

@@ -11,18 +11,27 @@
 //!
 //! Executables are compiled lazily on first use and cached for the life of
 //! the process — one compiled executable per model variant.
+//!
+//! The real runtime needs the external `xla` bindings crate and is gated
+//! behind the `pjrt` cargo feature. Without it (the default, dependency-free
+//! build) a stub with the same API returns [`Error::Artifact`] from `load`,
+//! so everything that can run artifact-free (native engine, all logreg/MLP
+//! experiments, every test that skips on missing artifacts) still works.
 
 pub mod manifest;
 
 pub use manifest::{Artifact, IoSpec, Manifest};
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 use crate::error::{Error, Result};
 use crate::native::Buf;
 
 /// A PJRT CPU runtime bound to an artifacts directory.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -32,6 +41,7 @@ pub struct PjrtRuntime {
     exec_counts: HashMap<String, u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load the manifest and create the CPU PJRT client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -131,6 +141,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_literal(buf: &Buf, spec: &IoSpec) -> Result<xla::Literal> {
     let n: usize = spec.shape.iter().product::<usize>().max(1);
     if buf.len() != n {
@@ -169,4 +180,51 @@ fn to_literal(buf: &Buf, spec: &IoSpec) -> Result<xla::Literal> {
         }
     };
     Ok(lit)
+}
+
+/// Stub runtime for the dependency-free default build (no `pjrt` feature):
+/// same API surface, but `load` always fails with an explanation, so any
+/// `EngineKind::Pjrt` configuration errors out at `Trainer::new` instead of
+/// at link time.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    manifest: Manifest,
+    exec_counts: HashMap<String, u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::Artifact(format!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (artifacts dir {:?}); rebuild with `--features pjrt` and the \
+             `xla` bindings crate, or use `--engine native`",
+            dir.as_ref()
+        )))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.manifest.get(name)
+    }
+
+    pub fn execute(&mut self, name: &str, _inputs: &[Buf]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Artifact(format!(
+            "cannot execute {name:?}: built without the `pjrt` feature"
+        )))
+    }
+
+    /// Executions served per artifact so far.
+    pub fn exec_counts(&self) -> &HashMap<String, u64> {
+        &self.exec_counts
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled(&self) -> usize {
+        0
+    }
 }

@@ -63,6 +63,24 @@ fn slice_impls_identical_training_through_trainer() {
 }
 
 #[test]
+fn parallel_cohort_slicing_trains_byte_identically() {
+    // --fetch-threads is a pure throughput knob: same trajectory, same bytes
+    let mut cfg = logreg_cfg(256, 32);
+    cfg.rounds = 3;
+    cfg.slice_impl = SliceImpl::OnDemand;
+    let serial = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.fetch_threads = 4;
+    let parallel = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(
+        serial.final_eval.loss.to_bits(),
+        parallel.final_eval.loss.to_bits()
+    );
+    assert_eq!(serial.final_eval.metric.to_bits(), parallel.final_eval.metric.to_bits());
+    assert_eq!(serial.total_down_bytes, parallel.total_down_bytes);
+    assert_eq!(serial.total_up_bytes, parallel.total_up_bytes);
+}
+
+#[test]
 fn broadcast_downloads_more_than_selection() {
     let mut sel = logreg_cfg(512, 32);
     sel.rounds = 2;

@@ -13,11 +13,13 @@
 //! 6. IBLT merge/decode round-trips sparse (key, value) multisets
 //! 7. merged keyspaces == separate FedSelects (paper §3.3 composition)
 //! 8. key policies always yield m distinct in-range keys
+//! 9. `fetch_batch` over N threads is byte-identical to sequential
+//!    per-client `fetch`, for all three implementations
 
 use fedselect::aggregation::{AggMode, Aggregator, SecureAggSim, SparseAccumulator};
 use fedselect::aggregation::iblt::Iblt;
 use fedselect::data::{ClientData, Example};
-use fedselect::fedselect::{KeyPolicy, SliceImpl, SliceService};
+use fedselect::fedselect::{ClientKeys, KeyPolicy, RoundSession, SliceImpl, SliceService};
 use fedselect::model::{Binding, KeyMap, Keyspace, ModelArch, ParamStore, Segment, SelectSpec};
 use fedselect::tensor::rng::Rng;
 
@@ -127,11 +129,112 @@ fn prop_slice_services_are_interchangeable() {
         let mut outs = Vec::new();
         for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
             let mut svc = imp.build();
-            svc.begin_round(&store, &spec).unwrap();
-            outs.push(svc.fetch(&store, &spec, &keys).unwrap());
+            let session = svc.begin_round(&store, &spec).unwrap();
+            outs.push(session.fetch(&keys).unwrap().to_vecs());
         }
         assert_eq!(outs[0], outs[1], "case {case} broadcast vs on-demand");
         assert_eq!(outs[1], outs[2], "case {case} on-demand vs pregen");
+    }
+}
+
+/// Two-keyspace geometry (transformer-shaped): row-keyed embedding over
+/// keyspace 0, grouped-row dense over keyspace 1, plus a full bias.
+fn rand_multi_store_spec(rng: &mut Rng) -> (ParamStore, SelectSpec) {
+    let k0 = 2 + rng.below(24);
+    let r0 = 1 + rng.below(6);
+    let k1 = 2 + rng.below(16);
+    let r1 = 1 + rng.below(4);
+    let g = 1 + rng.below(4);
+    let mut emb = Segment::zeros("emb", &[k0, r0]);
+    for v in &mut emb.data {
+        *v = rng.normal();
+    }
+    let mut w = Segment::zeros("w", &[g * k1, r1]);
+    for v in &mut w.data {
+        *v = rng.normal();
+    }
+    let mut bias = Segment::zeros("b", &[5]);
+    for v in &mut bias.data {
+        *v = rng.normal();
+    }
+    let store = ParamStore {
+        segments: vec![emb, w, bias],
+    };
+    let spec = SelectSpec {
+        bindings: vec![
+            Binding::Keyed {
+                seg: 0,
+                keyspace: 0,
+                map: KeyMap::rows(k0, r0),
+            },
+            Binding::Keyed {
+                seg: 1,
+                keyspace: 1,
+                map: KeyMap::grouped_rows(g, k1, r1),
+            },
+            Binding::Full { seg: 2 },
+        ],
+        keyspaces: vec![
+            Keyspace {
+                name: "vocab".into(),
+                size: k0,
+            },
+            Keyspace {
+                name: "ffn".into(),
+                size: k1,
+            },
+        ],
+    };
+    spec.validate(&store).unwrap();
+    (store, spec)
+}
+
+#[test]
+fn prop_parallel_fetch_batch_is_byte_identical_to_sequential() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::new(0xBA7C4 + case as u64, 9);
+        // alternate single-keyspace and transformer-shaped geometries
+        let (store, spec) = if case % 2 == 0 {
+            rand_store_spec(&mut rng)
+        } else {
+            rand_multi_store_spec(&mut rng)
+        };
+        let cohort = 1 + rng.below(10);
+        let batch: Vec<ClientKeys> = (0..cohort)
+            .map(|_| {
+                spec.keyspaces
+                    .iter()
+                    .map(|ks| {
+                        let m = 1 + rng.below(ks.size);
+                        rand_keys(&mut rng, ks.size, m)
+                    })
+                    .collect()
+            })
+            .collect();
+        let threads = 2 + rng.below(7); // 2..=8, may exceed the cohort
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            let session = svc.begin_round(&store, &spec).unwrap();
+            let seq: Vec<Vec<Vec<f32>>> = batch
+                .iter()
+                .map(|keys| session.fetch(keys).unwrap().to_vecs())
+                .collect();
+            let par: Vec<Vec<Vec<f32>>> = session
+                .fetch_batch(&batch, threads)
+                .unwrap()
+                .into_iter()
+                .map(|b| b.to_vecs())
+                .collect();
+            assert_eq!(seq, par, "case {case} {imp} threads={threads}");
+            // and both equal the direct ψ of the spec
+            for (i, keys) in batch.iter().enumerate() {
+                assert_eq!(
+                    par[i],
+                    spec.slice(&store, keys).unwrap(),
+                    "case {case} {imp} client {i}"
+                );
+            }
+        }
     }
 }
 
