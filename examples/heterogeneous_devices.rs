@@ -3,143 +3,98 @@
 //! phones take a large key budget, low-end phones a small one — something
 //! plain BROADCAST fundamentally cannot do.
 //!
-//! This example partitions the client population into three device tiers,
-//! assigns each tier its own key budget, runs federated training rounds
-//! manually against the library primitives (slice service + deselect
-//! aggregation + server optimizer), and reports per-tier download/memory
-//! alongside model quality. It also injects client dropout (§6).
+//! Since the cohort-scheduler subsystem landed, this is first-class: the
+//! `tiered-3` fleet assigns every client a real [`DeviceProfile`] (downlink
+//! and uplink bandwidth, compute throughput, a memory cap, a failure
+//! hazard), the `memory-capped` policy clamps each selected client's select
+//! budget `m_i` to what its device can hold, and the `SimClock` reports
+//! straggler-bound simulated round wall-time instead of a hand-rolled
+//! dropout coin. Compare with the pre-scheduler revision of this file,
+//! which drove the slice service and aggregation by hand.
 //!
 //! ```text
 //! cargo run --release --example heterogeneous_devices
 //! ```
 
-use fedselect::aggregation::{AggMode, Aggregator, SparseAccumulator};
-use fedselect::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, Engine};
-use fedselect::coordinator::build_dataset;
-use fedselect::config::DatasetConfig;
+use fedselect::config::{DatasetConfig, TrainConfig};
 use fedselect::data::bow::BowConfig;
 use fedselect::error::Result;
-use fedselect::fedselect::{ClientKeys, KeyPolicy, RoundSession, SliceImpl, SliceService};
-use fedselect::metrics::{human_bytes, Table};
-use fedselect::model::ModelArch;
-use fedselect::optim::{Optimizer, ServerOpt};
-use fedselect::tensor::rng::Rng;
+use fedselect::fedselect::KeyPolicy;
+use fedselect::metrics::{fleet_summary, human_bytes};
+use fedselect::prelude::Trainer;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
 
-/// m per device tier — must match AOT client-update variants.
-const TIERS: [(&str, usize); 3] = [("low-end", 64), ("mid", 256), ("high-end", 1024)];
 const VOCAB: usize = 2048;
+const M: usize = 1024; // high-end budget; lower tiers are clamped from it
 const ROUNDS: usize = 12;
-const PER_TIER: usize = 6; // clients per tier per round
-const DROPOUT: f32 = 0.15;
 
 fn main() -> Result<()> {
-    let arch = ModelArch::logreg(VOCAB);
-    let ds_cfg = BowConfig::new(VOCAB, 50).with_clients(120, 0, 30);
-    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg));
-    let mut rng = Rng::new(42, 9);
-    let mut store = arch.init_store(&mut rng);
-    let spec = arch.select_spec();
-    let mut service = SliceImpl::PregenCdn.build();
-    let mut engine = Engine::Native;
-    let mut opt = Optimizer::new(ServerOpt::fedadagrad(0.1), &store);
+    let mut cfg = TrainConfig::logreg_default(VOCAB, M);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(VOCAB, 50).with_clients(120, 0, 30));
+    cfg.rounds = ROUNDS;
+    cfg.cohort = 18;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::MemoryCapped;
+    cfg.mem_cap_frac = 0.1; // low-end holds 10% of the server model
+    cfg.policies = vec![KeyPolicy::TopFreq { m: M }];
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 1500;
+    cfg.seed = 42;
 
-    let mut tier_down = [0u64; 3];
-    let mut tier_mem = [0usize; 3];
-    let mut dropped_total = 0usize;
-
-    for round in 0..ROUNDS {
-        let mut agg = SparseAccumulator::new(&store);
-        let cohort = dataset.sample_cohort(&mut rng, PER_TIER * TIERS.len());
-
-        // per-tier key budgets drawn up front: FedSelect serves
-        // different-*sized* sub-models from the same round session
-        let mut cohort_keys: Vec<ClientKeys> = Vec::with_capacity(cohort.len());
-        let mut cohort_rngs = Vec::with_capacity(cohort.len());
-        for (slot, &ci) in cohort.iter().enumerate() {
-            let (_, m) = TIERS[slot % TIERS.len()];
-            let client = &dataset.train[ci];
-            let mut crng = rng.fork(client.id ^ round as u64);
-            cohort_keys.push(vec![KeyPolicy::TopFreq { m }.keys_for(
-                client,
-                VOCAB,
-                &mut crng,
-                None,
-                false,
-            )]);
-            cohort_rngs.push(crng);
-        }
-
-        // one immutable session slices the whole heterogeneous cohort,
-        // 4 threads at a time
-        let session = service.begin_round(&store, &spec)?;
-        let bundles = session.fetch_batch(&cohort_keys, 4)?;
-
-        for (slot, (&ci, bundle)) in cohort.iter().zip(bundles.into_iter()).enumerate() {
-            let tier = slot % TIERS.len();
-            let (_, m) = TIERS[tier];
-            let client = &dataset.train[ci];
-            let crng = &mut cohort_rngs[slot];
-            let keys = &cohort_keys[slot];
-            tier_down[tier] += bundle.bytes();
-            if crng.f32() < DROPOUT {
-                dropped_total += 1;
-                continue; // downloaded, then dropped (§6 failure pattern)
-            }
-            let (batch, _) = build_cu_batch(&arch, client, keys, crng)?;
-            tier_mem[tier] =
-                tier_mem[tier].max(client_memory_bytes(bundle.total_floats(), &batch));
-            let deltas = engine.client_update(&arch, &[m], bundle.into_vecs(), &batch, 0.5)?;
-            agg.add_client(&spec, keys, &deltas)?;
-        }
-        let _ = session.finish();
-        let n = agg.num_clients();
-        if n > 0 {
-            let update = Box::new(agg).finalize(AggMode::CohortMean);
-            opt.step(&mut store, &update);
-        }
-        if (round + 1) % 4 == 0 {
-            println!("round {:>2}: completed cohort with dropouts so far = {dropped_total}", round + 1);
-        }
+    let mut trainer = Trainer::new(cfg)?;
+    {
+        let fleet = trainer.scheduler().fleet();
+        println!(
+            "fleet {}: {} clients in {} tiers {:?}",
+            fleet.kind,
+            fleet.len(),
+            fleet.num_tiers(),
+            (0..fleet.num_tiers())
+                .map(|t| fleet.tier_name(t))
+                .collect::<Vec<_>>()
+        );
     }
+    let report = trainer.run()?;
 
-    // evaluate the single global model all tiers co-trained
-    let pool: Vec<&fedselect::data::Example> = dataset
-        .test
-        .iter()
-        .flat_map(|c| c.examples.iter())
-        .take(1500)
-        .collect();
-    let (mut loss, mut rec, mut w) = (0.0, 0.0, 0.0);
-    for b in build_eval_batches(&arch, &pool)? {
-        let (l, r, ws) = engine.eval(&arch, &store, &b)?;
-        loss += l;
-        rec += r;
-        w += ws;
+    for rec in report.rounds.iter().filter(|r| r.round % 4 == 0) {
+        println!(
+            "round {:>2}: sim {:>6.2}s | per-tier completed {:?} dropped {:?}",
+            rec.round, rec.sim_round_s, rec.tier_completed, rec.tier_dropped
+        );
     }
     println!(
-        "\nglobal model after {ROUNDS} rounds: recall@5 {:.3}, loss {:.3} ({} eval examples)",
-        rec / w,
-        loss / w,
-        w as usize
+        "\nglobal model after {ROUNDS} rounds: recall@5 {:.3}, loss {:.3} \
+         | sim training time {:.1}s | down {}",
+        report.final_eval.metric,
+        report.final_eval.loss,
+        report.total_sim_s,
+        human_bytes(report.total_down_bytes),
     );
 
-    let mut t = Table::new(
-        "Per-tier cost (one global model, heterogeneous slices)",
-        &["tier", "m", "rel_size", "download_total", "peak_client_mem"],
+    let fleet = trainer.scheduler().fleet();
+    println!("{}", fleet_summary(fleet, &report.rounds).to_pretty());
+
+    // low-end devices must have downloaded less *per client served* than
+    // high-end ones: that asymmetry is the whole point of FedSelect
+    let served = |t: usize| -> u64 {
+        report
+            .rounds
+            .iter()
+            .map(|r| (r.tier_completed[t] + r.tier_dropped[t]) as u64)
+            .sum()
+    };
+    let down = |t: usize| -> u64 {
+        report.rounds.iter().map(|r| r.tier_down_bytes[t]).sum()
+    };
+    let per_client = |t: usize| down(t) as f64 / served(t).max(1) as f64;
+    println!(
+        "per-served-client download: low-end {} vs high-end {}",
+        human_bytes(per_client(0) as u64),
+        human_bytes(per_client(2) as u64),
     );
-    let server_floats = spec.server_floats(&store) as f64;
-    for (i, (name, m)) in TIERS.iter().enumerate() {
-        let rel = spec.client_floats(&store, &[*m]) as f64 / server_floats;
-        t.push(vec![
-            name.to_string(),
-            m.to_string(),
-            format!("{rel:.3}"),
-            human_bytes(tier_down[i]),
-            human_bytes(tier_mem[i] as u64),
-        ]);
-    }
-    println!("{}", t.to_pretty());
-    assert!(tier_down[0] < tier_down[2], "low-end must download less");
-    println!("dropped clients (post-download): {dropped_total}");
+    assert!(
+        per_client(0) < per_client(2),
+        "low-end must download less per client"
+    );
     Ok(())
 }

@@ -130,6 +130,10 @@ fn main() {
                     "  {imp} x{threads}: {cps:>8.0} clients/s  {mbps:>8.0} MB/s  ({:.2}x vs 1 thread)",
                     cps / base_cps.max(1e-9)
                 );
+                let name = format!("cohort_slicing/{imp}/threads={threads}");
+                b.metric(&name, "clients_per_s", cps);
+                b.metric(&name, "mb_per_s", mbps);
+                b.metric(&name, "speedup_vs_1thread", cps / base_cps.max(1e-9));
             }
         }
     }
@@ -159,4 +163,5 @@ fn main() {
     ) {
         b.note(&format!("broadcast/pregen wall ratio at K=8192,m=256: {r:.2}x"));
     }
+    b.write_json("BENCH_slice_service.json");
 }

@@ -3,12 +3,32 @@
 //! Each measurement warms up, then runs timed iterations and reports
 //! mean / p50 / p95 wall time. `--quick` (or BENCH_QUICK=1) cuts iteration
 //! counts for CI. Output is line-oriented: `bench <name>: mean=… p50=… p95=…`.
+//!
+//! Besides wall times, a bench can record named throughput/derived metrics
+//! via [`Bench::metric`]; [`Bench::write_json`] dumps everything as a
+//! machine-readable `BENCH_<name>.json` (schema `fedselect-bench-v1`) so
+//! runs can be diffed across commits — the repo's perf trajectory.
 
+// shared across all benches via `#[path]`; not every bench uses every helper
+#![allow(dead_code)]
+
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use fedselect::util::json::Json;
+
+#[derive(Clone, Copy, Debug)]
+struct Wall {
+    mean_ms: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    n: usize,
+}
 
 pub struct Bench {
     pub quick: bool,
-    results: Vec<(String, f64)>,
+    results: Vec<(String, Wall)>,
+    metrics: Vec<(String, BTreeMap<String, f64>)>,
 }
 
 impl Bench {
@@ -18,6 +38,7 @@ impl Bench {
         Bench {
             quick,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -42,7 +63,27 @@ impl Bench {
             "bench {name}: mean={mean:.3}ms p50={p50:.3}ms p95={p95:.3}ms (n={})",
             samples.len()
         );
-        self.results.push((name.to_string(), mean));
+        self.results.push((
+            name.to_string(),
+            Wall {
+                mean_ms: mean,
+                p50_ms: p50,
+                p95_ms: p95,
+                n: samples.len(),
+            },
+        ));
+    }
+
+    /// Record one derived metric (clients/s, MB/s, sim seconds, …) under a
+    /// measurement name; repeated calls with the same name merge keys.
+    pub fn metric(&mut self, name: &str, key: &str, value: f64) {
+        if let Some((_, m)) = self.metrics.iter_mut().find(|(n, _)| n == name) {
+            m.insert(key.to_string(), value);
+        } else {
+            let mut m = BTreeMap::new();
+            m.insert(key.to_string(), value);
+            self.metrics.push((name.to_string(), m));
+        }
     }
 
     /// Report a derived ratio between two recorded benches.
@@ -51,13 +92,53 @@ impl Bench {
             self.results
                 .iter()
                 .find(|(name, _)| name == n)
-                .map(|(_, v)| *v)
+                .map(|(_, v)| v.mean_ms)
         };
         Some(find(num)? / find(den)?)
     }
 
     pub fn note(&self, s: &str) {
         println!("note: {s}");
+    }
+
+    /// Write everything recorded so far as machine-readable JSON
+    /// (`fedselect-bench-v1`): wall times under `"wall_ms"`, derived
+    /// metrics under `"metrics"`.
+    pub fn write_json(&self, path: &str) {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str("fedselect-bench-v1".into()));
+        root.insert("quick".to_string(), Json::Bool(self.quick));
+        let walls: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, w)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("mean_ms".to_string(), Json::Num(w.mean_ms));
+                o.insert("p50_ms".to_string(), Json::Num(w.p50_ms));
+                o.insert("p95_ms".to_string(), Json::Num(w.p95_ms));
+                o.insert("n".to_string(), Json::Num(w.n as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("wall_ms".to_string(), Json::Arr(walls));
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|(name, m)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                for (k, v) in m {
+                    o.insert(k.clone(), Json::Num(*v));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("metrics".to_string(), Json::Arr(metrics));
+        match std::fs::write(path, Json::Obj(root).dump()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
     }
 }
 

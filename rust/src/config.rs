@@ -8,6 +8,7 @@ use crate::error::{Error, Result};
 use crate::fedselect::{KeyPolicy, SliceImpl};
 use crate::model::ModelArch;
 use crate::optim::ServerOpt;
+use crate::scheduler::{FleetKind, SchedPolicy};
 
 /// Which dataset generator feeds the run.
 #[derive(Clone, Debug)]
@@ -74,7 +75,18 @@ pub struct TrainConfig {
     pub secure_agg: bool,
     pub server_opt: ServerOpt,
     pub client_lr: f32,
-    /// Probability a client drops after fetching its slice (failure injection).
+    /// Device-population model the cohort scheduler draws from.
+    pub fleet: FleetKind,
+    /// Cohort-selection policy (`uniform` reproduces pre-scheduler behavior
+    /// byte-for-byte at the same seed).
+    pub sched_policy: SchedPolicy,
+    /// Memory cap of the lowest fleet tier, as a fraction of the full server
+    /// model (what `MemoryCapped` clamps select budgets against).
+    pub mem_cap_frac: f64,
+    /// **Deprecated**: scalar post-fetch dropout probability. Kept for
+    /// compatibility; the scheduler applies it as a fleet-wide failure
+    /// hazard floor (a `flaky-edge`-style hazard on every profile). Prefer
+    /// `fleet: FleetKind::FlakyEdge`.
     pub dropout_rate: f32,
     pub eval: EvalConfig,
     pub engine: EngineKind,
@@ -97,6 +109,9 @@ impl TrainConfig {
             secure_agg: false,
             server_opt: ServerOpt::fedadagrad(0.1),
             client_lr: 0.5,
+            fleet: FleetKind::Uniform,
+            sched_policy: SchedPolicy::Uniform,
+            mem_cap_frac: 0.25,
             dropout_rate: 0.0,
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
@@ -118,6 +133,9 @@ impl TrainConfig {
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
+            fleet: FleetKind::Uniform,
+            sched_policy: SchedPolicy::Uniform,
+            mem_cap_frac: 0.25,
             dropout_rate: 0.0,
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
@@ -139,6 +157,9 @@ impl TrainConfig {
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
+            fleet: FleetKind::Uniform,
+            sched_policy: SchedPolicy::Uniform,
+            mem_cap_frac: 0.25,
             dropout_rate: 0.0,
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
@@ -168,6 +189,9 @@ impl TrainConfig {
             secure_agg: false,
             server_opt: ServerOpt::fedadam(0.02),
             client_lr: 0.1,
+            fleet: FleetKind::Uniform,
+            sched_policy: SchedPolicy::Uniform,
+            mem_cap_frac: 0.25,
             dropout_rate: 0.0,
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
@@ -212,6 +236,23 @@ impl TrainConfig {
         }
         if !(0.0..1.0).contains(&self.dropout_rate) {
             return Err(Error::Config("dropout_rate must be in [0, 1)".into()));
+        }
+        if !(0.0..=1.0).contains(&self.mem_cap_frac) || self.mem_cap_frac == 0.0 {
+            return Err(Error::Config("mem_cap_frac must be in (0, 1]".into()));
+        }
+        if self.sched_policy == SchedPolicy::MemoryCapped {
+            // AllKeys (BROADCAST identity) and FixedPerRound (one shared
+            // cohort-wide slice) have no per-client budget to clamp —
+            // memory-capped scheduling would silently not cap them.
+            if let Some(p) = self.policies.iter().find(|p| {
+                matches!(p, KeyPolicy::AllKeys | KeyPolicy::FixedPerRound { .. })
+            }) {
+                return Err(Error::Config(format!(
+                    "sched_policy memory-capped cannot clamp budget-less key \
+                     policy {p} (AllKeys / FixedPerRound); use a per-client \
+                     key policy or a different scheduler policy"
+                )));
+            }
         }
         if self.fetch_threads == 0 {
             return Err(Error::Config(
@@ -298,6 +339,32 @@ mod tests {
         cfg.fetch_threads = 0;
         assert!(cfg.validate().is_err());
         assert!(cfg.with_fetch_threads(8).validate().is_ok());
+    }
+
+    #[test]
+    fn memory_capped_rejects_budgetless_key_policies() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.sched_policy = SchedPolicy::MemoryCapped;
+        assert!(cfg.validate().is_ok());
+        cfg.policies = vec![KeyPolicy::AllKeys];
+        assert!(cfg.validate().is_err());
+        cfg.policies = vec![KeyPolicy::FixedPerRound { m: 64 }];
+        assert!(cfg.validate().is_err());
+        cfg.sched_policy = SchedPolicy::Uniform;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_mem_cap_frac_rejected() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.mem_cap_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.mem_cap_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.mem_cap_frac = 0.1;
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.sched_policy = SchedPolicy::MemoryCapped;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! The round driver: federated model training with FedSelect (Algorithm 2).
 //!
-//! Each round runs in three phases:
-//! 1. **Keys** — sample a cohort (§5.1: uniform without replacement), fork
-//!    each client's RNG and draw its select keys via its [`KeyPolicy`], in
-//!    cohort order (the only phase that consumes the round RNG);
+//! Each round runs in four phases:
+//! 0. **Plan** — [`Scheduler::plan_round`] chooses the cohort from the
+//!    device fleet via the configured selection policy, with per-slot
+//!    failure hazards and (optionally) per-client select-key budgets; the
+//!    `uniform` fleet + `uniform` policy path is byte-identical to the
+//!    pre-scheduler inline sampling (§5.1: uniform without replacement);
+//! 1. **Keys** — fork each client's RNG and draw its select keys via its
+//!    [`KeyPolicy`] (re-budgeted per client when the plan says so), in
+//!    cohort order (phases 0–1 are the only consumers of the round RNG);
 //! 2. **Slice** — `begin_round` on the slice service (Option 3
 //!    pre-generates here) yields one immutable session, and the whole
 //!    cohort is sliced through [`RoundSession::fetch_batch`] across
@@ -13,11 +18,14 @@
 //!    into full model space (plain or secure-masked); updates are applied
 //!    sequentially in cohort-index order so the trajectory is byte-identical
 //!    at any `fetch_threads`; then `ServerUpdate` applies the server
-//!    optimizer to the pseudo-gradient.
+//!    optimizer to the pseudo-gradient, and
+//!    [`Scheduler::complete_round`] converts the per-client byte ledgers
+//!    into simulated round wall-time and per-tier completion counts.
 //!
-//! Failure injection: with `dropout_rate`, a client drops *after* fetching
-//! its slice (download wasted, no contribution) — the paper's §6 dropout
-//! pattern.
+//! Failure injection: a client drops *after* fetching its slice (download
+//! wasted, no contribution) with its profile's hazard — the paper's §6
+//! dropout pattern, per-device. The deprecated scalar `dropout_rate` floors
+//! every hazard, reproducing the old behavior exactly on the uniform fleet.
 
 use std::time::Instant;
 
@@ -31,6 +39,7 @@ use crate::metrics::human_bytes;
 use crate::model::{ModelArch, ParamStore, SelectSpec};
 use crate::optim::Optimizer;
 use crate::runtime::PjrtRuntime;
+use crate::scheduler::{ClientRoundStats, Scheduler, SliceGeometry};
 use crate::tensor::rng::Rng;
 
 /// Per-round ledger.
@@ -45,6 +54,14 @@ pub struct RoundRecord {
     /// Max client memory this round (bytes).
     pub max_client_mem: usize,
     pub wall_ms: f64,
+    /// Simulated round duration on the device fleet (straggler-bound).
+    pub sim_round_s: f64,
+    /// Completing clients per fleet tier.
+    pub tier_completed: Vec<usize>,
+    /// Post-fetch dropouts per fleet tier.
+    pub tier_dropped: Vec<usize>,
+    /// Download bytes per fleet tier (wasted downloads of dropouts included).
+    pub tier_down_bytes: Vec<u64>,
 }
 
 /// Periodic evaluation snapshot.
@@ -68,17 +85,20 @@ pub struct TrainReport {
     pub server_params: usize,
     pub total_down_bytes: u64,
     pub total_up_bytes: u64,
+    /// Simulated training time on the device fleet, seconds.
+    pub total_sim_s: f64,
 }
 
 impl TrainReport {
     pub fn summary(&self) -> String {
         format!(
-            "final metric {:.4} | loss {:.4} | rel size {:.3} | down {} | up {}",
+            "final metric {:.4} | loss {:.4} | rel size {:.3} | down {} | up {} | sim {:.1}s",
             self.final_eval.metric,
             self.final_eval.loss,
             self.rel_model_size,
             human_bytes(self.total_down_bytes),
             human_bytes(self.total_up_bytes),
+            self.total_sim_s,
         )
     }
 }
@@ -93,6 +113,8 @@ pub struct Trainer {
     service: Box<dyn SliceService>,
     engine: Engine,
     optimizer: Optimizer,
+    scheduler: Scheduler,
+    geom: SliceGeometry,
     rng: Rng,
     round: usize,
 }
@@ -100,40 +122,20 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
         cfg.validate()?;
-        let arch = cfg.arch.clone();
         let dataset = build_dataset(&cfg.dataset);
-        if dataset.train.is_empty() {
-            return Err(Error::Data("dataset has no training clients".into()));
-        }
-        let mut rng = Rng::new(cfg.seed, 100);
-        let store = arch.init_store(&mut rng);
-        let spec = arch.select_spec();
-        spec.validate(&store)?;
-        let service = cfg.slice_impl.build();
-        let engine = match &cfg.engine {
-            EngineKind::Native => Engine::Native,
-            EngineKind::Pjrt { artifacts_dir } => {
-                Engine::Pjrt(Box::new(PjrtRuntime::load(artifacts_dir)?))
-            }
-        };
-        let optimizer = Optimizer::new(cfg.server_opt, &store);
-        Ok(Trainer {
-            cfg,
-            arch,
-            store,
-            spec,
-            dataset,
-            service,
-            engine,
-            optimizer,
-            rng,
-            round: 0,
-        })
+        Self::build(cfg, dataset)
     }
 
     /// Construct with an externally built dataset (reused across a sweep).
     pub fn with_dataset(cfg: TrainConfig, dataset: FederatedDataset) -> Result<Self> {
         cfg.validate()?;
+        Self::build(cfg, dataset)
+    }
+
+    fn build(cfg: TrainConfig, dataset: FederatedDataset) -> Result<Self> {
+        if dataset.train.is_empty() {
+            return Err(Error::Data("dataset has no training clients".into()));
+        }
         let arch = cfg.arch.clone();
         let mut rng = Rng::new(cfg.seed, 100);
         let store = arch.init_store(&mut rng);
@@ -147,6 +149,20 @@ impl Trainer {
             }
         };
         let optimizer = Optimizer::new(cfg.server_opt, &store);
+        let geom = SliceGeometry {
+            base_ms: spec
+                .keyspaces
+                .iter()
+                .zip(cfg.policies.iter())
+                .map(|(ks, p)| p.m(ks.size))
+                .collect(),
+            per_key_floats: (0..spec.keyspaces.len())
+                .map(|ks| spec.per_key_floats(ks))
+                .collect(),
+            broadcast_floats: spec.broadcast_floats(&store),
+            server_floats: spec.server_floats(&store),
+        };
+        let scheduler = Scheduler::new(&cfg, dataset.train.len());
         Ok(Trainer {
             cfg,
             arch,
@@ -156,6 +172,8 @@ impl Trainer {
             service,
             engine,
             optimizer,
+            scheduler,
+            geom,
             rng,
             round: 0,
         })
@@ -163,6 +181,11 @@ impl Trainer {
 
     pub fn store(&self) -> &ParamStore {
         &self.store
+    }
+
+    /// The cohort scheduler (fleet, policy, simulated clock).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
     }
 
     pub fn dataset(&self) -> &FederatedDataset {
@@ -191,7 +214,15 @@ impl Trainer {
         let t0 = Instant::now();
         self.round += 1;
         let mut round_rng = self.rng.fork(self.round as u64);
-        let cohort = self.dataset.sample_cohort(&mut round_rng, self.cfg.cohort);
+
+        // Phase 0 — plan: the scheduler picks the cohort from the fleet.
+        // Under the uniform policy this is the identical
+        // sample_without_replacement draw the pre-scheduler coordinator
+        // made, so trajectories are byte-identical at the same seed.
+        let plan =
+            self.scheduler
+                .plan_round(self.round, self.cfg.cohort, &self.geom, &mut round_rng);
+        let cohort = &plan.cohort;
 
         // shared per-round key sets (Fig. 6 "fixed" ablation)
         let shared: Vec<Option<Vec<u32>>> = self
@@ -204,11 +235,12 @@ impl Trainer {
 
         let force_unk = matches!(self.arch, ModelArch::Transformer { .. });
 
-        // Phase 1 — keys: fork each client's RNG and draw its select keys,
-        // in cohort order (the only phase that consumes round_rng).
+        // Phase 1 — keys: fork each client's RNG and draw its select keys
+        // (re-budgeted per client when the plan carries key budgets), in
+        // cohort order (phases 0-1 are the only consumers of round_rng).
         let mut client_keys: Vec<ClientKeys> = Vec::with_capacity(cohort.len());
         let mut client_rngs: Vec<Rng> = Vec::with_capacity(cohort.len());
-        for &ci in &cohort {
+        for (slot, &ci) in cohort.iter().enumerate() {
             let client = &self.dataset.train[ci];
             let mut crng = round_rng.fork(client.id ^ 0xC11E47);
             let keys: ClientKeys = self
@@ -217,6 +249,10 @@ impl Trainer {
                 .iter()
                 .enumerate()
                 .map(|(ksi, p)| {
+                    let p = match &plan.key_budgets {
+                        Some(budgets) => p.with_m(budgets[slot][ksi]),
+                        None => *p,
+                    };
                     p.keys_for(
                         client,
                         self.spec.keyspaces[ksi].size,
@@ -252,19 +288,29 @@ impl Trainer {
         let mut completed = 0usize;
         let mut up_bytes_plain = 0u64;
         let mut max_mem = 0usize;
+        let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
         for (i, bundle) in bundles.into_iter().enumerate() {
             let client = &self.dataset.train[cohort[i]];
             let crng = &mut client_rngs[i];
             let keys = &client_keys[i];
+            let down_bytes = bundle.bytes();
+            let slice_floats = bundle.total_floats();
 
-            // failure injection: drop after download
-            if self.cfg.dropout_rate > 0.0 && crng.f32() < self.cfg.dropout_rate {
+            // failure injection: drop after download, with the profile's
+            // hazard (the coin is only flipped when the hazard is nonzero,
+            // matching the legacy `dropout_rate > 0` gate bit for bit)
+            if plan.hazards[i] > 0.0 && crng.f32() < plan.hazards[i] {
                 dropped += 1;
+                stats.push(ClientRoundStats {
+                    down_bytes,
+                    dropped: true,
+                    ..ClientRoundStats::default()
+                });
                 continue;
             }
 
             let (batch, _used) = build_cu_batch(&self.arch, client, keys, crng)?;
-            max_mem = max_mem.max(client_memory_bytes(bundle.total_floats(), &batch));
+            max_mem = max_mem.max(client_memory_bytes(slice_floats, &batch));
             let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
             let deltas = self.engine.client_update(
                 &self.arch,
@@ -273,15 +319,27 @@ impl Trainer {
                 &batch,
                 self.cfg.client_lr,
             )?;
-            up_bytes_plain += deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
+            let plain_up = deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
                 + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+            let client_up = if self.cfg.secure_agg {
+                // §4.2: client-side φ + dense secure agg uploads a
+                // full-model-sized masked vector.
+                self.store.bytes() as u64
+            } else {
+                plain_up
+            };
+            up_bytes_plain += plain_up;
             agg.add_client(&self.spec, keys, &deltas)?;
             completed += 1;
+            stats.push(ClientRoundStats {
+                down_bytes,
+                up_bytes: client_up,
+                compute_units: slice_floats as f64 * client.num_examples() as f64,
+                dropped: false,
+            });
         }
 
         let up_bytes = if self.cfg.secure_agg {
-            // §4.2: client-side φ + dense secure agg uploads full-model-sized
-            // masked vectors.
             completed as u64 * self.store.bytes() as u64
         } else {
             up_bytes_plain
@@ -292,6 +350,8 @@ impl Trainer {
             self.optimizer.step(&mut self.store, &update);
         }
 
+        let sim = self.scheduler.complete_round(&plan, &stats);
+
         Ok(RoundRecord {
             round: self.round,
             completed,
@@ -300,6 +360,10 @@ impl Trainer {
             up_bytes,
             max_client_mem: max_mem,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            sim_round_s: sim.sim_round_s,
+            tier_completed: sim.tier_completed,
+            tier_dropped: sim.tier_dropped,
+            tier_down_bytes: sim.tier_down_bytes,
         })
     }
 
@@ -353,6 +417,7 @@ impl Trainer {
             server_params: self.store.num_params(),
             total_down_bytes: rounds.iter().map(|r| r.comm.down_bytes).sum(),
             total_up_bytes: rounds.iter().map(|r| r.up_bytes).sum(),
+            total_sim_s: rounds.iter().map(|r| r.sim_round_s).sum(),
             rounds,
             evals,
             final_eval,
@@ -455,6 +520,49 @@ mod tests {
             assert_eq!(serial.total_down_bytes, parallel.total_down_bytes, "{imp}");
             assert_eq!(serial.total_up_bytes, parallel.total_up_bytes, "{imp}");
         }
+    }
+
+    #[test]
+    fn tiered_fleet_memory_capped_reports_per_tier_completions() {
+        use crate::scheduler::{FleetKind, SchedPolicy};
+        let mut cfg = tiny_cfg();
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.sched_policy = SchedPolicy::MemoryCapped;
+        cfg.mem_cap_frac = 0.2;
+        let mut t = Trainer::new(cfg).unwrap();
+        let report = t.run().unwrap();
+        for rec in &report.rounds {
+            assert_eq!(rec.tier_completed.len(), 3);
+            assert_eq!(
+                rec.tier_completed.iter().sum::<usize>(),
+                rec.completed,
+                "per-tier completions must partition the cohort"
+            );
+            assert_eq!(rec.tier_dropped.iter().sum::<usize>(), rec.dropped);
+            assert!(rec.sim_round_s > 0.0);
+        }
+        assert!(report.total_sim_s > 0.0);
+        assert!(report.final_eval.loss.is_finite());
+    }
+
+    #[test]
+    fn memory_capped_budgets_shrink_low_tier_downloads() {
+        use crate::scheduler::{FleetKind, SchedPolicy};
+        let mut base = tiny_cfg();
+        base.fleet = FleetKind::Tiered3;
+        base.rounds = 2;
+        let mut capped = base.clone();
+        capped.sched_policy = SchedPolicy::MemoryCapped;
+        capped.mem_cap_frac = 0.1;
+        let ru = Trainer::new(base).unwrap().run().unwrap();
+        let rc = Trainer::new(capped).unwrap().run().unwrap();
+        // same cohorts (MemoryCapped samples like Uniform), smaller slices
+        assert!(
+            rc.total_down_bytes < ru.total_down_bytes,
+            "capped {} !< uniform {}",
+            rc.total_down_bytes,
+            ru.total_down_bytes
+        );
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //! | `table3` | 2NN final accuracy ± std vs m |
 //! | `fig6`   | fixed-per-round vs independent random keys |
 //! | `fig7`   | transformer: structured / random / mixed frontier |
+//! | `sched`  | (beyond the paper) cohort-scheduler policy × fleet sweep |
 
 mod emnist;
 mod logreg;
+mod scheduler;
 mod table1;
 mod transformer;
 
@@ -50,7 +52,7 @@ impl ExpOptions {
 
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
-    "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7",
+    "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -66,6 +68,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "table3" => emnist::table3(opts)?,
         "fig6" => emnist::fig6(opts)?,
         "fig7" => transformer::fig7(opts)?,
+        "sched" => scheduler::sweep(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

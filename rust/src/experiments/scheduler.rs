@@ -1,0 +1,114 @@
+//! Cohort-scheduler policy sweep: the systems scenario the paper's §5–6
+//! setup cannot express. One workload (logreg tag prediction), several
+//! device fleets, all four selection policies — comparing model quality,
+//! completion/dropout tallies, downloaded bytes, and *simulated* round
+//! wall-time (the straggler-bound SimClock metric real deployments care
+//! about, not host wall time).
+
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::build_dataset;
+use crate::coordinator::Trainer;
+use crate::data::bow::BowConfig;
+use crate::error::Result;
+use crate::metrics::{mean_std, Table};
+use crate::scheduler::{FleetKind, SchedPolicy};
+
+use super::ExpOptions;
+
+/// `--id sched`: policy × fleet comparison table.
+pub fn sweep(opts: &ExpOptions) -> Result<Vec<Table>> {
+    // m chosen so the tiered fleet's low/mid memory caps genuinely clamp
+    // (keyed floats at full budget exceed mem_cap_frac of the model)
+    let (vocab, m) = (1024usize, 512usize);
+    let (rounds, cohort, n_clients) = if opts.quick { (4, 10, 40) } else { (12, 20, 120) };
+    let ds_cfg = BowConfig::new(vocab, 50).with_clients(n_clients, 8, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let mut t = Table::new(
+        "Cohort policy sweep (simulated device fleets)",
+        &[
+            "fleet",
+            "policy",
+            "final_metric",
+            "completed",
+            "dropped",
+            "sim_round_s_mean",
+            "sim_round_s_std",
+            "sim_total_s",
+            "down_MB",
+        ],
+    );
+    for fleet in [FleetKind::Uniform, FleetKind::Tiered3, FleetKind::FlakyEdge] {
+        for policy in SchedPolicy::ALL {
+            let mut cfg = TrainConfig::logreg_default(vocab, m);
+            cfg.dataset = DatasetConfig::Bow(ds_cfg.clone());
+            cfg.engine = opts.engine.clone();
+            cfg.rounds = rounds;
+            cfg.cohort = cohort;
+            cfg.eval.every = 0;
+            cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
+            cfg.fleet = fleet;
+            cfg.sched_policy = policy;
+            cfg.mem_cap_frac = 0.25;
+            cfg.seed = 1000;
+            let mut tr = Trainer::with_dataset(cfg, dataset.clone())?;
+            let report = tr.run()?;
+            let sim_rounds: Vec<f64> = report.rounds.iter().map(|r| r.sim_round_s).collect();
+            let (sim_mean, sim_std) = mean_std(&sim_rounds);
+            t.push(vec![
+                fleet.to_string(),
+                policy.to_string(),
+                format!("{:.4}", report.final_eval.metric),
+                report
+                    .rounds
+                    .iter()
+                    .map(|r| r.completed)
+                    .sum::<usize>()
+                    .to_string(),
+                report
+                    .rounds
+                    .iter()
+                    .map(|r| r.dropped)
+                    .sum::<usize>()
+                    .to_string(),
+                format!("{sim_mean:.2}"),
+                format!("{sim_std:.2}"),
+                format!("{:.1}", report.total_sim_s),
+                format!("{:.2}", report.total_down_bytes as f64 / 1e6),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    #[test]
+    fn sweep_runs_quick_and_covers_every_cell() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_sched_sweep")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let tables = sweep(&opts).unwrap();
+        assert_eq!(tables.len(), 1);
+        // 3 fleets x 4 policies
+        assert_eq!(tables[0].rows.len(), 12);
+        // memory-capped on tiered-3 downloads less than uniform on tiered-3
+        let down = |fleet: &str, policy: &str| -> f64 {
+            tables[0]
+                .rows
+                .iter()
+                .find(|r| r[0] == fleet && r[1] == policy)
+                .unwrap()[8]
+                .parse()
+                .unwrap()
+        };
+        assert!(down("tiered-3", "memory-capped") < down("tiered-3", "uniform"));
+    }
+}

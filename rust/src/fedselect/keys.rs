@@ -38,6 +38,22 @@ impl KeyPolicy {
         }
     }
 
+    /// The same policy with its key budget replaced by `m` — how the
+    /// scheduler's per-client budgets (e.g. `MemoryCapped`) are applied.
+    /// `AllKeys` and `FixedPerRound` are budget-less (the former is the
+    /// BROADCAST identity, the latter serves one shared cohort-wide slice)
+    /// and are returned unchanged.
+    pub fn with_m(self, m: usize) -> KeyPolicy {
+        match self {
+            KeyPolicy::TopFreq { .. } => KeyPolicy::TopFreq { m },
+            KeyPolicy::RandomLocal { .. } => KeyPolicy::RandomLocal { m },
+            KeyPolicy::RandomTopLocal { .. } => KeyPolicy::RandomTopLocal { m },
+            KeyPolicy::RandomGlobal { .. } => KeyPolicy::RandomGlobal { m },
+            KeyPolicy::FixedPerRound { m: orig } => KeyPolicy::FixedPerRound { m: orig },
+            KeyPolicy::AllKeys => KeyPolicy::AllKeys,
+        }
+    }
+
     /// Whether the coordinator must draw one shared key set per round.
     pub fn needs_round_keys(&self) -> bool {
         matches!(self, KeyPolicy::FixedPerRound { .. })
@@ -286,5 +302,22 @@ mod tests {
     #[test]
     fn clamps_m_to_keyspace() {
         assert_eq!(KeyPolicy::RandomGlobal { m: 100 }.m(16), 16);
+    }
+
+    #[test]
+    fn with_m_rebudgets_only_budgeted_policies() {
+        assert_eq!(
+            KeyPolicy::TopFreq { m: 64 }.with_m(8),
+            KeyPolicy::TopFreq { m: 8 }
+        );
+        assert_eq!(
+            KeyPolicy::RandomGlobal { m: 64 }.with_m(8),
+            KeyPolicy::RandomGlobal { m: 8 }
+        );
+        assert_eq!(KeyPolicy::AllKeys.with_m(8), KeyPolicy::AllKeys);
+        assert_eq!(
+            KeyPolicy::FixedPerRound { m: 64 }.with_m(8),
+            KeyPolicy::FixedPerRound { m: 64 }
+        );
     }
 }

@@ -7,9 +7,11 @@
 //! Layer 3 (this crate) is the federated coordinator: the `FEDSELECT`
 //! primitive and its three system implementations, sparse deselection
 //! aggregation (plain / secure-masked / IBLT), server optimizers, the round
-//! driver of the paper's Algorithm 2, synthetic federated datasets, a CDN
-//! substrate with a PIR cost model, and the experiment harness regenerating
-//! every table and figure of the paper's §5.
+//! driver of the paper's Algorithm 2, a cohort [`scheduler`] (device-profile
+//! fleets, pluggable selection policies, simulated round wall-time),
+//! synthetic federated datasets, a CDN substrate with a PIR cost model, and
+//! the experiment harness regenerating every table and figure of the
+//! paper's §5.
 //!
 //! Layers 2 and 1 (JAX models and Pallas kernels) are compiled once at build
 //! time (`make artifacts`) into HLO-text artifacts which [`runtime`] loads
@@ -41,6 +43,7 @@ pub mod model;
 pub mod native;
 pub mod optim;
 pub mod runtime;
+pub mod scheduler;
 pub mod tensor;
 pub mod util;
 
@@ -57,5 +60,8 @@ pub mod prelude {
     };
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
     pub use crate::optim::ServerOpt;
+    pub use crate::scheduler::{
+        DeviceProfile, Fleet, FleetKind, SchedPolicy, Scheduler, SelectionPolicy, SimClock,
+    };
     pub use crate::tensor::rng::Rng;
 }

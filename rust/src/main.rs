@@ -2,19 +2,29 @@
 //!
 //! ```text
 //! fedselect train       [--model logreg|mlp|cnn|transformer] [--vocab N]
-//!                       [--policy top:M] [--policy2 random-global:D]
+//!                       [--key-policy top:M] [--policy2 random-global:D]
+//!                       [--fleet uniform|tiered-3|diurnal|flaky-edge]
+//!                       [--sched-policy uniform|availability-aware|
+//!                                       memory-capped|staleness-fair]
+//!                       [--mem-cap-frac F]
 //!                       [--rounds R] [--cohort C] [--slice-impl pregen]
 //!                       [--fetch-threads N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
-//!                       [--dropout P] [--engine native|pjrt]
+//!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
-//! fedselect experiment  --id table1|fig2..fig7|table2|table3|all|list
+//! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
 //! fedselect info
 //! ```
+//!
+//! `--policy` accepts either namespace — a key policy (`top:256`) or a
+//! scheduler policy (`memory-capped`); the spellings are disjoint. A bare
+//! `fedselect --fleet tiered-3 --policy memory-capped` (no subcommand)
+//! trains. `--dropout` / `--dropout-rate` are deprecated but accepted: the
+//! scalar is mapped onto a fleet-wide failure hazard.
 
 use fedselect::aggregation::AggMode;
 use fedselect::config::{EngineKind, TrainConfig};
@@ -22,9 +32,10 @@ use fedselect::coordinator::Trainer;
 use fedselect::error::{Error, Result};
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
-use fedselect::metrics::human_bytes;
+use fedselect::metrics::{fleet_summary, human_bytes};
 use fedselect::optim::ServerOpt;
 use fedselect::runtime::PjrtRuntime;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
 use fedselect::util::cli::Args;
 
 fn parse_engine(engine: &str, dir: &str) -> Result<EngineKind> {
@@ -42,8 +53,29 @@ fn parse_engine(engine: &str, dir: &str) -> Result<EngineKind> {
 fn cmd_train(a: &Args) -> Result<()> {
     let model = a.str_or("model", "logreg");
     let vocab = a.parse_or("vocab", 2048usize).map_err(Error::Config)?;
-    let p0: KeyPolicy = a
-        .str_or("policy", "top:256")
+
+    // --policy historically named the key policy; it now also accepts a
+    // scheduler policy (the namespaces are disjoint). --key-policy and
+    // --sched-policy are the unambiguous spellings.
+    let mut sched_policy: Option<SchedPolicy> = None;
+    let mut key_policy_src: Option<String> = a.get("key-policy").map(str::to_string);
+    if let Some(v) = a.get("policy") {
+        if let Ok(sp) = v.parse::<SchedPolicy>() {
+            sched_policy = Some(sp);
+        } else if key_policy_src.is_none() {
+            key_policy_src = Some(v.to_string());
+        } else {
+            return Err(Error::Config(format!(
+                "--policy {v:?} is not a scheduler policy, and --key-policy is already given"
+            )));
+        }
+    }
+    if let Some(v) = a.get("sched-policy") {
+        sched_policy = Some(v.parse::<SchedPolicy>().map_err(Error::Config)?);
+    }
+    let p0: KeyPolicy = key_policy_src
+        .as_deref()
+        .unwrap_or("top:256")
         .parse()
         .map_err(Error::Config)?;
     let mut cfg = match model.as_str() {
@@ -93,7 +125,25 @@ fn cmd_train(a: &Args) -> Result<()> {
         .parse::<AggMode>()
         .map_err(Error::Config)?;
     cfg.secure_agg = a.flag("secure-agg");
-    cfg.dropout_rate = a.parse_or("dropout", 0.0f32).map_err(Error::Config)?;
+    cfg.fleet = a
+        .str_or("fleet", "uniform")
+        .parse::<FleetKind>()
+        .map_err(Error::Config)?;
+    if let Some(sp) = sched_policy {
+        cfg.sched_policy = sp;
+    }
+    cfg.mem_cap_frac = a.parse_or("mem-cap-frac", 0.25f64).map_err(Error::Config)?;
+    // deprecated scalar dropout: accepted under both historical spellings,
+    // mapped onto a fleet-wide failure hazard (flaky-edge style)
+    let dropout = a.parse_or("dropout", 0.0f32).map_err(Error::Config)?;
+    let dropout = a.parse_or("dropout-rate", dropout).map_err(Error::Config)?;
+    if dropout > 0.0 {
+        eprintln!(
+            "warning: --dropout/--dropout-rate is deprecated; the scalar is applied \
+             as a per-client failure hazard floor — prefer --fleet flaky-edge"
+        );
+    }
+    cfg.dropout_rate = dropout;
     let dir = a.str_or("artifacts-dir", "artifacts");
     cfg.engine = parse_engine(&a.str_or("engine", "native"), &dir)?;
     cfg.seed = a.parse_or("seed", 7u64).map_err(Error::Config)?;
@@ -122,6 +172,25 @@ fn cmd_train(a: &Args) -> Result<()> {
             last.comm.psi_evals,
             last.comm.cache_hits,
             last.comm.cdn_queries
+        );
+        let fleet = tr.scheduler().fleet();
+        let tiers: Vec<String> = last
+            .tier_completed
+            .iter()
+            .enumerate()
+            .map(|(t, &c)| format!("{}={}c/{}d", fleet.tier_name(t), c, last.tier_dropped[t]))
+            .collect();
+        println!(
+            "sim (last round): {:.2}s | total {:.1}s | per-tier completed/dropped: {}",
+            last.sim_round_s,
+            report.total_sim_s,
+            tiers.join(" ")
+        );
+    }
+    if tr.scheduler().fleet().num_tiers() > 1 {
+        println!(
+            "{}",
+            fleet_summary(tr.scheduler().fleet(), &report.rounds).to_pretty()
         );
     }
     println!("{}", report.summary());
@@ -196,6 +265,9 @@ fn real_main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        // a bare flags-only invocation (e.g. `fedselect --fleet tiered-3
+        // --policy memory-capped`) trains; a truly bare one prints info
+        None if args.has_flags() => cmd_train(&args),
         Some("info") | None => {
             println!(
                 "fedselect {} — Federated Select reproduction",

@@ -1,10 +1,12 @@
-//! Metrics plumbing: aggregate statistics, CSV emission, and markdown
-//! tables for EXPERIMENTS.md.
+//! Metrics plumbing: aggregate statistics, CSV emission, markdown tables
+//! for EXPERIMENTS.md, and the per-tier fleet summary of a training run.
 
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::coordinator::RoundRecord;
 use crate::error::Result;
+use crate::scheduler::Fleet;
 
 /// Mean and (population) standard deviation of a sample.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
@@ -31,6 +33,55 @@ pub fn human_bytes(b: u64) -> String {
     } else {
         format!("{v:.2} {}", UNITS[u])
     }
+}
+
+/// Human-readable byte rate.
+pub fn human_rate(bps: f64) -> String {
+    format!("{}/s", human_bytes(bps.max(0.0) as u64))
+}
+
+/// Per-tier summary of a scheduled training run: population, device
+/// characteristics, and selection/completion/download tallies across the
+/// recorded rounds.
+pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
+    let tiers = fleet.num_tiers();
+    let sizes = fleet.tier_sizes();
+    let mut completed = vec![0usize; tiers];
+    let mut dropped = vec![0usize; tiers];
+    let mut down = vec![0u64; tiers];
+    for r in rounds {
+        for t in 0..tiers {
+            completed[t] += r.tier_completed.get(t).copied().unwrap_or(0);
+            dropped[t] += r.tier_dropped.get(t).copied().unwrap_or(0);
+            down[t] += r.tier_down_bytes.get(t).copied().unwrap_or(0);
+        }
+    }
+    let mut table = Table::new(
+        &format!("Fleet summary ({})", fleet.kind),
+        &[
+            "tier", "clients", "mem_frac", "mean_down", "hazard", "selected", "completed",
+            "dropped", "down_total",
+        ],
+    );
+    for t in 0..tiers {
+        let profiles: Vec<_> = fleet.profiles.iter().filter(|p| p.tier == t).collect();
+        let n = profiles.len().max(1) as f64;
+        let mean_down = profiles.iter().map(|p| p.down_bps).sum::<f64>() / n;
+        let mean_mem = profiles.iter().map(|p| p.mem_frac).sum::<f64>() / n;
+        let mean_hazard = profiles.iter().map(|p| p.hazard as f64).sum::<f64>() / n;
+        table.push(vec![
+            fleet.tier_name(t).to_string(),
+            sizes[t].to_string(),
+            format!("{mean_mem:.2}"),
+            human_rate(mean_down),
+            format!("{mean_hazard:.3}"),
+            (completed[t] + dropped[t]).to_string(),
+            completed[t].to_string(),
+            dropped[t].to_string(),
+            human_bytes(down[t]),
+        ]);
+    }
+    table
 }
 
 /// A simple table that renders to CSV and markdown.
@@ -147,5 +198,31 @@ mod tests {
     fn arity_mismatch_panics() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fleet_summary_tallies_tiers() {
+        use crate::fedselect::RoundComm;
+        use crate::scheduler::FleetKind;
+        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25);
+        let rec = RoundRecord {
+            round: 1,
+            completed: 5,
+            dropped: 1,
+            comm: RoundComm::default(),
+            up_bytes: 0,
+            max_client_mem: 0,
+            wall_ms: 0.0,
+            sim_round_s: 2.0,
+            tier_completed: vec![2, 2, 1],
+            tier_dropped: vec![1, 0, 0],
+            tier_down_bytes: vec![100, 200, 300],
+        };
+        let t = fleet_summary(&fleet, &[rec.clone(), rec]);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "low-end");
+        assert_eq!(t.rows[0][6], "4"); // completed: 2 rounds x 2
+        assert_eq!(t.rows[0][7], "2"); // dropped
+        assert!(human_rate(2e6).ends_with("/s"));
     }
 }

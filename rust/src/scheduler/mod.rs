@@ -1,0 +1,394 @@
+//! Cohort scheduler: who trains this round, with what budget, and how long
+//! the round takes on real devices.
+//!
+//! The paper's coordinator samples cohorts uniformly and injects failures
+//! with one scalar post-fetch dropout rate (§5.1, §6). FedSelect's central
+//! promise — data-dependent slices that *fit heterogeneous devices* — only
+//! pays off when who is selected and how much each device can hold is
+//! modeled per client. This subsystem makes that first-class:
+//!
+//! * [`Fleet`] / [`DeviceProfile`] ([`profiles`]) — a device-population
+//!   model (bandwidth, compute, memory cap, availability trace, failure
+//!   hazard), generated deterministically from the run seed;
+//! * [`SelectionPolicy`] ([`policy`]) — pluggable cohort selection:
+//!   [`policy::Uniform`] (byte-identical to the pre-scheduler coordinator),
+//!   [`policy::AvailabilityAware`], [`policy::MemoryCapped`] (clamps each
+//!   client's select budget `m_i` to what its profile can hold, feeding the
+//!   per-client [`crate::fedselect::KeyPolicy`] budgets), and
+//!   [`policy::StalenessFair`] (least-recently-selected first);
+//! * [`SimClock`] ([`simclock`]) — converts the per-client byte ledgers the
+//!   round already produces into simulated round wall-time (cohort
+//!   completion = the straggler's download + compute + upload), with
+//!   profile-driven dropouts replacing the old scalar coin flip.
+//!
+//! The trainer's phase 0 is [`Scheduler::plan_round`]; after phase 3 it
+//! calls [`Scheduler::complete_round`] with per-client byte/compute stats
+//! and gets back the round's simulated duration and per-tier completion
+//! counts, which land in `RoundRecord`.
+//!
+//! **Determinism contract.** `plan_round` consumes the round RNG exactly
+//! once per policy decision, and the `uniform` fleet + `Uniform` policy
+//! path performs the *identical* `sample_without_replacement` call (and no
+//! other draw) the pre-scheduler coordinator made — property-tested
+//! byte-for-byte in `tests/scheduler_determinism.rs`.
+
+pub mod policy;
+pub mod profiles;
+pub mod simclock;
+
+pub use policy::{PlanCtx, Selection, SelectionPolicy};
+pub use profiles::{DeviceProfile, Fleet, FleetKind};
+pub use simclock::{ClientTiming, SimClock};
+
+use crate::config::TrainConfig;
+use crate::tensor::rng::Rng;
+
+/// Which built-in selection policy to instantiate (config-level knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    Uniform,
+    AvailabilityAware,
+    MemoryCapped,
+    StalenessFair,
+}
+
+impl SchedPolicy {
+    pub fn build(self) -> Box<dyn SelectionPolicy> {
+        match self {
+            SchedPolicy::Uniform => Box::new(policy::Uniform),
+            SchedPolicy::AvailabilityAware => Box::new(policy::AvailabilityAware),
+            SchedPolicy::MemoryCapped => Box::new(policy::MemoryCapped),
+            SchedPolicy::StalenessFair => Box::new(policy::StalenessFair),
+        }
+    }
+
+    pub const ALL: [SchedPolicy; 4] = [
+        SchedPolicy::Uniform,
+        SchedPolicy::AvailabilityAware,
+        SchedPolicy::MemoryCapped,
+        SchedPolicy::StalenessFair,
+    ];
+}
+
+/// Canonical CLI names; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SchedPolicy::Uniform => "uniform",
+            SchedPolicy::AvailabilityAware => "availability-aware",
+            SchedPolicy::MemoryCapped => "memory-capped",
+            SchedPolicy::StalenessFair => "staleness-fair",
+        })
+    }
+}
+
+impl std::str::FromStr for SchedPolicy {
+    type Err = String;
+    /// Case-insensitive; accepts the canonical `Display` names plus
+    /// underscore/short aliases. Note: the key-policy namespace (`top:m`,
+    /// `random-global:m`, …) is disjoint, which is what lets the CLI accept
+    /// both through one `--policy` flag.
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Ok(SchedPolicy::Uniform),
+            "availability-aware" | "availability_aware" | "availability" | "avail" => {
+                Ok(SchedPolicy::AvailabilityAware)
+            }
+            "memory-capped" | "memory_capped" | "mem-capped" | "memcap" => {
+                Ok(SchedPolicy::MemoryCapped)
+            }
+            "staleness-fair" | "staleness_fair" | "staleness" | "lru" => {
+                Ok(SchedPolicy::StalenessFair)
+            }
+            other => Err(format!(
+                "unknown scheduler policy {other:?} (want {}, {}, {} or {})",
+                SchedPolicy::Uniform,
+                SchedPolicy::AvailabilityAware,
+                SchedPolicy::MemoryCapped,
+                SchedPolicy::StalenessFair
+            )),
+        }
+    }
+}
+
+/// Slice-size geometry the scheduler needs to turn memory caps into key
+/// budgets; computed once by the trainer from the model's `SelectSpec`.
+#[derive(Clone, Debug)]
+pub struct SliceGeometry {
+    /// Configured key count per keyspace (the `KeyPolicy` budgets).
+    pub base_ms: Vec<usize>,
+    /// Floats one key selects, per keyspace.
+    pub per_key_floats: Vec<usize>,
+    /// Floats broadcast to every client regardless of keys.
+    pub broadcast_floats: usize,
+    /// Full server model float count.
+    pub server_floats: usize,
+}
+
+/// Phase 0 output: the cohort, per-slot failure hazards, and optional
+/// per-slot key budgets.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub round: usize,
+    /// Train-client indices, in selection order.
+    pub cohort: Vec<usize>,
+    /// Post-fetch dropout probability per cohort slot (the profile hazard;
+    /// the deprecated scalar `dropout_rate` is already baked in as a floor
+    /// at [`Scheduler::new`]).
+    pub hazards: Vec<f32>,
+    /// Per cohort slot, per keyspace: key budget override (`None` = use the
+    /// configured policies as-is; guaranteed `None` under
+    /// [`SchedPolicy::Uniform`], preserving byte-identity).
+    pub key_budgets: Option<Vec<Vec<usize>>>,
+}
+
+/// What one cohort slot actually did this round, reported back by the
+/// trainer for simulated-time accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientRoundStats {
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+    /// Slice-floats × local examples (the `SimClock` compute model).
+    pub compute_units: f64,
+    pub dropped: bool,
+}
+
+/// Simulated-systems summary of one round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundSim {
+    /// Simulated round duration (straggler + overhead), seconds.
+    pub sim_round_s: f64,
+    /// Simulated time since the start of training, seconds.
+    pub sim_total_s: f64,
+    /// Completing clients per fleet tier.
+    pub tier_completed: Vec<usize>,
+    /// Post-fetch dropouts per fleet tier.
+    pub tier_dropped: Vec<usize>,
+    /// Download bytes per fleet tier (dropped clients included — their
+    /// download was wasted, which is the point of the §6 pattern).
+    pub tier_down_bytes: Vec<u64>,
+    /// Tier of the straggler that gated the round, if anyone completed.
+    pub straggler_tier: Option<usize>,
+}
+
+/// The cohort scheduler: owns the fleet, the selection policy, the
+/// staleness state, and the simulated clock.
+pub struct Scheduler {
+    fleet: Fleet,
+    policy_kind: SchedPolicy,
+    policy: Box<dyn SelectionPolicy>,
+    clock: SimClock,
+    /// Last round each train client was selected (-1 = never).
+    last_selected: Vec<i64>,
+}
+
+impl Scheduler {
+    /// Build from a training config: the fleet is generated from
+    /// `cfg.seed`/`cfg.fleet`/`cfg.mem_cap_frac`, the policy from
+    /// `cfg.sched_policy`. The deprecated scalar `cfg.dropout_rate` is baked
+    /// into the profiles as a hazard floor (a fleet-wide flaky-edge-style
+    /// hazard), so reporting over the fleet shows the hazards the run
+    /// actually used.
+    pub fn new(cfg: &TrainConfig, n_train_clients: usize) -> Self {
+        let mut fleet = Fleet::generate(cfg.fleet, n_train_clients, cfg.seed, cfg.mem_cap_frac);
+        if cfg.dropout_rate > 0.0 {
+            for p in &mut fleet.profiles {
+                p.hazard = p.hazard.max(cfg.dropout_rate);
+            }
+        }
+        Scheduler {
+            fleet,
+            policy_kind: cfg.sched_policy,
+            policy: cfg.sched_policy.build(),
+            clock: SimClock::new(),
+            last_selected: vec![-1; n_train_clients],
+        }
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn policy_kind(&self) -> SchedPolicy {
+        self.policy_kind
+    }
+
+    /// Simulated seconds since the start of training.
+    pub fn sim_total_s(&self) -> f64 {
+        self.clock.now_s()
+    }
+
+    /// Phase 0: choose the round's cohort, hazards, and key budgets.
+    ///
+    /// `rng` is the round RNG; under [`SchedPolicy::Uniform`] exactly one
+    /// `sample_without_replacement(n, cohort)` is drawn from it — the same
+    /// draw the pre-scheduler coordinator made.
+    pub fn plan_round(
+        &mut self,
+        round: usize,
+        cohort: usize,
+        geom: &SliceGeometry,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        let ctx = PlanCtx {
+            round,
+            cohort,
+            fleet: &self.fleet,
+            last_selected: &self.last_selected,
+            geom,
+        };
+        let sel = self.policy.select(&ctx, rng);
+        for &ci in &sel.cohort {
+            self.last_selected[ci] = round as i64;
+        }
+        let hazards = sel
+            .cohort
+            .iter()
+            .map(|&ci| self.fleet.profiles[ci].hazard)
+            .collect();
+        RoundPlan {
+            round,
+            cohort: sel.cohort,
+            hazards,
+            key_budgets: sel.key_budgets,
+        }
+    }
+
+    /// After phase 3: fold per-client outcomes into simulated time and
+    /// per-tier tallies. `stats` is aligned with `plan.cohort`.
+    pub fn complete_round(&mut self, plan: &RoundPlan, stats: &[ClientRoundStats]) -> RoundSim {
+        debug_assert_eq!(plan.cohort.len(), stats.len());
+        let tiers = self.fleet.num_tiers();
+        let mut sim = RoundSim {
+            tier_completed: vec![0; tiers],
+            tier_dropped: vec![0; tiers],
+            tier_down_bytes: vec![0; tiers],
+            ..RoundSim::default()
+        };
+        let mut straggler: Option<(f64, usize)> = None;
+        for (&ci, st) in plan.cohort.iter().zip(stats.iter()) {
+            let p = &self.fleet.profiles[ci];
+            sim.tier_down_bytes[p.tier] += st.down_bytes;
+            if st.dropped {
+                sim.tier_dropped[p.tier] += 1;
+                continue;
+            }
+            sim.tier_completed[p.tier] += 1;
+            let t = SimClock::client_timing(p, st.down_bytes, st.up_bytes, st.compute_units)
+                .total_s();
+            if straggler.map_or(true, |(best, _)| t > best) {
+                straggler = Some((t, p.tier));
+            }
+        }
+        // the loop already found the straggler; the clock only needs it
+        sim.sim_round_s = self.clock.advance_round(straggler.map(|(t, _)| t));
+        sim.sim_total_s = self.clock.now_s();
+        sim.straggler_tier = straggler.map(|(_, tier)| tier);
+        sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg(fleet: FleetKind, policy: SchedPolicy) -> TrainConfig {
+        let mut cfg = TrainConfig::logreg_default(128, 32);
+        cfg.fleet = fleet;
+        cfg.sched_policy = policy;
+        cfg
+    }
+
+    fn geom() -> SliceGeometry {
+        SliceGeometry {
+            base_ms: vec![32],
+            per_key_floats: vec![50],
+            broadcast_floats: 50,
+            server_floats: 128 * 50 + 50,
+        }
+    }
+
+    #[test]
+    fn sched_policy_display_round_trips_case_insensitively() {
+        for p in SchedPolicy::ALL {
+            let shown = p.to_string();
+            assert_eq!(shown.parse::<SchedPolicy>().unwrap(), p);
+            assert_eq!(shown.to_uppercase().parse::<SchedPolicy>().unwrap(), p);
+            assert_eq!(p.build().name(), shown);
+        }
+        assert_eq!(
+            "mem-capped".parse::<SchedPolicy>().unwrap(),
+            SchedPolicy::MemoryCapped
+        );
+        let err = "bogus".parse::<SchedPolicy>().unwrap_err();
+        assert!(err.contains("uniform") && err.contains("staleness-fair"), "{err}");
+    }
+
+    #[test]
+    fn uniform_plan_consumes_exactly_the_legacy_draw() {
+        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::Uniform), 40);
+        let mut rng = Rng::new(7, 1);
+        let mut legacy = rng.clone();
+        let plan = s.plan_round(1, 10, &geom(), &mut rng);
+        assert_eq!(plan.cohort, legacy.sample_without_replacement(40, 10));
+        // nothing else was drawn: subsequent values coincide
+        assert_eq!(rng.next_u64(), legacy.next_u64());
+        assert!(plan.key_budgets.is_none());
+        assert!(plan.hazards.iter().all(|&h| h == 0.0));
+    }
+
+    #[test]
+    fn dropout_rate_floors_every_hazard() {
+        let mut c = cfg(FleetKind::Uniform, SchedPolicy::Uniform);
+        c.dropout_rate = 0.3;
+        let mut s = Scheduler::new(&c, 20);
+        let plan = s.plan_round(1, 5, &geom(), &mut Rng::new(1, 1));
+        assert!(plan.hazards.iter().all(|&h| (h - 0.3).abs() < 1e-9));
+    }
+
+    #[test]
+    fn complete_round_tallies_tiers_and_advances_the_clock() {
+        let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60);
+        let mut rng = Rng::new(3, 2);
+        let plan = s.plan_round(1, 12, &geom(), &mut rng);
+        let stats: Vec<ClientRoundStats> = (0..plan.cohort.len())
+            .map(|i| ClientRoundStats {
+                down_bytes: 100_000,
+                up_bytes: 50_000,
+                compute_units: 1e7,
+                dropped: i % 4 == 0,
+            })
+            .collect();
+        let sim = s.complete_round(&plan, &stats);
+        assert_eq!(sim.tier_completed.len(), 3);
+        assert_eq!(
+            sim.tier_completed.iter().sum::<usize>()
+                + sim.tier_dropped.iter().sum::<usize>(),
+            12
+        );
+        assert!(sim.sim_round_s > 0.0);
+        assert!((sim.sim_total_s - s.sim_total_s()).abs() < 1e-12);
+        assert!(sim.straggler_tier.is_some());
+        assert_eq!(sim.tier_down_bytes.iter().sum::<u64>(), 12 * 100_000);
+        // a second round accumulates
+        let plan2 = s.plan_round(2, 12, &geom(), &mut rng);
+        let sim2 = s.complete_round(&plan2, &stats);
+        assert!(sim2.sim_total_s > sim.sim_total_s);
+    }
+
+    #[test]
+    fn staleness_state_feeds_the_fair_policy() {
+        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::StalenessFair), 12);
+        let mut rng = Rng::new(5, 3);
+        let g = geom();
+        let mut seen = std::collections::HashSet::new();
+        for round in 1..=3 {
+            let plan = s.plan_round(round, 4, &g, &mut rng);
+            for &ci in &plan.cohort {
+                assert!(seen.insert(ci), "repeat before full pass");
+            }
+        }
+        assert_eq!(seen.len(), 12);
+    }
+}

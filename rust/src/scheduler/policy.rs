@@ -1,0 +1,303 @@
+//! Pluggable cohort-selection policies.
+//!
+//! A [`SelectionPolicy`] turns the round context (fleet, staleness state,
+//! slice geometry) plus the round RNG into a cohort and, optionally,
+//! per-client select-key budgets. [`Uniform`] is byte-identical to the
+//! pre-scheduler coordinator's inline sampling at the same seed: it makes
+//! exactly one `sample_without_replacement(n, k)` call on the round RNG and
+//! nothing else consumes entropy on that path.
+
+use crate::scheduler::{Fleet, SliceGeometry};
+use crate::tensor::rng::Rng;
+
+/// Everything a policy may condition on when choosing a round's cohort.
+pub struct PlanCtx<'a> {
+    /// 1-based round number (matches `Trainer::run_round`).
+    pub round: usize,
+    /// Requested cohort size.
+    pub cohort: usize,
+    pub fleet: &'a Fleet,
+    /// Per train client: last round it was selected, or -1 if never.
+    pub last_selected: &'a [i64],
+    pub geom: &'a SliceGeometry,
+}
+
+/// A policy's output: the cohort (train-client indices) and optional
+/// per-cohort-slot, per-keyspace key budgets (`None` = the configured
+/// [`crate::fedselect::KeyPolicy`] budgets apply unchanged).
+pub struct Selection {
+    pub cohort: Vec<usize>,
+    pub key_budgets: Option<Vec<Vec<usize>>>,
+}
+
+/// A cohort-selection strategy. Implementations must be deterministic given
+/// (`ctx`, the RNG state): the scheduler proptests re-run every policy at a
+/// fixed seed and require identical cohorts.
+pub trait SelectionPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection;
+}
+
+fn uniform_cohort(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    rng.sample_without_replacement(n, k.min(n))
+}
+
+/// §5.1 uniform sampling without replacement — the paper's baseline and the
+/// pre-scheduler coordinator's behavior, bit for bit.
+pub struct Uniform;
+
+impl SelectionPolicy for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        Selection {
+            cohort: uniform_cohort(ctx.fleet.len(), ctx.cohort, rng),
+            key_budgets: None,
+        }
+    }
+}
+
+/// Sample uniformly among the clients whose availability trace says they are
+/// online this round; if none are (degenerate trace), fall back to the full
+/// population rather than running an empty round.
+pub struct AvailabilityAware;
+
+impl SelectionPolicy for AvailabilityAware {
+    fn name(&self) -> &'static str {
+        "availability-aware"
+    }
+
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        let avail: Vec<usize> = (0..ctx.fleet.len())
+            .filter(|&i| ctx.fleet.profiles[i].available(ctx.round))
+            .collect();
+        let cohort = if avail.is_empty() {
+            uniform_cohort(ctx.fleet.len(), ctx.cohort, rng)
+        } else {
+            uniform_cohort(avail.len(), ctx.cohort, rng)
+                .into_iter()
+                .map(|j| avail[j])
+                .collect()
+        };
+        Selection {
+            cohort,
+            key_budgets: None,
+        }
+    }
+}
+
+/// Uniform sampling (same RNG draw as [`Uniform`], so cohorts coincide at a
+/// fixed seed), plus per-client select budgets clamped so each client's
+/// sub-model fits its device's memory cap.
+pub struct MemoryCapped;
+
+impl MemoryCapped {
+    /// Largest per-keyspace key counts whose slice fits `mem_frac` of the
+    /// full server model: broadcast floats are fixed cost, keyed floats are
+    /// scaled down proportionally across keyspaces. Never below 1 key.
+    pub fn budget_for(profile_mem_frac: f64, geom: &SliceGeometry) -> Vec<usize> {
+        let cap = (profile_mem_frac * geom.server_floats as f64) as usize;
+        let keyed: usize = geom
+            .base_ms
+            .iter()
+            .zip(geom.per_key_floats.iter())
+            .map(|(&m, &pk)| m * pk)
+            .sum();
+        if keyed == 0 {
+            return geom.base_ms.clone();
+        }
+        let avail = cap.saturating_sub(geom.broadcast_floats);
+        if avail >= keyed {
+            return geom.base_ms.clone();
+        }
+        let s = avail as f64 / keyed as f64;
+        geom.base_ms
+            .iter()
+            .map(|&m| ((m as f64 * s) as usize).max(1).min(m.max(1)))
+            .collect()
+    }
+}
+
+impl SelectionPolicy for MemoryCapped {
+    fn name(&self) -> &'static str {
+        "memory-capped"
+    }
+
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        let cohort = uniform_cohort(ctx.fleet.len(), ctx.cohort, rng);
+        let budgets = cohort
+            .iter()
+            .map(|&ci| Self::budget_for(ctx.fleet.profiles[ci].mem_frac, ctx.geom))
+            .collect();
+        Selection {
+            cohort,
+            key_budgets: Some(budgets),
+        }
+    }
+}
+
+/// Prioritize the clients selected longest ago (never-selected first), with
+/// random tie-breaking: a shuffle followed by a stable sort on
+/// last-selected round. Over `ceil(n / cohort)` rounds every client is
+/// visited at least once.
+pub struct StalenessFair;
+
+impl SelectionPolicy for StalenessFair {
+    fn name(&self) -> &'static str {
+        "staleness-fair"
+    }
+
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        let n = ctx.fleet.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.sort_by_key(|&i| ctx.last_selected[i]);
+        idx.truncate(ctx.cohort.min(n));
+        Selection {
+            cohort: idx,
+            key_budgets: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::FleetKind;
+
+    fn ctx_parts(kind: FleetKind, n: usize) -> (Fleet, Vec<i64>, SliceGeometry) {
+        let fleet = Fleet::generate(kind, n, 7, 0.25);
+        let last = vec![-1i64; n];
+        // full-budget slice == the whole keyed segment, so tier mem caps
+        // below 1.0 genuinely clamp
+        let geom = SliceGeometry {
+            base_ms: vec![2048],
+            per_key_floats: vec![50],
+            broadcast_floats: 50,
+            server_floats: 2048 * 50 + 50,
+        };
+        (fleet, last, geom)
+    }
+
+    #[test]
+    fn uniform_matches_the_raw_sampler_draw() {
+        let (fleet, last, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 8,
+            fleet: &fleet,
+            last_selected: &last,
+            geom: &geom,
+        };
+        let mut a = Rng::new(5, 1);
+        let mut b = a.clone();
+        let sel = Uniform.select(&ctx, &mut a);
+        assert_eq!(sel.cohort, b.sample_without_replacement(30, 8));
+        assert!(sel.key_budgets.is_none());
+    }
+
+    #[test]
+    fn availability_aware_only_picks_online_clients() {
+        let (fleet, last, geom) = ctx_parts(FleetKind::Diurnal, 40);
+        for round in [0usize, 6, 12, 18] {
+            let ctx = PlanCtx {
+                round,
+                cohort: 5,
+                fleet: &fleet,
+                last_selected: &last,
+                geom: &geom,
+            };
+            let mut rng = Rng::new(3, 2);
+            let sel = AvailabilityAware.select(&ctx, &mut rng);
+            assert!(!sel.cohort.is_empty());
+            for &ci in &sel.cohort {
+                assert!(
+                    fleet.profiles[ci].available(round),
+                    "round {round}: client {ci} offline"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_capped_budgets_fit_the_device() {
+        let (fleet, last, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 20,
+            fleet: &fleet,
+            last_selected: &last,
+            geom: &geom,
+        };
+        let mut rng = Rng::new(9, 3);
+        let sel = MemoryCapped.select(&ctx, &mut rng);
+        let budgets = sel.key_budgets.unwrap();
+        assert_eq!(budgets.len(), sel.cohort.len());
+        for (&ci, ms) in sel.cohort.iter().zip(budgets.iter()) {
+            let p = &fleet.profiles[ci];
+            let floats: usize = geom.broadcast_floats
+                + ms.iter()
+                    .zip(geom.per_key_floats.iter())
+                    .map(|(&m, &pk)| m * pk)
+                    .sum::<usize>();
+            let cap = (p.mem_frac * geom.server_floats as f64) as usize;
+            // either the base budget already fits, or the clamp brought the
+            // slice within the cap (±1 key of rounding slack)
+            assert!(
+                floats <= cap + geom.per_key_floats[0] || ms == &geom.base_ms,
+                "client {ci}: {floats} floats vs cap {cap}"
+            );
+            assert!(ms[0] >= 1 && ms[0] <= geom.base_ms[0]);
+        }
+        // the uniform-memory high tier keeps the full budget
+        assert!(sel
+            .cohort
+            .iter()
+            .zip(budgets.iter())
+            .filter(|(&ci, _)| fleet.profiles[ci].tier == 2)
+            .all(|(_, ms)| ms == &geom.base_ms));
+    }
+
+    #[test]
+    fn memory_capped_cohort_equals_uniform_cohort_at_same_seed() {
+        let (fleet, last, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 12,
+            fleet: &fleet,
+            last_selected: &last,
+            geom: &geom,
+        };
+        let mut a = Rng::new(4, 4);
+        let mut b = a.clone();
+        assert_eq!(
+            MemoryCapped.select(&ctx, &mut a).cohort,
+            Uniform.select(&ctx, &mut b).cohort
+        );
+    }
+
+    #[test]
+    fn staleness_fair_visits_everyone_before_repeating() {
+        let (fleet, mut last, geom) = ctx_parts(FleetKind::Uniform, 24);
+        let mut rng = Rng::new(1, 5);
+        let mut seen = std::collections::HashSet::new();
+        for round in 1..=4usize {
+            let ctx = PlanCtx {
+                round,
+                cohort: 6,
+                fleet: &fleet,
+                last_selected: &last,
+                geom: &geom,
+            };
+            let cohort = StalenessFair.select(&ctx, &mut rng).cohort;
+            assert_eq!(cohort.len(), 6);
+            for &ci in &cohort {
+                assert!(seen.insert(ci), "client {ci} repeated before full pass");
+                last[ci] = round as i64;
+            }
+        }
+        assert_eq!(seen.len(), 24);
+    }
+}

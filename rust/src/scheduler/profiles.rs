@@ -1,0 +1,361 @@
+//! Device-population models ("fleets") for the cohort scheduler.
+//!
+//! The paper evaluates FedSelect under uniform sampling and a scalar
+//! post-fetch dropout rate (§6); real cross-device populations are
+//! heterogeneous in bandwidth, memory, availability, and reliability — the
+//! axes client-selection work (arXiv 2211.01549, 2210.04607) schedules on.
+//! A [`Fleet`] assigns every train client a [`DeviceProfile`] drawn
+//! deterministically from the run seed, so two runs of the same config see
+//! the same population.
+//!
+//! Built-in fleets:
+//!
+//! | kind | tiers | what it stresses |
+//! |---|---|---|
+//! | `uniform`    | all            | none — reproduces the pre-scheduler coordinator |
+//! | `tiered-3`   | low/mid/high   | bandwidth + memory spread (MemoryCapped budgets) |
+//! | `diurnal`    | day/night      | availability windows (AvailabilityAware) |
+//! | `flaky-edge` | core/edge      | high per-round failure hazard on the edge |
+
+use crate::tensor::rng::Rng;
+
+/// Stream id for the fleet-generation RNG: profiles are drawn from the run
+/// seed on a dedicated stream so generation never perturbs the training
+/// trajectory.
+const FLEET_STREAM: u64 = 0xF1EE7;
+
+/// One client's simulated device: bandwidth, compute, memory, an
+/// availability window, and a per-round failure hazard.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    /// Index into the fleet's tier-name table.
+    pub tier: usize,
+    /// Downlink bandwidth, bytes/s.
+    pub down_bps: f64,
+    /// Uplink bandwidth, bytes/s.
+    pub up_bps: f64,
+    /// Client-update throughput, in slice-float·example units per second
+    /// (the [`crate::scheduler::SimClock`] compute model).
+    pub flops: f64,
+    /// Fraction of the full server model this device can hold in memory;
+    /// `MemoryCapped` clamps the client's select budget to it.
+    pub mem_frac: f64,
+    /// Availability window phase offset, in rounds.
+    pub avail_offset: u32,
+    /// Availability window period in rounds; 0 = always available.
+    pub avail_period: u32,
+    /// Fraction of the period the device is online.
+    pub avail_duty: f64,
+    /// Probability the client fails *after* fetching its slice (the paper's
+    /// §6 dropout pattern, now per-device).
+    pub hazard: f32,
+}
+
+impl DeviceProfile {
+    /// Whether this device is online in `round` (diurnal trace).
+    pub fn available(&self, round: usize) -> bool {
+        if self.avail_period == 0 {
+            return true;
+        }
+        let pos = (round as u32 + self.avail_offset) % self.avail_period;
+        (pos as f64) < self.avail_duty * self.avail_period as f64
+    }
+
+    /// Memory cap in bytes given the full server model size.
+    pub fn mem_bytes(&self, server_bytes: usize) -> usize {
+        (self.mem_frac * server_bytes as f64) as usize
+    }
+}
+
+/// Which built-in fleet to generate (config-level knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetKind {
+    /// Homogeneous, always-on, failure-free devices.
+    Uniform,
+    /// Low-end / mid / high-end split (50/30/20).
+    Tiered3,
+    /// Day-shift / night-shift availability windows.
+    Diurnal,
+    /// A reliable core plus a large flaky edge.
+    FlakyEdge,
+}
+
+/// Canonical CLI names; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for FleetKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FleetKind::Uniform => "uniform",
+            FleetKind::Tiered3 => "tiered-3",
+            FleetKind::Diurnal => "diurnal",
+            FleetKind::FlakyEdge => "flaky-edge",
+        })
+    }
+}
+
+impl std::str::FromStr for FleetKind {
+    type Err = String;
+    /// Case-insensitive; accepts the canonical `Display` names plus
+    /// underscore/short aliases.
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Ok(FleetKind::Uniform),
+            "tiered-3" | "tiered_3" | "tiered3" | "tiered" => Ok(FleetKind::Tiered3),
+            "diurnal" => Ok(FleetKind::Diurnal),
+            "flaky-edge" | "flaky_edge" | "flaky" => Ok(FleetKind::FlakyEdge),
+            other => Err(format!(
+                "unknown fleet {other:?} (want {}, {}, {} or {})",
+                FleetKind::Uniform,
+                FleetKind::Tiered3,
+                FleetKind::Diurnal,
+                FleetKind::FlakyEdge
+            )),
+        }
+    }
+}
+
+/// A device population: one profile per train client, plus tier names for
+/// reporting.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub kind: FleetKind,
+    pub profiles: Vec<DeviceProfile>,
+    tier_names: Vec<&'static str>,
+}
+
+impl Fleet {
+    /// Generate a fleet of `n_clients` profiles, deterministic in `seed`.
+    /// `mem_cap_frac` sets the lowest tier's memory cap as a fraction of
+    /// the full server model (tiers above scale up from it).
+    pub fn generate(kind: FleetKind, n_clients: usize, seed: u64, mem_cap_frac: f64) -> Fleet {
+        let mut rng = Rng::new(seed, FLEET_STREAM);
+        let f = mem_cap_frac.clamp(0.01, 1.0);
+        let (tier_names, profiles): (Vec<&'static str>, Vec<DeviceProfile>) = match kind {
+            FleetKind::Uniform => {
+                let p = DeviceProfile {
+                    tier: 0,
+                    down_bps: 20e6,
+                    up_bps: 5e6,
+                    flops: 5e9,
+                    mem_frac: 1.0,
+                    avail_offset: 0,
+                    avail_period: 0,
+                    avail_duty: 1.0,
+                    hazard: 0.0,
+                };
+                (vec!["all"], vec![p; n_clients])
+            }
+            FleetKind::Tiered3 => {
+                // (down, up, flops, mem_frac, hazard) per tier
+                let tiers = [
+                    (2e6, 0.5e6, 5e8, f, 0.05f32),
+                    (8e6, 2e6, 2e9, (2.0 * f).min(1.0), 0.02),
+                    (25e6, 10e6, 1e10, 1.0, 0.01),
+                ];
+                let weights = [5.0, 3.0, 2.0];
+                let profiles = (0..n_clients)
+                    .map(|_| {
+                        let t = rng.categorical(&weights);
+                        let (down, up, flops, mem, hz) = tiers[t];
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        DeviceProfile {
+                            tier: t,
+                            down_bps: down * jitter,
+                            up_bps: up * jitter,
+                            flops,
+                            mem_frac: mem,
+                            avail_offset: 0,
+                            avail_period: 0,
+                            avail_duty: 1.0,
+                            hazard: hz,
+                        }
+                    })
+                    .collect();
+                (vec!["low-end", "mid", "high-end"], profiles)
+            }
+            FleetKind::Diurnal => {
+                // identical mid-range hardware, opposite 24-round windows
+                let profiles = (0..n_clients)
+                    .map(|_| {
+                        let t = usize::from(rng.f32() < 0.5);
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        DeviceProfile {
+                            tier: t,
+                            down_bps: 10e6 * jitter,
+                            up_bps: 2.5e6 * jitter,
+                            flops: 2e9,
+                            mem_frac: 1.0,
+                            avail_offset: if t == 0 { 0 } else { 12 },
+                            avail_period: 24,
+                            avail_duty: 0.5,
+                            hazard: 0.02,
+                        }
+                    })
+                    .collect();
+                (vec!["day", "night"], profiles)
+            }
+            FleetKind::FlakyEdge => {
+                let profiles = (0..n_clients)
+                    .map(|_| {
+                        let core = rng.f32() < 0.25;
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        if core {
+                            DeviceProfile {
+                                tier: 0,
+                                down_bps: 25e6 * jitter,
+                                up_bps: 10e6 * jitter,
+                                flops: 1e10,
+                                mem_frac: 1.0,
+                                avail_offset: 0,
+                                avail_period: 0,
+                                avail_duty: 1.0,
+                                hazard: 0.01,
+                            }
+                        } else {
+                            DeviceProfile {
+                                tier: 1,
+                                down_bps: 3e6 * jitter,
+                                up_bps: 0.75e6 * jitter,
+                                flops: 1e9,
+                                mem_frac: (2.0 * f).min(1.0),
+                                avail_offset: 0,
+                                avail_period: 0,
+                                avail_duty: 1.0,
+                                hazard: 0.25,
+                            }
+                        }
+                    })
+                    .collect();
+                (vec!["core", "edge"], profiles)
+            }
+        };
+        Fleet {
+            kind,
+            profiles,
+            tier_names,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tier_names.len()
+    }
+
+    pub fn tier_name(&self, tier: usize) -> &'static str {
+        self.tier_names.get(tier).copied().unwrap_or("?")
+    }
+
+    /// Clients per tier.
+    pub fn tier_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_tiers()];
+        for p in &self.profiles {
+            sizes[p.tier] += 1;
+        }
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        for kind in [
+            FleetKind::Uniform,
+            FleetKind::Tiered3,
+            FleetKind::Diurnal,
+            FleetKind::FlakyEdge,
+        ] {
+            let a = Fleet::generate(kind, 64, 42, 0.25);
+            let b = Fleet::generate(kind, 64, 42, 0.25);
+            assert_eq!(a.len(), 64);
+            for (x, y) in a.profiles.iter().zip(b.profiles.iter()) {
+                assert_eq!(x.tier, y.tier, "{kind}");
+                assert_eq!(x.down_bps.to_bits(), y.down_bps.to_bits(), "{kind}");
+                assert_eq!(x.hazard.to_bits(), y.hazard.to_bits(), "{kind}");
+            }
+            let c = Fleet::generate(kind, 64, 43, 0.25);
+            if kind != FleetKind::Uniform {
+                let same = a
+                    .profiles
+                    .iter()
+                    .zip(c.profiles.iter())
+                    .filter(|(x, y)| x.down_bps == y.down_bps)
+                    .count();
+                assert!(same < 64, "{kind}: different seeds must differ");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_fleet_is_unconstrained() {
+        let fl = Fleet::generate(FleetKind::Uniform, 10, 7, 0.25);
+        assert_eq!(fl.num_tiers(), 1);
+        for p in &fl.profiles {
+            assert_eq!(p.hazard, 0.0);
+            assert_eq!(p.mem_frac, 1.0);
+            assert!(p.available(0) && p.available(1000));
+        }
+    }
+
+    #[test]
+    fn tiered_fleet_covers_all_tiers_and_respects_mem_cap() {
+        let fl = Fleet::generate(FleetKind::Tiered3, 200, 7, 0.25);
+        let sizes = fl.tier_sizes();
+        assert_eq!(sizes.len(), 3);
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+        // proportions roughly 50/30/20
+        assert!(sizes[0] > sizes[2], "{sizes:?}");
+        for p in &fl.profiles {
+            match p.tier {
+                0 => assert!((p.mem_frac - 0.25).abs() < 1e-12),
+                1 => assert!((p.mem_frac - 0.5).abs() < 1e-12),
+                _ => assert!((p.mem_frac - 1.0).abs() < 1e-12),
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_windows_alternate() {
+        let fl = Fleet::generate(FleetKind::Diurnal, 50, 9, 0.25);
+        let day = fl.profiles.iter().find(|p| p.tier == 0).unwrap();
+        let night = fl.profiles.iter().find(|p| p.tier == 1).unwrap();
+        assert!(day.available(0) && !night.available(0));
+        assert!(!day.available(12) && night.available(12));
+        // complementary over a full period
+        for r in 0..24 {
+            assert_ne!(day.available(r), night.available(r), "round {r}");
+        }
+    }
+
+    #[test]
+    fn flaky_edge_has_a_hazardous_majority() {
+        let fl = Fleet::generate(FleetKind::FlakyEdge, 200, 11, 0.25);
+        let sizes = fl.tier_sizes();
+        assert!(sizes[1] > sizes[0], "edge must outnumber core: {sizes:?}");
+        assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2));
+    }
+
+    #[test]
+    fn fleet_kind_display_round_trips_case_insensitively() {
+        for kind in [
+            FleetKind::Uniform,
+            FleetKind::Tiered3,
+            FleetKind::Diurnal,
+            FleetKind::FlakyEdge,
+        ] {
+            let shown = kind.to_string();
+            assert_eq!(shown.parse::<FleetKind>().unwrap(), kind);
+            assert_eq!(shown.to_uppercase().parse::<FleetKind>().unwrap(), kind);
+        }
+        assert_eq!("tiered3".parse::<FleetKind>().unwrap(), FleetKind::Tiered3);
+        assert!("bogus".parse::<FleetKind>().is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Simulated-systems clock: turns the coordinator's per-client byte ledgers
+//! into round wall-time.
+//!
+//! The real coordinator measures host wall time (`RoundRecord::wall_ms`),
+//! which says nothing about deployed round latency: there, a round ends when
+//! the *slowest completing client* has downloaded its slice, run its local
+//! epoch, and uploaded its delta. The [`SimClock`] models exactly that —
+//! per-client `download + compute + upload` time from the client's
+//! [`DeviceProfile`](crate::scheduler::DeviceProfile), cohort completion as
+//! the max over completing clients (the straggler), plus a fixed server-side
+//! overhead per round. Clients that drop after fetching spend their download
+//! time but never report, so they do not gate the round (the server's
+//! timeout is folded into the overhead term).
+
+use crate::scheduler::DeviceProfile;
+
+/// Per-round server-side overhead (cohort assembly, aggregation, model
+/// update), seconds.
+const ROUND_OVERHEAD_S: f64 = 1.0;
+
+/// One client's simulated round timing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientTiming {
+    pub download_s: f64,
+    pub compute_s: f64,
+    pub upload_s: f64,
+}
+
+impl ClientTiming {
+    pub fn total_s(&self) -> f64 {
+        self.download_s + self.compute_s + self.upload_s
+    }
+}
+
+/// Accumulates simulated time across rounds.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now_s: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    /// Simulated seconds elapsed since the start of training.
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Model one client's round: `down_bytes` over its downlink,
+    /// `compute_units` (slice-floats × local examples) through its compute
+    /// throughput, `up_bytes` over its uplink.
+    pub fn client_timing(
+        profile: &DeviceProfile,
+        down_bytes: u64,
+        up_bytes: u64,
+        compute_units: f64,
+    ) -> ClientTiming {
+        ClientTiming {
+            download_s: down_bytes as f64 / profile.down_bps.max(1.0),
+            compute_s: compute_units / profile.flops.max(1.0),
+            upload_s: up_bytes as f64 / profile.up_bps.max(1.0),
+        }
+    }
+
+    /// End the round: its duration is the straggler's total time (0 if the
+    /// whole cohort dropped) plus the fixed overhead. Advances the clock and
+    /// returns the round duration.
+    pub fn advance_round(&mut self, completing_times_s: impl IntoIterator<Item = f64>) -> f64 {
+        let straggler = completing_times_s
+            .into_iter()
+            .fold(0.0f64, |acc, t| acc.max(t));
+        let round_s = straggler + ROUND_OVERHEAD_S;
+        self.now_s += round_s;
+        round_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(down: f64, up: f64, flops: f64) -> DeviceProfile {
+        DeviceProfile {
+            tier: 0,
+            down_bps: down,
+            up_bps: up,
+            flops,
+            mem_frac: 1.0,
+            avail_offset: 0,
+            avail_period: 0,
+            avail_duty: 1.0,
+            hazard: 0.0,
+        }
+    }
+
+    #[test]
+    fn timing_is_bytes_over_bandwidth() {
+        let p = profile(1e6, 0.5e6, 1e9);
+        let t = SimClock::client_timing(&p, 2_000_000, 500_000, 2e9);
+        assert!((t.download_s - 2.0).abs() < 1e-9);
+        assert!((t.upload_s - 1.0).abs() < 1e-9);
+        assert!((t.compute_s - 2.0).abs() < 1e-9);
+        assert!((t.total_s() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_time_is_the_straggler_plus_overhead() {
+        let mut clock = SimClock::new();
+        let dt = clock.advance_round([1.0, 7.5, 3.0]);
+        assert!((dt - (7.5 + ROUND_OVERHEAD_S)).abs() < 1e-9);
+        assert!((clock.now_s() - dt).abs() < 1e-9);
+        // an all-dropped round still costs the overhead
+        let dt2 = clock.advance_round([]);
+        assert!((dt2 - ROUND_OVERHEAD_S).abs() < 1e-9);
+        assert!((clock.now_s() - dt - dt2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slower_devices_take_longer() {
+        let fast = profile(25e6, 10e6, 1e10);
+        let slow = profile(2e6, 0.5e6, 5e8);
+        let (d, u, c) = (400_000, 100_000, 1e8);
+        assert!(
+            SimClock::client_timing(&slow, d, u, c).total_s()
+                > SimClock::client_timing(&fast, d, u, c).total_s()
+        );
+    }
+}

@@ -42,6 +42,12 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Whether any `--flag` was given at all (used to tell a bare
+    /// `fedselect` info invocation from a flags-only training run).
+    pub fn has_flags(&self) -> bool {
+        !self.flags.is_empty()
+    }
+
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
@@ -108,6 +114,13 @@ mod tests {
     fn unknown_flags_are_rejected() {
         let a = parse(&["--oops", "1"]);
         assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn has_flags_distinguishes_bare_invocations() {
+        assert!(!parse(&[]).has_flags());
+        assert!(!parse(&["info"]).has_flags());
+        assert!(parse(&["--fleet", "tiered-3"]).has_flags());
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Scheduler determinism properties (driven by the crate's own PCG, like
+//! tests/proptests.rs — every failing case reports its seed):
+//!
+//! 1. the same seed yields the same cohort plan for *every* policy × fleet,
+//!    across repeated scheduler instances and rounds;
+//! 2. `Uniform` policy + `uniform` fleet reproduces the pre-scheduler
+//!    coordinator trajectory byte-for-byte — verified against a faithful
+//!    replica of the old inline round loop (sample cohort -> draw keys ->
+//!    slice -> dropout coin -> update -> aggregate -> server step), with
+//!    and without the deprecated scalar `dropout_rate`.
+
+use fedselect::aggregation::{Aggregator, SparseAccumulator};
+use fedselect::clients::{build_cu_batch, Engine};
+use fedselect::config::TrainConfig;
+use fedselect::coordinator::{build_dataset, Trainer};
+use fedselect::config::DatasetConfig;
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::ClientKeys;
+use fedselect::model::ParamStore;
+use fedselect::optim::Optimizer;
+use fedselect::scheduler::{FleetKind, SchedPolicy, Scheduler, SliceGeometry};
+use fedselect::tensor::rng::Rng;
+
+const CASES: usize = 12;
+
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(128, 32);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(24, 4, 8));
+    cfg.rounds = 3;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 128;
+    cfg.seed = seed;
+    cfg
+}
+
+fn geom() -> SliceGeometry {
+    SliceGeometry {
+        base_ms: vec![32],
+        per_key_floats: vec![50],
+        broadcast_floats: 50,
+        server_floats: 128 * 50 + 50,
+    }
+}
+
+#[test]
+fn prop_same_seed_same_cohort_for_every_policy_and_fleet() {
+    let fleets = [
+        FleetKind::Uniform,
+        FleetKind::Tiered3,
+        FleetKind::Diurnal,
+        FleetKind::FlakyEdge,
+    ];
+    for case in 0..CASES {
+        let seed = 0x5C4ED + case as u64;
+        for fleet in fleets {
+            for policy in SchedPolicy::ALL {
+                let mut cfg = base_cfg(seed);
+                cfg.fleet = fleet;
+                cfg.sched_policy = policy;
+                let g = geom();
+                let mut a = Scheduler::new(&cfg, 24);
+                let mut b = Scheduler::new(&cfg, 24);
+                // drive both from identically forked round RNGs, as the
+                // trainer does
+                let mut rng_a = Rng::new(seed, 100);
+                let mut rng_b = Rng::new(seed, 100);
+                for round in 1..=4usize {
+                    let mut ra = rng_a.fork(round as u64);
+                    let mut rb = rng_b.fork(round as u64);
+                    let pa = a.plan_round(round, 6, &g, &mut ra);
+                    let pb = b.plan_round(round, 6, &g, &mut rb);
+                    assert_eq!(
+                        pa.cohort, pb.cohort,
+                        "case {case} {fleet} {policy} round {round}"
+                    );
+                    assert_eq!(
+                        pa.key_budgets, pb.key_budgets,
+                        "case {case} {fleet} {policy} round {round}"
+                    );
+                    assert_eq!(
+                        pa.hazards, pb.hazards,
+                        "case {case} {fleet} {policy} round {round}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_full_training_is_deterministic_for_every_policy() {
+    for (fleet, policy) in [
+        (FleetKind::Tiered3, SchedPolicy::MemoryCapped),
+        (FleetKind::Diurnal, SchedPolicy::AvailabilityAware),
+        (FleetKind::FlakyEdge, SchedPolicy::StalenessFair),
+        (FleetKind::Uniform, SchedPolicy::Uniform),
+    ] {
+        let mut cfg = base_cfg(11);
+        cfg.fleet = fleet;
+        cfg.sched_policy = policy;
+        let ra = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+        let rb = Trainer::new(cfg).unwrap().run().unwrap();
+        assert_eq!(
+            ra.final_eval.loss.to_bits(),
+            rb.final_eval.loss.to_bits(),
+            "{fleet} {policy}"
+        );
+        assert_eq!(ra.total_down_bytes, rb.total_down_bytes, "{fleet} {policy}");
+        assert_eq!(
+            ra.total_sim_s.to_bits(),
+            rb.total_sim_s.to_bits(),
+            "{fleet} {policy}"
+        );
+    }
+}
+
+/// Faithful replica of the pre-scheduler `Trainer::run_round` loop:
+/// inline uniform cohort sampling, per-client RNG forks, the scalar
+/// post-fetch dropout coin gated on `dropout_rate > 0`, sequential
+/// updates, cohort-mean aggregation, server optimizer step.
+fn legacy_trajectory(cfg: &TrainConfig) -> ParamStore {
+    let arch = cfg.arch.clone();
+    let dataset = build_dataset(&cfg.dataset);
+    let mut rng = Rng::new(cfg.seed, 100);
+    let mut store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let mut service = cfg.slice_impl.build();
+    let mut optimizer = Optimizer::new(cfg.server_opt, &store);
+    let mut engine = Engine::Native;
+    for round in 1..=cfg.rounds {
+        let mut round_rng = rng.fork(round as u64);
+        let cohort = dataset.sample_cohort(&mut round_rng, cfg.cohort);
+        let shared: Vec<Option<Vec<u32>>> = cfg
+            .policies
+            .iter()
+            .zip(spec.keyspaces.iter())
+            .map(|(p, ks)| p.round_keys(ks.size, &mut round_rng))
+            .collect();
+        let mut client_keys: Vec<ClientKeys> = Vec::new();
+        let mut client_rngs: Vec<Rng> = Vec::new();
+        for &ci in &cohort {
+            let client = &dataset.train[ci];
+            let mut crng = round_rng.fork(client.id ^ 0xC11E47);
+            let keys: ClientKeys = cfg
+                .policies
+                .iter()
+                .enumerate()
+                .map(|(ksi, p)| {
+                    p.keys_for(client, spec.keyspaces[ksi].size, &mut crng, shared[ksi].as_deref(), false)
+                })
+                .collect();
+            client_keys.push(keys);
+            client_rngs.push(crng);
+        }
+        let bundles = {
+            let session = service.begin_round(&store, &spec).unwrap();
+            let bundles = session.fetch_batch(&client_keys, cfg.fetch_threads).unwrap();
+            session.finish();
+            bundles
+        };
+        let mut agg = SparseAccumulator::new(&store);
+        let mut completed = 0usize;
+        for (i, bundle) in bundles.into_iter().enumerate() {
+            let client = &dataset.train[cohort[i]];
+            let crng = &mut client_rngs[i];
+            let keys = &client_keys[i];
+            if cfg.dropout_rate > 0.0 && crng.f32() < cfg.dropout_rate {
+                continue;
+            }
+            let (batch, _) = build_cu_batch(&arch, client, keys, crng).unwrap();
+            let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
+            let deltas = engine
+                .client_update(&arch, &ms, bundle.into_vecs(), &batch, cfg.client_lr)
+                .unwrap();
+            agg.add_client(&spec, keys, &deltas).unwrap();
+            completed += 1;
+        }
+        if completed > 0 {
+            let update = Box::new(agg).finalize(cfg.agg);
+            optimizer.step(&mut store, &update);
+        }
+    }
+    store
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.name, sb.name, "{label}");
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+#[test]
+fn uniform_scheduler_reproduces_the_legacy_trajectory_byte_for_byte() {
+    for seed in [7u64, 23, 1009] {
+        let cfg = base_cfg(seed); // uniform fleet + Uniform policy defaults
+        let legacy = legacy_trajectory(&cfg);
+        let mut tr = Trainer::new(cfg).unwrap();
+        for _ in 0..3 {
+            tr.run_round().unwrap();
+        }
+        assert_stores_bit_identical(&legacy, tr.store(), &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn deprecated_dropout_rate_maps_onto_the_hazard_byte_for_byte() {
+    let mut cfg = base_cfg(7);
+    cfg.dropout_rate = 0.4;
+    let legacy = legacy_trajectory(&cfg);
+    let mut tr = Trainer::new(cfg).unwrap();
+    let mut dropped = 0usize;
+    for _ in 0..3 {
+        dropped += tr.run_round().unwrap().dropped;
+    }
+    assert!(dropped > 0, "hazard floor never fired");
+    assert_stores_bit_identical(&legacy, tr.store(), "dropout 0.4");
+}
