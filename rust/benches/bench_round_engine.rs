@@ -1,0 +1,86 @@
+//! Round-engine bench: host wall time and simulated time for every
+//! aggregation mode on the two straggler fleets. Emits
+//! `BENCH_round_engine.json` (schema `fedselect-bench-v1`) with clients/s,
+//! MB/s, simulated round seconds, and discard counts per mode — the repo's
+//! round-completion perf trajectory (diffed in CI by `perf_diff`).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{build_dataset, AggregationMode, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::scheduler::FleetKind;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let (vocab, m) = (2048usize, 256usize);
+    let (rounds, cohort, n_clients) = if b.quick { (3, 10, 60) } else { (8, 25, 150) };
+    let ds_cfg = BowConfig::new(vocab, 50).with_clients(n_clients, 8, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let modes = [
+        AggregationMode::Synchronous,
+        AggregationMode::OverSelect { extra_frac: 0.5 },
+        AggregationMode::Buffered {
+            goal_count: cohort.saturating_sub(2).max(1),
+            max_staleness: 4,
+        },
+    ];
+    for fleet in [FleetKind::Tiered3, FleetKind::FlakyEdge] {
+        for mode in modes {
+            let name = format!("round/{fleet}/{}", mode.name());
+            let make = || {
+                let mut cfg = TrainConfig::logreg_default(vocab, m);
+                cfg.dataset = DatasetConfig::Bow(ds_cfg.clone());
+                cfg.rounds = rounds;
+                cfg.cohort = cohort;
+                cfg.eval.every = 0;
+                cfg.eval.max_examples = 256;
+                cfg.fleet = fleet.clone();
+                cfg.agg_mode = mode;
+                cfg.seed = 1000;
+                cfg
+            };
+            // timed: full training rounds through the engine
+            let t0 = Instant::now();
+            let mut trainer = Trainer::with_dataset(make(), dataset.clone()).unwrap();
+            let mut merged = 0usize;
+            let mut discarded = 0usize;
+            let mut down_bytes = 0u64;
+            let mut sim_round_sum = 0.0f64;
+            for _ in 0..rounds {
+                let rec = trainer.run_round().unwrap();
+                merged += rec.completed;
+                discarded += rec.discarded_clients;
+                down_bytes += rec.comm.down_bytes;
+                sim_round_sum += rec.sim_round_s;
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let clients_per_s = merged as f64 / secs;
+            let mbps = down_bytes as f64 / 1e6 / secs;
+            let sim_round_s = sim_round_sum / rounds as f64;
+            println!(
+                "{name}: {clients_per_s:>8.1} clients/s  {mbps:>7.1} MB/s  \
+                 sim_round={sim_round_s:.2}s  sim_total={:.1}s  discarded={discarded}",
+                trainer.scheduler().sim_total_s()
+            );
+            b.metric(&name, "clients_per_s", clients_per_s);
+            b.metric(&name, "mb_per_s", mbps);
+            b.metric(&name, "sim_round_s", sim_round_s);
+            b.metric(&name, "sim_total_s", trainer.scheduler().sim_total_s());
+            b.metric(&name, "discarded", discarded as f64);
+
+            // per-round wall-time distribution (engine close included)
+            let mut timed = Trainer::with_dataset(make(), dataset.clone()).unwrap();
+            b.run(&format!("round_wall/{fleet}/{}", mode.name()), 10, || {
+                let rec = timed.run_round().unwrap();
+                std::hint::black_box(rec.sim_round_s);
+            });
+        }
+    }
+
+    b.write_json("BENCH_round_engine.json");
+}

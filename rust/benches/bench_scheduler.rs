@@ -34,7 +34,7 @@ fn main() {
             cfg.cohort = cohort;
             cfg.eval.every = 0;
             cfg.eval.max_examples = 256;
-            cfg.fleet = fleet;
+            cfg.fleet = fleet.clone();
             cfg.sched_policy = policy;
             cfg.seed = 1000;
             cfg

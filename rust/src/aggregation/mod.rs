@@ -53,6 +53,21 @@ pub trait Aggregator {
         updates: &[Vec<f32>],
     ) -> Result<()>;
 
+    /// Absorb one client's update scaled by `weight` — the buffered
+    /// (FedBuff-style) round engine discounts stale updates with
+    /// `1/sqrt(1+staleness)`. `weight == 1.0` MUST take the exact
+    /// [`Aggregator::add_client`] float path, so synchronous aggregation
+    /// through this entry point stays byte-identical. Aggregators whose
+    /// algebra cannot scale per client (pairwise-mask secure aggregation:
+    /// unequal scales stop the masks cancelling) reject `weight != 1.0`.
+    fn add_client_weighted(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+        weight: f32,
+    ) -> Result<()>;
+
     /// Produce the server update `u` in full model space.
     fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore;
 
@@ -93,6 +108,30 @@ impl Aggregator for SparseAccumulator {
     ) -> Result<()> {
         spec.deselect_add(&mut self.acc, &mut self.counts, keys, updates)?;
         self.clients += 1;
+        self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
+            + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+        Ok(())
+    }
+
+    fn add_client_weighted(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+        weight: f32,
+    ) -> Result<()> {
+        if weight == 1.0 {
+            // exact unweighted float path — synchronous aggregation through
+            // the round engine stays byte-identical to the legacy loop
+            return self.add_client(spec, keys, updates);
+        }
+        let scaled: Vec<Vec<f32>> = updates
+            .iter()
+            .map(|u| u.iter().map(|&v| v * weight).collect())
+            .collect();
+        spec.deselect_add(&mut self.acc, &mut self.counts, keys, &scaled)?;
+        self.clients += 1;
+        // the client uploaded the unscaled update; the discount is server-side
         self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
             + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
         Ok(())
@@ -196,6 +235,35 @@ mod tests {
         // untouched rows stay zero under both
         assert_eq!(u_cohort.segments[0].data[100], 0.0);
         assert_eq!(u_coord.segments[0].data[100], 0.0);
+    }
+
+    #[test]
+    fn weighted_add_scales_the_update_but_not_the_ledger() {
+        let (store, spec) = setup();
+        let mut plain = Box::new(SparseAccumulator::new(&store));
+        let mut half = Box::new(SparseAccumulator::new(&store));
+        let ups = vec![vec![2.0f32; 100], vec![2.0; 50]];
+        let keys = vec![vec![0u32, 3]];
+        plain.add_client(&spec, &keys, &ups).unwrap();
+        half.add_client_weighted(&spec, &keys, &ups, 0.5).unwrap();
+        assert_eq!(plain.up_bytes, half.up_bytes);
+        let (pa, _) = plain.raw();
+        let (ha, _) = half.raw();
+        for (ps, hs) in pa.segments.iter().zip(ha.segments.iter()) {
+            for (p, h) in ps.data.iter().zip(hs.data.iter()) {
+                assert_eq!(*h, 0.5 * *p);
+            }
+        }
+        // weight 1.0 routes through the exact unweighted path
+        let mut a = Box::new(SparseAccumulator::new(&store));
+        let mut b = Box::new(SparseAccumulator::new(&store));
+        a.add_client(&spec, &keys, &ups).unwrap();
+        b.add_client_weighted(&spec, &keys, &ups, 1.0).unwrap();
+        for (sa, sb) in a.raw().0.segments.iter().zip(b.raw().0.segments.iter()) {
+            for (x, y) in sa.data.iter().zip(sb.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

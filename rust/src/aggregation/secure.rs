@@ -12,7 +12,7 @@
 //! reconstructing (removing) a dropped client's pairwise masks from the
 //! survivors' shares, as the real protocol does with Shamir shares.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::{ParamStore, SelectSpec};
 use crate::tensor::rng::Rng;
 
@@ -153,6 +153,25 @@ impl Aggregator for SecureAggSim {
             .copied()
             .unwrap_or(self.submissions.len() as u64);
         self.submit(id, spec, keys, updates)
+    }
+
+    fn add_client_weighted(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+        weight: f32,
+    ) -> Result<()> {
+        if weight == 1.0 {
+            return self.add_client(spec, keys, updates);
+        }
+        // a client scaling its own masked vector would scale its masks too,
+        // so pairwise masks no longer cancel across unequal weights
+        Err(Error::Config(
+            "secure aggregation cannot apply per-client staleness weights \
+             (pairwise masks only cancel at equal scale); use --agg-mode sync"
+                .into(),
+        ))
     }
 
     fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore {

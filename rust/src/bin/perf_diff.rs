@@ -1,0 +1,186 @@
+//! Perf-trajectory gate: diff `fedselect-bench-v1` JSON between a committed
+//! baseline and the current bench run.
+//!
+//! ```text
+//! perf_diff <baseline_dir> <current_dir> [--threshold 0.15] [--sim-only]
+//! ```
+//!
+//! For every `BENCH_*.json` present in *both* directories, every derived
+//! metric is compared by name: throughput metrics (`*_per_s`) regress when
+//! the current value drops more than `threshold` below the baseline;
+//! simulated-time metrics (`sim_round_s`, `sim_total_s`) regress when they
+//! *rise* more than `threshold` above it. Counters (`discarded`) are
+//! informational. Wall times are ignored — CI hosts are too noisy; the
+//! derived metrics are the trajectory. Note that throughput metrics are
+//! still host-speed-dependent: on heterogeneous CI runners pass
+//! `--sim-only` to gate only the deterministic simulated-time metrics and
+//! report throughput informationally. Exit status 1 on any regression;
+//! missing baselines are a note, not a failure (first run seeds them).
+//!
+//! Refresh the baseline by copying the current `BENCH_*.json` files into
+//! the baseline directory and committing them.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use fedselect::util::json::Json;
+
+const DEFAULT_THRESHOLD: f64 = 0.15;
+
+/// Metrics where smaller is worse (throughput).
+fn higher_is_better(key: &str) -> bool {
+    key.ends_with("_per_s")
+}
+
+/// Metrics where larger is worse (simulated latency).
+fn lower_is_better(key: &str) -> bool {
+    key == "sim_round_s" || key == "sim_total_s"
+}
+
+/// name -> (metric key -> value), from the "metrics" array.
+fn load_metrics(path: &Path) -> Result<Vec<(String, Vec<(String, f64)>)>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("fedselect-bench-v1") => {}
+        other => return Err(format!("{}: unexpected schema {other:?}", path.display())),
+    }
+    let mut out = Vec::new();
+    for entry in doc.get("metrics").and_then(Json::as_arr).unwrap_or(&[]) {
+        let Some(name) = entry.get("name").and_then(Json::as_str) else {
+            continue;
+        };
+        let Json::Obj(map) = entry else { continue };
+        let mut metrics = Vec::new();
+        for (k, v) in map {
+            if k == "name" {
+                continue;
+            }
+            if let Some(x) = v.as_f64() {
+                metrics.push((k.clone(), x));
+            }
+        }
+        out.push((name.to_string(), metrics));
+    }
+    Ok(out)
+}
+
+fn bench_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut positional = Vec::new();
+    let mut threshold = DEFAULT_THRESHOLD;
+    let mut sim_only = false;
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        if a == "--sim-only" {
+            sim_only = true;
+        } else if a == "--threshold" {
+            let v = it.next().ok_or("--threshold needs a value")?;
+            threshold = v.parse().map_err(|e| format!("bad --threshold {v:?}: {e}"))?;
+        } else if let Some(v) = a.strip_prefix("--threshold=") {
+            threshold = v.parse().map_err(|e| format!("bad --threshold {v:?}: {e}"))?;
+        } else {
+            positional.push(a);
+        }
+    }
+    let [baseline_dir, current_dir] = positional.as_slice() else {
+        return Err(
+            "usage: perf_diff <baseline_dir> <current_dir> [--threshold 0.15] [--sim-only]"
+                .into(),
+        );
+    };
+    let baseline_dir = Path::new(baseline_dir);
+    let current_dir = Path::new(current_dir);
+
+    let baselines = bench_files(baseline_dir);
+    if baselines.is_empty() {
+        println!(
+            "perf_diff: no BENCH_*.json baselines in {} — nothing to compare \
+             (copy the current run there to seed the trajectory)",
+            baseline_dir.display()
+        );
+        return Ok(false);
+    }
+
+    let mut regressed = false;
+    let mut compared = 0usize;
+    for base_path in &baselines {
+        let file = base_path.file_name().expect("bench file name");
+        let cur_path = current_dir.join(file);
+        if !cur_path.exists() {
+            println!(
+                "perf_diff: {} missing from {} — skipped",
+                file.to_string_lossy(),
+                current_dir.display()
+            );
+            continue;
+        }
+        let base = load_metrics(base_path)?;
+        let cur = load_metrics(&cur_path)?;
+        for (name, metrics) in &base {
+            let Some((_, cur_metrics)) = cur.iter().find(|(n, _)| n == name) else {
+                println!("perf_diff: {name} absent from current run — skipped");
+                continue;
+            };
+            for (key, base_val) in metrics {
+                let Some(cur_val) =
+                    cur_metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+                else {
+                    continue;
+                };
+                let (bad, arrow) = if higher_is_better(key) && *base_val > 0.0 {
+                    (!sim_only && cur_val < base_val * (1.0 - threshold), "dropped")
+                } else if lower_is_better(key) && *base_val > 0.0 {
+                    (cur_val > base_val * (1.0 + threshold), "rose")
+                } else {
+                    (false, "")
+                };
+                compared += 1;
+                if bad {
+                    regressed = true;
+                    println!(
+                        "REGRESSION {name} {key}: {arrow} {base_val:.2} -> {cur_val:.2} \
+                         (>{:.0}%)",
+                        threshold * 100.0
+                    );
+                } else if higher_is_better(key) || lower_is_better(key) {
+                    println!("ok {name} {key}: {base_val:.2} -> {cur_val:.2}");
+                }
+            }
+        }
+    }
+    println!(
+        "perf_diff: {compared} metric comparisons, threshold {:.0}%{}",
+        threshold * 100.0,
+        if regressed { " — REGRESSED" } else { "" }
+    );
+    Ok(regressed)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(false) => ExitCode::SUCCESS,
+        Ok(true) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("perf_diff: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

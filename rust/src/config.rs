@@ -3,6 +3,7 @@
 //! and the canonical per-figure defaults.
 
 use crate::aggregation::AggMode;
+use crate::coordinator::AggregationMode;
 use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
 use crate::error::{Error, Result};
 use crate::fedselect::{KeyPolicy, SliceImpl};
@@ -71,7 +72,13 @@ pub struct TrainConfig {
     /// results are byte-identical at any thread count).
     pub fetch_threads: usize,
     pub agg: AggMode,
-    /// Route aggregation through the secure-aggregation simulation.
+    /// When the round's aggregation *closes*: synchronous barrier (default,
+    /// byte-identical to the pre-engine coordinator), over-selection, or
+    /// FedBuff-style buffered asynchrony. See
+    /// [`crate::coordinator::engine`].
+    pub agg_mode: AggregationMode,
+    /// Route aggregation through the secure-aggregation simulation
+    /// (synchronous mode only: pairwise masks need the full cohort).
     pub secure_agg: bool,
     pub server_opt: ServerOpt,
     pub client_lr: f32,
@@ -106,6 +113,7 @@ impl TrainConfig {
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
             agg: AggMode::CohortMean,
+            agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             server_opt: ServerOpt::fedadagrad(0.1),
             client_lr: 0.5,
@@ -130,6 +138,7 @@ impl TrainConfig {
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
             agg: AggMode::CohortMean,
+            agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
@@ -154,6 +163,7 @@ impl TrainConfig {
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
             agg: AggMode::CohortMean,
+            agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
@@ -186,6 +196,7 @@ impl TrainConfig {
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
             agg: AggMode::CohortMean,
+            agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             server_opt: ServerOpt::fedadam(0.02),
             client_lr: 0.1,
@@ -236,6 +247,32 @@ impl TrainConfig {
         }
         if !(0.0..1.0).contains(&self.dropout_rate) {
             return Err(Error::Config("dropout_rate must be in [0, 1)".into()));
+        }
+        match self.agg_mode {
+            AggregationMode::Synchronous => {}
+            AggregationMode::OverSelect { extra_frac } => {
+                if !extra_frac.is_finite() || extra_frac <= 0.0 || extra_frac > 4.0 {
+                    return Err(Error::Config(format!(
+                        "over-select fraction must be in (0, 4], got {extra_frac}"
+                    )));
+                }
+            }
+            AggregationMode::Buffered { goal_count, .. } => {
+                if goal_count > self.cohort {
+                    return Err(Error::Config(format!(
+                        "buffered goal_count {goal_count} exceeds the cohort size {} \
+                         (0 = half the cohort)",
+                        self.cohort
+                    )));
+                }
+            }
+        }
+        if self.secure_agg && self.agg_mode != AggregationMode::Synchronous {
+            return Err(Error::Config(format!(
+                "secure aggregation requires --agg-mode sync (pairwise masks only \
+                 cancel over the full cohort), got {}",
+                self.agg_mode
+            )));
         }
         if !(0.0..=1.0).contains(&self.mem_cap_frac) || self.mem_cap_frac == 0.0 {
             return Err(Error::Config("mem_cap_frac must be in (0, 1]".into()));
@@ -372,5 +409,48 @@ mod tests {
         let mut cfg = TrainConfig::cnn_default(16);
         cfg.engine = EngineKind::Native;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn agg_mode_knobs_are_validated() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.5 };
+        assert!(cfg.validate().is_ok());
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 9.0 };
+        assert!(cfg.validate().is_err());
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: cfg.cohort,
+            max_staleness: 4,
+        };
+        assert!(cfg.validate().is_ok());
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: cfg.cohort + 1,
+            max_staleness: 4,
+        };
+        assert!(cfg.validate().is_err());
+        // goal 0 = auto (half the cohort)
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 0,
+        };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn secure_agg_requires_the_synchronous_barrier() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.secure_agg = true;
+        assert!(cfg.validate().is_ok());
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 4,
+        };
+        assert!(cfg.validate().is_err());
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.25 };
+        assert!(cfg.validate().is_err());
+        cfg.secure_agg = false;
+        assert!(cfg.validate().is_ok());
     }
 }

@@ -1,0 +1,609 @@
+//! Event-driven round completion: the [`RoundEngine`] and its pluggable
+//! [`AggregationMode`]s.
+//!
+//! The paper's Algorithm 2 closes every round at a synchronous barrier: the
+//! server waits for the *slowest* surviving client, so the straggler-bound
+//! `SimClock` of the cohort scheduler can only ever report worst-case round
+//! times. FEDSELECT makes partial and asynchronous aggregation cheap —
+//! only the keys a client actually trained need to land — and the
+//! client-selection literature (Fu et al. 2022, Németh et al. 2022) names
+//! the two standard systems answers to stragglers. Both are modes here:
+//!
+//! | `--agg-mode` | selects | round closes at | discounts |
+//! |---|---|---|---|
+//! | `sync` | the cohort | the straggler (barrier) — **byte-identical** to the pre-engine coordinator | — |
+//! | `over-select:F` | `cohort·(1+F)` clients | the `cohort`-th completion; later reporters' updates are **discarded but their bytes stay on the ledger** | — |
+//! | `buffered:G:S` | the cohort | the `G`-th landed update (carried in-flight updates included) | stale updates merge at weight `1/√(1+staleness)`; staleness > `S` discards |
+//!
+//! The engine consumes the scheduler's per-client
+//! [`CompletionEvent`]s *in completion order* and decides which updates
+//! merge now, which stay in flight (buffered mode trains clients against
+//! the `SlicePlan` of their launch round — exactly FedBuff's stale-update
+//! model, since each delta was computed against the launch-round store),
+//! and which are discarded. The trainer then applies the merge list through
+//! [`crate::aggregation::Aggregator::add_client_weighted`] and feeds the
+//! engine's close point to [`crate::scheduler::Scheduler::complete_round_at`],
+//! so simulated round seconds reflect the goal-count close rather than the
+//! barrier.
+//!
+//! Determinism: everything is a pure function of the round RNG and the
+//! simulated timeline (ties broken by launch round, then client index), so
+//! buffered merge order is reproducible bit-for-bit at a fixed seed —
+//! property-tested in `tests/round_engine.rs`.
+
+use crate::fedselect::ClientKeys;
+use crate::scheduler::CompletionEvent;
+
+/// When a round's aggregation closes, and with what update-weighting
+/// (config-level knob; CLI `--agg-mode`, `--over-select-frac`,
+/// `--goal-count`, `--max-staleness`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggregationMode {
+    /// Wait for every surviving client — the paper's barrier, byte-identical
+    /// to the pre-engine coordinator at the same seed.
+    Synchronous,
+    /// Sample `ceil(cohort * extra_frac)` extra clients and close the round
+    /// at the original cohort count of completions; stragglers beyond the
+    /// goal are discarded (bytes stay on the ledger).
+    OverSelect { extra_frac: f64 },
+    /// FedBuff-style buffered asynchrony: updates land in completion order,
+    /// the round closes once `goal_count` of them have landed (0 = half the
+    /// cohort, rounded up), unlanded updates stay in flight into later
+    /// rounds at weight `1/sqrt(1+staleness)`, and updates older than
+    /// `max_staleness` rounds are discarded.
+    Buffered {
+        goal_count: usize,
+        max_staleness: usize,
+    },
+}
+
+impl AggregationMode {
+    pub const DEFAULT_OVER_SELECT_FRAC: f64 = 0.25;
+    pub const DEFAULT_MAX_STALENESS: usize = 4;
+
+    /// Mode family name (table rows, ledger records).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationMode::Synchronous => "sync",
+            AggregationMode::OverSelect { .. } => "over-select",
+            AggregationMode::Buffered { .. } => "buffered",
+        }
+    }
+
+    /// The merge weight of an update `staleness` rounds old (FedBuff's
+    /// `1/sqrt(1+staleness)`); exactly 1.0 at staleness 0 so fresh updates
+    /// take the unweighted aggregation path.
+    pub fn staleness_weight(staleness: usize) -> f32 {
+        if staleness == 0 {
+            1.0
+        } else {
+            1.0 / (1.0 + staleness as f32).sqrt()
+        }
+    }
+}
+
+/// Canonical CLI spellings; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for AggregationMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggregationMode::Synchronous => f.write_str("sync"),
+            AggregationMode::OverSelect { extra_frac } => write!(f, "over-select:{extra_frac}"),
+            AggregationMode::Buffered {
+                goal_count,
+                max_staleness,
+            } => write!(f, "buffered:{goal_count}:{max_staleness}"),
+        }
+    }
+}
+
+impl std::str::FromStr for AggregationMode {
+    type Err = String;
+    /// Case-insensitive. `sync` | `over-select[:FRAC]` |
+    /// `buffered[:GOAL[:MAX_STALENESS]]`; omitted knobs take the defaults
+    /// (`FRAC` 0.25, `GOAL` 0 = half the cohort, `MAX_STALENESS` 4).
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        let (head, rest) = match lower.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (lower.as_str(), None),
+        };
+        match head {
+            "sync" | "synchronous" | "barrier" => match rest {
+                None => Ok(AggregationMode::Synchronous),
+                Some(r) => Err(format!("sync takes no parameter, got {r:?}")),
+            },
+            "over-select" | "over_select" | "overselect" => {
+                let extra_frac = match rest {
+                    None => Self::DEFAULT_OVER_SELECT_FRAC,
+                    Some(r) => r
+                        .parse::<f64>()
+                        .map_err(|e| format!("bad over-select fraction {r:?}: {e}"))?,
+                };
+                Ok(AggregationMode::OverSelect { extra_frac })
+            }
+            "buffered" | "fedbuff" | "async" => {
+                let (goal_count, max_staleness) = match rest {
+                    None => (0, Self::DEFAULT_MAX_STALENESS),
+                    Some(r) => match r.split_once(':') {
+                        None => (
+                            r.parse::<usize>()
+                                .map_err(|e| format!("bad goal count {r:?}: {e}"))?,
+                            Self::DEFAULT_MAX_STALENESS,
+                        ),
+                        Some((g, st)) => (
+                            g.parse::<usize>()
+                                .map_err(|e| format!("bad goal count {g:?}: {e}"))?,
+                            st.parse::<usize>()
+                                .map_err(|e| format!("bad max staleness {st:?}: {e}"))?,
+                        ),
+                    },
+                };
+                Ok(AggregationMode::Buffered {
+                    goal_count,
+                    max_staleness,
+                })
+            }
+            other => Err(format!(
+                "unknown aggregation mode {other:?} (want sync, over-select[:frac] or \
+                 buffered[:goal[:max_staleness]])"
+            )),
+        }
+    }
+}
+
+/// One cohort slot's computed contribution, handed to the engine by the
+/// trainer after the client-update phase (`None` slots dropped post-fetch).
+#[derive(Clone, Debug)]
+pub struct SlotWork {
+    /// Train-client index.
+    pub client: usize,
+    /// Fleet tier of the client's device.
+    pub tier: usize,
+    pub keys: ClientKeys,
+    /// Per-binding sliced model deltas, in binding order.
+    pub deltas: Vec<Vec<f32>>,
+}
+
+/// One update the engine decided to merge this round, in merge order.
+#[derive(Clone, Debug)]
+pub struct MergeItem {
+    pub client: usize,
+    pub tier: usize,
+    /// Rounds since the update's slice plan was cut (0 = this round).
+    pub staleness: usize,
+    /// `AggregationMode::staleness_weight(staleness)`.
+    pub weight: f32,
+    pub keys: ClientKeys,
+    pub deltas: Vec<Vec<f32>>,
+}
+
+/// What the engine decided for one round.
+#[derive(Debug, Default)]
+pub struct RoundOutcome {
+    /// Updates to aggregate, in merge order (synchronous: cohort order;
+    /// over-select/buffered: completion order).
+    pub merged: Vec<MergeItem>,
+    /// When the server closed the round, relative to round start (seconds on
+    /// the simulated clock; the fixed overhead is added by the scheduler).
+    pub close_s: f64,
+    /// Fleet tier of each computed update whose bytes were spent but which
+    /// will never merge: over-selected stragglers, or buffered updates past
+    /// `max_staleness` (one entry per discarded update).
+    pub discarded_tiers: Vec<usize>,
+    /// Mean staleness over `merged` (0 outside buffered mode).
+    pub mean_staleness: f64,
+    /// Updates still in flight after this round (buffered mode only).
+    pub in_flight: usize,
+}
+
+/// A buffered-mode update that has been computed but has not landed yet.
+#[derive(Clone, Debug)]
+struct InFlight {
+    client: usize,
+    tier: usize,
+    keys: ClientKeys,
+    deltas: Vec<Vec<f32>>,
+    launch_round: usize,
+    /// Absolute simulated time at which the update lands at the server.
+    done_abs_s: f64,
+}
+
+/// Event-driven round completion. Owns the aggregation mode and, in
+/// buffered mode, the cross-round in-flight update pool.
+pub struct RoundEngine {
+    mode: AggregationMode,
+    in_flight: Vec<InFlight>,
+}
+
+impl RoundEngine {
+    pub fn new(mode: AggregationMode) -> Self {
+        RoundEngine {
+            mode,
+            in_flight: Vec::new(),
+        }
+    }
+
+    pub fn mode(&self) -> AggregationMode {
+        self.mode
+    }
+
+    /// Updates currently in flight (buffered mode; 0 otherwise).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// How many clients to select this round for a configured cohort size
+    /// of `base`: over-selection inflates by `ceil(base * extra_frac)`
+    /// (at least one extra), the other modes select exactly `base`.
+    pub fn planned_cohort(&self, base: usize) -> usize {
+        match self.mode {
+            AggregationMode::OverSelect { extra_frac } => {
+                base + (((base as f64) * extra_frac).ceil() as usize).max(1)
+            }
+            _ => base,
+        }
+    }
+
+    /// The buffered goal for a configured cohort size (0 = half the cohort,
+    /// rounded up; synchronous/over-select close by their own rules).
+    pub fn effective_goal(&self, base: usize) -> usize {
+        match self.mode {
+            AggregationMode::Buffered { goal_count, .. } => {
+                if goal_count == 0 {
+                    base.div_ceil(2).max(1)
+                } else {
+                    goal_count
+                }
+            }
+            _ => base,
+        }
+    }
+
+    /// Decide the round: which updates merge (and at what weight), when the
+    /// round closes, and what is discarded. `events` are this round's
+    /// completion events in completion order; `work` is indexed by cohort
+    /// slot (`None` = dropped post-fetch); `round_start_s` is the simulated
+    /// clock before this round. Pure in its inputs plus the engine's
+    /// in-flight pool, so trajectories are deterministic at a fixed seed.
+    pub fn close_round(
+        &mut self,
+        round: usize,
+        base_cohort: usize,
+        round_start_s: f64,
+        events: &[CompletionEvent],
+        mut work: Vec<Option<SlotWork>>,
+    ) -> RoundOutcome {
+        match self.mode {
+            AggregationMode::Synchronous => {
+                // barrier: close at the straggler, merge every survivor in
+                // cohort-slot order — the legacy loop, byte for byte
+                let close_s = events.last().map_or(0.0, |e| e.at_s);
+                let merged: Vec<MergeItem> = work
+                    .into_iter()
+                    .flatten()
+                    .map(|w| MergeItem {
+                        client: w.client,
+                        tier: w.tier,
+                        staleness: 0,
+                        weight: 1.0,
+                        keys: w.keys,
+                        deltas: w.deltas,
+                    })
+                    .collect();
+                RoundOutcome {
+                    merged,
+                    close_s,
+                    ..RoundOutcome::default()
+                }
+            }
+            AggregationMode::OverSelect { .. } => {
+                // close at the goal-count-th completion; later reporters'
+                // updates are discarded (their bytes were already spent and
+                // stay on the round ledgers)
+                let goal = base_cohort.min(events.len());
+                let close_s = if goal == 0 { 0.0 } else { events[goal - 1].at_s };
+                let merged: Vec<MergeItem> = events[..goal]
+                    .iter()
+                    .map(|e| {
+                        let w = work[e.slot].take().expect("completion event for live slot");
+                        MergeItem {
+                            client: w.client,
+                            tier: w.tier,
+                            staleness: 0,
+                            weight: 1.0,
+                            keys: w.keys,
+                            deltas: w.deltas,
+                        }
+                    })
+                    .collect();
+                RoundOutcome {
+                    merged,
+                    close_s,
+                    discarded_tiers: events[goal..].iter().map(|e| e.tier).collect(),
+                    ..RoundOutcome::default()
+                }
+            }
+            AggregationMode::Buffered { max_staleness, .. } => {
+                // launch this round's survivors into the in-flight pool with
+                // absolute landing times
+                for e in events {
+                    let w = work[e.slot].take().expect("completion event for live slot");
+                    self.in_flight.push(InFlight {
+                        client: w.client,
+                        tier: w.tier,
+                        keys: w.keys,
+                        deltas: w.deltas,
+                        launch_round: round,
+                        done_abs_s: round_start_s + e.at_s,
+                    });
+                }
+                // land updates in completion order until the goal count;
+                // carried updates that finished between rounds land at once
+                self.in_flight.sort_by(|a, b| {
+                    a.done_abs_s
+                        .partial_cmp(&b.done_abs_s)
+                        .expect("landing times are finite")
+                        .then(a.launch_round.cmp(&b.launch_round))
+                        .then(a.client.cmp(&b.client))
+                });
+                let goal = self.effective_goal(base_cohort).min(self.in_flight.len());
+                let mut close_abs = round_start_s;
+                let mut stale_sum = 0usize;
+                let merged: Vec<MergeItem> = self
+                    .in_flight
+                    .drain(..goal)
+                    .map(|inf| {
+                        let staleness = round - inf.launch_round;
+                        stale_sum += staleness;
+                        close_abs = close_abs.max(inf.done_abs_s);
+                        MergeItem {
+                            client: inf.client,
+                            tier: inf.tier,
+                            staleness,
+                            weight: AggregationMode::staleness_weight(staleness),
+                            keys: inf.keys,
+                            deltas: inf.deltas,
+                        }
+                    })
+                    .collect();
+                // age out anything that would exceed the staleness bound by
+                // the time it could next land
+                let mut discarded_tiers = Vec::new();
+                self.in_flight.retain(|inf| {
+                    if round - inf.launch_round < max_staleness {
+                        true
+                    } else {
+                        discarded_tiers.push(inf.tier);
+                        false
+                    }
+                });
+                let mean_staleness = if goal == 0 {
+                    0.0
+                } else {
+                    stale_sum as f64 / goal as f64
+                };
+                RoundOutcome {
+                    merged,
+                    close_s: (close_abs - round_start_s).max(0.0),
+                    discarded_tiers,
+                    mean_staleness,
+                    in_flight: self.in_flight.len(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::ClientTiming;
+
+    fn event(slot: usize, client: usize, tier: usize, at_s: f64) -> CompletionEvent {
+        CompletionEvent {
+            slot,
+            client,
+            tier,
+            at_s,
+            timing: ClientTiming {
+                download_s: at_s,
+                compute_s: 0.0,
+                upload_s: 0.0,
+            },
+        }
+    }
+
+    fn slot_work(client: usize, tier: usize) -> SlotWork {
+        SlotWork {
+            client,
+            tier,
+            keys: vec![vec![client as u32]],
+            deltas: vec![vec![client as f32; 4]],
+        }
+    }
+
+    #[test]
+    fn display_from_str_round_trips_case_insensitively() {
+        for mode in [
+            AggregationMode::Synchronous,
+            AggregationMode::OverSelect { extra_frac: 0.25 },
+            AggregationMode::OverSelect { extra_frac: 0.5 },
+            AggregationMode::Buffered {
+                goal_count: 0,
+                max_staleness: 4,
+            },
+            AggregationMode::Buffered {
+                goal_count: 12,
+                max_staleness: 2,
+            },
+        ] {
+            let shown = mode.to_string();
+            assert_eq!(shown.parse::<AggregationMode>().unwrap(), mode, "{shown}");
+            assert_eq!(
+                shown.to_uppercase().parse::<AggregationMode>().unwrap(),
+                mode,
+                "{shown}"
+            );
+        }
+        assert_eq!(
+            "over-select".parse::<AggregationMode>().unwrap(),
+            AggregationMode::OverSelect {
+                extra_frac: AggregationMode::DEFAULT_OVER_SELECT_FRAC
+            }
+        );
+        assert_eq!(
+            "fedbuff".parse::<AggregationMode>().unwrap(),
+            AggregationMode::Buffered {
+                goal_count: 0,
+                max_staleness: AggregationMode::DEFAULT_MAX_STALENESS
+            }
+        );
+        assert_eq!(
+            "buffered:8".parse::<AggregationMode>().unwrap(),
+            AggregationMode::Buffered {
+                goal_count: 8,
+                max_staleness: AggregationMode::DEFAULT_MAX_STALENESS
+            }
+        );
+        assert!("sync:0.5".parse::<AggregationMode>().is_err());
+        assert!("over-select:x".parse::<AggregationMode>().is_err());
+        assert!("bogus".parse::<AggregationMode>().is_err());
+    }
+
+    #[test]
+    fn planned_cohort_and_goal_math() {
+        let sync = RoundEngine::new(AggregationMode::Synchronous);
+        assert_eq!(sync.planned_cohort(10), 10);
+        assert_eq!(sync.effective_goal(10), 10);
+        let over = RoundEngine::new(AggregationMode::OverSelect { extra_frac: 0.3 });
+        assert_eq!(over.planned_cohort(10), 13);
+        assert_eq!(over.planned_cohort(1), 2); // at least one extra
+        let auto = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 4,
+        });
+        assert_eq!(auto.planned_cohort(10), 10);
+        assert_eq!(auto.effective_goal(10), 5);
+        assert_eq!(auto.effective_goal(9), 5);
+        let fixed = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 7,
+            max_staleness: 4,
+        });
+        assert_eq!(fixed.effective_goal(10), 7);
+    }
+
+    #[test]
+    fn staleness_weight_is_one_when_fresh_and_decays() {
+        assert_eq!(AggregationMode::staleness_weight(0).to_bits(), 1.0f32.to_bits());
+        let w1 = AggregationMode::staleness_weight(1);
+        let w3 = AggregationMode::staleness_weight(3);
+        assert!((w1 - 1.0 / 2f32.sqrt()).abs() < 1e-6);
+        assert!(w3 < w1 && w1 < 1.0);
+    }
+
+    #[test]
+    fn synchronous_merges_every_survivor_in_slot_order_at_the_straggler() {
+        let mut eng = RoundEngine::new(AggregationMode::Synchronous);
+        let work = vec![Some(slot_work(10, 0)), None, Some(slot_work(12, 1))];
+        let events = vec![event(2, 12, 1, 0.5), event(0, 10, 0, 3.0)];
+        let out = eng.close_round(1, 3, 0.0, &events, work);
+        assert_eq!(out.close_s, 3.0);
+        assert!(out.discarded_tiers.is_empty());
+        let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
+        assert_eq!(order, vec![10, 12], "slot order, not completion order");
+        assert!(out.merged.iter().all(|m| m.weight == 1.0 && m.staleness == 0));
+    }
+
+    #[test]
+    fn over_select_closes_at_the_goal_and_discards_the_tail() {
+        let mut eng = RoundEngine::new(AggregationMode::OverSelect { extra_frac: 0.5 });
+        assert_eq!(eng.planned_cohort(2), 3);
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+        ];
+        let events = vec![event(2, 12, 1, 0.5), event(0, 10, 0, 1.0), event(1, 11, 0, 9.0)];
+        let out = eng.close_round(1, 2, 0.0, &events, work);
+        assert_eq!(out.close_s, 1.0, "closes at the 2nd completion");
+        let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
+        assert_eq!(order, vec![12, 10], "completion order");
+        assert_eq!(out.discarded_tiers, vec![0], "the straggler's update is discarded");
+    }
+
+    #[test]
+    fn buffered_carries_updates_across_rounds_with_staleness() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 2,
+            max_staleness: 1,
+        });
+        // round 1: three survivors, goal 2 — slowest (client 12) stays in flight
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+        ];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 11, 0, 2.0), event(2, 12, 1, 8.0)];
+        let out1 = eng.close_round(1, 3, 0.0, &events, work);
+        assert_eq!(out1.merged.len(), 2);
+        assert_eq!(out1.close_s, 2.0);
+        assert_eq!(out1.in_flight, 1);
+        assert!(out1.discarded_tiers.is_empty());
+        assert_eq!(out1.mean_staleness, 0.0);
+        // round 2 starts at sim t=3.0: the carried update (lands at t=8.0)
+        // races this round's fresh ones and merges first at staleness 1
+        let work2 = vec![Some(slot_work(20, 0)), Some(slot_work(21, 0))];
+        let events2 = vec![event(0, 20, 0, 9.0), event(1, 21, 0, 12.0)];
+        let out2 = eng.close_round(2, 2, 3.0, &events2, work2);
+        let merged: Vec<(usize, usize)> =
+            out2.merged.iter().map(|m| (m.client, m.staleness)).collect();
+        assert_eq!(merged, vec![(12, 1), (20, 0)]);
+        assert!((out2.merged[0].weight - 1.0 / 2f32.sqrt()).abs() < 1e-6);
+        // close = the 2nd landing: client 20 at absolute 3.0 + 9.0
+        assert_eq!(out2.close_s, 9.0);
+        assert!((out2.mean_staleness - 0.5).abs() < 1e-12);
+        // client 21 (launched round 2) is still fresh enough to carry on
+        assert_eq!(out2.in_flight, 1);
+        assert!(out2.discarded_tiers.is_empty());
+        // round 3: nothing new; the carried update (staleness 1) lands alone
+        let out3 = eng.close_round(3, 2, 13.0, &[], vec![]);
+        assert_eq!(out3.merged.len(), 1);
+        assert_eq!(out3.merged[0].client, 21);
+        assert_eq!(out3.merged[0].staleness, 1);
+        // it landed at absolute 3.0 + 12.0 = 15.0, i.e. 2.0 into round 3
+        assert!((out3.close_s - 2.0).abs() < 1e-12);
+        assert_eq!(out3.in_flight, 0);
+    }
+
+    #[test]
+    fn buffered_discards_past_the_staleness_bound() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 1,
+            max_staleness: 0,
+        });
+        let work = vec![Some(slot_work(10, 0)), Some(slot_work(11, 0))];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 11, 0, 5.0)];
+        let out = eng.close_round(1, 2, 0.0, &events, work);
+        assert_eq!(out.merged.len(), 1);
+        // max_staleness 0: the unlanded update may not carry a single round
+        assert_eq!(out.discarded_tiers, vec![0]);
+        assert_eq!(out.in_flight, 0);
+    }
+
+    #[test]
+    fn empty_rounds_close_immediately() {
+        for mode in [
+            AggregationMode::Synchronous,
+            AggregationMode::OverSelect { extra_frac: 0.5 },
+            AggregationMode::Buffered {
+                goal_count: 0,
+                max_staleness: 4,
+            },
+        ] {
+            let mut eng = RoundEngine::new(mode);
+            let out = eng.close_round(1, 4, 0.0, &[], vec![None, None, None, None]);
+            assert!(out.merged.is_empty(), "{mode}");
+            assert_eq!(out.close_s, 0.0, "{mode}");
+        }
+    }
+}

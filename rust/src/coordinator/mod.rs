@@ -2,10 +2,12 @@
 //!
 //! Each round runs in four phases:
 //! 0. **Plan** — [`Scheduler::plan_round`] chooses the cohort from the
-//!    device fleet via the configured selection policy, with per-slot
-//!    failure hazards and (optionally) per-client select-key budgets; the
-//!    `uniform` fleet + `uniform` policy path is byte-identical to the
-//!    pre-scheduler inline sampling (§5.1: uniform without replacement);
+//!    device fleet via the configured selection policy (over-selection
+//!    inflates the requested size via [`RoundEngine::planned_cohort`]),
+//!    with per-slot failure hazards and (optionally) per-client select-key
+//!    budgets; the `uniform` fleet + `uniform` policy path is
+//!    byte-identical to the pre-scheduler inline sampling (§5.1: uniform
+//!    without replacement);
 //! 1. **Keys** — fork each client's RNG and draw its select keys via its
 //!    [`KeyPolicy`] (re-budgeted per client when the plan says so), in
 //!    cohort order (phases 0–1 are the only consumers of the round RNG);
@@ -14,18 +16,30 @@
 //!    cohort is sliced through [`RoundSession::fetch_batch`] across
 //!    `fetch_threads` workers;
 //! 3. **Update** — each surviving client runs `ClientUpdate` (one local
-//!    epoch of SGD through the engine) and `AGGREGATE*` scatters its delta
-//!    into full model space (plain or secure-masked); updates are applied
-//!    sequentially in cohort-index order so the trajectory is byte-identical
-//!    at any `fetch_threads`; then `ServerUpdate` applies the server
-//!    optimizer to the pseudo-gradient, and
-//!    [`Scheduler::complete_round`] converts the per-client byte ledgers
-//!    into simulated round wall-time and per-tier completion counts.
+//!    epoch of SGD through the engine), in cohort-index order so the
+//!    trajectory is byte-identical at any `fetch_threads`; the
+//!    [`Scheduler::events`] iterator turns the per-client byte ledgers into
+//!    completion-ordered [`crate::scheduler::CompletionEvent`]s, and the
+//!    [`RoundEngine`] decides — per its [`AggregationMode`] — which updates
+//!    `AGGREGATE*` merges now (and at what staleness weight), which stay in
+//!    flight, and when the round *closes*; then `ServerUpdate` applies the
+//!    server optimizer to the pseudo-gradient and
+//!    [`Scheduler::complete_round_at`] lands the close point as simulated
+//!    round wall-time plus per-tier completion counts.
+//!
+//! Under `AggregationMode::Synchronous` (the default) the engine reproduces
+//! the pre-engine barrier loop byte for byte — proven against a legacy-loop
+//! replica in `tests/round_engine.rs`. `over-select` and `buffered` trade
+//! bit-compatibility for straggler immunity; see [`engine`].
 //!
 //! Failure injection: a client drops *after* fetching its slice (download
 //! wasted, no contribution) with its profile's hazard — the paper's §6
 //! dropout pattern, per-device. The deprecated scalar `dropout_rate` floors
 //! every hazard, reproducing the old behavior exactly on the uniform fleet.
+
+pub mod engine;
+
+pub use engine::{AggregationMode, MergeItem, RoundEngine, RoundOutcome, SlotWork};
 
 use std::time::Instant;
 
@@ -46,21 +60,36 @@ use crate::tensor::rng::Rng;
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
     pub round: usize,
+    /// Updates merged into the server model this round (under buffered
+    /// aggregation this may include updates launched in earlier rounds).
     pub completed: usize,
     pub dropped: usize,
+    /// Aggregation mode the engine ran this round under.
+    pub mode: AggregationMode,
+    /// Computed updates whose bytes were spent but never merged:
+    /// over-selected stragglers, or buffered updates past `max_staleness`.
+    pub discarded_clients: usize,
+    /// Mean rounds-of-staleness over the merged updates (0 outside
+    /// buffered mode).
+    pub mean_staleness: f64,
     pub comm: RoundComm,
     /// Client->server upload bytes (updates + keys, or masked vectors).
     pub up_bytes: u64,
     /// Max client memory this round (bytes).
     pub max_client_mem: usize,
     pub wall_ms: f64,
-    /// Simulated round duration on the device fleet (straggler-bound).
+    /// Simulated round duration on the device fleet: close point (straggler
+    /// under `sync`, goal-count completion otherwise) plus server overhead.
     pub sim_round_s: f64,
-    /// Completing clients per fleet tier.
+    /// Merged updates per fleet tier.
     pub tier_completed: Vec<usize>,
     /// Post-fetch dropouts per fleet tier.
     pub tier_dropped: Vec<usize>,
-    /// Download bytes per fleet tier (wasted downloads of dropouts included).
+    /// Discarded updates per fleet tier (over-selected stragglers, buffered
+    /// staleness-bound discards).
+    pub tier_discarded: Vec<usize>,
+    /// Download bytes per fleet tier (wasted downloads of dropouts and
+    /// discarded stragglers included).
     pub tier_down_bytes: Vec<u64>,
 }
 
@@ -87,6 +116,10 @@ pub struct TrainReport {
     pub total_up_bytes: u64,
     /// Simulated training time on the device fleet, seconds.
     pub total_sim_s: f64,
+    /// Computed-but-never-merged updates across the run: over-selected
+    /// stragglers, staleness-bound discards, plus any buffered updates
+    /// still in flight when training ended.
+    pub total_discarded: usize,
 }
 
 impl TrainReport {
@@ -114,6 +147,7 @@ pub struct Trainer {
     engine: Engine,
     optimizer: Optimizer,
     scheduler: Scheduler,
+    round_engine: RoundEngine,
     geom: SliceGeometry,
     rng: Rng,
     round: usize,
@@ -162,7 +196,8 @@ impl Trainer {
             broadcast_floats: spec.broadcast_floats(&store),
             server_floats: spec.server_floats(&store),
         };
-        let scheduler = Scheduler::new(&cfg, dataset.train.len());
+        let scheduler = Scheduler::new(&cfg, dataset.train.len())?;
+        let round_engine = RoundEngine::new(cfg.agg_mode);
         Ok(Trainer {
             cfg,
             arch,
@@ -173,6 +208,7 @@ impl Trainer {
             engine,
             optimizer,
             scheduler,
+            round_engine,
             geom,
             rng,
             round: 0,
@@ -209,19 +245,26 @@ impl Trainer {
             / self.spec.server_floats(&self.store) as f64
     }
 
+    /// The round engine (aggregation mode, in-flight update pool).
+    pub fn round_engine(&self) -> &RoundEngine {
+        &self.round_engine
+    }
+
     /// Run one round of Algorithm 2.
     pub fn run_round(&mut self) -> Result<RoundRecord> {
         let t0 = Instant::now();
         self.round += 1;
         let mut round_rng = self.rng.fork(self.round as u64);
 
-        // Phase 0 — plan: the scheduler picks the cohort from the fleet.
-        // Under the uniform policy this is the identical
-        // sample_without_replacement draw the pre-scheduler coordinator
-        // made, so trajectories are byte-identical at the same seed.
-        let plan =
-            self.scheduler
-                .plan_round(self.round, self.cfg.cohort, &self.geom, &mut round_rng);
+        // Phase 0 — plan: the scheduler picks the cohort from the fleet
+        // (over-selection asks for extra clients). Under the uniform policy
+        // this is the identical sample_without_replacement draw the
+        // pre-scheduler coordinator made, so trajectories are
+        // byte-identical at the same seed.
+        let want = self.round_engine.planned_cohort(self.cfg.cohort);
+        let plan = self
+            .scheduler
+            .plan_round(self.round, want, &self.geom, &mut round_rng);
         let cohort = &plan.cohort;
 
         // shared per-round key sets (Fig. 6 "fixed" ablation)
@@ -275,20 +318,14 @@ impl Trainer {
             (bundles, session.finish())
         };
 
-        // Phase 3 — update: client updates + aggregation, sequential in
-        // cohort-index order (byte-identical at any fetch_threads).
-        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
-            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
-            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
-        } else {
-            Box::new(SparseAccumulator::new(&self.store))
-        };
-
+        // Phase 3a — compute: dropout coin + ClientUpdate per cohort slot,
+        // sequential in cohort-index order (byte-identical at any
+        // fetch_threads). Merging is deferred to the round engine.
         let mut dropped = 0usize;
-        let mut completed = 0usize;
         let mut up_bytes_plain = 0u64;
         let mut max_mem = 0usize;
         let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
+        let mut work: Vec<Option<SlotWork>> = Vec::with_capacity(cohort.len());
         for (i, bundle) in bundles.into_iter().enumerate() {
             let client = &self.dataset.train[cohort[i]];
             let crng = &mut client_rngs[i];
@@ -306,6 +343,7 @@ impl Trainer {
                     dropped: true,
                     ..ClientRoundStats::default()
                 });
+                work.push(None);
                 continue;
             }
 
@@ -329,14 +367,58 @@ impl Trainer {
                 plain_up
             };
             up_bytes_plain += plain_up;
-            agg.add_client(&self.spec, keys, &deltas)?;
-            completed += 1;
+            let update_norm = deltas
+                .iter()
+                .flat_map(|d| d.iter())
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt() as f32;
             stats.push(ClientRoundStats {
                 down_bytes,
                 up_bytes: client_up,
                 compute_units: slice_floats as f64 * client.num_examples() as f64,
+                update_norm,
                 dropped: false,
             });
+            work.push(Some(SlotWork {
+                client: cohort[i],
+                tier: self.scheduler.fleet().profiles[cohort[i]].tier,
+                keys: std::mem::take(&mut client_keys[i]),
+                deltas,
+            }));
+        }
+
+        // Phase 3b — close: the scheduler orders this round's completion
+        // events on the simulated timeline; the engine decides which
+        // updates merge (synchronous: all, in slot order; over-select: the
+        // first `cohort`; buffered: the goal count, carried in-flight
+        // updates included) and when the round closes.
+        let events = self.scheduler.events(&plan, &stats);
+        let round_start_s = self.scheduler.sim_total_s();
+        let outcome = self.round_engine.close_round(
+            self.round,
+            self.cfg.cohort,
+            round_start_s,
+            &events,
+            work,
+        );
+
+        // Phase 3c — aggregate the engine's merge list (weight 1.0 routes
+        // through the exact unweighted float path) and step the server
+        // optimizer on the pseudo-gradient.
+        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
+            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
+            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
+        } else {
+            Box::new(SparseAccumulator::new(&self.store))
+        };
+        for item in &outcome.merged {
+            agg.add_client_weighted(&self.spec, &item.keys, &item.deltas, item.weight)?;
+        }
+        let completed = outcome.merged.len();
+        if completed > 0 {
+            let update = agg.finalize(self.cfg.agg);
+            self.optimizer.step(&mut self.store, &update);
         }
 
         let up_bytes = if self.cfg.secure_agg {
@@ -345,17 +427,30 @@ impl Trainer {
             up_bytes_plain
         };
 
-        if completed > 0 {
-            let update = agg.finalize(self.cfg.agg);
-            self.optimizer.step(&mut self.store, &update);
-        }
+        // Phase 3d — land the close point on the simulated clock and tally
+        // tiers (merged updates by their own tier; drops/downloads over the
+        // whole cohort).
+        let merged_tiers: Vec<usize> = outcome.merged.iter().map(|m| m.tier).collect();
+        let sim = self.scheduler.complete_round_at(
+            &plan,
+            &stats,
+            &events,
+            outcome.close_s,
+            &merged_tiers,
+        );
 
-        let sim = self.scheduler.complete_round(&plan, &stats);
+        let mut tier_discarded = vec![0usize; self.scheduler.fleet().num_tiers()];
+        for &t in &outcome.discarded_tiers {
+            tier_discarded[t] += 1;
+        }
 
         Ok(RoundRecord {
             round: self.round,
             completed,
             dropped,
+            mode: self.round_engine.mode(),
+            discarded_clients: outcome.discarded_tiers.len(),
+            mean_staleness: outcome.mean_staleness,
             comm,
             up_bytes,
             max_client_mem: max_mem,
@@ -363,6 +458,7 @@ impl Trainer {
             sim_round_s: sim.sim_round_s,
             tier_completed: sim.tier_completed,
             tier_dropped: sim.tier_dropped,
+            tier_discarded,
             tier_down_bytes: sim.tier_down_bytes,
         })
     }
@@ -418,6 +514,10 @@ impl Trainer {
             total_down_bytes: rounds.iter().map(|r| r.comm.down_bytes).sum(),
             total_up_bytes: rounds.iter().map(|r| r.up_bytes).sum(),
             total_sim_s: rounds.iter().map(|r| r.sim_round_s).sum(),
+            // updates still in flight when training ends will never merge —
+            // they are part of the computed-but-wasted ledger too
+            total_discarded: rounds.iter().map(|r| r.discarded_clients).sum::<usize>()
+                + self.round_engine.in_flight(),
             rounds,
             evals,
             final_eval,
@@ -571,5 +671,81 @@ mod tests {
         cfg.policies = vec![crate::fedselect::KeyPolicy::AllKeys];
         let t = Trainer::new(cfg).unwrap();
         assert!((t.rel_model_size() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn over_select_inflates_the_cohort_and_ledgers_discards() {
+        use crate::scheduler::FleetKind;
+        let mut cfg = tiny_cfg();
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.5 };
+        let mut t = Trainer::new(cfg).unwrap();
+        let rec = t.run_round().unwrap();
+        // 6 requested + ceil(6*0.5) = 9 selected
+        assert_eq!(rec.completed + rec.dropped + rec.discarded_clients, 9);
+        assert!(rec.completed <= 6, "closes at the original goal count");
+        assert_eq!(rec.mode.name(), "over-select");
+        // every selected client's download is on the ledger — including the
+        // discarded stragglers' (the slice session charged each fetch)
+        assert_eq!(rec.tier_down_bytes.iter().sum::<u64>(), rec.comm.down_bytes);
+        assert_eq!(
+            rec.tier_completed.iter().sum::<usize>(),
+            rec.completed,
+            "tier completions count merges only"
+        );
+        assert_eq!(
+            rec.tier_discarded.iter().sum::<usize>(),
+            rec.discarded_clients,
+            "discards are tier-attributed"
+        );
+    }
+
+    #[test]
+    fn buffered_mode_cuts_simulated_time_and_reports_staleness() {
+        use crate::scheduler::FleetKind;
+        let mut base = tiny_cfg();
+        base.fleet = FleetKind::Tiered3;
+        base.rounds = 4;
+        let mut buf = base.clone();
+        buf.agg_mode = AggregationMode::Buffered {
+            goal_count: 4,
+            max_staleness: 3,
+        };
+        let sync = Trainer::new(base).unwrap().run().unwrap();
+        let buffered = Trainer::new(buf).unwrap().run().unwrap();
+        // the same seed draws the same cohorts and the same per-client
+        // timings, so closing at the 4th landing strictly beats the barrier
+        assert!(
+            buffered.total_sim_s < sync.total_sim_s,
+            "buffered {} !< sync {}",
+            buffered.total_sim_s,
+            sync.total_sim_s
+        );
+        assert!(buffered.final_eval.loss.is_finite());
+        // stragglers carried into later rounds show up as staleness
+        assert!(
+            buffered.rounds.iter().skip(1).any(|r| r.mean_staleness > 0.0),
+            "no staleness ever recorded"
+        );
+        for r in &buffered.rounds {
+            assert!(r.completed <= 4, "round merges are capped at the goal");
+        }
+    }
+
+    #[test]
+    fn buffered_runs_are_deterministic() {
+        use crate::scheduler::FleetKind;
+        let mut cfg = tiny_cfg();
+        cfg.fleet = FleetKind::FlakyEdge;
+        cfg.rounds = 3;
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 2,
+        };
+        let a = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+        let b = Trainer::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.final_eval.loss.to_bits(), b.final_eval.loss.to_bits());
+        assert_eq!(a.total_sim_s.to_bits(), b.total_sim_s.to_bits());
+        assert_eq!(a.total_discarded, b.total_discarded);
     }
 }

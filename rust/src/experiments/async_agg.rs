@@ -1,0 +1,150 @@
+//! Round-engine mode sweep: the straggler scenario the paper's synchronous
+//! Algorithm 2 cannot express. One workload (logreg tag prediction), the
+//! two straggler-heavy fleets, all three aggregation modes — comparing
+//! model quality, merge/discard tallies, staleness, and *simulated*
+//! training time. The expected shape: `over-select` and `buffered` close
+//! rounds at a goal count instead of the straggler, so `total_sim_s` drops
+//! well below `sync` at (near-)matching final accuracy.
+
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::{build_dataset, AggregationMode, Trainer};
+use crate::data::bow::BowConfig;
+use crate::error::Result;
+use crate::metrics::{mean_std, Table};
+use crate::scheduler::FleetKind;
+
+use super::ExpOptions;
+
+/// The mode column of the sweep for a given cohort size: the barrier
+/// baseline, 1.5× over-selection closed at the original cohort, and
+/// buffered aggregation closed two updates short of the cohort.
+pub fn sweep_modes(cohort: usize) -> [AggregationMode; 3] {
+    [
+        AggregationMode::Synchronous,
+        AggregationMode::OverSelect { extra_frac: 0.5 },
+        AggregationMode::Buffered {
+            goal_count: cohort.saturating_sub(2).max(1),
+            max_staleness: 4,
+        },
+    ]
+}
+
+/// `--id async`: aggregation-mode × fleet comparison table.
+pub fn sweep(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (vocab, m) = (1024usize, 256usize);
+    let (rounds, cohort, n_clients) = if opts.quick { (10, 10, 60) } else { (20, 20, 150) };
+    let ds_cfg = BowConfig::new(vocab, 50).with_clients(n_clients, 8, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let mut t = Table::new(
+        "Aggregation-mode sweep (straggler fleets)",
+        &[
+            "fleet",
+            "mode",
+            "final_metric",
+            "merged",
+            "dropped",
+            "discarded",
+            "mean_staleness",
+            "sim_round_s_mean",
+            "sim_round_s_std",
+            "sim_total_s",
+            "down_MB",
+        ],
+    );
+    for fleet in [FleetKind::Tiered3, FleetKind::FlakyEdge] {
+        for mode in sweep_modes(cohort) {
+            let mut cfg = TrainConfig::logreg_default(vocab, m);
+            cfg.dataset = DatasetConfig::Bow(ds_cfg.clone());
+            cfg.engine = opts.engine.clone();
+            cfg.rounds = rounds;
+            cfg.cohort = cohort;
+            cfg.eval.every = 0;
+            cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
+            cfg.fleet = fleet.clone();
+            cfg.agg_mode = mode;
+            cfg.seed = 1000;
+            let mut tr = Trainer::with_dataset(cfg, dataset.clone())?;
+            let report = tr.run()?;
+            let sim_rounds: Vec<f64> = report.rounds.iter().map(|r| r.sim_round_s).collect();
+            let (sim_mean, sim_std) = mean_std(&sim_rounds);
+            let stale: Vec<f64> = report.rounds.iter().map(|r| r.mean_staleness).collect();
+            t.push(vec![
+                fleet.to_string(),
+                mode.to_string(),
+                format!("{:.4}", report.final_eval.metric),
+                report
+                    .rounds
+                    .iter()
+                    .map(|r| r.completed)
+                    .sum::<usize>()
+                    .to_string(),
+                report
+                    .rounds
+                    .iter()
+                    .map(|r| r.dropped)
+                    .sum::<usize>()
+                    .to_string(),
+                report.total_discarded.to_string(),
+                format!("{:.2}", mean_std(&stale).0),
+                format!("{sim_mean:.2}"),
+                format!("{sim_std:.2}"),
+                format!("{:.1}", report.total_sim_s),
+                format!("{:.2}", report.total_down_bytes as f64 / 1e6),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    /// The acceptance shape of the async experiment: both non-barrier modes
+    /// finish training in strictly less simulated time than `sync` on both
+    /// straggler fleets, at near-matching final accuracy.
+    #[test]
+    fn async_modes_beat_the_barrier_on_simulated_time() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_async_sweep")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let tables = sweep(&opts).unwrap();
+        assert_eq!(tables.len(), 1);
+        // 2 fleets x 3 modes
+        assert_eq!(tables[0].rows.len(), 6);
+        let cell = |fleet: &str, mode: &str, col: usize| -> f64 {
+            tables[0]
+                .rows
+                .iter()
+                .find(|r| r[0] == fleet && r[1].starts_with(mode))
+                .unwrap()[col]
+                .parse()
+                .unwrap()
+        };
+        for fleet in ["tiered-3", "flaky-edge"] {
+            let sync_sim = cell(fleet, "sync", 9);
+            for mode in ["over-select", "buffered"] {
+                let sim = cell(fleet, mode, 9);
+                assert!(
+                    sim < sync_sim,
+                    "{fleet}/{mode}: sim {sim} !< sync {sync_sim}"
+                );
+                let gap = (cell(fleet, mode, 2) - cell(fleet, "sync", 2)).abs();
+                assert!(gap < 0.05, "{fleet}/{mode}: metric gap {gap} too wide");
+            }
+            // over-selection pays for its straggler immunity in bytes
+            assert!(cell(fleet, "over-select", 10) > cell(fleet, "sync", 10));
+            assert!(cell(fleet, "over-select", 5) > 0.0, "no discards ledgered");
+            assert!(
+                cell(fleet, "buffered", 6) > 0.0,
+                "buffered mode never saw a stale merge"
+            );
+        }
+    }
+}

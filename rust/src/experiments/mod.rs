@@ -18,7 +18,9 @@
 //! | `fig6`   | fixed-per-round vs independent random keys |
 //! | `fig7`   | transformer: structured / random / mixed frontier |
 //! | `sched`  | (beyond the paper) cohort-scheduler policy × fleet sweep |
+//! | `async`  | (beyond the paper) aggregation-mode × fleet sweep on the round engine |
 
+mod async_agg;
 mod emnist;
 mod logreg;
 mod scheduler;
@@ -53,6 +55,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
+    "async",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -69,6 +72,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "fig6" => emnist::fig6(opts)?,
         "fig7" => transformer::fig7(opts)?,
         "sched" => scheduler::sweep(opts)?,
+        "async" => async_agg::sweep(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

@@ -47,7 +47,7 @@ pub fn sweep(opts: &ExpOptions) -> Result<Vec<Table>> {
             cfg.cohort = cohort;
             cfg.eval.every = 0;
             cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
-            cfg.fleet = fleet;
+            cfg.fleet = fleet.clone();
             cfg.sched_policy = policy;
             cfg.mem_cap_frac = 0.25;
             cfg.seed = 1000;
@@ -97,8 +97,8 @@ mod tests {
         };
         let tables = sweep(&opts).unwrap();
         assert_eq!(tables.len(), 1);
-        // 3 fleets x 4 policies
-        assert_eq!(tables[0].rows.len(), 12);
+        // 3 fleets x 5 policies
+        assert_eq!(tables[0].rows.len(), 15);
         // memory-capped on tiered-3 downloads less than uniform on tiered-3
         let down = |fleet: &str, policy: &str| -> f64 {
             tables[0]

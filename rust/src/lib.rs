@@ -7,7 +7,9 @@
 //! Layer 3 (this crate) is the federated coordinator: the `FEDSELECT`
 //! primitive and its three system implementations, sparse deselection
 //! aggregation (plain / secure-masked / IBLT), server optimizers, the round
-//! driver of the paper's Algorithm 2, a cohort [`scheduler`] (device-profile
+//! driver of the paper's Algorithm 2 with an event-driven round engine
+//! (pluggable synchronous / over-select / buffered-async aggregation on the
+//! simulated clock), a cohort [`scheduler`] (device-profile and trace-driven
 //! fleets, pluggable selection policies, simulated round wall-time),
 //! synthetic federated datasets, a CDN substrate with a PIR cost model, and
 //! the experiment harness regenerating every table and figure of the
@@ -52,7 +54,9 @@ pub mod prelude {
     pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator};
     pub use crate::clients::Engine;
     pub use crate::config::{DatasetConfig, EngineKind, EvalConfig, TrainConfig};
-    pub use crate::coordinator::{RoundRecord, TrainReport, Trainer};
+    pub use crate::coordinator::{
+        AggregationMode, RoundEngine, RoundRecord, TrainReport, Trainer,
+    };
     pub use crate::data::FederatedDataset;
     pub use crate::error::{Error, Result};
     pub use crate::fedselect::{
@@ -61,7 +65,8 @@ pub mod prelude {
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
     pub use crate::optim::ServerOpt;
     pub use crate::scheduler::{
-        DeviceProfile, Fleet, FleetKind, SchedPolicy, Scheduler, SelectionPolicy, SimClock,
+        CompletionEvent, DeviceProfile, Fleet, FleetKind, SchedPolicy, Scheduler,
+        SelectionPolicy, SimClock,
     };
     pub use crate::tensor::rng::Rng;
 }

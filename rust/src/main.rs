@@ -3,17 +3,22 @@
 //! ```text
 //! fedselect train       [--model logreg|mlp|cnn|transformer] [--vocab N]
 //!                       [--key-policy top:M] [--policy2 random-global:D]
-//!                       [--fleet uniform|tiered-3|diurnal|flaky-edge]
+//!                       [--fleet uniform|tiered-3|diurnal|flaky-edge|trace:PATH]
 //!                       [--sched-policy uniform|availability-aware|
-//!                                       memory-capped|staleness-fair]
+//!                                       memory-capped|staleness-fair|
+//!                                       loss-weighted]
 //!                       [--mem-cap-frac F]
+//!                       [--agg-mode sync|over-select|buffered]
+//!                       [--over-select-frac F] [--goal-count N]
+//!                       [--max-staleness S]
 //!                       [--rounds R] [--cohort C] [--slice-impl pregen]
 //!                       [--fetch-threads N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
-//! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|all|list
+//! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
+//!                            all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -24,11 +29,13 @@
 //! scheduler policy (`memory-capped`); the spellings are disjoint. A bare
 //! `fedselect --fleet tiered-3 --policy memory-capped` (no subcommand)
 //! trains. `--dropout` / `--dropout-rate` are deprecated but accepted: the
-//! scalar is mapped onto a fleet-wide failure hazard.
+//! scalar is mapped onto a fleet-wide failure hazard. Giving
+//! `--over-select-frac` (or `--goal-count` / `--max-staleness`) without
+//! `--agg-mode` implies the matching mode.
 
 use fedselect::aggregation::AggMode;
 use fedselect::config::{EngineKind, TrainConfig};
-use fedselect::coordinator::Trainer;
+use fedselect::coordinator::{AggregationMode, Trainer};
 use fedselect::error::{Error, Result};
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
@@ -48,6 +55,99 @@ fn parse_engine(engine: &str, dir: &str) -> Result<EngineKind> {
             "unknown engine {other:?} (native | pjrt)"
         ))),
     }
+}
+
+/// Compose the round engine's aggregation mode from `--agg-mode` plus the
+/// per-mode knob flags. Knob flags with a mismatched mode are an error
+/// (including an *explicit* `--agg-mode sync`); when `--agg-mode` is absent
+/// they *imply* the matching mode, so `--over-select-frac 0.5` alone runs
+/// over-selection.
+fn parse_agg_mode(a: &Args) -> Result<AggregationMode> {
+    let explicit = a.get("agg-mode").map(str::to_string);
+    let mut mode: AggregationMode = explicit
+        .as_deref()
+        .unwrap_or("sync")
+        .parse()
+        .map_err(Error::Config)?;
+    let osf: Option<f64> = match a.get("over-select-frac") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| Error::Config(format!("bad --over-select-frac: {e}")))?,
+        ),
+    };
+    let goal: Option<usize> = match a.get("goal-count") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| Error::Config(format!("bad --goal-count: {e}")))?,
+        ),
+    };
+    let stale: Option<usize> = match a.get("max-staleness") {
+        None => None,
+        Some(v) => Some(
+            v.parse()
+                .map_err(|e| Error::Config(format!("bad --max-staleness: {e}")))?,
+        ),
+    };
+    if osf.is_some() && (goal.is_some() || stale.is_some()) {
+        return Err(Error::Config(
+            "--over-select-frac conflicts with --goal-count/--max-staleness \
+             (pick one aggregation mode)"
+                .into(),
+        ));
+    }
+    if mode == AggregationMode::Synchronous {
+        if explicit.is_some() {
+            // the user pinned the barrier; don't let a leftover knob flag
+            // silently switch modes under them
+            if osf.is_some() || goal.is_some() || stale.is_some() {
+                return Err(Error::Config(
+                    "--agg-mode sync conflicts with \
+                     --over-select-frac/--goal-count/--max-staleness"
+                        .into(),
+                ));
+            }
+        } else if let Some(f) = osf {
+            mode = AggregationMode::OverSelect { extra_frac: f };
+        } else if goal.is_some() || stale.is_some() {
+            mode = AggregationMode::Buffered {
+                goal_count: goal.unwrap_or(0),
+                max_staleness: stale.unwrap_or(AggregationMode::DEFAULT_MAX_STALENESS),
+            };
+        }
+        return Ok(mode);
+    }
+    match &mut mode {
+        AggregationMode::OverSelect { extra_frac } => {
+            if goal.is_some() || stale.is_some() {
+                return Err(Error::Config(
+                    "--goal-count/--max-staleness apply to --agg-mode buffered".into(),
+                ));
+            }
+            if let Some(f) = osf {
+                *extra_frac = f;
+            }
+        }
+        AggregationMode::Buffered {
+            goal_count,
+            max_staleness,
+        } => {
+            if osf.is_some() {
+                return Err(Error::Config(
+                    "--over-select-frac applies to --agg-mode over-select".into(),
+                ));
+            }
+            if let Some(g) = goal {
+                *goal_count = g;
+            }
+            if let Some(s) = stale {
+                *max_staleness = s;
+            }
+        }
+        AggregationMode::Synchronous => unreachable!("handled above"),
+    }
+    Ok(mode)
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
@@ -124,6 +224,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         .str_or("agg", "cohort")
         .parse::<AggMode>()
         .map_err(Error::Config)?;
+    cfg.agg_mode = parse_agg_mode(a)?;
     cfg.secure_agg = a.flag("secure-agg");
     cfg.fleet = a
         .str_or("fleet", "uniform")
@@ -186,6 +287,17 @@ fn cmd_train(a: &Args) -> Result<()> {
             report.total_sim_s,
             tiers.join(" ")
         );
+        if last.mode != AggregationMode::Synchronous {
+            println!(
+                "agg mode {} (last round): merged {} | discarded {} | mean staleness {:.2} \
+                 | in flight {}",
+                last.mode,
+                last.completed,
+                last.discarded_clients,
+                last.mean_staleness,
+                tr.round_engine().in_flight()
+            );
+        }
     }
     if tr.scheduler().fleet().num_tiers() > 1 {
         println!(

@@ -48,11 +48,13 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
     let sizes = fleet.tier_sizes();
     let mut completed = vec![0usize; tiers];
     let mut dropped = vec![0usize; tiers];
+    let mut discarded = vec![0usize; tiers];
     let mut down = vec![0u64; tiers];
     for r in rounds {
         for t in 0..tiers {
             completed[t] += r.tier_completed.get(t).copied().unwrap_or(0);
             dropped[t] += r.tier_dropped.get(t).copied().unwrap_or(0);
+            discarded[t] += r.tier_discarded.get(t).copied().unwrap_or(0);
             down[t] += r.tier_down_bytes.get(t).copied().unwrap_or(0);
         }
     }
@@ -60,7 +62,7 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
         &format!("Fleet summary ({})", fleet.kind),
         &[
             "tier", "clients", "mem_frac", "mean_down", "hazard", "selected", "completed",
-            "dropped", "down_total",
+            "dropped", "discarded", "down_total",
         ],
     );
     for t in 0..tiers {
@@ -75,9 +77,13 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
             format!("{mean_mem:.2}"),
             human_rate(mean_down),
             format!("{mean_hazard:.3}"),
-            (completed[t] + dropped[t]).to_string(),
+            // under buffered aggregation carried merges land in a later
+            // round's tally, so this is an approximation there; exact for
+            // sync and over-select
+            (completed[t] + dropped[t] + discarded[t]).to_string(),
             completed[t].to_string(),
             dropped[t].to_string(),
+            discarded[t].to_string(),
             human_bytes(down[t]),
         ]);
     }
@@ -204,11 +210,14 @@ mod tests {
     fn fleet_summary_tallies_tiers() {
         use crate::fedselect::RoundComm;
         use crate::scheduler::FleetKind;
-        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25);
+        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25).unwrap();
         let rec = RoundRecord {
             round: 1,
             completed: 5,
             dropped: 1,
+            mode: crate::coordinator::AggregationMode::Synchronous,
+            discarded_clients: 0,
+            mean_staleness: 0.0,
             comm: RoundComm::default(),
             up_bytes: 0,
             max_client_mem: 0,
@@ -216,6 +225,7 @@ mod tests {
             sim_round_s: 2.0,
             tier_completed: vec![2, 2, 1],
             tier_dropped: vec![1, 0, 0],
+            tier_discarded: vec![0, 1, 0],
             tier_down_bytes: vec![100, 200, 300],
         };
         let t = fleet_summary(&fleet, &[rec.clone(), rec]);
@@ -223,6 +233,8 @@ mod tests {
         assert_eq!(t.rows[0][0], "low-end");
         assert_eq!(t.rows[0][6], "4"); // completed: 2 rounds x 2
         assert_eq!(t.rows[0][7], "2"); // dropped
+        assert_eq!(t.rows[1][8], "2"); // discarded (mid tier)
+        assert_eq!(t.rows[1][5], "6"); // selected = completed+dropped+discarded
         assert!(human_rate(2e6).ends_with("/s"));
     }
 }

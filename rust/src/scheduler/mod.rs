@@ -38,9 +38,10 @@ pub mod simclock;
 
 pub use policy::{PlanCtx, Selection, SelectionPolicy};
 pub use profiles::{DeviceProfile, Fleet, FleetKind};
-pub use simclock::{ClientTiming, SimClock};
+pub use simclock::{ClientTiming, CompletionEvent, SimClock, ROUND_OVERHEAD_S};
 
 use crate::config::TrainConfig;
+use crate::error::Result;
 use crate::tensor::rng::Rng;
 
 /// Which built-in selection policy to instantiate (config-level knob).
@@ -50,6 +51,7 @@ pub enum SchedPolicy {
     AvailabilityAware,
     MemoryCapped,
     StalenessFair,
+    LossWeighted,
 }
 
 impl SchedPolicy {
@@ -59,14 +61,16 @@ impl SchedPolicy {
             SchedPolicy::AvailabilityAware => Box::new(policy::AvailabilityAware),
             SchedPolicy::MemoryCapped => Box::new(policy::MemoryCapped),
             SchedPolicy::StalenessFair => Box::new(policy::StalenessFair),
+            SchedPolicy::LossWeighted => Box::new(policy::LossWeighted),
         }
     }
 
-    pub const ALL: [SchedPolicy; 4] = [
+    pub const ALL: [SchedPolicy; 5] = [
         SchedPolicy::Uniform,
         SchedPolicy::AvailabilityAware,
         SchedPolicy::MemoryCapped,
         SchedPolicy::StalenessFair,
+        SchedPolicy::LossWeighted,
     ];
 }
 
@@ -78,6 +82,7 @@ impl std::fmt::Display for SchedPolicy {
             SchedPolicy::AvailabilityAware => "availability-aware",
             SchedPolicy::MemoryCapped => "memory-capped",
             SchedPolicy::StalenessFair => "staleness-fair",
+            SchedPolicy::LossWeighted => "loss-weighted",
         })
     }
 }
@@ -100,12 +105,16 @@ impl std::str::FromStr for SchedPolicy {
             "staleness-fair" | "staleness_fair" | "staleness" | "lru" => {
                 Ok(SchedPolicy::StalenessFair)
             }
+            "loss-weighted" | "loss_weighted" | "loss" | "importance" => {
+                Ok(SchedPolicy::LossWeighted)
+            }
             other => Err(format!(
-                "unknown scheduler policy {other:?} (want {}, {}, {} or {})",
+                "unknown scheduler policy {other:?} (want {}, {}, {}, {} or {})",
                 SchedPolicy::Uniform,
                 SchedPolicy::AvailabilityAware,
                 SchedPolicy::MemoryCapped,
-                SchedPolicy::StalenessFair
+                SchedPolicy::StalenessFair,
+                SchedPolicy::LossWeighted
             )),
         }
     }
@@ -150,6 +159,9 @@ pub struct ClientRoundStats {
     pub up_bytes: u64,
     /// Slice-floats × local examples (the `SimClock` compute model).
     pub compute_units: f64,
+    /// ℓ2 norm of the client's update — the training signal the
+    /// `loss-weighted` policy samples on (0 for dropped clients).
+    pub update_norm: f32,
     pub dropped: bool,
 }
 
@@ -172,7 +184,7 @@ pub struct RoundSim {
 }
 
 /// The cohort scheduler: owns the fleet, the selection policy, the
-/// staleness state, and the simulated clock.
+/// staleness + training-signal state, and the simulated clock.
 pub struct Scheduler {
     fleet: Fleet,
     policy_kind: SchedPolicy,
@@ -180,29 +192,35 @@ pub struct Scheduler {
     clock: SimClock,
     /// Last round each train client was selected (-1 = never).
     last_selected: Vec<i64>,
+    /// Last observed update norm per train client (0 = never participated);
+    /// what the `loss-weighted` policy samples on.
+    signals: Vec<f32>,
 }
 
 impl Scheduler {
     /// Build from a training config: the fleet is generated from
-    /// `cfg.seed`/`cfg.fleet`/`cfg.mem_cap_frac`, the policy from
+    /// `cfg.seed`/`cfg.fleet`/`cfg.mem_cap_frac` (trace fleets load their
+    /// file here, the only fallible step), the policy from
     /// `cfg.sched_policy`. The deprecated scalar `cfg.dropout_rate` is baked
     /// into the profiles as a hazard floor (a fleet-wide flaky-edge-style
     /// hazard), so reporting over the fleet shows the hazards the run
     /// actually used.
-    pub fn new(cfg: &TrainConfig, n_train_clients: usize) -> Self {
-        let mut fleet = Fleet::generate(cfg.fleet, n_train_clients, cfg.seed, cfg.mem_cap_frac);
+    pub fn new(cfg: &TrainConfig, n_train_clients: usize) -> Result<Self> {
+        let mut fleet =
+            Fleet::generate(cfg.fleet.clone(), n_train_clients, cfg.seed, cfg.mem_cap_frac)?;
         if cfg.dropout_rate > 0.0 {
             for p in &mut fleet.profiles {
                 p.hazard = p.hazard.max(cfg.dropout_rate);
             }
         }
-        Scheduler {
+        Ok(Scheduler {
             fleet,
             policy_kind: cfg.sched_policy,
             policy: cfg.sched_policy.build(),
             clock: SimClock::new(),
             last_selected: vec![-1; n_train_clients],
-        }
+            signals: vec![0.0; n_train_clients],
+        })
     }
 
     pub fn fleet(&self) -> &Fleet {
@@ -235,6 +253,7 @@ impl Scheduler {
             cohort,
             fleet: &self.fleet,
             last_selected: &self.last_selected,
+            signals: &self.signals,
             geom,
         };
         let sel = self.policy.select(&ctx, rng);
@@ -254,9 +273,70 @@ impl Scheduler {
         }
     }
 
-    /// After phase 3: fold per-client outcomes into simulated time and
-    /// per-tier tallies. `stats` is aligned with `plan.cohort`.
+    /// Per-client completion events for one round, in completion order
+    /// (ties broken by cohort slot). Dropped clients never report and are
+    /// excluded; their download still lands in the tier ledgers at
+    /// [`Scheduler::complete_round_at`]. This is the ordering the round
+    /// engine's aggregation modes consume.
+    pub fn events(&self, plan: &RoundPlan, stats: &[ClientRoundStats]) -> Vec<CompletionEvent> {
+        debug_assert_eq!(plan.cohort.len(), stats.len());
+        let mut ev: Vec<CompletionEvent> = plan
+            .cohort
+            .iter()
+            .zip(stats.iter())
+            .enumerate()
+            .filter(|(_, (_, st))| !st.dropped)
+            .map(|(slot, (&ci, st))| {
+                let p = &self.fleet.profiles[ci];
+                let timing =
+                    SimClock::client_timing(p, st.down_bytes, st.up_bytes, st.compute_units);
+                CompletionEvent {
+                    slot,
+                    client: ci,
+                    tier: p.tier,
+                    at_s: timing.total_s(),
+                    timing,
+                }
+            })
+            .collect();
+        ev.sort_by(|a, b| {
+            a.at_s
+                .partial_cmp(&b.at_s)
+                .expect("client timings are finite")
+                .then(a.slot.cmp(&b.slot))
+        });
+        ev
+    }
+
+    /// After phase 3, synchronous barrier: the round closes at the
+    /// straggler (the last completion event). Every non-dropped cohort slot
+    /// counts as completed. `stats` is aligned with `plan.cohort`.
     pub fn complete_round(&mut self, plan: &RoundPlan, stats: &[ClientRoundStats]) -> RoundSim {
+        let events = self.events(plan, stats);
+        let close_s = events.last().map_or(0.0, |e| e.at_s);
+        let merged_tiers: Vec<usize> = events.iter().map(|e| e.tier).collect();
+        self.complete_round_at(plan, stats, &events, close_s, &merged_tiers)
+    }
+
+    /// After phase 3, event-driven close: the round engine decided the
+    /// round closed at `close_s` (relative to round start — the goal-count
+    /// completion under over-selection / buffered aggregation) and merged
+    /// the updates whose fleet tiers are `merged_tiers` (which may include
+    /// updates launched in earlier rounds under buffered aggregation).
+    /// `events` is this round's [`Scheduler::events`] output, passed back in
+    /// so it is computed once per round. Tier drop/download tallies always
+    /// cover this round's whole cohort — a discarded straggler's download
+    /// is spent regardless — and each non-dropped client's `update_norm` is
+    /// recorded as its selection signal. Advances the simulated clock by
+    /// `close_s` plus the fixed server overhead.
+    pub fn complete_round_at(
+        &mut self,
+        plan: &RoundPlan,
+        stats: &[ClientRoundStats],
+        events: &[CompletionEvent],
+        close_s: f64,
+        merged_tiers: &[usize],
+    ) -> RoundSim {
         debug_assert_eq!(plan.cohort.len(), stats.len());
         let tiers = self.fleet.num_tiers();
         let mut sim = RoundSim {
@@ -265,25 +345,28 @@ impl Scheduler {
             tier_down_bytes: vec![0; tiers],
             ..RoundSim::default()
         };
-        let mut straggler: Option<(f64, usize)> = None;
         for (&ci, st) in plan.cohort.iter().zip(stats.iter()) {
             let p = &self.fleet.profiles[ci];
             sim.tier_down_bytes[p.tier] += st.down_bytes;
             if st.dropped {
                 sim.tier_dropped[p.tier] += 1;
-                continue;
-            }
-            sim.tier_completed[p.tier] += 1;
-            let t = SimClock::client_timing(p, st.down_bytes, st.up_bytes, st.compute_units)
-                .total_s();
-            if straggler.map_or(true, |(best, _)| t > best) {
-                straggler = Some((t, p.tier));
+            } else {
+                self.signals[ci] = st.update_norm;
             }
         }
-        // the loop already found the straggler; the clock only needs it
-        sim.sim_round_s = self.clock.advance_round(straggler.map(|(t, _)| t));
+        for &t in merged_tiers {
+            sim.tier_completed[t] += 1;
+        }
+        // the this-round client whose completion closed the round; None when
+        // nobody reported, or when a carried in-flight landing closed it
+        // (buffered mode) before any fresh completion
+        sim.straggler_tier = events
+            .iter()
+            .rev()
+            .find(|e| e.at_s <= close_s)
+            .map(|e| e.tier);
+        sim.sim_round_s = self.clock.advance_round_to(close_s);
         sim.sim_total_s = self.clock.now_s();
-        sim.straggler_tier = straggler.map(|(_, tier)| tier);
         sim
     }
 }
@@ -327,7 +410,7 @@ mod tests {
 
     #[test]
     fn uniform_plan_consumes_exactly_the_legacy_draw() {
-        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::Uniform), 40);
+        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::Uniform), 40).unwrap();
         let mut rng = Rng::new(7, 1);
         let mut legacy = rng.clone();
         let plan = s.plan_round(1, 10, &geom(), &mut rng);
@@ -342,14 +425,14 @@ mod tests {
     fn dropout_rate_floors_every_hazard() {
         let mut c = cfg(FleetKind::Uniform, SchedPolicy::Uniform);
         c.dropout_rate = 0.3;
-        let mut s = Scheduler::new(&c, 20);
+        let mut s = Scheduler::new(&c, 20).unwrap();
         let plan = s.plan_round(1, 5, &geom(), &mut Rng::new(1, 1));
         assert!(plan.hazards.iter().all(|&h| (h - 0.3).abs() < 1e-9));
     }
 
     #[test]
     fn complete_round_tallies_tiers_and_advances_the_clock() {
-        let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60);
+        let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60).unwrap();
         let mut rng = Rng::new(3, 2);
         let plan = s.plan_round(1, 12, &geom(), &mut rng);
         let stats: Vec<ClientRoundStats> = (0..plan.cohort.len())
@@ -358,6 +441,7 @@ mod tests {
                 up_bytes: 50_000,
                 compute_units: 1e7,
                 dropped: i % 4 == 0,
+                ..ClientRoundStats::default()
             })
             .collect();
         let sim = s.complete_round(&plan, &stats);
@@ -378,8 +462,46 @@ mod tests {
     }
 
     #[test]
+    fn events_are_sorted_and_exclude_dropped_clients() {
+        let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60).unwrap();
+        let mut rng = Rng::new(9, 4);
+        let plan = s.plan_round(1, 10, &geom(), &mut rng);
+        let stats: Vec<ClientRoundStats> = (0..plan.cohort.len())
+            .map(|i| ClientRoundStats {
+                down_bytes: 200_000,
+                up_bytes: 80_000,
+                compute_units: 1e7,
+                dropped: i % 5 == 0,
+                ..ClientRoundStats::default()
+            })
+            .collect();
+        let ev = s.events(&plan, &stats);
+        assert_eq!(ev.len(), stats.iter().filter(|s| !s.dropped).count());
+        for w in ev.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "events out of order");
+        }
+        for e in &ev {
+            assert!(!stats[e.slot].dropped);
+            assert_eq!(e.client, plan.cohort[e.slot]);
+            assert!((e.at_s - e.timing.total_s()).abs() < 1e-12);
+        }
+        // an early close is strictly cheaper than the barrier, ledgers the
+        // whole cohort's downloads, and counts only the merged tiers
+        let mid = ev[ev.len() / 2];
+        let sim = s.complete_round_at(&plan, &stats, &ev, mid.at_s, &[mid.tier]);
+        assert!((sim.sim_round_s - (mid.at_s + ROUND_OVERHEAD_S)).abs() < 1e-12);
+        assert_eq!(sim.tier_completed.iter().sum::<usize>(), 1);
+        assert_eq!(
+            sim.tier_down_bytes.iter().sum::<u64>(),
+            plan.cohort.len() as u64 * 200_000
+        );
+        assert_eq!(sim.straggler_tier, Some(mid.tier));
+    }
+
+    #[test]
     fn staleness_state_feeds_the_fair_policy() {
-        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::StalenessFair), 12);
+        let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::StalenessFair), 12)
+            .unwrap();
         let mut rng = Rng::new(5, 3);
         let g = geom();
         let mut seen = std::collections::HashSet::new();

@@ -19,6 +19,9 @@ pub struct PlanCtx<'a> {
     pub fleet: &'a Fleet,
     /// Per train client: last round it was selected, or -1 if never.
     pub last_selected: &'a [i64],
+    /// Per train client: update norm from its last participation, or 0 if
+    /// it never participated — the [`LossWeighted`] importance signal.
+    pub signals: &'a [f32],
     pub geom: &'a SliceGeometry,
 }
 
@@ -162,14 +165,76 @@ impl SelectionPolicy for StalenessFair {
     }
 }
 
+/// Importance-based sampling: clients whose last participation produced a
+/// large update (a proxy for high local loss / gradient norm — the signal
+/// the client-selection literature weights on) are proportionally more
+/// likely to be drawn. Never-selected clients get the mean observed signal
+/// as an optimistic prior, and the policy degrades to plain [`Uniform`]
+/// (same single RNG draw) until anyone has reported a signal at all.
+/// Sampling is without replacement via successive categorical draws on the
+/// remaining weights, so it stays deterministic in the round RNG.
+pub struct LossWeighted;
+
+impl SelectionPolicy for LossWeighted {
+    fn name(&self) -> &'static str {
+        "loss-weighted"
+    }
+
+    fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        let n = ctx.fleet.len();
+        let k = ctx.cohort.min(n);
+        let observed: Vec<f64> = (0..n)
+            .map(|i| {
+                let s = ctx.signals[i] as f64;
+                if s.is_finite() && s > 0.0 {
+                    s
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let n_pos = observed.iter().filter(|&&s| s > 0.0).count();
+        if n_pos == 0 {
+            return Selection {
+                cohort: uniform_cohort(n, k, rng),
+                key_budgets: None,
+            };
+        }
+        let prior = observed.iter().sum::<f64>() / n_pos as f64;
+        let mut w: Vec<f64> = observed
+            .iter()
+            .map(|&s| if s > 0.0 { s } else { prior })
+            .collect();
+        let mut cohort = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut i = rng.categorical(&w);
+            if w[i] == 0.0 {
+                // float-rounding tail of the categorical sampler can land on
+                // an exhausted index; fall forward to the next live one
+                i = (0..n)
+                    .map(|d| (i + d) % n)
+                    .find(|&j| w[j] > 0.0)
+                    .expect("k <= n leaves a live weight");
+            }
+            cohort.push(i);
+            w[i] = 0.0;
+        }
+        Selection {
+            cohort,
+            key_budgets: None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::scheduler::FleetKind;
 
-    fn ctx_parts(kind: FleetKind, n: usize) -> (Fleet, Vec<i64>, SliceGeometry) {
-        let fleet = Fleet::generate(kind, n, 7, 0.25);
+    fn ctx_parts(kind: FleetKind, n: usize) -> (Fleet, Vec<i64>, Vec<f32>, SliceGeometry) {
+        let fleet = Fleet::generate(kind, n, 7, 0.25).unwrap();
         let last = vec![-1i64; n];
+        let signals = vec![0.0f32; n];
         // full-budget slice == the whole keyed segment, so tier mem caps
         // below 1.0 genuinely clamp
         let geom = SliceGeometry {
@@ -178,17 +243,18 @@ mod tests {
             broadcast_floats: 50,
             server_floats: 2048 * 50 + 50,
         };
-        (fleet, last, geom)
+        (fleet, last, signals, geom)
     }
 
     #[test]
     fn uniform_matches_the_raw_sampler_draw() {
-        let (fleet, last, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Uniform, 30);
         let ctx = PlanCtx {
             round: 1,
             cohort: 8,
             fleet: &fleet,
             last_selected: &last,
+            signals: &sigs,
             geom: &geom,
         };
         let mut a = Rng::new(5, 1);
@@ -200,13 +266,14 @@ mod tests {
 
     #[test]
     fn availability_aware_only_picks_online_clients() {
-        let (fleet, last, geom) = ctx_parts(FleetKind::Diurnal, 40);
+        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Diurnal, 40);
         for round in [0usize, 6, 12, 18] {
             let ctx = PlanCtx {
                 round,
                 cohort: 5,
                 fleet: &fleet,
                 last_selected: &last,
+                signals: &sigs,
                 geom: &geom,
             };
             let mut rng = Rng::new(3, 2);
@@ -223,12 +290,13 @@ mod tests {
 
     #[test]
     fn memory_capped_budgets_fit_the_device() {
-        let (fleet, last, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Tiered3, 60);
         let ctx = PlanCtx {
             round: 1,
             cohort: 20,
             fleet: &fleet,
             last_selected: &last,
+            signals: &sigs,
             geom: &geom,
         };
         let mut rng = Rng::new(9, 3);
@@ -262,12 +330,13 @@ mod tests {
 
     #[test]
     fn memory_capped_cohort_equals_uniform_cohort_at_same_seed() {
-        let (fleet, last, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Tiered3, 60);
         let ctx = PlanCtx {
             round: 1,
             cohort: 12,
             fleet: &fleet,
             last_selected: &last,
+            signals: &sigs,
             geom: &geom,
         };
         let mut a = Rng::new(4, 4);
@@ -280,7 +349,7 @@ mod tests {
 
     #[test]
     fn staleness_fair_visits_everyone_before_repeating() {
-        let (fleet, mut last, geom) = ctx_parts(FleetKind::Uniform, 24);
+        let (fleet, mut last, sigs, geom) = ctx_parts(FleetKind::Uniform, 24);
         let mut rng = Rng::new(1, 5);
         let mut seen = std::collections::HashSet::new();
         for round in 1..=4usize {
@@ -289,6 +358,7 @@ mod tests {
                 cohort: 6,
                 fleet: &fleet,
                 last_selected: &last,
+                signals: &sigs,
                 geom: &geom,
             };
             let cohort = StalenessFair.select(&ctx, &mut rng).cohort;
@@ -299,5 +369,58 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 24);
+    }
+
+    #[test]
+    fn loss_weighted_without_history_is_exactly_uniform() {
+        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 8,
+            fleet: &fleet,
+            last_selected: &last,
+            signals: &sigs,
+            geom: &geom,
+        };
+        let mut a = Rng::new(5, 1);
+        let mut b = a.clone();
+        assert_eq!(
+            LossWeighted.select(&ctx, &mut a).cohort,
+            Uniform.select(&ctx, &mut b).cohort
+        );
+        // and nothing beyond the uniform draw was consumed
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn loss_weighted_prefers_high_signal_clients() {
+        let (fleet, last, mut sigs, geom) = ctx_parts(FleetKind::Uniform, 20);
+        for s in sigs.iter_mut() {
+            *s = 1.0;
+        }
+        sigs[3] = 50.0; // one client with a huge training signal
+        sigs[7] = 0.0; // one that never participated (gets the mean prior)
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 4,
+            fleet: &fleet,
+            last_selected: &last,
+            signals: &sigs,
+            geom: &geom,
+        };
+        let mut rng = Rng::new(11, 6);
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        for _ in 0..300 {
+            let cohort = LossWeighted.select(&ctx, &mut rng).cohort;
+            assert_eq!(cohort.len(), 4);
+            let distinct: std::collections::HashSet<_> = cohort.iter().collect();
+            assert_eq!(distinct.len(), 4, "sampling must be without replacement");
+            hot += usize::from(cohort.contains(&3));
+            cold += usize::from(cohort.contains(&12));
+        }
+        // client 3 carries ~50/72 of the weight mass: near-certain pick
+        assert!(hot > 280, "hot client picked {hot}/300");
+        assert!(cold < hot / 2, "baseline client picked {cold} vs {hot}");
     }
 }

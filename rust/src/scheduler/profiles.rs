@@ -16,7 +16,14 @@
 //! | `tiered-3`   | low/mid/high   | bandwidth + memory spread (MemoryCapped budgets) |
 //! | `diurnal`    | day/night      | availability windows (AvailabilityAware) |
 //! | `flaky-edge` | core/edge      | high per-round failure hazard on the edge |
+//! | `trace:PATH` | trace          | real measurements: one profile per line |
+//!
+//! `trace:PATH` loads a device trace file (see [`Fleet::from_trace`]): one
+//! profile per non-comment line, `down_bps up_bps flops mem_frac avail
+//! hazard`, cycled to cover the client population. A 32-profile example
+//! ships at `examples/fleet_trace_32.txt`.
 
+use crate::error::{Error, Result};
 use crate::tensor::rng::Rng;
 
 /// Stream id for the fleet-generation RNG: profiles are drawn from the run
@@ -67,8 +74,8 @@ impl DeviceProfile {
     }
 }
 
-/// Which built-in fleet to generate (config-level knob).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which fleet to generate (config-level knob).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum FleetKind {
     /// Homogeneous, always-on, failure-free devices.
     Uniform,
@@ -78,32 +85,45 @@ pub enum FleetKind {
     Diurnal,
     /// A reliable core plus a large flaky edge.
     FlakyEdge,
+    /// Profiles loaded from a trace file (one device per line, cycled to
+    /// cover the population). See [`Fleet::from_trace`].
+    Trace(String),
 }
 
 /// Canonical CLI names; `Display` round-trips with `FromStr`.
 impl std::fmt::Display for FleetKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
-            FleetKind::Uniform => "uniform",
-            FleetKind::Tiered3 => "tiered-3",
-            FleetKind::Diurnal => "diurnal",
-            FleetKind::FlakyEdge => "flaky-edge",
-        })
+        match self {
+            FleetKind::Uniform => f.write_str("uniform"),
+            FleetKind::Tiered3 => f.write_str("tiered-3"),
+            FleetKind::Diurnal => f.write_str("diurnal"),
+            FleetKind::FlakyEdge => f.write_str("flaky-edge"),
+            FleetKind::Trace(path) => write!(f, "trace:{path}"),
+        }
     }
 }
 
 impl std::str::FromStr for FleetKind {
     type Err = String;
     /// Case-insensitive; accepts the canonical `Display` names plus
-    /// underscore/short aliases.
+    /// underscore/short aliases, and `trace:PATH` (the path keeps its case).
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        if let Some(prefix) = s.get(..6) {
+            if prefix.eq_ignore_ascii_case("trace:") {
+                let path = &s[6..];
+                if path.is_empty() {
+                    return Err("trace fleet needs a path: trace:PATH".to_string());
+                }
+                return Ok(FleetKind::Trace(path.to_string()));
+            }
+        }
         match s.to_ascii_lowercase().as_str() {
             "uniform" => Ok(FleetKind::Uniform),
             "tiered-3" | "tiered_3" | "tiered3" | "tiered" => Ok(FleetKind::Tiered3),
             "diurnal" => Ok(FleetKind::Diurnal),
             "flaky-edge" | "flaky_edge" | "flaky" => Ok(FleetKind::FlakyEdge),
             other => Err(format!(
-                "unknown fleet {other:?} (want {}, {}, {} or {})",
+                "unknown fleet {other:?} (want {}, {}, {}, {} or trace:PATH)",
                 FleetKind::Uniform,
                 FleetKind::Tiered3,
                 FleetKind::Diurnal,
@@ -125,11 +145,21 @@ pub struct Fleet {
 impl Fleet {
     /// Generate a fleet of `n_clients` profiles, deterministic in `seed`.
     /// `mem_cap_frac` sets the lowest tier's memory cap as a fraction of
-    /// the full server model (tiers above scale up from it).
-    pub fn generate(kind: FleetKind, n_clients: usize, seed: u64, mem_cap_frac: f64) -> Fleet {
+    /// the full server model (tiers above scale up from it). Only the
+    /// `Trace` kind can fail (unreadable or malformed trace file).
+    pub fn generate(
+        kind: FleetKind,
+        n_clients: usize,
+        seed: u64,
+        mem_cap_frac: f64,
+    ) -> Result<Fleet> {
+        if let FleetKind::Trace(path) = &kind {
+            let fleet = Fleet::from_trace(path, n_clients)?;
+            return Ok(fleet);
+        }
         let mut rng = Rng::new(seed, FLEET_STREAM);
         let f = mem_cap_frac.clamp(0.01, 1.0);
-        let (tier_names, profiles): (Vec<&'static str>, Vec<DeviceProfile>) = match kind {
+        let (tier_names, profiles): (Vec<&'static str>, Vec<DeviceProfile>) = match &kind {
             FleetKind::Uniform => {
                 let p = DeviceProfile {
                     tier: 0,
@@ -227,12 +257,98 @@ impl Fleet {
                     .collect();
                 (vec!["core", "edge"], profiles)
             }
+            FleetKind::Trace(_) => unreachable!("trace fleets load above"),
         };
-        Fleet {
+        Ok(Fleet {
             kind,
             profiles,
             tier_names,
+        })
+    }
+
+    /// Load a fleet from a device trace: one profile per non-empty,
+    /// non-`#`-comment line, six whitespace- or comma-separated columns —
+    /// `down_bps up_bps flops mem_frac avail hazard`. `avail` is a duty
+    /// cycle in (0, 1]: 1 means always online, anything lower puts the
+    /// device on a 24-round window (offset staggered by line index).
+    /// Profiles are cycled when the population outnumbers the trace, so one
+    /// trace serves any dataset size; all trace devices report as one
+    /// `trace` tier.
+    pub fn from_trace(path: &str, n_clients: usize) -> Result<Fleet> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read fleet trace {path:?}: {e}")))?;
+        let mut rows: Vec<DeviceProfile> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line
+                .split(|c: char| c.is_whitespace() || c == ',')
+                .filter(|t| !t.is_empty())
+                .collect();
+            if cols.len() != 6 {
+                return Err(Error::Config(format!(
+                    "{path}:{}: expected 6 columns (down_bps up_bps flops mem_frac avail \
+                     hazard), got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let num = |i: usize, name: &str| -> Result<f64> {
+                cols[i].parse::<f64>().map_err(|e| {
+                    Error::Config(format!("{path}:{}: bad {name} {:?}: {e}", lineno + 1, cols[i]))
+                })
+            };
+            let (down, up, flops) = (num(0, "down_bps")?, num(1, "up_bps")?, num(2, "flops")?);
+            let mem = num(3, "mem_frac")?;
+            let avail = num(4, "avail")?;
+            let hazard = num(5, "hazard")? as f32;
+            if down <= 0.0 || up <= 0.0 || flops <= 0.0 {
+                return Err(Error::Config(format!(
+                    "{path}:{}: bandwidth/compute must be positive",
+                    lineno + 1
+                )));
+            }
+            if !(0.0..=1.0).contains(&mem) || mem == 0.0 || !(0.0..=1.0).contains(&avail)
+                || avail == 0.0 || !(0.0..1.0).contains(&(hazard as f64))
+            {
+                return Err(Error::Config(format!(
+                    "{path}:{}: mem_frac/avail must be in (0,1], hazard in [0,1)",
+                    lineno + 1
+                )));
+            }
+            rows.push(DeviceProfile {
+                tier: 0,
+                down_bps: down,
+                up_bps: up,
+                flops,
+                mem_frac: mem,
+                avail_offset: 0,
+                avail_period: if avail < 1.0 { 24 } else { 0 },
+                avail_duty: avail,
+                hazard,
+            });
         }
+        if rows.is_empty() {
+            return Err(Error::Config(format!(
+                "fleet trace {path:?} has no profile lines"
+            )));
+        }
+        let profiles = (0..n_clients)
+            .map(|i| {
+                let mut p = rows[i % rows.len()].clone();
+                if p.avail_period > 0 {
+                    p.avail_offset = (i % p.avail_period as usize) as u32;
+                }
+                p
+            })
+            .collect();
+        Ok(Fleet {
+            kind: FleetKind::Trace(path.to_string()),
+            profiles,
+            tier_names: vec!["trace"],
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -273,15 +389,15 @@ mod tests {
             FleetKind::Diurnal,
             FleetKind::FlakyEdge,
         ] {
-            let a = Fleet::generate(kind, 64, 42, 0.25);
-            let b = Fleet::generate(kind, 64, 42, 0.25);
+            let a = Fleet::generate(kind.clone(), 64, 42, 0.25).unwrap();
+            let b = Fleet::generate(kind.clone(), 64, 42, 0.25).unwrap();
             assert_eq!(a.len(), 64);
             for (x, y) in a.profiles.iter().zip(b.profiles.iter()) {
                 assert_eq!(x.tier, y.tier, "{kind}");
                 assert_eq!(x.down_bps.to_bits(), y.down_bps.to_bits(), "{kind}");
                 assert_eq!(x.hazard.to_bits(), y.hazard.to_bits(), "{kind}");
             }
-            let c = Fleet::generate(kind, 64, 43, 0.25);
+            let c = Fleet::generate(kind.clone(), 64, 43, 0.25).unwrap();
             if kind != FleetKind::Uniform {
                 let same = a
                     .profiles
@@ -296,7 +412,7 @@ mod tests {
 
     #[test]
     fn uniform_fleet_is_unconstrained() {
-        let fl = Fleet::generate(FleetKind::Uniform, 10, 7, 0.25);
+        let fl = Fleet::generate(FleetKind::Uniform, 10, 7, 0.25).unwrap();
         assert_eq!(fl.num_tiers(), 1);
         for p in &fl.profiles {
             assert_eq!(p.hazard, 0.0);
@@ -307,7 +423,7 @@ mod tests {
 
     #[test]
     fn tiered_fleet_covers_all_tiers_and_respects_mem_cap() {
-        let fl = Fleet::generate(FleetKind::Tiered3, 200, 7, 0.25);
+        let fl = Fleet::generate(FleetKind::Tiered3, 200, 7, 0.25).unwrap();
         let sizes = fl.tier_sizes();
         assert_eq!(sizes.len(), 3);
         assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
@@ -324,7 +440,7 @@ mod tests {
 
     #[test]
     fn diurnal_windows_alternate() {
-        let fl = Fleet::generate(FleetKind::Diurnal, 50, 9, 0.25);
+        let fl = Fleet::generate(FleetKind::Diurnal, 50, 9, 0.25).unwrap();
         let day = fl.profiles.iter().find(|p| p.tier == 0).unwrap();
         let night = fl.profiles.iter().find(|p| p.tier == 1).unwrap();
         assert!(day.available(0) && !night.available(0));
@@ -337,7 +453,7 @@ mod tests {
 
     #[test]
     fn flaky_edge_has_a_hazardous_majority() {
-        let fl = Fleet::generate(FleetKind::FlakyEdge, 200, 11, 0.25);
+        let fl = Fleet::generate(FleetKind::FlakyEdge, 200, 11, 0.25).unwrap();
         let sizes = fl.tier_sizes();
         assert!(sizes[1] > sizes[0], "edge must outnumber core: {sizes:?}");
         assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2));
@@ -357,5 +473,52 @@ mod tests {
         }
         assert_eq!("tiered3".parse::<FleetKind>().unwrap(), FleetKind::Tiered3);
         assert!("bogus".parse::<FleetKind>().is_err());
+        // trace paths round-trip with their case intact
+        let kind = "trace:Examples/My_Trace.txt".parse::<FleetKind>().unwrap();
+        assert_eq!(kind, FleetKind::Trace("Examples/My_Trace.txt".into()));
+        assert_eq!(kind.to_string(), "trace:Examples/My_Trace.txt");
+        assert_eq!(kind.to_string().parse::<FleetKind>().unwrap(), kind);
+        assert!("trace:".parse::<FleetKind>().is_err());
+    }
+
+    #[test]
+    fn trace_fleet_loads_cycles_and_staggers() {
+        // the checked-in 32-profile example trace (cwd = the package root)
+        let path = "../examples/fleet_trace_32.txt";
+        let fl = Fleet::from_trace(path, 50).unwrap();
+        assert_eq!(fl.len(), 50);
+        assert_eq!(fl.num_tiers(), 1);
+        assert_eq!(fl.tier_name(0), "trace");
+        // profiles cycle: client 32 repeats line 1's device
+        assert_eq!(
+            fl.profiles[0].down_bps.to_bits(),
+            fl.profiles[32].down_bps.to_bits()
+        );
+        assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2), "edge hazards");
+        assert!(fl.profiles.iter().any(|p| p.avail_period == 24));
+        assert!(fl.profiles.iter().any(|p| p.avail_period == 0));
+        // generate() routes trace kinds through the loader
+        let via_generate =
+            Fleet::generate(FleetKind::Trace(path.to_string()), 50, 7, 0.25).unwrap();
+        for (a, b) in fl.profiles.iter().zip(via_generate.profiles.iter()) {
+            assert_eq!(a.down_bps.to_bits(), b.down_bps.to_bits());
+        }
+    }
+
+    #[test]
+    fn trace_fleet_rejects_malformed_files() {
+        assert!(Fleet::from_trace("no/such/file.txt", 8).is_err());
+        let dir = std::env::temp_dir();
+        let bad_cols = dir.join("fedselect_trace_bad_cols.txt");
+        std::fs::write(&bad_cols, "1e6 1e5 1e9 0.5\n").unwrap();
+        let err = Fleet::from_trace(bad_cols.to_str().unwrap(), 8).unwrap_err();
+        assert!(err.to_string().contains("6 columns"), "{err}");
+        let bad_range = dir.join("fedselect_trace_bad_range.txt");
+        std::fs::write(&bad_range, "1e6 1e5 1e9 0.5 1.0 1.5\n").unwrap();
+        assert!(Fleet::from_trace(bad_range.to_str().unwrap(), 8).is_err());
+        let empty = dir.join("fedselect_trace_empty.txt");
+        std::fs::write(&empty, "# only comments\n\n").unwrap();
+        let err = Fleet::from_trace(empty.to_str().unwrap(), 8).unwrap_err();
+        assert!(err.to_string().contains("no profile lines"), "{err}");
     }
 }

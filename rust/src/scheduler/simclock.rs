@@ -3,20 +3,22 @@
 //!
 //! The real coordinator measures host wall time (`RoundRecord::wall_ms`),
 //! which says nothing about deployed round latency: there, a round ends when
-//! the *slowest completing client* has downloaded its slice, run its local
-//! epoch, and uploaded its delta. The [`SimClock`] models exactly that —
-//! per-client `download + compute + upload` time from the client's
-//! [`DeviceProfile`](crate::scheduler::DeviceProfile), cohort completion as
-//! the max over completing clients (the straggler), plus a fixed server-side
-//! overhead per round. Clients that drop after fetching spend their download
-//! time but never report, so they do not gate the round (the server's
-//! timeout is folded into the overhead term).
+//! the server decides it has heard from enough clients. The [`SimClock`]
+//! models per-client `download + compute + upload` time from the client's
+//! [`DeviceProfile`](crate::scheduler::DeviceProfile); the scheduler sorts
+//! those timings into [`CompletionEvent`]s (per-client completion order) and
+//! the round engine picks the *close* point — the straggler under a
+//! synchronous barrier, the goal-count-th completion under over-selection or
+//! buffered aggregation — plus a fixed server-side overhead per round.
+//! Clients that drop after fetching spend their download time but never
+//! report, so they do not gate the round (the server's timeout is folded
+//! into the overhead term).
 
 use crate::scheduler::DeviceProfile;
 
 /// Per-round server-side overhead (cohort assembly, aggregation, model
 /// update), seconds.
-const ROUND_OVERHEAD_S: f64 = 1.0;
+pub const ROUND_OVERHEAD_S: f64 = 1.0;
 
 /// One client's simulated round timing.
 #[derive(Clone, Copy, Debug, Default)]
@@ -30,6 +32,24 @@ impl ClientTiming {
     pub fn total_s(&self) -> f64 {
         self.download_s + self.compute_s + self.upload_s
     }
+}
+
+/// One client reporting back to the server, as an event on the simulated
+/// timeline. Produced in completion order (ties broken by cohort slot) by
+/// [`crate::scheduler::Scheduler::events`]; consumed by the round engine's
+/// aggregation modes. Dropped clients never report and emit no event.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionEvent {
+    /// Cohort slot (index into the round plan).
+    pub slot: usize,
+    /// Train-client index.
+    pub client: usize,
+    /// Fleet tier of the client's device.
+    pub tier: usize,
+    /// Completion time relative to round start, seconds.
+    pub at_s: f64,
+    /// The download/compute/upload breakdown behind `at_s`.
+    pub timing: ClientTiming,
 }
 
 /// Accumulates simulated time across rounds.
@@ -71,7 +91,16 @@ impl SimClock {
         let straggler = completing_times_s
             .into_iter()
             .fold(0.0f64, |acc, t| acc.max(t));
-        let round_s = straggler + ROUND_OVERHEAD_S;
+        self.advance_round_to(straggler)
+    }
+
+    /// End the round at an arbitrary close point (relative to round start):
+    /// the round engine passes the goal-count-th completion under
+    /// over-selection / buffered aggregation, or the straggler under the
+    /// synchronous barrier. Advances the clock and returns the round
+    /// duration (`close_s` + fixed overhead).
+    pub fn advance_round_to(&mut self, close_s: f64) -> f64 {
+        let round_s = close_s.max(0.0) + ROUND_OVERHEAD_S;
         self.now_s += round_s;
         round_s
     }
@@ -115,6 +144,21 @@ mod tests {
         let dt2 = clock.advance_round([]);
         assert!((dt2 - ROUND_OVERHEAD_S).abs() < 1e-9);
         assert!((clock.now_s() - dt - dt2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_round_to_matches_the_straggler_form() {
+        let mut a = SimClock::new();
+        let mut b = SimClock::new();
+        let da = a.advance_round([1.0, 7.5, 3.0]);
+        let db = b.advance_round_to(7.5);
+        assert_eq!(da.to_bits(), db.to_bits());
+        assert_eq!(a.now_s().to_bits(), b.now_s().to_bits());
+        // an early close is cheaper than the barrier
+        let early = b.advance_round_to(3.0);
+        assert!(early < da);
+        // negative close (degenerate) still costs the overhead
+        assert!((SimClock::new().advance_round_to(-1.0) - ROUND_OVERHEAD_S).abs() < 1e-12);
     }
 
     #[test]

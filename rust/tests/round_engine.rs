@@ -1,0 +1,314 @@
+//! Round-engine properties (driven by the crate's own PCG, like
+//! tests/proptests.rs — every failing case reports its seed):
+//!
+//! 1. `--agg-mode sync` through the event-driven engine reproduces the
+//!    pre-engine coordinator **byte for byte** — model state and every
+//!    `RoundRecord` ledger field — against a faithful replica of the old
+//!    barrier loop (plan -> keys -> slice -> dropout coin -> update ->
+//!    cohort-order aggregate -> server step -> straggler close), at fetch
+//!    thread counts {1, 4}, with per-client key budgets and hazards on;
+//! 2. buffered merge order is deterministic given the SimClock seed: two
+//!    identical runs agree bit-for-bit on the trajectory, the per-round
+//!    merge tallies, staleness, and simulated time;
+//! 3. over-selection ledgers the discarded stragglers' download bytes.
+
+use fedselect::aggregation::{AggMode, Aggregator, SparseAccumulator};
+use fedselect::clients::{build_cu_batch, client_memory_bytes, Engine};
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{build_dataset, AggregationMode, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::ClientKeys;
+use fedselect::model::ParamStore;
+use fedselect::optim::Optimizer;
+use fedselect::scheduler::{ClientRoundStats, FleetKind, SchedPolicy, Scheduler, SliceGeometry};
+use fedselect::tensor::rng::Rng;
+
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(128, 32);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(24, 4, 8));
+    cfg.rounds = 3;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 128;
+    cfg.seed = seed;
+    cfg
+}
+
+/// One round's ledger as the pre-engine coordinator reported it.
+#[derive(Debug, PartialEq)]
+struct LegacyRound {
+    completed: usize,
+    dropped: usize,
+    down_bytes: u64,
+    up_bytes: u64,
+    max_client_mem: usize,
+    sim_round_s: u64, // f64 bits
+    tier_completed: Vec<usize>,
+    tier_dropped: Vec<usize>,
+    tier_down_bytes: Vec<u64>,
+}
+
+/// Faithful replica of the pre-engine `Trainer::run_round`: scheduler
+/// phase 0, per-client key forks, parallel slicing, the post-fetch dropout
+/// coin, sequential cohort-order aggregation behind a synchronous barrier,
+/// and the straggler-bound `complete_round` close.
+fn legacy_trajectory(cfg: &TrainConfig, threads: usize) -> (ParamStore, Vec<LegacyRound>) {
+    let arch = cfg.arch.clone();
+    let dataset = build_dataset(&cfg.dataset);
+    let mut rng = Rng::new(cfg.seed, 100);
+    let mut store = arch.init_store(&mut rng);
+    let spec = arch.select_spec();
+    let mut service = cfg.slice_impl.build();
+    let mut optimizer = Optimizer::new(cfg.server_opt, &store);
+    let mut engine = Engine::Native;
+    let geom = SliceGeometry {
+        base_ms: spec
+            .keyspaces
+            .iter()
+            .zip(cfg.policies.iter())
+            .map(|(ks, p)| p.m(ks.size))
+            .collect(),
+        per_key_floats: (0..spec.keyspaces.len())
+            .map(|ks| spec.per_key_floats(ks))
+            .collect(),
+        broadcast_floats: spec.broadcast_floats(&store),
+        server_floats: spec.server_floats(&store),
+    };
+    let mut scheduler = Scheduler::new(cfg, dataset.train.len()).unwrap();
+    let mut records = Vec::with_capacity(cfg.rounds);
+    for round in 1..=cfg.rounds {
+        let mut round_rng = rng.fork(round as u64);
+        let plan = scheduler.plan_round(round, cfg.cohort, &geom, &mut round_rng);
+        let cohort = plan.cohort.clone();
+        let shared: Vec<Option<Vec<u32>>> = cfg
+            .policies
+            .iter()
+            .zip(spec.keyspaces.iter())
+            .map(|(p, ks)| p.round_keys(ks.size, &mut round_rng))
+            .collect();
+        let mut client_keys: Vec<ClientKeys> = Vec::new();
+        let mut client_rngs: Vec<Rng> = Vec::new();
+        for (slot, &ci) in cohort.iter().enumerate() {
+            let client = &dataset.train[ci];
+            let mut crng = round_rng.fork(client.id ^ 0xC11E47);
+            let keys: ClientKeys = cfg
+                .policies
+                .iter()
+                .enumerate()
+                .map(|(ksi, p)| {
+                    let p = match &plan.key_budgets {
+                        Some(budgets) => p.with_m(budgets[slot][ksi]),
+                        None => *p,
+                    };
+                    p.keys_for(
+                        client,
+                        spec.keyspaces[ksi].size,
+                        &mut crng,
+                        shared[ksi].as_deref(),
+                        false,
+                    )
+                })
+                .collect();
+            client_keys.push(keys);
+            client_rngs.push(crng);
+        }
+        let (bundles, comm) = {
+            let session = service.begin_round(&store, &spec).unwrap();
+            let bundles = session.fetch_batch(&client_keys, threads).unwrap();
+            (bundles, session.finish())
+        };
+        let mut agg = SparseAccumulator::new(&store);
+        let mut completed = 0usize;
+        let mut dropped = 0usize;
+        let mut up_bytes = 0u64;
+        let mut max_mem = 0usize;
+        let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
+        for (i, bundle) in bundles.into_iter().enumerate() {
+            let client = &dataset.train[cohort[i]];
+            let crng = &mut client_rngs[i];
+            let keys = &client_keys[i];
+            let down_bytes = bundle.bytes();
+            let slice_floats = bundle.total_floats();
+            if plan.hazards[i] > 0.0 && crng.f32() < plan.hazards[i] {
+                dropped += 1;
+                stats.push(ClientRoundStats {
+                    down_bytes,
+                    dropped: true,
+                    ..ClientRoundStats::default()
+                });
+                continue;
+            }
+            let (batch, _) = build_cu_batch(&arch, client, keys, crng).unwrap();
+            max_mem = max_mem.max(client_memory_bytes(slice_floats, &batch));
+            let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
+            let deltas = engine
+                .client_update(&arch, &ms, bundle.into_vecs(), &batch, cfg.client_lr)
+                .unwrap();
+            let plain_up = deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
+                + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+            up_bytes += plain_up;
+            agg.add_client(&spec, keys, &deltas).unwrap();
+            completed += 1;
+            stats.push(ClientRoundStats {
+                down_bytes,
+                up_bytes: plain_up,
+                compute_units: slice_floats as f64 * client.num_examples() as f64,
+                dropped: false,
+                ..ClientRoundStats::default()
+            });
+        }
+        if completed > 0 {
+            let update = Box::new(agg).finalize(AggMode::CohortMean);
+            optimizer.step(&mut store, &update);
+        }
+        let sim = scheduler.complete_round(&plan, &stats);
+        records.push(LegacyRound {
+            completed,
+            dropped,
+            down_bytes: comm.down_bytes,
+            up_bytes,
+            max_client_mem: max_mem,
+            sim_round_s: sim.sim_round_s.to_bits(),
+            tier_completed: sim.tier_completed,
+            tier_dropped: sim.tier_dropped,
+            tier_down_bytes: sim.tier_down_bytes,
+        });
+    }
+    (store, records)
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+#[test]
+fn sync_mode_is_byte_identical_to_the_legacy_loop() {
+    // fleets/policies chosen to exercise hazards (dropout coins), per-client
+    // key budgets, and multi-tier timing; threads {1, 4} per the contract
+    let scenarios: [(FleetKind, SchedPolicy, f32); 3] = [
+        (FleetKind::Uniform, SchedPolicy::Uniform, 0.0),
+        (FleetKind::Tiered3, SchedPolicy::MemoryCapped, 0.0),
+        (FleetKind::FlakyEdge, SchedPolicy::Uniform, 0.3),
+    ];
+    for (fleet, policy, dropout) in scenarios {
+        for threads in [1usize, 4] {
+            let mut cfg = base_cfg(1009);
+            cfg.fleet = fleet.clone();
+            cfg.sched_policy = policy;
+            cfg.dropout_rate = dropout;
+            cfg.fetch_threads = threads;
+            cfg.mem_cap_frac = 0.2;
+            let label = format!("{fleet}/{policy}/threads={threads}");
+            let (legacy_store, legacy_rounds) = legacy_trajectory(&cfg, threads);
+            assert_eq!(cfg.agg_mode, AggregationMode::Synchronous, "{label}");
+            let mut tr = Trainer::new(cfg).unwrap();
+            for (r, legacy) in legacy_rounds.iter().enumerate() {
+                let rec = tr.run_round().unwrap();
+                let engine_round = LegacyRound {
+                    completed: rec.completed,
+                    dropped: rec.dropped,
+                    down_bytes: rec.comm.down_bytes,
+                    up_bytes: rec.up_bytes,
+                    max_client_mem: rec.max_client_mem,
+                    sim_round_s: rec.sim_round_s.to_bits(),
+                    tier_completed: rec.tier_completed,
+                    tier_dropped: rec.tier_dropped,
+                    tier_down_bytes: rec.tier_down_bytes,
+                };
+                assert_eq!(&engine_round, legacy, "{label} round {}", r + 1);
+                assert_eq!(rec.discarded_clients, 0, "{label}");
+                assert_eq!(rec.mean_staleness, 0.0, "{label}");
+            }
+            assert_stores_bit_identical(&legacy_store, tr.store(), &label);
+        }
+    }
+}
+
+#[test]
+fn prop_buffered_merge_order_is_deterministic_in_the_seed() {
+    const CASES: usize = 8;
+    for case in 0..CASES {
+        let seed = 0xB0FF + case as u64;
+        let mut cfg = base_cfg(seed);
+        cfg.fleet = if case % 2 == 0 {
+            FleetKind::Tiered3
+        } else {
+            FleetKind::FlakyEdge
+        };
+        cfg.rounds = 4;
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: (case % 5) + 1,
+            max_staleness: case % 3,
+        };
+        let mut a = Trainer::new(cfg.clone()).unwrap();
+        let mut b = Trainer::new(cfg).unwrap();
+        for round in 0..4 {
+            let ra = a.run_round().unwrap();
+            let rb = b.run_round().unwrap();
+            let key = |r: &fedselect::coordinator::RoundRecord| {
+                (
+                    r.completed,
+                    r.dropped,
+                    r.discarded_clients,
+                    r.mean_staleness.to_bits(),
+                    r.sim_round_s.to_bits(),
+                    r.up_bytes,
+                    r.comm.down_bytes,
+                )
+            };
+            assert_eq!(key(&ra), key(&rb), "case {case} round {round}");
+        }
+        // merge *order* affects float accumulation: bit-identical stores
+        // prove the order itself was reproduced
+        assert_stores_bit_identical(a.store(), b.store(), &format!("case {case}"));
+        assert_eq!(a.round_engine().in_flight(), b.round_engine().in_flight());
+    }
+}
+
+#[test]
+fn over_select_ledgers_discarded_downloads() {
+    let mut sync_cfg = base_cfg(77);
+    sync_cfg.fleet = FleetKind::Tiered3;
+    sync_cfg.rounds = 2;
+    let mut over_cfg = sync_cfg.clone();
+    over_cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.5 };
+
+    let sync = Trainer::new(sync_cfg).unwrap().run().unwrap();
+    let over = Trainer::new(over_cfg).unwrap().run().unwrap();
+
+    assert!(over.total_discarded > 0, "no stragglers were ever discarded");
+    // discarded stragglers' downloads stay on both ledgers: the slice
+    // session charged every fetch, and the tier tallies cover the whole
+    // (inflated) cohort — so over-selection downloads strictly more than
+    // the barrier at the same goal count
+    for rec in &over.rounds {
+        assert_eq!(
+            rec.tier_down_bytes.iter().sum::<u64>(),
+            rec.comm.down_bytes,
+            "tier ledger must include discarded clients' downloads"
+        );
+        assert_eq!(
+            rec.completed + rec.dropped + rec.discarded_clients,
+            9, // 6 requested + ceil(6 * 0.5) over-selected
+            "every selected client is accounted for"
+        );
+        assert!(rec.completed <= 6, "rounds close at the original goal");
+    }
+    assert!(
+        over.total_down_bytes > sync.total_down_bytes,
+        "over-selection must pay extra download bytes ({} !> {})",
+        over.total_down_bytes,
+        sync.total_down_bytes
+    );
+}

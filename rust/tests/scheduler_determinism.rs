@@ -56,11 +56,11 @@ fn prop_same_seed_same_cohort_for_every_policy_and_fleet() {
         for fleet in fleets {
             for policy in SchedPolicy::ALL {
                 let mut cfg = base_cfg(seed);
-                cfg.fleet = fleet;
+                cfg.fleet = fleet.clone();
                 cfg.sched_policy = policy;
                 let g = geom();
-                let mut a = Scheduler::new(&cfg, 24);
-                let mut b = Scheduler::new(&cfg, 24);
+                let mut a = Scheduler::new(&cfg, 24).unwrap();
+                let mut b = Scheduler::new(&cfg, 24).unwrap();
                 // drive both from identically forked round RNGs, as the
                 // trainer does
                 let mut rng_a = Rng::new(seed, 100);
@@ -94,10 +94,11 @@ fn prop_full_training_is_deterministic_for_every_policy() {
         (FleetKind::Tiered3, SchedPolicy::MemoryCapped),
         (FleetKind::Diurnal, SchedPolicy::AvailabilityAware),
         (FleetKind::FlakyEdge, SchedPolicy::StalenessFair),
+        (FleetKind::Tiered3, SchedPolicy::LossWeighted),
         (FleetKind::Uniform, SchedPolicy::Uniform),
     ] {
         let mut cfg = base_cfg(11);
-        cfg.fleet = fleet;
+        cfg.fleet = fleet.clone();
         cfg.sched_policy = policy;
         let ra = Trainer::new(cfg.clone()).unwrap().run().unwrap();
         let rb = Trainer::new(cfg).unwrap().run().unwrap();
