@@ -11,14 +11,17 @@
 //! * [`AggMode::PerCoordMean`] — divide each coordinate by its selection
 //!   count (an ablation: see `bench_aggregation`).
 //!
-//! [`secure`] simulates the pairwise-mask Secure Aggregation protocol and
+//! [`secure`] simulates the pairwise-mask Secure Aggregation protocol —
+//! whole-cohort float masks ([`SecureAggSim`], synchronous barrier only)
+//! and close-group fixed-point committees ([`SecAggCommittee`], exact
+//! cancellation in `Z_2^64`, composing with goal-count closes) — and
 //! [`iblt`] provides the invertible-Bloom-lookup-table sparse aggregation
 //! the paper cites (Bell et al. 2020) for private *sparse* sums.
 
 pub mod iblt;
 pub mod secure;
 
-pub use secure::SecureAggSim;
+pub use secure::{fp_dequantize, fp_quantize, SecAggCommittee, SecureAggSim};
 
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};

@@ -5,18 +5,252 @@
 //! aggregation" strategy §4.2 describes as directly inheriting the system's
 //! dense-aggregation privacy, at the cost of full-model-sized uploads.
 //!
-//! The crypto is replaced by its algebra: client i and j derive a shared
-//! pairwise mask vector from a shared seed; i adds it, j subtracts it, so
-//! the server-visible sum of masked vectors equals the true sum while no
-//! individual vector is ever in the clear. Dropout recovery is simulated by
-//! reconstructing (removing) a dropped client's pairwise masks from the
-//! survivors' shares, as the real protocol does with Shamir shares.
+//! Two simulations live here:
+//!
+//! * [`SecureAggSim`] — the original whole-cohort protocol over f32 masks.
+//!   The crypto is replaced by its algebra: client i and j derive a shared
+//!   pairwise mask vector from a shared seed; i adds it, j subtracts it, so
+//!   the server-visible sum of masked vectors equals the true sum while no
+//!   individual vector is ever in the clear. Float masks only cancel to
+//!   rounding (~1e-3), which is why it is pinned to the synchronous barrier.
+//! * [`SecAggCommittee`] — a *close-group committee*: the members that merge
+//!   together at one goal-count close (over-select / buffered rounds) are
+//!   re-keyed against each other only. Like the real protocol, it operates
+//!   over a finite group — here `Z_2^64` fixed-point
+//!   ([`fp_quantize`]/[`fp_dequantize`]) with wrapping arithmetic — so
+//!   pairwise masks cancel **bit-exactly** and the masked committee sum is
+//!   byte-identical to the unmasked sum, including under dropout recovery.
+//!   Members that were keyed into a committee but never submit (over-select
+//!   stragglers, staleness discards) have their orphan masks reconstructed
+//!   and removed per committee, as the real protocol does with Shamir
+//!   shares — a straggler poisons only its committee's algebra, never the
+//!   global sum. Staleness weights are applied by the server to the
+//!   *unmasked committee sum* (every member of a committee shares one close
+//!   group, hence one staleness class), which is what preserves the
+//!   equal-scale mask algebra that [`SecureAggSim`] cannot offer under
+//!   per-client weights.
 
 use crate::error::{Error, Result};
 use crate::model::{ParamStore, SelectSpec};
 use crate::tensor::rng::Rng;
 
 use super::{finalize_mean, AggMode, Aggregator};
+
+/// Fractional bits of the committee fixed-point encoding: updates are
+/// quantized to `round(x * 2^20)` in two's complement before masking, the
+/// resolution the byte-identity contract is stated at.
+pub const COMMITTEE_FP_BITS: u32 = 20;
+const FP_SCALE: f64 = (1u64 << COMMITTEE_FP_BITS) as f64;
+
+/// Quantize one f32 to the committee's `Z_2^64` fixed-point encoding.
+pub fn fp_quantize(x: f32) -> u64 {
+    ((x as f64 * FP_SCALE).round() as i64) as u64
+}
+
+/// Invert [`fp_quantize`] (after wrapping sums: interpret as two's
+/// complement and rescale).
+pub fn fp_dequantize(v: u64) -> f32 {
+    ((v as i64) as f64 / FP_SCALE) as f32
+}
+
+/// Distinct mask streams for the update vector and the selection-count
+/// vector (counts are privacy-sensitive too: they reveal which keys a
+/// client selected).
+const MASK_STREAM_VEC: u64 = 0x5EC_A66;
+const MASK_STREAM_CNT: u64 = 0xC0_47F;
+
+/// Deterministic seed of the pair (a, b)'s mask stream over segment
+/// `seg_idx` — order-insensitive in (a, b), shared by both the
+/// whole-cohort and the committee protocol so the derivation can only be
+/// changed in one place.
+fn pair_seed(base: u64, a: u64, b: u64, seg_idx: usize) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    base.wrapping_mul(0x2545F4914F6CDD1D)
+        .wrapping_add(lo.wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_add(hi.wrapping_mul(0xBF58476D1CE4E5B9))
+        .wrapping_add(seg_idx as u64)
+}
+
+/// One committee member's masked fixed-point submission.
+struct MaskedQ {
+    member: u64,
+    vecs: Vec<Vec<u64>>,
+    counts: Vec<Vec<u64>>,
+}
+
+/// Close-group secure-aggregation committee over `Z_2^64` fixed point.
+///
+/// `members` is the full keyed set — everyone the server, at close time,
+/// asked to re-key and mask against each other. Submitters mask against
+/// *every* other member; members that never submit must be
+/// [`mark_dropped`](Self::mark_dropped)ed so their orphan masks are
+/// reconstructed and removed in [`unmask_sum`](Self::unmask_sum).
+pub struct SecAggCommittee {
+    template: ParamStore,
+    members: Vec<u64>,
+    committee_seed: u64,
+    submissions: Vec<MaskedQ>,
+    dropped: std::collections::HashSet<u64>,
+    /// Bytes one member uploads: TWO full-model-sized vectors of u64 group
+    /// elements — the masked update and the masked selection counts (16
+    /// bytes/coordinate total; counts are masked too because they reveal
+    /// which keys the client selected).
+    pub up_bytes_per_client: u64,
+}
+
+impl SecAggCommittee {
+    /// `committee_seed` keys every pairwise mask of this committee; the
+    /// trainer derives it from `run_seed ^ close_ordinal` (plus the
+    /// staleness class), so two closes never share mask material.
+    pub fn new(store: &ParamStore, members: Vec<u64>, committee_seed: u64) -> Self {
+        SecAggCommittee {
+            template: store.zeros_like(),
+            up_bytes_per_client: store.num_params() as u64 * 16,
+            members,
+            committee_seed,
+            submissions: Vec::new(),
+            dropped: std::collections::HashSet::new(),
+        }
+    }
+
+    pub fn members(&self) -> &[u64] {
+        &self.members
+    }
+
+    pub fn num_submitters(&self) -> usize {
+        self.submissions.len()
+    }
+
+    fn pair_mask_q(&self, a: u64, b: u64, len: usize, seg_idx: usize, stream: u64) -> Vec<u64> {
+        let mut rng = Rng::new(pair_seed(self.committee_seed, a, b, seg_idx), stream);
+        (0..len).map(|_| rng.next_u64()).collect()
+    }
+
+    /// Member-side: φ at the client, quantize, mask against every committee
+    /// peer, submit. The pair (i, j) shares one mask; i (the smaller id)
+    /// adds it and j subtracts it, so the wrapping sum cancels exactly.
+    pub fn submit(
+        &mut self,
+        member: u64,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        if !self.members.contains(&member) {
+            return Err(Error::Config(format!(
+                "client {member} is not a member of this secure-agg committee"
+            )));
+        }
+        let mut acc = self.template.clone();
+        let mut cnt = self.template.clone();
+        spec.deselect_add(&mut acc, &mut cnt, keys, updates)?;
+        let mut vecs: Vec<Vec<u64>> = acc
+            .segments
+            .iter()
+            .map(|s| s.data.iter().map(|&x| fp_quantize(x)).collect())
+            .collect();
+        let mut counts: Vec<Vec<u64>> = cnt
+            .segments
+            .iter()
+            .map(|s| s.data.iter().map(|&x| fp_quantize(x)).collect())
+            .collect();
+        for &other in &self.members {
+            if other == member {
+                continue;
+            }
+            let add = member < other;
+            for (si, v) in vecs.iter_mut().enumerate() {
+                let mask = self.pair_mask_q(member, other, v.len(), si, MASK_STREAM_VEC);
+                for (x, m) in v.iter_mut().zip(mask) {
+                    *x = if add { x.wrapping_add(m) } else { x.wrapping_sub(m) };
+                }
+            }
+            for (si, v) in counts.iter_mut().enumerate() {
+                let mask = self.pair_mask_q(member, other, v.len(), si, MASK_STREAM_CNT);
+                for (x, m) in v.iter_mut().zip(mask) {
+                    *x = if add { x.wrapping_add(m) } else { x.wrapping_sub(m) };
+                }
+            }
+        }
+        self.submissions.push(MaskedQ {
+            member,
+            vecs,
+            counts,
+        });
+        Ok(())
+    }
+
+    /// A keyed member will never submit (over-select straggler past the
+    /// close, buffered update past the staleness bound): survivors' masks
+    /// with it must be reconstructed and removed.
+    pub fn mark_dropped(&mut self, member: u64) {
+        self.dropped.insert(member);
+    }
+
+    /// Server-side: wrapping-sum the masked submissions (pairwise masks
+    /// cancel bit-exactly), reconstruct and remove orphan masks shared with
+    /// dropped members, dequantize. Returns `(sum, counts)` in full model
+    /// space.
+    pub fn unmask_sum(&self) -> (ParamStore, ParamStore) {
+        let mut acc_q: Vec<Vec<u64>> = self
+            .template
+            .segments
+            .iter()
+            .map(|s| vec![0u64; s.data.len()])
+            .collect();
+        let mut cnt_q: Vec<Vec<u64>> = acc_q.clone();
+        for sub in &self.submissions {
+            for (dst, src) in acc_q.iter_mut().zip(sub.vecs.iter()) {
+                for (d, &x) in dst.iter_mut().zip(src.iter()) {
+                    *d = d.wrapping_add(x);
+                }
+            }
+            for (dst, src) in cnt_q.iter_mut().zip(sub.counts.iter()) {
+                for (d, &x) in dst.iter_mut().zip(src.iter()) {
+                    *d = d.wrapping_add(x);
+                }
+            }
+        }
+        // a member that did submit must not have "its" masks removed: its
+        // own submission already carries the cancelling halves
+        let submitted: std::collections::HashSet<u64> =
+            self.submissions.iter().map(|s| s.member).collect();
+        for sub in &self.submissions {
+            for &d in &self.dropped {
+                if d == sub.member || submitted.contains(&d) {
+                    continue;
+                }
+                let add = sub.member < d;
+                for (si, dst) in acc_q.iter_mut().enumerate() {
+                    let mask = self.pair_mask_q(sub.member, d, dst.len(), si, MASK_STREAM_VEC);
+                    for (x, m) in dst.iter_mut().zip(mask) {
+                        // remove exactly what the submitter applied
+                        *x = if add { x.wrapping_sub(m) } else { x.wrapping_add(m) };
+                    }
+                }
+                for (si, dst) in cnt_q.iter_mut().enumerate() {
+                    let mask = self.pair_mask_q(sub.member, d, dst.len(), si, MASK_STREAM_CNT);
+                    for (x, m) in dst.iter_mut().zip(mask) {
+                        *x = if add { x.wrapping_sub(m) } else { x.wrapping_add(m) };
+                    }
+                }
+            }
+        }
+        let mut acc = self.template.clone();
+        let mut counts = self.template.clone();
+        for (seg, q) in acc.segments.iter_mut().zip(acc_q.iter()) {
+            for (d, &v) in seg.data.iter_mut().zip(q.iter()) {
+                *d = fp_dequantize(v);
+            }
+        }
+        for (seg, q) in counts.segments.iter_mut().zip(cnt_q.iter()) {
+            for (d, &v) in seg.data.iter_mut().zip(q.iter()) {
+                *d = fp_dequantize(v);
+            }
+        }
+        (acc, counts)
+    }
+}
 
 /// One client's masked submission (full model space, flattened per segment).
 struct Masked {
@@ -50,15 +284,7 @@ impl SecureAggSim {
     }
 
     fn pair_mask(&self, a: u64, b: u64, seg_len: usize, seg_idx: usize) -> Vec<f32> {
-        // deterministic mask for the ordered pair (min, max)
-        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
-        let seed = self
-            .round_seed
-            .wrapping_mul(0x2545F4914F6CDD1D)
-            .wrapping_add(lo.wrapping_mul(0x9E3779B97F4A7C15))
-            .wrapping_add(hi.wrapping_mul(0xBF58476D1CE4E5B9))
-            .wrapping_add(seg_idx as u64);
-        let mut rng = Rng::new(seed, 77);
+        let mut rng = Rng::new(pair_seed(self.round_seed, a, b, seg_idx), 77);
         (0..seg_len).map(|_| rng.normal()).collect()
     }
 
@@ -245,5 +471,163 @@ mod tests {
         let (sum, _) = sec.unmask_sum();
         assert!((sum.segments[0].data[0] - 3.0).abs() < 2e-3);
         assert!((sum.segments[1].data[0] - 3.0).abs() < 2e-3);
+    }
+
+    /// The committee's byte-identity reference: quantize each submitter's
+    /// deselected full-space update, wrapping-sum, dequantize — computed
+    /// with no masking at all.
+    fn quantized_reference(
+        store: &ParamStore,
+        spec: &SelectSpec,
+        clients: &[(Vec<Vec<u32>>, Vec<Vec<f32>>)],
+    ) -> (ParamStore, ParamStore) {
+        let mut acc_q: Vec<Vec<u64>> = store
+            .segments
+            .iter()
+            .map(|s| vec![0u64; s.data.len()])
+            .collect();
+        let mut cnt_q = acc_q.clone();
+        for (keys, ups) in clients {
+            let mut acc = store.zeros_like();
+            let mut cnt = store.zeros_like();
+            spec.deselect_add(&mut acc, &mut cnt, keys, ups).unwrap();
+            for (dst, seg) in acc_q.iter_mut().zip(acc.segments.iter()) {
+                for (d, &x) in dst.iter_mut().zip(seg.data.iter()) {
+                    *d = d.wrapping_add(fp_quantize(x));
+                }
+            }
+            for (dst, seg) in cnt_q.iter_mut().zip(cnt.segments.iter()) {
+                for (d, &x) in dst.iter_mut().zip(seg.data.iter()) {
+                    *d = d.wrapping_add(fp_quantize(x));
+                }
+            }
+        }
+        let mut acc = store.zeros_like();
+        let mut counts = store.zeros_like();
+        for (seg, q) in acc.segments.iter_mut().zip(acc_q.iter()) {
+            for (d, &v) in seg.data.iter_mut().zip(q.iter()) {
+                *d = fp_dequantize(v);
+            }
+        }
+        for (seg, q) in counts.segments.iter_mut().zip(cnt_q.iter()) {
+            for (d, &v) in seg.data.iter_mut().zip(q.iter()) {
+                *d = fp_dequantize(v);
+            }
+        }
+        (acc, counts)
+    }
+
+    fn assert_stores_bit_equal(a: &ParamStore, b: &ParamStore, label: &str) {
+        for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+            for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{label}: {} diverges at {i}: {x} vs {y}",
+                    sa.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp_quantize_round_trips_counts_and_small_updates() {
+        for x in [0.0f32, 1.0, -1.0, 3.0, 0.5, -0.25] {
+            assert_eq!(fp_dequantize(fp_quantize(x)), x, "{x}");
+        }
+        // wrapping add/sub of the same mask is the identity, bit for bit
+        let v = fp_quantize(0.3);
+        let m = 0xDEAD_BEEF_CAFE_F00Du64;
+        assert_eq!(v.wrapping_add(m).wrapping_sub(m), v);
+    }
+
+    #[test]
+    fn committee_masked_sum_is_byte_identical_to_unmasked_sum() {
+        let (store, spec) = setup();
+        let members = vec![30u64, 10, 20]; // unsorted on purpose
+        let mut com = SecAggCommittee::new(&store, members.clone(), 0xC0117EE);
+        let mut clients = Vec::new();
+        for (i, &cid) in members.iter().enumerate() {
+            let keys = vec![vec![i as u32, (i + 4) as u32]];
+            let ups = vec![vec![0.125 * (i as f32 + 1.0); 2 * 50], vec![-0.5; 50]];
+            com.submit(cid, &spec, &keys, &ups).unwrap();
+            clients.push((keys, ups));
+        }
+        let (sum, counts) = com.unmask_sum();
+        let (rsum, rcounts) = quantized_reference(&store, &spec, &clients);
+        assert_stores_bit_equal(&sum, &rsum, "sum");
+        assert_stores_bit_equal(&counts, &rcounts, "counts");
+    }
+
+    #[test]
+    fn committee_dropout_recovery_is_byte_exact() {
+        let (store, spec) = setup();
+        // five keyed members; two never submit (an over-select straggler
+        // pair past the close) — recovery must remove exactly their masks
+        let members = vec![7u64, 3, 11, 5, 9];
+        let mut com = SecAggCommittee::new(&store, members, 20260730);
+        let mut clients = Vec::new();
+        for (i, cid) in [7u64, 11, 9].into_iter().enumerate() {
+            let keys = vec![vec![(2 * i) as u32]];
+            let ups = vec![vec![1.0 + i as f32; 50], vec![0.75; 50]];
+            com.submit(cid, &spec, &keys, &ups).unwrap();
+            clients.push((keys, ups));
+        }
+        com.mark_dropped(3);
+        com.mark_dropped(5);
+        let (sum, counts) = com.unmask_sum();
+        let (rsum, rcounts) = quantized_reference(&store, &spec, &clients);
+        assert_stores_bit_equal(&sum, &rsum, "sum under dropout");
+        assert_stores_bit_equal(&counts, &rcounts, "counts under dropout");
+    }
+
+    #[test]
+    fn committee_submissions_are_masked_on_the_wire() {
+        let (store, spec) = setup();
+        let mut com = SecAggCommittee::new(&store, vec![1, 2], 99);
+        let ups = vec![vec![0.0; 50], vec![0.0; 50]];
+        com.submit(1, &spec, &[vec![0]], &ups).unwrap();
+        // an all-zero update must not be all-zero (or all-tiny) on the wire;
+        // counts are masked too — they reveal the selected keys otherwise
+        assert!(com.submissions[0].vecs[0].iter().any(|&x| x > (1u64 << 30)));
+        assert!(com.submissions[0].counts[0].iter().any(|&x| x > (1u64 << 30)));
+        // a single-member committee has no peers, hence no masks
+        let mut solo = SecAggCommittee::new(&store, vec![4], 99);
+        solo.submit(4, &spec, &[vec![0]], &ups).unwrap();
+        assert!(solo.submissions[0].vecs[0].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn committee_rejects_non_members_and_charges_group_bytes() {
+        let (store, spec) = setup();
+        let mut com = SecAggCommittee::new(&store, vec![1, 2], 7);
+        let ups = vec![vec![0.0; 50], vec![0.0; 50]];
+        assert!(com.submit(8, &spec, &[vec![0]], &ups).is_err());
+        assert_eq!(
+            com.up_bytes_per_client,
+            store.num_params() as u64 * 16,
+            "masked update + masked counts, 8 bytes per u64 group element"
+        );
+    }
+
+    #[test]
+    fn two_committees_with_different_seeds_mask_differently() {
+        let (store, spec) = setup();
+        let ups = vec![vec![1.0; 50], vec![1.0; 50]];
+        let mut a = SecAggCommittee::new(&store, vec![1, 2], 1000);
+        let mut b = SecAggCommittee::new(&store, vec![1, 2], 1001);
+        a.submit(1, &spec, &[vec![0]], &ups).unwrap();
+        b.submit(1, &spec, &[vec![0]], &ups).unwrap();
+        assert_ne!(
+            a.submissions[0].vecs[0], b.submissions[0].vecs[0],
+            "close-group re-keying must rotate mask material"
+        );
+        // ...but each still unmasks to the same (exact) sum once its peer
+        // is recovered
+        a.mark_dropped(2);
+        b.mark_dropped(2);
+        let (sa, _) = a.unmask_sum();
+        let (sb, _) = b.unmask_sum();
+        assert_stores_bit_equal(&sa, &sb, "seed-independent unmasked sum");
     }
 }

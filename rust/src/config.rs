@@ -77,9 +77,22 @@ pub struct TrainConfig {
     /// FedBuff-style buffered asynchrony. See
     /// [`crate::coordinator::engine`].
     pub agg_mode: AggregationMode,
-    /// Route aggregation through the secure-aggregation simulation
-    /// (synchronous mode only: pairwise masks need the full cohort).
+    /// Route aggregation through the secure-aggregation simulation. Without
+    /// `secure_committee` this is the whole-cohort float-mask protocol and
+    /// requires the synchronous barrier (pairwise masks only cancel when
+    /// every submitter lands in the same close group).
     pub secure_agg: bool,
+    /// Key pairwise masks per *close group* instead of over the whole
+    /// cohort: when an `over-select` / `buffered` close fires, the members
+    /// that merge together are re-keyed as a fixed-point committee
+    /// (committee id = run seed ⊕ close ordinal — the per-run seed, NOT the
+    /// per-round one, which already contains the round and would cancel the
+    /// ordinal — one committee per
+    /// staleness class), stragglers/discards take the per-committee mask
+    /// reconstruction path, and staleness weights apply to unmasked
+    /// committee sums — which is what lets `secure_agg` compose with every
+    /// aggregation mode. See `crate::aggregation::SecAggCommittee`.
+    pub secure_committee: bool,
     pub server_opt: ServerOpt,
     pub client_lr: f32,
     /// Device-population model the cohort scheduler draws from.
@@ -115,6 +128,7 @@ impl TrainConfig {
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
+            secure_committee: false,
             server_opt: ServerOpt::fedadagrad(0.1),
             client_lr: 0.5,
             fleet: FleetKind::Uniform,
@@ -140,6 +154,7 @@ impl TrainConfig {
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
+            secure_committee: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
             fleet: FleetKind::Uniform,
@@ -165,6 +180,7 @@ impl TrainConfig {
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
+            secure_committee: false,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
             fleet: FleetKind::Uniform,
@@ -198,6 +214,7 @@ impl TrainConfig {
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
+            secure_committee: false,
             server_opt: ServerOpt::fedadam(0.02),
             client_lr: 0.1,
             fleet: FleetKind::Uniform,
@@ -267,10 +284,26 @@ impl TrainConfig {
                 }
             }
         }
-        if self.secure_agg && self.agg_mode != AggregationMode::Synchronous {
+        if self.secure_committee && !self.secure_agg {
+            return Err(Error::Config(
+                "--secure-committee keys the secure-aggregation masks per close \
+                 group and requires --secure-agg"
+                    .into(),
+            ));
+        }
+        // The genuinely unsound combination: whole-cohort float masks only
+        // cancel when every submitter lands in the same close group, i.e.
+        // behind the synchronous barrier. Committees lift this — each close
+        // group is re-keyed, so every aggregation mode composes.
+        if self.secure_agg
+            && !self.secure_committee
+            && self.agg_mode != AggregationMode::Synchronous
+        {
             return Err(Error::Config(format!(
-                "secure aggregation requires --agg-mode sync (pairwise masks only \
-                 cancel over the full cohort), got {}",
+                "whole-cohort secure aggregation requires --agg-mode sync \
+                 (pairwise masks only cancel when everyone lands in one close \
+                 group), got {}; pass --secure-committee to re-key masks per \
+                 close group instead",
                 self.agg_mode
             )));
         }
@@ -439,7 +472,7 @@ mod tests {
     }
 
     #[test]
-    fn secure_agg_requires_the_synchronous_barrier() {
+    fn whole_cohort_secure_agg_requires_the_synchronous_barrier() {
         let mut cfg = TrainConfig::logreg_default(512, 64);
         cfg.secure_agg = true;
         assert!(cfg.validate().is_ok());
@@ -447,10 +480,30 @@ mod tests {
             goal_count: 0,
             max_staleness: 4,
         };
-        assert!(cfg.validate().is_err());
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--secure-committee"), "error must name the fix: {err}");
         cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.25 };
         assert!(cfg.validate().is_err());
         cfg.secure_agg = false;
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn committees_lift_the_sync_only_secure_agg_restriction() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.secure_agg = true;
+        cfg.secure_committee = true;
+        // every aggregation mode composes with committee-keyed masks
+        assert!(cfg.validate().is_ok());
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 4,
+        };
+        assert!(cfg.validate().is_ok());
+        cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.25 };
+        assert!(cfg.validate().is_ok());
+        // ...but committees without secure aggregation are meaningless
+        cfg.secure_agg = false;
+        assert!(cfg.validate().is_err());
     }
 }

@@ -177,6 +177,46 @@ pub struct MergeItem {
     pub deltas: Vec<Vec<f32>>,
 }
 
+/// One close group's secure-aggregation committee: the members the server
+/// re-keys against each other when a close fires. Formed for every close
+/// (cheap index bookkeeping); only consumed when the run enables
+/// `--secure-agg --secure-committee`, where the trainer instantiates one
+/// [`crate::aggregation::SecAggCommittee`] per spec.
+///
+/// Membership = the merged updates of one staleness class at this close,
+/// plus the same class's keyed-but-never-submitting members (over-select
+/// stragglers past the close, buffered updates past the staleness bound) —
+/// those trigger the per-committee mask-reconstruction path. A committee is
+/// one staleness class by construction, so its staleness weight applies to
+/// the *committee sum* server-side and the equal-scale mask algebra is
+/// preserved. In-flight members that stay viable are not keyed here; they
+/// are carried into the committee of the close where they eventually merge.
+#[derive(Clone, Debug)]
+pub struct CommitteeSpec {
+    /// Close ordinal (the 1-based round whose close formed this committee);
+    /// the trainer keys masks from `run_seed ^ close_ordinal` (the per-run
+    /// seed — a per-round seed already contains the round number and would
+    /// cancel the ordinal, reusing mask material across closes).
+    pub close_ordinal: u64,
+    /// Rounds-of-staleness class shared by every member.
+    pub staleness: usize,
+    /// `AggregationMode::staleness_weight(staleness)` — applied by the
+    /// server to the unmasked committee sum.
+    pub weight: f32,
+    /// Indices into [`RoundOutcome::merged`] that submit to this committee.
+    pub submitters: Vec<usize>,
+    /// Train-client ids keyed into the committee that never submit; their
+    /// orphan masks are reconstructed per committee.
+    pub dropped: Vec<u64>,
+}
+
+impl CommitteeSpec {
+    /// Keyed members: submitters plus reconstruction-path dropouts.
+    pub fn size(&self) -> usize {
+        self.submitters.len() + self.dropped.len()
+    }
+}
+
 /// What the engine decided for one round.
 #[derive(Debug, Default)]
 pub struct RoundOutcome {
@@ -194,6 +234,10 @@ pub struct RoundOutcome {
     pub mean_staleness: f64,
     /// Updates still in flight after this round (buffered mode only).
     pub in_flight: usize,
+    /// Secure-aggregation committees of this close, one per staleness
+    /// class, in ascending staleness order; every `merged` index appears in
+    /// exactly one committee.
+    pub committees: Vec<CommitteeSpec>,
 }
 
 /// A buffered-mode update that has been computed but has not landed yet.
@@ -232,6 +276,17 @@ impl RoundEngine {
         self.in_flight.len()
     }
 
+    /// Train-client indices with an update currently in flight, sorted and
+    /// deduplicated — the planner's exclusion set (FedBuff caps per-client
+    /// concurrency at one: a client is never re-selected while one of its
+    /// updates is still in flight).
+    pub fn in_flight_clients(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.in_flight.iter().map(|f| f.client).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// How many clients to select this round for a configured cohort size
     /// of `base`: over-selection inflates by `ceil(base * extra_frac)`
     /// (at least one extra), the other modes select exactly `base`.
@@ -257,6 +312,22 @@ impl RoundEngine {
             }
             _ => base,
         }
+    }
+
+    /// One staleness-0 committee over `n_merged` submitters plus `dropped`
+    /// keyed-but-silent members; empty when nobody merges (a close that
+    /// merges nothing keys nothing).
+    fn fresh_committee(round: usize, n_merged: usize, dropped: Vec<u64>) -> Vec<CommitteeSpec> {
+        if n_merged == 0 {
+            return Vec::new();
+        }
+        vec![CommitteeSpec {
+            close_ordinal: round as u64,
+            staleness: 0,
+            weight: 1.0,
+            submitters: (0..n_merged).collect(),
+            dropped,
+        }]
     }
 
     /// Decide the round: which updates merge (and at what weight), when the
@@ -290,9 +361,13 @@ impl RoundEngine {
                         deltas: w.deltas,
                     })
                     .collect();
+                // one committee: the whole merge set (post-fetch dropouts
+                // dropped before the close, so they were never keyed)
+                let committees = Self::fresh_committee(round, merged.len(), Vec::new());
                 RoundOutcome {
                     merged,
                     close_s,
+                    committees,
                     ..RoundOutcome::default()
                 }
             }
@@ -316,10 +391,19 @@ impl RoundEngine {
                         }
                     })
                     .collect();
+                // every survivor was racing the close, so every survivor was
+                // keyed into the committee; the tail never submits and takes
+                // the per-committee mask-reconstruction path
+                let committees = Self::fresh_committee(
+                    round,
+                    merged.len(),
+                    events[goal..].iter().map(|e| e.client as u64).collect(),
+                );
                 RoundOutcome {
                     merged,
                     close_s,
                     discarded_tiers: events[goal..].iter().map(|e| e.tier).collect(),
+                    committees,
                     ..RoundOutcome::default()
                 }
             }
@@ -369,11 +453,13 @@ impl RoundEngine {
                 // age out anything that would exceed the staleness bound by
                 // the time it could next land
                 let mut discarded_tiers = Vec::new();
+                let mut discarded_members: Vec<(usize, u64)> = Vec::new(); // (staleness, client)
                 self.in_flight.retain(|inf| {
                     if round - inf.launch_round < max_staleness {
                         true
                     } else {
                         discarded_tiers.push(inf.tier);
+                        discarded_members.push((round - inf.launch_round, inf.client as u64));
                         false
                     }
                 });
@@ -382,12 +468,37 @@ impl RoundEngine {
                 } else {
                     stale_sum as f64 / goal as f64
                 };
+                // committees: one per staleness class among the merged
+                // updates; same-class age-outs are keyed in as dropouts so
+                // their masks are reconstructed per committee (a class with
+                // no merging member was never keyed at this close)
+                let mut classes: std::collections::BTreeMap<usize, CommitteeSpec> =
+                    std::collections::BTreeMap::new();
+                for (i, item) in merged.iter().enumerate() {
+                    classes
+                        .entry(item.staleness)
+                        .or_insert_with(|| CommitteeSpec {
+                            close_ordinal: round as u64,
+                            staleness: item.staleness,
+                            weight: AggregationMode::staleness_weight(item.staleness),
+                            submitters: Vec::new(),
+                            dropped: Vec::new(),
+                        })
+                        .submitters
+                        .push(i);
+                }
+                for (staleness, client) in discarded_members {
+                    if let Some(c) = classes.get_mut(&staleness) {
+                        c.dropped.push(client);
+                    }
+                }
                 RoundOutcome {
                     merged,
                     close_s: (close_abs - round_start_s).max(0.0),
                     discarded_tiers,
                     mean_staleness,
                     in_flight: self.in_flight.len(),
+                    committees: classes.into_values().collect(),
                 }
             }
         }
@@ -512,6 +623,9 @@ mod tests {
         let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
         assert_eq!(order, vec![10, 12], "slot order, not completion order");
         assert!(out.merged.iter().all(|m| m.weight == 1.0 && m.staleness == 0));
+        assert_eq!(out.committees.len(), 1, "one whole-merge-set committee");
+        assert_eq!(out.committees[0].submitters, vec![0, 1]);
+        assert!(out.committees[0].dropped.is_empty());
     }
 
     #[test]
@@ -591,6 +705,119 @@ mod tests {
     }
 
     #[test]
+    fn committees_partition_the_merge_set_by_staleness_class() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 3,
+            max_staleness: 1,
+        });
+        // round 1: four survivors, goal 3 — client 13 stays in flight
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+            Some(slot_work(13, 1)),
+        ];
+        let events = vec![
+            event(0, 10, 0, 1.0),
+            event(1, 11, 0, 2.0),
+            event(2, 12, 1, 3.0),
+            event(3, 13, 1, 9.0),
+        ];
+        let out1 = eng.close_round(1, 4, 0.0, &events, work);
+        assert_eq!(out1.committees.len(), 1, "all fresh: one class");
+        assert_eq!(out1.committees[0].staleness, 0);
+        assert_eq!(out1.committees[0].weight, 1.0);
+        assert_eq!(out1.committees[0].submitters, vec![0, 1, 2]);
+        assert!(out1.committees[0].dropped.is_empty());
+        // round 2: two fresh survivors + the carried update (staleness 1);
+        // goal 3 merges all — two staleness classes, two committees
+        let work2 = vec![Some(slot_work(20, 0)), Some(slot_work(21, 0))];
+        let events2 = vec![event(0, 20, 0, 1.0), event(1, 21, 0, 2.0)];
+        let out2 = eng.close_round(2, 3, 10.0, &events2, work2);
+        assert_eq!(out2.merged.len(), 3);
+        assert_eq!(out2.committees.len(), 2);
+        let mut covered: Vec<usize> = out2
+            .committees
+            .iter()
+            .flat_map(|c| c.submitters.iter().copied())
+            .collect();
+        covered.sort_unstable();
+        assert_eq!(covered, vec![0, 1, 2], "committees partition the merge set");
+        for c in &out2.committees {
+            assert_eq!(c.close_ordinal, 2);
+            for &i in &c.submitters {
+                assert_eq!(out2.merged[i].staleness, c.staleness, "class purity");
+                assert_eq!(out2.merged[i].weight, c.weight, "weight == class weight");
+            }
+        }
+    }
+
+    #[test]
+    fn over_select_committee_keys_the_discarded_tail_as_dropouts() {
+        let mut eng = RoundEngine::new(AggregationMode::OverSelect { extra_frac: 0.5 });
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+        ];
+        let events = vec![event(2, 12, 1, 0.5), event(0, 10, 0, 1.0), event(1, 11, 0, 9.0)];
+        let out = eng.close_round(1, 2, 0.0, &events, work);
+        assert_eq!(out.committees.len(), 1);
+        let c = &out.committees[0];
+        assert_eq!(c.submitters, vec![0, 1]);
+        assert_eq!(c.dropped, vec![11], "the straggler is keyed but silent");
+        assert_eq!(c.size(), 3);
+        assert_eq!(c.staleness, 0);
+    }
+
+    #[test]
+    fn buffered_age_outs_join_their_class_committee_as_dropouts() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 1,
+            max_staleness: 1,
+        });
+        // round 1: client 10 merges, 11 and 12 stay in flight
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 0)),
+        ];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 11, 0, 8.0), event(2, 12, 0, 9.0)];
+        eng.close_round(1, 3, 0.0, &events, work);
+        // round 2: carried client 11 merges at staleness 1; client 12 (also
+        // staleness 1) ages out at max_staleness 1 — same class, keyed in as
+        // a dropout of the staleness-1 committee
+        let out2 = eng.close_round(2, 1, 20.0, &[], vec![]);
+        assert_eq!(out2.merged.len(), 1);
+        assert_eq!(out2.merged[0].client, 11);
+        assert_eq!(out2.discarded_tiers.len(), 1);
+        assert_eq!(out2.committees.len(), 1);
+        assert_eq!(out2.committees[0].staleness, 1);
+        assert_eq!(out2.committees[0].submitters, vec![0]);
+        assert_eq!(out2.committees[0].dropped, vec![12]);
+        assert_eq!(eng.in_flight_clients(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn in_flight_clients_tracks_the_buffered_pool() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 1,
+            max_staleness: 4,
+        });
+        assert!(eng.in_flight_clients().is_empty());
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(12, 0)),
+            Some(slot_work(11, 0)),
+        ];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 12, 0, 8.0), event(2, 11, 0, 9.0)];
+        eng.close_round(1, 3, 0.0, &events, work);
+        assert_eq!(eng.in_flight_clients(), vec![11, 12], "sorted");
+        let sync = RoundEngine::new(AggregationMode::Synchronous);
+        assert!(sync.in_flight_clients().is_empty());
+    }
+
+    #[test]
     fn empty_rounds_close_immediately() {
         for mode in [
             AggregationMode::Synchronous,
@@ -604,6 +831,7 @@ mod tests {
             let out = eng.close_round(1, 4, 0.0, &[], vec![None, None, None, None]);
             assert!(out.merged.is_empty(), "{mode}");
             assert_eq!(out.close_s, 0.0, "{mode}");
+            assert!(out.committees.is_empty(), "{mode}: nothing merged, nothing keyed");
         }
     }
 }

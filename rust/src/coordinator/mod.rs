@@ -3,11 +3,13 @@
 //! Each round runs in four phases:
 //! 0. **Plan** — [`Scheduler::plan_round`] chooses the cohort from the
 //!    device fleet via the configured selection policy (over-selection
-//!    inflates the requested size via [`RoundEngine::planned_cohort`]),
-//!    with per-slot failure hazards and (optionally) per-client select-key
-//!    budgets; the `uniform` fleet + `uniform` policy path is
-//!    byte-identical to the pre-scheduler inline sampling (§5.1: uniform
-//!    without replacement);
+//!    inflates the requested size via [`RoundEngine::planned_cohort`];
+//!    buffered mode excludes clients whose update is still in flight —
+//!    FedBuff's per-client concurrency cap), with per-slot failure hazards
+//!    and (optionally) per-client select-key budgets; the `uniform` fleet +
+//!    `uniform` policy path with an empty exclusion set is byte-identical
+//!    to the pre-scheduler inline sampling (§5.1: uniform without
+//!    replacement);
 //! 1. **Keys** — fork each client's RNG and draw its select keys via its
 //!    [`KeyPolicy`] (re-budgeted per client when the plan says so), in
 //!    cohort order (phases 0–1 are the only consumers of the round RNG);
@@ -39,11 +41,11 @@
 
 pub mod engine;
 
-pub use engine::{AggregationMode, MergeItem, RoundEngine, RoundOutcome, SlotWork};
+pub use engine::{AggregationMode, CommitteeSpec, MergeItem, RoundEngine, RoundOutcome, SlotWork};
 
 use std::time::Instant;
 
-use crate::aggregation::{Aggregator, SecureAggSim, SparseAccumulator};
+use crate::aggregation::{finalize_mean, Aggregator, SecAggCommittee, SecureAggSim, SparseAccumulator};
 use crate::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, Engine};
 use crate::config::{DatasetConfig, EngineKind, TrainConfig};
 use crate::data::{bow, images, text, Example, FederatedDataset};
@@ -72,6 +74,12 @@ pub struct RoundRecord {
     /// Mean rounds-of-staleness over the merged updates (0 outside
     /// buffered mode).
     pub mean_staleness: f64,
+    /// Secure-aggregation committees keyed at this round's close (0 unless
+    /// the run uses `--secure-agg --secure-committee`).
+    pub committees: usize,
+    /// Mean keyed committee size — submitters plus reconstruction-path
+    /// dropouts (0 when no committee was keyed).
+    pub mean_committee_size: f64,
     pub comm: RoundComm,
     /// Client->server upload bytes (updates + keys, or masked vectors).
     pub up_bytes: u64,
@@ -257,14 +265,17 @@ impl Trainer {
         let mut round_rng = self.rng.fork(self.round as u64);
 
         // Phase 0 — plan: the scheduler picks the cohort from the fleet
-        // (over-selection asks for extra clients). Under the uniform policy
-        // this is the identical sample_without_replacement draw the
-        // pre-scheduler coordinator made, so trajectories are
+        // (over-selection asks for extra clients; buffered mode excludes
+        // clients with an update still in flight — FedBuff caps per-client
+        // concurrency at one). Under the uniform policy with an empty
+        // exclusion set this is the identical sample_without_replacement
+        // draw the pre-scheduler coordinator made, so trajectories are
         // byte-identical at the same seed.
         let want = self.round_engine.planned_cohort(self.cfg.cohort);
+        let in_flight = self.round_engine.in_flight_clients();
         let plan = self
             .scheduler
-            .plan_round(self.round, want, &self.geom, &mut round_rng);
+            .plan_round(self.round, want, &self.geom, &mut round_rng, &in_flight);
         let cohort = &plan.cohort;
 
         // shared per-round key sets (Fig. 6 "fixed" ablation)
@@ -323,6 +334,7 @@ impl Trainer {
         // fetch_threads). Merging is deferred to the round engine.
         let mut dropped = 0usize;
         let mut up_bytes_plain = 0u64;
+        let mut up_bytes_secure = 0u64;
         let mut max_mem = 0usize;
         let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
         let mut work: Vec<Option<SlotWork>> = Vec::with_capacity(cohort.len());
@@ -360,13 +372,20 @@ impl Trainer {
             let plain_up = deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
                 + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
             let client_up = if self.cfg.secure_agg {
-                // §4.2: client-side φ + dense secure agg uploads a
-                // full-model-sized masked vector.
-                self.store.bytes() as u64
+                // §4.2: client-side φ + dense secure agg uploads
+                // full-model-sized masked vectors. The committee protocol
+                // ships masked update + masked counts as u64 group elements
+                // (16 bytes per coordinate total).
+                if self.cfg.secure_committee {
+                    self.store.num_params() as u64 * 16
+                } else {
+                    self.store.bytes() as u64
+                }
             } else {
                 plain_up
             };
             up_bytes_plain += plain_up;
+            up_bytes_secure += client_up;
             let update_norm = deltas
                 .iter()
                 .flat_map(|d| d.iter())
@@ -403,26 +422,107 @@ impl Trainer {
             work,
         );
 
-        // Phase 3c — aggregate the engine's merge list (weight 1.0 routes
-        // through the exact unweighted float path) and step the server
-        // optimizer on the pseudo-gradient.
-        let mut agg: Box<dyn Aggregator> = if self.cfg.secure_agg {
-            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
-            Box::new(SecureAggSim::new(&self.store, ids, self.cfg.seed ^ self.round as u64))
-        } else {
-            Box::new(SparseAccumulator::new(&self.store))
-        };
-        for item in &outcome.merged {
-            agg.add_client_weighted(&self.spec, &item.keys, &item.deltas, item.weight)?;
-        }
+        // Phase 3c — aggregate and step the server optimizer on the
+        // pseudo-gradient. Three substrates:
+        //  * plain: the engine's merge list through the sparse accumulator
+        //    (weight 1.0 routes through the exact unweighted float path);
+        //  * secure, whole-cohort (legacy, sync-only): one float-mask
+        //    SecureAggSim over the round cohort;
+        //  * secure committees: one fixed-point SecAggCommittee per close
+        //    group/staleness class — members mask against committee peers
+        //    only, keyed-but-silent members (over-select stragglers,
+        //    staleness discards) take the per-committee mask-reconstruction
+        //    path, and each committee's staleness weight is applied to its
+        //    *unmasked sum* (the equal-scale mask algebra is preserved).
         let completed = outcome.merged.len();
-        if completed > 0 {
-            let update = agg.finalize(self.cfg.agg);
-            self.optimizer.step(&mut self.store, &update);
+        let mut committees_keyed = 0usize;
+        let mut committee_members = 0usize;
+        // each substrate yields the finalized server update (None when
+        // nothing merged); the optimizer step is shared below
+        let update: Option<ParamStore> = if self.cfg.secure_agg && self.cfg.secure_committee {
+            // committee id = run seed ⊕ close ordinal, spread over the
+            // staleness classes of one close. The close ordinal is the
+            // varying term — it must NOT be XORed against anything that
+            // already contains the round number (that would cancel and
+            // reuse mask material across closes).
+            let run_seed = self.cfg.seed ^ 0x5EC_C0117EE;
+            let mut acc = self.store.zeros_like();
+            let mut counts = self.store.zeros_like();
+            for com in &outcome.committees {
+                let seed = (run_seed ^ com.close_ordinal)
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(com.staleness as u64);
+                let members: Vec<u64> = com
+                    .submitters
+                    .iter()
+                    .map(|&i| outcome.merged[i].client as u64)
+                    .chain(com.dropped.iter().copied())
+                    .collect();
+                let mut sec = SecAggCommittee::new(&self.store, members, seed);
+                for &i in &com.submitters {
+                    let item = &outcome.merged[i];
+                    sec.submit(item.client as u64, &self.spec, &item.keys, &item.deltas)?;
+                }
+                for &d in &com.dropped {
+                    sec.mark_dropped(d);
+                }
+                let (csum, ccnt) = sec.unmask_sum();
+                for (a, s) in acc.segments.iter_mut().zip(csum.segments.iter()) {
+                    for (x, &v) in a.data.iter_mut().zip(s.data.iter()) {
+                        *x += com.weight * v;
+                    }
+                }
+                // selection counts land unweighted, matching the ledger
+                // semantics of Aggregator::add_client_weighted
+                for (a, s) in counts.segments.iter_mut().zip(ccnt.segments.iter()) {
+                    for (x, &v) in a.data.iter_mut().zip(s.data.iter()) {
+                        *x += v;
+                    }
+                }
+                committees_keyed += 1;
+                committee_members += com.size();
+            }
+            (completed > 0).then(|| finalize_mean(acc, &counts, completed, self.cfg.agg))
+        } else if self.cfg.secure_agg {
+            // whole-cohort float masks (sync-only, validated): every cohort
+            // member was keyed at selection, so members that dropped
+            // post-fetch never submit and their orphan masks must be
+            // reconstructed — otherwise full-scale Gaussian residue lands
+            // in the server update.
+            let ids: Vec<u64> = cohort.iter().map(|&c| c as u64).collect();
+            let mut sec =
+                SecureAggSim::new(&self.store, ids.clone(), self.cfg.seed ^ self.round as u64);
+            for item in &outcome.merged {
+                // sync mode: every merge weight is exactly 1.0
+                sec.submit(item.client as u64, &self.spec, &item.keys, &item.deltas)?;
+            }
+            let submitted: std::collections::HashSet<u64> =
+                outcome.merged.iter().map(|m| m.client as u64).collect();
+            for &id in &ids {
+                if !submitted.contains(&id) {
+                    sec.mark_dropped(id);
+                }
+            }
+            (completed > 0).then(|| {
+                let (acc, secure_counts) = sec.unmask_sum();
+                finalize_mean(acc, &secure_counts, completed, self.cfg.agg)
+            })
+        } else {
+            let mut agg: Box<dyn Aggregator> = Box::new(SparseAccumulator::new(&self.store));
+            for item in &outcome.merged {
+                agg.add_client_weighted(&self.spec, &item.keys, &item.deltas, item.weight)?;
+            }
+            (completed > 0).then(|| agg.finalize(self.cfg.agg))
+        };
+        if let Some(update) = &update {
+            self.optimizer.step(&mut self.store, update);
         }
 
+        // bytes uploaded *this round* by every computed client — like the
+        // plain path, discarded stragglers' (masked) uploads stay on the
+        // ledger; carried in-flight merges were charged at launch
         let up_bytes = if self.cfg.secure_agg {
-            completed as u64 * self.store.bytes() as u64
+            up_bytes_secure
         } else {
             up_bytes_plain
         };
@@ -451,6 +551,12 @@ impl Trainer {
             mode: self.round_engine.mode(),
             discarded_clients: outcome.discarded_tiers.len(),
             mean_staleness: outcome.mean_staleness,
+            committees: committees_keyed,
+            mean_committee_size: if committees_keyed > 0 {
+                committee_members as f64 / committees_keyed as f64
+            } else {
+                0.0
+            },
             comm,
             up_bytes,
             max_client_mem: max_mem,
@@ -599,6 +705,33 @@ mod tests {
     }
 
     #[test]
+    fn secure_agg_reconstructs_postfetch_dropout_masks() {
+        // a cohort member that drops after seed agreement never submits, so
+        // its pairwise masks must be reconstructed — without that the server
+        // update carries full-scale Gaussian residue and training diverges
+        // from the plain trajectory instead of tracking it to mask rounding
+        let mut cfg_a = tiny_cfg();
+        cfg_a.rounds = 3;
+        cfg_a.dropout_rate = 0.4;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.secure_agg = true;
+        let ra = Trainer::new(cfg_a).unwrap().run().unwrap();
+        let rb = Trainer::new(cfg_b).unwrap().run().unwrap();
+        assert!(
+            ra.rounds.iter().map(|r| r.dropped).sum::<usize>() > 0,
+            "dropout never fired"
+        );
+        // same seed => same cohorts, same dropout coins, same merge set
+        assert!(
+            (ra.final_eval.loss - rb.final_eval.loss).abs()
+                < 0.05 * ra.final_eval.loss.abs(),
+            "plain {} vs secure-with-dropout {}",
+            ra.final_eval.loss,
+            rb.final_eval.loss
+        );
+    }
+
+    #[test]
     fn fetch_threads_do_not_change_the_trajectory() {
         // byte-identical training at any thread count, for every impl
         for imp in [
@@ -713,8 +846,9 @@ mod tests {
         };
         let sync = Trainer::new(base).unwrap().run().unwrap();
         let buffered = Trainer::new(buf).unwrap().run().unwrap();
-        // the same seed draws the same cohorts and the same per-client
-        // timings, so closing at the 4th landing strictly beats the barrier
+        // closing at the 4th landing beats waiting for the straggler of a
+        // 6-cohort on every round (cohorts diverge after round 1: buffered
+        // mode excludes in-flight clients from re-selection)
         assert!(
             buffered.total_sim_s < sync.total_sim_s,
             "buffered {} !< sync {}",

@@ -19,11 +19,13 @@
 //! | `fig7`   | transformer: structured / random / mixed frontier |
 //! | `sched`  | (beyond the paper) cohort-scheduler policy × fleet sweep |
 //! | `async`  | (beyond the paper) aggregation-mode × fleet sweep on the round engine |
+//! | `secagg` | (beyond the paper) secure-aggregation committee size × mode × fleet sweep |
 
 mod async_agg;
 mod emnist;
 mod logreg;
 mod scheduler;
+mod secagg;
 mod table1;
 mod transformer;
 
@@ -55,7 +57,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
-    "async",
+    "async", "secagg",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -73,6 +75,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "fig7" => transformer::fig7(opts)?,
         "sched" => scheduler::sweep(opts)?,
         "async" => async_agg::sweep(opts)?,
+        "secagg" => secagg::sweep(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

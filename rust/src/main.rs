@@ -15,10 +15,11 @@
 //!                       [--fetch-threads N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
+//!                       [--secure-committee]
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
-//!                            all|list
+//!                            secagg|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -31,7 +32,10 @@
 //! trains. `--dropout` / `--dropout-rate` are deprecated but accepted: the
 //! scalar is mapped onto a fleet-wide failure hazard. Giving
 //! `--over-select-frac` (or `--goal-count` / `--max-staleness`) without
-//! `--agg-mode` implies the matching mode.
+//! `--agg-mode` implies the matching mode. `--secure-committee` implies
+//! `--secure-agg` and re-keys the pairwise masks per close group, which is
+//! what lets secure aggregation run under `over-select` / `buffered`
+//! closes (whole-cohort masks still require `--agg-mode sync`).
 
 use fedselect::aggregation::AggMode;
 use fedselect::config::{EngineKind, TrainConfig};
@@ -225,7 +229,10 @@ fn cmd_train(a: &Args) -> Result<()> {
         .parse::<AggMode>()
         .map_err(Error::Config)?;
     cfg.agg_mode = parse_agg_mode(a)?;
-    cfg.secure_agg = a.flag("secure-agg");
+    cfg.secure_committee = a.flag("secure-committee");
+    // the committee flag names the protocol variant, so it implies the
+    // protocol itself
+    cfg.secure_agg = a.flag("secure-agg") || cfg.secure_committee;
     cfg.fleet = a
         .str_or("fleet", "uniform")
         .parse::<FleetKind>()
@@ -296,6 +303,12 @@ fn cmd_train(a: &Args) -> Result<()> {
                 last.discarded_clients,
                 last.mean_staleness,
                 tr.round_engine().in_flight()
+            );
+        }
+        if last.committees > 0 {
+            println!(
+                "secure committees (last round): {} keyed | mean size {:.1}",
+                last.committees, last.mean_committee_size
             );
         }
     }

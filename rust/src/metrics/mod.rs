@@ -218,6 +218,8 @@ mod tests {
             mode: crate::coordinator::AggregationMode::Synchronous,
             discarded_clients: 0,
             mean_staleness: 0.0,
+            committees: 0,
+            mean_committee_size: 0.0,
             comm: RoundComm::default(),
             up_bytes: 0,
             max_client_mem: 0,

@@ -238,22 +238,36 @@ impl Scheduler {
 
     /// Phase 0: choose the round's cohort, hazards, and key budgets.
     ///
-    /// `rng` is the round RNG; under [`SchedPolicy::Uniform`] exactly one
-    /// `sample_without_replacement(n, cohort)` is drawn from it — the same
-    /// draw the pre-scheduler coordinator made.
+    /// `rng` is the round RNG; under [`SchedPolicy::Uniform`] with an empty
+    /// `exclude` set exactly one `sample_without_replacement(n, cohort)` is
+    /// drawn from it — the same draw the pre-scheduler coordinator made.
+    ///
+    /// `exclude` lists train-client indices that may not be selected this
+    /// round: the round engine's in-flight set under buffered aggregation
+    /// (FedBuff caps per-client concurrency at one — a client whose update
+    /// has not landed is not re-selected). Outside buffered mode it is
+    /// empty and every policy keeps its legacy RNG consumption bit-exact.
     pub fn plan_round(
         &mut self,
         round: usize,
         cohort: usize,
         geom: &SliceGeometry,
         rng: &mut Rng,
+        exclude: &[usize],
     ) -> RoundPlan {
+        let mut excluded = vec![false; self.fleet.len()];
+        for &ci in exclude {
+            if ci < excluded.len() {
+                excluded[ci] = true;
+            }
+        }
         let ctx = PlanCtx {
             round,
             cohort,
             fleet: &self.fleet,
             last_selected: &self.last_selected,
             signals: &self.signals,
+            excluded: &excluded,
             geom,
         };
         let sel = self.policy.select(&ctx, rng);
@@ -413,7 +427,7 @@ mod tests {
         let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::Uniform), 40).unwrap();
         let mut rng = Rng::new(7, 1);
         let mut legacy = rng.clone();
-        let plan = s.plan_round(1, 10, &geom(), &mut rng);
+        let plan = s.plan_round(1, 10, &geom(), &mut rng, &[]);
         assert_eq!(plan.cohort, legacy.sample_without_replacement(40, 10));
         // nothing else was drawn: subsequent values coincide
         assert_eq!(rng.next_u64(), legacy.next_u64());
@@ -426,7 +440,7 @@ mod tests {
         let mut c = cfg(FleetKind::Uniform, SchedPolicy::Uniform);
         c.dropout_rate = 0.3;
         let mut s = Scheduler::new(&c, 20).unwrap();
-        let plan = s.plan_round(1, 5, &geom(), &mut Rng::new(1, 1));
+        let plan = s.plan_round(1, 5, &geom(), &mut Rng::new(1, 1), &[]);
         assert!(plan.hazards.iter().all(|&h| (h - 0.3).abs() < 1e-9));
     }
 
@@ -434,7 +448,7 @@ mod tests {
     fn complete_round_tallies_tiers_and_advances_the_clock() {
         let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60).unwrap();
         let mut rng = Rng::new(3, 2);
-        let plan = s.plan_round(1, 12, &geom(), &mut rng);
+        let plan = s.plan_round(1, 12, &geom(), &mut rng, &[]);
         let stats: Vec<ClientRoundStats> = (0..plan.cohort.len())
             .map(|i| ClientRoundStats {
                 down_bytes: 100_000,
@@ -456,7 +470,7 @@ mod tests {
         assert!(sim.straggler_tier.is_some());
         assert_eq!(sim.tier_down_bytes.iter().sum::<u64>(), 12 * 100_000);
         // a second round accumulates
-        let plan2 = s.plan_round(2, 12, &geom(), &mut rng);
+        let plan2 = s.plan_round(2, 12, &geom(), &mut rng, &[]);
         let sim2 = s.complete_round(&plan2, &stats);
         assert!(sim2.sim_total_s > sim.sim_total_s);
     }
@@ -465,7 +479,7 @@ mod tests {
     fn events_are_sorted_and_exclude_dropped_clients() {
         let mut s = Scheduler::new(&cfg(FleetKind::Tiered3, SchedPolicy::Uniform), 60).unwrap();
         let mut rng = Rng::new(9, 4);
-        let plan = s.plan_round(1, 10, &geom(), &mut rng);
+        let plan = s.plan_round(1, 10, &geom(), &mut rng, &[]);
         let stats: Vec<ClientRoundStats> = (0..plan.cohort.len())
             .map(|i| ClientRoundStats {
                 down_bytes: 200_000,
@@ -499,6 +513,30 @@ mod tests {
     }
 
     #[test]
+    fn plan_round_exclusion_set_is_honored_and_empty_set_is_bit_exact() {
+        let c = cfg(FleetKind::Uniform, SchedPolicy::Uniform);
+        // an in-flight exclusion set keeps those clients out of the cohort
+        let mut s = Scheduler::new(&c, 20).unwrap();
+        let exclude = [2usize, 5, 11, 19];
+        let plan = s.plan_round(1, 8, &geom(), &mut Rng::new(3, 1), &exclude);
+        assert_eq!(plan.cohort.len(), 8);
+        for &ci in &plan.cohort {
+            assert!(!exclude.contains(&ci), "excluded client {ci} selected");
+        }
+        // the empty exclusion set consumes exactly the legacy draw
+        let mut s2 = Scheduler::new(&c, 20).unwrap();
+        let mut rng = Rng::new(3, 1);
+        let mut legacy = rng.clone();
+        let plan2 = s2.plan_round(1, 8, &geom(), &mut rng, &[]);
+        assert_eq!(plan2.cohort, legacy.sample_without_replacement(20, 8));
+        assert_eq!(rng.next_u64(), legacy.next_u64());
+        // out-of-range exclusion entries are ignored, not a panic
+        let mut s3 = Scheduler::new(&c, 20).unwrap();
+        let plan3 = s3.plan_round(1, 8, &geom(), &mut Rng::new(3, 1), &[999]);
+        assert_eq!(plan3.cohort.len(), 8);
+    }
+
+    #[test]
     fn staleness_state_feeds_the_fair_policy() {
         let mut s = Scheduler::new(&cfg(FleetKind::Uniform, SchedPolicy::StalenessFair), 12)
             .unwrap();
@@ -506,7 +544,7 @@ mod tests {
         let g = geom();
         let mut seen = std::collections::HashSet::new();
         for round in 1..=3 {
-            let plan = s.plan_round(round, 4, &g, &mut rng);
+            let plan = s.plan_round(round, 4, &g, &mut rng, &[]);
             for &ci in &plan.cohort {
                 assert!(seen.insert(ci), "repeat before full pass");
             }

@@ -22,7 +22,30 @@ pub struct PlanCtx<'a> {
     /// Per train client: update norm from its last participation, or 0 if
     /// it never participated — the [`LossWeighted`] importance signal.
     pub signals: &'a [f32],
+    /// Per train client: `true` = may not be selected this round. The round
+    /// engine excludes clients with an update still in flight (FedBuff caps
+    /// per-client concurrency at one); all-`false` outside buffered mode,
+    /// and every policy must fall back to its exact legacy RNG consumption
+    /// in that case (the byte-identity contract).
+    pub excluded: &'a [bool],
     pub geom: &'a SliceGeometry,
+}
+
+impl PlanCtx<'_> {
+    /// The selectable client indices, or `None` when nobody is excluded (the
+    /// legacy full-population path — policies must keep its RNG consumption
+    /// bit-exact).
+    pub fn eligible(&self) -> Option<Vec<usize>> {
+        if self.excluded.iter().any(|&e| e) {
+            Some(
+                (0..self.fleet.len())
+                    .filter(|&i| !self.excluded[i])
+                    .collect(),
+            )
+        } else {
+            None
+        }
+    }
 }
 
 /// A policy's output: the cohort (train-client indices) and optional
@@ -45,6 +68,20 @@ fn uniform_cohort(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
     rng.sample_without_replacement(n, k.min(n))
 }
 
+/// Uniform draw over the eligible pool: the exact legacy
+/// `sample_without_replacement` when nobody is excluded (the byte-identity
+/// contract), an index-remapped draw over the eligible list otherwise.
+/// Shared by every policy whose cohort draw is uniform.
+fn uniform_eligible(ctx: &PlanCtx, rng: &mut Rng) -> Vec<usize> {
+    match ctx.eligible() {
+        None => uniform_cohort(ctx.fleet.len(), ctx.cohort, rng),
+        Some(el) => uniform_cohort(el.len(), ctx.cohort, rng)
+            .into_iter()
+            .map(|j| el[j])
+            .collect(),
+    }
+}
+
 /// §5.1 uniform sampling without replacement — the paper's baseline and the
 /// pre-scheduler coordinator's behavior, bit for bit.
 pub struct Uniform;
@@ -56,7 +93,7 @@ impl SelectionPolicy for Uniform {
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
         Selection {
-            cohort: uniform_cohort(ctx.fleet.len(), ctx.cohort, rng),
+            cohort: uniform_eligible(ctx, rng),
             key_budgets: None,
         }
     }
@@ -74,10 +111,10 @@ impl SelectionPolicy for AvailabilityAware {
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
         let avail: Vec<usize> = (0..ctx.fleet.len())
-            .filter(|&i| ctx.fleet.profiles[i].available(ctx.round))
+            .filter(|&i| ctx.fleet.profiles[i].available(ctx.round) && !ctx.excluded[i])
             .collect();
         let cohort = if avail.is_empty() {
-            uniform_cohort(ctx.fleet.len(), ctx.cohort, rng)
+            uniform_eligible(ctx, rng)
         } else {
             uniform_cohort(avail.len(), ctx.cohort, rng)
                 .into_iter()
@@ -129,7 +166,7 @@ impl SelectionPolicy for MemoryCapped {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
-        let cohort = uniform_cohort(ctx.fleet.len(), ctx.cohort, rng);
+        let cohort = uniform_eligible(ctx, rng);
         let budgets = cohort
             .iter()
             .map(|&ci| Self::budget_for(ctx.fleet.profiles[ci].mem_frac, ctx.geom))
@@ -153,11 +190,14 @@ impl SelectionPolicy for StalenessFair {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
-        let n = ctx.fleet.len();
-        let mut idx: Vec<usize> = (0..n).collect();
+        // with no exclusions this filter is the identity, so the shuffle
+        // consumes exactly the legacy draws
+        let mut idx: Vec<usize> = (0..ctx.fleet.len())
+            .filter(|&i| !ctx.excluded[i])
+            .collect();
         rng.shuffle(&mut idx);
         idx.sort_by_key(|&i| ctx.last_selected[i]);
-        idx.truncate(ctx.cohort.min(n));
+        idx.truncate(ctx.cohort.min(idx.len()));
         Selection {
             cohort: idx,
             key_budgets: None,
@@ -181,11 +221,18 @@ impl SelectionPolicy for LossWeighted {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
-        let n = ctx.fleet.len();
+        // the eligible pool is the whole population when nobody is excluded
+        // — the identity mapping, keeping legacy RNG consumption bit-exact
+        let pool: Vec<usize> = match ctx.eligible() {
+            None => (0..ctx.fleet.len()).collect(),
+            Some(el) => el,
+        };
+        let n = pool.len();
         let k = ctx.cohort.min(n);
-        let observed: Vec<f64> = (0..n)
-            .map(|i| {
-                let s = ctx.signals[i] as f64;
+        let observed: Vec<f64> = pool
+            .iter()
+            .map(|&ci| {
+                let s = ctx.signals[ci] as f64;
                 if s.is_finite() && s > 0.0 {
                     s
                 } else {
@@ -196,7 +243,7 @@ impl SelectionPolicy for LossWeighted {
         let n_pos = observed.iter().filter(|&&s| s > 0.0).count();
         if n_pos == 0 {
             return Selection {
-                cohort: uniform_cohort(n, k, rng),
+                cohort: uniform_cohort(n, k, rng).into_iter().map(|j| pool[j]).collect(),
                 key_budgets: None,
             };
         }
@@ -216,7 +263,7 @@ impl SelectionPolicy for LossWeighted {
                     .find(|&j| w[j] > 0.0)
                     .expect("k <= n leaves a live weight");
             }
-            cohort.push(i);
+            cohort.push(pool[i]);
             w[i] = 0.0;
         }
         Selection {
@@ -231,10 +278,14 @@ mod tests {
     use super::*;
     use crate::scheduler::FleetKind;
 
-    fn ctx_parts(kind: FleetKind, n: usize) -> (Fleet, Vec<i64>, Vec<f32>, SliceGeometry) {
+    fn ctx_parts(
+        kind: FleetKind,
+        n: usize,
+    ) -> (Fleet, Vec<i64>, Vec<f32>, Vec<bool>, SliceGeometry) {
         let fleet = Fleet::generate(kind, n, 7, 0.25).unwrap();
         let last = vec![-1i64; n];
         let signals = vec![0.0f32; n];
+        let excluded = vec![false; n];
         // full-budget slice == the whole keyed segment, so tier mem caps
         // below 1.0 genuinely clamp
         let geom = SliceGeometry {
@@ -243,18 +294,19 @@ mod tests {
             broadcast_floats: 50,
             server_floats: 2048 * 50 + 50,
         };
-        (fleet, last, signals, geom)
+        (fleet, last, signals, excluded, geom)
     }
 
     #[test]
     fn uniform_matches_the_raw_sampler_draw() {
-        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 30);
         let ctx = PlanCtx {
             round: 1,
             cohort: 8,
             fleet: &fleet,
             last_selected: &last,
             signals: &sigs,
+            excluded: &excl,
             geom: &geom,
         };
         let mut a = Rng::new(5, 1);
@@ -266,7 +318,7 @@ mod tests {
 
     #[test]
     fn availability_aware_only_picks_online_clients() {
-        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Diurnal, 40);
+        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Diurnal, 40);
         for round in [0usize, 6, 12, 18] {
             let ctx = PlanCtx {
                 round,
@@ -274,6 +326,7 @@ mod tests {
                 fleet: &fleet,
                 last_selected: &last,
                 signals: &sigs,
+                excluded: &excl,
                 geom: &geom,
             };
             let mut rng = Rng::new(3, 2);
@@ -290,13 +343,14 @@ mod tests {
 
     #[test]
     fn memory_capped_budgets_fit_the_device() {
-        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Tiered3, 60);
         let ctx = PlanCtx {
             round: 1,
             cohort: 20,
             fleet: &fleet,
             last_selected: &last,
             signals: &sigs,
+            excluded: &excl,
             geom: &geom,
         };
         let mut rng = Rng::new(9, 3);
@@ -330,13 +384,14 @@ mod tests {
 
     #[test]
     fn memory_capped_cohort_equals_uniform_cohort_at_same_seed() {
-        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Tiered3, 60);
         let ctx = PlanCtx {
             round: 1,
             cohort: 12,
             fleet: &fleet,
             last_selected: &last,
             signals: &sigs,
+            excluded: &excl,
             geom: &geom,
         };
         let mut a = Rng::new(4, 4);
@@ -349,7 +404,7 @@ mod tests {
 
     #[test]
     fn staleness_fair_visits_everyone_before_repeating() {
-        let (fleet, mut last, sigs, geom) = ctx_parts(FleetKind::Uniform, 24);
+        let (fleet, mut last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 24);
         let mut rng = Rng::new(1, 5);
         let mut seen = std::collections::HashSet::new();
         for round in 1..=4usize {
@@ -359,6 +414,7 @@ mod tests {
                 fleet: &fleet,
                 last_selected: &last,
                 signals: &sigs,
+                excluded: &excl,
                 geom: &geom,
             };
             let cohort = StalenessFair.select(&ctx, &mut rng).cohort;
@@ -373,13 +429,14 @@ mod tests {
 
     #[test]
     fn loss_weighted_without_history_is_exactly_uniform() {
-        let (fleet, last, sigs, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 30);
         let ctx = PlanCtx {
             round: 1,
             cohort: 8,
             fleet: &fleet,
             last_selected: &last,
             signals: &sigs,
+            excluded: &excl,
             geom: &geom,
         };
         let mut a = Rng::new(5, 1);
@@ -394,7 +451,7 @@ mod tests {
 
     #[test]
     fn loss_weighted_prefers_high_signal_clients() {
-        let (fleet, last, mut sigs, geom) = ctx_parts(FleetKind::Uniform, 20);
+        let (fleet, last, mut sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 20);
         for s in sigs.iter_mut() {
             *s = 1.0;
         }
@@ -406,6 +463,7 @@ mod tests {
             fleet: &fleet,
             last_selected: &last,
             signals: &sigs,
+            excluded: &excl,
             geom: &geom,
         };
         let mut rng = Rng::new(11, 6);
@@ -422,5 +480,58 @@ mod tests {
         // client 3 carries ~50/72 of the weight mass: near-certain pick
         assert!(hot > 280, "hot client picked {hot}/300");
         assert!(cold < hot / 2, "baseline client picked {cold} vs {hot}");
+    }
+
+    #[test]
+    fn every_policy_respects_the_exclusion_set() {
+        let (fleet, last, mut sigs, _, geom) = ctx_parts(FleetKind::Uniform, 16);
+        sigs[2] = 3.0; // give loss-weighted a live signal path too
+        let mut excl = vec![false; 16];
+        for i in [0usize, 3, 7, 11, 15] {
+            excl[i] = true;
+        }
+        let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(Uniform),
+            Box::new(AvailabilityAware),
+            Box::new(MemoryCapped),
+            Box::new(StalenessFair),
+            Box::new(LossWeighted),
+        ];
+        for p in &policies {
+            let ctx = PlanCtx {
+                round: 1,
+                cohort: 8,
+                fleet: &fleet,
+                last_selected: &last,
+                signals: &sigs,
+                excluded: &excl,
+                geom: &geom,
+            };
+            let mut rng = Rng::new(21, 9);
+            let sel = p.select(&ctx, &mut rng);
+            assert_eq!(sel.cohort.len(), 8, "{}", p.name());
+            for &ci in &sel.cohort {
+                assert!(!excl[ci], "{}: excluded client {ci} selected", p.name());
+            }
+            let distinct: std::collections::HashSet<_> = sel.cohort.iter().collect();
+            assert_eq!(distinct.len(), 8, "{}: duplicate selections", p.name());
+        }
+        // exclusion shrinking the pool below the cohort clamps, not panics
+        let all_but_two: Vec<bool> = (0..16).map(|i| i >= 2).collect();
+        let ctx = PlanCtx {
+            round: 1,
+            cohort: 8,
+            fleet: &fleet,
+            last_selected: &last,
+            signals: &sigs,
+            excluded: &all_but_two,
+            geom: &geom,
+        };
+        for p in &policies {
+            let mut rng = Rng::new(22, 9);
+            let sel = p.select(&ctx, &mut rng);
+            assert!(sel.cohort.len() <= 2, "{}", p.name());
+            assert!(sel.cohort.iter().all(|&ci| ci < 2), "{}", p.name());
+        }
     }
 }

@@ -16,7 +16,7 @@
 //! | `tiered-3`   | low/mid/high   | bandwidth + memory spread (MemoryCapped budgets) |
 //! | `diurnal`    | day/night      | availability windows (AvailabilityAware) |
 //! | `flaky-edge` | core/edge      | high per-round failure hazard on the edge |
-//! | `trace:PATH` | trace          | real measurements: one profile per line |
+//! | `trace:PATH` | lo/mid/hi (bandwidth terciles) | real measurements: one profile per line |
 //!
 //! `trace:PATH` loads a device trace file (see [`Fleet::from_trace`]): one
 //! profile per non-comment line, `down_bps up_bps flops mem_frac avail
@@ -272,8 +272,12 @@ impl Fleet {
     /// cycle in (0, 1]: 1 means always online, anything lower puts the
     /// device on a 24-round window (offset staggered by line index).
     /// Profiles are cycled when the population outnumbers the trace, so one
-    /// trace serves any dataset size; all trace devices report as one
-    /// `trace` tier.
+    /// trace serves any dataset size. Tiers are inferred from downlink
+    /// bandwidth terciles over the trace rows (`trace-lo` / `trace-mid` /
+    /// `trace-hi`): when only two terciles are populated the remaining
+    /// bands are *relabeled* `trace-lo`/`trace-hi` by relative order
+    /// (whichever terciles they were), and a flat trace reports one
+    /// `trace` tier — so per-tier reporting works on real measurements.
     pub fn from_trace(path: &str, n_clients: usize) -> Result<Fleet> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Config(format!("cannot read fleet trace {path:?}: {e}")))?;
@@ -335,6 +339,52 @@ impl Fleet {
                 "fleet trace {path:?} has no profile lines"
             )));
         }
+        // Infer tiers from downlink-bandwidth terciles over the trace rows
+        // (collapsing empty terciles), so `fleet_summary` and the per-tier
+        // ledgers stay informative on real measurements instead of lumping
+        // every device into one "trace" tier. A flat trace keeps one tier.
+        let mut bw: Vec<f64> = rows.iter().map(|p| p.down_bps).collect();
+        bw.sort_by(|a, b| a.partial_cmp(b).expect("bandwidths are finite"));
+        let n = bw.len();
+        // tercile upper bounds by exact integer math: the first ceil(n/3)
+        // sorted rows fall at or below q1, the first ceil(2n/3) at or below
+        // q2 (float division here would make the boundary depend on
+        // rounding direction for multiples of 3)
+        let (q1, q2) = (bw[n.div_ceil(3) - 1], bw[(2 * n).div_ceil(3) - 1]);
+        let raw_tier = |d: f64| {
+            if d <= q1 {
+                0usize
+            } else if d <= q2 {
+                1
+            } else {
+                2
+            }
+        };
+        let mut present = [false; 3];
+        for p in &rows {
+            present[raw_tier(p.down_bps)] = true;
+        }
+        let n_present = present.iter().filter(|&&b| b).count();
+        let tier_names: Vec<&'static str> = match n_present {
+            1 => vec!["trace"],
+            2 => vec!["trace-lo", "trace-hi"],
+            _ => vec!["trace-lo", "trace-mid", "trace-hi"],
+        };
+        let mut dense = [0usize; 3];
+        let mut next = 0usize;
+        for t in 0..3 {
+            if present[t] {
+                dense[t] = next;
+                next += 1;
+            }
+        }
+        for p in &mut rows {
+            p.tier = if n_present == 1 {
+                0
+            } else {
+                dense[raw_tier(p.down_bps)]
+            };
+        }
         let profiles = (0..n_clients)
             .map(|i| {
                 let mut p = rows[i % rows.len()].clone();
@@ -347,7 +397,7 @@ impl Fleet {
         Ok(Fleet {
             kind: FleetKind::Trace(path.to_string()),
             profiles,
-            tier_names: vec!["trace"],
+            tier_names,
         })
     }
 
@@ -487,13 +537,12 @@ mod tests {
         let path = "../examples/fleet_trace_32.txt";
         let fl = Fleet::from_trace(path, 50).unwrap();
         assert_eq!(fl.len(), 50);
-        assert_eq!(fl.num_tiers(), 1);
-        assert_eq!(fl.tier_name(0), "trace");
         // profiles cycle: client 32 repeats line 1's device
         assert_eq!(
             fl.profiles[0].down_bps.to_bits(),
             fl.profiles[32].down_bps.to_bits()
         );
+        assert_eq!(fl.profiles[0].tier, fl.profiles[32].tier);
         assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2), "edge hazards");
         assert!(fl.profiles.iter().any(|p| p.avail_period == 24));
         assert!(fl.profiles.iter().any(|p| p.avail_period == 0));
@@ -502,6 +551,67 @@ mod tests {
             Fleet::generate(FleetKind::Trace(path.to_string()), 50, 7, 0.25).unwrap();
         for (a, b) in fl.profiles.iter().zip(via_generate.profiles.iter()) {
             assert_eq!(a.down_bps.to_bits(), b.down_bps.to_bits());
+            assert_eq!(a.tier, b.tier);
+        }
+    }
+
+    #[test]
+    fn trace_fleet_infers_bandwidth_tercile_tiers() {
+        let path = "../examples/fleet_trace_32.txt";
+        let fl = Fleet::from_trace(path, 64).unwrap();
+        assert_eq!(fl.num_tiers(), 3, "the example trace spans 1.2–30 MB/s");
+        assert_eq!(fl.tier_name(0), "trace-lo");
+        assert_eq!(fl.tier_name(1), "trace-mid");
+        assert_eq!(fl.tier_name(2), "trace-hi");
+        let sizes = fl.tier_sizes();
+        assert!(sizes.iter().all(|&s| s > 0), "every tercile populated: {sizes:?}");
+        // tiers are ordered by bandwidth: every lo device is slower than
+        // every hi device, and the per-tier means are strictly increasing
+        let mean = |t: usize| {
+            let ps: Vec<_> = fl.profiles.iter().filter(|p| p.tier == t).collect();
+            ps.iter().map(|p| p.down_bps).sum::<f64>() / ps.len() as f64
+        };
+        assert!(mean(0) < mean(1) && mean(1) < mean(2));
+        let max_lo = fl
+            .profiles
+            .iter()
+            .filter(|p| p.tier == 0)
+            .map(|p| p.down_bps)
+            .fold(0.0f64, f64::max);
+        let min_hi = fl
+            .profiles
+            .iter()
+            .filter(|p| p.tier == 2)
+            .map(|p| p.down_bps)
+            .fold(f64::INFINITY, f64::min);
+        assert!(max_lo < min_hi, "{max_lo} !< {min_hi}");
+    }
+
+    #[test]
+    fn flat_and_two_level_traces_collapse_tiers() {
+        let dir = std::env::temp_dir();
+        // a flat trace (identical bandwidth) stays one "trace" tier
+        let flat = dir.join("fedselect_trace_flat.txt");
+        std::fs::write(&flat, "1e6 1e5 1e9 0.5 1.0 0.0\n".repeat(5)).unwrap();
+        let fl = Fleet::from_trace(flat.to_str().unwrap(), 10).unwrap();
+        assert_eq!(fl.num_tiers(), 1);
+        assert_eq!(fl.tier_name(0), "trace");
+        assert!(fl.profiles.iter().all(|p| p.tier == 0));
+        // two distinct bandwidth levels collapse to trace-lo / trace-hi
+        let two = dir.join("fedselect_trace_two_level.txt");
+        std::fs::write(
+            &two,
+            "1e6 1e5 1e9 0.5 1.0 0.0\n1e6 1e5 1e9 0.5 1.0 0.0\n2e7 5e6 1e10 1.0 1.0 0.0\n",
+        )
+        .unwrap();
+        let fl2 = Fleet::from_trace(two.to_str().unwrap(), 9).unwrap();
+        assert_eq!(fl2.num_tiers(), 2, "{:?}", fl2.tier_sizes());
+        assert_eq!(fl2.tier_name(0), "trace-lo");
+        assert_eq!(fl2.tier_name(1), "trace-hi");
+        let sizes = fl2.tier_sizes();
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+        for p in &fl2.profiles {
+            assert_eq!(p.tier, usize::from(p.down_bps > 1e6));
         }
     }
 

@@ -78,7 +78,7 @@ fn legacy_trajectory(cfg: &TrainConfig, threads: usize) -> (ParamStore, Vec<Lega
     let mut records = Vec::with_capacity(cfg.rounds);
     for round in 1..=cfg.rounds {
         let mut round_rng = rng.fork(round as u64);
-        let plan = scheduler.plan_round(round, cfg.cohort, &geom, &mut round_rng);
+        let plan = scheduler.plan_round(round, cfg.cohort, &geom, &mut round_rng, &[]);
         let cohort = plan.cohort.clone();
         let shared: Vec<Option<Vec<u32>>> = cfg
             .policies

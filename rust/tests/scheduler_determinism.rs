@@ -68,8 +68,8 @@ fn prop_same_seed_same_cohort_for_every_policy_and_fleet() {
                 for round in 1..=4usize {
                     let mut ra = rng_a.fork(round as u64);
                     let mut rb = rng_b.fork(round as u64);
-                    let pa = a.plan_round(round, 6, &g, &mut ra);
-                    let pb = b.plan_round(round, 6, &g, &mut rb);
+                    let pa = a.plan_round(round, 6, &g, &mut ra, &[]);
+                    let pb = b.plan_round(round, 6, &g, &mut rb, &[]);
                     assert_eq!(
                         pa.cohort, pb.cohort,
                         "case {case} {fleet} {policy} round {round}"

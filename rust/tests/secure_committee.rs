@@ -1,0 +1,167 @@
+//! Close-group secure-aggregation committees (the §4.2 privacy strategy
+//! composed with goal-count closes), end to end:
+//!
+//! 1. `secure_agg + buffered/over-select` passes `validate` with
+//!    `secure_committee` and trains to (near-)plain model quality — the
+//!    committee path only differs from plain aggregation by the fixed-point
+//!    quantization and the committee-grouped summation order;
+//! 2. over-selected stragglers are keyed into the committee and recovered
+//!    via mask reconstruction rather than poisoning the sum;
+//! 3. FedBuff-style concurrency control: a client with an update in flight
+//!    is never re-selected, so the in-flight pool never holds two updates
+//!    of one client (the planner-exclusion regression test).
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{AggregationMode, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::scheduler::FleetKind;
+
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(128, 32);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(24, 4, 8));
+    cfg.rounds = 4;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 256;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn committee_secagg_trains_under_buffered_closes_near_plain_quality() {
+    let mut plain = base_cfg(501);
+    plain.fleet = FleetKind::Tiered3;
+    plain.agg_mode = AggregationMode::Buffered {
+        goal_count: 4,
+        max_staleness: 3,
+    };
+    let mut secure = plain.clone();
+    secure.secure_agg = true;
+    secure.secure_committee = true;
+    secure.validate().expect("committees lift the sync-only restriction");
+
+    let rp = Trainer::new(plain).unwrap().run().unwrap();
+    let rs = Trainer::new(secure).unwrap().run().unwrap();
+    assert!(rs.final_eval.loss.is_finite());
+    // the masked uploads are full-model-sized, which shifts completion
+    // times and hence which updates land within the goal count — so the
+    // comparison is near-matching model quality (the async sweep's bar),
+    // not bit-identity
+    let gap = (rp.final_eval.metric - rs.final_eval.metric).abs();
+    assert!(
+        gap < 0.05,
+        "plain {} vs committee {}",
+        rp.final_eval.metric,
+        rs.final_eval.metric
+    );
+    // committee members upload full-model-sized masked update + count
+    // vectors (u64 group elements), dwarfing the plain sliced uploads
+    assert!(rs.total_up_bytes > rp.total_up_bytes);
+    // committees were actually keyed, at most one per staleness class
+    for rec in &rs.rounds {
+        if rec.completed > 0 {
+            assert!(rec.committees >= 1, "round {}: no committee keyed", rec.round);
+            assert!(rec.mean_committee_size >= 1.0);
+            assert!(
+                rec.committees <= rec.completed,
+                "more committees than merged updates"
+            );
+        }
+    }
+    // staleness carried across rounds still shows up under committees
+    assert!(
+        rs.rounds.iter().skip(1).any(|r| r.mean_staleness > 0.0),
+        "no stale merge ever happened"
+    );
+}
+
+#[test]
+fn committee_secagg_recovers_over_selected_stragglers() {
+    let mut cfg = base_cfg(733);
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.agg_mode = AggregationMode::OverSelect { extra_frac: 0.5 };
+    cfg.secure_agg = true;
+    cfg.secure_committee = true;
+    cfg.validate().unwrap();
+    let mut plain = base_cfg(733);
+    plain.fleet = FleetKind::Tiered3;
+    plain.agg_mode = AggregationMode::OverSelect { extra_frac: 0.5 };
+
+    let rs = Trainer::new(cfg).unwrap().run().unwrap();
+    let rp = Trainer::new(plain).unwrap().run().unwrap();
+    assert!(rs.total_discarded > 0, "no straggler was ever discarded");
+    // discarded stragglers were keyed into their close's committee: the mean
+    // keyed size exceeds the merged count in the rounds that discarded
+    let mut saw_reconstruction = false;
+    for rec in &rs.rounds {
+        if rec.completed == 0 {
+            continue;
+        }
+        assert_eq!(rec.committees, 1, "over-select keys one committee per close");
+        let keyed = (rec.completed + rec.discarded_clients) as f64;
+        assert!(
+            (rec.mean_committee_size - keyed).abs() < 1e-9,
+            "round {}: committee size {} != merged {} + discarded {}",
+            rec.round,
+            rec.mean_committee_size,
+            rec.completed,
+            rec.discarded_clients
+        );
+        if rec.discarded_clients > 0 {
+            saw_reconstruction = true;
+        }
+    }
+    assert!(saw_reconstruction, "reconstruction path never exercised");
+    // and the recovered sums train as well as plain over-selection (the
+    // close set can differ — masked uploads shift completion times)
+    let gap = (rp.final_eval.metric - rs.final_eval.metric).abs();
+    assert!(
+        gap < 0.05,
+        "plain {} vs committee {}",
+        rp.final_eval.metric,
+        rs.final_eval.metric
+    );
+}
+
+#[test]
+fn whole_cohort_secure_agg_still_requires_sync() {
+    let mut cfg = base_cfg(7);
+    cfg.secure_agg = true;
+    cfg.agg_mode = AggregationMode::Buffered {
+        goal_count: 0,
+        max_staleness: 4,
+    };
+    let err = cfg.validate().unwrap_err().to_string();
+    assert!(err.contains("--secure-committee"), "{err}");
+    cfg.secure_committee = true;
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn buffered_planner_never_reselects_an_in_flight_client() {
+    // tight population so re-selection would be near-certain without the
+    // exclusion set: 6 of 12 clients selected per round, goal 2, so up to 4
+    // updates stay in flight each round for up to 5 rounds
+    let mut cfg = base_cfg(909);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(12, 2, 4));
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.rounds = 6;
+    cfg.cohort = 6;
+    cfg.agg_mode = AggregationMode::Buffered {
+        goal_count: 2,
+        max_staleness: 5,
+    };
+    let mut tr = Trainer::new(cfg).unwrap();
+    let mut saw_in_flight = false;
+    for _ in 0..6 {
+        tr.run_round().unwrap();
+        let pool = tr.round_engine().in_flight();
+        let distinct = tr.round_engine().in_flight_clients().len();
+        assert_eq!(
+            pool, distinct,
+            "in-flight pool holds two updates of one client"
+        );
+        saw_in_flight |= pool > 0;
+    }
+    assert!(saw_in_flight, "config never left an update in flight");
+}
