@@ -52,7 +52,7 @@ fn main() -> Result<()> {
     let m = ms[0];
     let mut t2 = Table::new(
         "System implementations at fixed m (identical numerics)",
-        &["impl", "recall@5", "down_total", "up_keys", "psi_evals", "pregen", "cache_hits"],
+        &["impl", "recall@5", "down_total", "up_keys", "psi_evals", "pregen", "memo_hits"],
     );
     let mut finals = Vec::new();
     for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
             human_bytes(comm.up_key_bytes),
             comm.psi_evals.to_string(),
             comm.pregen_slices.to_string(),
-            comm.cache_hits.to_string(),
+            comm.memo_hits.to_string(),
         ]);
     }
     println!("{}", t2.to_pretty());

@@ -1,0 +1,105 @@
+//! Cross-round slice-cache bench: the repeated-selection workload of
+//! `experiment --id cache`, run cache-off (baseline) and cache-on per
+//! eviction policy. Emits `BENCH_slice_cache.json` (schema
+//! `fedselect-bench-v1`) with the hit rate and the *effective saved
+//! bandwidth* — wire MB the cache kept off the downlink per simulated
+//! second (`saved_mb_per_s`, deterministic, gated by `perf_diff`) — the
+//! repo's delta-fetch perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::cache::EvictPolicy;
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{build_dataset, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let (vocab, m) = (1024usize, 128usize);
+    let (rounds, cohort, n_clients) = if b.quick { (6, 8, 32) } else { (12, 12, 60) };
+    let ds_cfg = BowConfig::new(vocab, 50).with_clients(n_clients, 8, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let make = |cache: Option<EvictPolicy>| {
+        let mut cfg = TrainConfig::logreg_default(vocab, m);
+        cfg.dataset = DatasetConfig::Bow(ds_cfg.clone());
+        cfg.rounds = rounds;
+        cfg.cohort = cohort;
+        cfg.eval.every = 0;
+        cfg.eval.max_examples = 256;
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.sched_policy = SchedPolicy::StalenessFair;
+        cfg.dropout_rate = 0.3;
+        cfg.seed = 1000;
+        if let Some(evict) = cache {
+            cfg.cache = true;
+            cfg.cache_evict = evict;
+            cfg.cache_budget_frac = 0.5;
+        }
+        cfg
+    };
+
+    // cache-off baseline (identical trajectory at the same seed)
+    let mut base = Trainer::with_dataset(make(None), dataset.clone()).unwrap();
+    let mut base_down = 0u64;
+    for _ in 0..rounds {
+        base_down += base.run_round().unwrap().comm.down_bytes;
+    }
+    let base_sim = base.scheduler().sim_total_s();
+    println!(
+        "baseline: down={:.2}MB sim_total={base_sim:.1}s",
+        base_down as f64 / 1e6
+    );
+
+    for evict in EvictPolicy::ALL {
+        let name = format!("cache/{evict}");
+        let t0 = Instant::now();
+        let mut tr = Trainer::with_dataset(make(Some(evict)), dataset.clone()).unwrap();
+        let mut down = 0u64;
+        let mut hits = 0u64;
+        let mut lookups = 0u64;
+        let mut completed = 0usize;
+        for _ in 0..rounds {
+            let rec = tr.run_round().unwrap();
+            down += rec.comm.down_bytes;
+            hits += rec.comm.client_cache_hits;
+            lookups += rec.tier_cache_lookups.iter().sum::<u64>();
+            completed += rec.completed;
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let sim_total = tr.scheduler().sim_total_s();
+        let hit_rate = if lookups > 0 {
+            100.0 * hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        let saved_mb = (base_down.saturating_sub(down)) as f64 / 1e6;
+        // deterministic: wire MB kept off the downlink per simulated second
+        let saved_mb_per_s = saved_mb / sim_total.max(1e-9);
+        println!(
+            "{name}: hit_rate={hit_rate:.1}%  saved={saved_mb:.2}MB  \
+             ({saved_mb_per_s:.4} MB/sim-s)  sim_total={sim_total:.1}s  \
+             {:.1} clients/s",
+            completed as f64 / secs
+        );
+        b.metric(&name, "hit_rate_pct", hit_rate);
+        b.metric(&name, "saved_mb", saved_mb);
+        b.metric(&name, "saved_mb_per_s", saved_mb_per_s);
+        b.metric(&name, "sim_total_s", sim_total);
+        b.metric(&name, "clients_per_s", completed as f64 / secs);
+
+        // per-round wall-time distribution (delta planning + commits
+        // included) on a fresh trainer
+        let mut timed = Trainer::with_dataset(make(Some(evict)), dataset.clone()).unwrap();
+        b.run(&format!("round_wall/cache/{evict}"), 8, || {
+            let rec = timed.run_round().unwrap();
+            std::hint::black_box(rec.comm.client_cache_hits);
+        });
+    }
+
+    b.write_json("BENCH_slice_cache.json");
+}

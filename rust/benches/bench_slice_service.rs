@@ -58,12 +58,12 @@ fn main() {
             }
             let l = session.finish();
             println!(
-                "  {:>10?}: down={} up_keys={} psi={} cache_hits={} pregen={} cdn_q={} service_us={}",
+                "  {:>10?}: down={} up_keys={} psi={} memo_hits={} pregen={} cdn_q={} service_us={}",
                 imp,
                 human_bytes(l.down_bytes),
                 human_bytes(l.up_key_bytes),
                 l.psi_evals,
-                l.cache_hits,
+                l.memo_hits,
                 l.pregen_slices,
                 l.cdn_queries,
                 l.service_us

@@ -26,6 +26,71 @@ pub use secure::{fp_dequantize, fp_quantize, SecAggCommittee, SecureAggSim};
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};
 
+/// Which `(keyspace, key)` rows an aggregation pass actually wrote — the
+/// union of the merged updates' select keys. This is what the cross-round
+/// slice cache's [`VersionClock`](crate::cache::VersionClock) bumps on: a
+/// row outside this set was not written, so every client's cached copy of
+/// it stays valid. Sets are ordered (`BTreeSet`) so iteration — and hence
+/// version bumping — is deterministic.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TouchedKeys {
+    per_keyspace: Vec<std::collections::BTreeSet<u32>>,
+}
+
+impl TouchedKeys {
+    pub fn new(num_keyspaces: usize) -> Self {
+        TouchedKeys {
+            per_keyspace: vec![std::collections::BTreeSet::new(); num_keyspaces],
+        }
+    }
+
+    /// Record one client's select keys (grown on demand if the keyspace
+    /// count was not known up front).
+    pub fn record(&mut self, keys: &[Vec<u32>]) {
+        if self.per_keyspace.len() < keys.len() {
+            self.per_keyspace
+                .resize_with(keys.len(), std::collections::BTreeSet::new);
+        }
+        for (ks, kk) in keys.iter().enumerate() {
+            self.per_keyspace[ks].extend(kk.iter().copied());
+        }
+    }
+
+    /// Record a single touched key.
+    pub fn record_one(&mut self, keyspace: usize, key: u32) {
+        if self.per_keyspace.len() <= keyspace {
+            self.per_keyspace
+                .resize_with(keyspace + 1, std::collections::BTreeSet::new);
+        }
+        self.per_keyspace[keyspace].insert(key);
+    }
+
+    /// Touched keys per keyspace, in keyspace order (each set ascending).
+    pub fn keyspaces(&self) -> impl Iterator<Item = &std::collections::BTreeSet<u32>> {
+        self.per_keyspace.iter()
+    }
+
+    /// Distinct touched keys in one keyspace.
+    pub fn count_in(&self, keyspace: usize) -> usize {
+        self.per_keyspace.get(keyspace).map_or(0, |s| s.len())
+    }
+
+    /// Distinct touched keys across all keyspaces.
+    pub fn count(&self) -> usize {
+        self.per_keyspace.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn contains(&self, keyspace: usize, key: u32) -> bool {
+        self.per_keyspace
+            .get(keyspace)
+            .is_some_and(|s| s.contains(&key))
+    }
+}
+
 /// Averaging semantics for `AGGREGATE*`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggMode {
@@ -82,6 +147,7 @@ pub struct SparseAccumulator {
     acc: ParamStore,
     counts: ParamStore,
     clients: usize,
+    touched: TouchedKeys,
     /// bytes a client uploads: sliced update + its keys
     pub up_bytes: u64,
 }
@@ -92,6 +158,7 @@ impl SparseAccumulator {
             acc: store.zeros_like(),
             counts: store.zeros_like(),
             clients: 0,
+            touched: TouchedKeys::default(),
             up_bytes: 0,
         }
     }
@@ -99,6 +166,12 @@ impl SparseAccumulator {
     /// Direct access for tests / secure-agg comparison.
     pub fn raw(&self) -> (&ParamStore, &ParamStore) {
         (&self.acc, &self.counts)
+    }
+
+    /// The rows written so far (union of absorbed clients' keys) — what the
+    /// slice cache's version clock bumps after the close.
+    pub fn touched(&self) -> &TouchedKeys {
+        &self.touched
     }
 }
 
@@ -111,6 +184,7 @@ impl Aggregator for SparseAccumulator {
     ) -> Result<()> {
         spec.deselect_add(&mut self.acc, &mut self.counts, keys, updates)?;
         self.clients += 1;
+        self.touched.record(keys);
         self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
             + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
         Ok(())
@@ -134,6 +208,7 @@ impl Aggregator for SparseAccumulator {
             .collect();
         spec.deselect_add(&mut self.acc, &mut self.counts, keys, &scaled)?;
         self.clients += 1;
+        self.touched.record(keys);
         // the client uploaded the unscaled update; the discount is server-side
         self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
             + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
@@ -220,6 +295,7 @@ mod tests {
             acc: acc.clone(),
             counts: counts.clone(),
             clients: 2,
+            touched: TouchedKeys::default(),
             up_bytes: 0,
         })
         .finalize(AggMode::CohortMean);
@@ -230,6 +306,7 @@ mod tests {
             acc: acc.clone(),
             counts: counts.clone(),
             clients: 2,
+            touched: TouchedKeys::default(),
             up_bytes: 0,
         })
         .finalize(AggMode::PerCoordMean);
@@ -267,6 +344,28 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn touched_keys_report_the_union_of_absorbed_clients() {
+        let (store, spec) = setup();
+        let mut agg = Box::new(SparseAccumulator::new(&store));
+        assert!(agg.touched().is_empty());
+        agg.add_client(&spec, &[vec![0, 3]], &[vec![1.0; 100], vec![1.0; 50]])
+            .unwrap();
+        agg.add_client_weighted(&spec, &[vec![3, 5]], &[vec![1.0; 100], vec![1.0; 50]], 0.5)
+            .unwrap();
+        let t = agg.touched();
+        assert_eq!(t.count(), 3);
+        assert_eq!(t.count_in(0), 3);
+        for k in [0u32, 3, 5] {
+            assert!(t.contains(0, k));
+        }
+        assert!(!t.contains(0, 1), "unselected rows are untouched");
+        assert!(!t.contains(7, 0), "unknown keyspace is empty");
+        // deterministic ascending iteration per keyspace
+        let seen: Vec<u32> = t.keyspaces().next().unwrap().iter().copied().collect();
+        assert_eq!(seen, vec![0, 3, 5]);
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! Budgeted on-device piece caches, one per simulated client.
+//!
+//! A [`ClientCache`] holds `(keyspace, key) -> (version, bytes)` metadata
+//! for the pieces the client downloaded (see the module docs of
+//! [`super`] for why metadata suffices for a byte-exact simulation), under
+//! a per-client byte budget derived from the device's memory tier.
+//! [`FleetCaches`] owns one cache per train client and exposes the two
+//! trainer entry points: [`FleetCaches::plan_for`] (pre-fetch, read-only:
+//! which pieces are fresh) and [`FleetCaches::commit`] (post-fetch:
+//! record hits and downloads, evict past the budget).
+//!
+//! Everything is deterministic: lookups consume no randomness, commits run
+//! in cohort order, and eviction picks its victim by a total order —
+//! policy score first, then the entry id — so two runs at the same seed
+//! evict identically (test-enforced in `tests/slice_cache.rs`).
+
+use std::collections::HashMap;
+
+use crate::fedselect::DeltaPlan;
+
+use super::{CacheGeometry, EvictPolicy, VersionClock, BROADCAST_SPACE};
+
+/// Cache-entry address: `(keyspace, key)` for keyed pieces,
+/// `(BROADCAST_SPACE, segment-index)` for segment-granularity entries.
+pub type PieceId = (usize, u32);
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Server version of the piece when it was downloaded.
+    version: u64,
+    /// Round the piece was downloaded (refresh resets it; hits do not).
+    fetched_round: u64,
+    /// Round of the last hit or download (LRU score).
+    last_used_round: u64,
+    /// Hits plus downloads of this entry (LFU score).
+    uses: u64,
+    bytes: u64,
+}
+
+/// What one client's cache did at a round commit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommitStats {
+    /// Cacheable piece lookups this round (hits + misses).
+    pub lookups: u64,
+    /// Lookups served from the cache (fresh version, within the stale
+    /// bound) — these paid no downlink bytes.
+    pub hits: u64,
+    /// Bytes those hits would have cost on the wire.
+    pub hit_bytes: u64,
+    /// Entries evicted to fit this round's downloads under the budget.
+    pub evictions: u64,
+    /// Version-fresh entries refetched only because their age exceeded
+    /// `max_stale_rounds`.
+    pub stale_refreshes: u64,
+}
+
+impl CommitStats {
+    pub fn accumulate(&mut self, other: &CommitStats) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.hit_bytes += other.hit_bytes;
+        self.evictions += other.evictions;
+        self.stale_refreshes += other.stale_refreshes;
+    }
+}
+
+/// One simulated client's piece cache.
+#[derive(Clone, Debug)]
+pub struct ClientCache {
+    budget: u64,
+    used: u64,
+    entries: HashMap<PieceId, Entry>,
+}
+
+/// How a lookup classified an entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Lookup {
+    /// Version matches and the metadata is young enough: serve locally.
+    Fresh,
+    /// Version matches but the entry is older than `max_stale_rounds`:
+    /// forced refresh.
+    AgedOut,
+    /// Absent, or the server has written the row since it was fetched.
+    Miss,
+}
+
+impl ClientCache {
+    pub fn new(budget: u64) -> Self {
+        ClientCache {
+            budget,
+            used: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: PieceId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    fn classify(
+        &self,
+        id: PieceId,
+        round: u64,
+        max_stale_rounds: usize,
+        versions: &VersionClock,
+    ) -> Lookup {
+        let Some(e) = self.entries.get(&id) else {
+            return Lookup::Miss;
+        };
+        if e.version != versions.version_of(id.0, id.1) {
+            return Lookup::Miss;
+        }
+        // age is measured from the download, not the last hit: the knob
+        // bounds how long version *metadata* is trusted, and a hit renews
+        // nothing the server said
+        if max_stale_rounds > 0 && round.saturating_sub(e.fetched_round) > max_stale_rounds as u64
+        {
+            return Lookup::AgedOut;
+        }
+        Lookup::Fresh
+    }
+
+    /// Evict one entry by `policy`; returns false when the cache is empty.
+    /// The victim is the minimum of a total order (policy score, then entry
+    /// id), so eviction is deterministic regardless of hash-map iteration
+    /// order.
+    fn evict_one(&mut self, policy: EvictPolicy, versions: &VersionClock) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .map(|(&id, e)| {
+                let score = match policy {
+                    EvictPolicy::Lru => (e.last_used_round, e.uses),
+                    EvictPolicy::Lfu => (e.uses, e.last_used_round),
+                    EvictPolicy::VersionDistance => {
+                        // most-lagging first: lagging entries are dead weight
+                        // (they will miss on their next lookup anyway)
+                        let dist = versions.version_of(id.0, id.1).saturating_sub(e.version);
+                        (u64::MAX - dist, e.last_used_round)
+                    }
+                };
+                (score, id)
+            })
+            .min();
+        match victim {
+            Some((_, id)) => {
+                let e = self.entries.remove(&id).expect("victim exists");
+                self.used -= e.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn touch(&mut self, id: PieceId, round: u64) {
+        let e = self.entries.get_mut(&id).expect("hit entry exists");
+        e.last_used_round = round;
+        e.uses += 1;
+    }
+
+    /// Record a download: insert or refresh the entry at the current server
+    /// version, evicting per `policy` until it fits. An entry bigger than
+    /// the whole budget is not cached at all. Returns evictions performed.
+    fn insert(
+        &mut self,
+        id: PieceId,
+        bytes: u64,
+        round: u64,
+        policy: EvictPolicy,
+        versions: &VersionClock,
+    ) -> u64 {
+        let version = versions.version_of(id.0, id.1);
+        if let Some(e) = self.entries.get_mut(&id) {
+            // refresh in place (piece sizes are fixed per id): the row's
+            // popularity survives the refresh
+            e.version = version;
+            e.fetched_round = round;
+            e.last_used_round = round;
+            e.uses += 1;
+            return 0;
+        }
+        if bytes > self.budget {
+            return 0;
+        }
+        let mut evictions = 0u64;
+        while self.used + bytes > self.budget {
+            if !self.evict_one(policy, versions) {
+                break;
+            }
+            evictions += 1;
+        }
+        self.used += bytes;
+        self.entries.insert(
+            id,
+            Entry {
+                version,
+                fetched_round: round,
+                last_used_round: round,
+                uses: 1,
+                bytes,
+            },
+        );
+        evictions
+    }
+}
+
+/// One [`ClientCache`] per train client, plus the shared policy knobs —
+/// owned by the scheduler's fleet state (the cache is device state, like
+/// the profile it is budgeted from).
+#[derive(Clone, Debug)]
+pub struct FleetCaches {
+    policy: EvictPolicy,
+    max_stale_rounds: usize,
+    caches: Vec<ClientCache>,
+}
+
+/// Enumerate the cache entries one client round touches, in deterministic
+/// order: segment entries first (ascending segment id), then keyed pieces
+/// in the client's key order.
+fn entries_for<'a>(
+    geom: &'a CacheGeometry,
+    keys: &'a [Vec<u32>],
+) -> impl Iterator<Item = (PieceId, u64)> + 'a {
+    let segs = geom
+        .cached_segs
+        .iter()
+        .map(|&s| ((BROADCAST_SPACE, s as u32), geom.seg_bytes[s]));
+    let keyed = keys
+        .iter()
+        .enumerate()
+        .filter(|_| geom.keyed)
+        .flat_map(|(ks, kk)| kk.iter().map(move |&k| ((ks, k), geom.piece_bytes[ks])));
+    segs.chain(keyed)
+}
+
+impl FleetCaches {
+    /// One cache per train client; `budgets` come from the device profiles
+    /// (`mem_frac × server bytes × cache_budget_frac`).
+    pub fn new(policy: EvictPolicy, max_stale_rounds: usize, budgets: Vec<u64>) -> Self {
+        FleetCaches {
+            policy,
+            max_stale_rounds,
+            caches: budgets.into_iter().map(ClientCache::new).collect(),
+        }
+    }
+
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
+    pub fn max_stale_rounds(&self) -> usize {
+        self.max_stale_rounds
+    }
+
+    pub fn cache(&self, client: usize) -> &ClientCache {
+        &self.caches[client]
+    }
+
+    /// Pre-fetch: which of this client's pieces are fresh — the session
+    /// serves those locally. Read-only; the same classification is re-run
+    /// (on the unchanged cache) by [`FleetCaches::commit`].
+    pub fn plan_for(
+        &self,
+        client: usize,
+        round: u64,
+        keys: &[Vec<u32>],
+        geom: &CacheGeometry,
+        versions: &VersionClock,
+    ) -> DeltaPlan {
+        let cache = &self.caches[client];
+        let mut plan = DeltaPlan::default();
+        for (id, _) in entries_for(geom, keys) {
+            if cache.classify(id, round, self.max_stale_rounds, versions) == Lookup::Fresh {
+                if id.0 == BROADCAST_SPACE {
+                    plan.fresh_segs.insert(id.1 as usize);
+                } else {
+                    plan.fresh_keys.insert(id);
+                }
+            }
+        }
+        plan
+    }
+
+    /// Post-fetch: record this client's round against its cache — touch the
+    /// hits, insert/refresh the downloads (evicting per policy), and tally
+    /// the round's [`CommitStats`]. Must be called with the same
+    /// `keys`/`geom`/`versions` the plan was built from, before any
+    /// version bump for this round.
+    ///
+    /// Three ordered passes, not one interleaved loop: every entry is
+    /// classified against the *pre-round* cache state first (the exact view
+    /// [`FleetCaches::plan_for`] — and hence the session ledger — used; an
+    /// interleaved insert could evict a plan-fresh entry before its own
+    /// lookup and silently undercount hits), then hits are touched (so this
+    /// round's own hits are maximally recent before any eviction runs),
+    /// then downloads insert. An insert may still evict an already-served
+    /// hit — that is consistent: the bytes were saved this round, the entry
+    /// is simply gone next round.
+    pub fn commit(
+        &mut self,
+        client: usize,
+        round: u64,
+        keys: &[Vec<u32>],
+        geom: &CacheGeometry,
+        versions: &VersionClock,
+    ) -> CommitStats {
+        let policy = self.policy;
+        let max_stale = self.max_stale_rounds;
+        let cache = &mut self.caches[client];
+        let mut st = CommitStats::default();
+        let classified: Vec<(PieceId, u64, Lookup)> = entries_for(geom, keys)
+            .map(|(id, bytes)| (id, bytes, cache.classify(id, round, max_stale, versions)))
+            .collect();
+        st.lookups = classified.len() as u64;
+        for &(id, bytes, lk) in &classified {
+            if lk == Lookup::Fresh {
+                st.hits += 1;
+                st.hit_bytes += bytes;
+                cache.touch(id, round);
+            }
+        }
+        for &(id, bytes, lk) in &classified {
+            match lk {
+                Lookup::Fresh => {}
+                Lookup::AgedOut => {
+                    st.stale_refreshes += 1;
+                    st.evictions += cache.insert(id, bytes, round, policy, versions);
+                }
+                Lookup::Miss => {
+                    st.evictions += cache.insert(id, bytes, round, policy, versions);
+                }
+            }
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::TouchedKeys;
+    use crate::model::ModelArch;
+
+    fn geom() -> CacheGeometry {
+        // logreg(8)-shaped: keyed weight rows of 200 B, one Full bias seg
+        CacheGeometry {
+            piece_bytes: vec![200],
+            seg_bytes: vec![1600, 200],
+            cached_segs: vec![1],
+            keyed: true,
+        }
+    }
+
+    fn clock() -> VersionClock {
+        VersionClock::new(&[8], 2)
+    }
+
+    #[test]
+    fn fresh_entries_hit_and_save_their_bytes() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![10_000]);
+        let g = geom();
+        let vc = clock();
+        let keys = vec![vec![1u32, 2, 3]];
+        // round 1: cold — everything downloads
+        let p1 = fc.plan_for(0, 1, &keys, &g, &vc);
+        assert!(p1.is_empty());
+        let s1 = fc.commit(0, 1, &keys, &g, &vc);
+        assert_eq!((s1.lookups, s1.hits), (4, 0)); // bias seg + 3 keys
+        // round 2, nothing written: everything fresh
+        let p2 = fc.plan_for(0, 2, &keys, &g, &vc);
+        assert_eq!(p2.fresh_keys.len(), 3);
+        assert!(p2.fresh_segs.contains(&1));
+        let s2 = fc.commit(0, 2, &keys, &g, &vc);
+        assert_eq!((s2.hits, s2.hit_bytes), (4, 200 + 3 * 200));
+        assert_eq!(s2.evictions, 0);
+    }
+
+    #[test]
+    fn a_version_bump_invalidates_exactly_the_written_rows() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![10_000]);
+        let g = geom();
+        let mut vc = clock();
+        let keys = vec![vec![1u32, 2, 3]];
+        fc.commit(0, 1, &keys, &g, &vc);
+        // round 1's close writes key 2 (and hence both segments)
+        let spec = ModelArch::logreg(8).select_spec();
+        let mut touched = TouchedKeys::new(1);
+        touched.record(&[vec![2]]);
+        vc.bump(1, &touched, &spec);
+        let p = fc.plan_for(0, 2, &keys, &g, &vc);
+        assert!(p.fresh_keys.contains(&(0, 1)) && p.fresh_keys.contains(&(0, 3)));
+        assert!(!p.fresh_keys.contains(&(0, 2)), "written row must miss");
+        assert!(!p.fresh_segs.contains(&1), "Full segment was written");
+    }
+
+    #[test]
+    fn max_stale_rounds_forces_refresh_exactly_at_the_boundary() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 2, vec![10_000]);
+        let g = geom();
+        let vc = clock();
+        let keys = vec![vec![5u32]];
+        fc.commit(0, 1, &keys, &g, &vc);
+        // ages 1 and 2 are trusted; hits do not renew the download age
+        for round in [2u64, 3] {
+            let s = fc.commit(0, round, &keys, &g, &vc);
+            assert_eq!(s.hits, 2, "round {round}");
+            assert_eq!(s.stale_refreshes, 0, "round {round}");
+        }
+        // age 3 > max_stale_rounds=2: forced refresh despite a fresh version
+        let s4 = fc.commit(0, 4, &keys, &g, &vc);
+        assert_eq!(s4.hits, 0);
+        assert_eq!(s4.stale_refreshes, 2);
+        // the refresh reset the download age: trusted again next round
+        let s5 = fc.commit(0, 5, &keys, &g, &vc);
+        assert_eq!(s5.hits, 2);
+    }
+
+    #[test]
+    fn eviction_respects_the_budget_and_the_policy_order() {
+        // budget fits the bias segment plus two keyed pieces
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![600]);
+        let g = geom();
+        let vc = clock();
+        fc.commit(0, 1, &[vec![1u32, 2]], &g, &vc);
+        assert_eq!(fc.cache(0).len(), 3);
+        assert_eq!(fc.cache(0).used_bytes(), 600);
+        // key 1 is re-used in round 2; key 3 arrives and must evict key 2
+        // (LRU: last used round 1; the seg + key 1 were used in round 2)
+        let s = fc.commit(0, 2, &[vec![1u32, 3]], &g, &vc);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(fc.cache(0).contains((0, 1)));
+        assert!(fc.cache(0).contains((0, 3)));
+        assert!(!fc.cache(0).contains((0, 2)));
+        assert!(fc.cache(0).used_bytes() <= 600);
+    }
+
+    #[test]
+    fn commit_classifies_against_the_pre_round_state() {
+        // regression: an insert early in the commit walk must not evict a
+        // plan-fresh entry before its own lookup — the session already
+        // served it as a zero-byte hit, and plan/commit hit agreement is
+        // load-bearing (the trainer debug-asserts it)
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![400]);
+        let g = geom();
+        let vc = clock();
+        fc.commit(0, 1, &[vec![1u32]], &g, &vc);
+        // round 2: the new key 9 precedes the cached-fresh key 1 in the
+        // client's key order, and inserting it must evict *something*
+        let keys = vec![vec![9u32, 1]];
+        let plan = fc.plan_for(0, 2, &keys, &g, &vc);
+        assert!(plan.fresh_keys.contains(&(0, 1)));
+        let st = fc.commit(0, 2, &keys, &g, &vc);
+        assert_eq!(st.lookups, 3);
+        assert_eq!(
+            st.hits,
+            (plan.fresh_keys.len() + plan.fresh_segs.len()) as u64,
+            "commit must agree with the plan the session ledgered"
+        );
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.evictions, 1, "key 9 still had to make room");
+    }
+
+    #[test]
+    fn an_entry_bigger_than_the_budget_is_not_cached() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lfu, 0, vec![100]);
+        let g = geom();
+        let vc = clock();
+        let s = fc.commit(0, 1, &[vec![1u32]], &g, &vc);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(fc.cache(0).len(), 0, "200 B pieces cannot fit a 100 B budget");
+    }
+
+    #[test]
+    fn version_distance_evicts_the_most_lagging_entry() {
+        let mut fc = FleetCaches::new(EvictPolicy::VersionDistance, 0, vec![600]);
+        let g = geom();
+        let mut vc = clock();
+        fc.commit(0, 1, &[vec![1u32, 2]], &g, &vc);
+        // key 2 lags once the server writes it
+        let spec = ModelArch::logreg(8).select_spec();
+        let mut touched = TouchedKeys::new(1);
+        touched.record(&[vec![2]]);
+        vc.bump(1, &touched, &spec);
+        // key 3 arrives; the victim must be the lagging key 2, not key 1
+        fc.commit(0, 2, &[vec![3u32]], &g, &vc);
+        assert!(fc.cache(0).contains((0, 1)));
+        assert!(!fc.cache(0).contains((0, 2)));
+    }
+}

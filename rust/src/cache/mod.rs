@@ -1,0 +1,163 @@
+//! Cross-round client slice cache: versioned server pieces, per-client
+//! delta fetch plans, and budgeted on-device cache policies.
+//!
+//! FedSelect's headline claim is communication efficiency, yet a client
+//! that re-selects the same keys next round (the common case for
+//! token-keyed and tier-stable selection) re-downloads every piece even
+//! when the server never touched those rows. The paper's practicality
+//! discussion (§3–4) anticipates clients caching slices across rounds and
+//! fetching only what changed; this subsystem supplies the three parts:
+//!
+//! * [`VersionClock`] — server-side per-`(keyspace, key)` version counters
+//!   (plus a segment-level counter for broadcast segments), bumped only for
+//!   rows the aggregator actually wrote at a close. A round that never
+//!   touches a row never invalidates it.
+//! * [`ClientCache`] / [`FleetCaches`] — one budgeted cache per simulated
+//!   client (owned by the scheduler's fleet state), holding
+//!   `(keyspace, key) -> (version, bytes)` entries under a per-tier byte
+//!   budget derived from the client's
+//!   [`DeviceProfile`](crate::scheduler::DeviceProfile) memory, with
+//!   pluggable eviction ([`EvictPolicy`]) and a `max_stale_rounds` bound on
+//!   cached-metadata age.
+//! * [`DeltaPlan`](crate::fedselect::DeltaPlan) consumption — before phase
+//!   2 the trainer asks [`FleetCaches::plan_for`] which of a client's
+//!   pieces are *fresh* (cached at the current server version); the round
+//!   session serves those locally (ledgered as client-cache hits, no
+//!   downlink bytes) and downloads the rest. After the fetch,
+//!   [`FleetCaches::commit`] records the downloads and hits.
+//!
+//! **Fidelity.** The cache stores piece *metadata* (version + byte size),
+//! not the float payload: a fresh entry proves the server has not written
+//! those rows since the client fetched them, so the bytes the client holds
+//! ARE the server's bytes and serving "from cache" is byte-identical to
+//! re-downloading — which is why the simulator can serve the bundle from
+//! the store while charging zero wire bytes. This requires two soundness
+//! conditions, enforced by [`crate::config::TrainConfig::validate`]:
+//! untouched coordinates must be a fixed point of the server optimizer
+//! (true for FedAvg-without-momentum and FedAdagrad; false for
+//! Adam/Yogi/momentum, whose state moves rows with zero update), and the
+//! aggregate must be *exactly* zero on untouched rows (true for plain and
+//! committee-keyed secure aggregation; false for whole-cohort float masks,
+//! whose rounding residue lands everywhere).
+//!
+//! **Accounting.** Only downlink payload bytes are saved. Revalidation is
+//! charged at full cost: keys still go up (`up_key_bytes` unchanged — the
+//! server must see the key+version list to answer "fresh"), and the
+//! per-key server work (`psi_evals` / memo hits / `cdn_queries` /
+//! `service_us`) is charged as if the piece were served, modeling a
+//! not-modified response on the same code path. So between `--cache` on
+//! and off, only `down_bytes`, the client-cache hit counters, and the
+//! simulated clock (which consumes post-cache down bytes) differ — the
+//! model trajectory and every other ledger field are byte-identical under
+//! the synchronous barrier, test-enforced in `tests/slice_cache.rs`.
+//!
+//! **Stale reads.** A fresh cache entry is never stale data — version
+//! equality is exact. `max_stale_rounds` bounds something different: how
+//! long the client may *trust its cached version metadata* before forcing
+//! a refresh (age is measured from the fetch round, not the last hit).
+//! This is deliberately the same shape as the buffered round engine's
+//! `max_staleness`: both bound the age of client-held state, but buffered
+//! staleness discounts *updates computed on old models* (weight
+//! `1/sqrt(1+staleness)`), while cache staleness only forces a refetch of
+//! provably-identical bytes — it never changes the trajectory, only the
+//! byte ledger.
+
+pub mod client;
+pub mod version;
+
+pub use client::{ClientCache, CommitStats, FleetCaches};
+pub use version::VersionClock;
+
+/// Pseudo-keyspace id addressing segment-granularity cache entries:
+/// `(BROADCAST_SPACE, segment-index)` is a whole model segment, cached by
+/// Option 1 (full-model broadcast) for every segment and by Options 2/3
+/// for the broadcast-in-full (`Binding::Full`) segments.
+pub const BROADCAST_SPACE: usize = usize::MAX;
+
+/// How a [`ClientCache`] chooses a victim when inserting past its byte
+/// budget (config-level knob; CLI `--cache-evict`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-used entry (oldest `last_used_round`).
+    #[default]
+    Lru,
+    /// Evict the least-frequently-used entry (fewest hits).
+    Lfu,
+    /// Evict the entry whose version lags the server's furthest (most
+    /// likely to be stale and refetched anyway).
+    VersionDistance,
+}
+
+impl EvictPolicy {
+    pub const ALL: [EvictPolicy; 3] =
+        [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::VersionDistance];
+}
+
+/// Canonical CLI names; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for EvictPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Lfu => "lfu",
+            EvictPolicy::VersionDistance => "version-distance",
+        })
+    }
+}
+
+impl std::str::FromStr for EvictPolicy {
+    type Err = String;
+    /// Case-insensitive; accepts the canonical `Display` names plus
+    /// underscore/short aliases.
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Ok(EvictPolicy::Lru),
+            "lfu" => Ok(EvictPolicy::Lfu),
+            "version-distance" | "version_distance" | "vdist" => Ok(EvictPolicy::VersionDistance),
+            other => Err(format!(
+                "unknown eviction policy {other:?} (want {}, {} or {})",
+                EvictPolicy::Lru,
+                EvictPolicy::Lfu,
+                EvictPolicy::VersionDistance
+            )),
+        }
+    }
+}
+
+/// Which cache entries one client's round touches, and how big each is —
+/// derived once per run by the trainer from the model's `SelectSpec`, the
+/// store layout, and the slice implementation.
+#[derive(Clone, Debug)]
+pub struct CacheGeometry {
+    /// Bytes of one keyed piece, per keyspace.
+    pub piece_bytes: Vec<u64>,
+    /// Bytes of each model segment (indexed by segment id).
+    pub seg_bytes: Vec<u64>,
+    /// Segments cached at segment granularity: every segment under Option 1
+    /// (the client downloads the whole model), the `Binding::Full` segments
+    /// under Options 2/3 (keyed segments travel as per-key pieces there).
+    pub cached_segs: Vec<usize>,
+    /// Whether keyed pieces are cached per `(keyspace, key)` (false under
+    /// Option 1, where keys never leave the device and the wire unit is the
+    /// whole segment).
+    pub keyed: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evict_policy_display_round_trips_case_insensitively() {
+        for p in EvictPolicy::ALL {
+            let shown = p.to_string();
+            assert_eq!(shown.parse::<EvictPolicy>().unwrap(), p);
+            assert_eq!(shown.to_uppercase().parse::<EvictPolicy>().unwrap(), p);
+        }
+        assert_eq!(
+            "vdist".parse::<EvictPolicy>().unwrap(),
+            EvictPolicy::VersionDistance
+        );
+        let err = "bogus".parse::<EvictPolicy>().unwrap_err();
+        assert!(err.contains("lru") && err.contains("version-distance"), "{err}");
+    }
+}

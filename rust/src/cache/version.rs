@@ -1,0 +1,230 @@
+//! Server-side piece versioning: the write clock the delta-fetch protocol
+//! compares against.
+//!
+//! A version is the 1-based round ordinal of the last aggregator write to
+//! that row set (0 = the initial model). The trainer bumps the clock after
+//! every close that merged at least one update, using the
+//! [`TouchedKeys`](crate::aggregation::TouchedKeys) of the merge set —
+//! *only* keys an update actually selected bump, so a row nobody wrote
+//! keeps its version and every client's cached copy of it stays fresh.
+//! Segment-level versions move coarser: a `Binding::Full` segment is
+//! written by every merged update (its deltas cover the whole segment), a
+//! keyed segment is written whenever any key of its keyspace was touched.
+
+use crate::aggregation::TouchedKeys;
+use crate::model::{Binding, ParamStore, SelectSpec};
+
+use super::BROADCAST_SPACE;
+
+/// Whether key `k`'s row set in `update` holds any nonzero value — the
+/// same spans `piece_for_key` concatenates, scanned in place (no per-key
+/// allocation or copy) with an early return on the first nonzero.
+fn row_written(update: &ParamStore, spec: &SelectSpec, ks: usize, key: u32) -> bool {
+    for b in &spec.bindings {
+        if let Binding::Keyed {
+            seg,
+            keyspace,
+            map,
+        } = b
+        {
+            if *keyspace != ks {
+                continue;
+            }
+            let src = &update.segments[*seg].data;
+            let rl = map.row_len;
+            for g in 0..map.groups {
+                let s = (g * map.keys_total + key as usize) * rl;
+                if src[s..s + rl].iter().any(|&v| v != 0.0) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Per-(keyspace, key) and per-segment last-write round counters.
+#[derive(Clone, Debug)]
+pub struct VersionClock {
+    /// `keyed[ks][key]` = round of the last aggregator write (0 = initial).
+    keyed: Vec<Vec<u64>>,
+    /// `segs[seg]` = round of the last write anywhere in the segment.
+    segs: Vec<u64>,
+}
+
+impl VersionClock {
+    /// A fresh clock (everything at the initial version 0) for a model with
+    /// the given keyspace sizes and segment count.
+    pub fn new(keyspace_sizes: &[usize], num_segs: usize) -> Self {
+        VersionClock {
+            keyed: keyspace_sizes.iter().map(|&s| vec![0u64; s]).collect(),
+            segs: vec![0u64; num_segs],
+        }
+    }
+
+    /// Version of one cache entry: keyed pieces by `(keyspace, key)`,
+    /// segment entries by `(BROADCAST_SPACE, segment-index)`. Out-of-range
+    /// ids report version 0 (never written).
+    pub fn version_of(&self, space: usize, key: u32) -> u64 {
+        if space == BROADCAST_SPACE {
+            self.segs.get(key as usize).copied().unwrap_or(0)
+        } else {
+            self.keyed
+                .get(space)
+                .and_then(|ks| ks.get(key as usize))
+                .copied()
+                .unwrap_or(0)
+        }
+    }
+
+    /// Record a close *exactly*: of the keys the merged updates selected,
+    /// bump only those whose row in the finalized server `update` is
+    /// nonzero somewhere. A zero-aggregate row (e.g. a padded select key no
+    /// merged client's data exercises, or a row whose contributions cancel)
+    /// provably leaves the store unchanged under the cache-validated server
+    /// optimizers (zero update = fixed point), so its cached copies stay
+    /// valid — this is what makes re-selecting stable keys actually pay.
+    /// Full segments bump only when their update segment is nonzero; keyed
+    /// segments when any of their keyspace's rows were written. Returns the
+    /// number of keyed rows bumped.
+    pub fn bump_written(
+        &mut self,
+        round: u64,
+        selected: &TouchedKeys,
+        update: &ParamStore,
+        spec: &SelectSpec,
+    ) -> usize {
+        let mut written = TouchedKeys::new(self.keyed.len());
+        for (ks, keys) in selected.keyspaces().enumerate() {
+            for &k in keys {
+                if row_written(update, spec, ks, k) {
+                    written.record_one(ks, k);
+                }
+            }
+        }
+        let n = written.count();
+        for (ks, keys) in written.keyspaces().enumerate() {
+            for &k in keys {
+                if let Some(v) = self.keyed.get_mut(ks).and_then(|kv| kv.get_mut(k as usize)) {
+                    *v = round;
+                }
+            }
+        }
+        for b in &spec.bindings {
+            match b {
+                Binding::Full { seg } => {
+                    if update.segments[*seg].data.iter().any(|&v| v != 0.0) {
+                        self.segs[*seg] = round;
+                    }
+                }
+                Binding::Keyed { seg, keyspace, .. } => {
+                    if written.count_in(*keyspace) > 0 {
+                        self.segs[*seg] = round;
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// Conservative form of [`Self::bump_written`]: treat every selected
+    /// key as written (no update to inspect). Never serves stale data —
+    /// it can only over-invalidate. Used by tests and by callers without
+    /// the finalized update at hand.
+    pub fn bump(&mut self, round: u64, touched: &TouchedKeys, spec: &SelectSpec) {
+        for (ks, keys) in touched.keyspaces().enumerate() {
+            for &k in keys {
+                if let Some(v) = self.keyed.get_mut(ks).and_then(|kv| kv.get_mut(k as usize)) {
+                    *v = round;
+                }
+            }
+        }
+        for b in &spec.bindings {
+            match b {
+                // every merged update's deltas cover the whole segment
+                Binding::Full { seg } => self.segs[*seg] = round,
+                Binding::Keyed { seg, keyspace, .. } => {
+                    if touched.count_in(*keyspace) > 0 {
+                        self.segs[*seg] = round;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total keyed rows currently past version 0 (test/inspection helper).
+    pub fn touched_rows(&self) -> usize {
+        self.keyed
+            .iter()
+            .map(|ks| ks.iter().filter(|&&v| v > 0).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+
+    #[test]
+    fn bump_moves_only_touched_keys_and_their_segments() {
+        let arch = ModelArch::logreg(16);
+        let spec = arch.select_spec();
+        let mut clock = VersionClock::new(&[16], 2);
+        assert_eq!(clock.version_of(0, 5), 0);
+        assert_eq!(clock.version_of(BROADCAST_SPACE, 1), 0);
+
+        let mut touched = TouchedKeys::new(1);
+        touched.record(&[vec![3, 5]]);
+        clock.bump(1, &touched, &spec);
+        assert_eq!(clock.version_of(0, 3), 1);
+        assert_eq!(clock.version_of(0, 5), 1);
+        assert_eq!(clock.version_of(0, 4), 0, "untouched key keeps its version");
+        // logreg: segment 0 is the keyed weight matrix, segment 1 the Full bias
+        assert_eq!(clock.version_of(BROADCAST_SPACE, 0), 1);
+        assert_eq!(clock.version_of(BROADCAST_SPACE, 1), 1);
+        assert_eq!(clock.touched_rows(), 2);
+
+        // a later round re-bumps touched keys and leaves the rest alone
+        let mut t2 = TouchedKeys::new(1);
+        t2.record(&[vec![5]]);
+        clock.bump(2, &t2, &spec);
+        assert_eq!(clock.version_of(0, 5), 2);
+        assert_eq!(clock.version_of(0, 3), 1);
+    }
+
+    #[test]
+    fn bump_written_skips_zero_aggregate_rows() {
+        use crate::tensor::rng::Rng;
+        let arch = ModelArch::logreg(16);
+        let spec = arch.select_spec();
+        let mut update = arch.init_store(&mut Rng::new(1, 0)).zeros_like();
+        // the aggregate wrote row 3 of the keyed weight matrix only; row 5
+        // was selected but every contribution was zero; the bias segment
+        // stays all-zero too
+        update.segments[0].data[3 * 50] = 1.0;
+        let mut clock = VersionClock::new(&[16], 2);
+        let mut selected = TouchedKeys::new(1);
+        selected.record(&[vec![3, 5]]);
+        let n = clock.bump_written(1, &selected, &update, &spec);
+        assert_eq!(n, 1);
+        assert_eq!(clock.version_of(0, 3), 1);
+        assert_eq!(clock.version_of(0, 5), 0, "zero-aggregate row is not written");
+        assert_eq!(clock.version_of(BROADCAST_SPACE, 0), 1, "keyed segment written");
+        assert_eq!(
+            clock.version_of(BROADCAST_SPACE, 1),
+            0,
+            "all-zero Full segment keeps its version"
+        );
+        // an unselected row is never even inspected
+        assert_eq!(clock.version_of(0, 7), 0);
+    }
+
+    #[test]
+    fn out_of_range_lookups_are_version_zero() {
+        let clock = VersionClock::new(&[4], 1);
+        assert_eq!(clock.version_of(0, 99), 0);
+        assert_eq!(clock.version_of(7, 0), 0);
+        assert_eq!(clock.version_of(BROADCAST_SPACE, 9), 0);
+    }
+}

@@ -65,12 +65,23 @@ impl ShardLoad {
 }
 
 /// A versioned, sharded content-delivery store of per-key slice pieces.
+///
+/// Publishing is *versioned per piece*: a publish compares each incoming
+/// piece against the copy already serving and re-ships only the changed
+/// ones — unchanged pieces keep their `Arc` (no copy) and their piece
+/// version, and `publish_bytes` counts only bytes that actually travel
+/// server→CDN. This is the server-side half of the cross-round delta
+/// story ([`crate::cache`]): a round that never touches a row republishes
+/// nothing for it.
 pub struct CdnStore {
     shards: usize,
     latency: LatencyModel,
     /// (keyspace, key) -> piece, for the current published version.
     /// `Arc`-wrapped so queries hand out references without copying.
     pieces: HashMap<(usize, u32), Arc<Vec<f32>>>,
+    /// (keyspace, key) -> publish ordinal at which the piece's *content*
+    /// last changed.
+    piece_versions: HashMap<(usize, u32), u64>,
     version: u64,
     stats: Vec<ShardLoad>,
     publish_bytes: AtomicU64,
@@ -83,6 +94,7 @@ impl CdnStore {
             shards,
             latency: LatencyModel::default(),
             pieces: HashMap::new(),
+            piece_versions: HashMap::new(),
             version: 0,
             stats: (0..shards).map(|_| ShardLoad::default()).collect(),
             publish_bytes: AtomicU64::new(0),
@@ -101,17 +113,51 @@ impl CdnStore {
         (h % self.shards as u64) as usize
     }
 
-    /// Publish a new model version's slices (replaces the previous version).
+    /// Publish a new model version's slices (replaces the previous piece
+    /// *set*; keys absent from `pieces` are dropped). Content-versioned:
+    /// pieces byte-identical to the serving copy are retained (shared
+    /// `Arc`, piece version unchanged) and cost no publish bytes — only
+    /// changed pieces ship and bump their piece version to the new publish
+    /// ordinal.
     pub fn publish(&mut self, pieces: HashMap<(usize, u32), Vec<f32>>) -> u64 {
-        let bytes: u64 = pieces.values().map(|p| p.len() as u64 * 4).sum();
-        self.publish_bytes.fetch_add(bytes, Relaxed);
-        self.pieces = pieces.into_iter().map(|(k, v)| (k, Arc::new(v))).collect();
         self.version += 1;
+        let mut changed_bytes = 0u64;
+        let mut next: HashMap<(usize, u32), Arc<Vec<f32>>> =
+            HashMap::with_capacity(pieces.len());
+        for (k, v) in pieces {
+            match self.pieces.get(&k) {
+                Some(old) if **old == v => {
+                    next.insert(k, old.clone());
+                }
+                _ => {
+                    changed_bytes += v.len() as u64 * 4;
+                    self.piece_versions.insert(k, self.version);
+                    next.insert(k, Arc::new(v));
+                }
+            }
+        }
+        self.piece_versions.retain(|k, _| next.contains_key(k));
+        self.pieces = next;
+        self.publish_bytes.fetch_add(changed_bytes, Relaxed);
         self.version
     }
 
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// Publish ordinal at which this piece's content last changed (None if
+    /// the piece is not currently published).
+    ///
+    /// Deliberately a *different clock* from the trainer's
+    /// [`VersionClock`](crate::cache::VersionClock): client freshness
+    /// decisions use the aggregator's write clock (which the trainer owns),
+    /// while the CDN — which cannot see the aggregator — derives its
+    /// versions from content alone. This accessor exists for publish-delta
+    /// observability (benches/diagnostics), not for the delta-fetch
+    /// protocol.
+    pub fn piece_version(&self, keyspace: usize, key: u32) -> Option<u64> {
+        self.piece_versions.get(&(keyspace, key)).copied()
     }
 
     pub fn num_pieces(&self) -> usize {
@@ -208,6 +254,37 @@ mod tests {
         assert_eq!(cdn.num_pieces(), 1);
         assert_eq!(cdn.query(0, 0).unwrap()[0], 7.0);
         assert!(cdn.query(0, 3).is_none());
+    }
+
+    #[test]
+    fn republishing_unchanged_pieces_ships_no_bytes() {
+        let mut cdn = CdnStore::new(4);
+        let make = |a: f32| {
+            let mut p = HashMap::new();
+            p.insert((0usize, 0u32), vec![a; 8]);
+            p.insert((0usize, 1u32), vec![1.0; 8]);
+            p
+        };
+        cdn.publish(make(5.0));
+        assert_eq!(cdn.publish_bytes(), 2 * 32);
+        assert_eq!(cdn.piece_version(0, 0), Some(1));
+        // second publish: piece 0 changes, piece 1 is byte-identical
+        cdn.publish(make(6.0));
+        assert_eq!(cdn.version(), 2);
+        assert_eq!(cdn.publish_bytes(), 2 * 32 + 32, "only the changed piece ships");
+        assert_eq!(cdn.piece_version(0, 0), Some(2));
+        assert_eq!(
+            cdn.piece_version(0, 1),
+            Some(1),
+            "unchanged piece keeps its content version"
+        );
+        assert_eq!(cdn.query(0, 0).unwrap()[0], 6.0);
+        // dropping a piece from the published set removes its version too
+        let mut only = HashMap::new();
+        only.insert((0usize, 0u32), vec![6.0f32; 8]);
+        cdn.publish(only);
+        assert_eq!(cdn.piece_version(0, 1), None);
+        assert_eq!(cdn.piece_version(0, 0), Some(2), "still byte-identical");
     }
 
     #[test]

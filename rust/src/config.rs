@@ -3,6 +3,7 @@
 //! and the canonical per-figure defaults.
 
 use crate::aggregation::AggMode;
+use crate::cache::EvictPolicy;
 use crate::coordinator::AggregationMode;
 use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
 use crate::error::{Error, Result};
@@ -93,6 +94,31 @@ pub struct TrainConfig {
     /// committee sums — which is what lets `secure_agg` compose with every
     /// aggregation mode. See `crate::aggregation::SecAggCommittee`.
     pub secure_committee: bool,
+    /// Committee size floor (0 = off), counted over *submitters* —
+    /// reconstruction-path dropouts add nothing to the unmasked sum, so
+    /// they don't enlarge the anonymity set. A class whose committee would
+    /// fall below the floor is coalesced with a neighboring class at the
+    /// close (server-side weight splitting — see
+    /// [`crate::coordinator::engine`]), since a single-submitter committee
+    /// hides nothing. Requires `secure_committee`.
+    pub min_committee: usize,
+    /// Cross-round on-device slice cache ([`crate::cache`]): clients keep
+    /// downloaded pieces across rounds and refetch only what the
+    /// aggregator has written since. Requires a server optimizer for which
+    /// untouched coordinates are a fixed point (fedavg / fedadagrad) and is
+    /// incompatible with whole-cohort float-mask secure aggregation (mask
+    /// rounding residue writes every coordinate; committees are exact and
+    /// compose).
+    pub cache: bool,
+    /// Per-client cache budget as a fraction of the device's memory cap
+    /// (`mem_frac × server bytes`); in (0, 1].
+    pub cache_budget_frac: f64,
+    /// Cache eviction policy (`lru` / `lfu` / `version-distance`).
+    pub cache_evict: EvictPolicy,
+    /// Bound on cached-version-metadata age in rounds before a forced
+    /// refresh (0 = unbounded). See the stale-read discussion in
+    /// [`crate::cache`].
+    pub max_stale_rounds: usize,
     pub server_opt: ServerOpt,
     pub client_lr: f32,
     /// Device-population model the cohort scheduler draws from.
@@ -129,6 +155,11 @@ impl TrainConfig {
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             secure_committee: false,
+            min_committee: 0,
+            cache: false,
+            cache_budget_frac: 0.5,
+            cache_evict: EvictPolicy::Lru,
+            max_stale_rounds: 0,
             server_opt: ServerOpt::fedadagrad(0.1),
             client_lr: 0.5,
             fleet: FleetKind::Uniform,
@@ -155,6 +186,11 @@ impl TrainConfig {
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             secure_committee: false,
+            min_committee: 0,
+            cache: false,
+            cache_budget_frac: 0.5,
+            cache_evict: EvictPolicy::Lru,
+            max_stale_rounds: 0,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
             fleet: FleetKind::Uniform,
@@ -181,6 +217,11 @@ impl TrainConfig {
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             secure_committee: false,
+            min_committee: 0,
+            cache: false,
+            cache_budget_frac: 0.5,
+            cache_evict: EvictPolicy::Lru,
+            max_stale_rounds: 0,
             server_opt: ServerOpt::fedavg(1.0),
             client_lr: 0.05,
             fleet: FleetKind::Uniform,
@@ -215,6 +256,11 @@ impl TrainConfig {
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
             secure_committee: false,
+            min_committee: 0,
+            cache: false,
+            cache_budget_frac: 0.5,
+            cache_evict: EvictPolicy::Lru,
+            max_stale_rounds: 0,
             server_opt: ServerOpt::fedadam(0.02),
             client_lr: 0.1,
             fleet: FleetKind::Uniform,
@@ -290,6 +336,49 @@ impl TrainConfig {
                  group and requires --secure-agg"
                     .into(),
             ));
+        }
+        if self.min_committee > 0 && !self.secure_committee {
+            return Err(Error::Config(
+                "--min-committee floors the size of close-group SecAgg \
+                 committees and requires --secure-committee"
+                    .into(),
+            ));
+        }
+        if self.cache {
+            if !(0.0..=1.0).contains(&self.cache_budget_frac) || self.cache_budget_frac == 0.0 {
+                return Err(Error::Config("cache_budget_frac must be in (0, 1]".into()));
+            }
+            // soundness condition 1: serving a version-fresh piece from the
+            // cache is only byte-exact if untouched coordinates never move.
+            // Adam/Yogi/momentum keep per-coordinate state that steps rows
+            // with a zero update, so a row can change without a version
+            // bump.
+            match self.server_opt {
+                crate::optim::ServerOpt::Sgd { momentum, .. } if momentum == 0.0 => {}
+                crate::optim::ServerOpt::Adagrad { .. } => {}
+                other => {
+                    return Err(Error::Config(format!(
+                        "--cache requires a server optimizer for which untouched \
+                         coordinates are a fixed point (fedavg without momentum, \
+                         fedadagrad); {} moves rows with zero update via its \
+                         optimizer state, which would silently serve stale pieces",
+                        other.name()
+                    )));
+                }
+            }
+            // soundness condition 2: the aggregate must be exactly zero on
+            // untouched rows. Whole-cohort float masks cancel only
+            // approximately — their rounding residue writes every
+            // coordinate. Committee masks cancel exactly in Z_2^64.
+            if self.secure_agg && !self.secure_committee {
+                return Err(Error::Config(
+                    "--cache is incompatible with whole-cohort float-mask secure \
+                     aggregation (mask rounding residue writes every coordinate, \
+                     invalidating version-fresh cache entries); pass \
+                     --secure-committee for exact Z_2^64 cancellation instead"
+                        .into(),
+                ));
+            }
         }
         // The genuinely unsound combination: whole-cohort float masks only
         // cancel when every submitter lands in the same close group, i.e.
@@ -468,6 +557,66 @@ mod tests {
             goal_count: 0,
             max_staleness: 0,
         };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn cache_requires_fixed_point_server_optimizers() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.cache = true;
+        // fedadagrad default: untouched rows are a fixed point
+        assert!(cfg.validate().is_ok());
+        cfg.server_opt = ServerOpt::fedavg(1.0);
+        assert!(cfg.validate().is_ok());
+        for bad in [
+            ServerOpt::fedadam(0.01),
+            ServerOpt::fedyogi(0.01),
+            ServerOpt::Sgd {
+                lr: 1.0,
+                momentum: 0.9,
+            },
+        ] {
+            cfg.server_opt = bad;
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("fixed point"), "{err}");
+        }
+        // cache off: any optimizer validates again
+        cfg.cache = false;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn cache_rejects_float_mask_secure_agg_and_bad_budgets() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.cache = true;
+        cfg.secure_agg = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--secure-committee"), "error names the fix: {err}");
+        // committee masks cancel exactly: the combination is sound
+        cfg.secure_committee = true;
+        assert!(cfg.validate().is_ok());
+        cfg.secure_agg = false;
+        cfg.secure_committee = false;
+        cfg.cache_budget_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.cache_budget_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.cache_budget_frac = 0.25;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn min_committee_requires_committees() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.min_committee = 2;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--secure-committee"), "{err}");
+        cfg.secure_agg = true;
+        cfg.secure_committee = true;
+        assert!(cfg.validate().is_ok());
+        cfg.min_committee = 0;
+        cfg.secure_committee = false;
+        cfg.secure_agg = false;
         assert!(cfg.validate().is_ok());
     }
 

@@ -256,6 +256,9 @@ struct InFlight {
 /// buffered mode, the cross-round in-flight update pool.
 pub struct RoundEngine {
     mode: AggregationMode,
+    /// Committee size floor (`--min-committee`; 0 = off): buffered closes
+    /// whose staleness-class committees would fall below it are coalesced.
+    min_committee: usize,
     in_flight: Vec<InFlight>,
 }
 
@@ -263,8 +266,15 @@ impl RoundEngine {
     pub fn new(mode: AggregationMode) -> Self {
         RoundEngine {
             mode,
+            min_committee: 0,
             in_flight: Vec::new(),
         }
+    }
+
+    /// Set the committee size floor (see [`Self::new`]); 0 disables it.
+    pub fn with_min_committee(mut self, floor: usize) -> Self {
+        self.min_committee = floor;
+        self
     }
 
     pub fn mode(&self) -> AggregationMode {
@@ -312,6 +322,65 @@ impl RoundEngine {
             }
             _ => base,
         }
+    }
+
+    /// Coalesce staleness-class committees below the size floor (the
+    /// ROADMAP "committee size floors" item: a single-member committee
+    /// hides nothing). The floor is measured over **submitters only**:
+    /// reconstruction-path dropouts contribute nothing to the unmasked sum,
+    /// so they do not enlarge the anonymity set — a committee with one
+    /// submitter and one dropped member still exposes a single client's
+    /// update in the clear. A below-floor committee is merged with its next
+    /// (staler) neighbor — or its previous one when it is last — until
+    /// every committee meets the floor or only one remains. The coalesced
+    /// committee spans staleness classes, so a single per-class weight no
+    /// longer exists: the server applies the *submitter-count-weighted
+    /// mean* of the member classes' weights to the whole unmasked committee
+    /// sum (server-side weight splitting — an approximation the floor
+    /// trades for hiding, documented in the README). Its staleness label is
+    /// the youngest member class's, which keeps labels unique within a
+    /// close (mask seeds mix the label, so uniqueness matters). A close
+    /// whose *only* committee is below the floor is left as-is — there is
+    /// nothing to coalesce with — and surfaces through
+    /// `RoundRecord::min_committee_size`.
+    fn apply_committee_floor(
+        mut specs: Vec<CommitteeSpec>,
+        floor: usize,
+    ) -> Vec<CommitteeSpec> {
+        if floor <= 1 {
+            return specs;
+        }
+        while specs.len() > 1 {
+            let Some(i) = specs.iter().position(|c| c.submitters.len() < floor) else {
+                break;
+            };
+            let j = if i + 1 < specs.len() { i + 1 } else { i - 1 };
+            let (lo, hi) = (i.min(j), i.max(j));
+            let b = specs.remove(hi);
+            let a = specs.remove(lo);
+            let (na, nb) = (a.submitters.len() as f32, b.submitters.len() as f32);
+            let weight = if na + nb > 0.0 {
+                (na * a.weight + nb * b.weight) / (na + nb)
+            } else {
+                a.weight
+            };
+            let mut submitters = a.submitters;
+            submitters.extend(b.submitters);
+            submitters.sort_unstable();
+            let mut dropped = a.dropped;
+            dropped.extend(b.dropped);
+            specs.insert(
+                lo,
+                CommitteeSpec {
+                    close_ordinal: a.close_ordinal,
+                    staleness: a.staleness.min(b.staleness),
+                    weight,
+                    submitters,
+                    dropped,
+                },
+            );
+        }
+        specs
     }
 
     /// One staleness-0 committee over `n_merged` submitters plus `dropped`
@@ -498,7 +567,10 @@ impl RoundEngine {
                     discarded_tiers,
                     mean_staleness,
                     in_flight: self.in_flight.len(),
-                    committees: classes.into_values().collect(),
+                    committees: Self::apply_committee_floor(
+                        classes.into_values().collect(),
+                        self.min_committee,
+                    ),
                 }
             }
         }
@@ -796,6 +868,107 @@ mod tests {
         assert_eq!(out2.committees[0].submitters, vec![0]);
         assert_eq!(out2.committees[0].dropped, vec![12]);
         assert_eq!(eng.in_flight_clients(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn committee_floor_coalesces_small_classes_with_weight_splitting() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 3,
+            max_staleness: 2,
+        })
+        .with_min_committee(2);
+        // round 1: four survivors, goal 3 — client 13 carries into round 2
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+            Some(slot_work(13, 1)),
+        ];
+        let events = vec![
+            event(0, 10, 0, 1.0),
+            event(1, 11, 0, 2.0),
+            event(2, 12, 1, 3.0),
+            event(3, 13, 1, 9.0),
+        ];
+        eng.close_round(1, 4, 0.0, &events, work);
+        // round 2: two fresh survivors + the lone carried update — the
+        // staleness-1 class would be a single-member committee, below the
+        // floor of 2, so it coalesces with the fresh class
+        let work2 = vec![Some(slot_work(20, 0)), Some(slot_work(21, 0))];
+        let events2 = vec![event(0, 20, 0, 1.0), event(1, 21, 0, 2.0)];
+        let out2 = eng.close_round(2, 3, 10.0, &events2, work2);
+        assert_eq!(out2.merged.len(), 3);
+        assert_eq!(out2.committees.len(), 1, "classes coalesced under the floor");
+        let c = &out2.committees[0];
+        assert_eq!(c.size(), 3);
+        assert_eq!(c.submitters, vec![0, 1, 2]);
+        assert_eq!(c.staleness, 0, "youngest member class labels the committee");
+        // blended weight: (1 submitter @ w(1) + 2 @ 1.0) / 3
+        let expect = (AggregationMode::staleness_weight(1) + 2.0) / 3.0;
+        assert!((c.weight - expect).abs() < 1e-6, "{} vs {expect}", c.weight);
+        // per-item merge weights are untouched — only the committee blends
+        assert!(out2.merged.iter().any(|m| m.staleness == 1 && m.weight < 1.0));
+    }
+
+    #[test]
+    fn committee_floor_counts_submitters_not_reconstruction_dropouts() {
+        // a committee with 1 submitter + 1 keyed-but-dropped member exposes
+        // that submitter's update in the clear — the dropout's masks are
+        // reconstructed and add nothing to the sum, so it must NOT satisfy
+        // the floor
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 1,
+            max_staleness: 1,
+        })
+        .with_min_committee(2);
+        // round 1, goal 1: only client 10 merges; 11 (abs 8.0) and the very
+        // slow 12 (abs 25.0) stay in flight
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 0)),
+        ];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 11, 0, 8.0), event(2, 12, 0, 25.0)];
+        eng.close_round(1, 3, 0.0, &events, work);
+        // round 2 (start 20.0), goal 3: carried 11 (staleness 1) merges
+        // with fresh 20/21 (abs 21/22); carried 12 (abs 25.0) is past the
+        // goal and ages out as a staleness-1 dropout of 11's class
+        eng.mode = AggregationMode::Buffered {
+            goal_count: 3,
+            max_staleness: 1,
+        };
+        let work2 = vec![Some(slot_work(20, 0)), Some(slot_work(21, 0))];
+        let events2 = vec![event(0, 20, 0, 1.0), event(1, 21, 0, 2.0)];
+        let out2 = eng.close_round(2, 3, 20.0, &events2, work2);
+        assert_eq!(out2.merged.len(), 3);
+        assert_eq!(out2.discarded_tiers.len(), 1, "client 12 ages out");
+        // the staleness-1 class has 1 submitter + 1 dropped: size() == 2
+        // would have passed the floor; submitters == 1 must not
+        assert_eq!(
+            out2.committees.len(),
+            1,
+            "1-submitter class must coalesce despite its dropped member"
+        );
+        let c = &out2.committees[0];
+        assert_eq!(c.submitters, vec![0, 1, 2]);
+        assert_eq!(c.dropped, vec![12], "the dropout rides along for reconstruction");
+    }
+
+    #[test]
+    fn committee_floor_leaves_an_unmergeable_lone_committee() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 1,
+            max_staleness: 4,
+        })
+        .with_min_committee(3);
+        let work = vec![Some(slot_work(10, 0))];
+        let events = vec![event(0, 10, 0, 1.0)];
+        let out = eng.close_round(1, 1, 0.0, &events, work);
+        assert_eq!(out.committees.len(), 1);
+        assert_eq!(out.committees[0].size(), 1, "nothing to coalesce with");
+        // floor 0/1 are no-ops by definition
+        let eng0 = RoundEngine::new(AggregationMode::Synchronous).with_min_committee(1);
+        assert_eq!(eng0.min_committee, 1);
     }
 
     #[test]

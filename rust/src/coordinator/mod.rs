@@ -16,7 +16,11 @@
 //! 2. **Slice** — `begin_round` on the slice service (Option 3
 //!    pre-generates here) yields one immutable session, and the whole
 //!    cohort is sliced through [`RoundSession::fetch_batch`] across
-//!    `fetch_threads` workers;
+//!    `fetch_threads` workers; with `--cache` each client consults its
+//!    cross-round on-device cache first ([`crate::cache`]): version-fresh
+//!    pieces are served locally and only the rest cross the (simulated)
+//!    wire, with the version clock bumped after each close for exactly the
+//!    rows the aggregator wrote;
 //! 3. **Update** — each surviving client runs `ClientUpdate` (one local
 //!    epoch of SGD through the engine), in cohort-index order so the
 //!    trajectory is byte-identical at any `fetch_threads`; the
@@ -45,14 +49,19 @@ pub use engine::{AggregationMode, CommitteeSpec, MergeItem, RoundEngine, RoundOu
 
 use std::time::Instant;
 
-use crate::aggregation::{finalize_mean, Aggregator, SecAggCommittee, SecureAggSim, SparseAccumulator};
+use crate::aggregation::{
+    finalize_mean, Aggregator, SecAggCommittee, SecureAggSim, SparseAccumulator, TouchedKeys,
+};
+use crate::cache::{CacheGeometry, CommitStats, FleetCaches, VersionClock};
 use crate::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, Engine};
 use crate::config::{DatasetConfig, EngineKind, TrainConfig};
 use crate::data::{bow, images, text, Example, FederatedDataset};
 use crate::error::{Error, Result};
-use crate::fedselect::{ClientKeys, RoundComm, RoundSession, SliceService};
+use crate::fedselect::{
+    ClientKeys, DeltaPlan, RoundComm, RoundSession, SliceImpl, SliceService,
+};
 use crate::metrics::human_bytes;
-use crate::model::{ModelArch, ParamStore, SelectSpec};
+use crate::model::{Binding, ModelArch, ParamStore, SelectSpec};
 use crate::optim::Optimizer;
 use crate::runtime::PjrtRuntime;
 use crate::scheduler::{ClientRoundStats, Scheduler, SliceGeometry};
@@ -80,6 +89,12 @@ pub struct RoundRecord {
     /// Mean keyed committee size — submitters plus reconstruction-path
     /// dropouts (0 when no committee was keyed).
     pub mean_committee_size: f64,
+    /// Smallest *submitter count* over this round's keyed committees (0
+    /// when none was keyed) — the anonymity set of the most exposed
+    /// committee sum; reconstruction-path dropouts are excluded because
+    /// they contribute nothing to it. The `--min-committee` floor coalesces
+    /// staleness classes to keep this above water.
+    pub min_committee_size: usize,
     pub comm: RoundComm,
     /// Client->server upload bytes (updates + keys, or masked vectors).
     pub up_bytes: u64,
@@ -97,8 +112,18 @@ pub struct RoundRecord {
     /// staleness-bound discards).
     pub tier_discarded: Vec<usize>,
     /// Download bytes per fleet tier (wasted downloads of dropouts and
-    /// discarded stragglers included).
+    /// discarded stragglers included). With `--cache` these are post-cache
+    /// wire bytes, matching `comm.down_bytes`.
     pub tier_down_bytes: Vec<u64>,
+    /// Client-cache piece hits per fleet tier (all zero without `--cache`).
+    pub tier_cache_hits: Vec<u64>,
+    /// Client-cache piece lookups (hits + misses) per fleet tier.
+    pub tier_cache_lookups: Vec<u64>,
+    /// Cache entries evicted this round across the cohort (byte budgets).
+    pub cache_evictions: u64,
+    /// Version-fresh pieces refetched only because they aged past
+    /// `--max-stale-rounds`.
+    pub cache_stale_refreshes: u64,
 }
 
 /// Periodic evaluation snapshot.
@@ -157,6 +182,11 @@ pub struct Trainer {
     scheduler: Scheduler,
     round_engine: RoundEngine,
     geom: SliceGeometry,
+    /// Server-side piece version clock (`--cache` only): bumped at every
+    /// close for exactly the rows the aggregator wrote.
+    versions: Option<VersionClock>,
+    /// Cache-entry geometry (piece/segment byte sizes per the slice impl).
+    cache_geom: Option<CacheGeometry>,
     rng: Rng,
     round: usize,
 }
@@ -204,8 +234,53 @@ impl Trainer {
             broadcast_floats: spec.broadcast_floats(&store),
             server_floats: spec.server_floats(&store),
         };
-        let scheduler = Scheduler::new(&cfg, dataset.train.len())?;
-        let round_engine = RoundEngine::new(cfg.agg_mode);
+        let mut scheduler = Scheduler::new(&cfg, dataset.train.len())?;
+        let round_engine = RoundEngine::new(cfg.agg_mode).with_min_committee(cfg.min_committee);
+        // --cache: version clock + cache geometry + one budgeted cache per
+        // train client (budget = device memory cap × cache_budget_frac)
+        let (versions, cache_geom) = if cfg.cache {
+            let sizes: Vec<usize> = spec.keyspaces.iter().map(|k| k.size).collect();
+            let broadcast_impl = cfg.slice_impl == SliceImpl::Broadcast;
+            let cached_segs: Vec<usize> = if broadcast_impl {
+                (0..store.segments.len()).collect()
+            } else {
+                spec.bindings
+                    .iter()
+                    .filter_map(|b| match b {
+                        Binding::Full { seg } => Some(*seg),
+                        Binding::Keyed { .. } => None,
+                    })
+                    .collect()
+            };
+            let cgeom = CacheGeometry {
+                // the canonical wire piece size — the same helper the slice
+                // ledger charges with, so geometry and ledger cannot drift
+                piece_bytes: (0..sizes.len())
+                    .map(|ks| crate::fedselect::piece::piece_bytes(&spec, ks))
+                    .collect(),
+                seg_bytes: store.segments.iter().map(|s| s.len() as u64 * 4).collect(),
+                cached_segs,
+                keyed: !broadcast_impl,
+            };
+            let server_bytes = store.bytes();
+            let budgets: Vec<u64> = scheduler
+                .fleet()
+                .profiles
+                .iter()
+                .map(|p| (p.mem_bytes(server_bytes) as f64 * cfg.cache_budget_frac) as u64)
+                .collect();
+            scheduler.install_caches(FleetCaches::new(
+                cfg.cache_evict,
+                cfg.max_stale_rounds,
+                budgets,
+            ));
+            (
+                Some(VersionClock::new(&sizes, store.segments.len())),
+                Some(cgeom),
+            )
+        } else {
+            (None, None)
+        };
         Ok(Trainer {
             cfg,
             arch,
@@ -218,6 +293,8 @@ impl Trainer {
             scheduler,
             round_engine,
             geom,
+            versions,
+            cache_geom,
             rng,
             round: 0,
         })
@@ -256,6 +333,11 @@ impl Trainer {
     /// The round engine (aggregation mode, in-flight update pool).
     pub fn round_engine(&self) -> &RoundEngine {
         &self.round_engine
+    }
+
+    /// The server-side piece version clock (`Some` only under `--cache`).
+    pub fn versions(&self) -> Option<&VersionClock> {
+        self.versions.as_ref()
     }
 
     /// Run one round of Algorithm 2.
@@ -322,12 +404,63 @@ impl Trainer {
 
         // Phase 2 — slice: one immutable session for the round, the whole
         // cohort fetched through it in parallel. Bundle order == cohort
-        // order, so downstream aggregation is deterministic.
-        let (bundles, comm) = {
+        // order, so downstream aggregation is deterministic. With --cache
+        // each client first gets a DeltaPlan from its on-device cache
+        // (fresh pieces serve locally, no wire bytes); without, the same
+        // path runs with empty plans — so per-client down_bytes is always
+        // the *session's* wire charge (full model under Option 1, bundle
+        // bytes otherwise) and the SimClock agrees with the comm ledger
+        // whether the cache is on or off.
+        let (outcomes, comm) = {
             let session = self.service.begin_round(&self.store, &self.spec)?;
-            let bundles = session.fetch_batch(&client_keys, self.cfg.fetch_threads)?;
-            (bundles, session.finish())
+            let deltas: Vec<DeltaPlan> =
+                match (self.scheduler.caches(), self.versions.as_ref()) {
+                    (Some(caches), Some(versions)) => {
+                        let cgeom = self.cache_geom.as_ref().expect("cache geometry");
+                        cohort
+                            .iter()
+                            .zip(client_keys.iter())
+                            .map(|(&ci, keys)| {
+                                caches.plan_for(ci, self.round as u64, keys, cgeom, versions)
+                            })
+                            .collect()
+                    }
+                    _ => vec![DeltaPlan::default(); cohort.len()],
+                };
+            let outcomes =
+                session.fetch_batch_delta(&client_keys, &deltas, self.cfg.fetch_threads)?;
+            (outcomes, session.finish())
         };
+
+        // Cache bookkeeping: commit every cohort member's round against its
+        // cache (the download happened even if the client drops later), in
+        // cohort order, before this round's version bumps. Hits/lookups are
+        // tier-attributed for the per-tier hit-rate column.
+        let slot_tiers: Vec<usize> = cohort
+            .iter()
+            .map(|&ci| self.scheduler.fleet().profiles[ci].tier)
+            .collect();
+        let ntiers = self.scheduler.fleet().num_tiers();
+        let mut tier_cache_hits = vec![0u64; ntiers];
+        let mut tier_cache_lookups = vec![0u64; ntiers];
+        let mut cache_stats = CommitStats::default();
+        if let Some(versions) = self.versions.as_ref() {
+            let cgeom = self.cache_geom.as_ref().expect("cache geometry");
+            let caches = self.scheduler.caches_mut().expect("caches installed");
+            for (slot, &ci) in cohort.iter().enumerate() {
+                let st = caches.commit(ci, self.round as u64, &client_keys[slot], cgeom, versions);
+                tier_cache_hits[slot_tiers[slot]] += st.hits;
+                tier_cache_lookups[slot_tiers[slot]] += st.lookups;
+                cache_stats.accumulate(&st);
+            }
+            // the session and the caches classified independently from the
+            // same immutable state: they must agree
+            debug_assert_eq!(
+                cache_stats.hits,
+                outcomes.iter().map(|o| o.piece_hits).sum::<u64>(),
+                "session ledger and cache commit disagree on hits"
+            );
+        }
 
         // Phase 3a — compute: dropout coin + ClientUpdate per cohort slot,
         // sequential in cohort-index order (byte-identical at any
@@ -338,11 +471,15 @@ impl Trainer {
         let mut max_mem = 0usize;
         let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
         let mut work: Vec<Option<SlotWork>> = Vec::with_capacity(cohort.len());
-        for (i, bundle) in bundles.into_iter().enumerate() {
+        for (i, outcome) in outcomes.into_iter().enumerate() {
             let client = &self.dataset.train[cohort[i]];
             let crng = &mut client_rngs[i];
             let keys = &client_keys[i];
-            let down_bytes = bundle.bytes();
+            // the session's per-client wire charge (post-cache): what the
+            // SimClock moves over the client's downlink — full model under
+            // Option 1, bundle bytes under Options 2/3
+            let down_bytes = outcome.down_bytes;
+            let bundle = outcome.bundle;
             let slice_floats = bundle.total_floats();
 
             // failure injection: drop after download, with the profile's
@@ -401,7 +538,7 @@ impl Trainer {
             });
             work.push(Some(SlotWork {
                 client: cohort[i],
-                tier: self.scheduler.fleet().profiles[cohort[i]].tier,
+                tier: slot_tiers[i],
                 keys: std::mem::take(&mut client_keys[i]),
                 deltas,
             }));
@@ -437,6 +574,7 @@ impl Trainer {
         let completed = outcome.merged.len();
         let mut committees_keyed = 0usize;
         let mut committee_members = 0usize;
+        let mut min_committee_size = usize::MAX;
         // each substrate yields the finalized server update (None when
         // nothing merged); the optimizer step is shared below
         let update: Option<ParamStore> = if self.cfg.secure_agg && self.cfg.secure_committee {
@@ -481,6 +619,10 @@ impl Trainer {
                 }
                 committees_keyed += 1;
                 committee_members += com.size();
+                // the anonymity set of a committee's unmasked sum is its
+                // *submitters* — reconstruction-path dropouts contribute
+                // nothing — so the floor metric counts only those
+                min_committee_size = min_committee_size.min(com.submitters.len());
             }
             (completed > 0).then(|| finalize_mean(acc, &counts, completed, self.cfg.agg))
         } else if self.cfg.secure_agg {
@@ -516,6 +658,23 @@ impl Trainer {
         };
         if let Some(update) = &update {
             self.optimizer.step(&mut self.store, update);
+        }
+
+        // --cache: bump the version clock for exactly the rows this close
+        // wrote. Candidate rows are the union of the merged updates' keys
+        // (identical across all three aggregation substrates); of those,
+        // only rows with a nonzero finalized aggregate actually changed the
+        // store (zero update = fixed point for the cache-validated server
+        // optimizers), so zero-aggregate rows — padded select keys nobody's
+        // data exercises, cancelling contributions — keep their version and
+        // every cached copy of them stays valid. An empty close bumps
+        // nothing.
+        if let (Some(versions), Some(update)) = (self.versions.as_mut(), update.as_ref()) {
+            let mut selected = TouchedKeys::new(self.spec.keyspaces.len());
+            for item in &outcome.merged {
+                selected.record(&item.keys);
+            }
+            versions.bump_written(self.round as u64, &selected, update, &self.spec);
         }
 
         // bytes uploaded *this round* by every computed client — like the
@@ -557,6 +716,11 @@ impl Trainer {
             } else {
                 0.0
             },
+            min_committee_size: if committees_keyed > 0 {
+                min_committee_size
+            } else {
+                0
+            },
             comm,
             up_bytes,
             max_client_mem: max_mem,
@@ -566,6 +730,10 @@ impl Trainer {
             tier_dropped: sim.tier_dropped,
             tier_discarded,
             tier_down_bytes: sim.tier_down_bytes,
+            tier_cache_hits,
+            tier_cache_lookups,
+            cache_evictions: cache_stats.evictions,
+            cache_stale_refreshes: cache_stats.stale_refreshes,
         })
     }
 
@@ -796,6 +964,57 @@ mod tests {
             rc.total_down_bytes,
             ru.total_down_bytes
         );
+    }
+
+    #[test]
+    fn cache_saves_down_bytes_at_an_identical_trajectory() {
+        use crate::data::bow::BowConfig;
+        use crate::scheduler::{FleetKind, SchedPolicy};
+        // reuse by construction: TopFreq keys are deterministic per client,
+        // staleness-fair selection cycles every client back within 4
+        // rounds, a 512 vocab keeps cohorts from writing the whole
+        // keyspace, and a high dropout rate leaves many fetched-but-never-
+        // merged key sets whose rows stay version-fresh
+        let mut base = TrainConfig::logreg_default(512, 64);
+        base.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+        base.rounds = 8;
+        base.cohort = 6;
+        base.eval.every = 0;
+        base.eval.max_examples = 256;
+        base.fleet = FleetKind::Tiered3;
+        base.sched_policy = SchedPolicy::StalenessFair;
+        base.dropout_rate = 0.4;
+        let mut cached = base.clone();
+        cached.cache = true;
+        let off = Trainer::new(base).unwrap().run().unwrap();
+        let on = Trainer::new(cached).unwrap().run().unwrap();
+        // byte-identical trajectory: fresh cache entries are exact copies
+        assert_eq!(off.final_eval.loss.to_bits(), on.final_eval.loss.to_bits());
+        assert_eq!(off.total_up_bytes, on.total_up_bytes);
+        // strictly fewer wire bytes, hits on the ledger
+        assert!(
+            on.total_down_bytes < off.total_down_bytes,
+            "cache-on {} !< cache-off {}",
+            on.total_down_bytes,
+            off.total_down_bytes
+        );
+        assert!(on.rounds.iter().map(|r| r.comm.client_cache_hits).sum::<u64>() > 0);
+        assert_eq!(
+            off.rounds.iter().map(|r| r.comm.client_cache_hits).sum::<u64>(),
+            0
+        );
+        for (a, b) in off.rounds.iter().zip(on.rounds.iter()) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.comm.psi_evals, b.comm.psi_evals);
+            assert_eq!(a.comm.cdn_queries, b.comm.cdn_queries);
+            assert_eq!(a.comm.up_key_bytes, b.comm.up_key_bytes);
+            assert!(b.comm.down_bytes <= a.comm.down_bytes);
+            // the wire ledger and the tier ledger agree post-cache
+            assert_eq!(b.tier_down_bytes.iter().sum::<u64>(), b.comm.down_bytes);
+            // fewer wire bytes can only shorten the simulated round
+            assert!(b.sim_round_s <= a.sim_round_s + 1e-9);
+        }
     }
 
     #[test]

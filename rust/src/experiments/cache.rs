@@ -1,0 +1,176 @@
+//! Cross-round slice-cache sweep: eviction policy × cache budget × fleet
+//! on a repeated-selection workload (stable `TopFreq` keys, staleness-fair
+//! cycling so every client returns within one pass, tiered dropout so
+//! fetched-but-never-merged key sets stay version-fresh). The headline is
+//! **down-bytes saved** against the cache-off baseline of the same seed —
+//! and because fresh cache entries are exact copies, every cached row has
+//! the *byte-identical* model trajectory of its baseline (the final-metric
+//! column must match the baseline row exactly).
+
+use crate::cache::EvictPolicy;
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::bow::BowConfig;
+use crate::error::Result;
+use crate::metrics::Table;
+use crate::scheduler::{FleetKind, SchedPolicy};
+
+use super::ExpOptions;
+
+/// `--id cache`: eviction policy × budget fraction × fleet, with a
+/// cache-off baseline row per fleet.
+pub fn sweep(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let (vocab, m) = (1024usize, 128usize);
+    let (rounds, cohort, n_clients) = if opts.quick { (8, 8, 32) } else { (16, 12, 60) };
+    let ds_cfg = BowConfig::new(vocab, 50).with_clients(n_clients, 8, 12);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let mut t = Table::new(
+        "Slice-cache sweep (down-bytes saved vs cache-off baseline)",
+        &[
+            "fleet",
+            "evict",
+            "budget_frac",
+            "hit_rate_pct",
+            "down_MB",
+            "saved_MB",
+            "saved_pct",
+            "evictions",
+            "stale_refreshes",
+            "final_metric",
+            "sim_total_s",
+        ],
+    );
+    for fleet in [FleetKind::Tiered3, FleetKind::FlakyEdge] {
+        let make = |cache: Option<(EvictPolicy, f64)>| {
+            let mut cfg = TrainConfig::logreg_default(vocab, m);
+            cfg.dataset = DatasetConfig::Bow(ds_cfg.clone());
+            cfg.engine = opts.engine.clone();
+            cfg.rounds = rounds;
+            cfg.cohort = cohort;
+            cfg.eval.every = 0;
+            cfg.eval.max_examples = if opts.quick { 512 } else { 2048 };
+            cfg.fleet = fleet.clone();
+            cfg.sched_policy = SchedPolicy::StalenessFair;
+            cfg.dropout_rate = 0.3;
+            cfg.seed = 2024;
+            if let Some((evict, budget)) = cache {
+                cfg.cache = true;
+                cfg.cache_evict = evict;
+                cfg.cache_budget_frac = budget;
+            }
+            cfg
+        };
+        // cache-off baseline of the same seed (identical trajectory)
+        let base = Trainer::with_dataset(make(None), dataset.clone())?.run()?;
+        let base_down = base.total_down_bytes as f64 / 1e6;
+        t.push(vec![
+            fleet.to_string(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{base_down:.2}"),
+            "0.00".into(),
+            "0.0".into(),
+            "0".into(),
+            "0".into(),
+            format!("{:.4}", base.final_eval.metric),
+            format!("{:.1}", base.total_sim_s),
+        ]);
+        for evict in EvictPolicy::ALL {
+            for budget in [0.25f64, 1.0] {
+                let report =
+                    Trainer::with_dataset(make(Some((evict, budget))), dataset.clone())?.run()?;
+                let down = report.total_down_bytes as f64 / 1e6;
+                let hits: u64 = report.rounds.iter().map(|r| r.comm.client_cache_hits).sum();
+                let lookups: u64 = report
+                    .rounds
+                    .iter()
+                    .flat_map(|r| r.tier_cache_lookups.iter())
+                    .sum();
+                let evictions: u64 = report.rounds.iter().map(|r| r.cache_evictions).sum();
+                let stale: u64 = report
+                    .rounds
+                    .iter()
+                    .map(|r| r.cache_stale_refreshes)
+                    .sum();
+                t.push(vec![
+                    fleet.to_string(),
+                    evict.to_string(),
+                    format!("{budget}"),
+                    format!(
+                        "{:.1}",
+                        if lookups > 0 {
+                            100.0 * hits as f64 / lookups as f64
+                        } else {
+                            0.0
+                        }
+                    ),
+                    format!("{down:.2}"),
+                    format!("{:.2}", base_down - down),
+                    format!("{:.1}", 100.0 * (base_down - down) / base_down.max(1e-12)),
+                    evictions.to_string(),
+                    stale.to_string(),
+                    format!("{:.4}", report.final_eval.metric),
+                    format!("{:.1}", report.total_sim_s),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    /// The acceptance shape of the cache experiment: every cached
+    /// configuration strictly saves down-bytes at a byte-identical model
+    /// trajectory, and tight budgets actually churn the caches.
+    #[test]
+    fn cache_sweep_saves_bytes_at_identical_metrics() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_cache_sweep")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let tables = sweep(&opts).unwrap();
+        assert_eq!(tables.len(), 1);
+        // 2 fleets x (1 baseline + 3 evict x 2 budgets)
+        assert_eq!(tables[0].rows.len(), 14);
+        for fleet in ["tiered-3", "flaky-edge"] {
+            let rows: Vec<&Vec<String>> =
+                tables[0].rows.iter().filter(|r| r[0] == fleet).collect();
+            assert_eq!(rows.len(), 7);
+            let base = rows.iter().find(|r| r[1] == "-").unwrap();
+            let base_down: f64 = base[4].parse().unwrap();
+            for r in rows.iter().filter(|r| r[1] != "-") {
+                let label = format!("{fleet}/{}/{}", r[1], r[2]);
+                // strictly fewer wire bytes than the cache-off baseline
+                assert!(r[6].parse::<f64>().unwrap() > 0.0, "{label}: nothing saved");
+                assert!(r[4].parse::<f64>().unwrap() < base_down, "{label}");
+                assert!(r[3].parse::<f64>().unwrap() > 0.0, "{label}: zero hit rate");
+                // byte-identical trajectory: the metric matches the
+                // baseline to the last printed digit
+                assert_eq!(r[9], base[9], "{label}: trajectory diverged");
+                // faster (or equal) simulated training: fewer bytes moved
+                assert!(
+                    r[10].parse::<f64>().unwrap() <= base[10].parse::<f64>().unwrap() + 1e-9,
+                    "{label}: sim time rose"
+                );
+            }
+            // the tight budget must churn at least one configuration
+            if fleet == "tiered-3" {
+                assert!(
+                    rows.iter()
+                        .filter(|r| r[2] == "0.25")
+                        .any(|r| r[7].parse::<u64>().unwrap() > 0),
+                    "tight budgets never evicted"
+                );
+            }
+        }
+    }
+}

@@ -20,8 +20,10 @@
 //! | `sched`  | (beyond the paper) cohort-scheduler policy × fleet sweep |
 //! | `async`  | (beyond the paper) aggregation-mode × fleet sweep on the round engine |
 //! | `secagg` | (beyond the paper) secure-aggregation committee size × mode × fleet sweep |
+//! | `cache`  | (beyond the paper) slice-cache eviction policy × budget × fleet sweep |
 
 mod async_agg;
+mod cache;
 mod emnist;
 mod logreg;
 mod scheduler;
@@ -57,7 +59,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
-    "async", "secagg",
+    "async", "secagg", "cache",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -76,6 +78,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "sched" => scheduler::sweep(opts)?,
         "async" => async_agg::sweep(opts)?,
         "secagg" => secagg::sweep(opts)?,
+        "cache" => cache::sweep(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

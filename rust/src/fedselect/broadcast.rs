@@ -5,8 +5,14 @@
 //! a thin wrapper over the round's [`SlicePlan`] — broadcast segments are
 //! `Arc`-shared instead of cloned per client, so the simulator no longer
 //! pays a full-model copy per fetch (the wire ledger still charges one).
+//!
+//! Under a delta fetch the wire unit is the whole *segment* (keys never go
+//! up, so the server cannot diff finer): a client re-downloads only the
+//! segments written since its last fetch. Keyed segments are written by
+//! nearly every round, so Option 1 benefits least from the cross-round
+//! cache — which is itself part of the §3.2 trade-off story.
 
-use super::piece::{SliceBundle, SlicePlan};
+use super::piece::{DeltaPlan, FetchOutcome, SlicePlan};
 use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};
@@ -23,7 +29,6 @@ impl BroadcastService {
 struct BroadcastSession<'a> {
     store: &'a ParamStore,
     plan: SlicePlan,
-    full_bytes: u64,
     ledger: CommLedger,
 }
 
@@ -40,7 +45,6 @@ impl SliceService for BroadcastService {
         Ok(Box::new(BroadcastSession {
             store,
             plan: SlicePlan::new(store, spec),
-            full_bytes: store.bytes() as u64,
             ledger: CommLedger::default(),
         }))
     }
@@ -51,11 +55,28 @@ impl RoundSession for BroadcastSession<'_> {
         "broadcast"
     }
 
-    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
-        // Full model over the wire; ψ runs client-side (not counted as
-        // server psi_evals).
-        self.ledger.add_down_bytes(self.full_bytes);
-        self.plan.fetch(self.store, keys)
+    fn fetch_delta(&self, keys: &[Vec<u32>], delta: &DeltaPlan) -> Result<FetchOutcome> {
+        // Full model over the wire, minus cache-fresh segments; ψ runs
+        // client-side (not counted as server psi_evals). With an empty
+        // delta this charges exactly `store.bytes()` — the legacy ledger.
+        let (mut down, mut hits, mut hit_bytes) = (0u64, 0u64, 0u64);
+        for (i, seg) in self.store.segments.iter().enumerate() {
+            let b = seg.len() as u64 * 4;
+            if delta.fresh_segs.contains(&i) {
+                hits += 1;
+                hit_bytes += b;
+            } else {
+                down += b;
+            }
+        }
+        self.ledger.add_down_bytes(down);
+        self.ledger.add_client_cache_hits(hits);
+        Ok(FetchOutcome {
+            bundle: self.plan.fetch(self.store, keys)?,
+            down_bytes: down,
+            piece_hits: hits,
+            hit_bytes,
+        })
     }
 
     fn finish(self: Box<Self>) -> RoundComm {

@@ -17,8 +17,17 @@
 //! | impl | ψ happens | session ledger semantics | key privacy |
 //! |---|---|---|---|
 //! | [`broadcast::BroadcastService`] | on clients, after a full-model download | `down_bytes` += full model per fetch; no server `psi_evals` | keys never leave device |
-//! | [`on_demand::OnDemandService`]  | on the server, per distinct key, at fetch time | `psi_evals` per computed piece, `cache_hits` for memoized ones (shared across the cohort's threads), `up_key_bytes` for uploaded keys | server sees keys |
+//! | [`on_demand::OnDemandService`]  | on the server, per distinct key, at fetch time | `psi_evals` per computed piece, `memo_hits` for memoized ones (shared across the cohort's threads), `up_key_bytes` for uploaded keys | server sees keys |
 //! | [`pregen::PregenCdnService`]    | on the server, for *all* K keys, inside `begin_round` | `pregen_slices`/`psi_evals` charged at session start; fetches only count `cdn_queries` and bytes; `service_us` is bounded below by the busiest CDN shard | CDN sees keys (PIR optional) |
+//!
+//! Two caches appear in the ledger, deliberately split: `memo_hits` are
+//! *within-round, server-side* — the on-demand memo amortizing ψ across one
+//! cohort — while `client_cache_hits` are *cross-round, device-side* — the
+//! [`crate::cache`] subsystem serving unchanged pieces without downlink
+//! bytes via [`RoundSession::fetch_delta`]. A delta fetch changes only
+//! `down_bytes` and `client_cache_hits`; every other ledger charge
+//! (keys up, ψ/memo/CDN work, service time) models revalidation at full
+//! cost, so cache-on and cache-off runs agree on every non-downlink field.
 //!
 //! Every implementation returns byte-identical slices — property-tested both
 //! sequentially and across threads — so they are interchangeable behind the
@@ -40,7 +49,7 @@ pub mod pregen;
 pub use broadcast::BroadcastService;
 pub use keys::KeyPolicy;
 pub use on_demand::OnDemandService;
-pub use piece::{SliceBundle, SlicePlan, SliceSeg};
+pub use piece::{DeltaPlan, FetchOutcome, SliceBundle, SlicePlan, SliceSeg};
 pub use pregen::PregenCdnService;
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -112,8 +121,13 @@ pub struct RoundComm {
     pub up_key_bytes: u64,
     /// Server-side ψ evaluations (per key).
     pub psi_evals: u64,
-    /// ψ evaluations avoided by the on-demand memo cache.
-    pub cache_hits: u64,
+    /// ψ evaluations avoided by the on-demand *within-round* memo (Option
+    /// 2's server-side cache, reset every session).
+    pub memo_hits: u64,
+    /// Pieces served from clients' *cross-round* on-device caches
+    /// ([`crate::cache`]) instead of the wire — each hit's bytes are
+    /// absent from `down_bytes`.
+    pub client_cache_hits: u64,
     /// Slices pre-generated before the round (Option 3).
     pub pregen_slices: u64,
     /// CDN queries served.
@@ -127,7 +141,8 @@ impl RoundComm {
         self.down_bytes += other.down_bytes;
         self.up_key_bytes += other.up_key_bytes;
         self.psi_evals += other.psi_evals;
-        self.cache_hits += other.cache_hits;
+        self.memo_hits += other.memo_hits;
+        self.client_cache_hits += other.client_cache_hits;
         self.pregen_slices += other.pregen_slices;
         self.cdn_queries += other.cdn_queries;
         self.service_us += other.service_us;
@@ -142,7 +157,8 @@ pub struct CommLedger {
     down_bytes: AtomicU64,
     up_key_bytes: AtomicU64,
     psi_evals: AtomicU64,
-    cache_hits: AtomicU64,
+    memo_hits: AtomicU64,
+    client_cache_hits: AtomicU64,
     pregen_slices: AtomicU64,
     cdn_queries: AtomicU64,
     service_us: AtomicU64,
@@ -158,8 +174,11 @@ impl CommLedger {
     pub fn add_psi_evals(&self, n: u64) {
         self.psi_evals.fetch_add(n, Relaxed);
     }
-    pub fn add_cache_hits(&self, n: u64) {
-        self.cache_hits.fetch_add(n, Relaxed);
+    pub fn add_memo_hits(&self, n: u64) {
+        self.memo_hits.fetch_add(n, Relaxed);
+    }
+    pub fn add_client_cache_hits(&self, n: u64) {
+        self.client_cache_hits.fetch_add(n, Relaxed);
     }
     pub fn add_pregen_slices(&self, n: u64) {
         self.pregen_slices.fetch_add(n, Relaxed);
@@ -181,7 +200,8 @@ impl CommLedger {
             down_bytes: self.down_bytes.load(Relaxed),
             up_key_bytes: self.up_key_bytes.load(Relaxed),
             psi_evals: self.psi_evals.load(Relaxed),
-            cache_hits: self.cache_hits.load(Relaxed),
+            memo_hits: self.memo_hits.load(Relaxed),
+            client_cache_hits: self.client_cache_hits.load(Relaxed),
             pregen_slices: self.pregen_slices.load(Relaxed),
             cdn_queries: self.cdn_queries.load(Relaxed),
             service_us: self.service_us.load(Relaxed),
@@ -212,39 +232,85 @@ pub trait RoundSession: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Deliver the sub-model for one client (`keys[ks]` per keyspace `ks`),
-    /// in artifact parameter order.
-    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle>;
+    /// in artifact parameter order. Equivalent to a delta fetch with
+    /// nothing fresh (every piece downloads).
+    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+        self.fetch_delta(keys, &DeltaPlan::default()).map(|o| o.bundle)
+    }
 
-    /// Slice a whole cohort, preserving input order. With `threads > 1` the
-    /// batch is split into contiguous chunks sliced concurrently via
-    /// `std::thread::scope`; output is byte-identical to the sequential
-    /// per-client path (property-tested).
-    fn fetch_batch(&self, batch: &[ClientKeys], threads: usize) -> Result<Vec<SliceBundle>> {
+    /// Delta-aware fetch: the same bundle as [`fetch`](Self::fetch), but
+    /// pieces listed fresh in `delta` are served from the client's
+    /// cross-round on-device cache — ledgered as `client_cache_hits`
+    /// instead of `down_bytes`. Every *other* ledger charge (keys up,
+    /// ψ/memo/CDN work, service time) is made exactly as in a plain fetch:
+    /// revalidation rides the same code path as serving, only the payload
+    /// bytes are saved. With an empty `delta` the ledger is byte-identical
+    /// to [`fetch`](Self::fetch).
+    fn fetch_delta(&self, keys: &[Vec<u32>], delta: &DeltaPlan) -> Result<FetchOutcome>;
+
+    /// Delta-aware [`fetch_batch`](Self::fetch_batch): `deltas` is aligned
+    /// with `batch` (one plan per client). Same chunked-threads execution
+    /// and ordering guarantees.
+    fn fetch_batch_delta(
+        &self,
+        batch: &[ClientKeys],
+        deltas: &[DeltaPlan],
+        threads: usize,
+    ) -> Result<Vec<FetchOutcome>> {
+        if batch.len() != deltas.len() {
+            return Err(crate::error::Error::Shape(format!(
+                "fetch_batch_delta: {} clients but {} delta plans",
+                batch.len(),
+                deltas.len()
+            )));
+        }
         let threads = threads.max(1).min(batch.len().max(1));
         if threads <= 1 {
-            return batch.iter().map(|keys| self.fetch(keys)).collect();
+            return batch
+                .iter()
+                .zip(deltas.iter())
+                .map(|(keys, d)| self.fetch_delta(keys, d))
+                .collect();
         }
-        // split into exactly `threads` near-equal chunks (sizes differ by at
-        // most one), so the requested parallelism is actually reached
         let base = batch.len() / threads;
         let extra = batch.len() % threads;
-        let mut results: Vec<Result<SliceBundle>> = Vec::with_capacity(batch.len());
+        let mut results: Vec<Result<FetchOutcome>> = Vec::with_capacity(batch.len());
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(threads);
-            let mut rest = batch;
+            let (mut rest, mut drest) = (batch, deltas);
             for i in 0..threads {
                 let take = base + usize::from(i < extra);
                 let (ch, tail) = rest.split_at(take);
+                let (dh, dtail) = drest.split_at(take);
                 rest = tail;
-                handles.push(
-                    s.spawn(move || ch.iter().map(|keys| self.fetch(keys)).collect::<Vec<_>>()),
-                );
+                drest = dtail;
+                handles.push(s.spawn(move || {
+                    ch.iter()
+                        .zip(dh.iter())
+                        .map(|(keys, d)| self.fetch_delta(keys, d))
+                        .collect::<Vec<_>>()
+                }));
             }
             for h in handles {
                 results.extend(h.join().expect("slice fetch worker panicked"));
             }
         });
         results.into_iter().collect()
+    }
+
+    /// Slice a whole cohort, preserving input order. With `threads > 1` the
+    /// batch is split into contiguous chunks sliced concurrently via
+    /// `std::thread::scope`; output is byte-identical to the sequential
+    /// per-client path (property-tested). One threading implementation
+    /// exists — this is [`fetch_batch_delta`](Self::fetch_batch_delta) with
+    /// empty plans, bundles only.
+    fn fetch_batch(&self, batch: &[ClientKeys], threads: usize) -> Result<Vec<SliceBundle>> {
+        let empty = vec![DeltaPlan::default(); batch.len()];
+        Ok(self
+            .fetch_batch_delta(batch, &empty, threads)?
+            .into_iter()
+            .map(|o| o.bundle)
+            .collect())
     }
 
     /// End the round and drain its ledger.
@@ -341,11 +407,99 @@ mod tests {
         assert!(lc_od.down_bytes < lc_bc.down_bytes);
         assert!(lc_od.up_key_bytes > 0);
         assert_eq!(lc_od.psi_evals, 4);
-        assert_eq!(lc_od.cache_hits, 4);
+        assert_eq!(lc_od.memo_hits, 4);
+        assert_eq!(lc_od.client_cache_hits, 0);
         // pregen: all K slices computed ahead of time
         assert_eq!(lc_pg.pregen_slices, 64);
         assert_eq!(lc_pg.cdn_queries, 4);
         assert!(lc_pg.down_bytes < lc_bc.down_bytes);
+    }
+
+    #[test]
+    fn delta_fetch_saves_only_downlink_bytes() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(3, 0));
+        let spec = arch.select_spec();
+        let keys = vec![vec![5u32, 0, 63]];
+        for imp in [SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            let sess = svc.begin_round(&store, &spec).unwrap();
+            let plain = sess.fetch(&keys).unwrap();
+            let mut d = DeltaPlan::default();
+            d.fresh_keys.insert((0, 5));
+            d.fresh_segs.insert(1); // logreg bias segment
+            let out = sess.fetch_delta(&keys, &d).unwrap();
+            assert_eq!(out.bundle.to_vecs(), plain.to_vecs(), "{imp}: bundle identical");
+            assert_eq!(out.piece_hits, 2, "{imp}");
+            assert_eq!(out.down_bytes + out.hit_bytes, plain.bytes(), "{imp}");
+            let l = sess.finish();
+            assert_eq!(l.client_cache_hits, 2, "{imp}");
+            // plain fetch charged the full bundle, delta fetch only the
+            // stale remainder; everything else was charged both times
+            assert_eq!(l.down_bytes, plain.bytes() + out.down_bytes, "{imp}");
+            assert_eq!(l.up_key_bytes, 2 * 3 * 4, "{imp}: keys go up both times");
+        }
+        // Option 1 deltas work at segment granularity
+        let mut svc = SliceImpl::Broadcast.build();
+        let sess = svc.begin_round(&store, &spec).unwrap();
+        let mut d = DeltaPlan::default();
+        d.fresh_segs.insert(0);
+        d.fresh_segs.insert(1);
+        let out = sess.fetch_delta(&keys, &d).unwrap();
+        assert_eq!(out.down_bytes, 0, "everything fresh: nothing on the wire");
+        assert_eq!(out.hit_bytes, store.bytes() as u64);
+        let l = sess.finish();
+        assert_eq!(l.down_bytes, 0);
+        assert_eq!(l.client_cache_hits, 2);
+    }
+
+    #[test]
+    fn fetch_batch_delta_matches_per_client_delta_fetches() {
+        let arch = ModelArch::logreg(64);
+        let store = arch.init_store(&mut Rng::new(5, 0));
+        let spec = arch.select_spec();
+        let mut rng = Rng::new(9, 1);
+        let batch: Vec<ClientKeys> = (0..9)
+            .map(|_| {
+                vec![rng
+                    .sample_without_replacement(64, 8)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()]
+            })
+            .collect();
+        // every other client has its first two keys "cached"
+        let deltas: Vec<DeltaPlan> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, keys)| {
+                let mut d = DeltaPlan::default();
+                if i % 2 == 0 {
+                    d.fresh_keys.insert((0, keys[0][0]));
+                    d.fresh_keys.insert((0, keys[0][1]));
+                }
+                d
+            })
+            .collect();
+        for imp in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+            let mut svc = imp.build();
+            let session = svc.begin_round(&store, &spec).unwrap();
+            let seq: Vec<_> = batch
+                .iter()
+                .zip(deltas.iter())
+                .map(|(k, d)| session.fetch_delta(k, d).unwrap())
+                .collect();
+            for threads in [1usize, 3, 8] {
+                let par = session.fetch_batch_delta(&batch, &deltas, threads).unwrap();
+                for (a, b) in seq.iter().zip(par.iter()) {
+                    assert_eq!(a.bundle.to_vecs(), b.bundle.to_vecs(), "{imp}");
+                    assert_eq!(a.down_bytes, b.down_bytes, "{imp} threads={threads}");
+                    assert_eq!(a.piece_hits, b.piece_hits, "{imp}");
+                }
+            }
+            // misaligned plans are an error, not a truncation
+            assert!(session.fetch_batch_delta(&batch, &deltas[1..], 2).is_err());
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-use super::piece::{piece_for_key, SliceBundle, SlicePlan};
+use super::piece::{piece_for_key, DeltaPlan, FetchOutcome, SlicePlan};
 use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::error::Result;
 use crate::model::{ParamStore, SelectSpec};
@@ -101,16 +101,20 @@ impl RoundSession for OnDemandSession<'_> {
         "on-demand"
     }
 
-    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+    fn fetch_delta(&self, keys: &[Vec<u32>], delta: &DeltaPlan) -> Result<FetchOutcome> {
         self.plan.check_keys(keys)?;
-        // keys go up: 4 bytes per key
+        // keys go up: 4 bytes per key. Cache-fresh keys go up too — the
+        // server must see the full key+version list to answer "fresh", so
+        // revalidation costs the same uplink as serving.
         let total_keys: usize = keys.iter().map(|k| k.len()).sum();
         self.ledger.add_up_key_bytes((total_keys * 4) as u64);
 
         // resolve this client's pieces: reuse from the shared memo when
         // possible, compute (and publish) otherwise. Exactly one of
-        // psi_evals / cache_hits is charged per requested key occurrence
-        // (duplicates included), matching the sequential accounting.
+        // psi_evals / memo_hits is charged per requested key occurrence
+        // (duplicates included), matching the sequential accounting; the
+        // cross-round delta plan deliberately does NOT short-circuit this —
+        // ψ/memo charges are identical with the client cache on or off.
         let mut local: HashMap<(usize, u32), Arc<Vec<f32>>> =
             HashMap::with_capacity(total_keys);
         for (ks, kk) in keys.iter().enumerate() {
@@ -119,7 +123,7 @@ impl RoundSession for OnDemandSession<'_> {
                     // covers duplicates within this fetch too: the first
                     // occurrence published the piece to the shared memo
                     if let Some(piece) = self.cache.get((ks, k)) {
-                        self.ledger.add_cache_hits(1);
+                        self.ledger.add_memo_hits(1);
                         local.insert((ks, k), piece);
                         continue;
                     }
@@ -141,12 +145,20 @@ impl RoundSession for OnDemandSession<'_> {
             }
         }
 
-        // downlink: broadcast segments + selected slice bytes
-        self.ledger
-            .add_down_bytes(self.plan.broadcast_bytes() + self.plan.keyed_bytes(keys));
+        // downlink: broadcast segments + selected slice bytes, minus what
+        // the client's cross-round cache already holds at a fresh version
+        let (down, hits, hit_bytes) = self.plan.delta_down_bytes(keys, delta);
+        self.ledger.add_down_bytes(down);
+        self.ledger.add_client_cache_hits(hits);
 
-        self.plan
-            .assemble(keys, |ks, k| local[&(ks, k)].as_slice())
+        Ok(FetchOutcome {
+            bundle: self
+                .plan
+                .assemble(keys, |ks, k| local[&(ks, k)].as_slice())?,
+            down_bytes: down,
+            piece_hits: hits,
+            hit_bytes,
+        })
     }
 
     fn finish(self: Box<Self>) -> RoundComm {
@@ -172,13 +184,13 @@ mod tests {
         sess.fetch(&keys).unwrap();
         let l1 = sess.finish();
         assert_eq!(l1.psi_evals, 3);
-        assert_eq!(l1.cache_hits, 3);
+        assert_eq!(l1.memo_hits, 3);
         // new round == new session: cache starts empty
         let sess = svc.begin_round(&store, &spec).unwrap();
         sess.fetch(&keys).unwrap();
         let l2 = sess.finish();
         assert_eq!(l2.psi_evals, 3);
-        assert_eq!(l2.cache_hits, 0);
+        assert_eq!(l2.memo_hits, 0);
     }
 
     #[test]
@@ -193,7 +205,7 @@ mod tests {
         sess.fetch(&keys).unwrap();
         let l = sess.finish();
         assert_eq!(l.psi_evals, 4);
-        assert_eq!(l.cache_hits, 0);
+        assert_eq!(l.memo_hits, 0);
     }
 
     #[test]
@@ -207,13 +219,13 @@ mod tests {
         let sess = svc.begin_round(&store, &spec).unwrap();
         sess.fetch(&dup).unwrap();
         let l = sess.finish();
-        assert_eq!((l.psi_evals, l.cache_hits), (1, 1));
+        assert_eq!((l.psi_evals, l.memo_hits), (1, 1));
 
         let mut svc = OnDemandService::new(false);
         let sess = svc.begin_round(&store, &spec).unwrap();
         sess.fetch(&dup).unwrap();
         let l = sess.finish();
-        assert_eq!((l.psi_evals, l.cache_hits), (2, 0));
+        assert_eq!((l.psi_evals, l.memo_hits), (2, 0));
     }
 
     #[test]
@@ -230,6 +242,6 @@ mod tests {
         // every fetch asked for the same 4 keys: at most one ψ per key per
         // racing thread, and at least the 4 required; the rest were hits
         assert!(l.psi_evals >= 4, "psi {}", l.psi_evals);
-        assert_eq!(l.psi_evals + l.cache_hits, 8 * 4);
+        assert_eq!(l.psi_evals + l.memo_hits, 8 * 4);
     }
 }

@@ -19,10 +19,51 @@
 //! both [`super::on_demand`] and [`super::pregen`], so Options 2 and 3 are
 //! byte-identical with Option 1's direct [`SlicePlan::fetch`].
 
+use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::model::{Binding, KeyMap, ParamStore, SelectSpec};
+
+/// Which of one client's pieces are *fresh* in its cross-round on-device
+/// cache — built by [`crate::cache::FleetCaches::plan_for`] from the
+/// client's cache versus the server's
+/// [`VersionClock`](crate::cache::VersionClock), and consumed by
+/// [`RoundSession::fetch_delta`](super::RoundSession::fetch_delta): fresh
+/// pieces are served locally (ledgered as client-cache hits, zero downlink
+/// bytes), everything else downloads exactly as a plain fetch would. The
+/// default (empty) plan reproduces the cache-off ledger byte for byte.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaPlan {
+    /// Keyed pieces fresh in the client's cache, as `(keyspace, key)`.
+    pub fresh_keys: HashSet<(usize, u32)>,
+    /// Model segments (by segment index) whose full broadcast copy is
+    /// fresh: `Binding::Full` segments under Options 2/3, any segment
+    /// under Option 1's whole-model download.
+    pub fresh_segs: HashSet<usize>,
+}
+
+impl DeltaPlan {
+    /// Nothing is fresh: every piece downloads (the cache-off ledger).
+    pub fn is_empty(&self) -> bool {
+        self.fresh_keys.is_empty() && self.fresh_segs.is_empty()
+    }
+}
+
+/// One client's delta-aware fetch result: the bundle (byte-identical to a
+/// plain [`RoundSession::fetch`](super::RoundSession::fetch)) plus the
+/// wire/cache split of its downlink.
+#[derive(Clone, Debug)]
+pub struct FetchOutcome {
+    pub bundle: SliceBundle,
+    /// Bytes that actually crossed the wire for this client (post-cache);
+    /// equals `bundle`-level downlink when the delta plan is empty.
+    pub down_bytes: u64,
+    /// Piece/segment lookups served from the client's cache.
+    pub piece_hits: u64,
+    /// Bytes those hits would have cost on the wire.
+    pub hit_bytes: u64,
+}
 
 /// One delivered buffer: a broadcast segment shared across the cohort, or a
 /// keyed slice owned by this client.
@@ -135,7 +176,9 @@ pub fn piece_bytes(spec: &SelectSpec, keyspace: usize) -> u64 {
 /// Resolved form of one binding inside a [`SlicePlan`].
 enum PlanEntry {
     /// Broadcast segment, cloned once at plan build and shared from then on.
-    Full { data: Arc<Vec<f32>> },
+    /// `seg` is the source segment id (delta plans track broadcast
+    /// freshness per segment).
+    Full { seg: usize, data: Arc<Vec<f32>> },
     /// Keyed binding: source segment + geometry + its offset inside a piece
     /// of its keyspace.
     Keyed {
@@ -168,7 +211,7 @@ impl SlicePlan {
                     // the one and only per-round copy of a broadcast segment
                     let data = Arc::new(store.segments[*seg].data.clone());
                     broadcast_floats += data.len();
-                    entries.push(PlanEntry::Full { data });
+                    entries.push(PlanEntry::Full { seg: *seg, data });
                 }
                 Binding::Keyed { seg, keyspace, map } => {
                     entries.push(PlanEntry::Keyed {
@@ -216,6 +259,39 @@ impl SlicePlan {
             .sum()
     }
 
+    /// Downlink split of one client's fetch under a [`DeltaPlan`]:
+    /// `(wire_bytes, cache_hits, hit_bytes)`. Broadcast segments are fresh
+    /// or stale as whole segments; keyed pieces per key occurrence
+    /// (duplicates pay or hit per occurrence, matching
+    /// [`SlicePlan::keyed_bytes`]). An empty plan yields exactly
+    /// `broadcast_bytes() + keyed_bytes(keys)` on the wire.
+    pub fn delta_down_bytes(&self, keys: &[Vec<u32>], delta: &DeltaPlan) -> (u64, u64, u64) {
+        let (mut down, mut hits, mut hit_bytes) = (0u64, 0u64, 0u64);
+        for e in &self.entries {
+            if let PlanEntry::Full { seg, data } = e {
+                let b = data.len() as u64 * 4;
+                if delta.fresh_segs.contains(seg) {
+                    hits += 1;
+                    hit_bytes += b;
+                } else {
+                    down += b;
+                }
+            }
+        }
+        for (ks, kk) in keys.iter().enumerate() {
+            let pb = self.piece_bytes(ks);
+            for &k in kk {
+                if delta.fresh_keys.contains(&(ks, k)) {
+                    hits += 1;
+                    hit_bytes += pb;
+                } else {
+                    down += pb;
+                }
+            }
+        }
+        (down, hits, hit_bytes)
+    }
+
     /// Validate key-set arity and ranges up front (so concurrent fetches
     /// fail with an error instead of an out-of-bounds panic).
     pub fn check_keys(&self, keys: &[Vec<u32>]) -> Result<()> {
@@ -245,7 +321,7 @@ impl SlicePlan {
         let mut segs = Vec::with_capacity(self.entries.len());
         for e in &self.entries {
             match e {
-                PlanEntry::Full { data } => segs.push(SliceSeg::Shared(data.clone())),
+                PlanEntry::Full { data, .. } => segs.push(SliceSeg::Shared(data.clone())),
                 PlanEntry::Keyed {
                     seg, keyspace, map, ..
                 } => {
@@ -283,7 +359,7 @@ impl SlicePlan {
         let mut segs = Vec::with_capacity(self.entries.len());
         for e in &self.entries {
             match e {
-                PlanEntry::Full { data } => segs.push(SliceSeg::Shared(data.clone())),
+                PlanEntry::Full { data, .. } => segs.push(SliceSeg::Shared(data.clone())),
                 PlanEntry::Keyed {
                     keyspace,
                     map,
@@ -391,6 +467,34 @@ mod tests {
         assert!(plan
             .assemble(&[vec![0u32], vec![0u32]], |_, _| &[])
             .is_err());
+    }
+
+    #[test]
+    fn delta_down_bytes_splits_wire_and_cache() {
+        let arch = ModelArch::logreg(32);
+        let store = arch.init_store(&mut Rng::new(6, 0));
+        let spec = arch.select_spec();
+        let plan = SlicePlan::new(&store, &spec);
+        let keys = vec![vec![1u32, 3, 5]];
+        // the empty plan reproduces the plain accounting exactly
+        let (down, hits, hb) = plan.delta_down_bytes(&keys, &DeltaPlan::default());
+        assert_eq!(down, plan.broadcast_bytes() + plan.keyed_bytes(&keys));
+        assert_eq!((hits, hb), (0, 0));
+        // fresh key 3 plus the fresh bias segment (logreg segment 1)
+        let mut d = DeltaPlan::default();
+        d.fresh_keys.insert((0, 3));
+        d.fresh_segs.insert(1);
+        assert!(!d.is_empty());
+        let (down2, hits2, hb2) = plan.delta_down_bytes(&keys, &d);
+        assert_eq!(down2 + hb2, down, "wire + cache must cover the bundle");
+        assert_eq!(hits2, 2);
+        assert_eq!(hb2, plan.piece_bytes(0) + plan.broadcast_bytes());
+        assert!(down2 < down);
+        // a fresh key the client did not select changes nothing
+        let mut irrelevant = DeltaPlan::default();
+        irrelevant.fresh_keys.insert((0, 31));
+        let (down3, hits3, _) = plan.delta_down_bytes(&keys, &irrelevant);
+        assert_eq!((down3, hits3), (down, 0));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::piece::{piece_for_key, SliceBundle, SlicePlan};
+use super::piece::{piece_for_key, DeltaPlan, FetchOutcome, SlicePlan};
 use super::{CommLedger, RoundComm, RoundSession, SliceService};
 use crate::cdn::CdnStore;
 use crate::error::{Error, Result};
@@ -92,15 +92,19 @@ impl RoundSession for PregenSession<'_> {
         "pregen-cdn"
     }
 
-    fn fetch(&self, keys: &[Vec<u32>]) -> Result<SliceBundle> {
+    fn fetch_delta(&self, keys: &[Vec<u32>], delta: &DeltaPlan) -> Result<FetchOutcome> {
         self.plan.check_keys(keys)?;
-        // keys go up to the CDN (not the training server)
+        // keys go up to the CDN (not the training server); cache-fresh keys
+        // included — the CDN answers "fresh" from the same query path, so
+        // revalidation is charged exactly like serving (shard load and
+        // latency too), only the payload bytes differ.
         let total_keys: usize = keys.iter().map(|k| k.len()).sum();
         self.ledger.add_up_key_bytes((total_keys * 4) as u64);
         self.ledger.add_cdn_queries(total_keys as u64);
 
-        self.ledger
-            .add_down_bytes(self.plan.broadcast_bytes() + self.plan.keyed_bytes(keys));
+        let (down, hits, hit_bytes) = self.plan.delta_down_bytes(keys, delta);
+        self.ledger.add_down_bytes(down);
+        self.ledger.add_client_cache_hits(hits);
 
         // pull pieces through the CDN (records shard load / latency)
         let mut fetched: HashMap<(usize, u32), Arc<Vec<f32>>> =
@@ -117,7 +121,14 @@ impl RoundSession for PregenSession<'_> {
                 fetched.insert((ks, k), piece);
             }
         }
-        self.plan.assemble(keys, |ks, k| fetched[&(ks, k)].as_slice())
+        Ok(FetchOutcome {
+            bundle: self
+                .plan
+                .assemble(keys, |ks, k| fetched[&(ks, k)].as_slice())?,
+            down_bytes: down,
+            piece_hits: hits,
+            hit_bytes,
+        })
     }
 
     fn finish(self: Box<Self>) -> RoundComm {

@@ -10,7 +10,9 @@
 //! driver of the paper's Algorithm 2 with an event-driven round engine
 //! (pluggable synchronous / over-select / buffered-async aggregation on the
 //! simulated clock), a cohort [`scheduler`] (device-profile and trace-driven
-//! fleets, pluggable selection policies, simulated round wall-time),
+//! fleets, pluggable selection policies, simulated round wall-time), a
+//! cross-round client slice [`cache`] (versioned pieces, delta fetch
+//! plans, budgeted on-device caches),
 //! synthetic federated datasets, a CDN substrate with a PIR cost model, and
 //! the experiment harness regenerating every table and figure of the
 //! paper's §5.
@@ -32,6 +34,7 @@
 
 pub mod aggregation;
 pub mod baselines;
+pub mod cache;
 pub mod cdn;
 pub mod clients;
 pub mod config;
@@ -51,7 +54,8 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator};
+    pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator, TouchedKeys};
+    pub use crate::cache::{ClientCache, EvictPolicy, FleetCaches, VersionClock};
     pub use crate::clients::Engine;
     pub use crate::config::{DatasetConfig, EngineKind, EvalConfig, TrainConfig};
     pub use crate::coordinator::{

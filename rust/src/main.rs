@@ -15,11 +15,14 @@
 //!                       [--fetch-threads N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
-//!                       [--secure-committee]
+//!                       [--secure-committee] [--min-committee N]
+//!                       [--cache] [--cache-budget-frac F]
+//!                       [--cache-evict lru|lfu|version-distance]
+//!                       [--max-stale-rounds S]
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
-//!                            secagg|all|list
+//!                            secagg|cache|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -38,6 +41,7 @@
 //! closes (whole-cohort masks still require `--agg-mode sync`).
 
 use fedselect::aggregation::AggMode;
+use fedselect::cache::EvictPolicy;
 use fedselect::config::{EngineKind, TrainConfig};
 use fedselect::coordinator::{AggregationMode, Trainer};
 use fedselect::error::{Error, Result};
@@ -233,6 +237,29 @@ fn cmd_train(a: &Args) -> Result<()> {
     // the committee flag names the protocol variant, so it implies the
     // protocol itself
     cfg.secure_agg = a.flag("secure-agg") || cfg.secure_committee;
+    cfg.min_committee = a.parse_or("min-committee", 0usize).map_err(Error::Config)?;
+    // cross-round slice cache: any cache knob implies --cache (matching the
+    // agg-mode knob convention)
+    let budget_frac = a.get("cache-budget-frac").map(str::to_string);
+    let evict = a.get("cache-evict").map(str::to_string);
+    let max_stale = a.get("max-stale-rounds").map(str::to_string);
+    cfg.cache = a.flag("cache")
+        || budget_frac.is_some()
+        || evict.is_some()
+        || max_stale.is_some();
+    if let Some(v) = budget_frac {
+        cfg.cache_budget_frac = v
+            .parse()
+            .map_err(|e| Error::Config(format!("bad --cache-budget-frac: {e}")))?;
+    }
+    if let Some(v) = evict {
+        cfg.cache_evict = v.parse::<EvictPolicy>().map_err(Error::Config)?;
+    }
+    if let Some(v) = max_stale {
+        cfg.max_stale_rounds = v
+            .parse()
+            .map_err(|e| Error::Config(format!("bad --max-stale-rounds: {e}")))?;
+    }
     cfg.fleet = a
         .str_or("fleet", "uniform")
         .parse::<FleetKind>()
@@ -274,13 +301,32 @@ fn cmd_train(a: &Args) -> Result<()> {
     }
     if let Some(last) = report.rounds.last() {
         println!(
-            "per-round comm (last): down {} | up {} | psi {} | cache hits {} | cdn q {}",
+            "per-round comm (last): down {} | up {} | psi {} | memo hits {} | cdn q {}",
             human_bytes(last.comm.down_bytes),
             human_bytes(last.up_bytes),
             last.comm.psi_evals,
-            last.comm.cache_hits,
+            last.comm.memo_hits,
             last.comm.cdn_queries
         );
+        if tr.cfg.cache {
+            let hits: u64 = report.rounds.iter().map(|r| r.comm.client_cache_hits).sum();
+            let lookups: u64 = report
+                .rounds
+                .iter()
+                .flat_map(|r| r.tier_cache_lookups.iter())
+                .sum();
+            let evictions: u64 = report.rounds.iter().map(|r| r.cache_evictions).sum();
+            let stale: u64 = report.rounds.iter().map(|r| r.cache_stale_refreshes).sum();
+            println!(
+                "slice cache: {hits}/{lookups} hits ({:.1}%) | evictions {evictions} | \
+                 stale refreshes {stale}",
+                if lookups > 0 {
+                    100.0 * hits as f64 / lookups as f64
+                } else {
+                    0.0
+                }
+            );
+        }
         let fleet = tr.scheduler().fleet();
         let tiers: Vec<String> = last
             .tier_completed
@@ -307,8 +353,8 @@ fn cmd_train(a: &Args) -> Result<()> {
         }
         if last.committees > 0 {
             println!(
-                "secure committees (last round): {} keyed | mean size {:.1}",
-                last.committees, last.mean_committee_size
+                "secure committees (last round): {} keyed | mean size {:.1} | min size {}",
+                last.committees, last.mean_committee_size, last.min_committee_size
             );
         }
     }

@@ -50,19 +50,23 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
     let mut dropped = vec![0usize; tiers];
     let mut discarded = vec![0usize; tiers];
     let mut down = vec![0u64; tiers];
+    let mut cache_hits = vec![0u64; tiers];
+    let mut cache_lookups = vec![0u64; tiers];
     for r in rounds {
         for t in 0..tiers {
             completed[t] += r.tier_completed.get(t).copied().unwrap_or(0);
             dropped[t] += r.tier_dropped.get(t).copied().unwrap_or(0);
             discarded[t] += r.tier_discarded.get(t).copied().unwrap_or(0);
             down[t] += r.tier_down_bytes.get(t).copied().unwrap_or(0);
+            cache_hits[t] += r.tier_cache_hits.get(t).copied().unwrap_or(0);
+            cache_lookups[t] += r.tier_cache_lookups.get(t).copied().unwrap_or(0);
         }
     }
     let mut table = Table::new(
         &format!("Fleet summary ({})", fleet.kind),
         &[
             "tier", "clients", "mem_frac", "mean_down", "hazard", "selected", "completed",
-            "dropped", "discarded", "down_total",
+            "dropped", "discarded", "down_total", "cache_hit%",
         ],
     );
     for t in 0..tiers {
@@ -85,6 +89,13 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
             dropped[t].to_string(),
             discarded[t].to_string(),
             human_bytes(down[t]),
+            // per-tier client-cache hit rate; "-" when the run never looked
+            // a piece up (cache off)
+            if cache_lookups[t] > 0 {
+                format!("{:.1}", 100.0 * cache_hits[t] as f64 / cache_lookups[t] as f64)
+            } else {
+                "-".to_string()
+            },
         ]);
     }
     table
@@ -220,6 +231,7 @@ mod tests {
             mean_staleness: 0.0,
             committees: 0,
             mean_committee_size: 0.0,
+            min_committee_size: 0,
             comm: RoundComm::default(),
             up_bytes: 0,
             max_client_mem: 0,
@@ -229,6 +241,10 @@ mod tests {
             tier_dropped: vec![1, 0, 0],
             tier_discarded: vec![0, 1, 0],
             tier_down_bytes: vec![100, 200, 300],
+            tier_cache_hits: vec![3, 0, 0],
+            tier_cache_lookups: vec![4, 0, 0],
+            cache_evictions: 0,
+            cache_stale_refreshes: 0,
         };
         let t = fleet_summary(&fleet, &[rec.clone(), rec]);
         assert_eq!(t.rows.len(), 3);
@@ -237,6 +253,8 @@ mod tests {
         assert_eq!(t.rows[0][7], "2"); // dropped
         assert_eq!(t.rows[1][8], "2"); // discarded (mid tier)
         assert_eq!(t.rows[1][5], "6"); // selected = completed+dropped+discarded
+        assert_eq!(t.rows[0][10], "75.0"); // cache hit%: 6 hits / 8 lookups
+        assert_eq!(t.rows[1][10], "-"); // no lookups in this tier
         assert!(human_rate(2e6).ends_with("/s"));
     }
 }

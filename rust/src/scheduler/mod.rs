@@ -40,6 +40,7 @@ pub use policy::{PlanCtx, Selection, SelectionPolicy};
 pub use profiles::{DeviceProfile, Fleet, FleetKind};
 pub use simclock::{ClientTiming, CompletionEvent, SimClock, ROUND_OVERHEAD_S};
 
+use crate::cache::FleetCaches;
 use crate::config::TrainConfig;
 use crate::error::Result;
 use crate::tensor::rng::Rng;
@@ -195,6 +196,11 @@ pub struct Scheduler {
     /// Last observed update norm per train client (0 = never participated);
     /// what the `loss-weighted` policy samples on.
     signals: Vec<f32>,
+    /// Cross-round on-device slice caches, one per train client — device
+    /// state like the profiles, so it lives with the fleet. Installed by
+    /// the trainer (which knows the model geometry the budgets derive
+    /// from) when `--cache` is on; `None` otherwise.
+    caches: Option<FleetCaches>,
 }
 
 impl Scheduler {
@@ -220,11 +226,28 @@ impl Scheduler {
             clock: SimClock::new(),
             last_selected: vec![-1; n_train_clients],
             signals: vec![0.0; n_train_clients],
+            caches: None,
         })
     }
 
     pub fn fleet(&self) -> &Fleet {
         &self.fleet
+    }
+
+    /// Attach the cross-round client caches (one per train client). Called
+    /// by the trainer after construction — the per-client byte budgets
+    /// derive from the model size, which only the trainer knows.
+    pub fn install_caches(&mut self, caches: FleetCaches) {
+        self.caches = Some(caches);
+    }
+
+    /// The fleet's client caches, when `--cache` is on.
+    pub fn caches(&self) -> Option<&FleetCaches> {
+        self.caches.as_ref()
+    }
+
+    pub fn caches_mut(&mut self) -> Option<&mut FleetCaches> {
+        self.caches.as_mut()
     }
 
     pub fn policy_kind(&self) -> SchedPolicy {

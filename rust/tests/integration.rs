@@ -165,7 +165,7 @@ fn pregen_ledger_shows_amortization() {
     cfg.slice_impl = SliceImpl::OnDemand;
     let mut tr2 = Trainer::new(cfg).unwrap();
     let rec2 = tr2.run_round().unwrap();
-    assert!(rec2.comm.psi_evals + rec2.comm.cache_hits >= 12 * 64 - 64);
+    assert!(rec2.comm.psi_evals + rec2.comm.memo_hits >= 12 * 64 - 64);
     assert!(rec2.comm.psi_evals <= 512);
 }
 

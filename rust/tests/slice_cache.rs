@@ -1,0 +1,220 @@
+//! Cross-round slice-cache properties, end to end through the trainer:
+//!
+//! 1. cache-on is **byte-identical** to cache-off — model trajectory and
+//!    every non-downlink ledger field — for all three slice
+//!    implementations at fetch thread counts {1, 4}, while the keyed
+//!    implementations strictly save down-bytes;
+//! 2. eviction is deterministic at a fixed seed, even under a budget tight
+//!    enough to churn every round;
+//! 3. `max_stale_rounds` forces refresh exactly at the boundary: with the
+//!    staleness-fair scheduler's exact re-selection gap of 4 rounds, a
+//!    bound of 3 turns every would-be hit into a stale refresh and a bound
+//!    of 4 reproduces the unbounded hit count bit for bit;
+//! 4. version bumps cover only aggregator-written rows — the clock's
+//!    touched set stays a strict subset of the keyspace on a small-cohort
+//!    workload.
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::Trainer;
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::SliceImpl;
+use fedselect::model::ParamStore;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+
+/// Repeated-selection workload: stable TopFreq keys, staleness-fair
+/// cycling (24 clients / cohort 6 = an exact 4-round re-selection gap),
+/// tiered hazards + a 0.4 dropout floor so fetched-but-never-merged key
+/// sets stay version-fresh, and a 512 vocab so cohorts cannot write the
+/// whole keyspace.
+fn cache_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(512, 64);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+    cfg.rounds = 8;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 256;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::StalenessFair;
+    cfg.dropout_rate = 0.4;
+    cfg.seed = seed;
+    cfg
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_on_is_byte_identical_to_cache_off_across_impls_and_threads() {
+    for imp in [SliceImpl::PregenCdn, SliceImpl::OnDemand, SliceImpl::Broadcast] {
+        for threads in [1usize, 4] {
+            let mut base = cache_cfg(4040);
+            base.slice_impl = imp;
+            base.fetch_threads = threads;
+            let mut cached = base.clone();
+            cached.cache = true;
+            let label = format!("{imp}/threads={threads}");
+
+            let mut t_off = Trainer::new(base).unwrap();
+            let mut t_on = Trainer::new(cached).unwrap();
+            let mut down_off = 0u64;
+            let mut down_on = 0u64;
+            let mut hits = 0u64;
+            for round in 0..8 {
+                let a = t_off.run_round().unwrap();
+                let b = t_on.run_round().unwrap();
+                let rl = format!("{label} round {}", round + 1);
+                // every non-downlink ledger field agrees exactly
+                assert_eq!(a.completed, b.completed, "{rl}");
+                assert_eq!(a.dropped, b.dropped, "{rl}");
+                assert_eq!(a.discarded_clients, b.discarded_clients, "{rl}");
+                if !(imp == SliceImpl::OnDemand && threads > 1) {
+                    // on-demand ψ/memo splits are race-dependent across
+                    // threads (two workers may both pay a ψ), so exact
+                    // equality between two independent runs only holds
+                    // serially; the cache changes none of it either way
+                    assert_eq!(a.comm.psi_evals, b.comm.psi_evals, "{rl}");
+                    assert_eq!(a.comm.memo_hits, b.comm.memo_hits, "{rl}");
+                    assert_eq!(a.comm.service_us, b.comm.service_us, "{rl}");
+                }
+                assert_eq!(a.comm.pregen_slices, b.comm.pregen_slices, "{rl}");
+                assert_eq!(a.comm.cdn_queries, b.comm.cdn_queries, "{rl}");
+                assert_eq!(a.comm.up_key_bytes, b.comm.up_key_bytes, "{rl}");
+                assert_eq!(a.up_bytes, b.up_bytes, "{rl}");
+                assert_eq!(a.max_client_mem, b.max_client_mem, "{rl}");
+                // only the wire can shrink, and the tier ledger tracks it
+                assert!(b.comm.down_bytes <= a.comm.down_bytes, "{rl}");
+                assert!(b.sim_round_s <= a.sim_round_s + 1e-9, "{rl}");
+                assert_eq!(
+                    b.tier_down_bytes.iter().sum::<u64>(),
+                    b.comm.down_bytes,
+                    "{rl}: tier ledger must equal the wire ledger post-cache"
+                );
+                assert_eq!(a.comm.client_cache_hits, 0, "{rl}: cache-off has no hits");
+                down_off += a.comm.down_bytes;
+                down_on += b.comm.down_bytes;
+                hits += b.comm.client_cache_hits;
+            }
+            assert_stores_bit_identical(t_off.store(), t_on.store(), &label);
+            if imp != SliceImpl::Broadcast {
+                // keyed pieces re-select across rounds: strict savings
+                assert!(hits > 0, "{label}: no client-cache hits at all");
+                assert!(
+                    down_on < down_off,
+                    "{label}: cache-on {down_on} !< cache-off {down_off}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_is_deterministic_under_a_fixed_seed() {
+    // a budget tight enough that low-tier caches churn every commit
+    let make = || {
+        let mut cfg = cache_cfg(777);
+        cfg.cache = true;
+        cfg.cache_budget_frac = 0.05;
+        cfg
+    };
+    let mut a = Trainer::new(make()).unwrap();
+    let mut b = Trainer::new(make()).unwrap();
+    let mut evictions = 0u64;
+    let mut a_down: Vec<u64> = Vec::with_capacity(8);
+    for round in 0..8 {
+        let ra = a.run_round().unwrap();
+        let rb = b.run_round().unwrap();
+        let key = |r: &fedselect::coordinator::RoundRecord| {
+            (
+                r.comm.down_bytes,
+                r.comm.client_cache_hits,
+                r.cache_evictions,
+                r.cache_stale_refreshes,
+                r.tier_cache_hits.clone(),
+                r.tier_cache_lookups.clone(),
+            )
+        };
+        assert_eq!(key(&ra), key(&rb), "round {}", round + 1);
+        evictions += ra.cache_evictions;
+        a_down.push(ra.comm.down_bytes);
+    }
+    assert!(evictions > 0, "the tight budget never evicted anything");
+    assert_stores_bit_identical(a.store(), b.store(), "evict determinism");
+    // threads don't change cache behavior either
+    let mut c_cfg = make();
+    c_cfg.fetch_threads = 4;
+    let c = Trainer::new(c_cfg).unwrap().run().unwrap();
+    let c_down: Vec<u64> = c.rounds.iter().map(|r| r.comm.down_bytes).collect();
+    assert_eq!(a_down, c_down, "fetch_threads changed the cache ledger");
+}
+
+#[test]
+fn max_stale_rounds_forces_refresh_exactly_at_the_boundary() {
+    // staleness-fair on 24 clients / cohort 6 re-selects every client after
+    // exactly 4 rounds, so the age of every cached piece at its next lookup
+    // is exactly 4: a bound of 3 refuses every would-be hit (turning it
+    // into a stale refresh), a bound of 4 is indistinguishable from
+    // unbounded.
+    let run = |max_stale: usize| {
+        let mut cfg = cache_cfg(909);
+        cfg.cache = true;
+        cfg.max_stale_rounds = max_stale;
+        Trainer::new(cfg).unwrap().run().unwrap()
+    };
+    let unbounded = run(0);
+    let at_gap = run(4);
+    let below_gap = run(3);
+    let hits = |r: &fedselect::coordinator::TrainReport| {
+        r.rounds.iter().map(|x| x.comm.client_cache_hits).sum::<u64>()
+    };
+    let stale = |r: &fedselect::coordinator::TrainReport| {
+        r.rounds.iter().map(|x| x.cache_stale_refreshes).sum::<u64>()
+    };
+    assert!(hits(&unbounded) > 0, "workload produced no reuse at all");
+    assert_eq!(hits(&at_gap), hits(&unbounded), "bound == gap must not refuse");
+    assert_eq!(stale(&at_gap), 0);
+    assert_eq!(hits(&below_gap), 0, "bound < gap must refuse every hit");
+    assert_eq!(
+        stale(&below_gap),
+        hits(&unbounded),
+        "every refused hit is ledgered as a stale refresh"
+    );
+    // refreshes move bytes but never change them: identical trajectories
+    assert_eq!(
+        unbounded.final_eval.loss.to_bits(),
+        below_gap.final_eval.loss.to_bits()
+    );
+    assert!(below_gap.total_down_bytes > at_gap.total_down_bytes);
+}
+
+#[test]
+fn version_bumps_cover_only_written_rows() {
+    let mut cfg = cache_cfg(123);
+    cfg.cache = true;
+    let mut t = Trainer::new(cfg).unwrap();
+    for _ in 0..3 {
+        t.run_round().unwrap();
+    }
+    let clock = t.versions().expect("cache run has a version clock");
+    let touched = clock.touched_rows();
+    // something merged, so something was written...
+    assert!(touched > 0, "no rows ever bumped");
+    // ...but only rows merged updates wrote: 3 rounds x cohort 6 x m 64
+    // bounds the selected union at 18*64 << 512, and zero-aggregate rows
+    // (dropouts, padded keys) keep even that bound loose
+    assert!(
+        touched < 512,
+        "touched {touched} rows — the whole keyspace was invalidated"
+    );
+}
