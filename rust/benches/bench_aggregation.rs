@@ -42,7 +42,7 @@ fn main() {
         for (keys, ups) in &clients {
             agg.add_client(&spec, keys, ups).unwrap();
         }
-        let u = agg.finalize(AggMode::CohortMean);
+        let (u, _) = agg.finalize(AggMode::CohortMean);
         std::hint::black_box(u);
     });
 
@@ -52,7 +52,7 @@ fn main() {
         for (keys, ups) in &clients {
             agg.add_client(&spec, keys, ups).unwrap();
         }
-        let u = agg.finalize(AggMode::CohortMean);
+        let (u, _) = agg.finalize(AggMode::CohortMean);
         std::hint::black_box(u);
     });
 

@@ -1,0 +1,88 @@
+//! Multi-tenant coordinator bench: N heterogeneous jobs arbitrated over
+//! one shared tiered fleet, per arbiter policy. Emits
+//! `BENCH_multitenant.json` (schema `fedselect-bench-v1`) with coordinator
+//! throughput (`jobs_per_s`, `arbiter_ticks_per_s` — gated by `perf_diff`)
+//! and the deterministic `fleet_utilization` rollup (informational).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::cache::CacheShare;
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::SliceImpl;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+use fedselect::tenancy::{ArbiterPolicy, Coordinator, JobRegistry, JobSpec};
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let (rounds, n_clients) = if b.quick { (3, 30) } else { (8, 60) };
+
+    let make = |vocab: usize, m: usize, cohort: usize, imp: SliceImpl, cache: bool| {
+        let mut cfg = TrainConfig::logreg_default(vocab, m);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(n_clients, 6, 8));
+        cfg.rounds = rounds;
+        cfg.cohort = cohort;
+        cfg.eval.every = 0;
+        cfg.eval.max_examples = 256;
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.sched_policy = SchedPolicy::StalenessFair;
+        cfg.dropout_rate = 0.2;
+        cfg.seed = 4242;
+        cfg.slice_impl = imp;
+        cfg.cache = cache;
+        cfg
+    };
+    let roster = || {
+        vec![
+            JobSpec::new(1, "narrow", make(256, 32, 6, SliceImpl::OnDemand, false)),
+            JobSpec::new(2, "wide", make(512, 64, 8, SliceImpl::PregenCdn, true)).with_weight(2.0),
+            JobSpec::new(3, "bcast", make(256, 48, 6, SliceImpl::Broadcast, false))
+                .with_priority(5),
+        ]
+    };
+    let n_jobs = roster().len();
+
+    for policy in ArbiterPolicy::ALL {
+        let name = format!("coordinator/{policy}");
+        let t0 = Instant::now();
+        let reg = JobRegistry::new(roster(), CacheShare::Partitioned).unwrap();
+        let mut coord = Coordinator::new(reg, policy).unwrap();
+        let report = coord.run().unwrap();
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+        let jobs_per_s = n_jobs as f64 / secs;
+        let ticks_per_s = report.ticks as f64 / secs;
+        let util_pct = 100.0 * report.fleet_utilization;
+        println!(
+            "{name}: {n_jobs} jobs / {} ticks in {secs:.2}s  \
+             ({jobs_per_s:.2} jobs/s, {ticks_per_s:.2} ticks/s)  \
+             sim={:.1}s util={util_pct:.1}%",
+            report.ticks, report.total_sim_s
+        );
+        b.metric(&name, "jobs_per_s", jobs_per_s);
+        b.metric(&name, "arbiter_ticks_per_s", ticks_per_s);
+        // deterministic rollup, informational (no _per_s suffix => ungated)
+        b.metric(&name, "fleet_utilization", util_pct);
+        b.metric(&name, "sim_total_s", report.total_sim_s);
+
+        // tick wall-time distribution on a fresh coordinator; rebuild when
+        // the run completes so every sample measures a live tick
+        let reg = JobRegistry::new(roster(), CacheShare::Partitioned).unwrap();
+        let mut live = Coordinator::new(reg, policy).unwrap();
+        let mut done = 0usize;
+        b.run(&format!("tick_wall/{policy}"), 8, || {
+            if done >= rounds {
+                let reg = JobRegistry::new(roster(), CacheShare::Partitioned).unwrap();
+                live = Coordinator::new(reg, policy).unwrap();
+                done = 0;
+            }
+            live.tick().unwrap();
+            done += 1;
+        });
+    }
+
+    b.write_json("BENCH_multitenant.json");
+}

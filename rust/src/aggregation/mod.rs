@@ -89,6 +89,18 @@ impl TouchedKeys {
             .get(keyspace)
             .is_some_and(|s| s.contains(&key))
     }
+
+    /// Union another touched set into this one (keyspace-wise) — the
+    /// committee SecAgg path merges one set per close committee.
+    pub fn merge(&mut self, other: &TouchedKeys) {
+        if self.per_keyspace.len() < other.per_keyspace.len() {
+            self.per_keyspace
+                .resize_with(other.per_keyspace.len(), std::collections::BTreeSet::new);
+        }
+        for (mine, theirs) in self.per_keyspace.iter_mut().zip(other.per_keyspace.iter()) {
+            mine.extend(theirs.iter().copied());
+        }
+    }
 }
 
 /// Averaging semantics for `AGGREGATE*`.
@@ -136,8 +148,12 @@ pub trait Aggregator {
         weight: f32,
     ) -> Result<()>;
 
-    /// Produce the server update `u` in full model space.
-    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore;
+    /// Produce the server update `u` in full model space, paired with the
+    /// [`TouchedKeys`] of the merged updates — the `(keyspace, key)` rows
+    /// the aggregation pass could have written. Returning the touched set
+    /// here (instead of having the trainer re-union the merge set's keys)
+    /// keeps the version-clock bump a pure consumer of the aggregator.
+    fn finalize(self: Box<Self>, mode: AggMode) -> (ParamStore, TouchedKeys);
 
     fn num_clients(&self) -> usize;
 }
@@ -215,8 +231,11 @@ impl Aggregator for SparseAccumulator {
         Ok(())
     }
 
-    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore {
-        finalize_mean(self.acc, &self.counts, self.clients, mode)
+    fn finalize(self: Box<Self>, mode: AggMode) -> (ParamStore, TouchedKeys) {
+        (
+            finalize_mean(self.acc, &self.counts, self.clients, mode),
+            self.touched,
+        )
     }
 
     fn num_clients(&self) -> usize {
@@ -274,9 +293,11 @@ mod tests {
             let ups = vec![vec![v; 8 * 50], vec![v; 50]];
             agg.add_client(&spec, &[all.clone()], &ups).unwrap();
         }
-        let u = agg.finalize(AggMode::CohortMean);
+        let (u, touched) = agg.finalize(AggMode::CohortMean);
         assert!(u.segments[0].data.iter().all(|&x| (x - 1.5).abs() < 1e-6));
         assert!(u.segments[1].data.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+        // finalize hands the trainer the merge set's touched rows directly
+        assert_eq!(touched.count_in(0), 8);
     }
 
     #[test]
@@ -291,7 +312,7 @@ mod tests {
         let (acc, counts) = agg.raw();
         assert_eq!(acc.segments[0].data[0], 3.0);
         assert_eq!(counts.segments[0].data[0], 1.0);
-        let u_cohort = Box::new(SparseAccumulator {
+        let (u_cohort, _) = Box::new(SparseAccumulator {
             acc: acc.clone(),
             counts: counts.clone(),
             clients: 2,
@@ -302,7 +323,7 @@ mod tests {
         // cohort mean divides by N=2 even though each row was touched once
         assert_eq!(u_cohort.segments[0].data[0], 1.5);
         assert_eq!(u_cohort.segments[0].data[50], 2.5);
-        let u_coord = Box::new(SparseAccumulator {
+        let (u_coord, _) = Box::new(SparseAccumulator {
             acc: acc.clone(),
             counts: counts.clone(),
             clients: 2,
@@ -366,6 +387,21 @@ mod tests {
         // deterministic ascending iteration per keyspace
         let seen: Vec<u32> = t.keyspaces().next().unwrap().iter().copied().collect();
         assert_eq!(seen, vec![0, 3, 5]);
+    }
+
+    #[test]
+    fn touched_keys_merge_unions_keyspace_wise() {
+        let mut a = TouchedKeys::new(1);
+        a.record(&[vec![1, 3]]);
+        let mut b = TouchedKeys::new(2);
+        b.record(&[vec![3, 5], vec![0]]);
+        a.merge(&b);
+        assert_eq!(a.count_in(0), 3);
+        assert_eq!(a.count_in(1), 1);
+        for k in [1u32, 3, 5] {
+            assert!(a.contains(0, k));
+        }
+        assert!(a.contains(1, 0));
     }
 
     #[test]

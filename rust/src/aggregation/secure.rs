@@ -34,7 +34,7 @@ use crate::error::{Error, Result};
 use crate::model::{ParamStore, SelectSpec};
 use crate::tensor::rng::Rng;
 
-use super::{finalize_mean, AggMode, Aggregator};
+use super::{finalize_mean, AggMode, Aggregator, TouchedKeys};
 
 /// Fractional bits of the committee fixed-point encoding: updates are
 /// quantized to `round(x * 2^20)` in two's complement before masking, the
@@ -91,6 +91,11 @@ pub struct SecAggCommittee {
     committee_seed: u64,
     submissions: Vec<MaskedQ>,
     dropped: std::collections::HashSet<u64>,
+    /// Union of the submitters' select keys — the server learns this
+    /// *anyway* from the key lists the fetch protocol already reveals, so
+    /// tracking it here costs no privacy and lets the version clock bump
+    /// from the close without a trainer-side union.
+    touched: TouchedKeys,
     /// Bytes one member uploads: TWO full-model-sized vectors of u64 group
     /// elements — the masked update and the masked selection counts (16
     /// bytes/coordinate total; counts are masked too because they reveal
@@ -110,6 +115,7 @@ impl SecAggCommittee {
             committee_seed,
             submissions: Vec::new(),
             dropped: std::collections::HashSet::new(),
+            touched: TouchedKeys::default(),
         }
     }
 
@@ -119,6 +125,11 @@ impl SecAggCommittee {
 
     pub fn num_submitters(&self) -> usize {
         self.submissions.len()
+    }
+
+    /// Union of the submitters' select keys (see the field doc).
+    pub fn touched(&self) -> &TouchedKeys {
+        &self.touched
     }
 
     fn pair_mask_q(&self, a: u64, b: u64, len: usize, seg_idx: usize, stream: u64) -> Vec<u64> {
@@ -172,6 +183,7 @@ impl SecAggCommittee {
                 }
             }
         }
+        self.touched.record(keys);
         self.submissions.push(MaskedQ {
             member,
             vecs,
@@ -266,6 +278,9 @@ pub struct SecureAggSim {
     round_seed: u64,
     submissions: Vec<Masked>,
     dropped: std::collections::HashSet<u64>,
+    /// Union of submitters' select keys (the fetch protocol reveals these
+    /// to the server regardless; see [`SecAggCommittee::touched`]).
+    touched: TouchedKeys,
     /// bytes a client uploads under this scheme (full model!, §4.2).
     pub up_bytes_per_client: u64,
 }
@@ -280,6 +295,7 @@ impl SecureAggSim {
             round_seed,
             submissions: Vec::new(),
             dropped: std::collections::HashSet::new(),
+            touched: TouchedKeys::default(),
         }
     }
 
@@ -315,6 +331,7 @@ impl SecureAggSim {
                 }
             }
         }
+        self.touched.record(keys);
         self.submissions.push(Masked {
             client,
             vecs,
@@ -327,6 +344,12 @@ impl SecureAggSim {
     /// survivors' masks with it must be reconstructed and removed.
     pub fn mark_dropped(&mut self, client: u64) {
         self.dropped.insert(client);
+    }
+
+    /// Union of the submitters' select keys (server-visible metadata; the
+    /// payloads stay masked).
+    pub fn touched(&self) -> &TouchedKeys {
+        &self.touched
     }
 
     /// Server-side: sum masked submissions; pairwise masks cancel, masks
@@ -400,10 +423,10 @@ impl Aggregator for SecureAggSim {
         ))
     }
 
-    fn finalize(self: Box<Self>, mode: AggMode) -> ParamStore {
+    fn finalize(self: Box<Self>, mode: AggMode) -> (ParamStore, TouchedKeys) {
         let n = self.submissions.len();
         let (acc, counts) = self.unmask_sum();
-        finalize_mean(acc, &counts, n, mode)
+        (finalize_mean(acc, &counts, n, mode), self.touched)
     }
 
     fn num_clients(&self) -> usize {

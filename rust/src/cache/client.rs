@@ -65,11 +65,17 @@ impl CommitStats {
 }
 
 /// One simulated client's piece cache.
+///
+/// Entries are keyed by `(namespace, piece)` — the namespace is the owning
+/// job's id ([`VersionClock::ns`]), 0 for single-tenant runs — so one
+/// device's cache can hold pieces of several concurrent jobs without
+/// address collisions while every byte still counts against the one
+/// shared budget.
 #[derive(Clone, Debug)]
 pub struct ClientCache {
     budget: u64,
     used: u64,
-    entries: HashMap<PieceId, Entry>,
+    entries: HashMap<(u32, PieceId), Entry>,
 }
 
 /// How a lookup classified an entry.
@@ -109,18 +115,25 @@ impl ClientCache {
         self.entries.is_empty()
     }
 
+    /// Single-tenant lookup (namespace 0) — see [`Self::contains_ns`].
     pub fn contains(&self, id: PieceId) -> bool {
-        self.entries.contains_key(&id)
+        self.contains_ns(0, id)
+    }
+
+    /// Whether the cache holds `id` under tenancy namespace `ns`.
+    pub fn contains_ns(&self, ns: u32, id: PieceId) -> bool {
+        self.entries.contains_key(&(ns, id))
     }
 
     fn classify(
         &self,
+        ns: u32,
         id: PieceId,
         round: u64,
         max_stale_rounds: usize,
         versions: &VersionClock,
     ) -> Lookup {
-        let Some(e) = self.entries.get(&id) else {
+        let Some(e) = self.entries.get(&(ns, id)) else {
             return Lookup::Miss;
         };
         if e.version != versions.version_of(id.0, id.1) {
@@ -137,30 +150,38 @@ impl ClientCache {
     }
 
     /// Evict one entry by `policy`; returns false when the cache is empty.
-    /// The victim is the minimum of a total order (policy score, then entry
-    /// id), so eviction is deterministic regardless of hash-map iteration
-    /// order.
-    fn evict_one(&mut self, policy: EvictPolicy, versions: &VersionClock) -> bool {
+    /// The victim is the minimum of a total order (policy score, then
+    /// `(ns, id)`), so eviction is deterministic regardless of hash-map
+    /// iteration order — and identical to the pre-tenancy order whenever
+    /// every entry shares one namespace.
+    fn evict_one(&mut self, ns: u32, policy: EvictPolicy, versions: &VersionClock) -> bool {
         let victim = self
             .entries
             .iter()
-            .map(|(&id, e)| {
+            .map(|(&key, e)| {
                 let score = match policy {
                     EvictPolicy::Lru => (e.last_used_round, e.uses),
                     EvictPolicy::Lfu => (e.uses, e.last_used_round),
                     EvictPolicy::VersionDistance => {
                         // most-lagging first: lagging entries are dead weight
-                        // (they will miss on their next lookup anyway)
-                        let dist = versions.version_of(id.0, id.1).saturating_sub(e.version);
+                        // (they will miss on their next lookup anyway). Only
+                        // the committing job's clock is at hand, so foreign-
+                        // namespace entries score distance 0 (preserved over
+                        // equally-recent lagging entries of the own job).
+                        let dist = if key.0 == ns {
+                            versions.version_of(key.1 .0, key.1 .1).saturating_sub(e.version)
+                        } else {
+                            0
+                        };
                         (u64::MAX - dist, e.last_used_round)
                     }
                 };
-                (score, id)
+                (score, key)
             })
             .min();
         match victim {
-            Some((_, id)) => {
-                let e = self.entries.remove(&id).expect("victim exists");
+            Some((_, key)) => {
+                let e = self.entries.remove(&key).expect("victim exists");
                 self.used -= e.bytes;
                 true
             }
@@ -168,8 +189,8 @@ impl ClientCache {
         }
     }
 
-    fn touch(&mut self, id: PieceId, round: u64) {
-        let e = self.entries.get_mut(&id).expect("hit entry exists");
+    fn touch(&mut self, ns: u32, id: PieceId, round: u64) {
+        let e = self.entries.get_mut(&(ns, id)).expect("hit entry exists");
         e.last_used_round = round;
         e.uses += 1;
     }
@@ -179,6 +200,7 @@ impl ClientCache {
     /// the whole budget is not cached at all. Returns evictions performed.
     fn insert(
         &mut self,
+        ns: u32,
         id: PieceId,
         bytes: u64,
         round: u64,
@@ -186,7 +208,7 @@ impl ClientCache {
         versions: &VersionClock,
     ) -> u64 {
         let version = versions.version_of(id.0, id.1);
-        if let Some(e) = self.entries.get_mut(&id) {
+        if let Some(e) = self.entries.get_mut(&(ns, id)) {
             // refresh in place (piece sizes are fixed per id): the row's
             // popularity survives the refresh
             e.version = version;
@@ -200,14 +222,14 @@ impl ClientCache {
         }
         let mut evictions = 0u64;
         while self.used + bytes > self.budget {
-            if !self.evict_one(policy, versions) {
+            if !self.evict_one(ns, policy, versions) {
                 break;
             }
             evictions += 1;
         }
         self.used += bytes;
         self.entries.insert(
-            id,
+            (ns, id),
             Entry {
                 version,
                 fetched_round: round,
@@ -272,6 +294,24 @@ impl FleetCaches {
         &self.caches[client]
     }
 
+    /// Per-client byte budgets (device order) — used by the multi-tenant
+    /// coordinator to derive a shared pool's budget (per-device max across
+    /// jobs).
+    pub fn budgets(&self) -> Vec<u64> {
+        self.caches.iter().map(ClientCache::budget).collect()
+    }
+
+    /// Scale every client's budget by `frac` (clamped at ≥ 0) — the
+    /// partitioned cache-share mode gives each job a guaranteed fraction of
+    /// the device budget. Intended at setup, before any entry is inserted;
+    /// shrinking an occupied cache does not evict retroactively (the next
+    /// commit's inserts will).
+    pub fn scale_budgets(&mut self, frac: f64) {
+        for c in &mut self.caches {
+            c.budget = (c.budget as f64 * frac.max(0.0)) as u64;
+        }
+    }
+
     /// Pre-fetch: which of this client's pieces are fresh — the session
     /// serves those locally. Read-only; the same classification is re-run
     /// (on the unchanged cache) by [`FleetCaches::commit`].
@@ -283,10 +323,11 @@ impl FleetCaches {
         geom: &CacheGeometry,
         versions: &VersionClock,
     ) -> DeltaPlan {
+        let ns = versions.ns();
         let cache = &self.caches[client];
         let mut plan = DeltaPlan::default();
         for (id, _) in entries_for(geom, keys) {
-            if cache.classify(id, round, self.max_stale_rounds, versions) == Lookup::Fresh {
+            if cache.classify(ns, id, round, self.max_stale_rounds, versions) == Lookup::Fresh {
                 if id.0 == BROADCAST_SPACE {
                     plan.fresh_segs.insert(id.1 as usize);
                 } else {
@@ -322,17 +363,18 @@ impl FleetCaches {
     ) -> CommitStats {
         let policy = self.policy;
         let max_stale = self.max_stale_rounds;
+        let ns = versions.ns();
         let cache = &mut self.caches[client];
         let mut st = CommitStats::default();
         let classified: Vec<(PieceId, u64, Lookup)> = entries_for(geom, keys)
-            .map(|(id, bytes)| (id, bytes, cache.classify(id, round, max_stale, versions)))
+            .map(|(id, bytes)| (id, bytes, cache.classify(ns, id, round, max_stale, versions)))
             .collect();
         st.lookups = classified.len() as u64;
         for &(id, bytes, lk) in &classified {
             if lk == Lookup::Fresh {
                 st.hits += 1;
                 st.hit_bytes += bytes;
-                cache.touch(id, round);
+                cache.touch(ns, id, round);
             }
         }
         for &(id, bytes, lk) in &classified {
@@ -340,10 +382,10 @@ impl FleetCaches {
                 Lookup::Fresh => {}
                 Lookup::AgedOut => {
                     st.stale_refreshes += 1;
-                    st.evictions += cache.insert(id, bytes, round, policy, versions);
+                    st.evictions += cache.insert(ns, id, bytes, round, policy, versions);
                 }
                 Lookup::Miss => {
-                    st.evictions += cache.insert(id, bytes, round, policy, versions);
+                    st.evictions += cache.insert(ns, id, bytes, round, policy, versions);
                 }
             }
         }
@@ -485,6 +527,44 @@ mod tests {
         let s = fc.commit(0, 1, &[vec![1u32]], &g, &vc);
         assert_eq!(s.evictions, 0);
         assert_eq!(fc.cache(0).len(), 0, "200 B pieces cannot fit a 100 B budget");
+    }
+
+    #[test]
+    fn namespaces_partition_the_address_space_not_the_budget() {
+        // two jobs share one device cache: same (keyspace, key) addresses,
+        // different namespaces — both coexist, bytes pool in one budget
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![10_000]);
+        let g = geom();
+        let vc_a = clock(); // ns 0
+        let mut vc_b = clock().with_ns(1);
+        let keys = vec![vec![1u32, 2]];
+        fc.commit(0, 1, &keys, &g, &vc_a);
+        fc.commit(0, 1, &keys, &g, &vc_b);
+        assert!(fc.cache(0).contains_ns(0, (0, 1)));
+        assert!(fc.cache(0).contains_ns(1, (0, 1)));
+        assert_eq!(fc.cache(0).len(), 6, "both jobs' entries coexist");
+        assert_eq!(fc.cache(0).used_bytes(), 2 * 600, "one pooled budget");
+        // job B's close invalidates only job B's copies
+        let spec = ModelArch::logreg(8).select_spec();
+        let mut touched = TouchedKeys::new(1);
+        touched.record(&[vec![1]]);
+        vc_b.bump(1, &touched, &spec);
+        let pa = fc.plan_for(0, 2, &keys, &g, &vc_a);
+        let pb = fc.plan_for(0, 2, &keys, &g, &vc_b);
+        assert!(pa.fresh_keys.contains(&(0, 1)), "job A unaffected");
+        assert!(!pb.fresh_keys.contains(&(0, 1)), "job B's row written");
+    }
+
+    #[test]
+    fn scale_budgets_partitions_the_device_budget() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![1000, 600]);
+        assert_eq!(fc.budgets(), vec![1000, 600]);
+        fc.scale_budgets(0.5);
+        assert_eq!(fc.budgets(), vec![500, 300]);
+        // the full share is exact: scaling by 1.0 changes nothing
+        let mut whole = FleetCaches::new(EvictPolicy::Lru, 0, vec![1000, 600]);
+        whole.scale_budgets(1.0);
+        assert_eq!(whole.budgets(), vec![1000, 600]);
     }
 
     #[test]

@@ -123,6 +123,48 @@ impl std::str::FromStr for EvictPolicy {
     }
 }
 
+/// How N concurrent jobs share one device's cache byte budget (multi-tenant
+/// coordinator knob; see [`crate::tenancy`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheShare {
+    /// Each job gets a guaranteed, isolated slice of the device budget
+    /// (its weight share of the total): job A's inserts can never evict
+    /// job B's entries. A single job's full (1.0) share is exactly the
+    /// single-tenant budget.
+    #[default]
+    Partitioned,
+    /// One pooled cache per device, budgeted at the per-job maximum:
+    /// jobs contend for bytes and may evict each other's entries
+    /// (namespaced addresses keep the *contents* from colliding; only
+    /// capacity is shared).
+    Contended,
+}
+
+/// Canonical CLI names; `Display` round-trips with `FromStr`.
+impl std::fmt::Display for CacheShare {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CacheShare::Partitioned => "partitioned",
+            CacheShare::Contended => "contended",
+        })
+    }
+}
+
+impl std::str::FromStr for CacheShare {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "partitioned" | "partition" => Ok(CacheShare::Partitioned),
+            "contended" | "shared" | "pool" => Ok(CacheShare::Contended),
+            other => Err(format!(
+                "unknown cache share {other:?} (want {} or {})",
+                CacheShare::Partitioned,
+                CacheShare::Contended
+            )),
+        }
+    }
+}
+
 /// Which cache entries one client's round touches, and how big each is —
 /// derived once per run by the trainer from the model's `SelectSpec`, the
 /// store layout, and the slice implementation.
@@ -145,6 +187,15 @@ pub struct CacheGeometry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_share_display_round_trips() {
+        for s in [CacheShare::Partitioned, CacheShare::Contended] {
+            assert_eq!(s.to_string().parse::<CacheShare>().unwrap(), s);
+        }
+        assert_eq!("shared".parse::<CacheShare>().unwrap(), CacheShare::Contended);
+        assert!("bogus".parse::<CacheShare>().is_err());
+    }
 
     #[test]
     fn evict_policy_display_round_trips_case_insensitively() {

@@ -50,6 +50,11 @@ pub struct VersionClock {
     keyed: Vec<Vec<u64>>,
     /// `segs[seg]` = round of the last write anywhere in the segment.
     segs: Vec<u64>,
+    /// Tenancy namespace this clock's pieces live in (0 = single-tenant).
+    /// Client caches key their entries by `(ns, piece)` so two jobs' pieces
+    /// at the same `(keyspace, key)` address never validate against each
+    /// other's versions.
+    ns: u32,
 }
 
 impl VersionClock {
@@ -59,7 +64,20 @@ impl VersionClock {
         VersionClock {
             keyed: keyspace_sizes.iter().map(|&s| vec![0u64; s]).collect(),
             segs: vec![0u64; num_segs],
+            ns: 0,
         }
+    }
+
+    /// Tag the clock with a tenancy namespace (job id). The namespace does
+    /// not change versioning semantics — it prefixes the keyspace so
+    /// on-device cache entries of different jobs never collide.
+    pub fn with_ns(mut self, ns: u32) -> Self {
+        self.ns = ns;
+        self
+    }
+
+    pub fn ns(&self) -> u32 {
+        self.ns
     }
 
     /// Version of one cache entry: keyed pieces by `(keyspace, key)`,

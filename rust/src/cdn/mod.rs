@@ -76,12 +76,16 @@ impl ShardLoad {
 pub struct CdnStore {
     shards: usize,
     latency: LatencyModel,
-    /// (keyspace, key) -> piece, for the current published version.
+    /// Tenancy namespace (job id; 0 = single-tenant) prefixed onto every
+    /// piece address, so N jobs sharing one CDN never collide at the same
+    /// `(keyspace, key)`.
+    ns: u32,
+    /// (ns, keyspace, key) -> piece, for the current published version.
     /// `Arc`-wrapped so queries hand out references without copying.
-    pieces: HashMap<(usize, u32), Arc<Vec<f32>>>,
-    /// (keyspace, key) -> publish ordinal at which the piece's *content*
-    /// last changed.
-    piece_versions: HashMap<(usize, u32), u64>,
+    pieces: HashMap<(u32, usize, u32), Arc<Vec<f32>>>,
+    /// (ns, keyspace, key) -> publish ordinal at which the piece's
+    /// *content* last changed.
+    piece_versions: HashMap<(u32, usize, u32), u64>,
     version: u64,
     stats: Vec<ShardLoad>,
     publish_bytes: AtomicU64,
@@ -93,6 +97,7 @@ impl CdnStore {
         CdnStore {
             shards,
             latency: LatencyModel::default(),
+            ns: 0,
             pieces: HashMap::new(),
             piece_versions: HashMap::new(),
             version: 0,
@@ -106,25 +111,42 @@ impl CdnStore {
         self
     }
 
-    fn shard_of(&self, keyspace: usize, key: u32) -> usize {
+    /// Set the namespace future publishes and queries address. Publishing
+    /// replaces only the *current namespace's* piece set, so one CDN can
+    /// serve N jobs' slices side by side.
+    pub fn set_ns(&mut self, ns: u32) {
+        self.ns = ns;
+    }
+
+    pub fn ns(&self) -> u32 {
+        self.ns
+    }
+
+    fn shard_of(&self, ns: u32, keyspace: usize, key: u32) -> usize {
+        // ns folds in multiplicatively so ns 0 (single-tenant) hashes
+        // exactly as before the tenancy prefix existed
         let h = (key as u64)
             .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add(keyspace as u64);
+            .wrapping_add(keyspace as u64)
+            .wrapping_add((ns as u64).wrapping_mul(0x517C_C1B7_2722_0A95));
         (h % self.shards as u64) as usize
     }
 
     /// Publish a new model version's slices (replaces the previous piece
-    /// *set*; keys absent from `pieces` are dropped). Content-versioned:
+    /// *set* of the current namespace; keys absent from `pieces` are
+    /// dropped, other namespaces' pieces are untouched). Content-versioned:
     /// pieces byte-identical to the serving copy are retained (shared
     /// `Arc`, piece version unchanged) and cost no publish bytes — only
     /// changed pieces ship and bump their piece version to the new publish
     /// ordinal.
     pub fn publish(&mut self, pieces: HashMap<(usize, u32), Vec<f32>>) -> u64 {
         self.version += 1;
+        let ns = self.ns;
         let mut changed_bytes = 0u64;
-        let mut next: HashMap<(usize, u32), Arc<Vec<f32>>> =
+        let mut next: HashMap<(u32, usize, u32), Arc<Vec<f32>>> =
             HashMap::with_capacity(pieces.len());
-        for (k, v) in pieces {
+        for ((ks, key), v) in pieces {
+            let k = (ns, ks, key);
             match self.pieces.get(&k) {
                 Some(old) if **old == v => {
                     next.insert(k, old.clone());
@@ -136,8 +158,11 @@ impl CdnStore {
                 }
             }
         }
-        self.piece_versions.retain(|k, _| next.contains_key(k));
-        self.pieces = next;
+        self.pieces.retain(|k, _| k.0 != ns);
+        self.pieces.extend(next);
+        let pieces_ref = &self.pieces;
+        self.piece_versions
+            .retain(|k, _| k.0 != ns || pieces_ref.contains_key(k));
         self.publish_bytes.fetch_add(changed_bytes, Relaxed);
         self.version
     }
@@ -157,18 +182,20 @@ impl CdnStore {
     /// observability (benches/diagnostics), not for the delta-fetch
     /// protocol.
     pub fn piece_version(&self, keyspace: usize, key: u32) -> Option<u64> {
-        self.piece_versions.get(&(keyspace, key)).copied()
+        self.piece_versions.get(&(self.ns, keyspace, key)).copied()
     }
 
+    /// Published pieces in the current namespace.
     pub fn num_pieces(&self) -> usize {
-        self.pieces.len()
+        self.pieces.keys().filter(|k| k.0 == self.ns).count()
     }
 
-    /// Serve one key query; returns the piece (zero-copy, `Arc`-shared) and
-    /// records shard load. Safe to call from many threads at once.
+    /// Serve one key query in the current namespace; returns the piece
+    /// (zero-copy, `Arc`-shared) and records shard load. Safe to call from
+    /// many threads at once.
     pub fn query(&self, keyspace: usize, key: u32) -> Option<Arc<Vec<f32>>> {
-        let shard = self.shard_of(keyspace, key);
-        let piece = self.pieces.get(&(keyspace, key))?;
+        let shard = self.shard_of(self.ns, keyspace, key);
+        let piece = self.pieces.get(&(self.ns, keyspace, key))?;
         let bytes = piece.len() as u64 * 4;
         let st = &self.stats[shard];
         st.queries.fetch_add(1, Relaxed);
@@ -285,6 +312,30 @@ mod tests {
         cdn.publish(only);
         assert_eq!(cdn.piece_version(0, 1), None);
         assert_eq!(cdn.piece_version(0, 0), Some(2), "still byte-identical");
+    }
+
+    #[test]
+    fn namespaces_isolate_piece_sets_within_one_store() {
+        let mut cdn = CdnStore::new(4);
+        let piece = |a: f32| {
+            let mut p = HashMap::new();
+            p.insert((0usize, 0u32), vec![a; 8]);
+            p
+        };
+        cdn.publish(piece(1.0)); // ns 0
+        cdn.set_ns(7);
+        cdn.publish(piece(2.0)); // ns 7, same (keyspace, key)
+        assert_eq!(cdn.query(0, 0).unwrap()[0], 2.0, "ns 7 sees its own piece");
+        assert_eq!(cdn.num_pieces(), 1);
+        cdn.set_ns(0);
+        assert_eq!(cdn.query(0, 0).unwrap()[0], 1.0, "ns 0 piece survives ns 7 publish");
+        // republishing an empty set in ns 0 drops only ns 0's pieces
+        cdn.publish(HashMap::new());
+        assert!(cdn.query(0, 0).is_none());
+        assert_eq!(cdn.piece_version(0, 0), None);
+        cdn.set_ns(7);
+        assert_eq!(cdn.query(0, 0).unwrap()[0], 2.0);
+        assert_eq!(cdn.piece_version(0, 0), Some(2));
     }
 
     #[test]

@@ -102,6 +102,14 @@ pub struct TrainConfig {
     /// [`crate::coordinator::engine`]), since a single-submitter committee
     /// hides nothing. Requires `secure_committee`.
     pub min_committee: usize,
+    /// Merge-deferral variant of the committee floor (`--committee-defer`):
+    /// instead of coalescing a below-floor staleness class into a neighbor
+    /// (server-side weight splitting), hold its landed updates in flight
+    /// until enough same-class members land — bounded by the buffered
+    /// mode's `max_staleness`, past which they merge (or age out)
+    /// regardless. Requires `min_committee > 0` and buffered aggregation
+    /// (the only mode with an in-flight pool to defer into).
+    pub committee_defer: bool,
     /// Cross-round on-device slice cache ([`crate::cache`]): clients keep
     /// downloaded pieces across rounds and refetch only what the
     /// aggregator has written since. Requires a server optimizer for which
@@ -156,6 +164,7 @@ impl TrainConfig {
             secure_agg: false,
             secure_committee: false,
             min_committee: 0,
+            committee_defer: false,
             cache: false,
             cache_budget_frac: 0.5,
             cache_evict: EvictPolicy::Lru,
@@ -187,6 +196,7 @@ impl TrainConfig {
             secure_agg: false,
             secure_committee: false,
             min_committee: 0,
+            committee_defer: false,
             cache: false,
             cache_budget_frac: 0.5,
             cache_evict: EvictPolicy::Lru,
@@ -218,6 +228,7 @@ impl TrainConfig {
             secure_agg: false,
             secure_committee: false,
             min_committee: 0,
+            committee_defer: false,
             cache: false,
             cache_budget_frac: 0.5,
             cache_evict: EvictPolicy::Lru,
@@ -257,6 +268,7 @@ impl TrainConfig {
             secure_agg: false,
             secure_committee: false,
             min_committee: 0,
+            committee_defer: false,
             cache: false,
             cache_budget_frac: 0.5,
             cache_evict: EvictPolicy::Lru,
@@ -343,6 +355,22 @@ impl TrainConfig {
                  committees and requires --secure-committee"
                     .into(),
             ));
+        }
+        if self.committee_defer {
+            if self.min_committee == 0 {
+                return Err(Error::Config(
+                    "--committee-defer defers below-floor closes and requires \
+                     a floor: pass --min-committee N (N > 1)"
+                        .into(),
+                ));
+            }
+            if !matches!(self.agg_mode, AggregationMode::Buffered { .. }) {
+                return Err(Error::Config(format!(
+                    "--committee-defer holds updates in the buffered in-flight \
+                     pool and requires --agg-mode buffered, got {}",
+                    self.agg_mode
+                )));
+            }
         }
         if self.cache {
             if !(0.0..=1.0).contains(&self.cache_budget_frac) || self.cache_budget_frac == 0.0 {
@@ -617,6 +645,27 @@ mod tests {
         cfg.min_committee = 0;
         cfg.secure_committee = false;
         cfg.secure_agg = false;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn committee_defer_requires_a_floor_and_buffered_mode() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.committee_defer = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--min-committee"), "{err}");
+        cfg.secure_agg = true;
+        cfg.secure_committee = true;
+        cfg.min_committee = 2;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("buffered"), "{err}");
+        cfg.agg_mode = AggregationMode::Buffered {
+            goal_count: 0,
+            max_staleness: 4,
+        };
+        assert!(cfg.validate().is_ok());
+        // deferral off: the floor alone still validates anywhere
+        cfg.committee_defer = false;
         assert!(cfg.validate().is_ok());
     }
 

@@ -234,6 +234,11 @@ pub struct RoundOutcome {
     pub mean_staleness: f64,
     /// Updates still in flight after this round (buffered mode only).
     pub in_flight: usize,
+    /// Landed updates held back by the merge-deferral committee floor
+    /// (`--committee-defer`): their staleness class was below
+    /// `min_committee` submitters, so they returned to the in-flight pool
+    /// to merge at a later close with more classmates.
+    pub deferred: usize,
     /// Secure-aggregation committees of this close, one per staleness
     /// class, in ascending staleness order; every `merged` index appears in
     /// exactly one committee.
@@ -257,8 +262,14 @@ struct InFlight {
 pub struct RoundEngine {
     mode: AggregationMode,
     /// Committee size floor (`--min-committee`; 0 = off): buffered closes
-    /// whose staleness-class committees would fall below it are coalesced.
+    /// whose staleness-class committees would fall below it are coalesced —
+    /// or, under [`Self::with_defer`], deferred.
     min_committee: usize,
+    /// `--committee-defer`: instead of coalescing a below-floor staleness
+    /// class into a neighbor (server-side weight splitting), hold its landed
+    /// updates in flight until enough same-class members land — bounded by
+    /// `max_staleness`, past which they merge (or age out) regardless.
+    defer: bool,
     in_flight: Vec<InFlight>,
 }
 
@@ -267,6 +278,7 @@ impl RoundEngine {
         RoundEngine {
             mode,
             min_committee: 0,
+            defer: false,
             in_flight: Vec::new(),
         }
     }
@@ -274,6 +286,13 @@ impl RoundEngine {
     /// Set the committee size floor (see [`Self::new`]); 0 disables it.
     pub fn with_min_committee(mut self, floor: usize) -> Self {
         self.min_committee = floor;
+        self
+    }
+
+    /// Enable merge-deferral for below-floor committees (see the `defer`
+    /// field); only meaningful with a floor > 1 in buffered mode.
+    pub fn with_defer(mut self, defer: bool) -> Self {
+        self.defer = defer;
         self
     }
 
@@ -500,15 +519,43 @@ impl RoundEngine {
                         .then(a.client.cmp(&b.client))
                 });
                 let goal = self.effective_goal(base_cohort).min(self.in_flight.len());
+                let mut landed: Vec<InFlight> = self.in_flight.drain(..goal).collect();
+                // the close fires at the goal-th landing even when deferral
+                // then holds some classes back: the server observed that
+                // landing before deciding what to merge
                 let mut close_abs = round_start_s;
+                for inf in &landed {
+                    close_abs = close_abs.max(inf.done_abs_s);
+                }
+                // merge-deferral floor: a staleness class with fewer than
+                // `min_committee` landed submitters returns to the pool
+                // (original launch round and landing time intact) to wait
+                // for classmates — unless it is already at the staleness
+                // bound, where waiting once more would age it out, so it
+                // merges below the floor and surfaces via
+                // `min_committee_size`
+                let mut deferred = 0usize;
+                if self.defer && self.min_committee > 1 {
+                    let mut class_counts: std::collections::BTreeMap<usize, usize> =
+                        std::collections::BTreeMap::new();
+                    for inf in &landed {
+                        *class_counts.entry(round - inf.launch_round).or_insert(0) += 1;
+                    }
+                    let (keep, hold): (Vec<InFlight>, Vec<InFlight>) =
+                        landed.into_iter().partition(|inf| {
+                            let st = round - inf.launch_round;
+                            class_counts[&st] >= self.min_committee || st >= max_staleness
+                        });
+                    deferred = hold.len();
+                    self.in_flight.extend(hold);
+                    landed = keep;
+                }
                 let mut stale_sum = 0usize;
-                let merged: Vec<MergeItem> = self
-                    .in_flight
-                    .drain(..goal)
+                let merged: Vec<MergeItem> = landed
+                    .into_iter()
                     .map(|inf| {
                         let staleness = round - inf.launch_round;
                         stale_sum += staleness;
-                        close_abs = close_abs.max(inf.done_abs_s);
                         MergeItem {
                             client: inf.client,
                             tier: inf.tier,
@@ -532,10 +579,10 @@ impl RoundEngine {
                         false
                     }
                 });
-                let mean_staleness = if goal == 0 {
+                let mean_staleness = if merged.is_empty() {
                     0.0
                 } else {
-                    stale_sum as f64 / goal as f64
+                    stale_sum as f64 / merged.len() as f64
                 };
                 // committees: one per staleness class among the merged
                 // updates; same-class age-outs are keyed in as dropouts so
@@ -561,16 +608,26 @@ impl RoundEngine {
                         c.dropped.push(client);
                     }
                 }
+                // defer mode already enforced the floor by holding classes
+                // back, so the remaining below-floor committees are the
+                // at-bound ones that may not wait — coalescing them would
+                // reintroduce the weight splitting deferral exists to avoid
+                let committees = if self.defer {
+                    classes.into_values().collect()
+                } else {
+                    Self::apply_committee_floor(
+                        classes.into_values().collect(),
+                        self.min_committee,
+                    )
+                };
                 RoundOutcome {
                     merged,
                     close_s: (close_abs - round_start_s).max(0.0),
                     discarded_tiers,
                     mean_staleness,
                     in_flight: self.in_flight.len(),
-                    committees: Self::apply_committee_floor(
-                        classes.into_values().collect(),
-                        self.min_committee,
-                    ),
+                    deferred,
+                    committees,
                 }
             }
         }
@@ -952,6 +1009,106 @@ mod tests {
         let c = &out2.committees[0];
         assert_eq!(c.submitters, vec![0, 1, 2]);
         assert_eq!(c.dropped, vec![12], "the dropout rides along for reconstruction");
+    }
+
+    #[test]
+    fn defer_holds_a_below_floor_class_until_classmates_or_the_bound() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 3,
+            max_staleness: 2,
+        })
+        .with_min_committee(2)
+        .with_defer(true);
+        // round 1: four survivors, goal 3 — client 13 carries into round 2
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+            Some(slot_work(13, 1)),
+        ];
+        let events = vec![
+            event(0, 10, 0, 1.0),
+            event(1, 11, 0, 2.0),
+            event(2, 12, 1, 3.0),
+            event(3, 13, 1, 9.0),
+        ];
+        let out1 = eng.close_round(1, 4, 0.0, &events, work);
+        assert_eq!(out1.deferred, 0, "a full fresh class never defers");
+        // round 2: carried 13 (staleness 1) lands first but is the only
+        // member of its class — deferred, not merged and not coalesced
+        let work2 = vec![Some(slot_work(20, 0)), Some(slot_work(21, 0))];
+        let events2 = vec![event(0, 20, 0, 1.0), event(1, 21, 0, 2.0)];
+        let out2 = eng.close_round(2, 3, 10.0, &events2, work2);
+        let merged: Vec<usize> = out2.merged.iter().map(|m| m.client).collect();
+        assert_eq!(merged, vec![20, 21], "the lone stale update is held back");
+        assert_eq!(out2.deferred, 1);
+        assert_eq!(out2.in_flight, 1, "deferred update returns to the pool");
+        assert!(out2.discarded_tiers.is_empty());
+        assert_eq!(out2.mean_staleness, 0.0, "only fresh updates merged");
+        // the close still fired at the goal-th landing (21 at abs 12.0)
+        assert!((out2.close_s - 2.0).abs() < 1e-12);
+        assert_eq!(out2.committees.len(), 1);
+        assert_eq!(out2.committees[0].staleness, 0);
+        assert_eq!(out2.committees[0].submitters, vec![0, 1]);
+        // round 3: client 13 is now AT the staleness bound — waiting once
+        // more would age it out, so it merges below the floor and surfaces
+        // through the lone small committee
+        let out3 = eng.close_round(3, 3, 20.0, &[], vec![]);
+        assert_eq!(out3.merged.len(), 1);
+        assert_eq!(out3.merged[0].client, 13);
+        assert_eq!(out3.merged[0].staleness, 2);
+        assert_eq!(out3.deferred, 0);
+        assert_eq!(out3.in_flight, 0);
+        assert_eq!(out3.committees.len(), 1);
+        assert_eq!(out3.committees[0].submitters.len(), 1, "at-bound class merges small");
+    }
+
+    #[test]
+    fn defer_merges_a_class_once_it_reaches_the_floor() {
+        let mut eng = RoundEngine::new(AggregationMode::Buffered {
+            goal_count: 2,
+            max_staleness: 3,
+        })
+        .with_min_committee(2)
+        .with_defer(true);
+        // round 1: three survivors, goal 2 — client 12 stays in flight
+        let work = vec![
+            Some(slot_work(10, 0)),
+            Some(slot_work(11, 0)),
+            Some(slot_work(12, 1)),
+        ];
+        let events = vec![event(0, 10, 0, 1.0), event(1, 11, 0, 2.0), event(2, 12, 1, 8.0)];
+        eng.close_round(1, 3, 0.0, &events, work);
+        // round 2: one fresh survivor; goal 2 drains carried 12 (staleness
+        // 1) + fresh 20 — BOTH classes are single-member and below the
+        // floor; 12 defers, and so does the fresh 20
+        let work2 = vec![Some(slot_work(20, 0))];
+        let events2 = vec![event(0, 20, 0, 1.0)];
+        let out2 = eng.close_round(2, 2, 10.0, &events2, work2);
+        assert!(out2.merged.is_empty());
+        assert_eq!(out2.deferred, 2);
+        assert_eq!(out2.in_flight, 2);
+        assert!(out2.committees.is_empty(), "nothing merged, nothing keyed");
+        // round 3: one more fresh survivor; the drained pool is 12
+        // (staleness 2, still alone — defers again) and 20+30? No: goal 2
+        // drains the two earliest landings, 12 (abs 8.0) and 20 (abs 11.0).
+        // 20 is now staleness 1, same class as nobody — but 12 is staleness
+        // 2, also alone: both defer again.
+        let work3 = vec![Some(slot_work(30, 0))];
+        let events3 = vec![event(0, 30, 0, 1.0)];
+        let out3 = eng.close_round(3, 2, 20.0, &events3, work3);
+        assert!(out3.merged.is_empty());
+        assert_eq!(out3.deferred, 2);
+        assert_eq!(out3.in_flight, 3);
+        // round 4: goal 2 drains 12 (staleness 3 == bound: merges) and 20
+        // (staleness 2, alone: defers)... but 30 (abs 21.0) lands third and
+        // stays pooled. 12 merges below floor at the bound.
+        let out4 = eng.close_round(4, 2, 30.0, &[], vec![]);
+        assert_eq!(out4.merged.len(), 1);
+        assert_eq!(out4.merged[0].client, 12);
+        assert_eq!(out4.merged[0].staleness, 3);
+        assert_eq!(out4.deferred, 1);
+        assert_eq!(out4.in_flight, 2);
     }
 
     #[test]

@@ -124,6 +124,10 @@ pub struct RoundRecord {
     /// Version-fresh pieces refetched only because they aged past
     /// `--max-stale-rounds`.
     pub cache_stale_refreshes: u64,
+    /// Landed updates pushed back into the in-flight pool by
+    /// `--committee-defer` because their staleness class was below the
+    /// `--min-committee` floor (0 unless the defer variant is on).
+    pub deferrals: usize,
 }
 
 /// Periodic evaluation snapshot.
@@ -167,6 +171,23 @@ impl TrainReport {
             self.total_sim_s,
         )
     }
+}
+
+/// What one round cost on the shared device fleet — the slice of
+/// [`Trainer::run_round_with`] the multi-tenant [`crate::tenancy`]
+/// coordinator prices its fleet clock with. All times are round-relative
+/// seconds on the simulated timeline.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTick {
+    /// Fleet client indices this round selected (dropouts included — their
+    /// download happened).
+    pub cohort: Vec<usize>,
+    /// The round's close point (straggler under sync, goal-count landing
+    /// otherwise), before server overhead.
+    pub close_s: f64,
+    /// Per completion event: `(fleet client index, completion time)` — the
+    /// device was busy from round start until then.
+    pub busy: Vec<(usize, f64)>,
 }
 
 /// Federated trainer (Algorithm 2).
@@ -235,7 +256,9 @@ impl Trainer {
             server_floats: spec.server_floats(&store),
         };
         let mut scheduler = Scheduler::new(&cfg, dataset.train.len())?;
-        let round_engine = RoundEngine::new(cfg.agg_mode).with_min_committee(cfg.min_committee);
+        let round_engine = RoundEngine::new(cfg.agg_mode)
+            .with_min_committee(cfg.min_committee)
+            .with_defer(cfg.committee_defer);
         // --cache: version clock + cache geometry + one budgeted cache per
         // train client (budget = device memory cap × cache_budget_frac)
         let (versions, cache_geom) = if cfg.cache {
@@ -309,6 +332,26 @@ impl Trainer {
         &self.scheduler
     }
 
+    /// Mutable scheduler access — the multi-tenant coordinator's contended
+    /// cache share swaps one pooled [`FleetCaches`] in and out around each
+    /// job's round via [`Scheduler::take_caches`] / `install_caches`.
+    pub fn scheduler_mut(&mut self) -> &mut Scheduler {
+        &mut self.scheduler
+    }
+
+    /// Tag this trainer with a tenancy namespace (job id; 0 = the
+    /// single-tenant default). Prefixes the version clock — so client-cache
+    /// entries committed under one job can never validate against another
+    /// job's pieces — and the slice service's shared addressable state (the
+    /// CDN piece addresses). Namespace 0 is byte-identical to an untagged
+    /// trainer.
+    pub fn set_namespace(&mut self, ns: u32) {
+        if let Some(v) = self.versions.take() {
+            self.versions = Some(v.with_ns(ns));
+        }
+        self.service.set_namespace(ns);
+    }
+
     pub fn dataset(&self) -> &FederatedDataset {
         &self.dataset
     }
@@ -342,6 +385,21 @@ impl Trainer {
 
     /// Run one round of Algorithm 2.
     pub fn run_round(&mut self) -> Result<RoundRecord> {
+        self.run_round_with(&[]).map(|(rec, _)| rec)
+    }
+
+    /// Run one round, additionally excluding `extra_exclude` (fleet client
+    /// indices) from cohort selection — the multi-tenant arbiter's
+    /// `priority` / `drr` policies pass the clients earlier jobs already
+    /// claimed this tick. With an empty slice the exclusion set reduces to
+    /// the engine's own in-flight list, making this exactly
+    /// [`Self::run_round`] — the identity a single-job coordinator's
+    /// byte-compatibility rests on. Also returns the [`RoundTick`] the
+    /// coordinator prices its shared-fleet clock with.
+    pub fn run_round_with(
+        &mut self,
+        extra_exclude: &[usize],
+    ) -> Result<(RoundRecord, RoundTick)> {
         let t0 = Instant::now();
         self.round += 1;
         let mut round_rng = self.rng.fork(self.round as u64);
@@ -354,7 +412,12 @@ impl Trainer {
         // draw the pre-scheduler coordinator made, so trajectories are
         // byte-identical at the same seed.
         let want = self.round_engine.planned_cohort(self.cfg.cohort);
-        let in_flight = self.round_engine.in_flight_clients();
+        let mut in_flight = self.round_engine.in_flight_clients();
+        if !extra_exclude.is_empty() {
+            in_flight.extend_from_slice(extra_exclude);
+            in_flight.sort_unstable();
+            in_flight.dedup();
+        }
         let plan = self
             .scheduler
             .plan_round(self.round, want, &self.geom, &mut round_rng, &in_flight);
@@ -576,7 +639,10 @@ impl Trainer {
         let mut committee_members = 0usize;
         let mut min_committee_size = usize::MAX;
         // each substrate yields the finalized server update (None when
-        // nothing merged); the optimizer step is shared below
+        // nothing merged) and reports the merged updates' touched keys —
+        // the version clock's candidate rows ride the aggregator instead of
+        // being re-unioned trainer-side; the optimizer step is shared below
+        let mut touched = TouchedKeys::new(self.spec.keyspaces.len());
         let update: Option<ParamStore> = if self.cfg.secure_agg && self.cfg.secure_committee {
             // committee id = run seed ⊕ close ordinal, spread over the
             // staleness classes of one close. The close ordinal is the
@@ -605,6 +671,7 @@ impl Trainer {
                     sec.mark_dropped(d);
                 }
                 let (csum, ccnt) = sec.unmask_sum();
+                touched.merge(sec.touched());
                 for (a, s) in acc.segments.iter_mut().zip(csum.segments.iter()) {
                     for (x, &v) in a.data.iter_mut().zip(s.data.iter()) {
                         *x += com.weight * v;
@@ -645,6 +712,7 @@ impl Trainer {
                     sec.mark_dropped(id);
                 }
             }
+            touched.merge(sec.touched());
             (completed > 0).then(|| {
                 let (acc, secure_counts) = sec.unmask_sum();
                 finalize_mean(acc, &secure_counts, completed, self.cfg.agg)
@@ -654,27 +722,29 @@ impl Trainer {
             for item in &outcome.merged {
                 agg.add_client_weighted(&self.spec, &item.keys, &item.deltas, item.weight)?;
             }
-            (completed > 0).then(|| agg.finalize(self.cfg.agg))
+            if completed > 0 {
+                let (update, agg_touched) = agg.finalize(self.cfg.agg);
+                touched = agg_touched;
+                Some(update)
+            } else {
+                None
+            }
         };
         if let Some(update) = &update {
             self.optimizer.step(&mut self.store, update);
         }
 
         // --cache: bump the version clock for exactly the rows this close
-        // wrote. Candidate rows are the union of the merged updates' keys
-        // (identical across all three aggregation substrates); of those,
-        // only rows with a nonzero finalized aggregate actually changed the
-        // store (zero update = fixed point for the cache-validated server
-        // optimizers), so zero-aggregate rows — padded select keys nobody's
-        // data exercises, cancelling contributions — keep their version and
-        // every cached copy of them stays valid. An empty close bumps
-        // nothing.
+        // wrote. Candidate rows are the aggregator-reported touched set —
+        // the union of the merged updates' keys, identical across all three
+        // aggregation substrates; of those, only rows with a nonzero
+        // finalized aggregate actually changed the store (zero update =
+        // fixed point for the cache-validated server optimizers), so
+        // zero-aggregate rows — padded select keys nobody's data exercises,
+        // cancelling contributions — keep their version and every cached
+        // copy of them stays valid. An empty close bumps nothing.
         if let (Some(versions), Some(update)) = (self.versions.as_mut(), update.as_ref()) {
-            let mut selected = TouchedKeys::new(self.spec.keyspaces.len());
-            for item in &outcome.merged {
-                selected.record(&item.keys);
-            }
-            versions.bump_written(self.round as u64, &selected, update, &self.spec);
+            versions.bump_written(self.round as u64, &touched, update, &self.spec);
         }
 
         // bytes uploaded *this round* by every computed client — like the
@@ -703,7 +773,12 @@ impl Trainer {
             tier_discarded[t] += 1;
         }
 
-        Ok(RoundRecord {
+        let tick = RoundTick {
+            cohort: plan.cohort.clone(),
+            close_s: outcome.close_s,
+            busy: events.iter().map(|e| (e.client, e.at_s)).collect(),
+        };
+        let rec = RoundRecord {
             round: self.round,
             completed,
             dropped,
@@ -734,7 +809,9 @@ impl Trainer {
             tier_cache_lookups,
             cache_evictions: cache_stats.evictions,
             cache_stale_refreshes: cache_stats.stale_refreshes,
-        })
+            deferrals: outcome.deferred,
+        };
+        Ok((rec, tick))
     }
 
     /// Evaluate the full server model on held-out clients.
@@ -768,18 +845,22 @@ impl Trainer {
         })
     }
 
-    /// Run the configured number of rounds with periodic evaluation.
-    pub fn run(&mut self) -> Result<TrainReport> {
-        let mut rounds = Vec::with_capacity(self.cfg.rounds);
-        let mut evals = Vec::new();
-        for r in 0..self.cfg.rounds {
-            let rec = self.run_round()?;
-            rounds.push(rec);
-            let every = self.cfg.eval.every;
-            if every > 0 && (r + 1) % every == 0 && r + 1 < self.cfg.rounds {
-                evals.push(self.evaluate()?);
-            }
-        }
+    /// Whether [`Self::run`] evaluates after 0-based round `r` (the final
+    /// round's eval is always taken separately). Exposed so the multi-tenant
+    /// coordinator reproduces the run-loop cadence per job exactly.
+    pub fn should_eval(&self, r: usize) -> bool {
+        let every = self.cfg.eval.every;
+        every > 0 && (r + 1) % every == 0 && r + 1 < self.cfg.rounds
+    }
+
+    /// Take the final evaluation and assemble the [`TrainReport`] — the tail
+    /// of [`Self::run`], shared with the multi-tenant coordinator so a
+    /// single-job coordinator report is byte-identical to a trainer report.
+    pub fn finish_report(
+        &mut self,
+        rounds: Vec<RoundRecord>,
+        mut evals: Vec<EvalRecord>,
+    ) -> Result<TrainReport> {
         let final_eval = self.evaluate()?;
         evals.push(final_eval);
         Ok(TrainReport {
@@ -796,6 +877,20 @@ impl Trainer {
             evals,
             final_eval,
         })
+    }
+
+    /// Run the configured number of rounds with periodic evaluation.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        let mut evals = Vec::new();
+        for r in 0..self.cfg.rounds {
+            let rec = self.run_round()?;
+            rounds.push(rec);
+            if self.should_eval(r) {
+                evals.push(self.evaluate()?);
+            }
+        }
+        self.finish_report(rounds, evals)
     }
 }
 

@@ -21,11 +21,13 @@
 //! | `async`  | (beyond the paper) aggregation-mode × fleet sweep on the round engine |
 //! | `secagg` | (beyond the paper) secure-aggregation committee size × mode × fleet sweep |
 //! | `cache`  | (beyond the paper) slice-cache eviction policy × budget × fleet sweep |
+//! | `multitenant` | (beyond the paper) N concurrent jobs on one shared fleet vs isolated runs |
 
 mod async_agg;
 mod cache;
 mod emnist;
 mod logreg;
+mod multitenant;
 mod scheduler;
 mod secagg;
 mod table1;
@@ -59,7 +61,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
-    "async", "secagg", "cache",
+    "async", "secagg", "cache", "multitenant",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -79,6 +81,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "async" => async_agg::sweep(opts)?,
         "secagg" => secagg::sweep(opts)?,
         "cache" => cache::sweep(opts)?,
+        "multitenant" => multitenant::run(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

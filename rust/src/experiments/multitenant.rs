@@ -1,0 +1,149 @@
+//! Multi-tenant coordinator experiment: N heterogeneous jobs sharing one
+//! tiered fleet vs the same jobs run in isolation, back to back.
+//!
+//! The acceptance shape: under the `fair-share` arbiter every job's
+//! planner sees exactly the exclusion set it would see running alone, so
+//! each job's *final metrics are string-identical* to its isolated run —
+//! while the shared-fleet simulated wall-time **strictly beats** the sum
+//! of the isolated runs, because the jobs' rounds overlap on the fleet
+//! clock instead of queueing.
+
+use crate::cache::CacheShare;
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::bow::BowConfig;
+use crate::error::Result;
+use crate::fedselect::SliceImpl;
+use crate::metrics::{multitenant_summary, Table};
+use crate::scheduler::FleetKind;
+use crate::tenancy::{ArbiterPolicy, Coordinator, JobRegistry, JobSpec};
+
+use super::ExpOptions;
+
+/// The heterogeneous job roster: same fleet (seed/kind/clients), different
+/// models, key budgets, slice implementations, and cache settings.
+fn jobs(opts: &ExpOptions) -> Vec<JobSpec> {
+    let (rounds, n_clients) = if opts.quick { (2, 30) } else { (6, 48) };
+    let make = |vocab: usize, m: usize, cohort: usize, imp: SliceImpl, cache: bool| {
+        let mut cfg = TrainConfig::logreg_default(vocab, m);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(n_clients, 6, 8));
+        cfg.engine = opts.engine.clone();
+        cfg.rounds = rounds;
+        cfg.cohort = cohort;
+        cfg.eval.every = 0;
+        cfg.eval.max_examples = if opts.quick { 256 } else { 1024 };
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.slice_impl = imp;
+        cfg.cache = cache;
+        cfg.seed = 2025;
+        cfg
+    };
+    let mut roster = vec![
+        JobSpec::new(1, "tags-narrow", make(256, 32, 6, SliceImpl::OnDemand, false)),
+        JobSpec::new(2, "tags-wide", make(512, 64, 8, SliceImpl::PregenCdn, true)).with_weight(2.0),
+    ];
+    if !opts.quick {
+        roster.push(JobSpec::new(
+            3,
+            "tags-broadcast",
+            make(256, 48, 6, SliceImpl::Broadcast, false),
+        ));
+    }
+    roster
+}
+
+/// `--id multitenant`: shared-fleet concurrent jobs vs isolated sequential
+/// runs, plus the fleet utilization rollup.
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let roster = jobs(opts);
+
+    // isolated baselines: each job alone on its own (identical) fleet
+    let mut isolated = Vec::with_capacity(roster.len());
+    for spec in &roster {
+        isolated.push(Trainer::new(spec.cfg.clone())?.run()?);
+    }
+    let isolated_total: f64 = isolated.iter().map(|r| r.total_sim_s).sum();
+
+    let registry = JobRegistry::new(roster, CacheShare::Partitioned)?;
+    let mut coord = Coordinator::new(registry, ArbiterPolicy::FairShare)?;
+    let shared = coord.run()?;
+
+    let mut per_job = Table::new(
+        "Per-job metrics: shared fleet vs isolated",
+        &[
+            "job", "rounds", "metric_shared", "metric_isolated", "metric_match",
+            "job_sim_s_shared", "job_sim_s_isolated",
+        ],
+    );
+    for ((usage, srep), irep) in shared.usage.iter().zip(&shared.reports).zip(&isolated) {
+        let ms = format!("{:.6}", srep.final_eval.metric);
+        let mi = format!("{:.6}", irep.final_eval.metric);
+        per_job.push(vec![
+            usage.name.clone(),
+            usage.rounds.to_string(),
+            ms.clone(),
+            mi.clone(),
+            if ms == mi { "yes".into() } else { "NO".into() },
+            format!("{:.1}", srep.total_sim_s),
+            format!("{:.1}", irep.total_sim_s),
+        ]);
+    }
+
+    let mut wall = Table::new(
+        "Shared-fleet vs isolated simulated wall-time",
+        &["mode", "jobs", "ticks", "sim_total_s", "speedup"],
+    );
+    wall.push(vec![
+        "shared".into(),
+        shared.reports.len().to_string(),
+        shared.ticks.to_string(),
+        format!("{:.1}", shared.total_sim_s),
+        format!("{:.2}", isolated_total / shared.total_sim_s.max(1e-12)),
+    ]);
+    wall.push(vec![
+        "isolated".into(),
+        isolated.len().to_string(),
+        "-".into(),
+        format!("{isolated_total:.1}"),
+        "1.00".into(),
+    ]);
+
+    Ok(vec![per_job, wall, multitenant_summary(&shared)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    /// The tentpole acceptance: shared-fleet total simulated wall-time
+    /// strictly beats isolated sequential runs, at string-identical
+    /// per-job final metrics.
+    #[test]
+    fn shared_fleet_beats_isolated_at_identical_metrics() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_multitenant_exp")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let tables = run(&opts).unwrap();
+        assert_eq!(tables.len(), 3);
+        let per_job = &tables[0];
+        assert_eq!(per_job.rows.len(), 2); // quick roster
+        for r in &per_job.rows {
+            assert_eq!(r[2], r[3], "{}: shared vs isolated metric diverged", r[0]);
+            assert_eq!(r[4], "yes");
+        }
+        let wall = &tables[1];
+        let shared_s: f64 = wall.rows[0][3].parse().unwrap();
+        let isolated_s: f64 = wall.rows[1][3].parse().unwrap();
+        assert!(
+            shared_s < isolated_s,
+            "shared {shared_s} !< isolated {isolated_s}"
+        );
+        // utilization rollup: one row per job + fleet totals
+        assert_eq!(tables[2].rows.len(), 3);
+    }
+}

@@ -223,6 +223,12 @@ pub trait SliceService: Send {
         store: &'a ParamStore,
         spec: &'a SelectSpec,
     ) -> Result<Box<dyn RoundSession + 'a>>;
+
+    /// Tag the service with a tenancy namespace (job id; 0 = single-tenant).
+    /// Only backends holding shared addressable state need it — the CDN
+    /// prefixes its piece addresses so N jobs never collide — so the
+    /// default is a no-op.
+    fn set_namespace(&mut self, _ns: u32) {}
 }
 
 /// One round's slicing session. All methods take `&self`; ledgers use

@@ -85,6 +85,12 @@ impl SliceService for PregenCdnService {
             ledger,
         }))
     }
+
+    /// Namespace the CDN piece addresses by job id (multi-tenant runs
+    /// sharing one CDN publish into disjoint address prefixes).
+    fn set_namespace(&mut self, ns: u32) {
+        self.cdn.set_ns(ns);
+    }
 }
 
 impl RoundSession for PregenSession<'_> {

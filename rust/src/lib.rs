@@ -12,7 +12,9 @@
 //! simulated clock), a cohort [`scheduler`] (device-profile and trace-driven
 //! fleets, pluggable selection policies, simulated round wall-time), a
 //! cross-round client slice [`cache`] (versioned pieces, delta fetch
-//! plans, budgeted on-device caches),
+//! plans, budgeted on-device caches), a multi-tenant [`tenancy`]
+//! coordinator (N concurrent jobs arbitrated over one shared fleet, CDN,
+//! and client cache budget),
 //! synthetic federated datasets, a CDN substrate with a PIR cost model, and
 //! the experiment harness regenerating every table and figure of the
 //! paper's §5.
@@ -49,13 +51,14 @@ pub mod native;
 pub mod optim;
 pub mod runtime;
 pub mod scheduler;
+pub mod tenancy;
 pub mod tensor;
 pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator, TouchedKeys};
-    pub use crate::cache::{ClientCache, EvictPolicy, FleetCaches, VersionClock};
+    pub use crate::cache::{CacheShare, ClientCache, EvictPolicy, FleetCaches, VersionClock};
     pub use crate::clients::Engine;
     pub use crate::config::{DatasetConfig, EngineKind, EvalConfig, TrainConfig};
     pub use crate::coordinator::{
@@ -71,6 +74,9 @@ pub mod prelude {
     pub use crate::scheduler::{
         CompletionEvent, DeviceProfile, Fleet, FleetKind, SchedPolicy, Scheduler,
         SelectionPolicy, SimClock,
+    };
+    pub use crate::tenancy::{
+        ArbiterPolicy, Coordinator, FleetArbiter, JobRegistry, JobSpec, MultiReport,
     };
     pub use crate::tensor::rng::Rng;
 }

@@ -16,13 +16,14 @@
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
 //!                       [--secure-committee] [--min-committee N]
+//!                       [--committee-defer]
 //!                       [--cache] [--cache-budget-frac F]
 //!                       [--cache-evict lru|lfu|version-distance]
 //!                       [--max-stale-rounds S]
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
-//!                            secagg|cache|all|list
+//!                            secagg|cache|multitenant|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -238,6 +239,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     // protocol itself
     cfg.secure_agg = a.flag("secure-agg") || cfg.secure_committee;
     cfg.min_committee = a.parse_or("min-committee", 0usize).map_err(Error::Config)?;
+    cfg.committee_defer = a.flag("committee-defer");
     // cross-round slice cache: any cache knob implies --cache (matching the
     // agg-mode knob convention)
     let budget_frac = a.get("cache-budget-frac").map(str::to_string);

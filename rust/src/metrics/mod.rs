@@ -101,6 +101,70 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
     table
 }
 
+/// Fleet-level rollup of a multi-tenant run: one row per job (rounds run,
+/// per-tier simulated device-seconds, wire bytes, client-cache hit rate)
+/// plus a fleet totals row; the title carries the tick count, the shared
+/// wall-clock, and the overall device utilization.
+pub fn multitenant_summary(report: &crate::tenancy::MultiReport) -> Table {
+    let tiers = &report.tier_names;
+    let mut header: Vec<String> = vec!["job".to_string(), "rounds".to_string()];
+    for t in tiers {
+        header.push(format!("busy_s[{t}]"));
+    }
+    for col in ["down", "up", "cache_hit%"] {
+        header.push(col.to_string());
+    }
+    let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Fleet utilization ({} jobs / {} ticks / {:.1} sim-s / {:.1}% busy)",
+            report.usage.len(),
+            report.ticks,
+            report.total_sim_s,
+            100.0 * report.fleet_utilization,
+        ),
+        &refs,
+    );
+    let mut tot_busy = vec![0.0f64; tiers.len()];
+    let mut tot_rounds = 0usize;
+    let (mut tot_down, mut tot_up) = (0u64, 0u64);
+    let (mut tot_hits, mut tot_lookups) = (0u64, 0u64);
+    let hit_pct = |hits: u64, lookups: u64| {
+        if lookups > 0 {
+            format!("{:.1}", 100.0 * hits as f64 / lookups as f64)
+        } else {
+            "-".to_string()
+        }
+    };
+    for u in &report.usage {
+        let mut row = vec![u.name.clone(), u.rounds.to_string()];
+        for (t, &b) in u.tier_busy_s.iter().enumerate() {
+            row.push(format!("{b:.1}"));
+            if t < tot_busy.len() {
+                tot_busy[t] += b;
+            }
+        }
+        row.push(human_bytes(u.down_bytes));
+        row.push(human_bytes(u.up_bytes));
+        row.push(hit_pct(u.cache_hits, u.cache_lookups));
+        table.push(row);
+        tot_rounds += u.rounds;
+        tot_down += u.down_bytes;
+        tot_up += u.up_bytes;
+        tot_hits += u.cache_hits;
+        tot_lookups += u.cache_lookups;
+    }
+    let mut totals = vec!["(fleet)".to_string(), tot_rounds.to_string()];
+    for b in &tot_busy {
+        totals.push(format!("{b:.1}"));
+    }
+    totals.push(human_bytes(tot_down));
+    totals.push(human_bytes(tot_up));
+    totals.push(hit_pct(tot_hits, tot_lookups));
+    table.push(totals);
+    table
+}
+
 /// A simple table that renders to CSV and markdown.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -245,6 +309,7 @@ mod tests {
             tier_cache_lookups: vec![4, 0, 0],
             cache_evictions: 0,
             cache_stale_refreshes: 0,
+            deferrals: 0,
         };
         let t = fleet_summary(&fleet, &[rec.clone(), rec]);
         assert_eq!(t.rows.len(), 3);
@@ -256,5 +321,43 @@ mod tests {
         assert_eq!(t.rows[0][10], "75.0"); // cache hit%: 6 hits / 8 lookups
         assert_eq!(t.rows[1][10], "-"); // no lookups in this tier
         assert!(human_rate(2e6).ends_with("/s"));
+    }
+
+    #[test]
+    fn multitenant_summary_rolls_up_jobs_and_fleet_totals() {
+        use crate::tenancy::{JobUsage, MultiReport};
+        let usage = |name: &str, busy: [f64; 2], down: u64, hits: u64, lookups: u64| JobUsage {
+            id: 0,
+            name: name.to_string(),
+            rounds: 4,
+            tier_busy_s: busy.to_vec(),
+            down_bytes: down,
+            up_bytes: 10,
+            cache_hits: hits,
+            cache_lookups: lookups,
+        };
+        let report = MultiReport {
+            reports: Vec::new(),
+            usage: vec![
+                usage("a", [1.0, 2.0], 100, 3, 4),
+                usage("b", [0.5, 0.25], 200, 0, 0),
+            ],
+            ticks: 4,
+            grants: vec![4, 4],
+            total_sim_s: 10.0,
+            fleet_utilization: 0.5,
+            tier_names: vec!["low".to_string(), "high".to_string()],
+        };
+        let t = multitenant_summary(&report);
+        assert_eq!(t.header[2], "busy_s[low]");
+        assert_eq!(t.rows.len(), 3); // 2 jobs + fleet totals
+        assert_eq!(t.rows[0][2], "1.0");
+        assert_eq!(t.rows[2][0], "(fleet)");
+        assert_eq!(t.rows[2][1], "8"); // total rounds
+        assert_eq!(t.rows[2][2], "1.5"); // summed low-tier busy time
+        assert_eq!(t.rows[0][6], "75.0");
+        assert_eq!(t.rows[1][6], "-");
+        assert_eq!(t.rows[2][6], "75.0"); // fleet-wide hit rate
+        assert!(t.title.contains("50.0% busy"), "{}", t.title);
     }
 }

@@ -250,6 +250,15 @@ impl Scheduler {
         self.caches.as_mut()
     }
 
+    /// Detach and return the fleet caches (leaving `None` installed). The
+    /// multi-tenant coordinator's contended cache share swaps one pooled
+    /// [`FleetCaches`] between jobs with this + [`Self::install_caches`]
+    /// around each job's round, so every job contends for the same device
+    /// bytes without sharing ownership.
+    pub fn take_caches(&mut self) -> Option<FleetCaches> {
+        self.caches.take()
+    }
+
     pub fn policy_kind(&self) -> SchedPolicy {
         self.policy_kind
     }

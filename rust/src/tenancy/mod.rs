@@ -1,0 +1,412 @@
+//! Multi-tenant coordinator: N concurrent training jobs over one shared
+//! device fleet, CDN, and client cache budget.
+//!
+//! The single-tenant [`Trainer`] owns everything — fleet, caches, version
+//! clock, slice service. This module promotes it into a long-lived
+//! [`Coordinator`] that *ticks*: each tick the [`FleetArbiter`] decides
+//! which jobs plan a round (and, under `priority`/`drr`, which clients
+//! earlier jobs already claimed), every granted job runs one round of its
+//! own Algorithm 2, and the coordinator prices what the tick cost on the
+//! shared fleet.
+//!
+//! **Isolation.** Each job keeps its own model, dataset, optimizer, RNG
+//! stream and round engine; shared *addressable* state is namespaced by
+//! job id ([`Trainer::set_namespace`]): the CDN prefixes piece addresses,
+//! the version clock tags its keyspaces, and client-cache entries carry
+//! the namespace — so job A's pieces can never validate against job B's
+//! versions. Namespace 0 is byte-identical to an untagged single-tenant
+//! run, which is what the byte-identity contract tests pin.
+//!
+//! **Cache budget.** One physical device hosts every job's cache bytes.
+//! [`CacheShare::Partitioned`] gives each caching job a guaranteed
+//! weight-share slice of the device budget (a lone job's share is exactly
+//! the single-tenant budget); [`CacheShare::Contended`] keeps *one*
+//! pooled cache per device — budgeted at the per-job maximum — and swaps
+//! it into each job's scheduler around its round, so jobs may evict each
+//! other's (namespaced) entries.
+//!
+//! **The tick clock.** Per-job simulated time stays the job's own ledger
+//! (a job's [`TrainReport`] is what its isolated run would report). The
+//! coordinator's fleet clock charges each tick
+//! `max(slowest job close, busiest shared device) + ROUND_OVERHEAD_S`:
+//! jobs' rounds overlap (that is the whole point of sharing the fleet),
+//! but a device selected by several jobs trains them sequentially, so the
+//! busiest device's summed busy time also bounds the tick. Running N jobs
+//! concurrently therefore beats running them back-to-back whenever any
+//! two rounds overlap — with identical per-job trajectories under
+//! `fair-share`.
+
+pub mod arbiter;
+pub mod registry;
+
+pub use arbiter::{ArbiterPolicy, FleetArbiter};
+pub use registry::{JobRegistry, JobSpec};
+
+use std::collections::BTreeMap;
+
+use crate::cache::{CacheShare, FleetCaches};
+use crate::coordinator::{EvalRecord, RoundRecord, TrainReport, Trainer};
+use crate::error::{Error, Result};
+use crate::scheduler::ROUND_OVERHEAD_S;
+
+/// One tenant's live state inside the coordinator.
+struct JobState {
+    spec: JobSpec,
+    trainer: Trainer,
+    rounds: Vec<RoundRecord>,
+    evals: Vec<EvalRecord>,
+    /// Rounds completed so far (the job is done at `spec.cfg.rounds`).
+    done: usize,
+    /// Simulated device-seconds consumed, per fleet tier.
+    tier_busy_s: Vec<f64>,
+}
+
+/// Per-job fleet usage rollup (see [`crate::metrics::multitenant_summary`]).
+#[derive(Clone, Debug)]
+pub struct JobUsage {
+    pub id: u32,
+    pub name: String,
+    /// Rounds the job ran (== its grant count).
+    pub rounds: usize,
+    /// Simulated device-seconds, per fleet tier.
+    pub tier_busy_s: Vec<f64>,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_lookups: u64,
+}
+
+/// What a multi-tenant run produced: one [`TrainReport`] per job (index-
+/// aligned with the registry order) plus the shared-fleet rollup.
+#[derive(Clone, Debug)]
+pub struct MultiReport {
+    pub reports: Vec<TrainReport>,
+    pub usage: Vec<JobUsage>,
+    /// Arbiter ticks the run took.
+    pub ticks: u64,
+    /// Grants per job, in job order.
+    pub grants: Vec<u64>,
+    /// Total simulated wall-time on the shared fleet (the coordinator's
+    /// tick clock — NOT the sum of per-job `total_sim_s`).
+    pub total_sim_s: f64,
+    /// Busy device-seconds / (fleet size × `total_sim_s`).
+    pub fleet_utilization: f64,
+    /// Tier names of the shared fleet, for reporting.
+    pub tier_names: Vec<String>,
+}
+
+/// N concurrent jobs over one shared fleet.
+pub struct Coordinator {
+    jobs: Vec<JobState>,
+    arbiter: FleetArbiter,
+    share: CacheShare,
+    /// The contended-share cache pool, parked here between rounds and
+    /// swapped into the running job's scheduler.
+    pooled: Option<FleetCaches>,
+    fleet_size: usize,
+    tier_names: Vec<String>,
+    total_sim_s: f64,
+    busy_device_s: f64,
+}
+
+impl Coordinator {
+    pub fn new(registry: JobRegistry, policy: ArbiterPolicy) -> Result<Self> {
+        let share = registry.share();
+        let mut trainers = Vec::with_capacity(registry.len());
+        for spec in registry.jobs() {
+            let mut trainer = Trainer::new(spec.cfg.clone())?;
+            trainer.set_namespace(spec.id);
+            trainers.push(trainer);
+        }
+        // fleet coherence beyond the registry's config checks: the jobs'
+        // datasets must agree on the train-client count, or "client 7" is
+        // a different device per job
+        let fleet_size = trainers[0].dataset().train.len();
+        for (t, spec) in trainers.iter().zip(registry.jobs()) {
+            let n = t.dataset().train.len();
+            if n != fleet_size {
+                return Err(Error::Config(format!(
+                    "job {:?} has {} train clients but the shared fleet has {} \
+                     (every job's dataset must cover the same device population)",
+                    spec.name, n, fleet_size
+                )));
+            }
+        }
+        let tier_names: Vec<String> = {
+            let fleet = trainers[0].scheduler().fleet();
+            (0..fleet.num_tiers()).map(|t| fleet.tier_name(t).to_string()).collect()
+        };
+        let arbiter = FleetArbiter::new(policy, fleet_size, registry.jobs());
+
+        let mut jobs: Vec<JobState> = registry
+            .into_jobs()
+            .into_iter()
+            .zip(trainers)
+            .map(|(spec, trainer)| JobState {
+                spec,
+                trainer,
+                rounds: Vec::new(),
+                evals: Vec::new(),
+                done: 0,
+                tier_busy_s: vec![0.0; tier_names.len()],
+            })
+            .collect();
+
+        // cache-budget sharing across the fleet's physical devices
+        let mut pooled = None;
+        match share {
+            CacheShare::Partitioned => {
+                // each caching job gets its weight share of the device
+                // budget; a lone caching job's share is exactly 1.0 and
+                // scale_budgets(1.0) is exact, preserving byte-identity
+                let total_w: f64 = jobs
+                    .iter()
+                    .filter(|j| j.trainer.versions().is_some())
+                    .map(|j| j.spec.weight)
+                    .sum();
+                for job in &mut jobs {
+                    if job.trainer.versions().is_some() {
+                        let frac = job.spec.weight / total_w;
+                        if let Some(caches) = job.trainer.scheduler_mut().caches_mut() {
+                            caches.scale_budgets(frac);
+                        }
+                    }
+                }
+            }
+            CacheShare::Contended => {
+                // one pooled cache per device, budgeted at the per-job
+                // maximum; the registry guaranteed one eviction policy
+                let mut budgets = vec![0u64; fleet_size];
+                let mut policy_stale = None;
+                for job in &mut jobs {
+                    if let Some(caches) = job.trainer.scheduler_mut().take_caches() {
+                        for (b, own) in budgets.iter_mut().zip(caches.budgets()) {
+                            *b = (*b).max(own);
+                        }
+                        policy_stale = Some((caches.policy(), caches.max_stale_rounds()));
+                    }
+                }
+                if let Some((evict, max_stale)) = policy_stale {
+                    pooled = Some(FleetCaches::new(evict, max_stale, budgets));
+                }
+            }
+        }
+
+        Ok(Coordinator {
+            jobs,
+            arbiter,
+            share,
+            pooled,
+            fleet_size,
+            tier_names,
+            total_sim_s: 0.0,
+            busy_device_s: 0.0,
+        })
+    }
+
+    pub fn num_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn arbiter(&self) -> &FleetArbiter {
+        &self.arbiter
+    }
+
+    /// Total simulated wall-time charged to the shared fleet so far.
+    pub fn total_sim_s(&self) -> f64 {
+        self.total_sim_s
+    }
+
+    fn any_active(&self) -> bool {
+        self.jobs.iter().any(|j| j.done < j.spec.cfg.rounds)
+    }
+
+    /// Run one arbiter tick: every granted job runs one round; the shared
+    /// clock advances by what the tick cost the fleet.
+    pub fn tick(&mut self) -> Result<()> {
+        let active: Vec<bool> = self.jobs.iter().map(|j| j.done < j.spec.cfg.rounds).collect();
+        let demands: Vec<usize> = self
+            .jobs
+            .iter()
+            .map(|j| j.trainer.round_engine().planned_cohort(j.spec.cfg.cohort))
+            .collect();
+        let granted = self.arbiter.tick(&demands, &active);
+        if granted.is_empty() {
+            return Err(Error::Config(format!(
+                "arbiter ({}) granted no job a cohort this tick — a job's \
+                 planned cohort exceeds the fleet of {} clients",
+                self.arbiter.policy(),
+                self.fleet_size
+            )));
+        }
+        // fair-share allows overlapping grants (each job's planner sees
+        // exactly its isolated-run exclusion set — the byte-identity path);
+        // priority/drr exclude clients earlier jobs claimed this tick
+        let exclusive = !matches!(self.arbiter.policy(), ArbiterPolicy::FairShare);
+        let mut claimed: Vec<usize> = Vec::new();
+        let mut close_max = 0.0f64;
+        let mut device_busy: BTreeMap<usize, f64> = BTreeMap::new();
+        for &ji in &granted {
+            let job = &mut self.jobs[ji];
+            // contended share: this job trains against the pooled caches
+            let swap = self.pooled.is_some() && job.trainer.versions().is_some();
+            if swap {
+                let pool = self.pooled.take().expect("pooled caches");
+                job.trainer.scheduler_mut().install_caches(pool);
+            }
+            let exclude: &[usize] = if exclusive { &claimed } else { &[] };
+            let res = job.trainer.run_round_with(exclude);
+            if swap {
+                self.pooled = job.trainer.scheduler_mut().take_caches();
+            }
+            let (rec, tick) = res?;
+            close_max = close_max.max(tick.close_s);
+            for &(client, at_s) in &tick.busy {
+                *device_busy.entry(client).or_insert(0.0) += at_s;
+                let tier = job.trainer.scheduler().fleet().profiles[client].tier;
+                job.tier_busy_s[tier] += at_s;
+            }
+            if exclusive {
+                claimed.extend_from_slice(&tick.cohort);
+            }
+            job.rounds.push(rec);
+            if job.trainer.should_eval(job.done) {
+                let eval = job.trainer.evaluate()?;
+                job.evals.push(eval);
+            }
+            job.done += 1;
+        }
+        let busiest = device_busy.values().fold(0.0f64, |a, &b| a.max(b));
+        self.busy_device_s += device_busy.values().sum::<f64>();
+        self.total_sim_s += close_max.max(busiest) + ROUND_OVERHEAD_S;
+        Ok(())
+    }
+
+    /// Tick until every job has run its configured rounds, then assemble
+    /// per-job reports (via the same [`Trainer::finish_report`] tail the
+    /// single-tenant run loop uses) and the fleet rollup.
+    pub fn run(&mut self) -> Result<MultiReport> {
+        while self.any_active() {
+            self.tick()?;
+        }
+        let mut reports = Vec::with_capacity(self.jobs.len());
+        let mut usage = Vec::with_capacity(self.jobs.len());
+        for job in &mut self.jobs {
+            let rounds = std::mem::take(&mut job.rounds);
+            let evals = std::mem::take(&mut job.evals);
+            let report = job.trainer.finish_report(rounds, evals)?;
+            usage.push(JobUsage {
+                id: job.spec.id,
+                name: job.spec.name.clone(),
+                rounds: report.rounds.len(),
+                tier_busy_s: job.tier_busy_s.clone(),
+                down_bytes: report.total_down_bytes,
+                up_bytes: report.total_up_bytes,
+                cache_hits: report
+                    .rounds
+                    .iter()
+                    .map(|r| r.tier_cache_hits.iter().sum::<u64>())
+                    .sum(),
+                cache_lookups: report
+                    .rounds
+                    .iter()
+                    .map(|r| r.tier_cache_lookups.iter().sum::<u64>())
+                    .sum(),
+            });
+            reports.push(report);
+        }
+        let denom = self.fleet_size as f64 * self.total_sim_s;
+        Ok(MultiReport {
+            reports,
+            usage,
+            ticks: self.arbiter.ticks(),
+            grants: self.arbiter.grants().to_vec(),
+            total_sim_s: self.total_sim_s,
+            fleet_utilization: if denom > 0.0 {
+                (self.busy_device_s / denom).min(1.0)
+            } else {
+                0.0
+            },
+            tier_names: self.tier_names.clone(),
+        })
+    }
+}
+
+/// The `share` mode this coordinator was built with.
+impl Coordinator {
+    pub fn share(&self) -> CacheShare {
+        self.share
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, TrainConfig};
+    use crate::data::bow::BowConfig;
+
+    fn job_cfg(vocab: usize, rounds: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::logreg_default(vocab, 16);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(24, 4, 8));
+        cfg.rounds = rounds;
+        cfg.cohort = 5;
+        cfg.eval.every = 0;
+        cfg.eval.max_examples = 128;
+        cfg
+    }
+
+    #[test]
+    fn two_jobs_tick_to_completion() {
+        let jobs = vec![
+            JobSpec::new(1, "a", job_cfg(128, 3)),
+            JobSpec::new(2, "b", job_cfg(256, 2)),
+        ];
+        let reg = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap();
+        let mut coord = Coordinator::new(reg, ArbiterPolicy::FairShare).unwrap();
+        let report = coord.run().unwrap();
+        assert_eq!(report.reports.len(), 2);
+        assert_eq!(report.reports[0].rounds.len(), 3);
+        assert_eq!(report.reports[1].rounds.len(), 2);
+        // fair-share: both jobs run while both are active, then job a alone
+        assert_eq!(report.ticks, 3);
+        assert_eq!(report.grants, vec![3, 2]);
+        assert!(report.total_sim_s > 0.0);
+        assert!(report.fleet_utilization > 0.0 && report.fleet_utilization <= 1.0);
+        // the shared clock beats running the jobs back to back
+        let sequential: f64 = report.reports.iter().map(|r| r.total_sim_s).sum();
+        assert!(report.total_sim_s < sequential);
+    }
+
+    #[test]
+    fn priority_jobs_claim_disjoint_cohorts() {
+        let jobs = vec![
+            JobSpec::new(1, "lo", job_cfg(128, 2)).with_priority(1),
+            JobSpec::new(2, "hi", job_cfg(128, 2)).with_priority(9),
+        ];
+        let reg = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap();
+        let mut coord = Coordinator::new(reg, ArbiterPolicy::Priority).unwrap();
+        coord.tick().unwrap();
+        let lo = &coord.jobs[0].rounds[0];
+        let hi = &coord.jobs[1].rounds[0];
+        // both ran (5 + 5 <= 24 fits), with full cohorts
+        assert_eq!(lo.completed + lo.dropped, 5);
+        assert_eq!(hi.completed + hi.dropped, 5);
+    }
+
+    #[test]
+    fn oversized_job_stalls_with_a_clear_error() {
+        let mut cfg = job_cfg(128, 1);
+        cfg.cohort = 25; // > 24 train clients
+        // config validation itself may allow it; the arbiter must not spin
+        let jobs = vec![JobSpec::new(1, "big", cfg)];
+        if let Ok(reg) = JobRegistry::new(jobs, CacheShare::Partitioned) {
+            match Coordinator::new(reg, ArbiterPolicy::DeficitRoundRobin) {
+                Ok(mut coord) => {
+                    let err = coord.tick().unwrap_err();
+                    assert!(err.to_string().contains("granted no job"), "{err}");
+                }
+                Err(_) => {} // rejected even earlier — also fine
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Job registry: the validated, data-driven description of N concurrent
+//! training jobs sharing one device fleet.
+//!
+//! A [`JobSpec`] is one tenant: its own [`TrainConfig`] (model/arch, key
+//! policies, aggregation mode, privacy mode, selection policy, rounds and
+//! eval cadence) plus the two scheduling knobs the
+//! [`FleetArbiter`](crate::tenancy::FleetArbiter) reads — `priority` and
+//! `weight`. [`JobRegistry::new`] applies every per-job rule of
+//! [`TrainConfig::validate`] and then the cross-job coherence rules: the
+//! jobs must describe the *same physical fleet* (equal seed, fleet kind,
+//! and memory-cap parameterization — the device profiles are generated
+//! deterministically from those), ids and names must be unique (the id is
+//! the tenancy namespace prefixing CDN piece addresses, version clocks,
+//! and client-cache entries), and a contended cache share needs one
+//! agreed-upon eviction policy for the pooled per-device caches.
+
+use crate::cache::CacheShare;
+use crate::config::TrainConfig;
+use crate::error::{Error, Result};
+
+/// One tenant job. The `id` doubles as the tenancy namespace — keep it
+/// unique; namespace 0 hashes identically to a single-tenant run, so the
+/// byte-identity tests pin the lone job's id to 0.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: u32,
+    pub name: String,
+    pub cfg: TrainConfig,
+    /// Deficit-round-robin credit rate, and the job's share of a
+    /// partitioned cache budget. Must be finite and positive.
+    pub weight: f64,
+    /// `priority` arbiter rank — higher claims clients first; ties break
+    /// toward the lower job index.
+    pub priority: u32,
+}
+
+impl JobSpec {
+    pub fn new(id: u32, name: impl Into<String>, cfg: TrainConfig) -> Self {
+        JobSpec {
+            id,
+            name: name.into(),
+            cfg,
+            weight: 1.0,
+            priority: 0,
+        }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u32) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// A validated set of jobs plus the fleet-wide cache-share mode.
+#[derive(Clone, Debug)]
+pub struct JobRegistry {
+    jobs: Vec<JobSpec>,
+    share: CacheShare,
+}
+
+impl JobRegistry {
+    pub fn new(jobs: Vec<JobSpec>, share: CacheShare) -> Result<Self> {
+        if jobs.is_empty() {
+            return Err(Error::Config("job registry needs at least one job".into()));
+        }
+        for job in &jobs {
+            if job.name.is_empty() {
+                return Err(Error::Config(format!("job {} has an empty name", job.id)));
+            }
+            if !(job.weight.is_finite() && job.weight > 0.0) {
+                return Err(Error::Config(format!(
+                    "job {:?}: weight must be finite and positive, got {}",
+                    job.name, job.weight
+                )));
+            }
+            job.cfg.validate().map_err(|e| {
+                Error::Config(format!("job {:?}: invalid config: {e}", job.name))
+            })?;
+        }
+        for (i, a) in jobs.iter().enumerate() {
+            for b in jobs.iter().skip(i + 1) {
+                if a.id == b.id {
+                    return Err(Error::Config(format!(
+                        "jobs {:?} and {:?} share id {} (the id is the tenancy \
+                         namespace; it must be unique)",
+                        a.name, b.name, a.id
+                    )));
+                }
+                if a.name == b.name {
+                    return Err(Error::Config(format!("duplicate job name {:?}", a.name)));
+                }
+            }
+        }
+        // fleet coherence: device profiles are generated deterministically
+        // from (kind, seed, mem_cap_frac) — every job must see the same
+        // physical devices or "client 7" means different hardware per job
+        let first = &jobs[0];
+        for job in &jobs[1..] {
+            if job.cfg.seed != first.cfg.seed {
+                return Err(Error::Config(format!(
+                    "jobs {:?} and {:?} disagree on the run seed ({} vs {}); \
+                     the shared fleet is generated from it",
+                    first.name, job.name, first.cfg.seed, job.cfg.seed
+                )));
+            }
+            if job.cfg.fleet != first.cfg.fleet {
+                return Err(Error::Config(format!(
+                    "jobs {:?} and {:?} disagree on the fleet kind ({} vs {})",
+                    first.name, job.name, first.cfg.fleet, job.cfg.fleet
+                )));
+            }
+            if job.cfg.mem_cap_frac != first.cfg.mem_cap_frac {
+                return Err(Error::Config(format!(
+                    "jobs {:?} and {:?} disagree on mem_cap_frac ({} vs {}); \
+                     it parameterizes the shared device profiles",
+                    first.name, job.name, first.cfg.mem_cap_frac, job.cfg.mem_cap_frac
+                )));
+            }
+        }
+        if share == CacheShare::Contended {
+            // one pooled cache per device: a single eviction policy and
+            // staleness bound must govern it
+            let cache_jobs: Vec<&JobSpec> = jobs.iter().filter(|j| j.cfg.cache).collect();
+            if let Some(first) = cache_jobs.first() {
+                for job in &cache_jobs[1..] {
+                    if job.cfg.cache_evict != first.cfg.cache_evict {
+                        return Err(Error::Config(format!(
+                            "contended cache share: jobs {:?} and {:?} disagree on \
+                             the eviction policy ({} vs {})",
+                            first.name, job.name, first.cfg.cache_evict, job.cfg.cache_evict
+                        )));
+                    }
+                    if job.cfg.max_stale_rounds != first.cfg.max_stale_rounds {
+                        return Err(Error::Config(format!(
+                            "contended cache share: jobs {:?} and {:?} disagree on \
+                             max_stale_rounds ({} vs {})",
+                            first.name, job.name, first.cfg.max_stale_rounds,
+                            job.cfg.max_stale_rounds
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(JobRegistry { jobs, share })
+    }
+
+    pub fn jobs(&self) -> &[JobSpec] {
+        &self.jobs
+    }
+
+    pub fn share(&self) -> CacheShare {
+        self.share
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn into_jobs(self) -> Vec<JobSpec> {
+        self.jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetConfig;
+    use crate::data::bow::BowConfig;
+
+    fn cfg(vocab: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::logreg_default(vocab, 16);
+        cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(24, 4, 8));
+        cfg.rounds = 2;
+        cfg.cohort = 4;
+        cfg
+    }
+
+    #[test]
+    fn heterogeneous_jobs_with_one_fleet_validate() {
+        let jobs = vec![
+            JobSpec::new(1, "a", cfg(128)),
+            JobSpec::new(2, "b", cfg(256)).with_weight(2.0).with_priority(3),
+        ];
+        let reg = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.jobs()[1].priority, 3);
+    }
+
+    #[test]
+    fn duplicate_ids_and_names_are_rejected() {
+        let dup_id = vec![JobSpec::new(1, "a", cfg(128)), JobSpec::new(1, "b", cfg(128))];
+        assert!(JobRegistry::new(dup_id, CacheShare::Partitioned).is_err());
+        let dup_name = vec![JobSpec::new(1, "a", cfg(128)), JobSpec::new(2, "a", cfg(128))];
+        assert!(JobRegistry::new(dup_name, CacheShare::Partitioned).is_err());
+    }
+
+    #[test]
+    fn fleet_incoherence_is_rejected() {
+        let mut other = cfg(128);
+        other.seed = 99;
+        let jobs = vec![JobSpec::new(1, "a", cfg(128)), JobSpec::new(2, "b", other)];
+        let err = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+
+        let mut other = cfg(128);
+        other.fleet = crate::scheduler::FleetKind::Tiered3;
+        let jobs = vec![JobSpec::new(1, "a", cfg(128)), JobSpec::new(2, "b", other)];
+        assert!(JobRegistry::new(jobs, CacheShare::Partitioned).is_err());
+    }
+
+    #[test]
+    fn contended_share_requires_one_eviction_policy() {
+        let mut a = cfg(128);
+        a.cache = true;
+        let mut b = cfg(256);
+        b.cache = true;
+        b.cache_evict = crate::cache::EvictPolicy::Lfu;
+        let jobs = vec![JobSpec::new(1, "a", a.clone()), JobSpec::new(2, "b", b.clone())];
+        assert!(JobRegistry::new(jobs.clone(), CacheShare::Contended).is_err());
+        // partitioned shares are isolated — disagreement is fine there
+        assert!(JobRegistry::new(jobs, CacheShare::Partitioned).is_ok());
+    }
+
+    #[test]
+    fn per_job_config_validation_applies() {
+        let mut bad = cfg(128);
+        bad.cohort = 0;
+        let jobs = vec![JobSpec::new(1, "a", bad)];
+        let err = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap_err();
+        assert!(err.to_string().contains("job \"a\""), "{err}");
+    }
+
+    #[test]
+    fn nonpositive_weights_are_rejected() {
+        let jobs = vec![JobSpec::new(1, "a", cfg(128)).with_weight(0.0)];
+        assert!(JobRegistry::new(jobs, CacheShare::Partitioned).is_err());
+    }
+}

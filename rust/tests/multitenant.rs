@@ -1,0 +1,291 @@
+//! Multi-tenant coordinator contracts:
+//!
+//! 1. a **single-job coordinator is byte-identical to the plain trainer**
+//!    — model trajectory (final eval bits) and every `RoundRecord` ledger
+//!    field, at fetch thread counts {1, 4}, with caching, a tiered fleet
+//!    and dropout on (the job's id is pinned to 0: namespace 0 hashes
+//!    identically to an untagged run);
+//! 2. **cross-job isolation**: under the fair-share arbiter with
+//!    partitioned cache budgets, every job's trajectory matches its
+//!    isolated run bit for bit, with any mix of slice implementations;
+//! 3. the **contended** cache share never changes a trajectory either
+//!    (fresh cache entries are exact copies wherever the bytes live);
+//! 4. coordinator runs are **deterministic**: same registry, same grants,
+//!    same clocks, bit for bit.
+
+use fedselect::cache::CacheShare;
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{RoundRecord, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::fedselect::SliceImpl;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+use fedselect::tenancy::{ArbiterPolicy, Coordinator, JobRegistry, JobSpec};
+
+fn base_cfg(vocab: usize, m: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(vocab, m);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(vocab, 50).with_clients(24, 4, 8));
+    cfg.rounds = 5;
+    cfg.cohort = 6;
+    cfg.eval.every = 2;
+    cfg.eval.max_examples = 256;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::StalenessFair;
+    cfg.dropout_rate = 0.3;
+    cfg.seed = 77;
+    cfg
+}
+
+/// Every ledger field of two RoundRecords, compared exactly (floats by
+/// bits — the contract is byte-identity, not approximation).
+fn assert_rounds_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
+    assert_eq!(a.round, b.round, "{label}: round");
+    assert_eq!(a.completed, b.completed, "{label}: completed");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.mode.name(), b.mode.name(), "{label}: mode");
+    assert_eq!(a.discarded_clients, b.discarded_clients, "{label}: discarded");
+    assert_eq!(
+        a.mean_staleness.to_bits(),
+        b.mean_staleness.to_bits(),
+        "{label}: staleness"
+    );
+    assert_eq!(a.committees, b.committees, "{label}: committees");
+    assert_eq!(
+        a.mean_committee_size.to_bits(),
+        b.mean_committee_size.to_bits(),
+        "{label}: committee size"
+    );
+    assert_eq!(a.min_committee_size, b.min_committee_size, "{label}: floor");
+    assert_eq!(a.comm.down_bytes, b.comm.down_bytes, "{label}: down");
+    assert_eq!(a.comm.up_key_bytes, b.comm.up_key_bytes, "{label}: key bytes");
+    assert_eq!(a.comm.psi_evals, b.comm.psi_evals, "{label}: psi");
+    assert_eq!(a.comm.memo_hits, b.comm.memo_hits, "{label}: memo hits");
+    assert_eq!(a.comm.pregen_slices, b.comm.pregen_slices, "{label}: pregen");
+    assert_eq!(a.comm.cdn_queries, b.comm.cdn_queries, "{label}: cdn queries");
+    assert_eq!(a.comm.service_us, b.comm.service_us, "{label}: service time");
+    assert_eq!(
+        a.comm.client_cache_hits, b.comm.client_cache_hits,
+        "{label}: cache hits"
+    );
+    assert_eq!(a.up_bytes, b.up_bytes, "{label}: up");
+    assert_eq!(a.max_client_mem, b.max_client_mem, "{label}: mem");
+    assert_eq!(
+        a.sim_round_s.to_bits(),
+        b.sim_round_s.to_bits(),
+        "{label}: sim_round_s"
+    );
+    assert_eq!(a.tier_completed, b.tier_completed, "{label}: tier completed");
+    assert_eq!(a.tier_dropped, b.tier_dropped, "{label}: tier dropped");
+    assert_eq!(a.tier_discarded, b.tier_discarded, "{label}: tier discarded");
+    assert_eq!(a.tier_down_bytes, b.tier_down_bytes, "{label}: tier down");
+    assert_eq!(a.tier_cache_hits, b.tier_cache_hits, "{label}: tier hits");
+    assert_eq!(
+        a.tier_cache_lookups, b.tier_cache_lookups,
+        "{label}: tier lookups"
+    );
+    assert_eq!(a.cache_evictions, b.cache_evictions, "{label}: evictions");
+    assert_eq!(
+        a.cache_stale_refreshes, b.cache_stale_refreshes,
+        "{label}: stale refreshes"
+    );
+    assert_eq!(a.deferrals, b.deferrals, "{label}: deferrals");
+}
+
+#[test]
+fn single_job_coordinator_is_byte_identical_to_the_trainer() {
+    for threads in [1usize, 4] {
+        for share in [CacheShare::Partitioned, CacheShare::Contended] {
+            let mut cfg = base_cfg(512, 64);
+            cfg.cache = true;
+            cfg.slice_impl = SliceImpl::PregenCdn;
+            cfg.fetch_threads = threads;
+
+            let legacy = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+
+            // id 0 => tenancy namespace 0, byte-identical addressing
+            let reg =
+                JobRegistry::new(vec![JobSpec::new(0, "solo", cfg)], share).unwrap();
+            let multi = Coordinator::new(reg, ArbiterPolicy::FairShare)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(multi.reports.len(), 1);
+            let solo = &multi.reports[0];
+
+            let label = format!("threads={threads} share={share:?}");
+            assert_eq!(legacy.rounds.len(), solo.rounds.len(), "{label}");
+            for (a, b) in legacy.rounds.iter().zip(&solo.rounds) {
+                assert_rounds_identical(a, b, &label);
+            }
+            assert_eq!(
+                legacy.final_eval.loss.to_bits(),
+                solo.final_eval.loss.to_bits(),
+                "{label}: final loss"
+            );
+            assert_eq!(
+                legacy.final_eval.metric.to_bits(),
+                solo.final_eval.metric.to_bits(),
+                "{label}: final metric"
+            );
+            assert_eq!(legacy.evals.len(), solo.evals.len(), "{label}: eval cadence");
+            for (a, b) in legacy.evals.iter().zip(&solo.evals) {
+                assert_eq!(a.round, b.round, "{label}: eval round");
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label}: eval loss");
+            }
+            assert_eq!(legacy.total_down_bytes, solo.total_down_bytes, "{label}");
+            assert_eq!(legacy.total_up_bytes, solo.total_up_bytes, "{label}");
+            assert_eq!(
+                legacy.total_sim_s.to_bits(),
+                solo.total_sim_s.to_bits(),
+                "{label}: total sim"
+            );
+            assert_eq!(legacy.total_discarded, solo.total_discarded, "{label}");
+        }
+    }
+}
+
+#[test]
+fn fair_share_jobs_match_their_isolated_runs_bit_for_bit() {
+    // heterogeneous slice impls; job 2 caches — cross-job isolation means
+    // every trajectory is exactly what the job alone would have produced
+    let mut a = base_cfg(128, 32);
+    a.slice_impl = SliceImpl::OnDemand;
+    let mut b = base_cfg(512, 64);
+    b.slice_impl = SliceImpl::PregenCdn;
+    b.cache = true;
+    b.rounds = 4;
+    let mut c = base_cfg(256, 32);
+    c.slice_impl = SliceImpl::Broadcast;
+    c.cohort = 4;
+
+    let isolated: Vec<_> = [a.clone(), b.clone(), c.clone()]
+        .into_iter()
+        .map(|cfg| Trainer::new(cfg).unwrap().run().unwrap())
+        .collect();
+
+    let reg = JobRegistry::new(
+        vec![
+            JobSpec::new(1, "on-demand", a),
+            JobSpec::new(2, "cdn-cached", b),
+            JobSpec::new(3, "broadcast", c),
+        ],
+        CacheShare::Partitioned,
+    )
+    .unwrap();
+    let multi = Coordinator::new(reg, ArbiterPolicy::FairShare)
+        .unwrap()
+        .run()
+        .unwrap();
+
+    for (iso, shared) in isolated.iter().zip(&multi.reports) {
+        assert_eq!(iso.rounds.len(), shared.rounds.len());
+        assert_eq!(
+            iso.final_eval.loss.to_bits(),
+            shared.final_eval.loss.to_bits(),
+            "trajectory diverged under multi-tenancy"
+        );
+        assert_eq!(iso.total_up_bytes, shared.total_up_bytes);
+        for (ra, rb) in iso.rounds.iter().zip(&shared.rounds) {
+            assert_eq!(ra.completed, rb.completed);
+            assert_eq!(ra.dropped, rb.dropped);
+        }
+    }
+    // the shared clock strictly beats queueing the three jobs
+    let sequential: f64 = isolated.iter().map(|r| r.total_sim_s).sum();
+    assert!(
+        multi.total_sim_s < sequential,
+        "shared {} !< sequential {}",
+        multi.total_sim_s,
+        sequential
+    );
+    // fair-share granted every active tick: 5, 4, 5 rounds over 5 ticks
+    assert_eq!(multi.ticks, 5);
+    assert_eq!(multi.grants, vec![5, 4, 5]);
+}
+
+#[test]
+fn contended_cache_share_never_changes_trajectories() {
+    let mut a = base_cfg(512, 64);
+    a.slice_impl = SliceImpl::PregenCdn;
+    a.cache = true;
+    let mut b = base_cfg(512, 48);
+    b.slice_impl = SliceImpl::OnDemand;
+    b.cache = true;
+    b.rounds = 4;
+
+    let isolated: Vec<_> = [a.clone(), b.clone()]
+        .into_iter()
+        .map(|cfg| Trainer::new(cfg).unwrap().run().unwrap())
+        .collect();
+
+    let reg = JobRegistry::new(
+        vec![JobSpec::new(1, "cdn", a), JobSpec::new(2, "od", b)],
+        CacheShare::Contended,
+    )
+    .unwrap();
+    let multi = Coordinator::new(reg, ArbiterPolicy::FairShare)
+        .unwrap()
+        .run()
+        .unwrap();
+
+    for (iso, shared) in isolated.iter().zip(&multi.reports) {
+        // contention can change which bytes are cache-served (wire ledger),
+        // never what the model computes
+        assert_eq!(
+            iso.final_eval.loss.to_bits(),
+            shared.final_eval.loss.to_bits()
+        );
+        assert_eq!(iso.total_up_bytes, shared.total_up_bytes);
+    }
+}
+
+#[test]
+fn coordinator_runs_are_deterministic() {
+    let build = || {
+        let mut a = base_cfg(128, 32);
+        a.slice_impl = SliceImpl::OnDemand;
+        let b = base_cfg(256, 48);
+        let reg = JobRegistry::new(
+            vec![
+                JobSpec::new(1, "a", a).with_weight(2.0),
+                JobSpec::new(2, "b", b).with_priority(5),
+            ],
+            CacheShare::Partitioned,
+        )
+        .unwrap();
+        Coordinator::new(reg, ArbiterPolicy::DeficitRoundRobin).unwrap()
+    };
+    let r1 = build().run().unwrap();
+    let r2 = build().run().unwrap();
+    assert_eq!(r1.ticks, r2.ticks);
+    assert_eq!(r1.grants, r2.grants);
+    assert_eq!(r1.total_sim_s.to_bits(), r2.total_sim_s.to_bits());
+    for (a, b) in r1.reports.iter().zip(&r2.reports) {
+        assert_eq!(a.final_eval.loss.to_bits(), b.final_eval.loss.to_bits());
+        assert_eq!(a.total_down_bytes, b.total_down_bytes);
+    }
+}
+
+#[test]
+fn priority_arbiter_grants_disjoint_cohorts_per_tick() {
+    let lo = base_cfg(128, 32);
+    let hi = base_cfg(256, 32);
+    let reg = JobRegistry::new(
+        vec![
+            JobSpec::new(1, "lo", lo).with_priority(0),
+            JobSpec::new(2, "hi", hi).with_priority(9),
+        ],
+        CacheShare::Partitioned,
+    )
+    .unwrap();
+    let mut coord = Coordinator::new(reg, ArbiterPolicy::Priority).unwrap();
+    let multi = coord.run().unwrap();
+    // both 5-round jobs fit the 24-client fleet each tick (6 + 6 <= 24)
+    assert_eq!(multi.grants, vec![5, 5]);
+    for rep in &multi.reports {
+        assert_eq!(rep.rounds.len(), 5);
+        for r in &rep.rounds {
+            // full cohorts despite the exclusion — leftovers sufficed
+            assert_eq!(r.completed + r.dropped + r.discarded_clients, 6);
+        }
+    }
+}

@@ -260,7 +260,7 @@ fn prop_aggregate_star_with_all_keys_is_dense_mean() {
             }
             agg.add_client(&spec, &[all.clone()], &[u0, u1]).unwrap();
         }
-        let u = agg.finalize(AggMode::CohortMean);
+        let (u, _) = agg.finalize(AggMode::CohortMean);
         for (got, want) in u.segments[0].data.iter().zip(expect0.iter()) {
             assert!((got - want).abs() < 1e-4, "case {case}");
         }

@@ -158,7 +158,7 @@ fn legacy_trajectory(cfg: &TrainConfig, threads: usize) -> (ParamStore, Vec<Lega
             });
         }
         if completed > 0 {
-            let update = Box::new(agg).finalize(AggMode::CohortMean);
+            let (update, _) = Box::new(agg).finalize(AggMode::CohortMean);
             optimizer.step(&mut store, &update);
         }
         let sim = scheduler.complete_round(&plan, &stats);

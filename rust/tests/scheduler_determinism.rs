@@ -178,7 +178,7 @@ fn legacy_trajectory(cfg: &TrainConfig) -> ParamStore {
             completed += 1;
         }
         if completed > 0 {
-            let update = Box::new(agg).finalize(cfg.agg);
+            let (update, _) = Box::new(agg).finalize(cfg.agg);
             optimizer.step(&mut store, &update);
         }
     }
