@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Seed (or refresh) the committed perf-trajectory baselines from a real
+# bench run on a quiet machine. Run from rust/:
+#
+#   ./bench_baselines/seed.sh
+#
+# Keep BENCH_QUICK consistent with CI (which exports BENCH_QUICK=1) —
+# quick-mode and full-mode numbers are not comparable.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export BENCH_QUICK="${BENCH_QUICK:-1}"
+for b in bench_scheduler bench_round_engine bench_slice_cache bench_multitenant bench_obs; do
+    cargo bench --bench "$b"
+done
+cp BENCH_*.json bench_baselines/
+echo "seeded: $(ls bench_baselines/BENCH_*.json | tr '\n' ' ')"
+echo "review the numbers, then commit bench_baselines/"

@@ -1,0 +1,164 @@
+//! Observability overhead bench: events/s through the recorder sinks and
+//! ops/s through the metrics registry. Emits `BENCH_obs.json` (schema
+//! `fedselect-bench-v1`). `null_events_per_s` is the unconditional-dispatch
+//! worst case of the always-on path — real call sites gate on
+//! `Recorder::enabled()` and skip event construction entirely — and
+//! `jsonl_events_per_s` is the cost of tracing to disk; both are gated by
+//! `perf_diff` as the observability perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::obs::trace::JsonlRecorder;
+use fedselect::obs::{ClientStage, MetricsRegistry, NullRecorder, Phase, Recorder, TraceEvent};
+
+/// Emit a representative round's event mix: 1 round_start, 4 spans, 4
+/// client lifecycle events, 1 round_close — 10 events per call.
+fn pump_round(rec: &dyn Recorder, round: usize) {
+    rec.record(&TraceEvent::RoundStart {
+        ns: 0,
+        round,
+        sim_start_s: round as f64,
+    });
+    for (i, phase) in [Phase::Plan, Phase::Fetch, Phase::Compute, Phase::Close]
+        .into_iter()
+        .enumerate()
+    {
+        rec.record(&TraceEvent::Span {
+            ns: 0,
+            round,
+            phase,
+            wall_ms: i as f64,
+            sim_s: i as f64 * 0.5,
+        });
+    }
+    let client = round % 64;
+    rec.record(&TraceEvent::Client {
+        ns: 0,
+        round,
+        client,
+        tier: Some(client % 3),
+        stage: ClientStage::Selected,
+    });
+    rec.record(&TraceEvent::Client {
+        ns: 0,
+        round,
+        client,
+        tier: Some(client % 3),
+        stage: ClientStage::Fetched {
+            down_bytes: 4096,
+            cache_hit_pieces: 3,
+        },
+    });
+    rec.record(&TraceEvent::Client {
+        ns: 0,
+        round,
+        client,
+        tier: Some(client % 3),
+        stage: ClientStage::Computed { up_bytes: 2048 },
+    });
+    rec.record(&TraceEvent::Client {
+        ns: 0,
+        round,
+        client,
+        tier: Some(client % 3),
+        stage: ClientStage::Merged {
+            staleness: 0,
+            weight: 1.0,
+        },
+    });
+    rec.record(&TraceEvent::RoundClose {
+        ns: 0,
+        round,
+        completed: 1,
+        dropped: 0,
+        discarded: 0,
+        deferred: 0,
+        committees: 0,
+        close_s: 1.0,
+        sim_round_s: 1.5,
+        sim_total_s: round as f64 * 1.5,
+        down_bytes: 4096,
+        up_bytes: 2048,
+    });
+}
+
+const EVENTS_PER_ROUND: usize = 10;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let rounds = if b.quick { 2_000 } else { 20_000 };
+    let events = rounds * EVENTS_PER_ROUND;
+
+    let null = NullRecorder;
+    b.run("obs/null_sink", 10, || {
+        for r in 0..rounds {
+            pump_round(&null, r);
+        }
+    });
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        pump_round(&null, r);
+    }
+    b.metric(
+        "obs",
+        "null_events_per_s",
+        events as f64 / t0.elapsed().as_secs_f64(),
+    );
+
+    let path = std::env::temp_dir().join("fedselect_bench_obs.jsonl");
+    let path = path.to_string_lossy().to_string();
+    b.run("obs/jsonl_sink", 10, || {
+        let jsonl = JsonlRecorder::create(&path).unwrap();
+        for r in 0..rounds {
+            pump_round(&jsonl, r);
+        }
+        jsonl.flush();
+    });
+    let jsonl = JsonlRecorder::create(&path).unwrap();
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        pump_round(&jsonl, r);
+    }
+    jsonl.flush();
+    b.metric(
+        "obs",
+        "jsonl_events_per_s",
+        events as f64 / t0.elapsed().as_secs_f64(),
+    );
+    let _ = std::fs::remove_file(&path);
+
+    // registry hot path: one counter, one counter-vec slot, one histogram
+    // observation per op — the shape of the trainer's per-event updates
+    let ops = if b.quick { 50_000 } else { 500_000 };
+    let mut reg = MetricsRegistry::new();
+    b.run("obs/registry", 10, || {
+        for i in 0..ops {
+            reg.counter_add("clients.completed", 1);
+            reg.counter_vec_add("tier.completed", i % 3, 1);
+            reg.observe("fetch_latency_s.t0", (i % 100) as f64 * 0.01);
+        }
+    });
+    let mut reg = MetricsRegistry::new();
+    let t0 = Instant::now();
+    for i in 0..ops {
+        reg.counter_add("clients.completed", 1);
+        reg.counter_vec_add("tier.completed", i % 3, 1);
+        reg.observe("fetch_latency_s.t0", (i % 100) as f64 * 0.01);
+    }
+    b.metric(
+        "obs",
+        "registry_ops_per_s",
+        (3 * ops) as f64 / t0.elapsed().as_secs_f64(),
+    );
+    // snapshot the registry into the bench JSON via the harness helper
+    // (informational: dotted names sit outside the gated metric families)
+    b.record_registry("obs/registry_snapshot", &reg);
+
+    b.note(&format!(
+        "{rounds} rounds x {EVENTS_PER_ROUND} events; registry ops x{ops}"
+    ));
+    b.write_json("BENCH_obs.json");
+}

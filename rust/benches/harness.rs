@@ -86,6 +86,24 @@ impl Bench {
         }
     }
 
+    /// Fold a [`fedselect::obs::MetricsRegistry`] snapshot into one
+    /// measurement's derived metrics: counters and gauges under their
+    /// registry names, histograms as `<name>_mean`. Registry names use
+    /// dots (`comm.down_bytes`), so they never collide with the
+    /// `*_per_s` / `sim_*` families the perf gate thresholds — they ride
+    /// along as informational trajectory.
+    pub fn record_registry(&mut self, name: &str, reg: &fedselect::obs::MetricsRegistry) {
+        let entries: Vec<(String, f64)> = reg
+            .counters()
+            .map(|(k, v)| (k.to_string(), v as f64))
+            .chain(reg.gauges().map(|(k, v)| (k.to_string(), v)))
+            .chain(reg.hists().map(|(k, h)| (format!("{k}_mean"), h.mean())))
+            .collect();
+        for (k, v) in entries {
+            self.metric(name, &k, v);
+        }
+    }
+
     /// Report a derived ratio between two recorded benches.
     pub fn ratio(&self, num: &str, den: &str) -> Option<f64> {
         let find = |n: &str| {

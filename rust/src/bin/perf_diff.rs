@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use fedselect::util::json::Json;
+use fedselect::{obs_error, obs_info};
 
 const DEFAULT_THRESHOLD: f64 = 0.15;
 
@@ -111,7 +112,7 @@ fn run() -> Result<bool, String> {
 
     let baselines = bench_files(baseline_dir);
     if baselines.is_empty() {
-        println!(
+        obs_info!(
             "perf_diff: no BENCH_*.json baselines in {} — nothing to compare \
              (copy the current run there to seed the trajectory)",
             baseline_dir.display()
@@ -125,7 +126,7 @@ fn run() -> Result<bool, String> {
         let file = base_path.file_name().expect("bench file name");
         let cur_path = current_dir.join(file);
         if !cur_path.exists() {
-            println!(
+            obs_info!(
                 "perf_diff: {} missing from {} — skipped",
                 file.to_string_lossy(),
                 current_dir.display()
@@ -136,7 +137,7 @@ fn run() -> Result<bool, String> {
         let cur = load_metrics(&cur_path)?;
         for (name, metrics) in &base {
             let Some((_, cur_metrics)) = cur.iter().find(|(n, _)| n == name) else {
-                println!("perf_diff: {name} absent from current run — skipped");
+                obs_info!("perf_diff: {name} absent from current run — skipped");
                 continue;
             };
             for (key, base_val) in metrics {
@@ -155,18 +156,18 @@ fn run() -> Result<bool, String> {
                 compared += 1;
                 if bad {
                     regressed = true;
-                    println!(
+                    obs_info!(
                         "REGRESSION {name} {key}: {arrow} {base_val:.2} -> {cur_val:.2} \
                          (>{:.0}%)",
                         threshold * 100.0
                     );
                 } else if higher_is_better(key) || lower_is_better(key) {
-                    println!("ok {name} {key}: {base_val:.2} -> {cur_val:.2}");
+                    obs_info!("ok {name} {key}: {base_val:.2} -> {cur_val:.2}");
                 }
             }
         }
     }
-    println!(
+    obs_info!(
         "perf_diff: {compared} metric comparisons, threshold {:.0}%{}",
         threshold * 100.0,
         if regressed { " — REGRESSED" } else { "" }
@@ -179,7 +180,7 @@ fn main() -> ExitCode {
         Ok(false) => ExitCode::SUCCESS,
         Ok(true) => ExitCode::from(1),
         Err(e) => {
-            eprintln!("perf_diff: {e}");
+            obs_error!("perf_diff: {e}");
             ExitCode::from(2)
         }
     }

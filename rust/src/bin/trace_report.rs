@@ -1,0 +1,181 @@
+//! `trace_report` — offline analysis of `fedselect-trace-v1` JSONL traces.
+//!
+//! ```text
+//! trace_report <trace.jsonl>            validate + per-phase/per-tier report
+//! trace_report --diff <a.jsonl> <b.jsonl>   compare sim-time content
+//! ```
+//!
+//! Report mode validates every line against the versioned schema and
+//! renders three tables: run shape (rounds, namespaces, event counts),
+//! the per-phase profile (span counts, host wall time, simulated time),
+//! and the per-tier client lifecycle rollup (selected → fetched →
+//! computed → merged/dropped/discarded/deferred, with wire bytes and
+//! cache hits).
+//!
+//! Diff mode strips the nondeterministic `wall_ms` fields and `log`
+//! events, then compares the remaining (sim-clock) content line by line:
+//! two same-seed runs must be byte-identical here, so a non-empty diff
+//! means the trajectory diverged. Exit status: 0 clean, 1 divergence or
+//! invalid trace, 2 usage/IO error.
+
+use std::collections::BTreeSet;
+use std::process::ExitCode;
+
+use fedselect::metrics::{human_bytes, Table};
+use fedselect::obs::trace::{diff_traces, validate_trace_line};
+use fedselect::util::json::Json;
+use fedselect::{obs_error, obs_info};
+
+/// Validate every line of a trace file and return the parsed events
+/// (header line excluded).
+fn load(path: &str) -> Result<Vec<Json>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        validate_trace_line(line).map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+        let ev = Json::parse(line).map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+        if ev.get("t").and_then(Json::as_str) != Some("header") {
+            events.push(ev);
+        }
+    }
+    Ok(events)
+}
+
+fn tag(ev: &Json) -> &str {
+    ev.get("t").and_then(Json::as_str).unwrap_or("?")
+}
+
+fn f(ev: &Json, key: &str) -> f64 {
+    ev.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn u(ev: &Json, key: &str) -> u64 {
+    f(ev, key) as u64
+}
+
+/// Per-round phase order of the trace schema.
+const PHASES: [&str; 5] = ["plan", "fetch", "compute", "close", "eval"];
+
+fn report(path: &str) -> Result<(), String> {
+    let events = load(path)?;
+
+    let rounds = events.iter().filter(|e| tag(e) == "round_close").count();
+    let namespaces: BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.get("ns").is_some())
+        .map(|e| u(e, "ns"))
+        .collect();
+    obs_info!(
+        "{path}: {} events | {rounds} round closes | {} namespace(s)",
+        events.len(),
+        namespaces.len()
+    );
+
+    // per-phase profile over the span events
+    let mut phases = Table::new(
+        "Phase profile",
+        &["phase", "spans", "wall_total_ms", "wall_mean_ms", "sim_total_s"],
+    );
+    for phase in PHASES {
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| tag(e) == "span" && e.get("phase").and_then(Json::as_str) == Some(phase))
+            .collect();
+        if spans.is_empty() {
+            continue;
+        }
+        let wall: f64 = spans.iter().map(|e| f(e, "wall_ms")).sum();
+        let sim: f64 = spans.iter().map(|e| f(e, "sim_s")).sum();
+        phases.push(vec![
+            phase.to_string(),
+            spans.len().to_string(),
+            format!("{wall:.2}"),
+            format!("{:.3}", wall / spans.len() as f64),
+            format!("{sim:.2}"),
+        ]);
+    }
+    obs_info!("{}", phases.to_pretty());
+
+    // per-tier client lifecycle rollup ("-" collects events with no tier,
+    // e.g. committee reconstruction-path dropouts)
+    let clients: Vec<&Json> = events.iter().filter(|e| tag(e) == "client").collect();
+    let tiers: BTreeSet<Option<u64>> = clients
+        .iter()
+        .map(|e| e.get("tier").and_then(Json::as_f64).map(|t| t as u64))
+        .collect();
+    let mut lifecycle = Table::new(
+        "Client lifecycle by tier",
+        &[
+            "tier", "selected", "fetched", "dropped", "computed", "merged", "discarded",
+            "deferred", "committee_keyed", "down", "cache_hit_pieces",
+        ],
+    );
+    for tier in &tiers {
+        let of_tier: Vec<&&Json> = clients
+            .iter()
+            .filter(|e| e.get("tier").and_then(Json::as_f64).map(|t| t as u64) == *tier)
+            .collect();
+        let count = |stage: &str| -> usize {
+            of_tier
+                .iter()
+                .filter(|e| e.get("stage").and_then(Json::as_str) == Some(stage))
+                .count()
+        };
+        let down: u64 = of_tier.iter().map(|e| u(e, "down_bytes")).sum();
+        let hits: u64 = of_tier.iter().map(|e| u(e, "cache_hit_pieces")).sum();
+        lifecycle.push(vec![
+            tier.map_or("-".to_string(), |t| format!("t{t}")),
+            count("selected").to_string(),
+            count("fetched").to_string(),
+            count("dropped").to_string(),
+            count("computed").to_string(),
+            count("merged").to_string(),
+            count("discarded").to_string(),
+            count("deferred").to_string(),
+            count("committee_keyed").to_string(),
+            human_bytes(down),
+            hits.to_string(),
+        ]);
+    }
+    if !lifecycle.rows.is_empty() {
+        obs_info!("{}", lifecycle.to_pretty());
+    }
+    Ok(())
+}
+
+fn diff(a_path: &str, b_path: &str) -> Result<bool, String> {
+    let a = std::fs::read_to_string(a_path).map_err(|e| format!("cannot read {a_path}: {e}"))?;
+    let b = std::fs::read_to_string(b_path).map_err(|e| format!("cannot read {b_path}: {e}"))?;
+    match diff_traces(&a, &b) {
+        Some(msg) => {
+            obs_info!("trace divergence: {msg}");
+            Ok(true)
+        }
+        None => {
+            obs_info!("traces agree on sim-time content ({a_path} vs {b_path})");
+            Ok(false)
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
+    let result = match refs.as_slice() {
+        ["--diff", a, b] => diff(a, b).map(|diverged| diverged as u8),
+        [path] if !path.starts_with("--") => report(path).map(|()| 0),
+        _ => Err("usage: trace_report <trace.jsonl> | trace_report --diff <a> <b>".to_string()),
+    };
+    match result {
+        Ok(code) => ExitCode::from(code),
+        Err(e) => {
+            obs_error!("trace_report: {e}");
+            let usage_or_io = e.contains("usage:") || e.contains("cannot read");
+            ExitCode::from(if usage_or_io { 2 } else { 1 })
+        }
+    }
+}

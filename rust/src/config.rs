@@ -9,6 +9,7 @@ use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
 use crate::error::{Error, Result};
 use crate::fedselect::{KeyPolicy, SliceImpl};
 use crate::model::ModelArch;
+use crate::obs::{ObsConfig, TraceFormat};
 use crate::optim::ServerOpt;
 use crate::scheduler::{FleetKind, SchedPolicy};
 
@@ -145,6 +146,9 @@ pub struct TrainConfig {
     pub eval: EvalConfig,
     pub engine: EngineKind,
     pub seed: u64,
+    /// Telemetry: log level, trace sink path, and trace encoding
+    /// ([`crate::obs`]). The default is the zero-cost null sink.
+    pub obs: ObsConfig,
 }
 
 impl TrainConfig {
@@ -178,6 +182,7 @@ impl TrainConfig {
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
             seed: 7,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -210,6 +215,7 @@ impl TrainConfig {
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
             seed: 11,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -242,6 +248,7 @@ impl TrainConfig {
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
             seed: 13,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -282,6 +289,7 @@ impl TrainConfig {
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
             seed: 23,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -490,6 +498,17 @@ impl TrainConfig {
                 "native engine supports logreg/MLP only; use --engine pjrt".into(),
             ));
         }
+        if let Some(path) = &self.obs.trace_out {
+            if path.is_empty() {
+                return Err(Error::Config("trace_out path must be non-empty".into()));
+            }
+        } else if self.obs.trace_format == TraceFormat::Chrome {
+            return Err(Error::Config(
+                "trace_format chrome requires --trace-out PATH (nothing to \
+                 export without a sink)"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -504,6 +523,24 @@ mod tests {
         TrainConfig::mlp_default(50).validate().unwrap();
         TrainConfig::cnn_default(16).validate().unwrap();
         TrainConfig::transformer_default(256, 128).validate().unwrap();
+    }
+
+    #[test]
+    fn trace_config_rules() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.obs.trace_out = Some("/tmp/trace.jsonl".to_string());
+        assert!(cfg.validate().is_ok());
+        cfg.obs.trace_format = TraceFormat::Chrome;
+        assert!(cfg.validate().is_ok());
+        cfg.obs.trace_out = Some(String::new());
+        assert!(cfg.validate().is_err(), "empty trace path rejected");
+        cfg.obs.trace_out = None;
+        assert!(
+            cfg.validate().is_err(),
+            "chrome format without a sink rejected"
+        );
+        cfg.obs.trace_format = TraceFormat::Jsonl;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -230,6 +230,13 @@ pub struct RoundOutcome {
     /// will never merge: over-selected stragglers, or buffered updates past
     /// `max_staleness` (one entry per discarded update).
     pub discarded_tiers: Vec<usize>,
+    /// Train-client id of each discarded update, index-aligned with
+    /// `discarded_tiers` (telemetry: per-client lifecycle events).
+    pub discarded_ids: Vec<usize>,
+    /// `(client, tier)` of each landed update held back by the
+    /// merge-deferral committee floor this close (telemetry; the count is
+    /// `deferred`).
+    pub deferred_ids: Vec<(usize, usize)>,
     /// Mean staleness over `merged` (0 outside buffered mode).
     pub mean_staleness: f64,
     /// Updates still in flight after this round (buffered mode only).
@@ -491,6 +498,7 @@ impl RoundEngine {
                     merged,
                     close_s,
                     discarded_tiers: events[goal..].iter().map(|e| e.tier).collect(),
+                    discarded_ids: events[goal..].iter().map(|e| e.client).collect(),
                     committees,
                     ..RoundOutcome::default()
                 }
@@ -535,6 +543,7 @@ impl RoundEngine {
                 // merges below the floor and surfaces via
                 // `min_committee_size`
                 let mut deferred = 0usize;
+                let mut deferred_ids: Vec<(usize, usize)> = Vec::new();
                 if self.defer && self.min_committee > 1 {
                     let mut class_counts: std::collections::BTreeMap<usize, usize> =
                         std::collections::BTreeMap::new();
@@ -547,6 +556,7 @@ impl RoundEngine {
                             class_counts[&st] >= self.min_committee || st >= max_staleness
                         });
                     deferred = hold.len();
+                    deferred_ids = hold.iter().map(|inf| (inf.client, inf.tier)).collect();
                     self.in_flight.extend(hold);
                     landed = keep;
                 }
@@ -569,12 +579,14 @@ impl RoundEngine {
                 // age out anything that would exceed the staleness bound by
                 // the time it could next land
                 let mut discarded_tiers = Vec::new();
+                let mut discarded_ids = Vec::new();
                 let mut discarded_members: Vec<(usize, u64)> = Vec::new(); // (staleness, client)
                 self.in_flight.retain(|inf| {
                     if round - inf.launch_round < max_staleness {
                         true
                     } else {
                         discarded_tiers.push(inf.tier);
+                        discarded_ids.push(inf.client);
                         discarded_members.push((round - inf.launch_round, inf.client as u64));
                         false
                     }
@@ -624,6 +636,8 @@ impl RoundEngine {
                     merged,
                     close_s: (close_abs - round_start_s).max(0.0),
                     discarded_tiers,
+                    discarded_ids,
+                    deferred_ids,
                     mean_staleness,
                     in_flight: self.in_flight.len(),
                     deferred,

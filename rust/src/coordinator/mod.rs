@@ -47,6 +47,7 @@ pub mod engine;
 
 pub use engine::{AggregationMode, CommitteeSpec, MergeItem, RoundEngine, RoundOutcome, SlotWork};
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::aggregation::{
@@ -60,8 +61,9 @@ use crate::error::{Error, Result};
 use crate::fedselect::{
     ClientKeys, DeltaPlan, RoundComm, RoundSession, SliceImpl, SliceService,
 };
-use crate::metrics::human_bytes;
+use crate::metrics::{human_bytes, record_round};
 use crate::model::{Binding, ModelArch, ParamStore, SelectSpec};
+use crate::obs::{self, ClientStage, MetricsRegistry, Phase, Recorder, TraceEvent};
 use crate::optim::Optimizer;
 use crate::runtime::PjrtRuntime;
 use crate::scheduler::{ClientRoundStats, Scheduler, SliceGeometry};
@@ -100,6 +102,9 @@ pub struct RoundRecord {
     pub up_bytes: u64,
     /// Max client memory this round (bytes).
     pub max_client_mem: usize,
+    /// Host wall time of the round's plan→close phase spans (sum of the
+    /// recorder's `plan`/`fetch`/`compute`/`close` spans); evaluation is
+    /// ledgered separately as [`EvalRecord::eval_ms`].
     pub wall_ms: f64,
     /// Simulated round duration on the device fleet: close point (straggler
     /// under `sync`, goal-count completion otherwise) plus server overhead.
@@ -138,6 +143,9 @@ pub struct EvalRecord {
     /// recall@5 (logreg) or accuracy (MLP/CNN/transformer).
     pub metric: f64,
     pub examples: usize,
+    /// Host wall time of this evaluation (kept out of
+    /// [`RoundRecord::wall_ms`], which covers plan→close only).
+    pub eval_ms: f64,
 }
 
 /// Full run report.
@@ -190,6 +198,21 @@ pub struct RoundTick {
     pub busy: Vec<(usize, f64)>,
 }
 
+/// Bucket bounds (simulated seconds) of the per-tier fetch-latency
+/// histograms the trainer's live [`MetricsRegistry`] observes.
+pub const FETCH_LATENCY_BOUNDS: [f64; 8] = [0.5, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0, 120.0];
+
+/// Histogram of merged-update staleness (rounds), observed per merge item.
+pub const STALENESS_HIST: &str = "staleness_rounds";
+
+/// Bucket bounds (rounds) of [`STALENESS_HIST`].
+pub const STALENESS_BOUNDS: [f64; 6] = [0.0, 1.0, 2.0, 4.0, 8.0, 16.0];
+
+/// Registry name of the per-tier fetch-latency histogram.
+pub fn fetch_latency_key(tier: usize) -> String {
+    format!("fetch_latency_s.t{tier}")
+}
+
 /// Federated trainer (Algorithm 2).
 pub struct Trainer {
     pub cfg: TrainConfig,
@@ -210,6 +233,19 @@ pub struct Trainer {
     cache_geom: Option<CacheGeometry>,
     rng: Rng,
     round: usize,
+    /// Telemetry sink ([`crate::obs`]); the default [`obs::NullRecorder`]
+    /// reports `enabled() == false`, so instrumented paths skip event
+    /// construction entirely.
+    recorder: Arc<dyn Recorder>,
+    /// Live metrics registry: per-round ledgers folded by
+    /// [`record_round`] plus fetch-latency/staleness histograms.
+    metrics: MetricsRegistry,
+    /// Pre-registered per-tier fetch-latency histogram keys (steady-state
+    /// observations never allocate).
+    fetch_hist_keys: Vec<String>,
+    /// Tenancy namespace tag stamped on every trace event (0 =
+    /// single-tenant).
+    ns: u32,
 }
 
 impl Trainer {
@@ -304,6 +340,15 @@ impl Trainer {
         } else {
             (None, None)
         };
+        let recorder = obs::build_recorder(&cfg.obs)?;
+        let mut metrics = MetricsRegistry::new();
+        let fetch_hist_keys: Vec<String> = (0..scheduler.fleet().num_tiers())
+            .map(fetch_latency_key)
+            .collect();
+        for key in &fetch_hist_keys {
+            metrics.register_hist(key, &FETCH_LATENCY_BOUNDS);
+        }
+        metrics.register_hist(STALENESS_HIST, &STALENESS_BOUNDS);
         Ok(Trainer {
             cfg,
             arch,
@@ -320,6 +365,10 @@ impl Trainer {
             cache_geom,
             rng,
             round: 0,
+            recorder,
+            metrics,
+            fetch_hist_keys,
+            ns: 0,
         })
     }
 
@@ -350,6 +399,26 @@ impl Trainer {
             self.versions = Some(v.with_ns(ns));
         }
         self.service.set_namespace(ns);
+        self.ns = ns;
+    }
+
+    /// The telemetry sink this trainer reports to.
+    pub fn recorder(&self) -> &Arc<dyn Recorder> {
+        &self.recorder
+    }
+
+    /// Replace the telemetry sink — the multi-tenant coordinator points
+    /// every job's trainer at one shared recorder.
+    pub fn set_recorder(&mut self, recorder: Arc<dyn Recorder>) {
+        self.recorder = recorder;
+    }
+
+    /// The live metrics registry (counters/gauges folded per round by
+    /// [`record_round`], plus fetch-latency and staleness histograms).
+    /// `metrics::fleet_summary_from` renders the fleet table from it
+    /// without re-walking the round records.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     pub fn dataset(&self) -> &FederatedDataset {
@@ -400,8 +469,26 @@ impl Trainer {
         &mut self,
         extra_exclude: &[usize],
     ) -> Result<(RoundRecord, RoundTick)> {
-        let t0 = Instant::now();
+        let obs_on = self.recorder.enabled();
+        if obs_on && self.round == 0 {
+            self.recorder.record(&TraceEvent::RunStart {
+                ns: self.ns,
+                seed: self.cfg.seed,
+                rounds: self.cfg.rounds,
+                cohort: self.cfg.cohort,
+                mode: self.round_engine.mode().to_string(),
+            });
+        }
         self.round += 1;
+        let sim_start_s = self.scheduler.sim_total_s();
+        if obs_on {
+            self.recorder.record(&TraceEvent::RoundStart {
+                ns: self.ns,
+                round: self.round,
+                sim_start_s,
+            });
+        }
+        let t_plan = Instant::now();
         let mut round_rng = self.rng.fork(self.round as u64);
 
         // Phase 0 — plan: the scheduler picks the cohort from the fleet
@@ -422,6 +509,22 @@ impl Trainer {
             .scheduler
             .plan_round(self.round, want, &self.geom, &mut round_rng, &in_flight);
         let cohort = &plan.cohort;
+        let slot_tiers: Vec<usize> = cohort
+            .iter()
+            .map(|&ci| self.scheduler.fleet().profiles[ci].tier)
+            .collect();
+        let ntiers = self.scheduler.fleet().num_tiers();
+        if obs_on {
+            for (slot, &ci) in cohort.iter().enumerate() {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client: ci,
+                    tier: Some(slot_tiers[slot]),
+                    stage: ClientStage::Selected,
+                });
+            }
+        }
 
         // shared per-round key sets (Fig. 6 "fixed" ablation)
         let shared: Vec<Option<Vec<u32>>> = self
@@ -464,6 +567,8 @@ impl Trainer {
             client_keys.push(keys);
             client_rngs.push(crng);
         }
+        let plan_ms = t_plan.elapsed().as_secs_f64() * 1e3;
+        let t_fetch = Instant::now();
 
         // Phase 2 — slice: one immutable session for the round, the whole
         // cohort fetched through it in parallel. Bundle order == cohort
@@ -499,11 +604,6 @@ impl Trainer {
         // cache (the download happened even if the client drops later), in
         // cohort order, before this round's version bumps. Hits/lookups are
         // tier-attributed for the per-tier hit-rate column.
-        let slot_tiers: Vec<usize> = cohort
-            .iter()
-            .map(|&ci| self.scheduler.fleet().profiles[ci].tier)
-            .collect();
-        let ntiers = self.scheduler.fleet().num_tiers();
         let mut tier_cache_hits = vec![0u64; ntiers];
         let mut tier_cache_lookups = vec![0u64; ntiers];
         let mut cache_stats = CommitStats::default();
@@ -524,6 +624,8 @@ impl Trainer {
                 "session ledger and cache commit disagree on hits"
             );
         }
+        let fetch_ms = t_fetch.elapsed().as_secs_f64() * 1e3;
+        let t_compute = Instant::now();
 
         // Phase 3a — compute: dropout coin + ClientUpdate per cohort slot,
         // sequential in cohort-index order (byte-identical at any
@@ -542,14 +644,36 @@ impl Trainer {
             // SimClock moves over the client's downlink — full model under
             // Option 1, bundle bytes under Options 2/3
             let down_bytes = outcome.down_bytes;
+            let piece_hits = outcome.piece_hits;
             let bundle = outcome.bundle;
             let slice_floats = bundle.total_floats();
+            if obs_on {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client: cohort[i],
+                    tier: Some(slot_tiers[i]),
+                    stage: ClientStage::Fetched {
+                        down_bytes,
+                        cache_hit_pieces: piece_hits,
+                    },
+                });
+            }
 
             // failure injection: drop after download, with the profile's
             // hazard (the coin is only flipped when the hazard is nonzero,
             // matching the legacy `dropout_rate > 0` gate bit for bit)
             if plan.hazards[i] > 0.0 && crng.f32() < plan.hazards[i] {
                 dropped += 1;
+                if obs_on {
+                    self.recorder.record(&TraceEvent::Client {
+                        ns: self.ns,
+                        round: self.round,
+                        client: cohort[i],
+                        tier: Some(slot_tiers[i]),
+                        stage: ClientStage::Dropped,
+                    });
+                }
                 stats.push(ClientRoundStats {
                     down_bytes,
                     dropped: true,
@@ -599,6 +723,15 @@ impl Trainer {
                 update_norm,
                 dropped: false,
             });
+            if obs_on {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client: cohort[i],
+                    tier: Some(slot_tiers[i]),
+                    stage: ClientStage::Computed { up_bytes: client_up },
+                });
+            }
             work.push(Some(SlotWork {
                 client: cohort[i],
                 tier: slot_tiers[i],
@@ -606,6 +739,8 @@ impl Trainer {
                 deltas,
             }));
         }
+        let compute_ms = t_compute.elapsed().as_secs_f64() * 1e3;
+        let t_close = Instant::now();
 
         // Phase 3b — close: the scheduler orders this round's completion
         // events on the simulated timeline; the engine decides which
@@ -621,6 +756,80 @@ impl Trainer {
             &events,
             work,
         );
+
+        // live registry: per-tier fetch-latency and merged-staleness
+        // histograms (deterministic sim quantities — always on, the
+        // registry never feeds back into the trajectory)
+        for e in &events {
+            self.metrics
+                .observe(&self.fetch_hist_keys[e.tier], e.timing.download_s);
+        }
+        for item in &outcome.merged {
+            self.metrics.observe(STALENESS_HIST, item.staleness as f64);
+        }
+        if obs_on {
+            for item in &outcome.merged {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client: item.client,
+                    tier: Some(item.tier),
+                    stage: ClientStage::Merged {
+                        staleness: item.staleness,
+                        weight: item.weight,
+                    },
+                });
+            }
+            for (i, &client) in outcome.discarded_ids.iter().enumerate() {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client,
+                    tier: outcome.discarded_tiers.get(i).copied(),
+                    stage: ClientStage::Discarded,
+                });
+            }
+            for &(client, tier) in &outcome.deferred_ids {
+                self.recorder.record(&TraceEvent::Client {
+                    ns: self.ns,
+                    round: self.round,
+                    client,
+                    tier: Some(tier),
+                    stage: ClientStage::Deferred,
+                });
+            }
+            // committee membership is only meaningful when the committee
+            // SecAgg substrate actually keys masks from it
+            if self.cfg.secure_agg && self.cfg.secure_committee {
+                for (ci, com) in outcome.committees.iter().enumerate() {
+                    for &mi in &com.submitters {
+                        let item = &outcome.merged[mi];
+                        self.recorder.record(&TraceEvent::Client {
+                            ns: self.ns,
+                            round: self.round,
+                            client: item.client,
+                            tier: Some(item.tier),
+                            stage: ClientStage::CommitteeKeyed {
+                                committee: ci,
+                                submitter: true,
+                            },
+                        });
+                    }
+                    for &d in &com.dropped {
+                        self.recorder.record(&TraceEvent::Client {
+                            ns: self.ns,
+                            round: self.round,
+                            client: d as usize,
+                            tier: None,
+                            stage: ClientStage::CommitteeKeyed {
+                                committee: ci,
+                                submitter: false,
+                            },
+                        });
+                    }
+                }
+            }
+        }
 
         // Phase 3c — aggregate and step the server optimizer on the
         // pseudo-gradient. Three substrates:
@@ -772,6 +981,7 @@ impl Trainer {
         for &t in &outcome.discarded_tiers {
             tier_discarded[t] += 1;
         }
+        let close_ms = t_close.elapsed().as_secs_f64() * 1e3;
 
         let tick = RoundTick {
             cohort: plan.cohort.clone(),
@@ -799,7 +1009,8 @@ impl Trainer {
             comm,
             up_bytes,
             max_client_mem: max_mem,
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            // plan→close only; eval wall time lands on EvalRecord::eval_ms
+            wall_ms: plan_ms + fetch_ms + compute_ms + close_ms,
             sim_round_s: sim.sim_round_s,
             tier_completed: sim.tier_completed,
             tier_dropped: sim.tier_dropped,
@@ -811,11 +1022,54 @@ impl Trainer {
             cache_stale_refreshes: cache_stats.stale_refreshes,
             deferrals: outcome.deferred,
         };
+        record_round(&mut self.metrics, &rec);
+        if obs_on {
+            // per-phase sim spans: fetch/compute take the slowest client's
+            // leg (phases overlap per client on the simulated timeline, so
+            // these are envelopes), close is the engine's close point
+            let sim_fetch_s = events
+                .iter()
+                .map(|e| e.timing.download_s)
+                .fold(0.0, f64::max);
+            let sim_compute_s = events
+                .iter()
+                .map(|e| e.timing.compute_s)
+                .fold(0.0, f64::max);
+            for (phase, wall_ms, sim_s) in [
+                (Phase::Plan, plan_ms, 0.0),
+                (Phase::Fetch, fetch_ms, sim_fetch_s),
+                (Phase::Compute, compute_ms, sim_compute_s),
+                (Phase::Close, close_ms, outcome.close_s),
+            ] {
+                self.recorder.record(&TraceEvent::Span {
+                    ns: self.ns,
+                    round: self.round,
+                    phase,
+                    wall_ms,
+                    sim_s,
+                });
+            }
+            self.recorder.record(&TraceEvent::RoundClose {
+                ns: self.ns,
+                round: self.round,
+                completed,
+                dropped,
+                discarded: outcome.discarded_tiers.len(),
+                deferred: outcome.deferred,
+                committees: committees_keyed,
+                close_s: outcome.close_s,
+                sim_round_s: rec.sim_round_s,
+                sim_total_s: self.scheduler.sim_total_s(),
+                down_bytes: rec.comm.down_bytes,
+                up_bytes,
+            });
+        }
         Ok((rec, tick))
     }
 
     /// Evaluate the full server model on held-out clients.
     pub fn evaluate(&mut self) -> Result<EvalRecord> {
+        let t_eval = Instant::now();
         let split = if self.cfg.eval.use_val && !self.dataset.val.is_empty() {
             &self.dataset.val
         } else if !self.dataset.test.is_empty() {
@@ -837,12 +1091,31 @@ impl Trainer {
             wsum += w;
         }
         let w = wsum.max(1.0);
-        Ok(EvalRecord {
+        let rec = EvalRecord {
             round: self.round,
             loss: loss / w,
             metric: metric / w,
             examples: wsum as usize,
-        })
+            eval_ms: t_eval.elapsed().as_secs_f64() * 1e3,
+        };
+        if self.recorder.enabled() {
+            self.recorder.record(&TraceEvent::Span {
+                ns: self.ns,
+                round: rec.round,
+                phase: Phase::Eval,
+                wall_ms: rec.eval_ms,
+                sim_s: 0.0,
+            });
+            self.recorder.record(&TraceEvent::Eval {
+                ns: self.ns,
+                round: rec.round,
+                loss: rec.loss,
+                metric: rec.metric,
+                examples: rec.examples,
+                wall_ms: rec.eval_ms,
+            });
+        }
+        Ok(rec)
     }
 
     /// Whether [`Self::run`] evaluates after 0-based round `r` (the final
@@ -863,7 +1136,7 @@ impl Trainer {
     ) -> Result<TrainReport> {
         let final_eval = self.evaluate()?;
         evals.push(final_eval);
-        Ok(TrainReport {
+        let report = TrainReport {
             rel_model_size: self.rel_model_size(),
             server_params: self.store.num_params(),
             total_down_bytes: rounds.iter().map(|r| r.comm.down_bytes).sum(),
@@ -876,7 +1149,16 @@ impl Trainer {
             rounds,
             evals,
             final_eval,
-        })
+        };
+        if self.recorder.enabled() {
+            self.recorder.record(&TraceEvent::RunEnd {
+                ns: self.ns,
+                rounds: report.rounds.len(),
+                sim_total_s: report.total_sim_s,
+            });
+        }
+        self.recorder.flush();
+        Ok(report)
     }
 
     /// Run the configured number of rounds with periodic evaluation.

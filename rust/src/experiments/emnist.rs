@@ -127,7 +127,7 @@ pub fn fig5(opts: &ExpOptions) -> Result<Vec<Table>> {
             fixed: false,
         }));
     } else {
-        eprintln!("[fig5] artifacts missing: skipping CNN arms (run `make artifacts`)");
+        crate::obs_warn!("[fig5] artifacts missing: skipping CNN arms (run `make artifacts`)");
     }
     for arm in &arms {
         let (curves, _, _) = run_arm(opts, arm, rounds, cohort, eval_every, &dataset, &img)?;
@@ -232,7 +232,7 @@ pub fn fig6(opts: &ExpOptions) -> Result<Vec<Table>> {
             });
         }
     } else {
-        eprintln!("[fig6] artifacts missing: skipping CNN arms");
+        crate::obs_warn!("[fig6] artifacts missing: skipping CNN arms");
     }
     for arm in &arms {
         let (curves, _, _) = run_arm(opts, arm, rounds, cohort, eval_every, &dataset, &img)?;

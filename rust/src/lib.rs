@@ -48,6 +48,7 @@ pub mod fedselect;
 pub mod metrics;
 pub mod model;
 pub mod native;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod scheduler;
@@ -70,6 +71,10 @@ pub mod prelude {
         ClientKeys, KeyPolicy, RoundSession, SliceBundle, SliceImpl, SliceService,
     };
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
+    pub use crate::obs::{
+        LogLevel, MetricsRegistry, NullRecorder, ObsConfig, Recorder, TraceEvent,
+        TraceFormat,
+    };
     pub use crate::optim::ServerOpt;
     pub use crate::scheduler::{
         CompletionEvent, DeviceProfile, Fleet, FleetKind, SchedPolicy, Scheduler,

@@ -22,6 +22,7 @@
 //!                       [--max-stale-rounds S]
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
+//!                       [--trace-out PATH] [--trace-format jsonl|chrome]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
 //!                            secagg|cache|multitenant|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
@@ -29,6 +30,12 @@
 //! fedselect artifacts   [--dir artifacts]
 //! fedselect info
 //! ```
+//!
+//! Global flags (any subcommand): `--log-level error|warn|info|debug`
+//! (default `info`) and `--quiet` (shorthand for `--log-level error`).
+//! Leveled output goes through the [`fedselect::obs`] logger; at the
+//! default level stdout is byte-identical to the historical `println!`
+//! output.
 //!
 //! `--policy` accepts either namespace — a key policy (`top:256`) or a
 //! scheduler policy (`memory-capped`); the spellings are disjoint. A bare
@@ -48,11 +55,13 @@ use fedselect::coordinator::{AggregationMode, Trainer};
 use fedselect::error::{Error, Result};
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
-use fedselect::metrics::{fleet_summary, human_bytes};
+use fedselect::metrics::{fleet_summary_from, human_bytes};
+use fedselect::obs::{self, LogLevel, TraceFormat};
 use fedselect::optim::ServerOpt;
 use fedselect::runtime::PjrtRuntime;
 use fedselect::scheduler::{FleetKind, SchedPolicy};
 use fedselect::util::cli::Args;
+use fedselect::{obs_error, obs_info, obs_warn};
 
 fn parse_engine(engine: &str, dir: &str) -> Result<EngineKind> {
     match engine {
@@ -275,7 +284,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     let dropout = a.parse_or("dropout", 0.0f32).map_err(Error::Config)?;
     let dropout = a.parse_or("dropout-rate", dropout).map_err(Error::Config)?;
     if dropout > 0.0 {
-        eprintln!(
+        obs_warn!(
             "warning: --dropout/--dropout-rate is deprecated; the scalar is applied \
              as a per-client failure hazard floor — prefer --fleet flaky-edge"
         );
@@ -285,10 +294,21 @@ fn cmd_train(a: &Args) -> Result<()> {
     cfg.engine = parse_engine(&a.str_or("engine", "native"), &dir)?;
     cfg.seed = a.parse_or("seed", 7u64).map_err(Error::Config)?;
     cfg.eval.every = a.parse_or("eval-every", 10usize).map_err(Error::Config)?;
+    // structured trace sink (observability): --trace-out enables it, the
+    // format defaults to line-delimited JSON (`fedselect-trace-v1`)
+    cfg.obs.trace_out = a.get("trace-out").map(str::to_string);
+    cfg.obs.trace_format = a
+        .str_or("trace-format", "jsonl")
+        .parse::<TraceFormat>()
+        .map_err(Error::Config)?;
     a.reject_unknown().map_err(Error::Config)?;
 
     let mut tr = Trainer::new(cfg)?;
-    println!(
+    // mirror leveled CLI lines into the trace (`log` events) when tracing
+    if tr.recorder().enabled() {
+        obs::log::set_sink(Some(tr.recorder().clone()));
+    }
+    obs_info!(
         "server model: {} params ({}), client slice ratio {:.4}",
         tr.store().num_params(),
         human_bytes(tr.store().bytes() as u64),
@@ -296,13 +316,13 @@ fn cmd_train(a: &Args) -> Result<()> {
     );
     let report = tr.run()?;
     for e in &report.evals {
-        println!(
+        obs_info!(
             "round {:>4}: loss {:.4}  metric {:.4}",
             e.round, e.loss, e.metric
         );
     }
     if let Some(last) = report.rounds.last() {
-        println!(
+        obs_info!(
             "per-round comm (last): down {} | up {} | psi {} | memo hits {} | cdn q {}",
             human_bytes(last.comm.down_bytes),
             human_bytes(last.up_bytes),
@@ -319,7 +339,7 @@ fn cmd_train(a: &Args) -> Result<()> {
                 .sum();
             let evictions: u64 = report.rounds.iter().map(|r| r.cache_evictions).sum();
             let stale: u64 = report.rounds.iter().map(|r| r.cache_stale_refreshes).sum();
-            println!(
+            obs_info!(
                 "slice cache: {hits}/{lookups} hits ({:.1}%) | evictions {evictions} | \
                  stale refreshes {stale}",
                 if lookups > 0 {
@@ -336,14 +356,14 @@ fn cmd_train(a: &Args) -> Result<()> {
             .enumerate()
             .map(|(t, &c)| format!("{}={}c/{}d", fleet.tier_name(t), c, last.tier_dropped[t]))
             .collect();
-        println!(
+        obs_info!(
             "sim (last round): {:.2}s | total {:.1}s | per-tier completed/dropped: {}",
             last.sim_round_s,
             report.total_sim_s,
             tiers.join(" ")
         );
         if last.mode != AggregationMode::Synchronous {
-            println!(
+            obs_info!(
                 "agg mode {} (last round): merged {} | discarded {} | mean staleness {:.2} \
                  | in flight {}",
                 last.mode,
@@ -354,19 +374,21 @@ fn cmd_train(a: &Args) -> Result<()> {
             );
         }
         if last.committees > 0 {
-            println!(
+            obs_info!(
                 "secure committees (last round): {} keyed | mean size {:.1} | min size {}",
                 last.committees, last.mean_committee_size, last.min_committee_size
             );
         }
     }
     if tr.scheduler().fleet().num_tiers() > 1 {
-        println!(
+        obs_info!(
             "{}",
-            fleet_summary(tr.scheduler().fleet(), &report.rounds).to_pretty()
+            // rendered from the trainer's live metrics registry — same
+            // bytes as the ledger-walking fleet_summary over report.rounds
+            fleet_summary_from(tr.scheduler().fleet(), tr.metrics()).to_pretty()
         );
     }
-    println!("{}", report.summary());
+    obs_info!("{}", report.summary());
     Ok(())
 }
 
@@ -377,7 +399,7 @@ fn cmd_experiment(a: &Args) -> Result<()> {
         .to_string();
     if id == "list" {
         for i in experiments::ALL_IDS {
-            println!("{i}");
+            obs_info!("{i}");
         }
         return Ok(());
     }
@@ -396,14 +418,14 @@ fn cmd_experiment(a: &Args) -> Result<()> {
         vec![id]
     };
     for id in ids {
-        println!("=== experiment {id} ===");
+        obs_info!("=== experiment {id} ===");
         match experiments::run(&id, &opts) {
             Ok(tables) => {
                 for t in tables {
-                    println!("{}", t.to_pretty());
+                    obs_info!("{}", t.to_pretty());
                 }
             }
-            Err(e) => eprintln!("[{id}] failed: {e}"),
+            Err(e) => obs_error!("[{id}] failed: {e}"),
         }
     }
     Ok(())
@@ -413,7 +435,7 @@ fn cmd_artifacts(a: &Args) -> Result<()> {
     let dir = a.str_or("dir", "artifacts");
     a.reject_unknown().map_err(Error::Config)?;
     let rt = PjrtRuntime::load(&dir)?;
-    println!("{} artifacts in {dir}:", rt.manifest().len());
+    obs_info!("{} artifacts in {dir}:", rt.manifest().len());
     for name in rt.manifest().names() {
         let art = rt.artifact(name)?;
         let in_elems: usize = art
@@ -421,7 +443,7 @@ fn cmd_artifacts(a: &Args) -> Result<()> {
             .iter()
             .map(|i| i.shape.iter().product::<usize>().max(1))
             .sum();
-        println!(
+        obs_info!(
             "  {name:<24} {:<14} {:>2} inputs ({} floats) -> {} outputs",
             art.kind,
             art.inputs.len(),
@@ -434,6 +456,17 @@ fn cmd_artifacts(a: &Args) -> Result<()> {
 
 fn real_main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(Error::Config)?;
+    // global log level, any subcommand: --quiet is shorthand for
+    // --log-level error; an explicit --log-level always wins
+    let mut level = if args.flag("quiet") {
+        LogLevel::Error
+    } else {
+        LogLevel::Info
+    };
+    if let Some(v) = args.get("log-level") {
+        level = v.parse::<LogLevel>().map_err(Error::Config)?;
+    }
+    obs::set_level(level);
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("experiment") => cmd_experiment(&args),
@@ -442,13 +475,13 @@ fn real_main() -> Result<()> {
         // --policy memory-capped`) trains; a truly bare one prints info
         None if args.has_flags() => cmd_train(&args),
         Some("info") | None => {
-            println!(
+            obs_info!(
                 "fedselect {} — Federated Select reproduction",
                 env!("CARGO_PKG_VERSION")
             );
-            println!("three-layer stack: rust coordinator -> XLA/PJRT -> pallas kernels");
-            println!("subcommands: train, experiment, artifacts, info");
-            println!("experiments: {}", experiments::ALL_IDS.join(", "));
+            obs_info!("three-layer stack: rust coordinator -> XLA/PJRT -> pallas kernels");
+            obs_info!("subcommands: train, experiment, artifacts, info");
+            obs_info!("experiments: {}", experiments::ALL_IDS.join(", "));
             Ok(())
         }
         Some(other) => Err(Error::Config(format!(
@@ -459,7 +492,7 @@ fn real_main() -> Result<()> {
 
 fn main() {
     if let Err(e) = real_main() {
-        eprintln!("error: {e}");
+        obs_error!("error: {e}");
         std::process::exit(1);
     }
 }

@@ -1,11 +1,22 @@
 //! Metrics plumbing: aggregate statistics, CSV emission, markdown tables
 //! for EXPERIMENTS.md, and the per-tier fleet summary of a training run.
+//!
+//! Since the observability PR the summaries are *registry-backed*: the
+//! trainer folds every [`RoundRecord`] into a [`MetricsRegistry`] as it
+//! runs ([`record_round`]), and [`fleet_summary_from`] /
+//! [`multitenant_summary_from`] render their tables by reading the
+//! canonical [`keys`] back out instead of re-deriving the tallies from the
+//! round ledgers. The ledger-walking entry points ([`fleet_summary`],
+//! [`multitenant_summary`]) are kept as thin compositions — build the
+//! registry, render from it — so both paths stay byte-identical by
+//! construction (test-enforced below).
 
 use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::coordinator::RoundRecord;
 use crate::error::Result;
+use crate::obs::MetricsRegistry;
 use crate::scheduler::Fleet;
 
 /// Mean and (population) standard deviation of a sample.
@@ -40,28 +51,120 @@ pub fn human_rate(bps: f64) -> String {
     format!("{}/s", human_bytes(bps.max(0.0) as u64))
 }
 
+/// Canonical metric names. Everything the trainer and the multi-tenant
+/// coordinator publish into their [`MetricsRegistry`] lives under these
+/// keys; summaries, the bench harness, and `trace_report` read them back
+/// instead of recomputing from ledgers.
+pub mod keys {
+    /// Counter: rounds folded into the registry.
+    pub const ROUNDS: &str = "rounds";
+    /// Counter: updates merged into the server model.
+    pub const COMPLETED: &str = "clients.completed";
+    /// Counter: post-fetch dropouts.
+    pub const DROPPED: &str = "clients.dropped";
+    /// Counter: computed updates never merged (over-selected stragglers,
+    /// staleness-bound buffered discards).
+    pub const DISCARDED: &str = "clients.discarded";
+    /// Counter: landed updates pushed back in flight by `--committee-defer`.
+    pub const DEFERRED: &str = "clients.deferred";
+    /// Counter: server->client wire bytes (post-cache when `--cache`).
+    pub const DOWN_BYTES: &str = "comm.down_bytes";
+    /// Counter: client->server wire bytes.
+    pub const UP_BYTES: &str = "comm.up_bytes";
+    /// Counter: client-cache entries evicted under byte budgets.
+    pub const CACHE_EVICTIONS: &str = "cache.evictions";
+    /// Counter: version-fresh pieces refetched past `--max-stale-rounds`.
+    pub const CACHE_STALE_REFRESHES: &str = "cache.stale_refreshes";
+    /// Gauge: accumulated simulated fleet time (sum of `sim_round_s`).
+    pub const SIM_TOTAL_S: &str = "sim.total_s";
+    /// Counter vec (index = fleet tier): merged updates.
+    pub const TIER_COMPLETED: &str = "tier.completed";
+    /// Counter vec (index = fleet tier): post-fetch dropouts.
+    pub const TIER_DROPPED: &str = "tier.dropped";
+    /// Counter vec (index = fleet tier): discarded updates.
+    pub const TIER_DISCARDED: &str = "tier.discarded";
+    /// Counter vec (index = fleet tier): download bytes.
+    pub const TIER_DOWN_BYTES: &str = "tier.down_bytes";
+    /// Counter vec (index = fleet tier): client-cache piece hits.
+    pub const TIER_CACHE_HITS: &str = "tier.cache_hits";
+    /// Counter vec (index = fleet tier): client-cache piece lookups.
+    pub const TIER_CACHE_LOOKUPS: &str = "tier.cache_lookups";
+    /// Counter vec (index = job): rounds run under the arbiter.
+    pub const JOB_ROUNDS: &str = "job.rounds";
+    /// Counter vec (index = job): download wire bytes.
+    pub const JOB_DOWN_BYTES: &str = "job.down_bytes";
+    /// Counter vec (index = job): upload wire bytes.
+    pub const JOB_UP_BYTES: &str = "job.up_bytes";
+    /// Counter vec (index = job): client-cache piece hits.
+    pub const JOB_CACHE_HITS: &str = "job.cache_hits";
+    /// Counter vec (index = job): client-cache piece lookups.
+    pub const JOB_CACHE_LOOKUPS: &str = "job.cache_lookups";
+
+    /// Gauge vec (index = job): simulated device-seconds consumed on fleet
+    /// tier `tier`.
+    pub fn job_busy_key(tier: usize) -> String {
+        format!("job.busy_s.t{tier}")
+    }
+}
+
+/// Fold one round ledger into the registry under the canonical [`keys`].
+/// The trainer calls this after every round; [`fleet_registry`] replays a
+/// recorded trajectory through it.
+pub fn record_round(reg: &mut MetricsRegistry, r: &RoundRecord) {
+    reg.counter_add(keys::ROUNDS, 1);
+    reg.counter_add(keys::COMPLETED, r.completed as u64);
+    reg.counter_add(keys::DROPPED, r.dropped as u64);
+    reg.counter_add(keys::DISCARDED, r.discarded_clients as u64);
+    reg.counter_add(keys::DEFERRED, r.deferrals as u64);
+    reg.counter_add(keys::DOWN_BYTES, r.comm.down_bytes);
+    reg.counter_add(keys::UP_BYTES, r.up_bytes);
+    reg.counter_add(keys::CACHE_EVICTIONS, r.cache_evictions);
+    reg.counter_add(keys::CACHE_STALE_REFRESHES, r.cache_stale_refreshes);
+    reg.gauge_add(keys::SIM_TOTAL_S, r.sim_round_s);
+    for (t, &v) in r.tier_completed.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_COMPLETED, t, v as u64);
+    }
+    for (t, &v) in r.tier_dropped.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_DROPPED, t, v as u64);
+    }
+    for (t, &v) in r.tier_discarded.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_DISCARDED, t, v as u64);
+    }
+    for (t, &v) in r.tier_down_bytes.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_DOWN_BYTES, t, v);
+    }
+    for (t, &v) in r.tier_cache_hits.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_CACHE_HITS, t, v);
+    }
+    for (t, &v) in r.tier_cache_lookups.iter().enumerate() {
+        reg.counter_vec_add(keys::TIER_CACHE_LOOKUPS, t, v);
+    }
+}
+
+/// Replay a recorded trajectory into a fresh registry (for summaries over
+/// reports loaded without a live trainer).
+pub fn fleet_registry(rounds: &[RoundRecord]) -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    for r in rounds {
+        record_round(&mut reg, r);
+    }
+    reg
+}
+
 /// Per-tier summary of a scheduled training run: population, device
 /// characteristics, and selection/completion/download tallies across the
 /// recorded rounds.
 pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
+    fleet_summary_from(fleet, &fleet_registry(rounds))
+}
+
+/// Render the fleet summary from a live registry (the trainer's own, via
+/// `Trainer::metrics`) instead of re-walking round ledgers. Byte-identical
+/// to [`fleet_summary`] over the same trajectory.
+pub fn fleet_summary_from(fleet: &Fleet, reg: &MetricsRegistry) -> Table {
     let tiers = fleet.num_tiers();
     let sizes = fleet.tier_sizes();
-    let mut completed = vec![0usize; tiers];
-    let mut dropped = vec![0usize; tiers];
-    let mut discarded = vec![0usize; tiers];
-    let mut down = vec![0u64; tiers];
-    let mut cache_hits = vec![0u64; tiers];
-    let mut cache_lookups = vec![0u64; tiers];
-    for r in rounds {
-        for t in 0..tiers {
-            completed[t] += r.tier_completed.get(t).copied().unwrap_or(0);
-            dropped[t] += r.tier_dropped.get(t).copied().unwrap_or(0);
-            discarded[t] += r.tier_discarded.get(t).copied().unwrap_or(0);
-            down[t] += r.tier_down_bytes.get(t).copied().unwrap_or(0);
-            cache_hits[t] += r.tier_cache_hits.get(t).copied().unwrap_or(0);
-            cache_lookups[t] += r.tier_cache_lookups.get(t).copied().unwrap_or(0);
-        }
-    }
+    let at = |name: &str, t: usize| reg.counter_vec(name).get(t).copied().unwrap_or(0);
     let mut table = Table::new(
         &format!("Fleet summary ({})", fleet.kind),
         &[
@@ -75,6 +178,11 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
         let mean_down = profiles.iter().map(|p| p.down_bps).sum::<f64>() / n;
         let mean_mem = profiles.iter().map(|p| p.mem_frac).sum::<f64>() / n;
         let mean_hazard = profiles.iter().map(|p| p.hazard as f64).sum::<f64>() / n;
+        let completed = at(keys::TIER_COMPLETED, t);
+        let dropped = at(keys::TIER_DROPPED, t);
+        let discarded = at(keys::TIER_DISCARDED, t);
+        let cache_hits = at(keys::TIER_CACHE_HITS, t);
+        let cache_lookups = at(keys::TIER_CACHE_LOOKUPS, t);
         table.push(vec![
             fleet.tier_name(t).to_string(),
             sizes[t].to_string(),
@@ -84,15 +192,15 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
             // under buffered aggregation carried merges land in a later
             // round's tally, so this is an approximation there; exact for
             // sync and over-select
-            (completed[t] + dropped[t] + discarded[t]).to_string(),
-            completed[t].to_string(),
-            dropped[t].to_string(),
-            discarded[t].to_string(),
-            human_bytes(down[t]),
+            (completed + dropped + discarded).to_string(),
+            completed.to_string(),
+            dropped.to_string(),
+            discarded.to_string(),
+            human_bytes(at(keys::TIER_DOWN_BYTES, t)),
             // per-tier client-cache hit rate; "-" when the run never looked
             // a piece up (cache off)
-            if cache_lookups[t] > 0 {
-                format!("{:.1}", 100.0 * cache_hits[t] as f64 / cache_lookups[t] as f64)
+            if cache_lookups > 0 {
+                format!("{:.1}", 100.0 * cache_hits as f64 / cache_lookups as f64)
             } else {
                 "-".to_string()
             },
@@ -101,11 +209,38 @@ pub fn fleet_summary(fleet: &Fleet, rounds: &[RoundRecord]) -> Table {
     table
 }
 
+/// Fold a multi-tenant report's per-job usage into a registry under the
+/// `job.*` [`keys`] (vec index = position in `report.usage`).
+pub fn multitenant_registry(report: &crate::tenancy::MultiReport) -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    for (j, u) in report.usage.iter().enumerate() {
+        reg.counter_vec_add(keys::JOB_ROUNDS, j, u.rounds as u64);
+        reg.counter_vec_add(keys::JOB_DOWN_BYTES, j, u.down_bytes);
+        reg.counter_vec_add(keys::JOB_UP_BYTES, j, u.up_bytes);
+        reg.counter_vec_add(keys::JOB_CACHE_HITS, j, u.cache_hits);
+        reg.counter_vec_add(keys::JOB_CACHE_LOOKUPS, j, u.cache_lookups);
+        for (t, &b) in u.tier_busy_s.iter().enumerate() {
+            reg.gauge_vec_add(&keys::job_busy_key(t), j, b);
+        }
+    }
+    reg
+}
+
 /// Fleet-level rollup of a multi-tenant run: one row per job (rounds run,
 /// per-tier simulated device-seconds, wire bytes, client-cache hit rate)
 /// plus a fleet totals row; the title carries the tick count, the shared
 /// wall-clock, and the overall device utilization.
 pub fn multitenant_summary(report: &crate::tenancy::MultiReport) -> Table {
+    multitenant_summary_from(report, &multitenant_registry(report))
+}
+
+/// Render the multi-tenant rollup from a registry (job names, tier names,
+/// and run-shape fields still come from the report; every number comes
+/// from the `job.*` keys). Byte-identical to [`multitenant_summary`].
+pub fn multitenant_summary_from(
+    report: &crate::tenancy::MultiReport,
+    reg: &MetricsRegistry,
+) -> Table {
     let tiers = &report.tier_names;
     let mut header: Vec<String> = vec!["job".to_string(), "rounds".to_string()];
     for t in tiers {
@@ -125,8 +260,9 @@ pub fn multitenant_summary(report: &crate::tenancy::MultiReport) -> Table {
         ),
         &refs,
     );
+    let at = |name: &str, j: usize| reg.counter_vec(name).get(j).copied().unwrap_or(0);
     let mut tot_busy = vec![0.0f64; tiers.len()];
-    let mut tot_rounds = 0usize;
+    let mut tot_rounds = 0u64;
     let (mut tot_down, mut tot_up) = (0u64, 0u64);
     let (mut tot_hits, mut tot_lookups) = (0u64, 0u64);
     let hit_pct = |hits: u64, lookups: u64| {
@@ -136,23 +272,29 @@ pub fn multitenant_summary(report: &crate::tenancy::MultiReport) -> Table {
             "-".to_string()
         }
     };
-    for u in &report.usage {
-        let mut row = vec![u.name.clone(), u.rounds.to_string()];
-        for (t, &b) in u.tier_busy_s.iter().enumerate() {
+    for (j, u) in report.usage.iter().enumerate() {
+        let rounds = at(keys::JOB_ROUNDS, j);
+        let (down, up) = (at(keys::JOB_DOWN_BYTES, j), at(keys::JOB_UP_BYTES, j));
+        let (hits, lookups) = (at(keys::JOB_CACHE_HITS, j), at(keys::JOB_CACHE_LOOKUPS, j));
+        let mut row = vec![u.name.clone(), rounds.to_string()];
+        for (t, tot) in tot_busy.iter_mut().enumerate() {
+            let b = reg
+                .gauge_vec(&keys::job_busy_key(t))
+                .get(j)
+                .copied()
+                .unwrap_or(0.0);
             row.push(format!("{b:.1}"));
-            if t < tot_busy.len() {
-                tot_busy[t] += b;
-            }
+            *tot += b;
         }
-        row.push(human_bytes(u.down_bytes));
-        row.push(human_bytes(u.up_bytes));
-        row.push(hit_pct(u.cache_hits, u.cache_lookups));
+        row.push(human_bytes(down));
+        row.push(human_bytes(up));
+        row.push(hit_pct(hits, lookups));
         table.push(row);
-        tot_rounds += u.rounds;
-        tot_down += u.down_bytes;
-        tot_up += u.up_bytes;
-        tot_hits += u.cache_hits;
-        tot_lookups += u.cache_lookups;
+        tot_rounds += rounds;
+        tot_down += down;
+        tot_up += up;
+        tot_hits += hits;
+        tot_lookups += lookups;
     }
     let mut totals = vec!["(fleet)".to_string(), tot_rounds.to_string()];
     for b in &tot_busy {
@@ -281,12 +423,9 @@ mod tests {
         t.push(vec!["1".into()]);
     }
 
-    #[test]
-    fn fleet_summary_tallies_tiers() {
+    fn sample_record() -> RoundRecord {
         use crate::fedselect::RoundComm;
-        use crate::scheduler::FleetKind;
-        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25).unwrap();
-        let rec = RoundRecord {
+        RoundRecord {
             round: 1,
             completed: 5,
             dropped: 1,
@@ -310,7 +449,14 @@ mod tests {
             cache_evictions: 0,
             cache_stale_refreshes: 0,
             deferrals: 0,
-        };
+        }
+    }
+
+    #[test]
+    fn fleet_summary_tallies_tiers() {
+        use crate::scheduler::FleetKind;
+        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25).unwrap();
+        let rec = sample_record();
         let t = fleet_summary(&fleet, &[rec.clone(), rec]);
         assert_eq!(t.rows.len(), 3);
         assert_eq!(t.rows[0][0], "low-end");
@@ -324,7 +470,26 @@ mod tests {
     }
 
     #[test]
-    fn multitenant_summary_rolls_up_jobs_and_fleet_totals() {
+    fn record_round_folds_scalars_and_tiers() {
+        let rec = sample_record();
+        let mut reg = MetricsRegistry::new();
+        record_round(&mut reg, &rec);
+        record_round(&mut reg, &rec);
+        assert_eq!(reg.counter(keys::ROUNDS), 2);
+        assert_eq!(reg.counter(keys::COMPLETED), 10);
+        assert_eq!(reg.counter(keys::DROPPED), 2);
+        assert_eq!(reg.counter_vec(keys::TIER_DOWN_BYTES), &[200, 400, 600]);
+        assert!((reg.gauge(keys::SIM_TOTAL_S) - 4.0).abs() < 1e-12);
+        // and the registry-rendered table matches the ledger-walking path
+        use crate::scheduler::FleetKind;
+        let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25).unwrap();
+        let recs = [rec.clone(), rec];
+        let a = fleet_summary(&fleet, &recs);
+        let b = fleet_summary_from(&fleet, &fleet_registry(&recs));
+        assert_eq!(a.to_pretty(), b.to_pretty());
+    }
+
+    fn sample_multireport() -> crate::tenancy::MultiReport {
         use crate::tenancy::{JobUsage, MultiReport};
         let usage = |name: &str, busy: [f64; 2], down: u64, hits: u64, lookups: u64| JobUsage {
             id: 0,
@@ -336,7 +501,7 @@ mod tests {
             cache_hits: hits,
             cache_lookups: lookups,
         };
-        let report = MultiReport {
+        MultiReport {
             reports: Vec::new(),
             usage: vec![
                 usage("a", [1.0, 2.0], 100, 3, 4),
@@ -347,7 +512,12 @@ mod tests {
             total_sim_s: 10.0,
             fleet_utilization: 0.5,
             tier_names: vec!["low".to_string(), "high".to_string()],
-        };
+        }
+    }
+
+    #[test]
+    fn multitenant_summary_rolls_up_jobs_and_fleet_totals() {
+        let report = sample_multireport();
         let t = multitenant_summary(&report);
         assert_eq!(t.header[2], "busy_s[low]");
         assert_eq!(t.rows.len(), 3); // 2 jobs + fleet totals
@@ -359,5 +529,16 @@ mod tests {
         assert_eq!(t.rows[1][6], "-");
         assert_eq!(t.rows[2][6], "75.0"); // fleet-wide hit rate
         assert!(t.title.contains("50.0% busy"), "{}", t.title);
+    }
+
+    #[test]
+    fn multitenant_registry_render_matches_ledger_path() {
+        let report = sample_multireport();
+        let reg = multitenant_registry(&report);
+        assert_eq!(reg.counter_vec(keys::JOB_ROUNDS), &[4, 4]);
+        assert_eq!(reg.gauge_vec(&keys::job_busy_key(1)), &[2.0, 0.25]);
+        let a = multitenant_summary(&report);
+        let b = multitenant_summary_from(&report, &reg);
+        assert_eq!(a.to_pretty(), b.to_pretty());
     }
 }

@@ -1,0 +1,174 @@
+//! Leveled logging routed through the telemetry layer.
+//!
+//! The `obs_error!` / `obs_warn!` / `obs_info!` / `obs_debug!` macros
+//! replace the ad-hoc `println!`/`eprintln!` sites: `info`/`debug` go to
+//! stdout, `warn`/`error` to stderr, so stdout is byte-identical to the
+//! pre-telemetry binary at the default `info` level. When a trace sink is
+//! installed ([`set_sink`]), every printed line is also recorded as a
+//! [`TraceEvent::Log`] event — log lines may carry host-dependent text, so
+//! the trace differ skips them (`trace::diff_traces`).
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Recorder, TraceEvent};
+
+/// Log threshold, most to least severe. `--log-level` sets it; `--quiet`
+/// maps to `Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    /// Stable lowercase name used in trace output.
+    pub fn name(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => LogLevel::Error,
+            1 => LogLevel::Warn,
+            3 => LogLevel::Debug,
+            _ => LogLevel::Info,
+        }
+    }
+}
+
+impl fmt::Display for LogLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl FromStr for LogLevel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "error" => Ok(LogLevel::Error),
+            "warn" => Ok(LogLevel::Warn),
+            "info" => Ok(LogLevel::Info),
+            "debug" => Ok(LogLevel::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug)"
+            )),
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
+static SINK: Mutex<Option<Arc<dyn Recorder>>> = Mutex::new(None);
+
+/// Set the process-wide log threshold.
+pub fn set_level(level: LogLevel) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide log threshold.
+pub fn level() -> LogLevel {
+    LogLevel::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Whether messages at `l` currently print.
+pub fn enabled(l: LogLevel) -> bool {
+    l <= level()
+}
+
+/// Install (or clear) the recorder that mirrors printed log lines into the
+/// trace stream.
+pub fn set_sink(rec: Option<Arc<dyn Recorder>>) {
+    if let Ok(mut guard) = SINK.lock() {
+        *guard = rec;
+    }
+}
+
+/// Print one leveled line and mirror it to the trace sink. Prefer the
+/// `obs_*!` macros over calling this directly.
+pub fn emit(level: LogLevel, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let msg = args.to_string();
+    match level {
+        LogLevel::Error | LogLevel::Warn => eprintln!("{msg}"),
+        LogLevel::Info | LogLevel::Debug => println!("{msg}"),
+    }
+    if let Ok(guard) = SINK.lock() {
+        if let Some(rec) = guard.as_ref() {
+            if rec.enabled() {
+                rec.record(&TraceEvent::Log { level, msg });
+            }
+        }
+    }
+}
+
+/// Log at `error` level (stderr; always printed).
+#[macro_export]
+macro_rules! obs_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::LogLevel::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at `warn` level (stderr).
+#[macro_export]
+macro_rules! obs_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::LogLevel::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at `info` level (stdout; the default threshold).
+#[macro_export]
+macro_rules! obs_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::LogLevel::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at `debug` level (stdout; off by default).
+#[macro_export]
+macro_rules! obs_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::LogLevel::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_round_trip() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+        for l in [LogLevel::Error, LogLevel::Warn, LogLevel::Info, LogLevel::Debug] {
+            assert_eq!(l.to_string().parse::<LogLevel>().unwrap(), l);
+        }
+        assert!("verbose".parse::<LogLevel>().is_err());
+    }
+
+    #[test]
+    fn threshold_gates_emission() {
+        let before = level();
+        set_level(LogLevel::Error);
+        assert!(enabled(LogLevel::Error));
+        assert!(!enabled(LogLevel::Warn));
+        assert!(!enabled(LogLevel::Info));
+        set_level(LogLevel::Debug);
+        assert!(enabled(LogLevel::Debug));
+        set_level(before);
+    }
+}

@@ -1,0 +1,344 @@
+//! Structured telemetry: deterministic round tracing, leveled logging, and
+//! a metrics registry shared by the trainer, the summaries, and the bench
+//! harness.
+//!
+//! # Architecture
+//!
+//! Every instrumented layer (coordinator, round engine, scheduler, cache
+//! commit, SecAgg committees, tenancy arbiter) reports through one
+//! [`Recorder`]. Events are plain enums ([`TraceEvent`]) carrying **both**
+//! clocks:
+//!
+//! - *wall-clock* fields (always named `wall_ms`) measure host time and are
+//!   nondeterministic by nature;
+//! - *sim-clock* fields (`sim_*`, `close_s`, staleness, byte counts) are
+//!   produced by the deterministic simulation and must be byte-identical
+//!   across same-seed runs.
+//!
+//! Three sinks implement the trait:
+//!
+//! | sink | selected by | cost |
+//! |---|---|---|
+//! | [`NullRecorder`] | default | none: `enabled()` is `false`, so call sites skip event construction entirely — zero allocation on the hot path |
+//! | [`JsonlRecorder`] | `--trace-out PATH` | one JSON line per event, schema [`TRACE_SCHEMA`] |
+//! | [`ChromeRecorder`] | `--trace-out PATH --trace-format chrome` | `chrome://tracing` / Perfetto trace-event array |
+//!
+//! # Determinism contract
+//!
+//! Telemetry observes, never steers: no recorder may touch an RNG, reorder
+//! work, or feed anything back into the trajectory. `tests/obs.rs` enforces
+//! that a traced run and a [`NullRecorder`] run produce identical
+//! `RoundRecord`s (every field but the wall clock) at 1 and 4 fetch
+//! threads, and that two same-seed JSONL traces are byte-identical after
+//! stripping `wall_ms` fields ([`trace::diff_traces`]).
+
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use log::{set_level, LogLevel};
+pub use registry::{Histogram, MetricsRegistry};
+pub use trace::{
+    diff_traces, validate_trace_line, ChromeRecorder, JsonlRecorder, TRACE_SCHEMA,
+};
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+/// The five spans of one training round, in execution order. `Eval` runs
+/// outside the round proper (see `RoundRecord::wall_ms`, which covers
+/// `Plan..=Close` only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Cohort selection, in-flight exclusion, and per-client key choice.
+    Plan,
+    /// Slice/delta fetches through the `RoundSession` plus cache commit.
+    Fetch,
+    /// Local training over the cohort slots.
+    Compute,
+    /// Scheduler events, engine close, aggregation, and the sim-clock tick.
+    Close,
+    /// Held-out evaluation (only on eval rounds).
+    Eval,
+}
+
+impl Phase {
+    /// Stable lowercase name used in trace output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::Fetch => "fetch",
+            Phase::Compute => "compute",
+            Phase::Close => "close",
+            Phase::Eval => "eval",
+        }
+    }
+}
+
+/// Per-client lifecycle stage within a round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClientStage {
+    /// Planned into the cohort this round.
+    Selected,
+    /// Downlink served: bytes over the wire and pieces answered by the
+    /// on-device cache (0 when the cache is off).
+    Fetched { down_bytes: u64, cache_hit_pieces: u64 },
+    /// Dropped out mid-round (hazard coin); bytes already spent.
+    Dropped,
+    /// Finished local training and uploaded `up_bytes`.
+    Computed { up_bytes: u64 },
+    /// Update merged at this close, with its staleness class and weight.
+    Merged { staleness: usize, weight: f32 },
+    /// Computed update aged out / over-selected past the close — bytes
+    /// spent, never merged.
+    Discarded,
+    /// Held back by the merge-deferral committee floor; returns to flight.
+    Deferred,
+    /// Keyed into a SecAgg committee (`submitter: false` = dropout whose
+    /// mask is reconstructed).
+    CommitteeKeyed { committee: usize, submitter: bool },
+}
+
+impl ClientStage {
+    /// Stable lowercase name used in trace output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClientStage::Selected => "selected",
+            ClientStage::Fetched { .. } => "fetched",
+            ClientStage::Dropped => "dropped",
+            ClientStage::Computed { .. } => "computed",
+            ClientStage::Merged { .. } => "merged",
+            ClientStage::Discarded => "discarded",
+            ClientStage::Deferred => "deferred",
+            ClientStage::CommitteeKeyed { .. } => "committee_keyed",
+        }
+    }
+}
+
+/// One telemetry event. Variants are cheap to construct, but call sites
+/// must still guard construction with [`Recorder::enabled`] so the default
+/// [`NullRecorder`] path allocates nothing.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// Run header, emitted once before the first round.
+    RunStart {
+        ns: u32,
+        seed: u64,
+        rounds: usize,
+        cohort: usize,
+        mode: String,
+    },
+    /// A round began; `sim_start_s` is the sim clock before the round.
+    RoundStart { ns: u32, round: usize, sim_start_s: f64 },
+    /// One phase span of a round. `wall_ms` is host time; `sim_s` is the
+    /// deterministic sim-clock span attributed to the phase (for `Fetch` /
+    /// `Compute` the slowest client's leg, for `Close` the close time;
+    /// 0 where the phase has no simulated extent).
+    Span {
+        ns: u32,
+        round: usize,
+        phase: Phase,
+        wall_ms: f64,
+        sim_s: f64,
+    },
+    /// A per-client lifecycle event. `tier` is `None` when the stage does
+    /// not know the device tier (committee dropouts keyed from a past
+    /// close).
+    Client {
+        ns: u32,
+        round: usize,
+        client: usize,
+        tier: Option<usize>,
+        stage: ClientStage,
+    },
+    /// Round footer: the engine's close decision and the sim-clock tick.
+    RoundClose {
+        ns: u32,
+        round: usize,
+        completed: usize,
+        dropped: usize,
+        discarded: usize,
+        deferred: usize,
+        committees: usize,
+        close_s: f64,
+        sim_round_s: f64,
+        sim_total_s: f64,
+        down_bytes: u64,
+        up_bytes: u64,
+    },
+    /// Held-out evaluation result.
+    Eval {
+        ns: u32,
+        round: usize,
+        loss: f64,
+        metric: f64,
+        examples: usize,
+        wall_ms: f64,
+    },
+    /// Multi-tenant arbiter tick: which job namespaces were granted.
+    Tick { tick: u64, granted: Vec<u32> },
+    /// A leveled log line routed through the recorder sink.
+    Log { level: LogLevel, msg: String },
+    /// Run footer, emitted by `finish_report`.
+    RunEnd { ns: u32, rounds: usize, sim_total_s: f64 },
+}
+
+impl TraceEvent {
+    /// Stable type tag used as the `"t"` field of trace lines.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TraceEvent::RunStart { .. } => "run_start",
+            TraceEvent::RoundStart { .. } => "round_start",
+            TraceEvent::Span { .. } => "span",
+            TraceEvent::Client { .. } => "client",
+            TraceEvent::RoundClose { .. } => "round_close",
+            TraceEvent::Eval { .. } => "eval",
+            TraceEvent::Tick { .. } => "tick",
+            TraceEvent::Log { .. } => "log",
+            TraceEvent::RunEnd { .. } => "run_end",
+        }
+    }
+}
+
+/// A telemetry sink. Implementations must be `Send + Sync`: the trainer is
+/// shared-referenced by fetch worker threads while the recorder is live.
+pub trait Recorder: Send + Sync {
+    /// Whether events should be built at all. Call sites guard event
+    /// construction with this so the null sink costs nothing.
+    fn enabled(&self) -> bool {
+        true
+    }
+    /// Consume one event.
+    fn record(&self, ev: &TraceEvent);
+    /// Flush buffered output (end of run).
+    fn flush(&self) {}
+}
+
+/// The default sink: drops everything and reports `enabled() == false`, so
+/// instrumented code never constructs events. Trajectories with this sink
+/// are byte-identical to pre-telemetry builds (test-enforced).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&self, _ev: &TraceEvent) {}
+}
+
+/// On-disk trace encoding selected by `--trace-format`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON object per line, schema [`TRACE_SCHEMA`] (default).
+    #[default]
+    Jsonl,
+    /// Chrome trace-event array for `chrome://tracing` / Perfetto.
+    Chrome,
+}
+
+impl fmt::Display for TraceFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceFormat::Jsonl => write!(f, "jsonl"),
+            TraceFormat::Chrome => write!(f, "chrome"),
+        }
+    }
+}
+
+impl FromStr for TraceFormat {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "chrome" => Ok(TraceFormat::Chrome),
+            other => Err(format!(
+                "unknown trace format '{other}' (expected jsonl|chrome)"
+            )),
+        }
+    }
+}
+
+/// Telemetry knobs carried by `TrainConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Stdout/stderr log threshold (`--log-level`, `--quiet`).
+    pub log_level: LogLevel,
+    /// Trace sink path (`--trace-out`); `None` selects [`NullRecorder`].
+    pub trace_out: Option<String>,
+    /// Trace encoding (`--trace-format`).
+    pub trace_format: TraceFormat,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            log_level: LogLevel::Info,
+            trace_out: None,
+            trace_format: TraceFormat::Jsonl,
+        }
+    }
+}
+
+/// Build the recorder an `ObsConfig` asks for: the null sink when no trace
+/// path is set, otherwise a file-backed JSONL or Chrome recorder.
+pub fn build_recorder(cfg: &ObsConfig) -> Result<Arc<dyn Recorder>> {
+    match &cfg.trace_out {
+        None => Ok(Arc::new(NullRecorder)),
+        Some(path) => match cfg.trace_format {
+            TraceFormat::Jsonl => Ok(Arc::new(
+                JsonlRecorder::create(path).map_err(Error::Io)?,
+            )),
+            TraceFormat::Chrome => Ok(Arc::new(
+                ChromeRecorder::create(path).map_err(Error::Io)?,
+            )),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_format_round_trips() {
+        for f in [TraceFormat::Jsonl, TraceFormat::Chrome] {
+            assert_eq!(f.to_string().parse::<TraceFormat>().unwrap(), f);
+        }
+        assert!("perfetto".parse::<TraceFormat>().is_err());
+    }
+
+    #[test]
+    fn null_recorder_is_disabled() {
+        let r = NullRecorder;
+        assert!(!r.enabled());
+        r.record(&TraceEvent::RoundStart {
+            ns: 0,
+            round: 1,
+            sim_start_s: 0.0,
+        });
+        r.flush();
+    }
+
+    #[test]
+    fn default_obs_config_selects_the_null_sink() {
+        let cfg = ObsConfig::default();
+        assert_eq!(cfg.log_level, LogLevel::Info);
+        let rec = build_recorder(&cfg).unwrap();
+        assert!(!rec.enabled());
+    }
+
+    #[test]
+    fn phase_and_stage_names_are_stable() {
+        assert_eq!(Phase::Plan.name(), "plan");
+        assert_eq!(Phase::Close.name(), "close");
+        assert_eq!(ClientStage::Selected.name(), "selected");
+        assert_eq!(
+            ClientStage::CommitteeKeyed { committee: 0, submitter: true }.name(),
+            "committee_keyed"
+        );
+    }
+}

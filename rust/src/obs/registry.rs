@@ -1,0 +1,261 @@
+//! The metrics registry: counters, gauges, per-tier/per-job counter and
+//! gauge vectors, and fixed-bucket histograms.
+//!
+//! The trainer folds every round into its live registry as it runs, and
+//! `metrics::fleet_registry` rebuilds the same registry from recorded
+//! `RoundRecord`s — both paths share one fold (`metrics::record_round`), so
+//! the summary tables render identically from either source
+//! (test-enforced). Updates are plain arithmetic on pre-registered keys:
+//! steady-state updates never allocate and never touch an RNG, so the
+//! registry is always on without perturbing the trajectory.
+
+use std::collections::BTreeMap;
+
+/// A fixed-bucket histogram: `bounds[i]` is the inclusive upper bound of
+/// bucket `i`; one final bucket catches everything above the last bound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// A histogram with the given ascending bucket upper bounds.
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            n: 0,
+        }
+    }
+
+    /// Count one observation.
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of all observed values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Bucket upper bounds (the overflow bucket is implicit).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; `len() == bounds().len() + 1` (last = overflow).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// Named counters, gauges, indexed vectors, and histograms. Keys are
+/// `&str` at every call site; lookups on existing keys do not allocate.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    counter_vecs: BTreeMap<String, Vec<u64>>,
+    gauge_vecs: BTreeMap<String, Vec<f64>>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to the counter `name` (created at 0 on first use).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        if !self.counters.contains_key(name) {
+            self.counters.insert(name.to_string(), 0);
+        }
+        *self.counters.get_mut(name).expect("just inserted") += v;
+    }
+
+    /// Current value of counter `name` (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// All counters, sorted by name.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        if !self.gauges.contains_key(name) {
+            self.gauges.insert(name.to_string(), 0.0);
+        }
+        *self.gauges.get_mut(name).expect("just inserted") = v;
+    }
+
+    /// Add `v` to gauge `name` (created at 0 on first use).
+    pub fn gauge_add(&mut self, name: &str, v: f64) {
+        if !self.gauges.contains_key(name) {
+            self.gauges.insert(name.to_string(), 0.0);
+        }
+        *self.gauges.get_mut(name).expect("just inserted") += v;
+    }
+
+    /// Current value of gauge `name` (0 when absent).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// All gauges, sorted by name.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Add `v` at index `idx` of counter vector `name`, growing the vector
+    /// with zeros as needed (index = tier or job ordinal).
+    pub fn counter_vec_add(&mut self, name: &str, idx: usize, v: u64) {
+        if !self.counter_vecs.contains_key(name) {
+            self.counter_vecs.insert(name.to_string(), Vec::new());
+        }
+        let vec = self.counter_vecs.get_mut(name).expect("just inserted");
+        if vec.len() <= idx {
+            vec.resize(idx + 1, 0);
+        }
+        vec[idx] += v;
+    }
+
+    /// Counter vector `name` (empty slice when absent).
+    pub fn counter_vec(&self, name: &str) -> &[u64] {
+        self.counter_vecs.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Add `v` at index `idx` of gauge vector `name`.
+    pub fn gauge_vec_add(&mut self, name: &str, idx: usize, v: f64) {
+        if !self.gauge_vecs.contains_key(name) {
+            self.gauge_vecs.insert(name.to_string(), Vec::new());
+        }
+        let vec = self.gauge_vecs.get_mut(name).expect("just inserted");
+        if vec.len() <= idx {
+            vec.resize(idx + 1, 0.0);
+        }
+        vec[idx] += v;
+    }
+
+    /// Gauge vector `name` (empty slice when absent).
+    pub fn gauge_vec(&self, name: &str) -> &[f64] {
+        self.gauge_vecs.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Create histogram `name` with the given bucket bounds (no-op when it
+    /// already exists). Pre-register hot-path histograms so `observe` never
+    /// allocates in steady state.
+    pub fn register_hist(&mut self, name: &str, bounds: &[f64]) {
+        if !self.hists.contains_key(name) {
+            self.hists.insert(name.to_string(), Histogram::new(bounds));
+        }
+    }
+
+    /// Count one observation into histogram `name`, creating it with
+    /// [`DEFAULT_HIST_BOUNDS`] when absent.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        if !self.hists.contains_key(name) {
+            self.hists
+                .insert(name.to_string(), Histogram::new(&DEFAULT_HIST_BOUNDS));
+        }
+        self.hists.get_mut(name).expect("just inserted").observe(v);
+    }
+
+    /// Histogram `name`, if registered.
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// All histograms, sorted by name.
+    pub fn hists(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+/// Decade buckets used when a histogram is observed without being
+/// registered first.
+pub const DEFAULT_HIST_BOUNDS: [f64; 7] = [0.001, 0.01, 0.1, 1.0, 10.0, 100.0, 1000.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_add("rounds", 1);
+        reg.counter_add("rounds", 2);
+        assert_eq!(reg.counter("rounds"), 3);
+        assert_eq!(reg.counter("absent"), 0);
+        reg.gauge_add("sim_s", 1.5);
+        reg.gauge_add("sim_s", 2.5);
+        assert_eq!(reg.gauge("sim_s"), 4.0);
+        reg.gauge_set("sim_s", 0.5);
+        assert_eq!(reg.gauge("sim_s"), 0.5);
+    }
+
+    #[test]
+    fn counter_vecs_grow_on_demand() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_vec_add("tier.completed", 2, 5);
+        reg.counter_vec_add("tier.completed", 0, 1);
+        assert_eq!(reg.counter_vec("tier.completed"), &[1, 0, 5]);
+        assert_eq!(reg.counter_vec("absent"), &[] as &[u64]);
+        reg.gauge_vec_add("job.busy", 1, 2.0);
+        assert_eq!(reg.gauge_vec("job.busy"), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let mut h = Histogram::new(&[1.0, 10.0]);
+        h.observe(0.5);
+        h.observe(1.0); // inclusive upper bound
+        h.observe(5.0);
+        h.observe(50.0); // overflow bucket
+        assert_eq!(h.bucket_counts(), &[2, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 56.5 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_histograms_use_default_bounds_when_unregistered() {
+        let mut reg = MetricsRegistry::new();
+        reg.observe("lat", 0.05);
+        assert_eq!(reg.hist("lat").unwrap().bounds(), &DEFAULT_HIST_BOUNDS);
+        reg.register_hist("lat2", &[1.0]);
+        reg.observe("lat2", 2.0);
+        assert_eq!(reg.hist("lat2").unwrap().bucket_counts(), &[0, 1]);
+    }
+}

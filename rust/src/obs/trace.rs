@@ -1,0 +1,533 @@
+//! File-backed trace sinks and trace-file utilities.
+//!
+//! # JSONL schema (`fedselect-trace-v1`)
+//!
+//! Line 1 is the header `{"schema":"fedselect-trace-v1","t":"header"}`;
+//! every following line is one event object whose `"t"` field names the
+//! [`TraceEvent`] variant (`run_start`, `round_start`, `span`, `client`,
+//! `round_close`, `eval`, `tick`, `log`, `run_end`). Keys are emitted in
+//! sorted order and numbers use the crate's deterministic formatter, so
+//! the sim-clock content of two same-seed traces is byte-identical; the
+//! only nondeterministic fields are named `wall_ms`, which
+//! [`strip_nondeterministic`] removes before [`diff_traces`] compares.
+//!
+//! # Chrome export
+//!
+//! [`ChromeRecorder`] writes the Chrome trace-event JSON array format
+//! (open in `chrome://tracing` or Perfetto): phase spans become `"X"`
+//! complete events on the wall clock, everything else becomes `"i"`
+//! instant events. The closing `]` is intentionally never written — the
+//! format explicitly tolerates an unterminated array, which keeps the sink
+//! crash-safe.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{Recorder, TraceEvent};
+use crate::util::json::Json;
+
+/// Versioned schema tag written on the header line of every JSONL trace.
+pub const TRACE_SCHEMA: &str = "fedselect-trace-v1";
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn uint(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Encode one event as the JSON object written to a JSONL trace line.
+pub fn encode_event(ev: &TraceEvent) -> Json {
+    let tag = Json::Str(ev.tag().to_string());
+    match ev {
+        TraceEvent::RunStart { ns, seed, rounds, cohort, mode } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("seed", uint(*seed)),
+            ("rounds", uint(*rounds as u64)),
+            ("cohort", uint(*cohort as u64)),
+            ("mode", Json::Str(mode.clone())),
+        ]),
+        TraceEvent::RoundStart { ns, round, sim_start_s } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("sim_start_s", num(*sim_start_s)),
+        ]),
+        TraceEvent::Span { ns, round, phase, wall_ms, sim_s } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("phase", Json::Str(phase.name().to_string())),
+            ("wall_ms", num(*wall_ms)),
+            ("sim_s", num(*sim_s)),
+        ]),
+        TraceEvent::Client { ns, round, client, tier, stage } => {
+            let mut pairs = vec![
+                ("t", tag),
+                ("ns", uint(*ns as u64)),
+                ("round", uint(*round as u64)),
+                ("client", uint(*client as u64)),
+                (
+                    "tier",
+                    match tier {
+                        Some(t) => uint(*t as u64),
+                        None => Json::Null,
+                    },
+                ),
+                ("stage", Json::Str(stage.name().to_string())),
+            ];
+            match *stage {
+                super::ClientStage::Fetched { down_bytes, cache_hit_pieces } => {
+                    pairs.push(("down_bytes", uint(down_bytes)));
+                    pairs.push(("cache_hit_pieces", uint(cache_hit_pieces)));
+                }
+                super::ClientStage::Computed { up_bytes } => {
+                    pairs.push(("up_bytes", uint(up_bytes)));
+                }
+                super::ClientStage::Merged { staleness, weight } => {
+                    pairs.push(("staleness", uint(staleness as u64)));
+                    pairs.push(("weight", num(weight as f64)));
+                }
+                super::ClientStage::CommitteeKeyed { committee, submitter } => {
+                    pairs.push(("committee", uint(committee as u64)));
+                    pairs.push(("submitter", Json::Bool(submitter)));
+                }
+                _ => {}
+            }
+            obj(pairs)
+        }
+        TraceEvent::RoundClose {
+            ns,
+            round,
+            completed,
+            dropped,
+            discarded,
+            deferred,
+            committees,
+            close_s,
+            sim_round_s,
+            sim_total_s,
+            down_bytes,
+            up_bytes,
+        } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("completed", uint(*completed as u64)),
+            ("dropped", uint(*dropped as u64)),
+            ("discarded", uint(*discarded as u64)),
+            ("deferred", uint(*deferred as u64)),
+            ("committees", uint(*committees as u64)),
+            ("close_s", num(*close_s)),
+            ("sim_round_s", num(*sim_round_s)),
+            ("sim_total_s", num(*sim_total_s)),
+            ("down_bytes", uint(*down_bytes)),
+            ("up_bytes", uint(*up_bytes)),
+        ]),
+        TraceEvent::Eval { ns, round, loss, metric, examples, wall_ms } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("loss", num(*loss)),
+            ("metric", num(*metric)),
+            ("examples", uint(*examples as u64)),
+            ("wall_ms", num(*wall_ms)),
+        ]),
+        TraceEvent::Tick { tick, granted } => obj(vec![
+            ("t", tag),
+            ("tick", uint(*tick)),
+            (
+                "granted",
+                Json::Arr(granted.iter().map(|&j| uint(j as u64)).collect()),
+            ),
+        ]),
+        TraceEvent::Log { level, msg } => obj(vec![
+            ("t", tag),
+            ("level", Json::Str(level.name().to_string())),
+            ("msg", Json::Str(msg.clone())),
+        ]),
+        TraceEvent::RunEnd { ns, rounds, sim_total_s } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("rounds", uint(*rounds as u64)),
+            ("sim_total_s", num(*sim_total_s)),
+        ]),
+    }
+}
+
+/// JSONL sink: one event per line behind a buffered writer.
+pub struct JsonlRecorder {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl JsonlRecorder {
+    /// Create (truncate) `path` and write the schema header line.
+    pub fn create(path: &str) -> io::Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        let header = obj(vec![
+            ("schema", Json::Str(TRACE_SCHEMA.to_string())),
+            ("t", Json::Str("header".to_string())),
+        ]);
+        writeln!(w, "{}", header.dump())?;
+        Ok(JsonlRecorder { w: Mutex::new(w) })
+    }
+}
+
+impl Recorder for JsonlRecorder {
+    fn record(&self, ev: &TraceEvent) {
+        let line = encode_event(ev).dump();
+        if let Ok(mut w) = self.w.lock() {
+            let _ = writeln!(w, "{line}");
+        }
+    }
+
+    fn flush(&self) {
+        if let Ok(mut w) = self.w.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+struct ChromeInner {
+    w: BufWriter<File>,
+    first: bool,
+}
+
+/// Chrome trace-event sink. `pid` carries the job namespace, `tid` the
+/// round, so multi-tenant phase waterfalls separate per job.
+pub struct ChromeRecorder {
+    inner: Mutex<ChromeInner>,
+    epoch: Instant,
+}
+
+impl ChromeRecorder {
+    /// Create (truncate) `path` and open the trace-event array.
+    pub fn create(path: &str) -> io::Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        write!(w, "[")?;
+        Ok(ChromeRecorder {
+            inner: Mutex::new(ChromeInner { w, first: true }),
+            epoch: Instant::now(),
+        })
+    }
+
+    fn write_record(&self, record: Json) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let sep = if inner.first { "\n" } else { ",\n" };
+            inner.first = false;
+            let line = record.dump();
+            let _ = write!(inner.w, "{sep}{line}");
+        }
+    }
+}
+
+impl Recorder for ChromeRecorder {
+    fn record(&self, ev: &TraceEvent) {
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let (ns, round) = match ev {
+            TraceEvent::RunStart { ns, .. }
+            | TraceEvent::RunEnd { ns, .. } => (*ns, 0),
+            TraceEvent::RoundStart { ns, round, .. }
+            | TraceEvent::Span { ns, round, .. }
+            | TraceEvent::Client { ns, round, .. }
+            | TraceEvent::RoundClose { ns, round, .. }
+            | TraceEvent::Eval { ns, round, .. } => (*ns, *round),
+            TraceEvent::Tick { .. } | TraceEvent::Log { .. } => (0, 0),
+        };
+        let record = match ev {
+            TraceEvent::Span { phase, wall_ms, sim_s, .. } => {
+                let dur_us = (wall_ms * 1e3).max(0.0) as u64;
+                obj(vec![
+                    ("name", Json::Str(phase.name().to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", uint(ns as u64)),
+                    ("tid", uint(round as u64)),
+                    ("ts", uint(now_us.saturating_sub(dur_us))),
+                    ("dur", uint(dur_us)),
+                    ("args", obj(vec![("sim_s", num(*sim_s))])),
+                ])
+            }
+            other => obj(vec![
+                ("name", Json::Str(other.tag().to_string())),
+                ("ph", Json::Str("i".to_string())),
+                ("s", Json::Str("t".to_string())),
+                ("pid", uint(ns as u64)),
+                ("tid", uint(round as u64)),
+                ("ts", uint(now_us)),
+                ("args", encode_event(other)),
+            ]),
+        };
+        self.write_record(record);
+    }
+
+    fn flush(&self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.w.flush();
+        }
+    }
+}
+
+/// Required keys per event type, used by [`validate_trace_line`].
+fn required_keys(tag: &str) -> Option<&'static [&'static str]> {
+    Some(match tag {
+        "header" => &["schema"],
+        "run_start" => &["ns", "seed", "rounds", "cohort", "mode"],
+        "round_start" => &["ns", "round", "sim_start_s"],
+        "span" => &["ns", "round", "phase", "wall_ms", "sim_s"],
+        "client" => &["ns", "round", "client", "tier", "stage"],
+        "round_close" => &[
+            "ns",
+            "round",
+            "completed",
+            "dropped",
+            "discarded",
+            "deferred",
+            "committees",
+            "close_s",
+            "sim_round_s",
+            "sim_total_s",
+            "down_bytes",
+            "up_bytes",
+        ],
+        "eval" => &["ns", "round", "loss", "metric", "examples", "wall_ms"],
+        "tick" => &["tick", "granted"],
+        "log" => &["level", "msg"],
+        "run_end" => &["ns", "rounds", "sim_total_s"],
+        _ => return None,
+    })
+}
+
+/// Validate one JSONL trace line against schema v1: parseable JSON object,
+/// known `"t"` tag, all required keys present.
+pub fn validate_trace_line(line: &str) -> Result<(), String> {
+    let json = Json::parse(line)?;
+    let Json::Obj(_) = &json else {
+        return Err("trace line is not a JSON object".to_string());
+    };
+    let tag = json
+        .get("t")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| "trace line has no string 't' tag".to_string())?;
+    let keys =
+        required_keys(tag).ok_or_else(|| format!("unknown trace event type '{tag}'"))?;
+    for k in keys {
+        if json.get(k).is_none() {
+            return Err(format!("'{tag}' line is missing required key '{k}'"));
+        }
+    }
+    Ok(())
+}
+
+/// Recursively remove every `wall_ms` field — the only nondeterministic
+/// content of a JSONL trace — so same-seed traces compare byte-identical.
+pub fn strip_nondeterministic(json: &mut Json) {
+    match json {
+        Json::Obj(map) => {
+            map.remove("wall_ms");
+            for v in map.values_mut() {
+                strip_nondeterministic(v);
+            }
+        }
+        Json::Arr(items) => {
+            for v in items.iter_mut() {
+                strip_nondeterministic(v);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare the deterministic content of two JSONL traces. Returns `None`
+/// when they agree, else a description of the first divergence. `log`
+/// lines are skipped (log text may carry host-dependent paths); `wall_ms`
+/// fields are stripped; everything else — every sim-clock timestamp, byte
+/// count, client event, and close decision — must match exactly.
+pub fn diff_traces(a: &str, b: &str) -> Option<String> {
+    let canon = |text: &str| -> Vec<(usize, String)> {
+        text.lines()
+            .enumerate()
+            .filter(|(_, l)| !l.trim().is_empty())
+            .filter_map(|(i, l)| match Json::parse(l) {
+                Ok(mut j) => {
+                    if j.get("t").and_then(|t| t.as_str()) == Some("log") {
+                        None
+                    } else {
+                        strip_nondeterministic(&mut j);
+                        Some((i + 1, j.dump()))
+                    }
+                }
+                Err(e) => Some((i + 1, format!("<unparseable: {e}>"))),
+            })
+            .collect()
+    };
+    let (la, lb) = (canon(a), canon(b));
+    for (ea, eb) in la.iter().zip(lb.iter()) {
+        if ea.1 != eb.1 {
+            return Some(format!(
+                "first divergence at line {} vs line {}:\n  a: {}\n  b: {}",
+                ea.0, eb.0, ea.1, eb.1
+            ));
+        }
+    }
+    if la.len() != lb.len() {
+        return Some(format!(
+            "traces differ in length: {} vs {} deterministic lines",
+            la.len(),
+            lb.len()
+        ));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ClientStage, LogLevel, Phase};
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::RunStart {
+                ns: 0,
+                seed: 7,
+                rounds: 2,
+                cohort: 4,
+                mode: "sync".to_string(),
+            },
+            TraceEvent::RoundStart { ns: 0, round: 1, sim_start_s: 0.0 },
+            TraceEvent::Client {
+                ns: 0,
+                round: 1,
+                client: 3,
+                tier: Some(1),
+                stage: ClientStage::Fetched { down_bytes: 1024, cache_hit_pieces: 2 },
+            },
+            TraceEvent::Span {
+                ns: 0,
+                round: 1,
+                phase: Phase::Fetch,
+                wall_ms: 1.25,
+                sim_s: 3.5,
+            },
+            TraceEvent::RoundClose {
+                ns: 0,
+                round: 1,
+                completed: 4,
+                dropped: 0,
+                discarded: 0,
+                deferred: 0,
+                committees: 1,
+                close_s: 12.0,
+                sim_round_s: 13.0,
+                sim_total_s: 13.0,
+                down_bytes: 4096,
+                up_bytes: 2048,
+            },
+            TraceEvent::Log { level: LogLevel::Info, msg: "hello".to_string() },
+            TraceEvent::RunEnd { ns: 0, rounds: 2, sim_total_s: 26.0 },
+        ]
+    }
+
+    #[test]
+    fn encoded_events_validate_against_the_schema() {
+        for ev in sample_events() {
+            let line = encode_event(&ev).dump();
+            validate_trace_line(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+        assert!(validate_trace_line("{\"t\":\"martian\"}").is_err());
+        assert!(validate_trace_line("{\"no_tag\":1}").is_err());
+        assert!(validate_trace_line("{\"t\":\"span\",\"ns\":0}").is_err());
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        for ev in sample_events() {
+            assert_eq!(encode_event(&ev).dump(), encode_event(&ev).dump());
+        }
+    }
+
+    #[test]
+    fn strip_removes_only_wall_clock_fields() {
+        let mut j = Json::parse(
+            "{\"t\":\"span\",\"wall_ms\":3.25,\"sim_s\":1.5,\"nested\":{\"wall_ms\":1}}",
+        )
+        .unwrap();
+        strip_nondeterministic(&mut j);
+        let dumped = j.dump();
+        assert!(!dumped.contains("wall_ms"));
+        assert!(dumped.contains("sim_s"));
+    }
+
+    #[test]
+    fn diff_ignores_wall_clock_and_log_lines_but_flags_sim_divergence() {
+        let a = "{\"t\":\"span\",\"ns\":0,\"round\":1,\"phase\":\"plan\",\"wall_ms\":1.0,\"sim_s\":2.0}\n{\"t\":\"log\",\"level\":\"info\",\"msg\":\"from host a\"}\n";
+        let b = "{\"t\":\"span\",\"ns\":0,\"round\":1,\"phase\":\"plan\",\"wall_ms\":9.0,\"sim_s\":2.0}\n{\"t\":\"log\",\"level\":\"info\",\"msg\":\"from host b\"}\n";
+        assert_eq!(diff_traces(a, b), None);
+        let c = b.replace("\"sim_s\":2.0", "\"sim_s\":3.0");
+        let msg = diff_traces(a, &c).expect("sim divergence must be flagged");
+        assert!(msg.contains("divergence"));
+        let d = format!("{a}{{\"t\":\"run_end\",\"ns\":0,\"rounds\":1,\"sim_total_s\":2.0}}\n");
+        assert!(diff_traces(a, &d).unwrap().contains("length"));
+    }
+
+    #[test]
+    fn jsonl_recorder_writes_header_and_events() {
+        let path = std::env::temp_dir().join("fedselect_obs_trace_unit.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let rec = JsonlRecorder::create(&path).unwrap();
+            for ev in sample_events() {
+                rec.record(&ev);
+            }
+            rec.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), sample_events().len() + 1);
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("schema").and_then(|s| s.as_str()), Some(TRACE_SCHEMA));
+        for line in &lines {
+            validate_trace_line(line).unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chrome_recorder_emits_a_trace_event_array() {
+        let path = std::env::temp_dir().join("fedselect_obs_trace_unit.chrome.json");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let rec = ChromeRecorder::create(&path).unwrap();
+            for ev in sample_events() {
+                rec.record(&ev);
+            }
+            rec.flush();
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('['));
+        // the array is intentionally unterminated (crash-safe); close it
+        // the way chrome://tracing's parser effectively does
+        text.push(']');
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.as_arr().unwrap();
+        assert_eq!(events.len(), sample_events().len());
+        assert_eq!(
+            events[3].get("ph").and_then(|p| p.as_str()),
+            Some("X"),
+            "span events are complete events"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,7 +1,8 @@
 //! Simulated-systems clock: turns the coordinator's per-client byte ledgers
 //! into round wall-time.
 //!
-//! The real coordinator measures host wall time (`RoundRecord::wall_ms`),
+//! The real coordinator measures host wall time (`RoundRecord::wall_ms`,
+//! the sum of the recorder's plan→close phase spans),
 //! which says nothing about deployed round latency: there, a round ends when
 //! the server decides it has heard from enough clients. The [`SimClock`]
 //! models per-client `download + compute + upload` time from the client's

@@ -43,10 +43,12 @@ pub use arbiter::{ArbiterPolicy, FleetArbiter};
 pub use registry::{JobRegistry, JobSpec};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::cache::{CacheShare, FleetCaches};
 use crate::coordinator::{EvalRecord, RoundRecord, TrainReport, Trainer};
 use crate::error::{Error, Result};
+use crate::obs::{NullRecorder, Recorder, TraceEvent};
 use crate::scheduler::ROUND_OVERHEAD_S;
 
 /// One tenant's live state inside the coordinator.
@@ -107,6 +109,11 @@ pub struct Coordinator {
     tier_names: Vec<String>,
     total_sim_s: f64,
     busy_device_s: f64,
+    /// Trace sink for arbiter-level events; job trainers hold their own
+    /// clone and tag events with their namespace (see [`set_recorder`]).
+    ///
+    /// [`set_recorder`]: Coordinator::set_recorder
+    recorder: Arc<dyn Recorder>,
 }
 
 impl Coordinator {
@@ -201,7 +208,19 @@ impl Coordinator {
             tier_names,
             total_sim_s: 0.0,
             busy_device_s: 0.0,
+            recorder: Arc::new(NullRecorder),
         })
+    }
+
+    /// Install one trace sink for the whole coordinator: arbiter ticks are
+    /// recorded here, and every job's trainer gets a clone so its round
+    /// events land in the same trace (distinguished by the `ns` tag each
+    /// trainer stamps from its job id).
+    pub fn set_recorder(&mut self, recorder: Arc<dyn Recorder>) {
+        for job in &mut self.jobs {
+            job.trainer.set_recorder(recorder.clone());
+        }
+        self.recorder = recorder;
     }
 
     pub fn num_jobs(&self) -> usize {
@@ -238,6 +257,12 @@ impl Coordinator {
                 self.arbiter.policy(),
                 self.fleet_size
             )));
+        }
+        if self.recorder.enabled() {
+            self.recorder.record(&TraceEvent::Tick {
+                tick: self.arbiter.ticks(),
+                granted: granted.iter().map(|&ji| self.jobs[ji].spec.id).collect(),
+            });
         }
         // fair-share allows overlapping grants (each job's planner sees
         // exactly its isolated-run exclusion set — the byte-identity path);

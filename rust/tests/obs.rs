@@ -1,0 +1,198 @@
+//! Observability contracts, end to end through the trainer:
+//!
+//! 1. telemetry is **trajectory-neutral**: a run tracing every event to a
+//!    JSONL sink is byte-identical — model bits and every deterministic
+//!    `RoundRecord` field (host `wall_ms` is the only exclusion) — to the
+//!    default `NullRecorder` run, at fetch thread counts {1, 4};
+//! 2. the emitted trace validates line by line against the versioned
+//!    schema (`fedselect-trace-v1`);
+//! 3. two same-seed traces agree on their sim-time content
+//!    (`diff_traces` → clean), and an injected divergence is flagged;
+//! 4. the fleet summary rendered from the trainer's live metrics registry
+//!    is byte-identical to the ledger-walking path over the report.
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{RoundRecord, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::metrics::{fleet_summary, fleet_summary_from, keys};
+use fedselect::model::ParamStore;
+use fedselect::obs::trace::{diff_traces, validate_trace_line, TRACE_SCHEMA};
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+
+/// Small tiered workload exercising every event family: hazards (dropped),
+/// cache (fetched with hits), staleness-fair cycling, periodic eval.
+fn obs_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(512, 64);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+    cfg.rounds = 6;
+    cfg.cohort = 6;
+    cfg.eval.every = 3;
+    cfg.eval.max_examples = 128;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::StalenessFair;
+    cfg.dropout_rate = 0.3;
+    cfg.cache = true;
+    cfg.seed = seed;
+    cfg
+}
+
+fn tmp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("fedselect_obs_{name}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .to_string()
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+/// Every `RoundRecord` field except the host-clock `wall_ms`.
+fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
+    assert_eq!(a.round, b.round, "{label}");
+    assert_eq!(a.completed, b.completed, "{label}");
+    assert_eq!(a.dropped, b.dropped, "{label}");
+    assert_eq!(a.mode, b.mode, "{label}");
+    assert_eq!(a.discarded_clients, b.discarded_clients, "{label}");
+    assert_eq!(a.mean_staleness.to_bits(), b.mean_staleness.to_bits(), "{label}");
+    assert_eq!(a.committees, b.committees, "{label}");
+    assert_eq!(
+        a.mean_committee_size.to_bits(),
+        b.mean_committee_size.to_bits(),
+        "{label}"
+    );
+    assert_eq!(a.min_committee_size, b.min_committee_size, "{label}");
+    // the whole comm ledger, including the *modeled* (deterministic)
+    // service_us latency
+    assert_eq!(a.comm, b.comm, "{label}");
+    assert_eq!(a.up_bytes, b.up_bytes, "{label}");
+    assert_eq!(a.max_client_mem, b.max_client_mem, "{label}");
+    assert_eq!(a.sim_round_s.to_bits(), b.sim_round_s.to_bits(), "{label}");
+    assert_eq!(a.tier_completed, b.tier_completed, "{label}");
+    assert_eq!(a.tier_dropped, b.tier_dropped, "{label}");
+    assert_eq!(a.tier_discarded, b.tier_discarded, "{label}");
+    assert_eq!(a.tier_down_bytes, b.tier_down_bytes, "{label}");
+    assert_eq!(a.tier_cache_hits, b.tier_cache_hits, "{label}");
+    assert_eq!(a.tier_cache_lookups, b.tier_cache_lookups, "{label}");
+    assert_eq!(a.cache_evictions, b.cache_evictions, "{label}");
+    assert_eq!(a.cache_stale_refreshes, b.cache_stale_refreshes, "{label}");
+    assert_eq!(a.deferrals, b.deferrals, "{label}");
+}
+
+#[test]
+fn tracing_is_byte_identical_to_null_recorder() {
+    for threads in [1usize, 4] {
+        let label = format!("threads={threads}");
+        let mut off_cfg = obs_cfg(5050);
+        off_cfg.fetch_threads = threads;
+        let mut on_cfg = off_cfg.clone();
+        let path = tmp_path(&format!("identity_{threads}"));
+        on_cfg.obs.trace_out = Some(path.clone());
+
+        let mut t_off = Trainer::new(off_cfg).unwrap();
+        let mut t_on = Trainer::new(on_cfg).unwrap();
+        assert!(!t_off.recorder().enabled(), "{label}: default is the null sink");
+        assert!(t_on.recorder().enabled(), "{label}: tracing sink installed");
+
+        let off = t_off.run().unwrap();
+        let on = t_on.run().unwrap();
+        assert_eq!(off.rounds.len(), on.rounds.len(), "{label}");
+        for (a, b) in off.rounds.iter().zip(on.rounds.iter()) {
+            assert_records_identical(a, b, &format!("{label} round {}", a.round));
+        }
+        assert_eq!(off.evals.len(), on.evals.len(), "{label}");
+        for (a, b) in off.evals.iter().zip(on.evals.iter()) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} eval {}", a.round);
+            assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{label} eval {}", a.round);
+        }
+        assert_stores_bit_identical(t_off.store(), t_on.store(), &label);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn trace_validates_against_schema_and_covers_event_families() {
+    let path = tmp_path("schema");
+    let mut cfg = obs_cfg(6060);
+    cfg.obs.trace_out = Some(path.clone());
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr.run().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(lines[0].contains(TRACE_SCHEMA), "header carries the schema tag");
+    for (i, line) in lines.iter().enumerate() {
+        validate_trace_line(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+    }
+    let count = |tag: &str| {
+        lines
+            .iter()
+            .filter(|l| l.contains(&format!("\"t\":\"{tag}\"")))
+            .count()
+    };
+    assert_eq!(count("run_start"), 1);
+    assert_eq!(count("run_end"), 1);
+    assert_eq!(count("round_close"), report.rounds.len());
+    // 4 phase spans per round + 1 eval span per evaluation
+    assert_eq!(count("span"), 4 * report.rounds.len() + report.evals.len());
+    assert_eq!(count("eval"), report.evals.len());
+    assert!(count("client") > 0, "client lifecycle events present");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn same_seed_traces_diff_clean_and_divergence_is_flagged() {
+    let (path_a, path_b) = (tmp_path("diff_a"), tmp_path("diff_b"));
+    for path in [&path_a, &path_b] {
+        let mut cfg = obs_cfg(7070);
+        cfg.obs.trace_out = Some(path.clone());
+        Trainer::new(cfg).unwrap().run().unwrap();
+    }
+    let a = std::fs::read_to_string(&path_a).unwrap();
+    let b = std::fs::read_to_string(&path_b).unwrap();
+    // the raw bytes differ (wall_ms is host noise) but the sim-time
+    // content must not
+    assert!(diff_traces(&a, &b).is_none(), "same-seed traces diverged");
+
+    // inject a sim-field divergence: prepend a digit to a sim_round_s
+    // value (always changes the number, stays valid JSON)
+    let needle = "\"sim_round_s\":";
+    let pos = b.find(needle).expect("round_close present") + needle.len();
+    let mut mutated = b.clone();
+    mutated.insert(pos, '9');
+    let msg = diff_traces(&a, &mutated).expect("divergence must be flagged");
+    assert!(msg.contains("line"), "diff names the diverging line: {msg}");
+
+    std::fs::remove_file(&path_a).unwrap();
+    std::fs::remove_file(&path_b).unwrap();
+}
+
+#[test]
+fn live_registry_summary_matches_ledger_walking_path() {
+    let mut tr = Trainer::new(obs_cfg(8080)).unwrap();
+    let report = tr.run().unwrap();
+    let fleet = tr.scheduler().fleet();
+    let from_ledgers = fleet_summary(fleet, &report.rounds);
+    let from_registry = fleet_summary_from(fleet, tr.metrics());
+    assert_eq!(from_ledgers.to_pretty(), from_registry.to_pretty());
+    assert_eq!(tr.metrics().counter(keys::ROUNDS) as usize, report.rounds.len());
+    // per-tier fetch-latency histograms saw every completion event: under
+    // the sync barrier that is exactly the merged (non-dropped) clients
+    let observed: u64 = (0..fleet.num_tiers())
+        .filter_map(|t| tr.metrics().hist(&fedselect::coordinator::fetch_latency_key(t)))
+        .map(|h| h.count())
+        .sum();
+    let expected: usize = report.rounds.iter().map(|r| r.completed).sum();
+    assert_eq!(observed as usize, expected);
+}
