@@ -1,0 +1,92 @@
+//! Million-client fleet bench: `plan_round` throughput and resident
+//! scheduler state across fleet sizes 10k / 1M / 10M, for every selection
+//! policy, on the lazy tiered fleet. Emits `BENCH_fleet.json` (schema
+//! `fedselect-bench-v1`) with planned clients/s and resident MB per size —
+//! the repo's fleet-scale perf trajectory.
+//!
+//! Quick mode (`--quick` / BENCH_QUICK) drops the 10M tier so the CI smoke
+//! stays fast; the derived metrics keep their names, so `perf_diff`
+//! compares like against like.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::config::TrainConfig;
+use fedselect::scheduler::{FleetKind, SchedPolicy, Scheduler, SliceGeometry};
+use fedselect::tensor::rng::Rng;
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let sizes: &[usize] = if b.quick {
+        &[10_000, 1_000_000]
+    } else {
+        &[10_000, 1_000_000, 10_000_000]
+    };
+    let geom = SliceGeometry {
+        base_ms: vec![512],
+        per_key_floats: vec![64],
+        broadcast_floats: 64,
+        server_floats: 4096 * 64 + 64,
+    };
+    let plan_rounds = if b.quick { 5 } else { 20 };
+
+    for &n in sizes {
+        let label = if n >= 1_000_000 {
+            format!("{}m", n / 1_000_000)
+        } else {
+            format!("{}k", n / 1_000)
+        };
+        for policy in SchedPolicy::ALL {
+            let mut cfg = TrainConfig::logreg_default(256, 64);
+            cfg.fleet = FleetKind::Tiered3;
+            cfg.fleet_size = n;
+            cfg.sched_policy = policy;
+            cfg.cohort = 100;
+            cfg.mem_cap_frac = 0.25;
+            cfg.seed = 7;
+            let mut sched = Scheduler::new(&cfg, 100).unwrap();
+            let mut rng = Rng::new(cfg.seed, 0x5CA1E);
+            let name = format!("plan/{label}/{policy}");
+            let t0 = Instant::now();
+            for round in 1..=plan_rounds {
+                let plan = sched.plan_round(round, cfg.cohort, &geom, &mut rng, &[]);
+                std::hint::black_box(plan.cohort.len());
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let clients_per_s = n as f64 * plan_rounds as f64 / secs;
+            let plan_ms = 1e3 * secs / plan_rounds as f64;
+            let resident_mb = sched.resident_state_bytes() as f64 / 1e6;
+            println!(
+                "{name}: plan={plan_ms:.3}ms  {clients_per_s:.3e} clients/s  \
+                 touched={}  resident={resident_mb:.3}MB",
+                sched.clients_touched()
+            );
+            b.metric(&name, "plan_ms", plan_ms);
+            b.metric(&name, "clients_per_s", clients_per_s);
+            b.metric(&name, "resident_mb", resident_mb);
+            b.metric(&name, "clients_touched", sched.clients_touched() as f64);
+        }
+
+        // wall-time distribution for the uniform policy (the floor every
+        // other policy builds on)
+        let mut cfg = TrainConfig::logreg_default(256, 64);
+        cfg.fleet = FleetKind::Tiered3;
+        cfg.fleet_size = n;
+        cfg.sched_policy = SchedPolicy::Uniform;
+        cfg.cohort = 100;
+        cfg.mem_cap_frac = 0.25;
+        cfg.seed = 7;
+        let mut sched = Scheduler::new(&cfg, 100).unwrap();
+        let mut rng = Rng::new(cfg.seed, 0x5CA1E);
+        let mut round = 0usize;
+        b.run(&format!("plan_wall/{label}/uniform"), 10, || {
+            round += 1;
+            let plan = sched.plan_round(round, 100, &geom, &mut rng, &[]);
+            std::hint::black_box(plan.cohort.len());
+        });
+    }
+
+    b.write_json("BENCH_fleet.json");
+}

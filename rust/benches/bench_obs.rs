@@ -82,6 +82,12 @@ fn pump_round(rec: &dyn Recorder, round: usize) {
         sim_total_s: round as f64 * 1.5,
         down_bytes: 4096,
         up_bytes: 2048,
+        eligible: 100,
+        arrivals: 0,
+        departures: 0,
+        outage_excluded: 0,
+        clients_touched: 10,
+        resident_bytes: 1024,
     });
 }
 

@@ -242,14 +242,36 @@ impl ClientCache {
     }
 }
 
-/// One [`ClientCache`] per train client, plus the shared policy knobs —
-/// owned by the scheduler's fleet state (the cache is device state, like
-/// the profile it is budgeted from).
+/// Where a client's cache budget comes from when its cache is first
+/// materialized.
+///
+/// The eager design carried a `Vec<u64>` of budgets sized to the fleet —
+/// O(fleet) bytes before a single client was ever selected. [`Derived`]
+/// replaces the table with its closed form (device `mem_frac` × server
+/// bytes × the configured cache fraction), computed lazily from the fleet's
+/// pure profile function, so a 10M-client fleet carries no budget table at
+/// all. [`Table`] remains for explicit per-client budgets (tenancy pooling,
+/// tests).
+#[derive(Clone, Debug)]
+pub enum BudgetSource {
+    /// Explicit per-client budgets, indexed by client id.
+    Table(Vec<u64>),
+    /// `budget(ci) = profile(ci).mem_bytes(server_bytes) × frac`, resolved
+    /// by the scheduler (which owns the fleet) at `ensure_cache` time.
+    Derived { server_bytes: usize, frac: f64 },
+}
+
+/// Budgeted piece caches for the clients that have ever fetched, plus the
+/// shared policy knobs — owned by the scheduler's fleet state (the cache is
+/// device state, like the profile it is budgeted from). Caches materialize
+/// on first use ([`FleetCaches::ensure`]), so resident memory is
+/// O(clients ever selected), never O(fleet).
 #[derive(Clone, Debug)]
 pub struct FleetCaches {
     policy: EvictPolicy,
     max_stale_rounds: usize,
-    caches: Vec<ClientCache>,
+    budget_source: BudgetSource,
+    caches: HashMap<usize, ClientCache>,
 }
 
 /// Enumerate the cache entries one client round touches, in deterministic
@@ -272,13 +294,31 @@ fn entries_for<'a>(
 }
 
 impl FleetCaches {
-    /// One cache per train client; `budgets` come from the device profiles
-    /// (`mem_frac × server bytes × cache_budget_frac`).
+    /// Explicit per-client budgets (indexed by client id); a client's cache
+    /// still materializes only on first use.
     pub fn new(policy: EvictPolicy, max_stale_rounds: usize, budgets: Vec<u64>) -> Self {
         FleetCaches {
             policy,
             max_stale_rounds,
-            caches: budgets.into_iter().map(ClientCache::new).collect(),
+            budget_source: BudgetSource::Table(budgets),
+            caches: HashMap::new(),
+        }
+    }
+
+    /// Budgets derived lazily from the device profiles:
+    /// `mem_bytes(server_bytes) × frac` per client, resolved by the
+    /// scheduler at [`FleetCaches::ensure`] time — no per-fleet table.
+    pub fn derived(
+        policy: EvictPolicy,
+        max_stale_rounds: usize,
+        server_bytes: usize,
+        frac: f64,
+    ) -> Self {
+        FleetCaches {
+            policy,
+            max_stale_rounds,
+            budget_source: BudgetSource::Derived { server_bytes, frac },
+            caches: HashMap::new(),
         }
     }
 
@@ -290,15 +330,57 @@ impl FleetCaches {
         self.max_stale_rounds
     }
 
-    pub fn cache(&self, client: usize) -> &ClientCache {
-        &self.caches[client]
+    pub fn budget_source(&self) -> &BudgetSource {
+        &self.budget_source
     }
 
-    /// Per-client byte budgets (device order) — used by the multi-tenant
-    /// coordinator to derive a shared pool's budget (per-device max across
-    /// jobs).
+    /// The client's cache, if it has ever been materialized.
+    pub fn cache(&self, client: usize) -> Option<&ClientCache> {
+        self.caches.get(&client)
+    }
+
+    /// Whether `client`'s cache has been materialized.
+    pub fn has_cache(&self, client: usize) -> bool {
+        self.caches.contains_key(&client)
+    }
+
+    /// Number of materialized caches (≤ clients ever selected).
+    pub fn clients_cached(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Approximate resident bytes of the cache *metadata* store itself
+    /// (entries × slot size, not the simulated piece bytes) — the
+    /// `fleet.resident_bytes` gauge's cache component.
+    pub fn resident_bytes(&self) -> u64 {
+        let entry_slot = std::mem::size_of::<(u32, PieceId)>() + std::mem::size_of::<Entry>();
+        self.caches
+            .values()
+            .map(|c| {
+                (std::mem::size_of::<usize>()
+                    + std::mem::size_of::<ClientCache>()
+                    + c.entries.len() * entry_slot) as u64
+            })
+            .sum()
+    }
+
+    /// Materialize `client`'s cache at `budget` if absent (no-op, budget
+    /// untouched, when present). The scheduler calls this for every cohort
+    /// member before the round's cache traffic.
+    pub fn ensure(&mut self, client: usize, budget: u64) {
+        self.caches
+            .entry(client)
+            .or_insert_with(|| ClientCache::new(budget));
+    }
+
+    /// The budget table, for [`BudgetSource::Table`] fleets (tenancy pools
+    /// its shared budgets through this). Empty for derived budgets — those
+    /// are resolved per client via the scheduler's fleet.
     pub fn budgets(&self) -> Vec<u64> {
-        self.caches.iter().map(ClientCache::budget).collect()
+        match &self.budget_source {
+            BudgetSource::Table(t) => t.clone(),
+            BudgetSource::Derived { .. } => Vec::new(),
+        }
     }
 
     /// Scale every client's budget by `frac` (clamped at ≥ 0) — the
@@ -307,8 +389,17 @@ impl FleetCaches {
     /// shrinking an occupied cache does not evict retroactively (the next
     /// commit's inserts will).
     pub fn scale_budgets(&mut self, frac: f64) {
-        for c in &mut self.caches {
-            c.budget = (c.budget as f64 * frac.max(0.0)) as u64;
+        let f = frac.max(0.0);
+        match &mut self.budget_source {
+            BudgetSource::Table(t) => {
+                for b in t.iter_mut() {
+                    *b = (*b as f64 * f) as u64;
+                }
+            }
+            BudgetSource::Derived { frac, .. } => *frac *= f,
+        }
+        for c in self.caches.values_mut() {
+            c.budget = (c.budget as f64 * f) as u64;
         }
     }
 
@@ -324,7 +415,11 @@ impl FleetCaches {
         versions: &VersionClock,
     ) -> DeltaPlan {
         let ns = versions.ns();
-        let cache = &self.caches[client];
+        // a never-materialized cache classifies everything as a miss: the
+        // empty plan is byte-identical to planning against a fresh cache
+        let Some(cache) = self.caches.get(&client) else {
+            return DeltaPlan::default();
+        };
         let mut plan = DeltaPlan::default();
         for (id, _) in entries_for(geom, keys) {
             if cache.classify(ns, id, round, self.max_stale_rounds, versions) == Lookup::Fresh {
@@ -364,7 +459,18 @@ impl FleetCaches {
         let policy = self.policy;
         let max_stale = self.max_stale_rounds;
         let ns = versions.ns();
-        let cache = &mut self.caches[client];
+        if !self.caches.contains_key(&client) {
+            // table budgets resolve here; derived budgets need the fleet,
+            // so the scheduler must have called `ensure_cache` first
+            let budget = match &self.budget_source {
+                BudgetSource::Table(t) => t.get(client).copied().unwrap_or(0),
+                BudgetSource::Derived { .. } => {
+                    panic!("derived budgets: ensure() must precede commit for client {client}")
+                }
+            };
+            self.ensure(client, budget);
+        }
+        let cache = self.caches.get_mut(&client).expect("ensured above");
         let mut st = CommitStats::default();
         let classified: Vec<(PieceId, u64, Lookup)> = entries_for(geom, keys)
             .map(|(id, bytes)| (id, bytes, cache.classify(ns, id, round, max_stale, versions)))
@@ -480,17 +586,17 @@ mod tests {
         let g = geom();
         let vc = clock();
         fc.commit(0, 1, &[vec![1u32, 2]], &g, &vc);
-        assert_eq!(fc.cache(0).len(), 3);
-        assert_eq!(fc.cache(0).used_bytes(), 600);
+        assert_eq!(fc.cache(0).unwrap().len(), 3);
+        assert_eq!(fc.cache(0).unwrap().used_bytes(), 600);
         // key 1 is re-used in round 2; key 3 arrives and must evict key 2
         // (LRU: last used round 1; the seg + key 1 were used in round 2)
         let s = fc.commit(0, 2, &[vec![1u32, 3]], &g, &vc);
         assert_eq!(s.hits, 2);
         assert_eq!(s.evictions, 1);
-        assert!(fc.cache(0).contains((0, 1)));
-        assert!(fc.cache(0).contains((0, 3)));
-        assert!(!fc.cache(0).contains((0, 2)));
-        assert!(fc.cache(0).used_bytes() <= 600);
+        assert!(fc.cache(0).unwrap().contains((0, 1)));
+        assert!(fc.cache(0).unwrap().contains((0, 3)));
+        assert!(!fc.cache(0).unwrap().contains((0, 2)));
+        assert!(fc.cache(0).unwrap().used_bytes() <= 600);
     }
 
     #[test]
@@ -526,7 +632,7 @@ mod tests {
         let vc = clock();
         let s = fc.commit(0, 1, &[vec![1u32]], &g, &vc);
         assert_eq!(s.evictions, 0);
-        assert_eq!(fc.cache(0).len(), 0, "200 B pieces cannot fit a 100 B budget");
+        assert_eq!(fc.cache(0).unwrap().len(), 0, "200 B pieces cannot fit a 100 B budget");
     }
 
     #[test]
@@ -540,10 +646,10 @@ mod tests {
         let keys = vec![vec![1u32, 2]];
         fc.commit(0, 1, &keys, &g, &vc_a);
         fc.commit(0, 1, &keys, &g, &vc_b);
-        assert!(fc.cache(0).contains_ns(0, (0, 1)));
-        assert!(fc.cache(0).contains_ns(1, (0, 1)));
-        assert_eq!(fc.cache(0).len(), 6, "both jobs' entries coexist");
-        assert_eq!(fc.cache(0).used_bytes(), 2 * 600, "one pooled budget");
+        assert!(fc.cache(0).unwrap().contains_ns(0, (0, 1)));
+        assert!(fc.cache(0).unwrap().contains_ns(1, (0, 1)));
+        assert_eq!(fc.cache(0).unwrap().len(), 6, "both jobs' entries coexist");
+        assert_eq!(fc.cache(0).unwrap().used_bytes(), 2 * 600, "one pooled budget");
         // job B's close invalidates only job B's copies
         let spec = ModelArch::logreg(8).select_spec();
         let mut touched = TouchedKeys::new(1);
@@ -568,6 +674,36 @@ mod tests {
     }
 
     #[test]
+    fn caches_materialize_only_for_committing_clients() {
+        let mut fc = FleetCaches::new(EvictPolicy::Lru, 0, vec![10_000; 64]);
+        assert_eq!(fc.clients_cached(), 0);
+        assert_eq!(fc.resident_bytes(), 0);
+        let g = geom();
+        let vc = clock();
+        fc.commit(3, 1, &[vec![1u32]], &g, &vc);
+        assert_eq!(fc.clients_cached(), 1);
+        assert!(fc.has_cache(3) && !fc.has_cache(0));
+        assert!(fc.resident_bytes() > 0);
+        assert!(fc.cache(5).is_none());
+        // planning for an untouched client is the all-miss (empty) plan
+        assert!(fc.plan_for(5, 1, &[vec![1u32]], &g, &vc).is_empty());
+    }
+
+    #[test]
+    fn derived_budgets_resolve_at_ensure_time() {
+        let mut fc = FleetCaches::derived(EvictPolicy::Lru, 0, 4000, 0.5);
+        fc.ensure(2, 600);
+        assert_eq!(fc.cache(2).unwrap().budget(), 600);
+        assert!(fc.budgets().is_empty(), "derived budgets have no table");
+        fc.scale_budgets(0.5);
+        assert_eq!(fc.cache(2).unwrap().budget(), 300);
+        match fc.budget_source() {
+            BudgetSource::Derived { frac, .. } => assert!((*frac - 0.25).abs() < 1e-12),
+            BudgetSource::Table(_) => panic!("derived source expected"),
+        }
+    }
+
+    #[test]
     fn version_distance_evicts_the_most_lagging_entry() {
         let mut fc = FleetCaches::new(EvictPolicy::VersionDistance, 0, vec![600]);
         let g = geom();
@@ -580,7 +716,7 @@ mod tests {
         vc.bump(1, &touched, &spec);
         // key 3 arrives; the victim must be the lagging key 2, not key 1
         fc.commit(0, 2, &[vec![3u32]], &g, &vc);
-        assert!(fc.cache(0).contains((0, 1)));
-        assert!(!fc.cache(0).contains((0, 2)));
+        assert!(fc.cache(0).unwrap().contains((0, 1)));
+        assert!(!fc.cache(0).unwrap().contains((0, 2)));
     }
 }

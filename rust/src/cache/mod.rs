@@ -65,7 +65,7 @@
 pub mod client;
 pub mod version;
 
-pub use client::{ClientCache, CommitStats, FleetCaches};
+pub use client::{BudgetSource, ClientCache, CommitStats, FleetCaches};
 pub use version::VersionClock;
 
 /// Pseudo-keyspace id addressing segment-granularity cache entries:

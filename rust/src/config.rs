@@ -8,6 +8,7 @@ use crate::coordinator::AggregationMode;
 use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
 use crate::error::{Error, Result};
 use crate::fedselect::{KeyPolicy, SliceImpl};
+use crate::fleet::ScenarioConfig;
 use crate::model::ModelArch;
 use crate::obs::{ObsConfig, TraceFormat};
 use crate::optim::ServerOpt;
@@ -143,6 +144,16 @@ pub struct TrainConfig {
     /// hazard floor (a `flaky-edge`-style hazard on every profile). Prefer
     /// `fleet: FleetKind::FlakyEdge`.
     pub dropout_rate: f32,
+    /// Simulated fleet size; `0` (the default) sizes the fleet to the
+    /// dataset's train clients — the legacy, byte-identical path. Larger
+    /// fleets select over the full population (profiles are lazy, so 10M
+    /// clients cost nothing until touched) and map each fleet id onto a
+    /// dataset client modulo the train count at fetch time.
+    pub fleet_size: usize,
+    /// Churn / regional-outage / availability-wave scenario processes plus
+    /// the optional sim-time horizon. All off by default — the bit-exact
+    /// legacy eligibility path.
+    pub scenario: ScenarioConfig,
     pub eval: EvalConfig,
     pub engine: EngineKind,
     pub seed: u64,
@@ -179,6 +190,8 @@ impl TrainConfig {
             sched_policy: SchedPolicy::Uniform,
             mem_cap_frac: 0.25,
             dropout_rate: 0.0,
+            fleet_size: 0,
+            scenario: ScenarioConfig::default(),
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
             seed: 7,
@@ -212,6 +225,8 @@ impl TrainConfig {
             sched_policy: SchedPolicy::Uniform,
             mem_cap_frac: 0.25,
             dropout_rate: 0.0,
+            fleet_size: 0,
+            scenario: ScenarioConfig::default(),
             eval: EvalConfig::default(),
             engine: EngineKind::Native,
             seed: 11,
@@ -245,6 +260,8 @@ impl TrainConfig {
             sched_policy: SchedPolicy::Uniform,
             mem_cap_frac: 0.25,
             dropout_rate: 0.0,
+            fleet_size: 0,
+            scenario: ScenarioConfig::default(),
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
             seed: 13,
@@ -286,6 +303,8 @@ impl TrainConfig {
             sched_policy: SchedPolicy::Uniform,
             mem_cap_frac: 0.25,
             dropout_rate: 0.0,
+            fleet_size: 0,
+            scenario: ScenarioConfig::default(),
             eval: EvalConfig::default(),
             engine: EngineKind::pjrt_default(),
             seed: 23,
@@ -435,6 +454,13 @@ impl TrainConfig {
         if !(0.0..=1.0).contains(&self.mem_cap_frac) || self.mem_cap_frac == 0.0 {
             return Err(Error::Config("mem_cap_frac must be in (0, 1]".into()));
         }
+        if self.fleet_size > 0 && self.fleet_size < self.cohort {
+            return Err(Error::Config(format!(
+                "--fleet-size {} is smaller than the cohort {}",
+                self.fleet_size, self.cohort
+            )));
+        }
+        self.scenario.validate()?;
         if self.sched_policy == SchedPolicy::MemoryCapped {
             // AllKeys (BROADCAST identity) and FixedPerRound (one shared
             // cohort-wide slice) have no per-client budget to clamp —

@@ -133,6 +133,23 @@ pub struct RoundRecord {
     /// `--committee-defer` because their staleness class was below the
     /// `--min-committee` floor (0 unless the defer variant is on).
     pub deferrals: usize,
+    /// Clients eligible for selection this round: the fleet minus scenario
+    /// ineligibility (churn/outage/wave) minus the in-flight exclusion set.
+    pub eligible: usize,
+    /// Clients that churned into the population since the last plan (0
+    /// without `--churn`).
+    pub arrivals: usize,
+    /// Clients that churned out of the population since the last plan.
+    pub departures: usize,
+    /// Clients an active regional outage excluded this round (0 without
+    /// `--outage`).
+    pub outage_excluded: usize,
+    /// Clients with resident scheduler state after this round (ever
+    /// selected) — the fleet-sparsity gauge.
+    pub clients_touched: usize,
+    /// Approximate resident bytes of all per-client fleet state
+    /// (touched-state entries + materialized caches + trace rows).
+    pub resident_bytes: u64,
 }
 
 /// Periodic evaluation snapshot.
@@ -321,17 +338,13 @@ impl Trainer {
                 cached_segs,
                 keyed: !broadcast_impl,
             };
-            let server_bytes = store.bytes();
-            let budgets: Vec<u64> = scheduler
-                .fleet()
-                .profiles
-                .iter()
-                .map(|p| (p.mem_bytes(server_bytes) as f64 * cfg.cache_budget_frac) as u64)
-                .collect();
-            scheduler.install_caches(FleetCaches::new(
+            // budgets are derived lazily per client (device memory cap ×
+            // cache_budget_frac) — no O(fleet) budget table
+            scheduler.install_caches(FleetCaches::derived(
                 cfg.cache_evict,
                 cfg.max_stale_rounds,
-                budgets,
+                store.bytes(),
+                cfg.cache_budget_frac,
             ));
             (
                 Some(VersionClock::new(&sizes, store.segments.len())),
@@ -511,7 +524,7 @@ impl Trainer {
         let cohort = &plan.cohort;
         let slot_tiers: Vec<usize> = cohort
             .iter()
-            .map(|&ci| self.scheduler.fleet().profiles[ci].tier)
+            .map(|&ci| self.scheduler.fleet().profile(ci).tier)
             .collect();
         let ntiers = self.scheduler.fleet().num_tiers();
         if obs_on {
@@ -540,11 +553,23 @@ impl Trainer {
         // Phase 1 — keys: fork each client's RNG and draw its select keys
         // (re-budgeted per client when the plan carries key budgets), in
         // cohort order (phases 0-1 are the only consumers of round_rng).
+        // An oversized fleet (`--fleet-size` > dataset clients) maps fleet
+        // ids onto dataset clients modulo n_train and keys the client RNG
+        // by the fleet id, so two fleet clients sharing data still draw
+        // independent keys/batches; at the legacy size both reduce to the
+        // pre-fleet behavior bit for bit.
+        let n_train = self.dataset.train.len();
+        let oversized = self.scheduler.fleet().len() > n_train;
         let mut client_keys: Vec<ClientKeys> = Vec::with_capacity(cohort.len());
         let mut client_rngs: Vec<Rng> = Vec::with_capacity(cohort.len());
         for (slot, &ci) in cohort.iter().enumerate() {
-            let client = &self.dataset.train[ci];
-            let mut crng = round_rng.fork(client.id ^ 0xC11E47);
+            let client = &self.dataset.train[ci % n_train];
+            let fork_salt = if oversized {
+                ci as u64 ^ 0xC11E47
+            } else {
+                client.id ^ 0xC11E47
+            };
+            let mut crng = round_rng.fork(fork_salt);
             let keys: ClientKeys = self
                 .cfg
                 .policies
@@ -609,6 +634,12 @@ impl Trainer {
         let mut cache_stats = CommitStats::default();
         if let Some(versions) = self.versions.as_ref() {
             let cgeom = self.cache_geom.as_ref().expect("cache geometry");
+            // materialize each cohort member's cache first (derived budgets
+            // resolve from the device profile) — caches exist only for
+            // clients that ever reached a commit
+            for &ci in cohort.iter() {
+                self.scheduler.ensure_cache(ci);
+            }
             let caches = self.scheduler.caches_mut().expect("caches installed");
             for (slot, &ci) in cohort.iter().enumerate() {
                 let st = caches.commit(ci, self.round as u64, &client_keys[slot], cgeom, versions);
@@ -637,7 +668,7 @@ impl Trainer {
         let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
         let mut work: Vec<Option<SlotWork>> = Vec::with_capacity(cohort.len());
         for (i, outcome) in outcomes.into_iter().enumerate() {
-            let client = &self.dataset.train[cohort[i]];
+            let client = &self.dataset.train[cohort[i] % n_train];
             let crng = &mut client_rngs[i];
             let keys = &client_keys[i];
             // the session's per-client wire charge (post-cache): what the
@@ -1021,6 +1052,12 @@ impl Trainer {
             cache_evictions: cache_stats.evictions,
             cache_stale_refreshes: cache_stats.stale_refreshes,
             deferrals: outcome.deferred,
+            eligible: plan.eligible,
+            arrivals: plan.arrivals,
+            departures: plan.departures,
+            outage_excluded: plan.outage_excluded,
+            clients_touched: self.scheduler.clients_touched(),
+            resident_bytes: self.scheduler.resident_state_bytes(),
         };
         record_round(&mut self.metrics, &rec);
         if obs_on {
@@ -1062,6 +1099,12 @@ impl Trainer {
                 sim_total_s: self.scheduler.sim_total_s(),
                 down_bytes: rec.comm.down_bytes,
                 up_bytes,
+                eligible: rec.eligible,
+                arrivals: rec.arrivals,
+                departures: rec.departures,
+                outage_excluded: rec.outage_excluded,
+                clients_touched: rec.clients_touched,
+                resident_bytes: rec.resident_bytes,
             });
         }
         Ok((rec, tick))
@@ -1161,11 +1204,17 @@ impl Trainer {
         Ok(report)
     }
 
-    /// Run the configured number of rounds with periodic evaluation.
+    /// Run the configured number of rounds with periodic evaluation. With
+    /// `--horizon H` the run additionally stops once the simulated clock
+    /// passes `H` hours (whichever bound lands first).
     pub fn run(&mut self) -> Result<TrainReport> {
+        let horizon_s = self.cfg.scenario.horizon_h * 3600.0;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         let mut evals = Vec::new();
         for r in 0..self.cfg.rounds {
+            if horizon_s > 0.0 && self.scheduler.sim_total_s() >= horizon_s {
+                break;
+            }
             let rec = self.run_round()?;
             rounds.push(rec);
             if self.should_eval(r) {

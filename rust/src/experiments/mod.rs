@@ -22,12 +22,14 @@
 //! | `secagg` | (beyond the paper) secure-aggregation committee size × mode × fleet sweep |
 //! | `cache`  | (beyond the paper) slice-cache eviction policy × budget × fleet sweep |
 //! | `multitenant` | (beyond the paper) N concurrent jobs on one shared fleet vs isolated runs |
+//! | `scale`  | (beyond the paper) lazy-fleet scale sweep 10k -> 10M clients + churn/outage tie-in |
 
 mod async_agg;
 mod cache;
 mod emnist;
 mod logreg;
 mod multitenant;
+mod scale;
 mod scheduler;
 mod secagg;
 mod table1;
@@ -61,7 +63,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
-    "async", "secagg", "cache", "multitenant",
+    "async", "secagg", "cache", "multitenant", "scale",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -82,6 +84,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "secagg" => secagg::sweep(opts)?,
         "cache" => cache::sweep(opts)?,
         "multitenant" => multitenant::run(opts)?,
+        "scale" => scale::run(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

@@ -1,0 +1,192 @@
+//! Fleet-scale sweep: the headline workload of the million-client fleet
+//! engine. Profiles are lazy (a pure function of `(seed, client, kind)`),
+//! scheduler state is sparse (touched clients only), and every selection
+//! policy has a sub-linear sampling path — so `plan_round` over 10M
+//! clients costs milliseconds and resident bytes stay proportional to the
+//! cohort, not the fleet.
+//!
+//! Two tables:
+//!
+//! 1. **plan-only sweep** — fleet size × policy, driving
+//!    [`Scheduler::plan_round`] directly: mean plan wall-time, planned
+//!    clients/s, touched-state count, and resident scheduler bytes.
+//! 2. **scenario tie-in** — a small end-to-end training run with an
+//!    oversized fleet under churn + a regional outage, reporting the
+//!    eligibility ledger of the final round.
+
+use std::time::Instant;
+
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::coordinator::{build_dataset, Trainer};
+use crate::data::bow::BowConfig;
+use crate::error::Result;
+use crate::fleet::{ChurnSpec, OutageSpec};
+use crate::metrics::{human_bytes, Table};
+use crate::scheduler::{FleetKind, SchedPolicy, Scheduler, SliceGeometry};
+use crate::tensor::rng::Rng;
+
+use super::ExpOptions;
+
+/// Rounds of `plan_round` timed per (size, policy) cell.
+const PLAN_ROUNDS: usize = 5;
+
+/// `--id scale`: fleet 10k -> 10M sweep plus a churn/outage tie-in run.
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let sizes: &[usize] = if opts.quick {
+        &[10_000, 1_000_000]
+    } else {
+        &[10_000, 1_000_000, 10_000_000]
+    };
+    let mut tables = vec![plan_sweep(sizes)?];
+    tables.push(scenario_tie_in(opts)?);
+    Ok(tables)
+}
+
+/// Drive the scheduler alone — no dataset, no model — so the numbers
+/// isolate selection cost. The dataset-client count passed to
+/// [`Scheduler::new`] is a stand-in; `--fleet-size` overrides it.
+fn plan_sweep(sizes: &[usize]) -> Result<Table> {
+    let geom = SliceGeometry {
+        base_ms: vec![512],
+        per_key_floats: vec![64],
+        broadcast_floats: 64,
+        server_floats: 4096 * 64 + 64,
+    };
+    let mut t = Table::new(
+        "Fleet scale sweep (plan-only, tiered-3 fleet)",
+        &[
+            "fleet_size",
+            "policy",
+            "plan_ms_mean",
+            "clients_per_s",
+            "touched",
+            "resident",
+        ],
+    );
+    for &n in sizes {
+        for policy in SchedPolicy::ALL {
+            let mut cfg = TrainConfig::logreg_default(256, 64);
+            cfg.fleet = FleetKind::Tiered3;
+            cfg.fleet_size = n;
+            cfg.sched_policy = policy;
+            cfg.cohort = 100;
+            cfg.mem_cap_frac = 0.25;
+            cfg.seed = 7;
+            let mut sched = Scheduler::new(&cfg, 100)?;
+            let mut rng = Rng::new(cfg.seed, 0x5CA1E);
+            let start = Instant::now();
+            for round in 1..=PLAN_ROUNDS {
+                let _plan = sched.plan_round(round, cfg.cohort, &geom, &mut rng, &[]);
+            }
+            let secs = start.elapsed().as_secs_f64().max(1e-9);
+            let plan_ms = 1e3 * secs / PLAN_ROUNDS as f64;
+            // population covered per second of planning: the capacity
+            // metric — how fast a coordinator could re-plan the full fleet
+            let clients_per_s = n as f64 * PLAN_ROUNDS as f64 / secs;
+            t.push(vec![
+                n.to_string(),
+                policy.to_string(),
+                format!("{plan_ms:.3}"),
+                format!("{clients_per_s:.3e}"),
+                sched.clients_touched().to_string(),
+                human_bytes(sched.resident_state_bytes()),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// End-to-end check that scenarios flow through training: a 2,000-client
+/// fleet over a 40-client dataset, hourly churn plus a regional outage.
+fn scenario_tie_in(opts: &ExpOptions) -> Result<Table> {
+    let (vocab, m) = (256usize, 64usize);
+    let rounds = if opts.quick { 4 } else { 8 };
+    let ds_cfg = BowConfig::new(vocab, 20).with_clients(40, 6, 10);
+    let dataset = build_dataset(&DatasetConfig::Bow(ds_cfg.clone()));
+
+    let mut cfg = TrainConfig::logreg_default(vocab, m);
+    cfg.dataset = DatasetConfig::Bow(ds_cfg);
+    cfg.engine = opts.engine.clone();
+    cfg.rounds = rounds;
+    cfg.cohort = 16;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 256;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.fleet_size = 2_000;
+    cfg.scenario.churn = Some(ChurnSpec { rate_per_h: 2.0, width_frac: 0.6 });
+    cfg.scenario.outage = Some(OutageSpec { start_h: 0.0, dur_h: 1e6, frac: 0.25 });
+    cfg.seed = 1000;
+    let mut tr = Trainer::with_dataset(cfg, dataset)?;
+    let report = tr.run()?;
+
+    let mut t = Table::new(
+        "Scenario tie-in (2k fleet, churn 2/h width 0.6, outage frac 0.25)",
+        &[
+            "round",
+            "eligible",
+            "arrivals",
+            "departures",
+            "outage_excl",
+            "touched",
+            "resident",
+            "completed",
+        ],
+    );
+    for r in &report.rounds {
+        t.push(vec![
+            r.round.to_string(),
+            r.eligible.to_string(),
+            r.arrivals.to_string(),
+            r.departures.to_string(),
+            r.outage_excluded.to_string(),
+            r.clients_touched.to_string(),
+            human_bytes(r.resident_bytes),
+            r.completed.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    #[test]
+    fn plan_sweep_covers_dense_and_sparse_paths() {
+        // 2k stays on the dense legacy paths; 70k crosses
+        // SPARSE_SCAN_THRESHOLD and exercises the sub-linear samplers
+        let t = plan_sweep(&[2_000, 70_000]).unwrap();
+        assert_eq!(t.rows.len(), 2 * SchedPolicy::ALL.len());
+        for row in &t.rows {
+            let plan_ms: f64 = row[2].parse().unwrap();
+            assert!(plan_ms.is_finite() && plan_ms >= 0.0);
+            // every policy touched exactly the planned cohorts
+            let touched: usize = row[4].parse().unwrap();
+            assert!(touched <= 100 * PLAN_ROUNDS);
+            assert!(touched > 0);
+        }
+    }
+
+    #[test]
+    fn scenario_tie_in_ledgers_eligibility() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir()
+                .join("fedselect_scale_tie_in")
+                .to_string_lossy()
+                .into_owned(),
+            ..ExpOptions::new(true, EngineKind::Native)
+        };
+        let t = scenario_tie_in(&opts).unwrap();
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            let eligible: usize = row[1].parse().unwrap();
+            let outage: usize = row[4].parse().unwrap();
+            // the standing outage removes a quarter of the 2k fleet; churn
+            // shrinks the window further
+            assert!(outage > 0, "outage must exclude clients: {row:?}");
+            assert!(eligible < 2_000, "eligibility must be constrained: {row:?}");
+            assert!(eligible >= 16, "cohort must remain satisfiable: {row:?}");
+        }
+    }
+}

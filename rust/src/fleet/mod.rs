@@ -1,0 +1,39 @@
+//! Million-client fleet engine: lazy deterministic profiles, sparse
+//! touched-state, stratified sampling, and scale-only scenarios.
+//!
+//! The paper's setting is planet-scale cross-device federated learning —
+//! selection policies, availability waves, churn, and outages only get
+//! interesting over populations far larger than any per-client state the
+//! simulator could afford to materialize. This subsystem makes simulation
+//! cost **O(active), not O(fleet)**:
+//!
+//! - [`profiles`]: a [`Fleet`] no longer stores per-client
+//!   [`DeviceProfile`]s. [`Fleet::profile`] recomputes them on demand as a
+//!   pure function of `(run seed, client id, fleet kind)` — bit-stable
+//!   across calls and call orders — so a 10M-client fleet holds zero
+//!   resident bytes (trace fleets keep only the loaded row table).
+//!   [`Fleet::materialize`] is the eager shim for tests and small tools.
+//! - [`touched`]: [`TouchedState`] keeps scheduler signals and staleness
+//!   counters only for clients ever selected; absent clients read the
+//!   legacy dense-vector defaults. Client caches grow the same way
+//!   (`FleetCaches` allocates a client's cache on first commit).
+//! - [`sampling`]: past [`sampling::SPARSE_SCAN_THRESHOLD`] clients the
+//!   selection policies switch from their legacy dense scans (kept
+//!   bit-for-bit at seed sizes) to rejection / two-stratum sampling that
+//!   costs O(cohort + touched) per round.
+//! - [`scenario`]: churn, regional outages, and diurnal availability
+//!   waves as closed-form sim-time processes feeding `PlanCtx`
+//!   eligibility, with per-round arrival/departure/outage counts ledgered
+//!   in `RoundRecord` and the trace schema.
+
+pub mod profiles;
+pub mod sampling;
+pub mod scenario;
+pub mod touched;
+
+pub use profiles::{DeviceProfile, Fleet, FleetKind};
+pub use sampling::SPARSE_SCAN_THRESHOLD;
+pub use scenario::{
+    ChurnSpec, EligibilityView, OutageSpec, Scenario, ScenarioConfig, WaveSpec,
+};
+pub use touched::{ClientTouch, TouchedState};

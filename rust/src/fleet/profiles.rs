@@ -1,12 +1,18 @@
-//! Device-population models ("fleets") for the cohort scheduler.
+//! Lazy, deterministic device-population models ("fleets").
 //!
 //! The paper evaluates FedSelect under uniform sampling and a scalar
 //! post-fetch dropout rate (§6); real cross-device populations are
 //! heterogeneous in bandwidth, memory, availability, and reliability — the
 //! axes client-selection work (arXiv 2211.01549, 2210.04607) schedules on.
-//! A [`Fleet`] assigns every train client a [`DeviceProfile`] drawn
-//! deterministically from the run seed, so two runs of the same config see
-//! the same population.
+//! A [`Fleet`] assigns every client a [`DeviceProfile`]; since PR 8 the
+//! profile is **not stored**: it is recomputed on demand as a pure function
+//! of `(run seed, client id, fleet kind)`, so a 10M-client fleet costs zero
+//! resident bytes until a client is touched. Trace fleets keep only the
+//! compact loaded row table (cycling and offset staggering moved into the
+//! lookup). Two calls of [`Fleet::profile`] for the same client always
+//! return bit-identical profiles, and [`Fleet::materialize`] — the eager
+//! shim used by tests and small-fleet tooling — is definitionally
+//! `(0..len).map(profile)`.
 //!
 //! Built-in fleets:
 //!
@@ -33,7 +39,9 @@ const FLEET_STREAM: u64 = 0xF1EE7;
 
 /// One client's simulated device: bandwidth, compute, memory, an
 /// availability window, and a per-round failure hazard.
-#[derive(Clone, Debug)]
+///
+/// `Copy`: lazy fleets return profiles by value from [`Fleet::profile`].
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceProfile {
     /// Index into the fleet's tier-name table.
     pub tier: usize,
@@ -133,20 +141,38 @@ impl std::str::FromStr for FleetKind {
     }
 }
 
-/// A device population: one profile per train client, plus tier names for
-/// reporting.
+/// Where the per-client profiles come from.
+///
+/// Synthetic kinds carry no per-client data at all — the profile is a pure
+/// function of `(seed, client id)`. Trace fleets keep the loaded rows (a
+/// few dozen devices, not the population) and cycle them at lookup time.
+#[derive(Clone, Debug)]
+enum FleetStorage {
+    Synthetic,
+    Trace { rows: Vec<DeviceProfile> },
+}
+
+/// A device population: a lazy profile generator plus tier names for
+/// reporting. Resident size is O(trace rows), not O(clients).
 #[derive(Clone, Debug)]
 pub struct Fleet {
     pub kind: FleetKind,
-    pub profiles: Vec<DeviceProfile>,
+    seed: u64,
+    mem_cap_frac: f64,
+    len: usize,
+    /// Applied on top of every generated hazard (the deprecated
+    /// `--dropout-rate` floor); replaces the old in-place profile mutation.
+    hazard_floor: f32,
+    storage: FleetStorage,
     tier_names: Vec<&'static str>,
 }
 
 impl Fleet {
-    /// Generate a fleet of `n_clients` profiles, deterministic in `seed`.
-    /// `mem_cap_frac` sets the lowest tier's memory cap as a fraction of
-    /// the full server model (tiers above scale up from it). Only the
-    /// `Trace` kind can fail (unreadable or malformed trace file).
+    /// Build a fleet of `n_clients`, deterministic in `seed`. Profiles are
+    /// generated lazily by [`Fleet::profile`]; nothing per-client is
+    /// allocated here. `mem_cap_frac` sets the lowest tier's memory cap as
+    /// a fraction of the full server model (tiers above scale up from it).
+    /// Only the `Trace` kind can fail (unreadable or malformed trace file).
     pub fn generate(
         kind: FleetKind,
         n_clients: usize,
@@ -157,111 +183,20 @@ impl Fleet {
             let fleet = Fleet::from_trace(path, n_clients)?;
             return Ok(fleet);
         }
-        let mut rng = Rng::new(seed, FLEET_STREAM);
-        let f = mem_cap_frac.clamp(0.01, 1.0);
-        let (tier_names, profiles): (Vec<&'static str>, Vec<DeviceProfile>) = match &kind {
-            FleetKind::Uniform => {
-                let p = DeviceProfile {
-                    tier: 0,
-                    down_bps: 20e6,
-                    up_bps: 5e6,
-                    flops: 5e9,
-                    mem_frac: 1.0,
-                    avail_offset: 0,
-                    avail_period: 0,
-                    avail_duty: 1.0,
-                    hazard: 0.0,
-                };
-                (vec!["all"], vec![p; n_clients])
-            }
-            FleetKind::Tiered3 => {
-                // (down, up, flops, mem_frac, hazard) per tier
-                let tiers = [
-                    (2e6, 0.5e6, 5e8, f, 0.05f32),
-                    (8e6, 2e6, 2e9, (2.0 * f).min(1.0), 0.02),
-                    (25e6, 10e6, 1e10, 1.0, 0.01),
-                ];
-                let weights = [5.0, 3.0, 2.0];
-                let profiles = (0..n_clients)
-                    .map(|_| {
-                        let t = rng.categorical(&weights);
-                        let (down, up, flops, mem, hz) = tiers[t];
-                        let jitter = rng.lognormal(0.0, 0.25) as f64;
-                        DeviceProfile {
-                            tier: t,
-                            down_bps: down * jitter,
-                            up_bps: up * jitter,
-                            flops,
-                            mem_frac: mem,
-                            avail_offset: 0,
-                            avail_period: 0,
-                            avail_duty: 1.0,
-                            hazard: hz,
-                        }
-                    })
-                    .collect();
-                (vec!["low-end", "mid", "high-end"], profiles)
-            }
-            FleetKind::Diurnal => {
-                // identical mid-range hardware, opposite 24-round windows
-                let profiles = (0..n_clients)
-                    .map(|_| {
-                        let t = usize::from(rng.f32() < 0.5);
-                        let jitter = rng.lognormal(0.0, 0.25) as f64;
-                        DeviceProfile {
-                            tier: t,
-                            down_bps: 10e6 * jitter,
-                            up_bps: 2.5e6 * jitter,
-                            flops: 2e9,
-                            mem_frac: 1.0,
-                            avail_offset: if t == 0 { 0 } else { 12 },
-                            avail_period: 24,
-                            avail_duty: 0.5,
-                            hazard: 0.02,
-                        }
-                    })
-                    .collect();
-                (vec!["day", "night"], profiles)
-            }
-            FleetKind::FlakyEdge => {
-                let profiles = (0..n_clients)
-                    .map(|_| {
-                        let core = rng.f32() < 0.25;
-                        let jitter = rng.lognormal(0.0, 0.25) as f64;
-                        if core {
-                            DeviceProfile {
-                                tier: 0,
-                                down_bps: 25e6 * jitter,
-                                up_bps: 10e6 * jitter,
-                                flops: 1e10,
-                                mem_frac: 1.0,
-                                avail_offset: 0,
-                                avail_period: 0,
-                                avail_duty: 1.0,
-                                hazard: 0.01,
-                            }
-                        } else {
-                            DeviceProfile {
-                                tier: 1,
-                                down_bps: 3e6 * jitter,
-                                up_bps: 0.75e6 * jitter,
-                                flops: 1e9,
-                                mem_frac: (2.0 * f).min(1.0),
-                                avail_offset: 0,
-                                avail_period: 0,
-                                avail_duty: 1.0,
-                                hazard: 0.25,
-                            }
-                        }
-                    })
-                    .collect();
-                (vec!["core", "edge"], profiles)
-            }
+        let tier_names: Vec<&'static str> = match &kind {
+            FleetKind::Uniform => vec!["all"],
+            FleetKind::Tiered3 => vec!["low-end", "mid", "high-end"],
+            FleetKind::Diurnal => vec!["day", "night"],
+            FleetKind::FlakyEdge => vec!["core", "edge"],
             FleetKind::Trace(_) => unreachable!("trace fleets load above"),
         };
         Ok(Fleet {
             kind,
-            profiles,
+            seed,
+            mem_cap_frac,
+            len: n_clients,
+            hazard_floor: 0.0,
+            storage: FleetStorage::Synthetic,
             tier_names,
         })
     }
@@ -270,14 +205,15 @@ impl Fleet {
     /// non-`#`-comment line, six whitespace- or comma-separated columns —
     /// `down_bps up_bps flops mem_frac avail hazard`. `avail` is a duty
     /// cycle in (0, 1]: 1 means always online, anything lower puts the
-    /// device on a 24-round window (offset staggered by line index).
-    /// Profiles are cycled when the population outnumbers the trace, so one
-    /// trace serves any dataset size. Tiers are inferred from downlink
-    /// bandwidth terciles over the trace rows (`trace-lo` / `trace-mid` /
-    /// `trace-hi`): when only two terciles are populated the remaining
-    /// bands are *relabeled* `trace-lo`/`trace-hi` by relative order
-    /// (whichever terciles they were), and a flat trace reports one
-    /// `trace` tier — so per-tier reporting works on real measurements.
+    /// device on a 24-round window (offset staggered by client index).
+    /// Rows are cycled at lookup time when the population outnumbers the
+    /// trace, so one trace serves any fleet size without materializing it.
+    /// Tiers are inferred from downlink bandwidth terciles over the trace
+    /// rows (`trace-lo` / `trace-mid` / `trace-hi`): when only two terciles
+    /// are populated the remaining bands are *relabeled*
+    /// `trace-lo`/`trace-hi` by relative order (whichever terciles they
+    /// were), and a flat trace reports one `trace` tier — so per-tier
+    /// reporting works on real measurements.
     pub fn from_trace(path: &str, n_clients: usize) -> Result<Fleet> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Config(format!("cannot read fleet trace {path:?}: {e}")))?;
@@ -385,28 +321,169 @@ impl Fleet {
                 dense[raw_tier(p.down_bps)]
             };
         }
-        let profiles = (0..n_clients)
-            .map(|i| {
-                let mut p = rows[i % rows.len()].clone();
-                if p.avail_period > 0 {
-                    p.avail_offset = (i % p.avail_period as usize) as u32;
-                }
-                p
-            })
-            .collect();
         Ok(Fleet {
             kind: FleetKind::Trace(path.to_string()),
-            profiles,
+            seed: 0,
+            mem_cap_frac: 1.0,
+            len: n_clients,
+            hazard_floor: 0.0,
+            storage: FleetStorage::Trace { rows },
             tier_names,
         })
     }
 
+    /// The per-client generator RNG. Each client gets its own independent
+    /// stream keyed by `(seed, client id)` — a lookup never consumes state
+    /// another lookup depends on, so profiles can be generated in any
+    /// order (or in parallel) and still match bit-for-bit.
+    fn client_rng(&self, ci: usize) -> Rng {
+        Rng::new(
+            self.seed
+                .wrapping_add((ci as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            FLEET_STREAM ^ ci as u64,
+        )
+    }
+
+    /// The profile of client `ci` — a pure function of the fleet and the
+    /// id, recomputed on every call (no cache, no resident state). O(1).
+    pub fn profile(&self, ci: usize) -> DeviceProfile {
+        debug_assert!(ci < self.len, "client {ci} out of fleet range {}", self.len);
+        let mut p = match &self.storage {
+            FleetStorage::Trace { rows } => {
+                let mut p = rows[ci % rows.len()];
+                if p.avail_period > 0 {
+                    p.avail_offset = (ci % p.avail_period as usize) as u32;
+                }
+                p
+            }
+            FleetStorage::Synthetic => {
+                let f = self.mem_cap_frac.clamp(0.01, 1.0);
+                match &self.kind {
+                    FleetKind::Uniform => DeviceProfile {
+                        tier: 0,
+                        down_bps: 20e6,
+                        up_bps: 5e6,
+                        flops: 5e9,
+                        mem_frac: 1.0,
+                        avail_offset: 0,
+                        avail_period: 0,
+                        avail_duty: 1.0,
+                        hazard: 0.0,
+                    },
+                    FleetKind::Tiered3 => {
+                        // (down, up, flops, mem_frac, hazard) per tier
+                        let tiers = [
+                            (2e6, 0.5e6, 5e8, f, 0.05f32),
+                            (8e6, 2e6, 2e9, (2.0 * f).min(1.0), 0.02),
+                            (25e6, 10e6, 1e10, 1.0, 0.01),
+                        ];
+                        let mut rng = self.client_rng(ci);
+                        let t = rng.categorical(&[5.0, 3.0, 2.0]);
+                        let (down, up, flops, mem, hz) = tiers[t];
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        DeviceProfile {
+                            tier: t,
+                            down_bps: down * jitter,
+                            up_bps: up * jitter,
+                            flops,
+                            mem_frac: mem,
+                            avail_offset: 0,
+                            avail_period: 0,
+                            avail_duty: 1.0,
+                            hazard: hz,
+                        }
+                    }
+                    FleetKind::Diurnal => {
+                        // identical mid-range hardware, opposite 24-round windows
+                        let mut rng = self.client_rng(ci);
+                        let t = usize::from(rng.f32() < 0.5);
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        DeviceProfile {
+                            tier: t,
+                            down_bps: 10e6 * jitter,
+                            up_bps: 2.5e6 * jitter,
+                            flops: 2e9,
+                            mem_frac: 1.0,
+                            avail_offset: if t == 0 { 0 } else { 12 },
+                            avail_period: 24,
+                            avail_duty: 0.5,
+                            hazard: 0.02,
+                        }
+                    }
+                    FleetKind::FlakyEdge => {
+                        let mut rng = self.client_rng(ci);
+                        let core = rng.f32() < 0.25;
+                        let jitter = rng.lognormal(0.0, 0.25) as f64;
+                        if core {
+                            DeviceProfile {
+                                tier: 0,
+                                down_bps: 25e6 * jitter,
+                                up_bps: 10e6 * jitter,
+                                flops: 1e10,
+                                mem_frac: 1.0,
+                                avail_offset: 0,
+                                avail_period: 0,
+                                avail_duty: 1.0,
+                                hazard: 0.01,
+                            }
+                        } else {
+                            DeviceProfile {
+                                tier: 1,
+                                down_bps: 3e6 * jitter,
+                                up_bps: 0.75e6 * jitter,
+                                flops: 1e9,
+                                mem_frac: (2.0 * f).min(1.0),
+                                avail_offset: 0,
+                                avail_period: 0,
+                                avail_duty: 1.0,
+                                hazard: 0.25,
+                            }
+                        }
+                    }
+                    FleetKind::Trace(_) => unreachable!("trace storage handled above"),
+                }
+            }
+        };
+        p.hazard = p.hazard.max(self.hazard_floor);
+        p
+    }
+
+    /// Floor every profile's hazard at `rate` (the deprecated
+    /// `--dropout-rate` mapping). Applied at lookup time — nothing is
+    /// materialized.
+    pub fn set_hazard_floor(&mut self, rate: f32) {
+        self.hazard_floor = self.hazard_floor.max(rate);
+    }
+
+    /// Stream every profile in client-id order. O(1) memory; O(len) work.
+    /// Summaries and tier tallies use this instead of a resident table.
+    pub fn iter_profiles(&self) -> impl Iterator<Item = DeviceProfile> + '_ {
+        (0..self.len).map(move |ci| self.profile(ci))
+    }
+
+    /// Eager shim: the full profile table, `(0..len).map(profile)`. For
+    /// tests and small-fleet tooling only — allocates O(len).
+    pub fn materialize(&self) -> Vec<DeviceProfile> {
+        self.iter_profiles().collect()
+    }
+
+    /// Bytes of per-client state this fleet keeps resident: the trace row
+    /// table for trace fleets, zero for synthetic kinds.
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.storage {
+            FleetStorage::Synthetic => 0,
+            FleetStorage::Trace { rows } => {
+                (rows.len() * std::mem::size_of::<DeviceProfile>()) as u64
+            }
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.profiles.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.profiles.is_empty()
+        self.len == 0
     }
 
     pub fn num_tiers(&self) -> usize {
@@ -417,10 +494,10 @@ impl Fleet {
         self.tier_names.get(tier).copied().unwrap_or("?")
     }
 
-    /// Clients per tier.
+    /// Clients per tier. Streams the generator — O(len) work, O(1) memory.
     pub fn tier_sizes(&self) -> Vec<usize> {
         let mut sizes = vec![0usize; self.num_tiers()];
-        for p in &self.profiles {
+        for p in self.iter_profiles() {
             sizes[p.tier] += 1;
         }
         sizes
@@ -442,7 +519,7 @@ mod tests {
             let a = Fleet::generate(kind.clone(), 64, 42, 0.25).unwrap();
             let b = Fleet::generate(kind.clone(), 64, 42, 0.25).unwrap();
             assert_eq!(a.len(), 64);
-            for (x, y) in a.profiles.iter().zip(b.profiles.iter()) {
+            for (x, y) in a.iter_profiles().zip(b.iter_profiles()) {
                 assert_eq!(x.tier, y.tier, "{kind}");
                 assert_eq!(x.down_bps.to_bits(), y.down_bps.to_bits(), "{kind}");
                 assert_eq!(x.hazard.to_bits(), y.hazard.to_bits(), "{kind}");
@@ -450,9 +527,8 @@ mod tests {
             let c = Fleet::generate(kind.clone(), 64, 43, 0.25).unwrap();
             if kind != FleetKind::Uniform {
                 let same = a
-                    .profiles
-                    .iter()
-                    .zip(c.profiles.iter())
+                    .iter_profiles()
+                    .zip(c.iter_profiles())
                     .filter(|(x, y)| x.down_bps == y.down_bps)
                     .count();
                 assert!(same < 64, "{kind}: different seeds must differ");
@@ -461,10 +537,65 @@ mod tests {
     }
 
     #[test]
+    fn profiles_are_a_pure_function_of_the_client_id() {
+        // the lazy profile contract: repeated lookups are bit-identical,
+        // lookup order is irrelevant, and materialize() is the same table
+        for kind in [
+            FleetKind::Uniform,
+            FleetKind::Tiered3,
+            FleetKind::Diurnal,
+            FleetKind::FlakyEdge,
+        ] {
+            let fl = Fleet::generate(kind.clone(), 128, 42, 0.25).unwrap();
+            let eager = fl.materialize();
+            assert_eq!(eager.len(), 128);
+            // reverse order, repeated lookups: still the same bits
+            for ci in (0..128).rev() {
+                let p = fl.profile(ci);
+                let q = fl.profile(ci);
+                assert_eq!(p.down_bps.to_bits(), q.down_bps.to_bits(), "{kind}/{ci}");
+                assert_eq!(eager[ci].down_bps.to_bits(), p.down_bps.to_bits());
+                assert_eq!(eager[ci].up_bps.to_bits(), p.up_bps.to_bits());
+                assert_eq!(eager[ci].tier, p.tier);
+                assert_eq!(eager[ci].hazard.to_bits(), p.hazard.to_bits());
+                assert_eq!(eager[ci].avail_offset, p.avail_offset);
+            }
+            // synthetic fleets keep nothing resident per client
+            assert_eq!(fl.resident_bytes(), 0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn huge_fleets_cost_no_resident_memory() {
+        // 10M clients: construction is O(1), lookups work anywhere in range
+        let fl = Fleet::generate(FleetKind::Tiered3, 10_000_000, 42, 0.25).unwrap();
+        assert_eq!(fl.len(), 10_000_000);
+        assert_eq!(fl.resident_bytes(), 0);
+        let p = fl.profile(9_999_999);
+        assert!(p.tier < 3 && p.down_bps > 0.0);
+        // determinism holds at the far end of the id space too
+        assert_eq!(
+            fl.profile(9_999_999).down_bps.to_bits(),
+            p.down_bps.to_bits()
+        );
+    }
+
+    #[test]
+    fn hazard_floor_applies_at_lookup_time() {
+        let mut fl = Fleet::generate(FleetKind::Uniform, 8, 7, 0.25).unwrap();
+        assert_eq!(fl.profile(3).hazard, 0.0);
+        fl.set_hazard_floor(0.4);
+        assert_eq!(fl.profile(3).hazard, 0.4);
+        // floors never lower an existing hazard
+        fl.set_hazard_floor(0.1);
+        assert_eq!(fl.profile(3).hazard, 0.4);
+    }
+
+    #[test]
     fn uniform_fleet_is_unconstrained() {
         let fl = Fleet::generate(FleetKind::Uniform, 10, 7, 0.25).unwrap();
         assert_eq!(fl.num_tiers(), 1);
-        for p in &fl.profiles {
+        for p in fl.iter_profiles() {
             assert_eq!(p.hazard, 0.0);
             assert_eq!(p.mem_frac, 1.0);
             assert!(p.available(0) && p.available(1000));
@@ -479,7 +610,7 @@ mod tests {
         assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
         // proportions roughly 50/30/20
         assert!(sizes[0] > sizes[2], "{sizes:?}");
-        for p in &fl.profiles {
+        for p in fl.iter_profiles() {
             match p.tier {
                 0 => assert!((p.mem_frac - 0.25).abs() < 1e-12),
                 1 => assert!((p.mem_frac - 0.5).abs() < 1e-12),
@@ -491,8 +622,8 @@ mod tests {
     #[test]
     fn diurnal_windows_alternate() {
         let fl = Fleet::generate(FleetKind::Diurnal, 50, 9, 0.25).unwrap();
-        let day = fl.profiles.iter().find(|p| p.tier == 0).unwrap();
-        let night = fl.profiles.iter().find(|p| p.tier == 1).unwrap();
+        let day = fl.iter_profiles().find(|p| p.tier == 0).unwrap();
+        let night = fl.iter_profiles().find(|p| p.tier == 1).unwrap();
         assert!(day.available(0) && !night.available(0));
         assert!(!day.available(12) && night.available(12));
         // complementary over a full period
@@ -506,7 +637,7 @@ mod tests {
         let fl = Fleet::generate(FleetKind::FlakyEdge, 200, 11, 0.25).unwrap();
         let sizes = fl.tier_sizes();
         assert!(sizes[1] > sizes[0], "edge must outnumber core: {sizes:?}");
-        assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2));
+        assert!(fl.iter_profiles().any(|p| p.hazard >= 0.2));
     }
 
     #[test]
@@ -539,17 +670,22 @@ mod tests {
         assert_eq!(fl.len(), 50);
         // profiles cycle: client 32 repeats line 1's device
         assert_eq!(
-            fl.profiles[0].down_bps.to_bits(),
-            fl.profiles[32].down_bps.to_bits()
+            fl.profile(0).down_bps.to_bits(),
+            fl.profile(32).down_bps.to_bits()
         );
-        assert_eq!(fl.profiles[0].tier, fl.profiles[32].tier);
-        assert!(fl.profiles.iter().any(|p| p.hazard >= 0.2), "edge hazards");
-        assert!(fl.profiles.iter().any(|p| p.avail_period == 24));
-        assert!(fl.profiles.iter().any(|p| p.avail_period == 0));
+        assert_eq!(fl.profile(0).tier, fl.profile(32).tier);
+        assert!(fl.iter_profiles().any(|p| p.hazard >= 0.2), "edge hazards");
+        assert!(fl.iter_profiles().any(|p| p.avail_period == 24));
+        assert!(fl.iter_profiles().any(|p| p.avail_period == 0));
+        // resident state is the row table, not the population
+        assert_eq!(
+            fl.resident_bytes(),
+            (32 * std::mem::size_of::<DeviceProfile>()) as u64
+        );
         // generate() routes trace kinds through the loader
         let via_generate =
             Fleet::generate(FleetKind::Trace(path.to_string()), 50, 7, 0.25).unwrap();
-        for (a, b) in fl.profiles.iter().zip(via_generate.profiles.iter()) {
+        for (a, b) in fl.iter_profiles().zip(via_generate.iter_profiles()) {
             assert_eq!(a.down_bps.to_bits(), b.down_bps.to_bits());
             assert_eq!(a.tier, b.tier);
         }
@@ -568,19 +704,17 @@ mod tests {
         // tiers are ordered by bandwidth: every lo device is slower than
         // every hi device, and the per-tier means are strictly increasing
         let mean = |t: usize| {
-            let ps: Vec<_> = fl.profiles.iter().filter(|p| p.tier == t).collect();
+            let ps: Vec<_> = fl.iter_profiles().filter(|p| p.tier == t).collect();
             ps.iter().map(|p| p.down_bps).sum::<f64>() / ps.len() as f64
         };
         assert!(mean(0) < mean(1) && mean(1) < mean(2));
         let max_lo = fl
-            .profiles
-            .iter()
+            .iter_profiles()
             .filter(|p| p.tier == 0)
             .map(|p| p.down_bps)
             .fold(0.0f64, f64::max);
         let min_hi = fl
-            .profiles
-            .iter()
+            .iter_profiles()
             .filter(|p| p.tier == 2)
             .map(|p| p.down_bps)
             .fold(f64::INFINITY, f64::min);
@@ -596,7 +730,7 @@ mod tests {
         let fl = Fleet::from_trace(flat.to_str().unwrap(), 10).unwrap();
         assert_eq!(fl.num_tiers(), 1);
         assert_eq!(fl.tier_name(0), "trace");
-        assert!(fl.profiles.iter().all(|p| p.tier == 0));
+        assert!(fl.iter_profiles().all(|p| p.tier == 0));
         // two distinct bandwidth levels collapse to trace-lo / trace-hi
         let two = dir.join("fedselect_trace_two_level.txt");
         std::fs::write(
@@ -610,7 +744,7 @@ mod tests {
         assert_eq!(fl2.tier_name(1), "trace-hi");
         let sizes = fl2.tier_sizes();
         assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
-        for p in &fl2.profiles {
+        for p in fl2.iter_profiles() {
             assert_eq!(p.tier, usize::from(p.down_bps > 1e6));
         }
     }

@@ -1,0 +1,236 @@
+//! Sampling primitives for planet-scale cohorts.
+//!
+//! At seed fleet sizes the selection policies keep their legacy O(fleet)
+//! scans — bit-for-bit identical to the pre-lazy scheduler (test-enforced
+//! in `tests/scheduler_determinism.rs`). Past
+//! [`SPARSE_SCAN_THRESHOLD`] clients they switch to the stratified
+//! samplers in this module, which cost O(cohort + touched), not O(fleet):
+//!
+//! - [`rejection_sample`]: draw distinct ids uniformly from the accepted
+//!   subset of `[0, n)` without enumerating it. With the eligible
+//!   fraction `f`, a k-cohort costs ~`k/f` O(1) predicate probes — the
+//!   scenario layer keeps `f` macroscopic (an outage or a wave blacks
+//!   out a bounded fraction), so `plan_round` at 10M clients stays in
+//!   the milliseconds.
+//! - [`TwoStratumSampler`]: the hierarchical draw behind the
+//!   loss-weighted policy at scale. The population is partitioned into
+//!   the *touched* stratum (clients with observed signals — a compact
+//!   sorted list) and the *untouched* stratum (everyone else, weighted
+//!   by the mean positive signal as a prior, exactly the dense policy's
+//!   semantics). Each pick first chooses a stratum by total weight, then
+//!   resolves within it — O(touched) per pick instead of O(fleet).
+//!
+//! Both paths consume the round RNG differently from the dense scans, so
+//! sparse cohorts are *deterministic* (same seed ⇒ same cohort,
+//! test-enforced) but not byte-identical to the dense ones. The
+//! threshold pins every seed-size config to the dense path, which is
+//! what the byte-identity suite locks.
+
+use std::collections::HashSet;
+
+use crate::tensor::rng::Rng;
+
+/// Fleet sizes at or below this use the legacy dense O(fleet) policy
+/// scans; larger fleets use the sparse samplers. 64Ki is far above every
+/// seed config (tens of clients) and far below the 1M–10M fleets the
+/// sparse path exists for.
+pub const SPARSE_SCAN_THRESHOLD: usize = 65_536;
+
+/// How many draw attempts a rejection sampler spends before giving up on
+/// filling the remaining slots (pathologically thin eligible sets; the
+/// cohort comes back short but deterministic).
+fn attempt_budget(k: usize) -> usize {
+    64 * k + 1024
+}
+
+/// Draw up to `k` *distinct* ids uniformly from `{ci in [0, n) :
+/// accept(ci)}` by bounded rejection, in draw order. Never scans `[0,
+/// n)`; expected cost `k / eligible_fraction` probes. Returns fewer than
+/// `k` ids only when the attempt budget runs dry (near-empty eligible
+/// sets).
+pub fn rejection_sample(
+    rng: &mut Rng,
+    n: usize,
+    k: usize,
+    mut accept: impl FnMut(usize) -> bool,
+) -> Vec<usize> {
+    let mut picked: Vec<usize> = Vec::with_capacity(k.min(1024));
+    let mut seen: HashSet<usize> = HashSet::with_capacity(k.min(1024) * 2);
+    if n == 0 || k == 0 {
+        return picked;
+    }
+    let mut attempts = attempt_budget(k);
+    while picked.len() < k && attempts > 0 {
+        attempts -= 1;
+        let ci = rng.below(n as u64) as usize;
+        if seen.contains(&ci) || !accept(ci) {
+            continue;
+        }
+        seen.insert(ci);
+        picked.push(ci);
+    }
+    picked
+}
+
+/// Hierarchical two-stratum weighted sampler (without replacement).
+///
+/// The *touched* stratum is a compact `(id, weight)` list in ascending id
+/// order; the *untouched* stratum is the rest of `[0, n)` at a uniform
+/// `prior` weight, resolved lazily by rejection so it is never
+/// enumerated. Matches the dense loss-weighted semantics: observed
+/// positive signals weigh clients directly, everyone unobserved gets the
+/// mean positive signal as an exploration prior.
+pub struct TwoStratumSampler {
+    /// `(client id, weight)`, ascending id, weights > 0.
+    touched: Vec<(usize, f64)>,
+    touched_total: f64,
+    /// Per-client prior weight of the untouched stratum.
+    prior: f64,
+    /// Clients in the untouched stratum still undrawn (approximate
+    /// bookkeeping: rejection handles collisions exactly, the count only
+    /// steers stratum choice).
+    untouched_left: usize,
+    n: usize,
+}
+
+impl TwoStratumSampler {
+    /// `touched` must be ascending in id with strictly positive weights;
+    /// `untouched_count` is the size of the complement stratum.
+    pub fn new(touched: Vec<(usize, f64)>, untouched_count: usize, prior: f64, n: usize) -> Self {
+        debug_assert!(touched.windows(2).all(|w| w[0].0 < w[1].0));
+        let touched_total = touched.iter().map(|&(_, w)| w).sum();
+        TwoStratumSampler {
+            touched,
+            touched_total,
+            prior: prior.max(0.0),
+            untouched_left: untouched_count,
+            n,
+        }
+    }
+
+    /// Draw one id, or `None` when both strata are exhausted (or every
+    /// candidate is rejected by `accept` within the attempt budget).
+    /// Consumes one `f32` for the stratum-and-position draw plus rejection
+    /// draws inside the untouched stratum.
+    pub fn draw(&mut self, rng: &mut Rng, mut accept: impl FnMut(usize) -> bool) -> Option<usize> {
+        loop {
+            let untouched_total = self.untouched_left as f64 * self.prior;
+            let total = self.touched_total + untouched_total;
+            if total <= 0.0 {
+                return None;
+            }
+            let u = rng.f32() as f64 * total;
+            if u < self.touched_total {
+                // walk the compact stratum: ids ascend, so the pick is
+                // deterministic for a given u
+                let mut acc = 0.0;
+                let mut hit = self.touched.len() - 1;
+                for (i, &(_, w)) in self.touched.iter().enumerate() {
+                    acc += w;
+                    if u < acc {
+                        hit = i;
+                        break;
+                    }
+                }
+                let (ci, w) = self.touched[hit];
+                self.touched_total -= w;
+                self.touched.remove(hit);
+                if accept(ci) {
+                    return Some(ci);
+                }
+                // rejected by the caller (excluded/ineligible): weight is
+                // already retired, try again
+                continue;
+            }
+            // untouched stratum: uniform over ids not in the touched list,
+            // resolved by rejection against the compact list
+            let mut attempts = attempt_budget(1);
+            while attempts > 0 {
+                attempts -= 1;
+                let ci = rng.below(self.n as u64) as usize;
+                if self.touched.binary_search_by_key(&ci, |&(id, _)| id).is_ok() {
+                    continue;
+                }
+                if accept(ci) {
+                    self.untouched_left = self.untouched_left.saturating_sub(1);
+                    return Some(ci);
+                }
+            }
+            // budget dry: retire the stratum so the loop can fall back to
+            // the touched stratum (or terminate)
+            self.untouched_left = 0;
+            if self.touched_total <= 0.0 {
+                return None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejection_sample_returns_distinct_accepted_ids() {
+        let mut rng = Rng::new(7, 1);
+        let picks = rejection_sample(&mut rng, 1_000_000, 100, |ci| ci % 3 == 0);
+        assert_eq!(picks.len(), 100);
+        let set: HashSet<usize> = picks.iter().copied().collect();
+        assert_eq!(set.len(), 100, "distinct");
+        assert!(picks.iter().all(|&ci| ci % 3 == 0 && ci < 1_000_000));
+        // deterministic in the seed
+        let mut rng2 = Rng::new(7, 1);
+        assert_eq!(
+            picks,
+            rejection_sample(&mut rng2, 1_000_000, 100, |ci| ci % 3 == 0)
+        );
+    }
+
+    #[test]
+    fn rejection_sample_comes_back_short_on_thin_sets_not_hung() {
+        let mut rng = Rng::new(7, 1);
+        // only 2 eligible ids in a million: must terminate, possibly short
+        let picks = rejection_sample(&mut rng, 1_000_000, 10, |ci| ci < 2);
+        assert!(picks.len() <= 2);
+        let mut rng = Rng::new(7, 1);
+        assert!(rejection_sample(&mut rng, 1_000_000, 10, |_| false).is_empty());
+    }
+
+    #[test]
+    fn two_stratum_sampler_draws_without_replacement() {
+        let touched = vec![(10usize, 5.0), (20, 1.0), (30, 4.0)];
+        let mut s = TwoStratumSampler::new(touched, 0, 0.0, 100);
+        let mut rng = Rng::new(3, 9);
+        let mut got = Vec::new();
+        while let Some(ci) = s.draw(&mut rng, |_| true) {
+            got.push(ci);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 20, 30], "exhausts the touched stratum once");
+    }
+
+    #[test]
+    fn untouched_stratum_resolves_by_rejection() {
+        // heavy prior, no touched weight: picks come from the complement
+        let touched = vec![(0usize, 0.0001)];
+        let mut s = TwoStratumSampler::new(touched, 999, 10.0, 1000);
+        let mut rng = Rng::new(11, 2);
+        for _ in 0..50 {
+            let ci = s.draw(&mut rng, |_| true).unwrap();
+            assert!(ci < 1000);
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic_in_the_seed() {
+        let run = || {
+            let touched = vec![(5usize, 2.0), (50, 8.0), (500, 1.0)];
+            let mut s = TwoStratumSampler::new(touched, 100_000 - 3, 3.6667, 100_000);
+            let mut rng = Rng::new(42, 7);
+            (0..20)
+                .map(|_| s.draw(&mut rng, |ci| ci % 7 != 0).unwrap())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,511 @@
+//! Fleet scenarios: churn, regional outages, and availability waves over
+//! the simulated clock.
+//!
+//! These only matter at scale — a 24-client run has no "regions" and no
+//! meaningful arrival process — so they live in the fleet subsystem and
+//! are **closed-form in sim time**: eligibility of client `ci` at sim time
+//! `t` is a pure O(1) predicate, and per-round ledger counts (eligible
+//! population, arrivals, departures, outage-excluded) are computed by
+//! interval decomposition in O(1), never by an O(fleet) scan. That keeps
+//! `plan_round` at 10M clients in the milliseconds the subsystem promises.
+//!
+//! Three processes compose (a client must pass all active ones):
+//!
+//! - **Churn** (`--churn RATE[:WIDTH]`): the eligible population is a
+//!   circular window of `WIDTH × fleet` ids that slides through the id
+//!   space at `RATE × fleet` clients per simulated hour. Ids ahead of the
+//!   window have not "installed the app" yet; ids behind it have churned
+//!   out. Every slide step departs the oldest client and arrives a new
+//!   one — a deterministic arrival/departure process.
+//! - **Regional outage** (`--outage START:DUR:FRAC`): ids `[0, FRAC ×
+//!   fleet)` — one contiguous "region" of the id space — are blacked out
+//!   between sim hours `START` and `START+DUR`.
+//! - **Availability wave** (`--wave DUTY`): a 24-hour diurnal wave; client
+//!   `ci` is awake when `(ci + floor(t_hours)) mod 24 < DUTY × 24`, so at
+//!   any instant a `DUTY` fraction of ids is eligible and the awake set
+//!   rolls through the population hour by hour. Unlike the per-profile
+//!   `avail_*` fields (which gate by *round index*), the wave runs on the
+//!   simulated clock, so multi-day horizons see realistic day/night
+//!   cycles even when rounds take variable sim time.
+//!
+//! `--horizon HOURS` bounds the run by simulated time instead of round
+//! count; the coordinator stops at the first round close past it.
+
+use crate::error::{Error, Result};
+
+/// Deterministic arrival/departure process: a sliding eligibility window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnSpec {
+    /// Window slide rate, in fleet fractions per simulated hour (0.01 =
+    /// 1% of the fleet arrives, and 1% departs, per hour).
+    pub rate_per_h: f64,
+    /// Eligible window width as a fleet fraction, in (0, 1].
+    pub width_frac: f64,
+}
+
+impl ChurnSpec {
+    /// Parse `RATE` or `RATE:WIDTH` (width defaults to 0.9).
+    pub fn parse(s: &str) -> Result<ChurnSpec> {
+        let bad = |m: &str| Error::Config(format!("bad --churn {s:?}: {m}"));
+        let (rate_s, width_s) = match s.split_once(':') {
+            Some((r, w)) => (r, Some(w)),
+            None => (s, None),
+        };
+        let rate_per_h: f64 = rate_s
+            .parse()
+            .map_err(|_| bad("RATE must be a number (fleet fraction per hour)"))?;
+        let width_frac: f64 = match width_s {
+            Some(w) => w.parse().map_err(|_| bad("WIDTH must be a number"))?,
+            None => 0.9,
+        };
+        if !(rate_per_h > 0.0) || !rate_per_h.is_finite() {
+            return Err(bad("RATE must be positive and finite"));
+        }
+        if !(width_frac > 0.0 && width_frac <= 1.0) {
+            return Err(bad("WIDTH must be in (0, 1]"));
+        }
+        Ok(ChurnSpec {
+            rate_per_h,
+            width_frac,
+        })
+    }
+}
+
+/// A blackout window over one contiguous region of the id space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OutageSpec {
+    /// Outage start, simulated hours since run start.
+    pub start_h: f64,
+    /// Outage duration, simulated hours.
+    pub dur_h: f64,
+    /// Fraction of the fleet (ids `[0, frac × n)`) that goes dark.
+    pub frac: f64,
+}
+
+impl OutageSpec {
+    /// Parse `START:DUR:FRAC` (hours, hours, fleet fraction).
+    pub fn parse(s: &str) -> Result<OutageSpec> {
+        let bad = |m: &str| Error::Config(format!("bad --outage {s:?}: {m}"));
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(bad("want START:DUR:FRAC"));
+        }
+        let start_h: f64 = parts[0].parse().map_err(|_| bad("START must be a number"))?;
+        let dur_h: f64 = parts[1].parse().map_err(|_| bad("DUR must be a number"))?;
+        let frac: f64 = parts[2].parse().map_err(|_| bad("FRAC must be a number"))?;
+        if start_h < 0.0 || !start_h.is_finite() {
+            return Err(bad("START must be ≥ 0"));
+        }
+        if !(dur_h > 0.0) || !dur_h.is_finite() {
+            return Err(bad("DUR must be positive"));
+        }
+        if !(frac > 0.0 && frac <= 1.0) {
+            return Err(bad("FRAC must be in (0, 1]"));
+        }
+        Ok(OutageSpec {
+            start_h,
+            dur_h,
+            frac,
+        })
+    }
+}
+
+/// A 24-hour diurnal availability wave on the simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WaveSpec {
+    /// Fraction of each 24-hour cycle a client is awake, in (0, 1).
+    pub duty: f64,
+}
+
+impl WaveSpec {
+    pub fn parse(s: &str) -> Result<WaveSpec> {
+        let duty: f64 = s
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --wave {s:?}: DUTY must be a number")))?;
+        if !(duty > 0.0 && duty < 1.0) {
+            return Err(Error::Config(format!(
+                "bad --wave {s:?}: DUTY must be in (0, 1)"
+            )));
+        }
+        Ok(WaveSpec { duty })
+    }
+}
+
+/// The scenario knobs, as carried in `TrainConfig`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioConfig {
+    pub churn: Option<ChurnSpec>,
+    pub outage: Option<OutageSpec>,
+    pub wave: Option<WaveSpec>,
+    /// Stop training at the first round close past this many simulated
+    /// hours; 0 = unbounded (round count governs).
+    pub horizon_h: f64,
+}
+
+impl ScenarioConfig {
+    /// Whether any eligibility-shaping process is active (horizon alone
+    /// does not shape eligibility).
+    pub fn shapes_eligibility(&self) -> bool {
+        self.churn.is_some() || self.outage.is_some() || self.wave.is_some()
+    }
+
+    /// Range-check every spec — the CLI parsers enforce the same bounds,
+    /// but configs can also be built programmatically.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(c) = &self.churn {
+            if !(c.rate_per_h > 0.0) || !c.rate_per_h.is_finite() {
+                return Err(Error::Config("churn rate must be positive and finite".into()));
+            }
+            if !(c.width_frac > 0.0 && c.width_frac <= 1.0) {
+                return Err(Error::Config("churn width must be in (0, 1]".into()));
+            }
+        }
+        if let Some(o) = &self.outage {
+            if o.start_h < 0.0 || !o.start_h.is_finite() {
+                return Err(Error::Config("outage start must be ≥ 0".into()));
+            }
+            if !(o.dur_h > 0.0) || !o.dur_h.is_finite() {
+                return Err(Error::Config("outage duration must be positive".into()));
+            }
+            if !(o.frac > 0.0 && o.frac <= 1.0) {
+                return Err(Error::Config("outage fraction must be in (0, 1]".into()));
+            }
+        }
+        if let Some(w) = &self.wave {
+            if !(w.duty > 0.0 && w.duty < 1.0) {
+                return Err(Error::Config("wave duty must be in (0, 1)".into()));
+            }
+        }
+        if self.horizon_h < 0.0 || !self.horizon_h.is_finite() {
+            return Err(Error::Config("horizon must be ≥ 0 hours".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Wave slots per day: eligibility is resolved on whole sim-hours.
+const WAVE_PERIOD: u64 = 24;
+
+/// The scenario processes bound to a fleet size.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    cfg: ScenarioConfig,
+    n: usize,
+}
+
+impl Scenario {
+    /// `None` when the config shapes no eligibility (pure `--horizon`
+    /// runs skip the scenario plumbing entirely — legacy byte-identity).
+    pub fn new(cfg: &ScenarioConfig, n: usize) -> Option<Scenario> {
+        if cfg.shapes_eligibility() && n > 0 {
+            Some(Scenario {
+                cfg: cfg.clone(),
+                n,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Unwrapped churn-window offset at sim time `t_h` (monotone in `t`);
+    /// the window's low edge is this mod `n`. Exposed so the scheduler can
+    /// ledger arrivals/departures as the offset delta between rounds.
+    pub fn churn_offset_raw(&self, t_h: f64) -> u64 {
+        match self.cfg.churn {
+            Some(c) => (c.rate_per_h * self.n as f64 * t_h.max(0.0)).floor() as u64,
+            None => 0,
+        }
+    }
+
+    /// Freeze eligibility at sim time `t_h` into an O(1)-sized view.
+    pub fn view(&self, t_h: f64) -> EligibilityView {
+        let n = self.n;
+        let (churn_lo, churn_w) = match self.cfg.churn {
+            Some(c) => {
+                let w = ((c.width_frac * n as f64).round() as usize).clamp(1, n);
+                let lo = (self.churn_offset_raw(t_h) % n as u64) as usize;
+                (lo, w)
+            }
+            None => (0, n),
+        };
+        let outage_cut = match self.cfg.outage {
+            Some(o) if t_h >= o.start_h && t_h < o.start_h + o.dur_h => {
+                ((o.frac * n as f64).round() as usize).min(n)
+            }
+            _ => 0,
+        };
+        let (wave_duty_slots, wave_phase) = match self.cfg.wave {
+            Some(w) => {
+                // ceil'd so a fractional duty never rounds to "nobody awake"
+                let slots = ((w.duty * WAVE_PERIOD as f64).ceil() as u64).clamp(1, WAVE_PERIOD);
+                (slots, (t_h.max(0.0).floor() as u64) % WAVE_PERIOD)
+            }
+            None => (WAVE_PERIOD, 0),
+        };
+        EligibilityView {
+            n,
+            churn_lo,
+            churn_w,
+            outage_cut,
+            wave_duty_slots,
+            wave_phase,
+        }
+    }
+}
+
+/// Eligibility at one instant: an O(1) predicate over the id space plus
+/// closed-form population counts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EligibilityView {
+    n: usize,
+    /// Churn window low edge (id space is circular).
+    churn_lo: usize,
+    /// Churn window width; `n` when churn is off.
+    churn_w: usize,
+    /// Ids `[0, outage_cut)` are blacked out; 0 when no outage is active.
+    outage_cut: usize,
+    /// Awake slots per 24-hour cycle; 24 when the wave is off.
+    wave_duty_slots: u64,
+    /// Current hour-of-day phase.
+    wave_phase: u64,
+}
+
+impl EligibilityView {
+    /// Whether churn actually constrains membership (a full-width window
+    /// slides without anyone arriving or departing).
+    pub fn churn_active(&self) -> bool {
+        self.churn_w < self.n
+    }
+
+    /// Whether client `ci` may be selected at this instant. O(1).
+    pub fn eligible(&self, ci: usize) -> bool {
+        if ci >= self.n {
+            return false;
+        }
+        self.in_churn_window(ci) && !self.in_outage(ci) && self.wave_awake(ci)
+    }
+
+    fn in_churn_window(&self, ci: usize) -> bool {
+        ((ci + self.n - self.churn_lo) % self.n) < self.churn_w
+    }
+
+    fn in_outage(&self, ci: usize) -> bool {
+        ci < self.outage_cut
+    }
+
+    fn wave_awake(&self, ci: usize) -> bool {
+        (ci as u64 + self.wave_phase) % WAVE_PERIOD < self.wave_duty_slots
+    }
+
+    /// The churn window as 1–2 linear id intervals `[a, b)`.
+    fn churn_intervals(&self) -> [(usize, usize); 2] {
+        let (lo, w, n) = (self.churn_lo, self.churn_w, self.n);
+        if lo + w <= n {
+            [(lo, lo + w), (0, 0)]
+        } else {
+            [(lo, n), (0, lo + w - n)]
+        }
+    }
+
+    /// Count of x in `[a, b)` with `(x + phase) % 24 < duty_slots` —
+    /// closed form over full cycles plus a ≤ 24-step remainder.
+    fn wave_count(&self, a: usize, b: usize) -> usize {
+        if a >= b {
+            return 0;
+        }
+        let len = b - a;
+        let cycles = len / WAVE_PERIOD as usize;
+        let mut count = cycles * self.wave_duty_slots as usize;
+        for x in a + cycles * WAVE_PERIOD as usize..b {
+            if self.wave_awake(x) {
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// How many clients are eligible right now. O(1) (≤ 2 intervals × a
+    /// ≤ 24-step remainder each), no fleet scan.
+    pub fn eligible_count(&self) -> usize {
+        self.churn_intervals()
+            .iter()
+            .map(|&(a, b)| {
+                // drop the blacked-out prefix, then count awake ids
+                let a = a.max(self.outage_cut.min(b));
+                self.wave_count(a, b)
+            })
+            .sum()
+    }
+
+    /// How many clients the outage is excluding right now — clients that
+    /// pass churn and wave but sit in the dark region. O(1).
+    pub fn outage_excluded_count(&self) -> usize {
+        if self.outage_cut == 0 {
+            return 0;
+        }
+        self.churn_intervals()
+            .iter()
+            .map(|&(a, b)| self.wave_count(a, b.min(self.outage_cut).max(a)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute_eligible(v: &EligibilityView, n: usize) -> Vec<usize> {
+        (0..n).filter(|&ci| v.eligible(ci)).collect()
+    }
+
+    #[test]
+    fn parsing_accepts_good_specs_and_rejects_bad_ones() {
+        let c = ChurnSpec::parse("0.02").unwrap();
+        assert_eq!((c.rate_per_h, c.width_frac), (0.02, 0.9));
+        let c = ChurnSpec::parse("0.5:0.75").unwrap();
+        assert_eq!((c.rate_per_h, c.width_frac), (0.5, 0.75));
+        assert!(ChurnSpec::parse("-1").is_err());
+        assert!(ChurnSpec::parse("0.1:1.5").is_err());
+        assert!(ChurnSpec::parse("x").is_err());
+        let o = OutageSpec::parse("4:2:0.3").unwrap();
+        assert_eq!((o.start_h, o.dur_h, o.frac), (4.0, 2.0, 0.3));
+        assert!(OutageSpec::parse("4:2").is_err());
+        assert!(OutageSpec::parse("4:-1:0.3").is_err());
+        assert!(OutageSpec::parse("4:2:0").is_err());
+        let w = WaveSpec::parse("0.5").unwrap();
+        assert_eq!(w.duty, 0.5);
+        assert!(WaveSpec::parse("1.0").is_err());
+        assert!(WaveSpec::parse("0").is_err());
+    }
+
+    #[test]
+    fn no_shaping_config_builds_no_scenario() {
+        let cfg = ScenarioConfig {
+            horizon_h: 5.0,
+            ..ScenarioConfig::default()
+        };
+        assert!(!cfg.shapes_eligibility());
+        assert!(Scenario::new(&cfg, 100).is_none());
+    }
+
+    #[test]
+    fn churn_window_slides_deterministically() {
+        let cfg = ScenarioConfig {
+            churn: Some(ChurnSpec {
+                rate_per_h: 0.1,
+                width_frac: 0.5,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let sc = Scenario::new(&cfg, 100).unwrap();
+        // t=0: window [0, 50)
+        let v0 = sc.view(0.0);
+        assert!(v0.eligible(0) && v0.eligible(49) && !v0.eligible(50));
+        assert_eq!(v0.eligible_count(), 50);
+        // after 1h at 10 clients/h the window is [10, 60): 0..10 churned
+        // out (departures), 50..60 arrived
+        let v1 = sc.view(1.0);
+        assert!(!v1.eligible(9) && v1.eligible(10) && v1.eligible(59) && !v1.eligible(60));
+        assert_eq!(sc.churn_offset_raw(1.0) - sc.churn_offset_raw(0.0), 10);
+        // the window wraps the id space without losing clients
+        let v9 = sc.view(9.0);
+        assert_eq!(v9.eligible_count(), 50);
+        assert!(v9.eligible(95) && v9.eligible(5) && !v9.eligible(50));
+        // same time, same view: pure in t
+        assert_eq!(sc.view(9.0), v9);
+    }
+
+    #[test]
+    fn outage_blacks_out_the_region_only_during_the_window() {
+        let cfg = ScenarioConfig {
+            outage: Some(OutageSpec {
+                start_h: 4.0,
+                dur_h: 2.0,
+                frac: 0.3,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let sc = Scenario::new(&cfg, 100).unwrap();
+        assert_eq!(sc.view(3.9).eligible_count(), 100);
+        let during = sc.view(4.0);
+        assert_eq!(during.eligible_count(), 70);
+        assert_eq!(during.outage_excluded_count(), 30);
+        assert!(!during.eligible(0) && !during.eligible(29) && during.eligible(30));
+        // half-open window: over at start + dur
+        assert_eq!(sc.view(6.0).eligible_count(), 100);
+        assert_eq!(sc.view(6.0).outage_excluded_count(), 0);
+    }
+
+    #[test]
+    fn wave_rolls_a_duty_fraction_through_the_population() {
+        let cfg = ScenarioConfig {
+            wave: Some(WaveSpec { duty: 0.5 }),
+            ..ScenarioConfig::default()
+        };
+        let sc = Scenario::new(&cfg, 240).unwrap();
+        let v0 = sc.view(0.0);
+        // duty 0.5 → 12 of every 24 ids awake
+        assert_eq!(v0.eligible_count(), 120);
+        assert!(v0.eligible(0) && v0.eligible(11) && !v0.eligible(12));
+        // an hour later the awake set has rolled by one id
+        let v1 = sc.view(1.0);
+        assert!(!v1.eligible(11) && v1.eligible(23));
+        // fractional hours resolve to the floor hour
+        assert_eq!(sc.view(1.7), v1);
+    }
+
+    #[test]
+    fn closed_form_counts_match_a_brute_force_scan() {
+        // all three processes at once, across wrap-around and the outage
+        // boundary — the O(1) counts must equal an O(n) scan
+        let cfg = ScenarioConfig {
+            churn: Some(ChurnSpec {
+                rate_per_h: 0.07,
+                width_frac: 0.6,
+            }),
+            outage: Some(OutageSpec {
+                start_h: 2.0,
+                dur_h: 5.0,
+                frac: 0.25,
+            }),
+            wave: Some(WaveSpec { duty: 0.4 }),
+            horizon_h: 0.0,
+        };
+        let n = 173; // deliberately not a multiple of 24
+        let sc = Scenario::new(&cfg, n).unwrap();
+        for t in [0.0, 1.5, 2.0, 3.25, 6.9, 7.0, 13.0, 40.5] {
+            let v = sc.view(t);
+            let brute = brute_eligible(&v, n);
+            assert_eq!(v.eligible_count(), brute.len(), "t={t}");
+            let brute_outage: usize = (0..n)
+                .filter(|&ci| {
+                    v.in_churn_window(ci) && v.wave_awake(ci) && v.in_outage(ci)
+                })
+                .count();
+            assert_eq!(v.outage_excluded_count(), brute_outage, "t={t}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_times_give_identical_sequences() {
+        let cfg = ScenarioConfig {
+            churn: Some(ChurnSpec {
+                rate_per_h: 0.2,
+                width_frac: 0.8,
+            }),
+            outage: Some(OutageSpec {
+                start_h: 1.0,
+                dur_h: 3.0,
+                frac: 0.5,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let a = Scenario::new(&cfg, 1000).unwrap();
+        let b = Scenario::new(&cfg, 1000).unwrap();
+        for i in 0..20 {
+            let t = i as f64 * 0.37;
+            assert_eq!(a.view(t), b.view(t), "t={t}");
+            assert_eq!(a.churn_offset_raw(t), b.churn_offset_raw(t));
+        }
+    }
+}

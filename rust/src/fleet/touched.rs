@@ -1,0 +1,145 @@
+//! Sparse per-client scheduler state: entries exist only for clients the
+//! scheduler has ever selected.
+//!
+//! The eager scheduler kept `last_selected: Vec<i64>` and
+//! `signals: Vec<f32>` sized to the fleet — O(fleet) resident bytes even
+//! when a 10M-client run only ever touches a few thousand devices. The
+//! [`TouchedState`] replaces both with one compact hash map keyed by client
+//! id; a client absent from the map reads as the legacy defaults
+//! (`last_selected = -1`, `signal = 0.0`), so the selection policies see
+//! exactly the state they saw before. The invariant
+//! `clients_touched() ≤ clients ever selected` is test-enforced
+//! (`tests/fleet_scale.rs`) and exported as the `fleet.clients_touched` /
+//! `fleet.resident_bytes` gauges.
+
+use std::collections::HashMap;
+
+/// Scheduler state for one ever-selected client.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientTouch {
+    /// Last round this client was selected (`-1` before any selection —
+    /// the legacy dense-vector default).
+    pub last_selected: i64,
+    /// Last observed update norm (the loss-weighted policy's signal;
+    /// `0.0` until the client first completes a round).
+    pub signal: f32,
+}
+
+impl Default for ClientTouch {
+    fn default() -> Self {
+        ClientTouch {
+            last_selected: -1,
+            signal: 0.0,
+        }
+    }
+}
+
+/// Sparse map of per-client scheduler state. Memory is O(clients ever
+/// selected), independent of fleet size.
+#[derive(Clone, Debug, Default)]
+pub struct TouchedState {
+    entries: HashMap<usize, ClientTouch>,
+}
+
+impl TouchedState {
+    pub fn new() -> Self {
+        TouchedState::default()
+    }
+
+    /// Number of clients with resident state (ever selected).
+    pub fn clients_touched(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Approximate resident bytes of the store (entries × slot size; the
+    /// map's load-factor overhead is bounded by a constant factor).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.entries.len() * (std::mem::size_of::<usize>() + std::mem::size_of::<ClientTouch>()))
+            as u64
+    }
+
+    /// Last round `ci` was selected; `-1` if never.
+    pub fn last_selected(&self, ci: usize) -> i64 {
+        self.entries.get(&ci).map_or(-1, |t| t.last_selected)
+    }
+
+    /// Last observed update-norm signal for `ci`; `0.0` if never observed.
+    pub fn signal(&self, ci: usize) -> f32 {
+        self.entries.get(&ci).map_or(0.0, |t| t.signal)
+    }
+
+    /// Whether `ci` has ever been selected.
+    pub fn contains(&self, ci: usize) -> bool {
+        self.entries.contains_key(&ci)
+    }
+
+    /// Record a selection: `ci` was picked in `round`.
+    pub fn mark_selected(&mut self, ci: usize, round: i64) {
+        self.entries.entry(ci).or_default().last_selected = round;
+    }
+
+    /// Record an observed update norm for `ci`. Only called for cohort
+    /// members (already marked selected), so it never grows the map past
+    /// the ever-selected set.
+    pub fn set_signal(&mut self, ci: usize, signal: f32) {
+        self.entries.entry(ci).or_default().signal = signal;
+    }
+
+    /// Touched client ids in ascending order — the deterministic iteration
+    /// order every sparse sampling path uses (hash-map order is not
+    /// seed-stable).
+    pub fn sorted_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.entries.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// `(id, state)` pairs in ascending id order.
+    pub fn sorted_entries(&self) -> Vec<(usize, ClientTouch)> {
+        let mut out: Vec<(usize, ClientTouch)> =
+            self.entries.iter().map(|(&k, &v)| (k, v)).collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_clients_read_the_legacy_defaults() {
+        let ts = TouchedState::new();
+        assert_eq!(ts.last_selected(42), -1);
+        assert_eq!(ts.signal(42), 0.0);
+        assert_eq!(ts.clients_touched(), 0);
+        assert_eq!(ts.resident_bytes(), 0);
+        assert!(!ts.contains(42));
+    }
+
+    #[test]
+    fn state_grows_only_with_touched_clients() {
+        let mut ts = TouchedState::new();
+        ts.mark_selected(7, 0);
+        ts.mark_selected(1_000_000, 0);
+        ts.mark_selected(7, 3); // re-selection updates in place
+        ts.set_signal(7, 2.5);
+        assert_eq!(ts.clients_touched(), 2);
+        assert_eq!(ts.last_selected(7), 3);
+        assert_eq!(ts.signal(7), 2.5);
+        assert_eq!(ts.last_selected(1_000_000), 0);
+        assert_eq!(ts.signal(1_000_000), 0.0);
+        assert!(ts.resident_bytes() > 0);
+        assert_eq!(ts.sorted_ids(), vec![7, 1_000_000]);
+    }
+
+    #[test]
+    fn sorted_entries_are_ascending_and_complete() {
+        let mut ts = TouchedState::new();
+        for &ci in &[9usize, 2, 5, 100] {
+            ts.mark_selected(ci, 1);
+        }
+        let ids: Vec<usize> = ts.sorted_entries().iter().map(|&(k, _)| k).collect();
+        assert_eq!(ids, vec![2, 5, 9, 100]);
+    }
+}

@@ -45,6 +45,7 @@ pub mod data;
 pub mod error;
 pub mod experiments;
 pub mod fedselect;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod native;
@@ -69,6 +70,9 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::fedselect::{
         ClientKeys, KeyPolicy, RoundSession, SliceBundle, SliceImpl, SliceService,
+    };
+    pub use crate::fleet::{
+        ChurnSpec, OutageSpec, Scenario, ScenarioConfig, TouchedState, WaveSpec,
     };
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
     pub use crate::obs::{

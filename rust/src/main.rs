@@ -4,10 +4,13 @@
 //! fedselect train       [--model logreg|mlp|cnn|transformer] [--vocab N]
 //!                       [--key-policy top:M] [--policy2 random-global:D]
 //!                       [--fleet uniform|tiered-3|diurnal|flaky-edge|trace:PATH]
+//!                       [--fleet-size N]
 //!                       [--sched-policy uniform|availability-aware|
 //!                                       memory-capped|staleness-fair|
 //!                                       loss-weighted]
 //!                       [--mem-cap-frac F]
+//!                       [--churn RATE[:WIDTH]] [--outage START:DUR:FRAC]
+//!                       [--wave DUTY] [--horizon HOURS]
 //!                       [--agg-mode sync|over-select|buffered]
 //!                       [--over-select-frac F] [--goal-count N]
 //!                       [--max-staleness S]
@@ -24,7 +27,7 @@
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
 //!                       [--trace-out PATH] [--trace-format jsonl|chrome]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
-//!                            secagg|cache|multitenant|all|list
+//!                            secagg|cache|multitenant|scale|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -55,6 +58,7 @@ use fedselect::coordinator::{AggregationMode, Trainer};
 use fedselect::error::{Error, Result};
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
+use fedselect::fleet::{ChurnSpec, OutageSpec, WaveSpec};
 use fedselect::metrics::{fleet_summary_from, human_bytes};
 use fedselect::obs::{self, LogLevel, TraceFormat};
 use fedselect::optim::ServerOpt;
@@ -275,10 +279,26 @@ fn cmd_train(a: &Args) -> Result<()> {
         .str_or("fleet", "uniform")
         .parse::<FleetKind>()
         .map_err(Error::Config)?;
+    // --fleet-size 0 (default) keeps the legacy dataset-sized fleet;
+    // profiles are lazy, so a 10M-client fleet costs nothing until touched
+    cfg.fleet_size = a.parse_or("fleet-size", 0usize).map_err(Error::Config)?;
     if let Some(sp) = sched_policy {
         cfg.sched_policy = sp;
     }
     cfg.mem_cap_frac = a.parse_or("mem-cap-frac", 0.25f64).map_err(Error::Config)?;
+    // scale scenarios: churn / regional outage / diurnal wave shape
+    // per-round eligibility on the simulated clock; --horizon bounds the
+    // run by sim time instead of round count
+    if let Some(v) = a.get("churn") {
+        cfg.scenario.churn = Some(ChurnSpec::parse(v)?);
+    }
+    if let Some(v) = a.get("outage") {
+        cfg.scenario.outage = Some(OutageSpec::parse(v)?);
+    }
+    if let Some(v) = a.get("wave") {
+        cfg.scenario.wave = Some(WaveSpec::parse(v)?);
+    }
+    cfg.scenario.horizon_h = a.parse_or("horizon", 0.0f64).map_err(Error::Config)?;
     // deprecated scalar dropout: accepted under both historical spellings,
     // mapped onto a fleet-wide failure hazard (flaky-edge style)
     let dropout = a.parse_or("dropout", 0.0f32).map_err(Error::Config)?;
@@ -362,6 +382,20 @@ fn cmd_train(a: &Args) -> Result<()> {
             report.total_sim_s,
             tiers.join(" ")
         );
+        // fleet-scale ledger: only printed when a scale knob is on, so
+        // legacy invocations keep their historical stdout bytes
+        if tr.cfg.fleet_size > 0 || tr.cfg.scenario.shapes_eligibility() {
+            obs_info!(
+                "fleet scale (last round): eligible {} | arrivals {} | departures {} | \
+                 outage-excluded {} | touched {} | resident {}",
+                last.eligible,
+                last.arrivals,
+                last.departures,
+                last.outage_excluded,
+                last.clients_touched,
+                human_bytes(last.resident_bytes)
+            );
+        }
         if last.mode != AggregationMode::Synchronous {
             obs_info!(
                 "agg mode {} (last round): merged {} | discarded {} | mean staleness {:.2} \

@@ -77,6 +77,23 @@ pub mod keys {
     pub const CACHE_STALE_REFRESHES: &str = "cache.stale_refreshes";
     /// Gauge: accumulated simulated fleet time (sum of `sim_round_s`).
     pub const SIM_TOTAL_S: &str = "sim.total_s";
+    /// Gauge: clients eligible for selection in the latest round (fleet
+    /// size minus scenario churn/outage exclusions).
+    pub const FLEET_ELIGIBLE: &str = "fleet.eligible";
+    /// Gauge: ever-selected clients with resident touched-state after the
+    /// latest round.
+    pub const FLEET_CLIENTS_TOUCHED: &str = "fleet.clients_touched";
+    /// Gauge: resident scheduler-state bytes (touched entries + on-device
+    /// caches + trace profile rows) after the latest round.
+    pub const FLEET_RESIDENT_BYTES: &str = "fleet.resident_bytes";
+    /// Counter: clients entering the eligible population across churn
+    /// window boundaries.
+    pub const FLEET_ARRIVALS: &str = "fleet.arrivals";
+    /// Counter: clients leaving the eligible population across churn
+    /// window boundaries.
+    pub const FLEET_DEPARTURES: &str = "fleet.departures";
+    /// Counter: client-rounds excluded by regional outage windows.
+    pub const FLEET_OUTAGE_EXCLUDED: &str = "fleet.outage_excluded";
     /// Counter vec (index = fleet tier): merged updates.
     pub const TIER_COMPLETED: &str = "tier.completed";
     /// Counter vec (index = fleet tier): post-fetch dropouts.
@@ -121,6 +138,12 @@ pub fn record_round(reg: &mut MetricsRegistry, r: &RoundRecord) {
     reg.counter_add(keys::CACHE_EVICTIONS, r.cache_evictions);
     reg.counter_add(keys::CACHE_STALE_REFRESHES, r.cache_stale_refreshes);
     reg.gauge_add(keys::SIM_TOTAL_S, r.sim_round_s);
+    reg.gauge_set(keys::FLEET_ELIGIBLE, r.eligible as f64);
+    reg.gauge_set(keys::FLEET_CLIENTS_TOUCHED, r.clients_touched as f64);
+    reg.gauge_set(keys::FLEET_RESIDENT_BYTES, r.resident_bytes as f64);
+    reg.counter_add(keys::FLEET_ARRIVALS, r.arrivals as u64);
+    reg.counter_add(keys::FLEET_DEPARTURES, r.departures as u64);
+    reg.counter_add(keys::FLEET_OUTAGE_EXCLUDED, r.outage_excluded as u64);
     for (t, &v) in r.tier_completed.iter().enumerate() {
         reg.counter_vec_add(keys::TIER_COMPLETED, t, v as u64);
     }
@@ -172,12 +195,25 @@ pub fn fleet_summary_from(fleet: &Fleet, reg: &MetricsRegistry) -> Table {
             "dropped", "discarded", "down_total", "cache_hit%",
         ],
     );
+    // One streaming pass over the lazy fleet: per-tier characteristic sums
+    // accumulate in client order, so the means are bit-identical to the old
+    // eager per-tier filter (same clients, same addition order) without
+    // materializing a profile table. Rows then render in canonical
+    // ascending-tier order — byte-stable regardless of fetch threading or
+    // lazy/eager mode.
+    let mut down_sum = vec![0.0f64; tiers];
+    let mut mem_sum = vec![0.0f64; tiers];
+    let mut hazard_sum = vec![0.0f64; tiers];
+    for p in fleet.iter_profiles() {
+        down_sum[p.tier] += p.down_bps;
+        mem_sum[p.tier] += p.mem_frac;
+        hazard_sum[p.tier] += p.hazard as f64;
+    }
     for t in 0..tiers {
-        let profiles: Vec<_> = fleet.profiles.iter().filter(|p| p.tier == t).collect();
-        let n = profiles.len().max(1) as f64;
-        let mean_down = profiles.iter().map(|p| p.down_bps).sum::<f64>() / n;
-        let mean_mem = profiles.iter().map(|p| p.mem_frac).sum::<f64>() / n;
-        let mean_hazard = profiles.iter().map(|p| p.hazard as f64).sum::<f64>() / n;
+        let n = sizes[t].max(1) as f64;
+        let mean_down = down_sum[t] / n;
+        let mean_mem = mem_sum[t] / n;
+        let mean_hazard = hazard_sum[t] / n;
         let completed = at(keys::TIER_COMPLETED, t);
         let dropped = at(keys::TIER_DROPPED, t);
         let discarded = at(keys::TIER_DISCARDED, t);
@@ -449,6 +485,12 @@ mod tests {
             cache_evictions: 0,
             cache_stale_refreshes: 0,
             deferrals: 0,
+            eligible: 30,
+            arrivals: 2,
+            departures: 1,
+            outage_excluded: 3,
+            clients_touched: 6,
+            resident_bytes: 480,
         }
     }
 
@@ -480,6 +522,14 @@ mod tests {
         assert_eq!(reg.counter(keys::DROPPED), 2);
         assert_eq!(reg.counter_vec(keys::TIER_DOWN_BYTES), &[200, 400, 600]);
         assert!((reg.gauge(keys::SIM_TOTAL_S) - 4.0).abs() < 1e-12);
+        // fleet-scale gauges hold the latest round's value; arrival /
+        // departure / outage tallies accumulate
+        assert_eq!(reg.gauge(keys::FLEET_ELIGIBLE), 30.0);
+        assert_eq!(reg.gauge(keys::FLEET_CLIENTS_TOUCHED), 6.0);
+        assert_eq!(reg.gauge(keys::FLEET_RESIDENT_BYTES), 480.0);
+        assert_eq!(reg.counter(keys::FLEET_ARRIVALS), 4);
+        assert_eq!(reg.counter(keys::FLEET_DEPARTURES), 2);
+        assert_eq!(reg.counter(keys::FLEET_OUTAGE_EXCLUDED), 6);
         // and the registry-rendered table matches the ledger-walking path
         use crate::scheduler::FleetKind;
         let fleet = Fleet::generate(FleetKind::Tiered3, 30, 7, 0.25).unwrap();
@@ -487,6 +537,25 @@ mod tests {
         let a = fleet_summary(&fleet, &recs);
         let b = fleet_summary_from(&fleet, &fleet_registry(&recs));
         assert_eq!(a.to_pretty(), b.to_pretty());
+    }
+
+    #[test]
+    fn fleet_summary_rows_follow_canonical_tier_order() {
+        use crate::scheduler::FleetKind;
+        // Rows must come out in ascending tier-index order and render
+        // byte-identically on repeated calls, independent of how the fleet
+        // was touched beforehand (lazy generation has no iteration-order
+        // state to leak).
+        let fleet = Fleet::generate(FleetKind::Tiered3, 60, 11, 0.25).unwrap();
+        let _ = fleet.profile(59); // touch out of order
+        let rec = sample_record();
+        let a = fleet_summary(&fleet, &[rec.clone()]);
+        for (t, row) in a.rows.iter().enumerate() {
+            assert_eq!(row[0], fleet.tier_name(t));
+        }
+        let b = fleet_summary(&fleet, &[rec]);
+        assert_eq!(a.to_pretty(), b.to_pretty());
+        assert_eq!(a.to_csv(), b.to_csv());
     }
 
     fn sample_multireport() -> crate::tenancy::MultiReport {

@@ -154,7 +154,10 @@ pub enum TraceEvent {
         tier: Option<usize>,
         stage: ClientStage,
     },
-    /// Round footer: the engine's close decision and the sim-clock tick.
+    /// Round footer: the engine's close decision, the sim-clock tick, and
+    /// the fleet-scale gauges (eligibility under churn/outage scenarios,
+    /// arrivals/departures across the churn window boundary, and the
+    /// touched-state footprint of the lazy fleet).
     RoundClose {
         ns: u32,
         round: usize,
@@ -168,6 +171,12 @@ pub enum TraceEvent {
         sim_total_s: f64,
         down_bytes: u64,
         up_bytes: u64,
+        eligible: usize,
+        arrivals: usize,
+        departures: usize,
+        outage_excluded: usize,
+        clients_touched: usize,
+        resident_bytes: u64,
     },
     /// Held-out evaluation result.
     Eval {

@@ -122,6 +122,12 @@ pub fn encode_event(ev: &TraceEvent) -> Json {
             sim_total_s,
             down_bytes,
             up_bytes,
+            eligible,
+            arrivals,
+            departures,
+            outage_excluded,
+            clients_touched,
+            resident_bytes,
         } => obj(vec![
             ("t", tag),
             ("ns", uint(*ns as u64)),
@@ -136,6 +142,12 @@ pub fn encode_event(ev: &TraceEvent) -> Json {
             ("sim_total_s", num(*sim_total_s)),
             ("down_bytes", uint(*down_bytes)),
             ("up_bytes", uint(*up_bytes)),
+            ("eligible", uint(*eligible as u64)),
+            ("arrivals", uint(*arrivals as u64)),
+            ("departures", uint(*departures as u64)),
+            ("outage_excluded", uint(*outage_excluded as u64)),
+            ("clients_touched", uint(*clients_touched as u64)),
+            ("resident_bytes", uint(*resident_bytes)),
         ]),
         TraceEvent::Eval { ns, round, loss, metric, examples, wall_ms } => obj(vec![
             ("t", tag),
@@ -301,6 +313,12 @@ fn required_keys(tag: &str) -> Option<&'static [&'static str]> {
             "sim_total_s",
             "down_bytes",
             "up_bytes",
+            "eligible",
+            "arrivals",
+            "departures",
+            "outage_excluded",
+            "clients_touched",
+            "resident_bytes",
         ],
         "eval" => &["ns", "round", "loss", "metric", "examples", "wall_ms"],
         "tick" => &["tick", "granted"],
@@ -434,6 +452,12 @@ mod tests {
                 sim_total_s: 13.0,
                 down_bytes: 4096,
                 up_bytes: 2048,
+                eligible: 8,
+                arrivals: 1,
+                departures: 1,
+                outage_excluded: 0,
+                clients_touched: 6,
+                resident_bytes: 512,
             },
             TraceEvent::Log { level: LogLevel::Info, msg: "hello".to_string() },
             TraceEvent::RunEnd { ns: 0, rounds: 2, sim_total_s: 26.0 },

@@ -7,9 +7,12 @@
 //! pays off when who is selected and how much each device can hold is
 //! modeled per client. This subsystem makes that first-class:
 //!
-//! * [`Fleet`] / [`DeviceProfile`] ([`profiles`]) — a device-population
-//!   model (bandwidth, compute, memory cap, availability trace, failure
-//!   hazard), generated deterministically from the run seed;
+//! * [`Fleet`] / [`DeviceProfile`] ([`crate::fleet`]) — a lazy
+//!   device-population model (bandwidth, compute, memory cap, availability
+//!   trace, failure hazard); profiles are recomputed on demand as a pure
+//!   function of `(run seed, client id)`, so fleets of millions cost no
+//!   resident memory, and per-client scheduler state lives in a sparse
+//!   [`TouchedState`] keyed only by ever-selected clients;
 //! * [`SelectionPolicy`] ([`policy`]) — pluggable cohort selection:
 //!   [`policy::Uniform`] (byte-identical to the pre-scheduler coordinator),
 //!   [`policy::AvailabilityAware`], [`policy::MemoryCapped`] (clamps each
@@ -33,16 +36,19 @@
 //! byte-for-byte in `tests/scheduler_determinism.rs`.
 
 pub mod policy;
-pub mod profiles;
 pub mod simclock;
 
+// The fleet moved to its own subsystem (`crate::fleet`) when it went lazy;
+// these re-exports keep the scheduler's public surface (and the prelude)
+// stable for existing users.
+pub use crate::fleet::{DeviceProfile, Fleet, FleetKind};
 pub use policy::{PlanCtx, Selection, SelectionPolicy};
-pub use profiles::{DeviceProfile, Fleet, FleetKind};
 pub use simclock::{ClientTiming, CompletionEvent, SimClock, ROUND_OVERHEAD_S};
 
-use crate::cache::FleetCaches;
+use crate::cache::{BudgetSource, FleetCaches};
 use crate::config::TrainConfig;
 use crate::error::Result;
+use crate::fleet::{Scenario, TouchedState};
 use crate::tensor::rng::Rng;
 
 /// Which built-in selection policy to instantiate (config-level knob).
@@ -150,6 +156,16 @@ pub struct RoundPlan {
     /// configured policies as-is; guaranteed `None` under
     /// [`SchedPolicy::Uniform`], preserving byte-identity).
     pub key_budgets: Option<Vec<Vec<usize>>>,
+    /// Clients eligible for selection this round (fleet minus scenario
+    /// ineligibility minus the in-flight exclusion set).
+    pub eligible: usize,
+    /// Clients that churned into the population since the last plan.
+    pub arrivals: usize,
+    /// Clients that churned out of the population since the last plan.
+    pub departures: usize,
+    /// Clients a regional outage is excluding right now (would otherwise
+    /// be eligible).
+    pub outage_excluded: usize,
 }
 
 /// What one cohort slot actually did this round, reported back by the
@@ -191,16 +207,21 @@ pub struct Scheduler {
     policy_kind: SchedPolicy,
     policy: Box<dyn SelectionPolicy>,
     clock: SimClock,
-    /// Last round each train client was selected (-1 = never).
-    last_selected: Vec<i64>,
-    /// Last observed update norm per train client (0 = never participated);
-    /// what the `loss-weighted` policy samples on.
-    signals: Vec<f32>,
-    /// Cross-round on-device slice caches, one per train client — device
-    /// state like the profiles, so it lives with the fleet. Installed by
+    /// Sparse per-client scheduler state (staleness counters + training
+    /// signals), resident only for ever-selected clients.
+    touched: TouchedState,
+    /// Cross-round on-device slice caches — device state like the
+    /// profiles, so it lives with the fleet; a client's cache is allocated
+    /// on its first commit ([`Scheduler::ensure_cache`]). Installed by
     /// the trainer (which knows the model geometry the budgets derive
     /// from) when `--cache` is on; `None` otherwise.
     caches: Option<FleetCaches>,
+    /// Churn / outage / wave processes; `None` when no scenario knob is
+    /// set (the legacy, bit-exact path).
+    scenario: Option<Scenario>,
+    /// Churn window offset at the previous plan, for arrival/departure
+    /// ledger deltas.
+    churn_prev_raw: Option<u64>,
 }
 
 impl Scheduler {
@@ -212,26 +233,55 @@ impl Scheduler {
     /// hazard), so reporting over the fleet shows the hazards the run
     /// actually used.
     pub fn new(cfg: &TrainConfig, n_train_clients: usize) -> Result<Self> {
-        let mut fleet =
-            Fleet::generate(cfg.fleet.clone(), n_train_clients, cfg.seed, cfg.mem_cap_frac)?;
+        // `--fleet-size 0` (the default) sizes the fleet to the dataset;
+        // a larger fleet maps client ids onto dataset clients modulo
+        // n_train at fetch time (coordinator), so selection runs over the
+        // full population.
+        let fleet_n = if cfg.fleet_size > 0 {
+            cfg.fleet_size
+        } else {
+            n_train_clients
+        };
+        let mut fleet = Fleet::generate(cfg.fleet.clone(), fleet_n, cfg.seed, cfg.mem_cap_frac)?;
         if cfg.dropout_rate > 0.0 {
-            for p in &mut fleet.profiles {
-                p.hazard = p.hazard.max(cfg.dropout_rate);
-            }
+            fleet.set_hazard_floor(cfg.dropout_rate);
         }
+        let scenario = Scenario::new(&cfg.scenario, fleet_n);
         Ok(Scheduler {
             fleet,
             policy_kind: cfg.sched_policy,
             policy: cfg.sched_policy.build(),
             clock: SimClock::new(),
-            last_selected: vec![-1; n_train_clients],
-            signals: vec![0.0; n_train_clients],
+            touched: TouchedState::new(),
             caches: None,
+            scenario,
+            churn_prev_raw: None,
         })
     }
 
     pub fn fleet(&self) -> &Fleet {
         &self.fleet
+    }
+
+    /// The sparse per-client scheduler state (ever-selected clients only).
+    pub fn touched(&self) -> &TouchedState {
+        &self.touched
+    }
+
+    /// Clients with any resident scheduler state — by construction, the
+    /// clients ever selected.
+    pub fn clients_touched(&self) -> usize {
+        self.touched.clients_touched()
+    }
+
+    /// Approximate resident bytes of all per-client state: touched-state
+    /// entries, allocated client caches, and the fleet's trace rows.
+    /// Proportional to touched clients, independent of fleet size — the
+    /// `fleet.resident_bytes` gauge.
+    pub fn resident_state_bytes(&self) -> u64 {
+        self.touched.resident_bytes()
+            + self.caches.as_ref().map_or(0, |c| c.resident_bytes())
+            + self.fleet.resident_bytes()
     }
 
     /// Attach the cross-round client caches (one per train client). Called
@@ -257,6 +307,30 @@ impl Scheduler {
     /// bytes without sharing ownership.
     pub fn take_caches(&mut self) -> Option<FleetCaches> {
         self.caches.take()
+    }
+
+    /// The byte budget client `ci`'s cache would get, from the installed
+    /// caches' budget source (explicit table, or derived from the device
+    /// profile). `None` when no caches are installed.
+    pub fn cache_budget_of(&self, ci: usize) -> Option<u64> {
+        let caches = self.caches.as_ref()?;
+        Some(match caches.budget_source() {
+            BudgetSource::Table(t) => t.get(ci).copied().unwrap_or(0),
+            BudgetSource::Derived { server_bytes, frac } => {
+                (self.fleet.profile(ci).mem_bytes(*server_bytes) as f64 * frac) as u64
+            }
+        })
+    }
+
+    /// Allocate client `ci`'s cache if absent (first commit), at the
+    /// budget its device profile derives. No-op without installed caches.
+    pub fn ensure_cache(&mut self, ci: usize) {
+        let Some(budget) = self.cache_budget_of(ci) else {
+            return;
+        };
+        if let Some(caches) = self.caches.as_mut() {
+            caches.ensure(ci, budget);
+        }
     }
 
     pub fn policy_kind(&self) -> SchedPolicy {
@@ -287,35 +361,58 @@ impl Scheduler {
         rng: &mut Rng,
         exclude: &[usize],
     ) -> RoundPlan {
-        let mut excluded = vec![false; self.fleet.len()];
-        for &ci in exclude {
-            if ci < excluded.len() {
-                excluded[ci] = true;
+        let n = self.fleet.len();
+        let mut excluded: Vec<usize> = exclude.iter().copied().filter(|&ci| ci < n).collect();
+        excluded.sort_unstable();
+        excluded.dedup();
+        // Scenario eligibility is frozen at the round's sim-time start;
+        // ledger counts are closed-form (no fleet scan).
+        let t_h = self.clock.now_s() / 3600.0;
+        let view = self.scenario.as_ref().map(|s| s.view(t_h));
+        let (arrivals, departures) = match (&self.scenario, &view) {
+            (Some(s), Some(v)) if v.churn_active() => {
+                let raw = s.churn_offset_raw(t_h);
+                let prev = self.churn_prev_raw.replace(raw).unwrap_or(raw);
+                let d = raw.saturating_sub(prev).min(n as u64) as usize;
+                (d, d)
             }
-        }
+            _ => (0, 0),
+        };
+        let outage_excluded = view.as_ref().map_or(0, |v| v.outage_excluded_count());
+        let eligible = match &view {
+            Some(v) => {
+                let in_view = excluded.iter().filter(|&&ci| v.eligible(ci)).count();
+                v.eligible_count().saturating_sub(in_view)
+            }
+            None => n - excluded.len(),
+        };
         let ctx = PlanCtx {
             round,
             cohort,
             fleet: &self.fleet,
-            last_selected: &self.last_selected,
-            signals: &self.signals,
+            touched: &self.touched,
             excluded: &excluded,
+            scenario: view.as_ref(),
             geom,
         };
         let sel = self.policy.select(&ctx, rng);
         for &ci in &sel.cohort {
-            self.last_selected[ci] = round as i64;
+            self.touched.mark_selected(ci, round as i64);
         }
         let hazards = sel
             .cohort
             .iter()
-            .map(|&ci| self.fleet.profiles[ci].hazard)
+            .map(|&ci| self.fleet.profile(ci).hazard)
             .collect();
         RoundPlan {
             round,
             cohort: sel.cohort,
             hazards,
             key_budgets: sel.key_budgets,
+            eligible,
+            arrivals,
+            departures,
+            outage_excluded,
         }
     }
 
@@ -333,9 +430,9 @@ impl Scheduler {
             .enumerate()
             .filter(|(_, (_, st))| !st.dropped)
             .map(|(slot, (&ci, st))| {
-                let p = &self.fleet.profiles[ci];
+                let p = self.fleet.profile(ci);
                 let timing =
-                    SimClock::client_timing(p, st.down_bytes, st.up_bytes, st.compute_units);
+                    SimClock::client_timing(&p, st.down_bytes, st.up_bytes, st.compute_units);
                 CompletionEvent {
                     slot,
                     client: ci,
@@ -392,12 +489,14 @@ impl Scheduler {
             ..RoundSim::default()
         };
         for (&ci, st) in plan.cohort.iter().zip(stats.iter()) {
-            let p = &self.fleet.profiles[ci];
+            let p = self.fleet.profile(ci);
             sim.tier_down_bytes[p.tier] += st.down_bytes;
             if st.dropped {
                 sim.tier_dropped[p.tier] += 1;
             } else {
-                self.signals[ci] = st.update_norm;
+                // cohort members are already marked selected, so this
+                // never grows the touched set past ever-selected clients
+                self.touched.set_signal(ci, st.update_norm);
             }
         }
         for &t in merged_tiers {

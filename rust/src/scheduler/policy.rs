@@ -1,12 +1,24 @@
 //! Pluggable cohort-selection policies.
 //!
-//! A [`SelectionPolicy`] turns the round context (fleet, staleness state,
-//! slice geometry) plus the round RNG into a cohort and, optionally,
-//! per-client select-key budgets. [`Uniform`] is byte-identical to the
-//! pre-scheduler coordinator's inline sampling at the same seed: it makes
-//! exactly one `sample_without_replacement(n, k)` call on the round RNG and
-//! nothing else consumes entropy on that path.
+//! A [`SelectionPolicy`] turns the round context (fleet, sparse touched
+//! state, scenario eligibility, slice geometry) plus the round RNG into a
+//! cohort and, optionally, per-client select-key budgets. [`Uniform`] is
+//! byte-identical to the pre-scheduler coordinator's inline sampling at
+//! the same seed: it makes exactly one `sample_without_replacement(n, k)`
+//! call on the round RNG and nothing else consumes entropy on that path.
+//!
+//! **Dense vs sparse.** At fleet sizes up to
+//! [`SPARSE_SCAN_THRESHOLD`] every policy runs its legacy dense scan —
+//! bit-for-bit the pre-lazy behavior (the byte-identity contract,
+//! property-tested in `tests/scheduler_determinism.rs`). Larger fleets
+//! switch to the stratified samplers in [`crate::fleet::sampling`], which
+//! cost O(cohort + touched) instead of O(fleet). Sparse cohorts are
+//! deterministic in the seed but consume the RNG differently from the
+//! dense scans — the threshold pins every seed-size config to the dense
+//! path, so nothing the byte-identity suite locks ever crosses over.
 
+use crate::fleet::sampling::{rejection_sample, TwoStratumSampler, SPARSE_SCAN_THRESHOLD};
+use crate::fleet::{EligibilityView, TouchedState};
 use crate::scheduler::{Fleet, SliceGeometry};
 use crate::tensor::rng::Rng;
 
@@ -17,29 +29,58 @@ pub struct PlanCtx<'a> {
     /// Requested cohort size.
     pub cohort: usize,
     pub fleet: &'a Fleet,
-    /// Per train client: last round it was selected, or -1 if never.
-    pub last_selected: &'a [i64],
-    /// Per train client: update norm from its last participation, or 0 if
-    /// it never participated — the [`LossWeighted`] importance signal.
-    pub signals: &'a [f32],
-    /// Per train client: `true` = may not be selected this round. The round
-    /// engine excludes clients with an update still in flight (FedBuff caps
-    /// per-client concurrency at one); all-`false` outside buffered mode,
-    /// and every policy must fall back to its exact legacy RNG consumption
-    /// in that case (the byte-identity contract).
-    pub excluded: &'a [bool],
+    /// Sparse per-client scheduler state: staleness counters and training
+    /// signals for ever-selected clients (legacy defaults for the rest).
+    pub touched: &'a TouchedState,
+    /// Sorted, deduped client ids that may not be selected this round. The
+    /// round engine excludes clients with an update still in flight
+    /// (FedBuff caps per-client concurrency at one); empty outside
+    /// buffered mode, and every policy must fall back to its exact legacy
+    /// RNG consumption in that case (the byte-identity contract).
+    pub excluded: &'a [usize],
+    /// Scenario eligibility (churn/outage/wave) frozen at this round's
+    /// sim time; `None` when no scenario is active (the legacy path).
+    pub scenario: Option<&'a EligibilityView>,
     pub geom: &'a SliceGeometry,
 }
 
 impl PlanCtx<'_> {
-    /// The selectable client indices, or `None` when nobody is excluded (the
-    /// legacy full-population path — policies must keep its RNG consumption
-    /// bit-exact).
+    /// Last round `ci` was selected, or -1 if never.
+    pub fn last_selected(&self, ci: usize) -> i64 {
+        self.touched.last_selected(ci)
+    }
+
+    /// Update norm from `ci`'s last participation, or 0 if it never
+    /// participated — the [`LossWeighted`] importance signal.
+    pub fn signal(&self, ci: usize) -> f32 {
+        self.touched.signal(ci)
+    }
+
+    /// Whether `ci` may not be selected this round (in-flight exclusion
+    /// or scenario ineligibility). O(log |excluded|).
+    pub fn is_excluded(&self, ci: usize) -> bool {
+        self.excluded.binary_search(&ci).is_ok()
+            || self.scenario.is_some_and(|v| !v.eligible(ci))
+    }
+
+    /// Whether anything constrains the selectable pool.
+    fn constrained(&self) -> bool {
+        !self.excluded.is_empty() || self.scenario.is_some()
+    }
+
+    /// Whether this fleet is past the dense-scan threshold.
+    fn sparse(&self) -> bool {
+        self.fleet.len() > SPARSE_SCAN_THRESHOLD
+    }
+
+    /// The selectable client indices, or `None` when the pool is
+    /// unconstrained (the legacy full-population path — policies must keep
+    /// its RNG consumption bit-exact). Dense path only: O(fleet).
     pub fn eligible(&self) -> Option<Vec<usize>> {
-        if self.excluded.iter().any(|&e| e) {
+        if self.constrained() {
             Some(
                 (0..self.fleet.len())
-                    .filter(|&i| !self.excluded[i])
+                    .filter(|&i| !self.is_excluded(i))
                     .collect(),
             )
         } else {
@@ -48,7 +89,7 @@ impl PlanCtx<'_> {
     }
 }
 
-/// A policy's output: the cohort (train-client indices) and optional
+/// A policy's output: the cohort (client indices) and optional
 /// per-cohort-slot, per-keyspace key budgets (`None` = the configured
 /// [`crate::fedselect::KeyPolicy`] budgets apply unchanged).
 pub struct Selection {
@@ -68,18 +109,23 @@ fn uniform_cohort(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
     rng.sample_without_replacement(n, k.min(n))
 }
 
-/// Uniform draw over the eligible pool: the exact legacy
-/// `sample_without_replacement` when nobody is excluded (the byte-identity
-/// contract), an index-remapped draw over the eligible list otherwise.
-/// Shared by every policy whose cohort draw is uniform.
+/// Uniform draw over the eligible pool. Unconstrained: the exact legacy
+/// `sample_without_replacement` (the byte-identity contract — and already
+/// O(cohort) at huge n, so the sparse path shares it). Constrained dense:
+/// an index-remapped draw over the eligible list. Constrained sparse:
+/// bounded rejection sampling — never an O(fleet) scan.
 fn uniform_eligible(ctx: &PlanCtx, rng: &mut Rng) -> Vec<usize> {
-    match ctx.eligible() {
-        None => uniform_cohort(ctx.fleet.len(), ctx.cohort, rng),
-        Some(el) => uniform_cohort(el.len(), ctx.cohort, rng)
-            .into_iter()
-            .map(|j| el[j])
-            .collect(),
+    if !ctx.constrained() {
+        return uniform_cohort(ctx.fleet.len(), ctx.cohort, rng);
     }
+    if ctx.sparse() {
+        return rejection_sample(rng, ctx.fleet.len(), ctx.cohort, |ci| !ctx.is_excluded(ci));
+    }
+    let el = ctx.eligible().expect("constrained");
+    uniform_cohort(el.len(), ctx.cohort, rng)
+        .into_iter()
+        .map(|j| el[j])
+        .collect()
 }
 
 /// §5.1 uniform sampling without replacement — the paper's baseline and the
@@ -110,8 +156,24 @@ impl SelectionPolicy for AvailabilityAware {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        if ctx.sparse() {
+            // availability is closed-form per profile, so rejection probes
+            // it in O(1) without enumerating the online set
+            let picks = rejection_sample(rng, ctx.fleet.len(), ctx.cohort, |ci| {
+                ctx.fleet.profile(ci).available(ctx.round) && !ctx.is_excluded(ci)
+            });
+            let cohort = if picks.is_empty() {
+                uniform_eligible(ctx, rng)
+            } else {
+                picks
+            };
+            return Selection {
+                cohort,
+                key_budgets: None,
+            };
+        }
         let avail: Vec<usize> = (0..ctx.fleet.len())
-            .filter(|&i| ctx.fleet.profiles[i].available(ctx.round) && !ctx.excluded[i])
+            .filter(|&i| ctx.fleet.profile(i).available(ctx.round) && !ctx.is_excluded(i))
             .collect();
         let cohort = if avail.is_empty() {
             uniform_eligible(ctx, rng)
@@ -169,7 +231,7 @@ impl SelectionPolicy for MemoryCapped {
         let cohort = uniform_eligible(ctx, rng);
         let budgets = cohort
             .iter()
-            .map(|&ci| Self::budget_for(ctx.fleet.profiles[ci].mem_frac, ctx.geom))
+            .map(|&ci| Self::budget_for(ctx.fleet.profile(ci).mem_frac, ctx.geom))
             .collect();
         Selection {
             cohort,
@@ -179,9 +241,12 @@ impl SelectionPolicy for MemoryCapped {
 }
 
 /// Prioritize the clients selected longest ago (never-selected first), with
-/// random tie-breaking: a shuffle followed by a stable sort on
-/// last-selected round. Over `ceil(n / cohort)` rounds every client is
-/// visited at least once.
+/// random tie-breaking. Dense: a shuffle followed by a stable sort on
+/// last-selected round — over `ceil(n / cohort)` rounds every client is
+/// visited at least once. Sparse: never-touched clients (staleness -1, the
+/// overwhelming majority at scale) are drawn by rejection; any remaining
+/// slots fill from the touched set in ascending `(last_selected, id)`
+/// order — O(cohort + touched log touched), no fleet scan.
 pub struct StalenessFair;
 
 impl SelectionPolicy for StalenessFair {
@@ -190,13 +255,41 @@ impl SelectionPolicy for StalenessFair {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        if ctx.sparse() {
+            let mut cohort = rejection_sample(rng, ctx.fleet.len(), ctx.cohort, |ci| {
+                !ctx.touched.contains(ci) && !ctx.is_excluded(ci)
+            });
+            if cohort.len() < ctx.cohort {
+                // nearly everyone has been touched: fall back to the
+                // compact staleness order over the touched set
+                let mut stale: Vec<(i64, usize)> = ctx
+                    .touched
+                    .sorted_entries()
+                    .into_iter()
+                    .map(|(ci, t)| (t.last_selected, ci))
+                    .collect();
+                stale.sort_unstable();
+                for (_, ci) in stale {
+                    if cohort.len() >= ctx.cohort {
+                        break;
+                    }
+                    if !ctx.is_excluded(ci) && !cohort.contains(&ci) {
+                        cohort.push(ci);
+                    }
+                }
+            }
+            return Selection {
+                cohort,
+                key_budgets: None,
+            };
+        }
         // with no exclusions this filter is the identity, so the shuffle
         // consumes exactly the legacy draws
         let mut idx: Vec<usize> = (0..ctx.fleet.len())
-            .filter(|&i| !ctx.excluded[i])
+            .filter(|&i| !ctx.is_excluded(i))
             .collect();
         rng.shuffle(&mut idx);
-        idx.sort_by_key(|&i| ctx.last_selected[i]);
+        idx.sort_by_key(|&i| ctx.last_selected(i));
         idx.truncate(ctx.cohort.min(idx.len()));
         Selection {
             cohort: idx,
@@ -211,8 +304,11 @@ impl SelectionPolicy for StalenessFair {
 /// likely to be drawn. Never-selected clients get the mean observed signal
 /// as an optimistic prior, and the policy degrades to plain [`Uniform`]
 /// (same single RNG draw) until anyone has reported a signal at all.
-/// Sampling is without replacement via successive categorical draws on the
-/// remaining weights, so it stays deterministic in the round RNG.
+/// Dense: sampling without replacement via successive categorical draws on
+/// the remaining weights. Sparse: the hierarchical
+/// [`TwoStratumSampler`] — observed-signal clients form a compact weighted
+/// stratum, everyone else a uniform prior-weighted stratum resolved by
+/// rejection — O(cohort × touched) instead of O(fleet).
 pub struct LossWeighted;
 
 impl SelectionPolicy for LossWeighted {
@@ -221,6 +317,12 @@ impl SelectionPolicy for LossWeighted {
     }
 
     fn select(&self, ctx: &PlanCtx, rng: &mut Rng) -> Selection {
+        if ctx.sparse() {
+            return Selection {
+                cohort: self.select_sparse(ctx, rng),
+                key_budgets: None,
+            };
+        }
         // the eligible pool is the whole population when nobody is excluded
         // — the identity mapping, keeping legacy RNG consumption bit-exact
         let pool: Vec<usize> = match ctx.eligible() {
@@ -232,7 +334,7 @@ impl SelectionPolicy for LossWeighted {
         let observed: Vec<f64> = pool
             .iter()
             .map(|&ci| {
-                let s = ctx.signals[ci] as f64;
+                let s = ctx.signal(ci) as f64;
                 if s.is_finite() && s > 0.0 {
                     s
                 } else {
@@ -273,19 +375,49 @@ impl SelectionPolicy for LossWeighted {
     }
 }
 
+impl LossWeighted {
+    fn select_sparse(&self, ctx: &PlanCtx, rng: &mut Rng) -> Vec<usize> {
+        let n = ctx.fleet.len();
+        // the observed-signal stratum: compact, ascending id order
+        let hot: Vec<(usize, f64)> = ctx
+            .touched
+            .sorted_entries()
+            .into_iter()
+            .filter(|&(ci, t)| {
+                let s = t.signal as f64;
+                s.is_finite() && s > 0.0 && !ctx.is_excluded(ci)
+            })
+            .map(|(ci, t)| (ci, t.signal as f64))
+            .collect();
+        if hot.is_empty() {
+            return uniform_eligible(ctx, rng);
+        }
+        let prior = hot.iter().map(|&(_, w)| w).sum::<f64>() / hot.len() as f64;
+        let untouched = n.saturating_sub(hot.len());
+        let mut sampler = TwoStratumSampler::new(hot, untouched, prior, n);
+        let mut cohort: Vec<usize> = Vec::with_capacity(ctx.cohort);
+        while cohort.len() < ctx.cohort {
+            let picked_so_far = cohort.clone();
+            match sampler.draw(rng, |ci| {
+                !ctx.is_excluded(ci) && !picked_so_far.contains(&ci)
+            }) {
+                Some(ci) => cohort.push(ci),
+                None => break,
+            }
+        }
+        cohort
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fleet::{ChurnSpec, Scenario, ScenarioConfig};
     use crate::scheduler::FleetKind;
 
-    fn ctx_parts(
-        kind: FleetKind,
-        n: usize,
-    ) -> (Fleet, Vec<i64>, Vec<f32>, Vec<bool>, SliceGeometry) {
+    fn ctx_parts(kind: FleetKind, n: usize) -> (Fleet, TouchedState, SliceGeometry) {
         let fleet = Fleet::generate(kind, n, 7, 0.25).unwrap();
-        let last = vec![-1i64; n];
-        let signals = vec![0.0f32; n];
-        let excluded = vec![false; n];
+        let touched = TouchedState::new();
         // full-budget slice == the whole keyed segment, so tier mem caps
         // below 1.0 genuinely clamp
         let geom = SliceGeometry {
@@ -294,47 +426,50 @@ mod tests {
             broadcast_floats: 50,
             server_floats: 2048 * 50 + 50,
         };
-        (fleet, last, signals, excluded, geom)
+        (fleet, touched, geom)
+    }
+
+    fn ctx<'a>(
+        round: usize,
+        cohort: usize,
+        fleet: &'a Fleet,
+        touched: &'a TouchedState,
+        excluded: &'a [usize],
+        geom: &'a SliceGeometry,
+    ) -> PlanCtx<'a> {
+        PlanCtx {
+            round,
+            cohort,
+            fleet,
+            touched,
+            excluded,
+            scenario: None,
+            geom,
+        }
     }
 
     #[test]
     fn uniform_matches_the_raw_sampler_draw() {
-        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 30);
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 8,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &excl,
-            geom: &geom,
-        };
+        let (fleet, touched, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let c = ctx(1, 8, &fleet, &touched, &[], &geom);
         let mut a = Rng::new(5, 1);
         let mut b = a.clone();
-        let sel = Uniform.select(&ctx, &mut a);
+        let sel = Uniform.select(&c, &mut a);
         assert_eq!(sel.cohort, b.sample_without_replacement(30, 8));
         assert!(sel.key_budgets.is_none());
     }
 
     #[test]
     fn availability_aware_only_picks_online_clients() {
-        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Diurnal, 40);
+        let (fleet, touched, geom) = ctx_parts(FleetKind::Diurnal, 40);
         for round in [0usize, 6, 12, 18] {
-            let ctx = PlanCtx {
-                round,
-                cohort: 5,
-                fleet: &fleet,
-                last_selected: &last,
-                signals: &sigs,
-                excluded: &excl,
-                geom: &geom,
-            };
+            let c = ctx(round, 5, &fleet, &touched, &[], &geom);
             let mut rng = Rng::new(3, 2);
-            let sel = AvailabilityAware.select(&ctx, &mut rng);
+            let sel = AvailabilityAware.select(&c, &mut rng);
             assert!(!sel.cohort.is_empty());
             for &ci in &sel.cohort {
                 assert!(
-                    fleet.profiles[ci].available(round),
+                    fleet.profile(ci).available(round),
                     "round {round}: client {ci} offline"
                 );
             }
@@ -343,22 +478,14 @@ mod tests {
 
     #[test]
     fn memory_capped_budgets_fit_the_device() {
-        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Tiered3, 60);
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 20,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &excl,
-            geom: &geom,
-        };
+        let (fleet, touched, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let c = ctx(1, 20, &fleet, &touched, &[], &geom);
         let mut rng = Rng::new(9, 3);
-        let sel = MemoryCapped.select(&ctx, &mut rng);
+        let sel = MemoryCapped.select(&c, &mut rng);
         let budgets = sel.key_budgets.unwrap();
         assert_eq!(budgets.len(), sel.cohort.len());
         for (&ci, ms) in sel.cohort.iter().zip(budgets.iter()) {
-            let p = &fleet.profiles[ci];
+            let p = fleet.profile(ci);
             let floats: usize = geom.broadcast_floats
                 + ms.iter()
                     .zip(geom.per_key_floats.iter())
@@ -378,50 +505,36 @@ mod tests {
             .cohort
             .iter()
             .zip(budgets.iter())
-            .filter(|(&ci, _)| fleet.profiles[ci].tier == 2)
+            .filter(|(&ci, _)| fleet.profile(ci).tier == 2)
             .all(|(_, ms)| ms == &geom.base_ms));
     }
 
     #[test]
     fn memory_capped_cohort_equals_uniform_cohort_at_same_seed() {
-        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Tiered3, 60);
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 12,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &excl,
-            geom: &geom,
-        };
+        let (fleet, touched, geom) = ctx_parts(FleetKind::Tiered3, 60);
+        let c = ctx(1, 12, &fleet, &touched, &[], &geom);
         let mut a = Rng::new(4, 4);
         let mut b = a.clone();
         assert_eq!(
-            MemoryCapped.select(&ctx, &mut a).cohort,
-            Uniform.select(&ctx, &mut b).cohort
+            MemoryCapped.select(&c, &mut a).cohort,
+            Uniform.select(&c, &mut b).cohort
         );
     }
 
     #[test]
     fn staleness_fair_visits_everyone_before_repeating() {
-        let (fleet, mut last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 24);
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, 24);
         let mut rng = Rng::new(1, 5);
         let mut seen = std::collections::HashSet::new();
         for round in 1..=4usize {
-            let ctx = PlanCtx {
-                round,
-                cohort: 6,
-                fleet: &fleet,
-                last_selected: &last,
-                signals: &sigs,
-                excluded: &excl,
-                geom: &geom,
-            };
-            let cohort = StalenessFair.select(&ctx, &mut rng).cohort;
+            let c = ctx(round, 6, &fleet, &touched, &[], &geom);
+            let cohort = StalenessFair.select(&c, &mut rng).cohort;
             assert_eq!(cohort.len(), 6);
             for &ci in &cohort {
                 assert!(seen.insert(ci), "client {ci} repeated before full pass");
-                last[ci] = round as i64;
+            }
+            for &ci in &cohort {
+                touched.mark_selected(ci, round as i64);
             }
         }
         assert_eq!(seen.len(), 24);
@@ -429,21 +542,13 @@ mod tests {
 
     #[test]
     fn loss_weighted_without_history_is_exactly_uniform() {
-        let (fleet, last, sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 30);
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 8,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &excl,
-            geom: &geom,
-        };
+        let (fleet, touched, geom) = ctx_parts(FleetKind::Uniform, 30);
+        let c = ctx(1, 8, &fleet, &touched, &[], &geom);
         let mut a = Rng::new(5, 1);
         let mut b = a.clone();
         assert_eq!(
-            LossWeighted.select(&ctx, &mut a).cohort,
-            Uniform.select(&ctx, &mut b).cohort
+            LossWeighted.select(&c, &mut a).cohort,
+            Uniform.select(&c, &mut b).cohort
         );
         // and nothing beyond the uniform draw was consumed
         assert_eq!(a.next_u64(), b.next_u64());
@@ -451,26 +556,19 @@ mod tests {
 
     #[test]
     fn loss_weighted_prefers_high_signal_clients() {
-        let (fleet, last, mut sigs, excl, geom) = ctx_parts(FleetKind::Uniform, 20);
-        for s in sigs.iter_mut() {
-            *s = 1.0;
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, 20);
+        for ci in 0..20 {
+            touched.mark_selected(ci, 0);
+            touched.set_signal(ci, 1.0);
         }
-        sigs[3] = 50.0; // one client with a huge training signal
-        sigs[7] = 0.0; // one that never participated (gets the mean prior)
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 4,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &excl,
-            geom: &geom,
-        };
+        touched.set_signal(3, 50.0); // one client with a huge training signal
+        touched.set_signal(7, 0.0); // no observed signal (gets the mean prior)
+        let c = ctx(1, 4, &fleet, &touched, &[], &geom);
         let mut rng = Rng::new(11, 6);
         let mut hot = 0usize;
         let mut cold = 0usize;
         for _ in 0..300 {
-            let cohort = LossWeighted.select(&ctx, &mut rng).cohort;
+            let cohort = LossWeighted.select(&c, &mut rng).cohort;
             assert_eq!(cohort.len(), 4);
             let distinct: std::collections::HashSet<_> = cohort.iter().collect();
             assert_eq!(distinct.len(), 4, "sampling must be without replacement");
@@ -484,12 +582,10 @@ mod tests {
 
     #[test]
     fn every_policy_respects_the_exclusion_set() {
-        let (fleet, last, mut sigs, _, geom) = ctx_parts(FleetKind::Uniform, 16);
-        sigs[2] = 3.0; // give loss-weighted a live signal path too
-        let mut excl = vec![false; 16];
-        for i in [0usize, 3, 7, 11, 15] {
-            excl[i] = true;
-        }
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, 16);
+        touched.mark_selected(2, 0);
+        touched.set_signal(2, 3.0); // give loss-weighted a live signal path too
+        let excl = [0usize, 3, 7, 11, 15];
         let policies: Vec<Box<dyn SelectionPolicy>> = vec![
             Box::new(Uniform),
             Box::new(AvailabilityAware),
@@ -498,40 +594,140 @@ mod tests {
             Box::new(LossWeighted),
         ];
         for p in &policies {
-            let ctx = PlanCtx {
-                round: 1,
-                cohort: 8,
-                fleet: &fleet,
-                last_selected: &last,
-                signals: &sigs,
-                excluded: &excl,
-                geom: &geom,
-            };
+            let c = ctx(1, 8, &fleet, &touched, &excl, &geom);
             let mut rng = Rng::new(21, 9);
-            let sel = p.select(&ctx, &mut rng);
+            let sel = p.select(&c, &mut rng);
             assert_eq!(sel.cohort.len(), 8, "{}", p.name());
             for &ci in &sel.cohort {
-                assert!(!excl[ci], "{}: excluded client {ci} selected", p.name());
+                assert!(!excl.contains(&ci), "{}: excluded client {ci} selected", p.name());
             }
             let distinct: std::collections::HashSet<_> = sel.cohort.iter().collect();
             assert_eq!(distinct.len(), 8, "{}: duplicate selections", p.name());
         }
         // exclusion shrinking the pool below the cohort clamps, not panics
-        let all_but_two: Vec<bool> = (0..16).map(|i| i >= 2).collect();
-        let ctx = PlanCtx {
-            round: 1,
-            cohort: 8,
-            fleet: &fleet,
-            last_selected: &last,
-            signals: &sigs,
-            excluded: &all_but_two,
-            geom: &geom,
-        };
+        let all_but_two: Vec<usize> = (2..16).collect();
+        let c = ctx(1, 8, &fleet, &touched, &all_but_two, &geom);
         for p in &policies {
             let mut rng = Rng::new(22, 9);
-            let sel = p.select(&ctx, &mut rng);
+            let sel = p.select(&c, &mut rng);
             assert!(sel.cohort.len() <= 2, "{}", p.name());
             assert!(sel.cohort.iter().all(|&ci| ci < 2), "{}", p.name());
         }
+    }
+
+    #[test]
+    fn scenario_eligibility_gates_every_policy() {
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, 100);
+        touched.mark_selected(60, 0);
+        touched.set_signal(60, 2.0);
+        // churn window [0, 50) at t=0: ids ≥ 50 have not arrived yet
+        let scfg = ScenarioConfig {
+            churn: Some(ChurnSpec {
+                rate_per_h: 0.1,
+                width_frac: 0.5,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let sc = Scenario::new(&scfg, 100).unwrap();
+        let view = sc.view(0.0);
+        let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(Uniform),
+            Box::new(AvailabilityAware),
+            Box::new(MemoryCapped),
+            Box::new(StalenessFair),
+            Box::new(LossWeighted),
+        ];
+        for p in &policies {
+            let c = PlanCtx {
+                round: 1,
+                cohort: 10,
+                fleet: &fleet,
+                touched: &touched,
+                excluded: &[],
+                scenario: Some(&view),
+                geom: &geom,
+            };
+            let mut rng = Rng::new(13, 3);
+            let sel = p.select(&c, &mut rng);
+            assert_eq!(sel.cohort.len(), 10, "{}", p.name());
+            for &ci in &sel.cohort {
+                assert!(view.eligible(ci), "{}: ineligible client {ci}", p.name());
+                assert!(ci < 50, "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_policies_are_deterministic_and_respect_constraints() {
+        // past the threshold every policy must stay deterministic, skip
+        // excluded ids, and return a full distinct cohort
+        let n = SPARSE_SCAN_THRESHOLD + 10_000;
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Tiered3, n);
+        for ci in (0..200).step_by(7) {
+            touched.mark_selected(ci, 1);
+            touched.set_signal(ci, (ci % 5) as f32 + 0.5);
+        }
+        let excl: Vec<usize> = (0..50).collect();
+        let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(Uniform),
+            Box::new(AvailabilityAware),
+            Box::new(MemoryCapped),
+            Box::new(StalenessFair),
+            Box::new(LossWeighted),
+        ];
+        for p in &policies {
+            let run = || {
+                let c = ctx(2, 40, &fleet, &touched, &excl, &geom);
+                let mut rng = Rng::new(31, 4);
+                p.select(&c, &mut rng).cohort
+            };
+            let cohort = run();
+            assert_eq!(cohort.len(), 40, "{}", p.name());
+            assert_eq!(cohort, run(), "{}: nondeterministic", p.name());
+            let distinct: std::collections::HashSet<_> = cohort.iter().collect();
+            assert_eq!(distinct.len(), 40, "{}: duplicates", p.name());
+            for &ci in &cohort {
+                assert!(ci >= 50 && ci < n, "{}: bad pick {ci}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_staleness_fair_prefers_untouched_clients() {
+        let n = SPARSE_SCAN_THRESHOLD + 1;
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, n);
+        for ci in 0..1000 {
+            touched.mark_selected(ci, 3);
+        }
+        let c = ctx(4, 20, &fleet, &touched, &[], &geom);
+        let mut rng = Rng::new(8, 8);
+        let cohort = StalenessFair.select(&c, &mut rng).cohort;
+        assert_eq!(cohort.len(), 20);
+        assert!(
+            cohort.iter().all(|&ci| !touched.contains(ci)),
+            "untouched majority must fill the cohort"
+        );
+    }
+
+    #[test]
+    fn sparse_loss_weighted_samples_hot_clients_more() {
+        let n = SPARSE_SCAN_THRESHOLD + 1;
+        let (fleet, mut touched, geom) = ctx_parts(FleetKind::Uniform, n);
+        // ten observed clients carrying almost all the weight
+        for ci in 0..10 {
+            touched.mark_selected(ci, 1);
+            touched.set_signal(ci, 1e6);
+        }
+        let c = ctx(2, 8, &fleet, &touched, &[], &geom);
+        let mut rng = Rng::new(17, 5);
+        let mut hot_picks = 0usize;
+        for _ in 0..50 {
+            let cohort = LossWeighted.select(&c, &mut rng).cohort;
+            assert_eq!(cohort.len(), 8);
+            hot_picks += cohort.iter().filter(|&&ci| ci < 10).count();
+        }
+        // the hot stratum has ~10 × 1e6 weight vs ~(n-10) × 1e6 prior —
+        // hot clients should appear far above their 10/n base rate
+        assert!(hot_picks > 0, "hot stratum never sampled");
     }
 }

@@ -182,14 +182,24 @@ impl Coordinator {
             }
             CacheShare::Contended => {
                 // one pooled cache per device, budgeted at the per-job
-                // maximum; the registry guaranteed one eviction policy
+                // maximum; the registry guaranteed one eviction policy.
+                // Budgets resolve through the scheduler (each job's caches
+                // derive theirs lazily from the device profiles), so they
+                // must be read before the caches are detached.
                 let mut budgets = vec![0u64; fleet_size];
                 let mut policy_stale = None;
                 for job in &mut jobs {
-                    if let Some(caches) = job.trainer.scheduler_mut().take_caches() {
-                        for (b, own) in budgets.iter_mut().zip(caches.budgets()) {
+                    if job.trainer.scheduler().caches().is_some() {
+                        for (ci, b) in budgets.iter_mut().enumerate() {
+                            let own =
+                                job.trainer.scheduler().cache_budget_of(ci).unwrap_or(0);
                             *b = (*b).max(own);
                         }
+                        let caches = job
+                            .trainer
+                            .scheduler_mut()
+                            .take_caches()
+                            .expect("caches checked present");
                         policy_stale = Some((caches.policy(), caches.max_stale_rounds()));
                     }
                 }
@@ -288,7 +298,7 @@ impl Coordinator {
             close_max = close_max.max(tick.close_s);
             for &(client, at_s) in &tick.busy {
                 *device_busy.entry(client).or_insert(0.0) += at_s;
-                let tier = job.trainer.scheduler().fleet().profiles[client].tier;
+                let tier = job.trainer.scheduler().fleet().profile(client).tier;
                 job.tier_busy_s[tier] += at_s;
             }
             if exclusive {

@@ -81,6 +81,24 @@ impl JobRegistry {
             job.cfg.validate().map_err(|e| {
                 Error::Config(format!("job {:?}: invalid config: {e}", job.name))
             })?;
+            // the arbiter's grant/exclusion sets and the contended budget
+            // table are sized to the shared dataset population; a decoupled
+            // fleet or scenario-shaped eligibility would silently escape
+            // both (oversized ids are never excluded, pooled budgets read 0)
+            if job.cfg.fleet_size > 0 {
+                return Err(Error::Config(format!(
+                    "job {:?}: --fleet-size is single-tenant only (the arbiter \
+                     sizes grants to the shared dataset population)",
+                    job.name
+                )));
+            }
+            if job.cfg.scenario.shapes_eligibility() {
+                return Err(Error::Config(format!(
+                    "job {:?}: churn/outage/wave scenarios are single-tenant \
+                     only (arbiter grants do not see scenario eligibility)",
+                    job.name
+                )));
+            }
         }
         for (i, a) in jobs.iter().enumerate() {
             for b in jobs.iter().skip(i + 1) {
@@ -237,6 +255,24 @@ mod tests {
         let jobs = vec![JobSpec::new(1, "a", bad)];
         let err = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap_err();
         assert!(err.to_string().contains("job \"a\""), "{err}");
+    }
+
+    #[test]
+    fn fleet_scale_knobs_are_single_tenant_only() {
+        let mut oversized = cfg(128);
+        oversized.fleet_size = 5000;
+        let jobs = vec![JobSpec::new(1, "a", oversized)];
+        let err = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap_err();
+        assert!(err.to_string().contains("fleet-size"), "{err}");
+
+        let mut churny = cfg(128);
+        churny.scenario.churn = Some(crate::fleet::ChurnSpec {
+            rate_per_h: 0.1,
+            width_frac: 0.9,
+        });
+        let jobs = vec![JobSpec::new(1, "a", churny)];
+        let err = JobRegistry::new(jobs, CacheShare::Partitioned).unwrap_err();
+        assert!(err.to_string().contains("single-tenant"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Million-client fleet engine: end-to-end invariants.
+//!
+//! 1. **Lazy ≡ eager at seed sizes** — an explicit `--fleet-size` equal to
+//!    the dataset population runs the identical trajectory (every
+//!    `RoundRecord` field and every model bit) as the legacy dataset-sized
+//!    fleet, at 1 and 4 fetch threads, for all four synthetic kinds and a
+//!    trace fleet; and `Fleet::materialize` is definitionally the lazy
+//!    generator.
+//! 2. **Scenario determinism** — churn + outage runs of the same seed
+//!    produce identical eligibility ledgers, cohort outcomes, and model
+//!    bits; the horizon bound stops the run on the simulated clock.
+//! 3. **Memory sparsity** — resident scheduler state scales with touched
+//!    clients, not fleet size: a 100k-client fleet leaves only
+//!    cohort-proportional bytes behind.
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{RoundRecord, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::fleet::{ChurnSpec, Fleet, OutageSpec};
+use fedselect::model::ParamStore;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+
+const N_TRAIN: usize = 24;
+
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(128, 32);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(128, 50).with_clients(N_TRAIN, 4, 8));
+    cfg.rounds = 3;
+    cfg.cohort = 6;
+    cfg.eval.every = 0;
+    cfg.eval.max_examples = 128;
+    cfg.seed = seed;
+    cfg
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+/// Every `RoundRecord` field except the host-clock `wall_ms`.
+fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
+    assert_eq!(a.round, b.round, "{label}");
+    assert_eq!(a.completed, b.completed, "{label}");
+    assert_eq!(a.dropped, b.dropped, "{label}");
+    assert_eq!(a.mode, b.mode, "{label}");
+    assert_eq!(a.discarded_clients, b.discarded_clients, "{label}");
+    assert_eq!(a.mean_staleness.to_bits(), b.mean_staleness.to_bits(), "{label}");
+    assert_eq!(a.committees, b.committees, "{label}");
+    assert_eq!(a.min_committee_size, b.min_committee_size, "{label}");
+    assert_eq!(a.comm, b.comm, "{label}");
+    assert_eq!(a.up_bytes, b.up_bytes, "{label}");
+    assert_eq!(a.max_client_mem, b.max_client_mem, "{label}");
+    assert_eq!(a.sim_round_s.to_bits(), b.sim_round_s.to_bits(), "{label}");
+    assert_eq!(a.tier_completed, b.tier_completed, "{label}");
+    assert_eq!(a.tier_dropped, b.tier_dropped, "{label}");
+    assert_eq!(a.tier_discarded, b.tier_discarded, "{label}");
+    assert_eq!(a.tier_down_bytes, b.tier_down_bytes, "{label}");
+    assert_eq!(a.tier_cache_hits, b.tier_cache_hits, "{label}");
+    assert_eq!(a.tier_cache_lookups, b.tier_cache_lookups, "{label}");
+    assert_eq!(a.cache_evictions, b.cache_evictions, "{label}");
+    assert_eq!(a.cache_stale_refreshes, b.cache_stale_refreshes, "{label}");
+    assert_eq!(a.deferrals, b.deferrals, "{label}");
+    assert_eq!(a.eligible, b.eligible, "{label}");
+    assert_eq!(a.arrivals, b.arrivals, "{label}");
+    assert_eq!(a.departures, b.departures, "{label}");
+    assert_eq!(a.outage_excluded, b.outage_excluded, "{label}");
+    assert_eq!(a.clients_touched, b.clients_touched, "{label}");
+    assert_eq!(a.resident_bytes, b.resident_bytes, "{label}");
+}
+
+fn assert_same_trajectory(mut a_cfg: TrainConfig, mut b_cfg: TrainConfig, label: &str) {
+    for threads in [1usize, 4] {
+        a_cfg.fetch_threads = threads;
+        b_cfg.fetch_threads = threads;
+        let mut ta = Trainer::new(a_cfg.clone()).unwrap();
+        let mut tb = Trainer::new(b_cfg.clone()).unwrap();
+        let ra = ta.run().unwrap();
+        let rb = tb.run().unwrap();
+        let label = format!("{label} threads={threads}");
+        assert_eq!(ra.rounds.len(), rb.rounds.len(), "{label}");
+        for (x, y) in ra.rounds.iter().zip(rb.rounds.iter()) {
+            assert_records_identical(x, y, &format!("{label} round {}", x.round));
+        }
+        assert_stores_bit_identical(ta.store(), tb.store(), &label);
+    }
+}
+
+#[test]
+fn explicit_fleet_size_at_seed_scale_is_byte_identical_to_the_legacy_path() {
+    // `--fleet-size N_TRAIN` goes through the lazy fleet-size plumbing but
+    // must reproduce the default dataset-sized run exactly — every ledger
+    // field, every model bit — for every synthetic kind and a trace fleet.
+    let kinds = [
+        FleetKind::Uniform,
+        FleetKind::Tiered3,
+        FleetKind::Diurnal,
+        FleetKind::FlakyEdge,
+        FleetKind::Trace("../examples/fleet_trace_32.txt".to_string()),
+    ];
+    for kind in kinds {
+        let mut legacy = base_cfg(4040);
+        legacy.fleet = kind.clone();
+        let mut sized = legacy.clone();
+        sized.fleet_size = N_TRAIN;
+        assert_same_trajectory(legacy, sized, &format!("{kind}"));
+    }
+}
+
+#[test]
+fn explicit_fleet_size_is_byte_identical_under_policies_and_cache() {
+    // the same identity must hold when the budget-deriving policies and
+    // the lazily-allocated client caches are in play
+    for policy in [SchedPolicy::MemoryCapped, SchedPolicy::StalenessFair] {
+        let mut legacy = base_cfg(4141);
+        legacy.fleet = FleetKind::Tiered3;
+        legacy.sched_policy = policy;
+        legacy.mem_cap_frac = 0.25;
+        legacy.cache = true;
+        legacy.cache_budget_frac = 0.5;
+        let mut sized = legacy.clone();
+        sized.fleet_size = N_TRAIN;
+        assert_same_trajectory(legacy, sized, &format!("cache+{policy}"));
+    }
+}
+
+#[test]
+fn materialize_matches_the_lazy_generator_end_to_end() {
+    for kind in [FleetKind::Tiered3, FleetKind::Diurnal, FleetKind::FlakyEdge] {
+        let fleet = Fleet::generate(kind.clone(), 300, 99, 0.25).unwrap();
+        let eager = fleet.materialize();
+        assert_eq!(eager.len(), 300, "{kind}");
+        for (ci, p) in eager.iter().enumerate() {
+            let lazy = fleet.profile(ci);
+            assert_eq!(p.tier, lazy.tier, "{kind} client {ci}");
+            assert_eq!(p.down_bps.to_bits(), lazy.down_bps.to_bits(), "{kind} client {ci}");
+            assert_eq!(p.mem_frac.to_bits(), lazy.mem_frac.to_bits(), "{kind} client {ci}");
+            assert_eq!(p.hazard.to_bits(), lazy.hazard.to_bits(), "{kind} client {ci}");
+        }
+    }
+}
+
+fn scenario_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = base_cfg(seed);
+    cfg.rounds = 5;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.fleet_size = 500;
+    cfg.scenario.churn = Some(ChurnSpec { rate_per_h: 40.0, width_frac: 0.5 });
+    cfg.scenario.outage = Some(OutageSpec { start_h: 0.0, dur_h: 1e6, frac: 0.2 });
+    cfg
+}
+
+#[test]
+fn churn_and_outage_scenarios_are_deterministic_and_ledgered() {
+    let ra = Trainer::new(scenario_cfg(2020)).unwrap().run().unwrap();
+    let rb = Trainer::new(scenario_cfg(2020)).unwrap().run().unwrap();
+    assert_eq!(ra.rounds.len(), rb.rounds.len());
+    let mut saw_outage = false;
+    let mut saw_churn_delta = false;
+    for (a, b) in ra.rounds.iter().zip(rb.rounds.iter()) {
+        assert_records_identical(a, b, &format!("scenario round {}", a.round));
+        // the standing outage excludes a fifth of the fleet, the churn
+        // window half of it — eligibility must be genuinely constrained
+        assert!(a.eligible < 500, "round {}: eligible {}", a.round, a.eligible);
+        assert!(a.eligible >= a.completed + a.dropped, "round {}", a.round);
+        saw_outage |= a.outage_excluded > 0;
+        saw_churn_delta |= a.arrivals > 0 || a.departures > 0;
+    }
+    assert!(saw_outage, "outage never excluded anyone");
+    assert!(saw_churn_delta, "churn never rotated the window");
+}
+
+#[test]
+fn horizon_stops_the_run_on_the_simulated_clock() {
+    let mut cfg = base_cfg(3030);
+    cfg.rounds = 10;
+    // one simulated round of this workload takes far longer than 3.6
+    // simulated milliseconds, so the bound fires right after round 1
+    cfg.scenario.horizon_h = 1e-6;
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 1, "horizon must stop the run early");
+}
+
+#[test]
+fn resident_state_scales_with_touched_clients_not_fleet_size() {
+    let mut cfg = base_cfg(5050);
+    cfg.rounds = 3;
+    cfg.cohort = 10;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.fleet_size = 100_000;
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    let last = report.rounds.last().unwrap();
+    // at most cohort × rounds distinct clients have ever been selected
+    assert!(last.clients_touched > 0);
+    assert!(
+        last.clients_touched <= 30,
+        "touched {} > selections made",
+        last.clients_touched
+    );
+    // resident scheduler state is proportional to those ~30 clients; an
+    // eager 100k-profile table alone would be megabytes
+    assert!(
+        last.resident_bytes < 64 * 1024,
+        "resident bytes {} not sparse",
+        last.resident_bytes
+    );
+}
+
+#[test]
+fn oversized_fleet_with_cache_allocates_caches_lazily() {
+    let mut cfg = base_cfg(6060);
+    cfg.rounds = 3;
+    cfg.cohort = 8;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.fleet_size = 50_000;
+    cfg.cache = true;
+    cfg.cache_budget_frac = 0.5;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr.run().unwrap();
+    let caches = tr.scheduler().caches().expect("caches installed");
+    assert!(caches.clients_cached() > 0, "committing clients got caches");
+    assert!(
+        caches.clients_cached() <= 24,
+        "only ever-committing clients may hold a cache, got {}",
+        caches.clients_cached()
+    );
+    let last = report.rounds.last().unwrap();
+    assert!(last.resident_bytes > 0);
+    assert!(
+        last.clients_touched <= 24,
+        "touched {} > selections made",
+        last.clients_touched
+    );
+}

@@ -88,6 +88,12 @@ fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
     assert_eq!(a.cache_evictions, b.cache_evictions, "{label}");
     assert_eq!(a.cache_stale_refreshes, b.cache_stale_refreshes, "{label}");
     assert_eq!(a.deferrals, b.deferrals, "{label}");
+    assert_eq!(a.eligible, b.eligible, "{label}");
+    assert_eq!(a.arrivals, b.arrivals, "{label}");
+    assert_eq!(a.departures, b.departures, "{label}");
+    assert_eq!(a.outage_excluded, b.outage_excluded, "{label}");
+    assert_eq!(a.clients_touched, b.clients_touched, "{label}");
+    assert_eq!(a.resident_bytes, b.resident_bytes, "{label}");
 }
 
 #[test]
