@@ -1,0 +1,100 @@
+//! Pipelined-executor throughput: the same merge-heavy round driven
+//! sequentially (`--exec strict --exec-workers 1`), strictly over the pool
+//! (`--exec-workers 4`), and in fast mode (completion-order merge over the
+//! key-striped accumulator). Emits `BENCH_exec.json` (schema
+//! `fedselect-bench-v1`) with rounds/s, mean merge-stall ms, and pool
+//! utilization per variant — `perf_diff` gates the trajectory
+//! (`*_per_s` higher-is-better, `*_stall_ms` lower-is-better).
+//!
+//! Outside quick mode the bench also *asserts* the tentpole claim: fast
+//! throughput strictly above strict at 4 workers.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::Trainer;
+use fedselect::data::bow::BowConfig;
+use fedselect::exec::ExecMode;
+
+/// Merge-heavy shape: a wide logreg (409.6k params) with big slices and a
+/// large cohort, so the close-phase accumulator work is a visible slice of
+/// the round.
+fn bench_cfg(exec: ExecMode, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(8192, 2048);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(8192, 50).with_clients(60, 0, 10));
+    cfg.cohort = 24;
+    cfg.rounds = 1;
+    cfg.exec = exec;
+    cfg.exec_workers = workers;
+    cfg
+}
+
+fn main() {
+    let mut b = harness::Bench::new();
+    let rounds = if b.quick { 4usize } else { 12 };
+
+    let variants = [
+        ("strict_w1", ExecMode::Strict, 1usize),
+        ("strict_w4", ExecMode::Strict, 4),
+        ("fast_w4", ExecMode::Fast, 4),
+        ("fast_w8", ExecMode::Fast, 8),
+    ];
+    let mut rounds_per_s = Vec::new();
+    for (tag, exec, workers) in variants {
+        let mut tr = Trainer::new(bench_cfg(exec, workers)).unwrap();
+        // one untimed round to warm caches/allocations
+        std::hint::black_box(tr.run_round().unwrap());
+        let mut stall = 0.0f64;
+        let mut util = 0.0f64;
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            let rec = tr.run_round().unwrap();
+            stall += rec.merge_stall_ms;
+            util += rec.exec_util;
+            std::hint::black_box(rec);
+        }
+        let rps = rounds as f64 / t0.elapsed().as_secs_f64();
+        rounds_per_s.push((tag, rps));
+        let name = format!("exec/{tag}");
+        b.metric(&name, "rounds_per_s", rps);
+        b.metric(&name, "merge_stall_ms", stall / rounds as f64);
+        b.metric(&name, "worker_util", util / rounds as f64);
+        println!(
+            "bench {name}: {rps:.2} rounds/s | merge stall {:.3}ms | util {:.2}",
+            stall / rounds as f64,
+            util / rounds as f64
+        );
+        // wall-time distribution of a single round, same shape
+        let mut tr = Trainer::new(bench_cfg(exec, workers)).unwrap();
+        b.run(&name, 8, || {
+            std::hint::black_box(tr.run_round().unwrap());
+        });
+    }
+
+    let rps = |tag: &str| {
+        rounds_per_s
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, v)| *v)
+            .unwrap()
+    };
+    b.note(&format!(
+        "fast_w4 / strict_w4 throughput: {:.2}x",
+        rps("fast_w4") / rps("strict_w4")
+    ));
+    if !b.quick {
+        // the tentpole contract: completion-order merging over the sharded
+        // accumulator must out-run the strict cohort-order replay once the
+        // pool is wide enough
+        assert!(
+            rps("fast_w4") > rps("strict_w4"),
+            "fast ({:.2} rounds/s) did not beat strict ({:.2} rounds/s) at 4 workers",
+            rps("fast_w4"),
+            rps("strict_w4")
+        );
+    }
+    b.write_json("BENCH_exec.json");
+}

@@ -11,6 +11,16 @@
 //! * [`AggMode::PerCoordMean`] — divide each coordinate by its selection
 //!   count (an ablation: see `bench_aggregation`).
 //!
+//! [`ShardedAccumulator`] is the same algebra striped by key range: the
+//! flat coordinate space of every segment is split into contiguous shards
+//! and one scatter-add is applied by `shards` scoped threads in parallel,
+//! each owning its stripe exclusively (no locks on the hot path). Because
+//! the stripes partition coordinates, the per-coordinate float-add order
+//! is identical to the sequential scatter at any shard count — the sharded
+//! accumulator is bit-exact against [`SparseAccumulator`] (test-enforced);
+//! what changes is only the wall time the round's close stalls on merging.
+//! The `--exec fast` pipeline selects it; see [`crate::exec`].
+//!
 //! [`secure`] simulates the pairwise-mask Secure Aggregation protocol —
 //! whole-cohort float masks ([`SecureAggSim`], synchronous barrier only)
 //! and close-group fixed-point committees ([`SecAggCommittee`], exact
@@ -24,7 +34,7 @@ pub mod secure;
 pub use secure::{fp_dequantize, fp_quantize, SecAggCommittee, SecureAggSim};
 
 use crate::error::Result;
-use crate::model::{ParamStore, SelectSpec};
+use crate::model::{Binding, ParamStore, SelectSpec};
 
 /// Which `(keyspace, key)` rows an aggregation pass actually wrote — the
 /// union of the merged updates' select keys. This is what the cross-round
@@ -243,6 +253,272 @@ impl Aggregator for SparseAccumulator {
     }
 }
 
+/// Key-striped accumulator: [`SparseAccumulator`]'s algebra with every
+/// scatter-add applied in parallel by `shards` scoped threads, each owning
+/// a contiguous stripe of every segment's flat coordinate space.
+///
+/// # Bit-exactness
+///
+/// The stripes *partition* coordinates, so each coordinate is written by
+/// exactly one shard and receives exactly the adds the sequential scatter
+/// would apply, in the same order (clients are absorbed one
+/// `add_client*` call at a time; within a call each coordinate is touched
+/// at most once per key occurrence, iterated in the same `(group, key)`
+/// order as [`SelectSpec::deselect_add`]). Float addition order per
+/// coordinate is therefore independent of the shard count, and the
+/// accumulator state is bit-identical to [`SparseAccumulator`] fed the
+/// same sequence — enforced by `sharded_accumulator_is_bit_exact`.
+///
+/// Small updates (< [`ShardedAccumulator::PARALLEL_FLOOR`] floats) are
+/// applied inline: spawning threads would cost more than the scatter.
+pub struct ShardedAccumulator {
+    acc: ParamStore,
+    counts: ParamStore,
+    clients: usize,
+    touched: TouchedKeys,
+    /// bytes a client uploads: sliced update + its keys
+    pub up_bytes: u64,
+    shards: usize,
+}
+
+impl ShardedAccumulator {
+    /// Below this many update floats a scatter runs inline on the caller
+    /// thread (identical math, no spawns).
+    pub const PARALLEL_FLOOR: usize = 1 << 15;
+
+    /// `shards` is clamped to [1, 64]; 1 degenerates to the sequential
+    /// scatter (still bit-exact, just without the stripe parallelism).
+    pub fn new(store: &ParamStore, shards: usize) -> Self {
+        ShardedAccumulator {
+            acc: store.zeros_like(),
+            counts: store.zeros_like(),
+            clients: 0,
+            touched: TouchedKeys::default(),
+            up_bytes: 0,
+            shards: shards.clamp(1, 64),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Direct access for tests / bit-exactness comparison.
+    pub fn raw(&self) -> (&ParamStore, &ParamStore) {
+        (&self.acc, &self.counts)
+    }
+
+    pub fn touched(&self) -> &TouchedKeys {
+        &self.touched
+    }
+
+    /// Validate one client's update shapes — the same errors
+    /// [`SelectSpec::deselect_add`] raises, checked up front so the
+    /// parallel scatter never observes a malformed update.
+    fn validate(
+        &self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        if updates.len() != spec.bindings.len() {
+            return Err(crate::error::Error::Shape(format!(
+                "expected {} update tensors, got {}",
+                spec.bindings.len(),
+                updates.len()
+            )));
+        }
+        for (b, upd) in spec.bindings.iter().zip(updates.iter()) {
+            match b {
+                Binding::Full { seg } => {
+                    let len = self.acc.segments[*seg].data.len();
+                    if upd.len() != len {
+                        return Err(crate::error::Error::Shape(format!(
+                            "dense update len {} != segment len {len}",
+                            upd.len()
+                        )));
+                    }
+                }
+                Binding::Keyed { keyspace, map, .. } => {
+                    let ks_keys = keys.get(*keyspace).ok_or_else(|| {
+                        crate::error::Error::Shape(format!(
+                            "missing keys for keyspace {keyspace}"
+                        ))
+                    })?;
+                    if upd.len() != map.sliced_len(ks_keys.len()) {
+                        return Err(crate::error::Error::Shape(format!(
+                            "keyed update len {} != sliced len {}",
+                            upd.len(),
+                            map.sliced_len(ks_keys.len())
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter one (possibly weighted) update into the stripes. `weight ==
+    /// 1.0` adds the raw floats (the exact unweighted path); other weights
+    /// scale each addend as it lands, which is the same `u * w` the
+    /// sequential weighted path feeds `deselect_add`.
+    fn add_scaled(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+        weight: f32,
+    ) -> Result<()> {
+        self.validate(spec, keys, updates)?;
+        let total_floats: usize = updates.iter().map(Vec::len).sum();
+        let shards = if total_floats < Self::PARALLEL_FLOOR {
+            1
+        } else {
+            self.shards
+        };
+        if shards <= 1 {
+            let nseg = self.acc.segments.len();
+            let mut stripe = Vec::with_capacity(nseg);
+            for (aseg, cseg) in self
+                .acc
+                .segments
+                .iter_mut()
+                .zip(self.counts.segments.iter_mut())
+            {
+                stripe.push((0usize, &mut aseg.data[..], &mut cseg.data[..]));
+            }
+            apply_stripe(spec, keys, updates, weight, stripe);
+        } else {
+            // Split every segment (and its counts) into `shards` contiguous
+            // stripes; stripe j of every segment goes to thread j.
+            let nseg = self.acc.segments.len();
+            let mut stripes: Vec<Vec<(usize, &mut [f32], &mut [f32])>> =
+                (0..shards).map(|_| Vec::with_capacity(nseg)).collect();
+            for (aseg, cseg) in self
+                .acc
+                .segments
+                .iter_mut()
+                .zip(self.counts.segments.iter_mut())
+            {
+                let len = aseg.data.len();
+                let mut arest: &mut [f32] = &mut aseg.data;
+                let mut crest: &mut [f32] = &mut cseg.data;
+                let mut start = 0usize;
+                for (j, stripe) in stripes.iter_mut().enumerate() {
+                    let end = stripe_end(len, shards, j);
+                    let take = end - start;
+                    let (ahead, atail) = std::mem::take(&mut arest).split_at_mut(take);
+                    let (chead, ctail) = std::mem::take(&mut crest).split_at_mut(take);
+                    stripe.push((start, ahead, chead));
+                    arest = atail;
+                    crest = ctail;
+                    start = end;
+                }
+            }
+            std::thread::scope(|s| {
+                for stripe in stripes {
+                    s.spawn(move || apply_stripe(spec, keys, updates, weight, stripe));
+                }
+            });
+        }
+        self.clients += 1;
+        self.touched.record(keys);
+        // the client uploaded the unscaled update; any discount is
+        // server-side (same ledger as SparseAccumulator)
+        self.up_bytes += updates.iter().map(|u| u.len() as u64 * 4).sum::<u64>()
+            + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+        Ok(())
+    }
+}
+
+/// End (exclusive) of stripe `j` when `len` coordinates split `shards`
+/// ways: the first `len % shards` stripes get one extra coordinate.
+fn stripe_end(len: usize, shards: usize, j: usize) -> usize {
+    let base = len / shards;
+    let extra = len % shards;
+    (j + 1) * base + (j + 1).min(extra)
+}
+
+/// Apply one client's scatter restricted to a stripe: `stripe[seg]` is
+/// `(start, acc, counts)` — the segment's coordinates `[start, start +
+/// acc.len())`. Per coordinate this performs exactly the adds of
+/// [`SelectSpec::deselect_add`], in the same order.
+fn apply_stripe(
+    spec: &SelectSpec,
+    keys: &[Vec<u32>],
+    updates: &[Vec<f32>],
+    weight: f32,
+    mut stripe: Vec<(usize, &mut [f32], &mut [f32])>,
+) {
+    for (b, upd) in spec.bindings.iter().zip(updates.iter()) {
+        match b {
+            Binding::Full { seg } => {
+                let (start, acc, cnt) = &mut stripe[*seg];
+                for (i, (d, c)) in acc.iter_mut().zip(cnt.iter_mut()).enumerate() {
+                    let u = upd[*start + i];
+                    *d += if weight == 1.0 { u } else { u * weight };
+                    *c += 1.0;
+                }
+            }
+            Binding::Keyed { seg, keyspace, map } => {
+                let ks_keys = &keys[*keyspace];
+                let m = ks_keys.len();
+                let rl = map.row_len;
+                let (start, acc, cnt) = &mut stripe[*seg];
+                let (start, end) = (*start, *start + acc.len());
+                for g in 0..map.groups {
+                    for (j, &k) in ks_keys.iter().enumerate() {
+                        let d = (g * map.keys_total + k as usize) * rl;
+                        if d + rl <= start || d >= end {
+                            continue;
+                        }
+                        let s = (g * m + j) * rl;
+                        let lo = d.max(start);
+                        let hi = (d + rl).min(end);
+                        for idx in lo..hi {
+                            let u = upd[s + (idx - d)];
+                            acc[idx - start] += if weight == 1.0 { u } else { u * weight };
+                            cnt[idx - start] += 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Aggregator for ShardedAccumulator {
+    fn add_client(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+    ) -> Result<()> {
+        self.add_scaled(spec, keys, updates, 1.0)
+    }
+
+    fn add_client_weighted(
+        &mut self,
+        spec: &SelectSpec,
+        keys: &[Vec<u32>],
+        updates: &[Vec<f32>],
+        weight: f32,
+    ) -> Result<()> {
+        self.add_scaled(spec, keys, updates, weight)
+    }
+
+    fn finalize(self: Box<Self>, mode: AggMode) -> (ParamStore, TouchedKeys) {
+        (
+            finalize_mean(self.acc, &self.counts, self.clients, mode),
+            self.touched,
+        )
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients
+    }
+}
+
 pub(crate) fn finalize_mean(
     mut acc: ParamStore,
     counts: &ParamStore,
@@ -365,6 +641,88 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn sharded_accumulator_is_bit_exact() {
+        let (store, spec) = setup();
+        // a small mixed workload: overlapping keys, a weighted add, a
+        // dense-heavy update — enough to touch every scatter path
+        let mut rng = Rng::new(77, 0);
+        let cohort: Vec<(Vec<u32>, f32)> = (0..6)
+            .map(|i| {
+                let keys: Vec<u32> = rng
+                    .sample_without_replacement(8, 3 + (i % 3))
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                let w = if i % 2 == 0 { 1.0 } else { 0.25 + 0.1 * i as f32 };
+                (keys, w)
+            })
+            .collect();
+        let make_ups = |keys: &Vec<u32>, salt: f32| {
+            vec![
+                (0..keys.len() * 50)
+                    .map(|j| salt + j as f32 * 0.01)
+                    .collect::<Vec<f32>>(),
+                (0..50).map(|j| -salt + j as f32 * 0.02).collect(),
+            ]
+        };
+        for shards in [1usize, 2, 3, 8] {
+            let mut seq = Box::new(SparseAccumulator::new(&store));
+            let mut shd = Box::new(ShardedAccumulator::new(&store, shards));
+            assert_eq!(shd.shards(), shards);
+            for (i, (keys, w)) in cohort.iter().enumerate() {
+                let ups = make_ups(keys, 0.5 + i as f32);
+                seq.add_client_weighted(&spec, &[keys.clone()], &ups, *w)
+                    .unwrap();
+                shd.add_client_weighted(&spec, &[keys.clone()], &ups, *w)
+                    .unwrap();
+            }
+            assert_eq!(seq.up_bytes, shd.up_bytes, "shards={shards}");
+            assert_eq!(seq.num_clients(), shd.num_clients());
+            assert_eq!(seq.touched(), shd.touched(), "touched union preserved");
+            let (sa, sc) = seq.raw();
+            let (ha, hc) = shd.raw();
+            for (pair, label) in [((sa, ha), "acc"), ((sc, hc), "counts")] {
+                for (x, y) in pair.0.segments.iter().zip(pair.1.segments.iter()) {
+                    for (i, (a, b)) in x.data.iter().zip(y.data.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "shards={shards} {label} seg {} idx {i}",
+                            x.name
+                        );
+                    }
+                }
+            }
+            // finalize agrees bit-for-bit under both averaging modes
+            let (u_seq, t_seq) = seq.finalize(AggMode::PerCoordMean);
+            let (u_shd, t_shd) = shd.finalize(AggMode::PerCoordMean);
+            assert_eq!(t_seq, t_shd);
+            for (x, y) in u_seq.segments.iter().zip(u_shd.segments.iter()) {
+                for (a, b) in x.data.iter().zip(y.data.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_accumulator_rejects_malformed_updates() {
+        let (store, spec) = setup();
+        let mut shd = ShardedAccumulator::new(&store, 4);
+        // wrong tensor count
+        assert!(shd.add_client(&spec, &[vec![0]], &[vec![0.0; 50]]).is_err());
+        // keyed length mismatch
+        assert!(shd
+            .add_client(&spec, &[vec![0]], &[vec![0.0; 49], vec![0.0; 50]])
+            .is_err());
+        // dense length mismatch
+        assert!(shd
+            .add_client(&spec, &[vec![0]], &[vec![0.0; 50], vec![0.0; 49]])
+            .is_err());
+        assert_eq!(shd.num_clients(), 0, "failed adds absorb nothing");
     }
 
     #[test]

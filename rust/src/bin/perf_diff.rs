@@ -2,20 +2,27 @@
 //! baseline and the current bench run.
 //!
 //! ```text
-//! perf_diff <baseline_dir> <current_dir> [--threshold 0.15] [--sim-only]
+//! perf_diff <baseline_dir> <current_dir> [--threshold 0.15] [--sim-only] [--report]
 //! ```
 //!
 //! For every `BENCH_*.json` present in *both* directories, every derived
 //! metric is compared by name: throughput metrics (`*_per_s`) regress when
 //! the current value drops more than `threshold` below the baseline;
-//! simulated-time metrics (`sim_round_s`, `sim_total_s`) regress when they
-//! *rise* more than `threshold` above it. Counters (`discarded`) are
-//! informational. Wall times are ignored — CI hosts are too noisy; the
-//! derived metrics are the trajectory. Note that throughput metrics are
-//! still host-speed-dependent: on heterogeneous CI runners pass
-//! `--sim-only` to gate only the deterministic simulated-time metrics and
-//! report throughput informationally. Exit status 1 on any regression;
-//! missing baselines are a note, not a failure (first run seeds them).
+//! simulated-time metrics (`sim_round_s`, `sim_total_s`) and stall
+//! metrics (`*_stall_ms`, e.g. the executor's merge stall) regress when
+//! they *rise* more than `threshold` above it. Counters (`discarded`) are
+//! informational. Other wall times are ignored — CI hosts are too noisy;
+//! the derived metrics are the trajectory. Note that throughput and stall
+//! metrics are still host-speed-dependent: on heterogeneous CI runners
+//! pass `--sim-only` to gate only the deterministic simulated-time
+//! metrics and report the rest informationally. Exit status 1 on any
+//! regression; missing baselines are a note, not a failure (first run
+//! seeds them).
+//!
+//! `--report` additionally prints a per-metric summary table — baseline,
+//! current, and signed delta for *every* numeric metric in every bench
+//! file, gated or not — even when all gates pass. Use it to eyeball the
+//! full trajectory rather than just the pass/fail verdict.
 //!
 //! Refresh the baseline by copying the current `BENCH_*.json` files into
 //! the baseline directory and committing them.
@@ -23,6 +30,7 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+use fedselect::metrics::Table;
 use fedselect::util::json::Json;
 use fedselect::{obs_error, obs_info};
 
@@ -33,9 +41,16 @@ fn higher_is_better(key: &str) -> bool {
     key.ends_with("_per_s")
 }
 
-/// Metrics where larger is worse (simulated latency).
+/// Metrics where larger is worse: simulated latency, plus host-side stall
+/// metrics (`merge_stall_ms` from the pipelined executor and friends).
 fn lower_is_better(key: &str) -> bool {
-    key == "sim_round_s" || key == "sim_total_s"
+    key == "sim_round_s" || key == "sim_total_s" || key.ends_with("_stall_ms")
+}
+
+/// Metrics whose absolute value depends on host speed; informational
+/// under `--sim-only`.
+fn host_dependent(key: &str) -> bool {
+    key.ends_with("_per_s") || key.ends_with("_stall_ms")
 }
 
 /// name -> (metric key -> value), from the "metrics" array.
@@ -88,10 +103,13 @@ fn run() -> Result<bool, String> {
     let mut positional = Vec::new();
     let mut threshold = DEFAULT_THRESHOLD;
     let mut sim_only = false;
+    let mut report = false;
     let mut it = args.into_iter();
     while let Some(a) = it.next() {
         if a == "--sim-only" {
             sim_only = true;
+        } else if a == "--report" {
+            report = true;
         } else if a == "--threshold" {
             let v = it.next().ok_or("--threshold needs a value")?;
             threshold = v.parse().map_err(|e| format!("bad --threshold {v:?}: {e}"))?;
@@ -103,7 +121,8 @@ fn run() -> Result<bool, String> {
     }
     let [baseline_dir, current_dir] = positional.as_slice() else {
         return Err(
-            "usage: perf_diff <baseline_dir> <current_dir> [--threshold 0.15] [--sim-only]"
+            "usage: perf_diff <baseline_dir> <current_dir> [--threshold 0.15] \
+             [--sim-only] [--report]"
                 .into(),
         );
     };
@@ -122,6 +141,10 @@ fn run() -> Result<bool, String> {
 
     let mut regressed = false;
     let mut compared = 0usize;
+    let mut summary = Table::new(
+        "Perf summary (baseline -> current)",
+        &["bench", "metric", "key", "baseline", "current", "delta", "gate"],
+    );
     for base_path in &baselines {
         let file = base_path.file_name().expect("bench file name");
         let cur_path = current_dir.join(file);
@@ -146,9 +169,12 @@ fn run() -> Result<bool, String> {
                 else {
                     continue;
                 };
-                let (bad, arrow) = if higher_is_better(key) && *base_val > 0.0 {
-                    (!sim_only && cur_val < base_val * (1.0 - threshold), "dropped")
-                } else if lower_is_better(key) && *base_val > 0.0 {
+                let gated = (higher_is_better(key) || lower_is_better(key))
+                    && *base_val > 0.0
+                    && !(sim_only && host_dependent(key));
+                let (bad, arrow) = if gated && higher_is_better(key) {
+                    (cur_val < base_val * (1.0 - threshold), "dropped")
+                } else if gated {
                     (cur_val > base_val * (1.0 + threshold), "rose")
                 } else {
                     (false, "")
@@ -164,8 +190,39 @@ fn run() -> Result<bool, String> {
                 } else if higher_is_better(key) || lower_is_better(key) {
                     obs_info!("ok {name} {key}: {base_val:.2} -> {cur_val:.2}");
                 }
+                if report {
+                    let delta = if *base_val != 0.0 {
+                        format!("{:+.1}%", (cur_val - base_val) / base_val * 100.0)
+                    } else {
+                        format!("{:+.2}", cur_val - base_val)
+                    };
+                    let file_stem = base_path
+                        .file_stem()
+                        .and_then(|s| s.to_str())
+                        .unwrap_or("?")
+                        .trim_start_matches("BENCH_")
+                        .to_string();
+                    summary.push(vec![
+                        file_stem,
+                        name.clone(),
+                        key.clone(),
+                        format!("{base_val:.3}"),
+                        format!("{cur_val:.3}"),
+                        delta,
+                        if bad {
+                            "FAIL".to_string()
+                        } else if gated {
+                            "ok".to_string()
+                        } else {
+                            "-".to_string()
+                        },
+                    ]);
+                }
             }
         }
+    }
+    if report && !summary.rows.is_empty() {
+        obs_info!("{}", summary.to_pretty());
     }
     obs_info!(
         "perf_diff: {compared} metric comparisons, threshold {:.0}%{}",

@@ -6,11 +6,12 @@
 //! ```
 //!
 //! Report mode validates every line against the versioned schema and
-//! renders three tables: run shape (rounds, namespaces, event counts),
-//! the per-phase profile (span counts, host wall time, simulated time),
-//! and the per-tier client lifecycle rollup (selected → fetched →
-//! computed → merged/dropped/discarded/deferred, with wire bytes and
-//! cache hits).
+//! renders the run shape (rounds, namespaces, event counts), the
+//! per-phase profile (span counts, host wall time, simulated time), a
+//! per-tier rollup of pipelined-executor `task` spans when present
+//! (count, total/mean/max host wall, mean completion sim-time), and the
+//! per-tier client lifecycle rollup (selected → fetched → computed →
+//! merged/dropped/discarded/deferred, with wire bytes and cache hits).
 //!
 //! Diff mode strips the nondeterministic `wall_ms` fields and `log`
 //! events, then compares the remaining (sim-clock) content line by line:
@@ -99,6 +100,35 @@ fn report(path: &str) -> Result<(), String> {
         ]);
     }
     obs_info!("{}", phases.to_pretty());
+
+    // per-tier task rollup over the pipelined-executor `task` spans: one
+    // per surviving cohort slot, overlapping in host time, so wall totals
+    // here can exceed the round's span-union wall_ms
+    let tasks: Vec<&Json> = events.iter().filter(|e| tag(e) == "task").collect();
+    if !tasks.is_empty() {
+        let task_tiers: BTreeSet<u64> = tasks.iter().map(|e| u(e, "tier")).collect();
+        let mut task_table = Table::new(
+            "Task spans by tier",
+            &["tier", "tasks", "wall_total_ms", "wall_mean_ms", "wall_max_ms", "sim_mean_s"],
+        );
+        for tier in &task_tiers {
+            let of_tier: Vec<&&Json> =
+                tasks.iter().filter(|e| u(e, "tier") == *tier).collect();
+            let wall: f64 = of_tier.iter().map(|e| f(e, "wall_ms")).sum();
+            let max: f64 = of_tier.iter().map(|e| f(e, "wall_ms")).fold(0.0, f64::max);
+            let sim: f64 = of_tier.iter().map(|e| f(e, "sim_s")).sum();
+            let n = of_tier.len() as f64;
+            task_table.push(vec![
+                format!("t{tier}"),
+                of_tier.len().to_string(),
+                format!("{wall:.2}"),
+                format!("{:.3}", wall / n),
+                format!("{max:.3}"),
+                format!("{:.2}", sim / n),
+            ]);
+        }
+        obs_info!("{}", task_table.to_pretty());
+    }
 
     // per-tier client lifecycle rollup ("-" collects events with no tier,
     // e.g. committee reconstruction-path dropouts)

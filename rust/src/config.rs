@@ -7,6 +7,7 @@ use crate::cache::EvictPolicy;
 use crate::coordinator::AggregationMode;
 use crate::data::{bow::BowConfig, images::ImageConfig, text::TextConfig};
 use crate::error::{Error, Result};
+use crate::exec::ExecMode;
 use crate::fedselect::{KeyPolicy, SliceImpl};
 use crate::fleet::ScenarioConfig;
 use crate::model::ModelArch;
@@ -72,8 +73,26 @@ pub struct TrainConfig {
     pub policies: Vec<KeyPolicy>,
     pub slice_impl: SliceImpl,
     /// Threads slicing the cohort through the round session (1 = serial;
-    /// results are byte-identical at any thread count).
+    /// results are byte-identical at any thread count). Only meaningful
+    /// with `exec_workers == 1`: the pipelined executor fetches inside each
+    /// per-slot task instead of as one batched phase.
     pub fetch_threads: usize,
+    /// Merge-order contract of the pipelined round executor
+    /// ([`crate::exec`]): `strict` (default) merges in cohort order and is
+    /// byte-identical to the legacy sequential round at any worker count;
+    /// `fast` merges in simulated completion order over the key-striped
+    /// [`crate::aggregation::ShardedAccumulator`].
+    pub exec: ExecMode,
+    /// Worker threads draining per-slot round tasks (fetch → hazard →
+    /// local-train); 1 = inline on the caller thread (the legacy wall-clock
+    /// shape). Values > 1 require the native engine — the PJRT runtime is
+    /// exclusive (`&mut`) and cannot run cohort slots concurrently.
+    pub exec_workers: usize,
+    /// Key-range shards of the fast-mode accumulator (0 = auto: match
+    /// `exec_workers`). Strict mode always uses the sequential
+    /// [`crate::aggregation::SparseAccumulator`] for bit-exact legacy
+    /// float-add order.
+    pub agg_shards: usize,
     pub agg: AggMode,
     /// When the round's aggregation *closes*: synchronous barrier (default,
     /// byte-identical to the pre-engine coordinator), over-selection, or
@@ -174,6 +193,9 @@ impl TrainConfig {
             policies: vec![KeyPolicy::TopFreq { m }],
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
+            exec: ExecMode::Strict,
+            exec_workers: 1,
+            agg_shards: 0,
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
@@ -209,6 +231,9 @@ impl TrainConfig {
             policies: vec![KeyPolicy::RandomGlobal { m }],
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
+            exec: ExecMode::Strict,
+            exec_workers: 1,
+            agg_shards: 0,
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
@@ -244,6 +269,9 @@ impl TrainConfig {
             policies: vec![KeyPolicy::RandomGlobal { m }],
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
+            exec: ExecMode::Strict,
+            exec_workers: 1,
+            agg_shards: 0,
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
@@ -287,6 +315,9 @@ impl TrainConfig {
             ],
             slice_impl: SliceImpl::PregenCdn,
             fetch_threads: 1,
+            exec: ExecMode::Strict,
+            exec_workers: 1,
+            agg_shards: 0,
             agg: AggMode::CohortMean,
             agg_mode: AggregationMode::Synchronous,
             secure_agg: false,
@@ -480,6 +511,28 @@ impl TrainConfig {
                 "fetch_threads must be >= 1 (1 = serial cohort slicing)".into(),
             ));
         }
+        if self.exec_workers == 0 {
+            return Err(Error::Config(
+                "exec_workers must be >= 1 (1 = inline task execution)".into(),
+            ));
+        }
+        if self.exec_workers > 1 && self.engine != EngineKind::Native {
+            return Err(Error::Config(
+                "--exec-workers > 1 requires --engine native (the PJRT \
+                 runtime is exclusive and cannot run cohort slots \
+                 concurrently); use --fetch-threads to parallelize slicing \
+                 instead"
+                    .into(),
+            ));
+        }
+        if self.exec_workers > 1 && self.fetch_threads > 1 {
+            return Err(Error::Config(
+                "--fetch-threads parallelizes the batched fetch phase, which \
+                 the pipelined executor (--exec-workers > 1) replaces with \
+                 per-task fetches; pick one"
+                    .into(),
+            ));
+        }
         match (&self.arch, &self.dataset) {
             (ModelArch::Logreg { vocab, tags }, DatasetConfig::Bow(b)) => {
                 if b.vocab != *vocab || b.tags != *tags {
@@ -589,6 +642,32 @@ mod tests {
         cfg.fetch_threads = 0;
         assert!(cfg.validate().is_err());
         assert!(cfg.with_fetch_threads(8).validate().is_ok());
+    }
+
+    #[test]
+    fn exec_knobs_are_validated() {
+        let mut cfg = TrainConfig::logreg_default(512, 64);
+        cfg.exec = ExecMode::Fast;
+        cfg.exec_workers = 4;
+        assert!(cfg.validate().is_ok());
+        cfg.exec_workers = 0;
+        assert!(cfg.validate().is_err(), "zero workers rejected");
+        // parallel tasks need the shared-reference native engine
+        cfg.exec_workers = 4;
+        cfg.engine = EngineKind::pjrt_default();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
+        cfg.engine = EngineKind::Native;
+        // batched-fetch threading conflicts with per-task fetching
+        cfg.fetch_threads = 4;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("fetch-threads"), "{err}");
+        cfg.fetch_threads = 1;
+        assert!(cfg.validate().is_ok());
+        // exec_workers == 1 keeps fetch_threads meaningful (legacy shape)
+        cfg.exec_workers = 1;
+        cfg.fetch_threads = 8;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //! buffered merge order is reproducible bit-for-bit at a fixed seed —
 //! property-tested in `tests/round_engine.rs`.
 
+use crate::exec::ExecMode;
 use crate::fedselect::ClientKeys;
 use crate::scheduler::CompletionEvent;
 
@@ -162,6 +163,20 @@ pub struct SlotWork {
     pub keys: ClientKeys,
     /// Per-binding sliced model deltas, in binding order.
     pub deltas: Vec<Vec<f32>>,
+}
+
+/// One cohort slot as it leaves the pipelined executor: the scheduler's
+/// completion event for the slot paired with its computed work. The task
+/// pool hands these over in whatever order workers drained them; the engine
+/// re-establishes the canonical simulated order in
+/// [`RoundEngine::close_from_tasks`].
+#[derive(Clone, Debug)]
+pub struct TaskCompletion {
+    /// Simulated completion of the slot (same content the scheduler's
+    /// `events()` would have produced for it).
+    pub event: CompletionEvent,
+    /// The slot's computed contribution.
+    pub work: SlotWork,
 }
 
 /// One update the engine decided to merge this round, in merge order.
@@ -646,6 +661,64 @@ impl RoundEngine {
             }
         }
     }
+
+    /// Close a round from the pipelined executor's per-slot
+    /// [`TaskCompletion`]s instead of a pre-computed event vector.
+    ///
+    /// Completions arrive in whatever order the worker pool drained them;
+    /// this method first re-establishes the canonical *simulated* completion
+    /// order — ascending `at_s`, slot index as the tie-break, exactly the
+    /// sort `Scheduler::events` applies — so the outcome is a pure function
+    /// of the simulated timeline and byte-identical to the phase-sequential
+    /// path at any worker count. `cohort_slots` is the planned slot count
+    /// (completions cover only non-dropped slots).
+    ///
+    /// `order` is the merge-order contract: under [`ExecMode::Strict`] the
+    /// outcome is exactly [`Self::close_round`]'s (synchronous mode merges
+    /// in cohort-slot order). Under [`ExecMode::Fast`] a synchronous-mode
+    /// merge list is reordered into simulated completion order — the order
+    /// updates actually land at the server — which changes float-add order
+    /// but no set membership, weight, or ledger content. Over-select and
+    /// buffered modes already merge in completion order, so `order` is a
+    /// no-op there.
+    pub fn close_from_tasks(
+        &mut self,
+        round: usize,
+        base_cohort: usize,
+        cohort_slots: usize,
+        round_start_s: f64,
+        mut completions: Vec<TaskCompletion>,
+        order: ExecMode,
+    ) -> RoundOutcome {
+        completions.sort_by(|a, b| {
+            a.event
+                .at_s
+                .partial_cmp(&b.event.at_s)
+                .expect("client timings are finite")
+                .then(a.event.slot.cmp(&b.event.slot))
+        });
+        let events: Vec<CompletionEvent> = completions.iter().map(|c| c.event).collect();
+        let mut work: Vec<Option<SlotWork>> = (0..cohort_slots).map(|_| None).collect();
+        for c in completions {
+            work[c.event.slot] = Some(c.work);
+        }
+        let reorder = order == ExecMode::Fast && self.mode == AggregationMode::Synchronous;
+        let mut out = self.close_round(round, base_cohort, round_start_s, &events, work);
+        if reorder {
+            // completion rank by client id: a synchronous cohort is sampled
+            // without replacement, so clients are unique within the round.
+            // The single staleness-0 committee indexes the full merge set
+            // (0..n), so permuting `merged` keeps its submitters valid.
+            let rank: std::collections::BTreeMap<usize, usize> = events
+                .iter()
+                .enumerate()
+                .map(|(i, e)| (e.client, i))
+                .collect();
+            out.merged
+                .sort_by_key(|m| rank.get(&m.client).copied().unwrap_or(usize::MAX));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -769,6 +842,50 @@ mod tests {
         assert_eq!(out.committees.len(), 1, "one whole-merge-set committee");
         assert_eq!(out.committees[0].submitters, vec![0, 1]);
         assert!(out.committees[0].dropped.is_empty());
+    }
+
+    #[test]
+    fn close_from_tasks_reorders_events_and_honours_exec_mode() {
+        // completions handed over in arbitrary pool-drain order
+        let completions = || {
+            vec![
+                TaskCompletion {
+                    event: event(2, 12, 1, 0.5),
+                    work: slot_work(12, 1),
+                },
+                TaskCompletion {
+                    event: event(0, 10, 0, 3.0),
+                    work: slot_work(10, 0),
+                },
+                TaskCompletion {
+                    event: event(1, 11, 0, 1.5),
+                    work: slot_work(11, 0),
+                },
+            ]
+        };
+        // strict + synchronous == close_round byte-for-byte: slot order
+        let mut eng = RoundEngine::new(AggregationMode::Synchronous);
+        let out = eng.close_from_tasks(1, 3, 3, 0.0, completions(), ExecMode::Strict);
+        assert_eq!(out.close_s, 3.0, "closes at the straggler");
+        let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
+        assert_eq!(order, vec![10, 11, 12], "strict merges in cohort-slot order");
+        // fast + synchronous: same set, simulated completion order
+        let mut eng = RoundEngine::new(AggregationMode::Synchronous);
+        let out = eng.close_from_tasks(1, 3, 3, 0.0, completions(), ExecMode::Fast);
+        assert_eq!(out.close_s, 3.0, "close point is mode-independent");
+        let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
+        assert_eq!(order, vec![12, 11, 10], "fast merges in completion order");
+        assert_eq!(out.committees.len(), 1);
+        assert_eq!(out.committees[0].submitters, vec![0, 1, 2]);
+        // over-select already merges in completion order; exec mode is a
+        // no-op and the tail discard logic sees the sorted events
+        for mode in [ExecMode::Strict, ExecMode::Fast] {
+            let mut eng = RoundEngine::new(AggregationMode::OverSelect { extra_frac: 0.5 });
+            let out = eng.close_from_tasks(1, 2, 3, 0.0, completions(), mode);
+            let order: Vec<usize> = out.merged.iter().map(|m| m.client).collect();
+            assert_eq!(order, vec![12, 11], "{mode}");
+            assert_eq!(out.discarded_ids, vec![10], "{mode}");
+        }
     }
 
     #[test]

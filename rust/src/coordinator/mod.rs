@@ -13,25 +13,34 @@
 //! 1. **Keys** — fork each client's RNG and draw its select keys via its
 //!    [`KeyPolicy`] (re-budgeted per client when the plan says so), in
 //!    cohort order (phases 0–1 are the only consumers of the round RNG);
-//! 2. **Slice** — `begin_round` on the slice service (Option 3
-//!    pre-generates here) yields one immutable session, and the whole
-//!    cohort is sliced through [`RoundSession::fetch_batch`] across
-//!    `fetch_threads` workers; with `--cache` each client consults its
-//!    cross-round on-device cache first ([`crate::cache`]): version-fresh
-//!    pieces are served locally and only the rest cross the (simulated)
-//!    wire, with the version clock bumped after each close for exactly the
-//!    rows the aggregator wrote;
-//! 3. **Update** — each surviving client runs `ClientUpdate` (one local
-//!    epoch of SGD through the engine), in cohort-index order so the
-//!    trajectory is byte-identical at any `fetch_threads`; the
-//!    [`Scheduler::events`] iterator turns the per-client byte ledgers into
-//!    completion-ordered [`crate::scheduler::CompletionEvent`]s, and the
-//!    [`RoundEngine`] decides — per its [`AggregationMode`] — which updates
-//!    `AGGREGATE*` merges now (and at what staleness weight), which stay in
-//!    flight, and when the round *closes*; then `ServerUpdate` applies the
-//!    server optimizer to the pseudo-gradient and
-//!    [`Scheduler::complete_round_at`] lands the close point as simulated
-//!    round wall-time plus per-tier completion counts.
+//! 2.–3. **Tasks** — `begin_round` on the slice service (Option 3
+//!    pre-generates here) yields one immutable session, and every cohort
+//!    slot then flows as *one task* (slice/delta fetch → hazard coin →
+//!    `ClientUpdate`, one local epoch of SGD) through the pipelined
+//!    executor ([`crate::exec`]). With `--exec-workers N > 1` a bounded
+//!    worker pool drives [`RoundSession::fetch_delta`] per task and trains
+//!    through the pure native engine; at the default `N = 1` the session is
+//!    batch-fetched across `fetch_threads` and tasks run inline (the
+//!    legacy wall-clock shape, and the only shape the exclusive PJRT
+//!    engine supports). Either way task outputs are staged slot-indexed
+//!    and every side effect — ledger sums, client trace events, RNG
+//!    consumption, cache commits ([`crate::cache`]: version-fresh pieces
+//!    served locally, version clock bumped after each close for exactly
+//!    the rows the aggregator wrote) — is replayed in cohort order, so the
+//!    trajectory is byte-identical at any worker count. The executor hands
+//!    the engine per-slot [`TaskCompletion`]s (the scheduler's simulated
+//!    [`crate::scheduler::CompletionEvent`] paired with the slot's work) in
+//!    host pool-drain order; [`RoundEngine::close_from_tasks`] re-sorts
+//!    them onto the simulated timeline and decides — per its
+//!    [`AggregationMode`] — which updates `AGGREGATE*` merges now (and at
+//!    what staleness weight), which stay in flight, and when the round
+//!    *closes*; then `ServerUpdate` applies the server optimizer to the
+//!    pseudo-gradient and [`Scheduler::complete_round_at`] lands the close
+//!    point as simulated round wall-time plus per-tier completion counts.
+//!    `--exec strict` (default) merges in cohort order — byte-identical to
+//!    the legacy round; `--exec fast` merges in simulated completion order
+//!    over the key-striped [`ShardedAccumulator`] (deterministic
+//!    run-to-run, float-add order differs from strict).
 //!
 //! Under `AggregationMode::Synchronous` (the default) the engine reproduces
 //! the pre-engine barrier loop byte for byte — proven against a legacy-loop
@@ -45,28 +54,34 @@
 
 pub mod engine;
 
-pub use engine::{AggregationMode, CommitteeSpec, MergeItem, RoundEngine, RoundOutcome, SlotWork};
+pub use engine::{
+    AggregationMode, CommitteeSpec, MergeItem, RoundEngine, RoundOutcome, SlotWork,
+    TaskCompletion,
+};
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::aggregation::{
-    finalize_mean, Aggregator, SecAggCommittee, SecureAggSim, SparseAccumulator, TouchedKeys,
+    finalize_mean, Aggregator, SecAggCommittee, SecureAggSim, ShardedAccumulator,
+    SparseAccumulator, TouchedKeys,
 };
 use crate::cache::{CacheGeometry, CommitStats, FleetCaches, VersionClock};
 use crate::clients::{build_cu_batch, build_eval_batches, client_memory_bytes, Engine};
 use crate::config::{DatasetConfig, EngineKind, TrainConfig};
-use crate::data::{bow, images, text, Example, FederatedDataset};
+use crate::data::{bow, images, text, ClientData, Example, FederatedDataset};
 use crate::error::{Error, Result};
+use crate::exec::{self, ExecMode};
 use crate::fedselect::{
-    ClientKeys, DeltaPlan, RoundComm, RoundSession, SliceImpl, SliceService,
+    ClientKeys, DeltaPlan, FetchOutcome, RoundComm, RoundSession, SliceImpl, SliceService,
 };
 use crate::metrics::{human_bytes, record_round};
 use crate::model::{Binding, ModelArch, ParamStore, SelectSpec};
+use crate::native::{self, Buf};
 use crate::obs::{self, ClientStage, MetricsRegistry, Phase, Recorder, TraceEvent};
 use crate::optim::Optimizer;
 use crate::runtime::PjrtRuntime;
-use crate::scheduler::{ClientRoundStats, Scheduler, SliceGeometry};
+use crate::scheduler::{ClientRoundStats, CompletionEvent, Scheduler, SliceGeometry};
 use crate::tensor::rng::Rng;
 
 /// Per-round ledger.
@@ -102,10 +117,21 @@ pub struct RoundRecord {
     pub up_bytes: u64,
     /// Max client memory this round (bytes).
     pub max_client_mem: usize,
-    /// Host wall time of the round's plan→close phase spans (sum of the
-    /// recorder's `plan`/`fetch`/`compute`/`close` spans); evaluation is
-    /// ledgered separately as [`EvalRecord::eval_ms`].
+    /// Host wall time of the round, plan start → close end (the *union* of
+    /// the recorder's `plan`/`fetch`/`compute`/`close` span extents — once
+    /// fetch and compute overlap under the pipelined executor the spans
+    /// sum to more than the round actually took, so `wall_ms ≤
+    /// sum-of-spans` always). Evaluation is ledgered separately as
+    /// [`EvalRecord::eval_ms`].
     pub wall_ms: f64,
+    /// Host wall time the round spent serialized in the merge: the
+    /// aggregation substrate's add loop plus finalize. Wall-clock metric
+    /// like `wall_ms` — excluded from byte-identity comparisons.
+    pub merge_stall_ms: f64,
+    /// Executor pool utilization of the task phase in [0, 1]
+    /// ([`crate::exec::ExecStats::utilization`]; 1.0 for inline execution).
+    /// Wall-clock metric — excluded from byte-identity comparisons.
+    pub exec_util: f64,
     /// Simulated round duration on the device fleet: close point (straggler
     /// under `sync`, goal-count completion otherwise) plus server overhead.
     pub sim_round_s: f64,
@@ -593,42 +619,150 @@ impl Trainer {
             client_rngs.push(crng);
         }
         let plan_ms = t_plan.elapsed().as_secs_f64() * 1e3;
-        let t_fetch = Instant::now();
+        let t_task = Instant::now();
 
-        // Phase 2 — slice: one immutable session for the round, the whole
-        // cohort fetched through it in parallel. Bundle order == cohort
-        // order, so downstream aggregation is deterministic. With --cache
+        // Phases 2+3a — tasks: one immutable session for the round, then
+        // every cohort slot flows as one task (slice/delta fetch → hazard
+        // coin → ClientUpdate) through the pipelined executor. With --cache
         // each client first gets a DeltaPlan from its on-device cache
         // (fresh pieces serve locally, no wire bytes); without, the same
         // path runs with empty plans — so per-client down_bytes is always
         // the *session's* wire charge (full model under Option 1, bundle
         // bytes otherwise) and the SimClock agrees with the comm ledger
-        // whether the cache is on or off.
-        let (outcomes, comm) = {
-            let session = self.service.begin_round(&self.store, &self.spec)?;
-            let deltas: Vec<DeltaPlan> =
-                match (self.scheduler.caches(), self.versions.as_ref()) {
-                    (Some(caches), Some(versions)) => {
-                        let cgeom = self.cache_geom.as_ref().expect("cache geometry");
-                        cohort
-                            .iter()
-                            .zip(client_keys.iter())
-                            .map(|(&ci, keys)| {
-                                caches.plan_for(ci, self.round as u64, keys, cgeom, versions)
-                            })
-                            .collect()
-                    }
-                    _ => vec![DeltaPlan::default(); cohort.len()],
-                };
+        // whether the cache is on or off. Task outputs are staged
+        // slot-indexed and all side effects are replayed in cohort order
+        // below, so the trajectory is byte-identical at any worker count.
+        let session = self.service.begin_round(&self.store, &self.spec)?;
+        let deltas: Vec<DeltaPlan> = match (self.scheduler.caches(), self.versions.as_ref()) {
+            (Some(caches), Some(versions)) => {
+                let cgeom = self.cache_geom.as_ref().expect("cache geometry");
+                cohort
+                    .iter()
+                    .zip(client_keys.iter())
+                    .map(|(&ci, keys)| {
+                        caches.plan_for(ci, self.round as u64, keys, cgeom, versions)
+                    })
+                    .collect()
+            }
+            _ => vec![DeltaPlan::default(); cohort.len()],
+        };
+        // everything a task body touches, hoisted out of `self` so the
+        // closures borrow disjoint fields (the exclusive engine mutably,
+        // everything else shared)
+        let arch = &self.arch;
+        let train = &self.dataset.train;
+        let hazards: &[f32] = &plan.hazards;
+        let cohort_ids: &[usize] = cohort;
+        let lr = self.cfg.client_lr;
+        // §4.2 upload pricing is model-global, so it is a per-round
+        // constant: committee SecAgg ships masked update + masked counts as
+        // u64 group elements (16 bytes per coordinate), legacy dense SecAgg
+        // ships one full-model float vector; None = plain per-client bytes
+        let secure_up: Option<u64> = if self.cfg.secure_agg {
+            Some(if self.cfg.secure_committee {
+                self.store.num_params() as u64 * 16
+            } else {
+                self.store.bytes() as u64
+            })
+        } else {
+            None
+        };
+        let (task_results, exec_stats, fetch_ms, compute_ms) = if self.cfg.exec_workers > 1 {
+            // pooled path: per-task fetch_delta through the shared session,
+            // training through the pure native engine (validated Native-only)
+            let session_ref: &dyn RoundSession = session.as_ref();
+            let inputs: Vec<((ClientKeys, Rng), DeltaPlan)> = client_keys
+                .into_iter()
+                .zip(client_rngs)
+                .zip(deltas)
+                .collect();
+            let (outs, stats) = exec::run_tasks(
+                self.cfg.exec_workers,
+                inputs,
+                |slot, ((keys, mut crng), delta)| -> Result<TaskOut> {
+                    let fetched = session_ref.fetch_delta(&keys, &delta)?;
+                    let fetch_end_ms = t_task.elapsed().as_secs_f64() * 1e3;
+                    run_client_task(
+                        arch,
+                        &train[cohort_ids[slot] % n_train],
+                        hazards[slot],
+                        secure_up,
+                        fetched,
+                        keys,
+                        &mut crng,
+                        fetch_end_ms,
+                        |ms, slices, batch| native::client_update(arch, ms, &slices, batch, lr),
+                    )
+                },
+            );
+            // span extents under overlap, every offset measured from
+            // t_task: fetch runs until the last task's slice landed,
+            // compute from the first slice to the end of the drain — so
+            // fetch+compute covers the whole task phase (session setup
+            // included, since the first fetch end sits after it) and
+            // exceeds it by exactly max−min fetch end, which is what
+            // wall_ms ≤ sum-of-spans pins down
+            let drain_end_ms = t_task.elapsed().as_secs_f64() * 1e3;
+            let ends = || outs.iter().filter_map(|o| o.as_ref().ok()).map(|o| o.fetch_end_ms);
+            let fetch_span_ms = ends().fold(0.0, f64::max);
+            let first_end = ends().fold(f64::INFINITY, f64::min);
+            let compute_span_ms = if first_end.is_finite() {
+                (drain_end_ms - first_end).max(0.0)
+            } else {
+                0.0
+            };
+            (outs, stats, fetch_span_ms, compute_span_ms)
+        } else {
+            // inline path (legacy wall-clock shape; required for the
+            // exclusive PJRT engine): batch-fetch the cohort across
+            // fetch_threads, then drain the same per-slot task bodies on
+            // the caller thread
             let outcomes =
                 session.fetch_batch_delta(&client_keys, &deltas, self.cfg.fetch_threads)?;
-            (outcomes, session.finish())
+            let fetch_ms = t_task.elapsed().as_secs_f64() * 1e3;
+            let t_compute = Instant::now();
+            let engine = &mut self.engine;
+            let inputs: Vec<((ClientKeys, Rng), FetchOutcome)> = client_keys
+                .into_iter()
+                .zip(client_rngs)
+                .zip(outcomes)
+                .collect();
+            let (outs, stats) = exec::run_tasks_seq(
+                inputs,
+                |slot, ((keys, mut crng), fetched)| -> Result<TaskOut> {
+                    run_client_task(
+                        arch,
+                        &train[cohort_ids[slot] % n_train],
+                        hazards[slot],
+                        secure_up,
+                        fetched,
+                        keys,
+                        &mut crng,
+                        fetch_ms,
+                        |ms, slices, batch| engine.client_update(arch, ms, slices, batch, lr),
+                    )
+                },
+            );
+            let compute_ms = t_compute.elapsed().as_secs_f64() * 1e3;
+            (outs, stats, fetch_ms, compute_ms)
         };
+        // the close span opens here so the four phase spans *tile* the
+        // round: everything after the task phase — session teardown, cache
+        // commits, the cohort-order replay, engine close, merge — is close
+        // time. That tiling is what makes `wall_ms ≤ sum-of-spans` hold
+        // (pinned by a test) once fetch and compute overlap.
+        let t_close = Instant::now();
+        let comm = session.finish();
+        // unwrap task errors in slot order (first failing slot wins, so the
+        // surfaced error is deterministic at any worker count)
+        let outs: Vec<TaskOut> = task_results.into_iter().collect::<Result<_>>()?;
 
-        // Cache bookkeeping: commit every cohort member's round against its
-        // cache (the download happened even if the client drops later), in
-        // cohort order, before this round's version bumps. Hits/lookups are
-        // tier-attributed for the per-tier hit-rate column.
+        // Cache bookkeeping (replayed in cohort order, like every other
+        // task side effect): commit every cohort member's round against its
+        // cache (the download happened even if the client drops later),
+        // before this round's version bumps. Hits/lookups are
+        // tier-attributed for the per-tier hit-rate column. Each slot's
+        // keys ride back in its TaskOut — dropped slots still committed.
         let mut tier_cache_hits = vec![0u64; ntiers];
         let mut tier_cache_lookups = vec![0u64; ntiers];
         let mut cache_stats = CommitStats::default();
@@ -642,7 +776,7 @@ impl Trainer {
             }
             let caches = self.scheduler.caches_mut().expect("caches installed");
             for (slot, &ci) in cohort.iter().enumerate() {
-                let st = caches.commit(ci, self.round as u64, &client_keys[slot], cgeom, versions);
+                let st = caches.commit(ci, self.round as u64, &outs[slot].keys, cgeom, versions);
                 tier_cache_hits[slot_tiers[slot]] += st.hits;
                 tier_cache_lookups[slot_tiers[slot]] += st.lookups;
                 cache_stats.accumulate(&st);
@@ -651,33 +785,22 @@ impl Trainer {
             // same immutable state: they must agree
             debug_assert_eq!(
                 cache_stats.hits,
-                outcomes.iter().map(|o| o.piece_hits).sum::<u64>(),
+                outs.iter().map(|o| o.piece_hits).sum::<u64>(),
                 "session ledger and cache commit disagree on hits"
             );
         }
-        let fetch_ms = t_fetch.elapsed().as_secs_f64() * 1e3;
-        let t_compute = Instant::now();
 
-        // Phase 3a — compute: dropout coin + ClientUpdate per cohort slot,
-        // sequential in cohort-index order (byte-identical at any
-        // fetch_threads). Merging is deferred to the round engine.
+        // Phase 3a — replay: fold every slot's staged TaskOut into the
+        // ledgers, trace stream, and engine work vector in cohort-index
+        // order, so the observable side-effect sequence is identical to the
+        // sequential round at any worker count.
         let mut dropped = 0usize;
         let mut up_bytes_plain = 0u64;
         let mut up_bytes_secure = 0u64;
         let mut max_mem = 0usize;
         let mut stats: Vec<ClientRoundStats> = Vec::with_capacity(cohort.len());
         let mut work: Vec<Option<SlotWork>> = Vec::with_capacity(cohort.len());
-        for (i, outcome) in outcomes.into_iter().enumerate() {
-            let client = &self.dataset.train[cohort[i] % n_train];
-            let crng = &mut client_rngs[i];
-            let keys = &client_keys[i];
-            // the session's per-client wire charge (post-cache): what the
-            // SimClock moves over the client's downlink — full model under
-            // Option 1, bundle bytes under Options 2/3
-            let down_bytes = outcome.down_bytes;
-            let piece_hits = outcome.piece_hits;
-            let bundle = outcome.bundle;
-            let slice_floats = bundle.total_floats();
+        for (i, out) in outs.into_iter().enumerate() {
             if obs_on {
                 self.recorder.record(&TraceEvent::Client {
                     ns: self.ns,
@@ -685,16 +808,12 @@ impl Trainer {
                     client: cohort[i],
                     tier: Some(slot_tiers[i]),
                     stage: ClientStage::Fetched {
-                        down_bytes,
-                        cache_hit_pieces: piece_hits,
+                        down_bytes: out.down_bytes,
+                        cache_hit_pieces: out.piece_hits,
                     },
                 });
             }
-
-            // failure injection: drop after download, with the profile's
-            // hazard (the coin is only flipped when the hazard is nonzero,
-            // matching the legacy `dropout_rate > 0` gate bit for bit)
-            if plan.hazards[i] > 0.0 && crng.f32() < plan.hazards[i] {
+            if out.dropped {
                 dropped += 1;
                 if obs_on {
                     self.recorder.record(&TraceEvent::Client {
@@ -706,52 +825,21 @@ impl Trainer {
                     });
                 }
                 stats.push(ClientRoundStats {
-                    down_bytes,
+                    down_bytes: out.down_bytes,
                     dropped: true,
                     ..ClientRoundStats::default()
                 });
                 work.push(None);
                 continue;
             }
-
-            let (batch, _used) = build_cu_batch(&self.arch, client, keys, crng)?;
-            max_mem = max_mem.max(client_memory_bytes(slice_floats, &batch));
-            let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
-            let deltas = self.engine.client_update(
-                &self.arch,
-                &ms,
-                bundle.into_vecs(),
-                &batch,
-                self.cfg.client_lr,
-            )?;
-            let plain_up = deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
-                + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
-            let client_up = if self.cfg.secure_agg {
-                // §4.2: client-side φ + dense secure agg uploads
-                // full-model-sized masked vectors. The committee protocol
-                // ships masked update + masked counts as u64 group elements
-                // (16 bytes per coordinate total).
-                if self.cfg.secure_committee {
-                    self.store.num_params() as u64 * 16
-                } else {
-                    self.store.bytes() as u64
-                }
-            } else {
-                plain_up
-            };
-            up_bytes_plain += plain_up;
-            up_bytes_secure += client_up;
-            let update_norm = deltas
-                .iter()
-                .flat_map(|d| d.iter())
-                .map(|&v| (v as f64) * (v as f64))
-                .sum::<f64>()
-                .sqrt() as f32;
+            max_mem = max_mem.max(out.mem);
+            up_bytes_plain += out.plain_up;
+            up_bytes_secure += out.up_bytes;
             stats.push(ClientRoundStats {
-                down_bytes,
-                up_bytes: client_up,
-                compute_units: slice_floats as f64 * client.num_examples() as f64,
-                update_norm,
+                down_bytes: out.down_bytes,
+                up_bytes: out.up_bytes,
+                compute_units: out.compute_units,
+                update_norm: out.update_norm,
                 dropped: false,
             });
             if obs_on {
@@ -760,32 +848,67 @@ impl Trainer {
                     round: self.round,
                     client: cohort[i],
                     tier: Some(slot_tiers[i]),
-                    stage: ClientStage::Computed { up_bytes: client_up },
+                    stage: ClientStage::Computed {
+                        up_bytes: out.up_bytes,
+                    },
                 });
             }
             work.push(Some(SlotWork {
                 client: cohort[i],
                 tier: slot_tiers[i],
-                keys: std::mem::take(&mut client_keys[i]),
-                deltas,
+                keys: out.keys,
+                deltas: out.deltas.expect("computed slot carries deltas"),
             }));
         }
-        let compute_ms = t_compute.elapsed().as_secs_f64() * 1e3;
-        let t_close = Instant::now();
 
-        // Phase 3b — close: the scheduler orders this round's completion
-        // events on the simulated timeline; the engine decides which
-        // updates merge (synchronous: all, in slot order; over-select: the
-        // first `cohort`; buffered: the goal count, carried in-flight
-        // updates included) and when the round closes.
+        // Phase 3b — close: the scheduler prices each slot's completion on
+        // the simulated timeline; the engine consumes the executor's
+        // per-slot task completions — handed over in host pool-drain order
+        // — re-sorts them onto the simulated clock, and decides which
+        // updates merge (strict sync: all, in slot order; fast sync:
+        // completion order; over-select: the first `cohort`; buffered: the
+        // goal count, carried in-flight updates included) and when the
+        // round closes.
         let events = self.scheduler.events(&plan, &stats);
+        let mut event_by_slot: Vec<Option<CompletionEvent>> = vec![None; cohort.len()];
+        for e in &events {
+            event_by_slot[e.slot] = Some(*e);
+        }
+        if obs_on {
+            // per-task spans (slot order): host wall time of the slot's
+            // fetch→train task body against its simulated completion point
+            for (slot, ev) in event_by_slot.iter().enumerate() {
+                if let Some(e) = ev {
+                    self.recorder.record(&TraceEvent::Task {
+                        ns: self.ns,
+                        round: self.round,
+                        client: e.client,
+                        tier: e.tier,
+                        wall_ms: exec_stats.task_wall_ms[slot],
+                        sim_s: e.at_s,
+                    });
+                }
+            }
+        }
         let round_start_s = self.scheduler.sim_total_s();
-        let outcome = self.round_engine.close_round(
+        let completions: Vec<TaskCompletion> = exec_stats
+            .completion_order
+            .iter()
+            .filter_map(|&slot| {
+                let w = work[slot].take()?;
+                Some(TaskCompletion {
+                    event: event_by_slot[slot].expect("live slot has a completion event"),
+                    work: w,
+                })
+            })
+            .collect();
+        let outcome = self.round_engine.close_from_tasks(
             self.round,
             self.cfg.cohort,
+            cohort.len(),
             round_start_s,
-            &events,
-            work,
+            completions,
+            self.cfg.exec,
         );
 
         // live registry: per-tier fetch-latency and merged-staleness
@@ -883,6 +1006,7 @@ impl Trainer {
         // the version clock's candidate rows ride the aggregator instead of
         // being re-unioned trainer-side; the optimizer step is shared below
         let mut touched = TouchedKeys::new(self.spec.keyspaces.len());
+        let t_merge = Instant::now();
         let update: Option<ParamStore> = if self.cfg.secure_agg && self.cfg.secure_committee {
             // committee id = run seed ⊕ close ordinal, spread over the
             // staleness classes of one close. The close ordinal is the
@@ -958,7 +1082,22 @@ impl Trainer {
                 finalize_mean(acc, &secure_counts, completed, self.cfg.agg)
             })
         } else {
-            let mut agg: Box<dyn Aggregator> = Box::new(SparseAccumulator::new(&self.store));
+            // plain path: strict keeps the sequential sparse accumulator
+            // (byte-identity anchor); fast stripes the adds over the
+            // key-sharded accumulator (bit-exact per coordinate at any
+            // shard count — stripes partition coordinates — but paired
+            // with completion-order merging above). agg_shards = 0 derives
+            // the shard count from the worker pool.
+            let mut agg: Box<dyn Aggregator> = if self.cfg.exec == ExecMode::Fast {
+                let shards = if self.cfg.agg_shards == 0 {
+                    self.cfg.exec_workers
+                } else {
+                    self.cfg.agg_shards
+                };
+                Box::new(ShardedAccumulator::new(&self.store, shards))
+            } else {
+                Box::new(SparseAccumulator::new(&self.store))
+            };
             for item in &outcome.merged {
                 agg.add_client_weighted(&self.spec, &item.keys, &item.deltas, item.weight)?;
             }
@@ -970,6 +1109,7 @@ impl Trainer {
                 None
             }
         };
+        let merge_stall_ms = t_merge.elapsed().as_secs_f64() * 1e3;
         if let Some(update) = &update {
             self.optimizer.step(&mut self.store, update);
         }
@@ -1013,6 +1153,10 @@ impl Trainer {
             tier_discarded[t] += 1;
         }
         let close_ms = t_close.elapsed().as_secs_f64() * 1e3;
+        // span *union*: plan start → now. Under the pooled executor fetch
+        // and compute overlap, so this is ≤ the sum of the four phase spans
+        // (by exactly last-minus-first fetch end) — pinned by a test.
+        let wall_ms = t_plan.elapsed().as_secs_f64() * 1e3;
 
         let tick = RoundTick {
             cohort: plan.cohort.clone(),
@@ -1041,7 +1185,9 @@ impl Trainer {
             up_bytes,
             max_client_mem: max_mem,
             // plan→close only; eval wall time lands on EvalRecord::eval_ms
-            wall_ms: plan_ms + fetch_ms + compute_ms + close_ms,
+            wall_ms,
+            merge_stall_ms,
+            exec_util: exec_stats.utilization(),
             sim_round_s: sim.sim_round_s,
             tier_completed: sim.tier_completed,
             tier_dropped: sim.tier_dropped,
@@ -1223,6 +1369,109 @@ impl Trainer {
         }
         self.finish_report(rounds, evals)
     }
+}
+
+/// Everything one cohort slot's task stages for the cohort-order replay:
+/// ledger arithmetic done off-thread, side effects deferred. Keys ride back
+/// in full (dropped slots still commit their cache round), deltas only for
+/// computed slots.
+struct TaskOut {
+    /// The session's per-client wire charge (post-cache): what the SimClock
+    /// moves over the client's downlink — full model under Option 1, bundle
+    /// bytes under Options 2/3.
+    down_bytes: u64,
+    /// Piece/segment lookups served from the client's cache.
+    piece_hits: u64,
+    keys: ClientKeys,
+    /// Post-fetch dropout (the profile hazard fired).
+    dropped: bool,
+    /// Per-binding sliced model deltas (`None` iff dropped).
+    deltas: Option<Vec<Vec<f32>>>,
+    /// Upload bytes charged to the client (secure-agg pricing applied).
+    up_bytes: u64,
+    /// Plain upload bytes (update + keys), always tracked so the ledger
+    /// can report either pricing.
+    plain_up: u64,
+    /// Slice-floats × local examples (the SimClock compute model).
+    compute_units: f64,
+    /// ℓ2 norm of the client's update (0 for dropped).
+    update_norm: f32,
+    /// Peak client memory (slice + batch working set), bytes.
+    mem: usize,
+    /// Host ms offset (from task-phase start) at which this slot's slice
+    /// was fully fetched — the fetch/compute span extents derive from it.
+    fetch_end_ms: f64,
+}
+
+/// One cohort slot's post-fetch task body: hazard coin → local batch →
+/// one local epoch → ledger arithmetic. Shared verbatim between the inline
+/// and pooled executor paths so they cannot drift; `update` is the engine
+/// call (exclusive [`Engine::client_update`] inline, pure
+/// [`native::client_update`] in the pool). Consumes `crng` in the exact
+/// legacy order: hazard coin first, then the batch shuffle.
+#[allow(clippy::too_many_arguments)]
+fn run_client_task<F>(
+    arch: &ModelArch,
+    client: &ClientData,
+    hazard: f32,
+    secure_up: Option<u64>,
+    fetched: FetchOutcome,
+    keys: ClientKeys,
+    crng: &mut Rng,
+    fetch_end_ms: f64,
+    update: F,
+) -> Result<TaskOut>
+where
+    F: FnOnce(&[usize], Vec<Vec<f32>>, &[Buf]) -> Result<Vec<Vec<f32>>>,
+{
+    let down_bytes = fetched.down_bytes;
+    let piece_hits = fetched.piece_hits;
+    let bundle = fetched.bundle;
+    let slice_floats = bundle.total_floats();
+    // failure injection: drop after download, with the profile's hazard
+    // (the coin is only flipped when the hazard is nonzero, matching the
+    // legacy `dropout_rate > 0` gate bit for bit)
+    if hazard > 0.0 && crng.f32() < hazard {
+        return Ok(TaskOut {
+            down_bytes,
+            piece_hits,
+            keys,
+            dropped: true,
+            deltas: None,
+            up_bytes: 0,
+            plain_up: 0,
+            compute_units: 0.0,
+            update_norm: 0.0,
+            mem: 0,
+            fetch_end_ms,
+        });
+    }
+    let (batch, _used) = build_cu_batch(arch, client, &keys, crng)?;
+    let mem = client_memory_bytes(slice_floats, &batch);
+    let ms: Vec<usize> = keys.iter().map(|k| k.len()).collect();
+    let deltas = update(&ms, bundle.into_vecs(), &batch)?;
+    let plain_up = deltas.iter().map(|d| d.len() as u64 * 4).sum::<u64>()
+        + keys.iter().map(|k| k.len() as u64 * 4).sum::<u64>();
+    let up_bytes = secure_up.unwrap_or(plain_up);
+    let update_norm = deltas
+        .iter()
+        .flat_map(|d| d.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt() as f32;
+    Ok(TaskOut {
+        down_bytes,
+        piece_hits,
+        keys,
+        dropped: false,
+        deltas: Some(deltas),
+        up_bytes,
+        plain_up,
+        compute_units: slice_floats as f64 * client.num_examples() as f64,
+        update_norm,
+        mem,
+        fetch_end_ms,
+    })
 }
 
 /// Materialize the configured dataset.

@@ -1,0 +1,281 @@
+//! Pipelined round execution: a bounded work-conserving task pool plus the
+//! `--exec strict|fast` merge-order contract.
+//!
+//! # Architecture
+//!
+//! The coordinator used to run a round as four global phases — plan all,
+//! fetch all, compute all cohort slots in order, then merge — so one slow
+//! phase bounded the whole round. [`run_tasks`] replaces the middle two
+//! phases with *per-slot tasks*: each cohort slot flows as one unit of work
+//! (slice/delta fetch → hazard coin → local train → stage) claimed from a
+//! shared queue by a bounded worker pool. Claiming is a single
+//! `fetch_add` on an atomic cursor: whichever worker is free takes the next
+//! slot, which is work-conserving (equivalent to work stealing for a
+//! fixed task list — no worker idles while a task is unclaimed).
+//!
+//! # Determinism
+//!
+//! Task **outputs are staged slot-indexed** and all side effects (ledger
+//! sums, RNG-consuming client events, cache commits) are replayed in
+//! cohort order after the pool drains, so the trajectory is byte-identical
+//! at any worker count. The only thing wall-clock scheduling is allowed to
+//! influence is wall-clock metrics ([`ExecStats`]). The merge-order contract
+//! on top of this is [`ExecMode`]:
+//!
+//! - [`ExecMode::Strict`] (default): updates merge in cohort-slot order at
+//!   the close — byte-identical to the legacy sequential round (model bits
+//!   and every deterministic `RoundRecord` field), test-enforced at worker
+//!   counts {1, 4, 8} across all three slice implementations.
+//! - [`ExecMode::Fast`]: updates merge in *simulated completion order*
+//!   (the order clients report back on the sim clock) and aggregation runs
+//!   on the key-striped [`crate::aggregation::ShardedAccumulator`]. Still
+//!   run-to-run deterministic — two same-seed `--exec fast` traces agree on
+//!   all sim-time content — but the float-add order differs from strict,
+//!   so it is gated on metric-equivalence instead of byte identity.
+//!
+//! Both modes run the same task pool; `strict` vs `fast` only picks the
+//! merge order and the accumulator. `--exec-workers N` sizes the pool
+//! (1 = inline on the caller thread, the legacy wall-clock shape).
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Merge-order contract of the pipelined round (`--exec`). See the module
+/// docs for the strict-vs-fast determinism story.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Deterministic merge order: slot-indexed staging, merged in cohort
+    /// order at close. Byte-identical to the legacy sequential round.
+    #[default]
+    Strict,
+    /// Merge in simulated completion order over the sharded accumulator.
+    /// Deterministic run-to-run, not byte-identical to strict.
+    Fast,
+}
+
+impl ExecMode {
+    /// Stable lowercase name (CLI value, trace field, bench labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Strict => "strict",
+            ExecMode::Fast => "fast",
+        }
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ExecMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "strict" => Ok(ExecMode::Strict),
+            "fast" => Ok(ExecMode::Fast),
+            other => Err(format!("unknown exec mode '{other}' (expected strict|fast)")),
+        }
+    }
+}
+
+/// Wall-clock observations of one [`run_tasks`] drain. Everything here is
+/// host timing — nondeterministic by nature and never allowed to feed back
+/// into the trajectory (the same contract as `RoundRecord::wall_ms`).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Slot indices in the order tasks *finished* on the host. Metrics
+    /// only; merge order always comes from [`ExecMode`], never from this.
+    pub completion_order: Vec<usize>,
+    /// Per-worker time spent inside task bodies, ms.
+    pub worker_busy_ms: Vec<f64>,
+    /// Wall time of the whole drain (first claim to last completion), ms.
+    pub elapsed_ms: f64,
+    /// Per-slot task body wall time, ms (slot-indexed).
+    pub task_wall_ms: Vec<f64>,
+}
+
+impl ExecStats {
+    /// Pool utilization in [0, 1]: busy worker time over `workers ×
+    /// elapsed`. 1.0 for an inline (single-worker) drain by construction.
+    pub fn utilization(&self) -> f64 {
+        let workers = self.worker_busy_ms.len().max(1) as f64;
+        let busy: f64 = self.worker_busy_ms.iter().sum();
+        if self.elapsed_ms <= 0.0 {
+            return 1.0;
+        }
+        (busy / (workers * self.elapsed_ms)).min(1.0)
+    }
+}
+
+/// Drain `inputs` through a pool of `workers` threads: slot `i`'s input is
+/// passed to `f(i, input)` exactly once and its output returned at index
+/// `i`. Outputs are slot-indexed regardless of which worker ran what, so
+/// callers replay side effects deterministically. `workers <= 1` (or a
+/// single task) runs inline on the caller thread with no spawns.
+pub fn run_tasks<I, O, F>(workers: usize, inputs: Vec<I>, f: F) -> (Vec<O>, ExecStats)
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let n = inputs.len();
+    if workers <= 1 || n <= 1 {
+        return run_tasks_seq(inputs, f);
+    }
+    let workers = workers.min(n);
+    let slots: Vec<Mutex<Option<I>>> = inputs.into_iter().map(|i| Mutex::new(Some(i))).collect();
+    let outs: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let walls: Vec<Mutex<f64>> = (0..n).map(|_| Mutex::new(0.0)).collect();
+    let next = AtomicUsize::new(0);
+    let order = Mutex::new(Vec::with_capacity(n));
+    let t0 = Instant::now();
+    let worker_busy_ms: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut busy_ms = 0.0f64;
+                    loop {
+                        let slot = next.fetch_add(1, Ordering::Relaxed);
+                        if slot >= n {
+                            break;
+                        }
+                        let input = slots[slot]
+                            .lock()
+                            .expect("task slot lock")
+                            .take()
+                            .expect("each task slot is claimed exactly once");
+                        let t = Instant::now();
+                        let out = f(slot, input);
+                        let wall = t.elapsed().as_secs_f64() * 1e3;
+                        busy_ms += wall;
+                        *walls[slot].lock().expect("task wall lock") = wall;
+                        *outs[slot].lock().expect("task out lock") = Some(out);
+                        order.lock().expect("completion order lock").push(slot);
+                    }
+                    busy_ms
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("executor worker panicked"))
+            .collect()
+    });
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let outputs = outs
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("task out lock")
+                .expect("every task produced an output")
+        })
+        .collect();
+    let stats = ExecStats {
+        completion_order: order.into_inner().expect("completion order lock"),
+        worker_busy_ms,
+        elapsed_ms,
+        task_wall_ms: walls
+            .into_iter()
+            .map(|m| m.into_inner().expect("task wall lock"))
+            .collect(),
+    };
+    (outputs, stats)
+}
+
+/// Inline drain on the caller thread. Unlike [`run_tasks`] the closure may
+/// be `FnMut` and need not be `Sync`, which is what lets the coordinator
+/// route exclusive-engine (PJRT) rounds through the same task plumbing.
+pub fn run_tasks_seq<I, O, F>(inputs: Vec<I>, mut f: F) -> (Vec<O>, ExecStats)
+where
+    F: FnMut(usize, I) -> O,
+{
+    let n = inputs.len();
+    let t0 = Instant::now();
+    let mut task_wall_ms = Vec::with_capacity(n);
+    let mut outputs = Vec::with_capacity(n);
+    for (slot, input) in inputs.into_iter().enumerate() {
+        let t = Instant::now();
+        outputs.push(f(slot, input));
+        task_wall_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = ExecStats {
+        completion_order: (0..n).collect(),
+        worker_busy_ms: vec![elapsed_ms],
+        elapsed_ms,
+        task_wall_ms,
+    };
+    (outputs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_round_trips() {
+        for m in [ExecMode::Strict, ExecMode::Fast] {
+            assert_eq!(m.to_string().parse::<ExecMode>().unwrap(), m);
+        }
+        assert_eq!("FAST".parse::<ExecMode>().unwrap(), ExecMode::Fast);
+        assert_eq!(" strict ".parse::<ExecMode>().unwrap(), ExecMode::Strict);
+        assert!("eager".parse::<ExecMode>().is_err());
+        assert_eq!(ExecMode::default(), ExecMode::Strict);
+    }
+
+    #[test]
+    fn outputs_are_slot_indexed_at_any_worker_count() {
+        for workers in [1usize, 2, 4, 8] {
+            let inputs: Vec<usize> = (0..23).collect();
+            let (outs, stats) = run_tasks(workers, inputs, |slot, x| {
+                assert_eq!(slot, x);
+                x * 10 + 1
+            });
+            assert_eq!(outs, (0..23).map(|x| x * 10 + 1).collect::<Vec<_>>());
+            let mut order = stats.completion_order.clone();
+            order.sort_unstable();
+            assert_eq!(order, (0..23).collect::<Vec<_>>(), "workers={workers}");
+            assert_eq!(stats.task_wall_ms.len(), 23);
+            let expected_workers = if workers <= 1 { 1 } else { workers };
+            assert_eq!(stats.worker_busy_ms.len(), expected_workers);
+            let u = stats.utilization();
+            assert!((0.0..=1.0).contains(&u), "workers={workers} util={u}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs_run_inline() {
+        let (outs, stats) = run_tasks(8, Vec::<u32>::new(), |_, x| x);
+        assert!(outs.is_empty());
+        assert!(stats.completion_order.is_empty());
+        let (outs, stats) = run_tasks(8, vec![7u32], |_, x| x + 1);
+        assert_eq!(outs, vec![8]);
+        assert_eq!(stats.completion_order, vec![0]);
+        assert_eq!(stats.worker_busy_ms.len(), 1, "single task runs inline");
+    }
+
+    #[test]
+    fn seq_drain_supports_fnmut() {
+        let mut seen = Vec::new();
+        let (outs, stats) = run_tasks_seq(vec![3u32, 1, 2], |slot, x| {
+            seen.push((slot, x));
+            x * 2
+        });
+        assert_eq!(outs, vec![6, 2, 4]);
+        assert_eq!(seen, vec![(0, 3), (1, 1), (2, 2)]);
+        assert_eq!(stats.completion_order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_sum_matches_sequential() {
+        let inputs: Vec<u64> = (0..200).collect();
+        let (a, _) = run_tasks(8, inputs.clone(), |_, x| x * x);
+        let (b, _) = run_tasks_seq(inputs, |_, x| x * x);
+        assert_eq!(a, b);
+    }
+}

@@ -9,7 +9,10 @@
 //! aggregation (plain / secure-masked / IBLT), server optimizers, the round
 //! driver of the paper's Algorithm 2 with an event-driven round engine
 //! (pluggable synchronous / over-select / buffered-async aggregation on the
-//! simulated clock), a cohort [`scheduler`] (device-profile and trace-driven
+//! simulated clock), a pipelined round executor ([`exec`]: per-client
+//! fetch→train→merge tasks over a bounded worker pool, `--exec strict|fast`
+//! merge-order contract, key-striped sharded aggregation),
+//! a cohort [`scheduler`] (device-profile and trace-driven
 //! fleets, pluggable selection policies, simulated round wall-time), a
 //! cross-round client slice [`cache`] (versioned pieces, delta fetch
 //! plans, budgeted on-device caches), a multi-tenant [`tenancy`]
@@ -43,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod experiments;
 pub mod fedselect;
 pub mod fleet;
@@ -59,7 +63,9 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::aggregation::{AggMode, Aggregator, SparseAccumulator, TouchedKeys};
+    pub use crate::aggregation::{
+        AggMode, Aggregator, ShardedAccumulator, SparseAccumulator, TouchedKeys,
+    };
     pub use crate::cache::{CacheShare, ClientCache, EvictPolicy, FleetCaches, VersionClock};
     pub use crate::clients::Engine;
     pub use crate::config::{DatasetConfig, EngineKind, EvalConfig, TrainConfig};
@@ -68,6 +74,7 @@ pub mod prelude {
     };
     pub use crate::data::FederatedDataset;
     pub use crate::error::{Error, Result};
+    pub use crate::exec::ExecMode;
     pub use crate::fedselect::{
         ClientKeys, KeyPolicy, RoundSession, SliceBundle, SliceImpl, SliceService,
     };

@@ -16,6 +16,8 @@
 //!                       [--max-staleness S]
 //!                       [--rounds R] [--cohort C] [--slice-impl pregen]
 //!                       [--fetch-threads N]
+//!                       [--exec strict|fast] [--exec-workers N]
+//!                       [--agg-shards N]
 //!                       [--server-opt fedadagrad:0.1] [--client-lr LR]
 //!                       [--agg cohort|per-coord] [--secure-agg]
 //!                       [--secure-committee] [--min-committee N]
@@ -50,12 +52,21 @@
 //! `--secure-agg` and re-keys the pairwise masks per close group, which is
 //! what lets secure aggregation run under `over-select` / `buffered`
 //! closes (whole-cohort masks still require `--agg-mode sync`).
+//!
+//! `--exec-workers N` (N > 1) runs each cohort slot's fetch→train task on
+//! a bounded worker pool (native engine only; conflicts with
+//! `--fetch-threads`). `--exec strict` (default) replays merges in
+//! deterministic cohort order — byte-identical to the sequential
+//! coordinator; `--exec fast` merges in completion order over a sharded
+//! accumulator (`--agg-shards`, 0 = match worker count). Giving
+//! `--exec-workers` or `--agg-shards` alone keeps `--exec strict`.
 
 use fedselect::aggregation::AggMode;
 use fedselect::cache::EvictPolicy;
 use fedselect::config::{EngineKind, TrainConfig};
 use fedselect::coordinator::{AggregationMode, Trainer};
 use fedselect::error::{Error, Result};
+use fedselect::exec::ExecMode;
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
 use fedselect::fleet::{ChurnSpec, OutageSpec, WaveSpec};
@@ -237,6 +248,15 @@ fn cmd_train(a: &Args) -> Result<()> {
         .parse::<SliceImpl>()
         .map_err(Error::Config)?;
     cfg.fetch_threads = a.parse_or("fetch-threads", 1usize).map_err(Error::Config)?;
+    // pipelined round executor: --exec picks the merge-order contract,
+    // --exec-workers sizes the task pool, --agg-shards stripes the fast
+    // accumulator (0 = match the worker count)
+    cfg.exec = a
+        .str_or("exec", "strict")
+        .parse::<ExecMode>()
+        .map_err(Error::Config)?;
+    cfg.exec_workers = a.parse_or("exec-workers", 1usize).map_err(Error::Config)?;
+    cfg.agg_shards = a.parse_or("agg-shards", 0usize).map_err(Error::Config)?;
     cfg.server_opt = a
         .str_or("server-opt", "fedadagrad:0.1")
         .parse::<ServerOpt>()

@@ -475,6 +475,8 @@ mod tests {
             up_bytes: 0,
             max_client_mem: 0,
             wall_ms: 0.0,
+            merge_stall_ms: 0.0,
+            exec_util: 1.0,
             sim_round_s: 2.0,
             tier_completed: vec![2, 2, 1],
             tier_dropped: vec![1, 0, 0],

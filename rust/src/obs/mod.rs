@@ -144,6 +144,21 @@ pub enum TraceEvent {
         wall_ms: f64,
         sim_s: f64,
     },
+    /// One cohort slot's fetch→train task through the pipelined executor
+    /// (`fedselect-trace-v1`, additive): `wall_ms` is the task body's host
+    /// time on whichever worker ran it, `sim_s` the slot's simulated
+    /// completion point. Emitted per surviving slot in cohort order —
+    /// deliberately *not* tagged `"span"`, so the per-round phase-span
+    /// count is unchanged. Tasks overlap on the host; phase spans stay
+    /// envelopes.
+    Task {
+        ns: u32,
+        round: usize,
+        client: usize,
+        tier: usize,
+        wall_ms: f64,
+        sim_s: f64,
+    },
     /// A per-client lifecycle event. `tier` is `None` when the stage does
     /// not know the device tier (committee dropouts keyed from a past
     /// close).
@@ -202,6 +217,7 @@ impl TraceEvent {
             TraceEvent::RunStart { .. } => "run_start",
             TraceEvent::RoundStart { .. } => "round_start",
             TraceEvent::Span { .. } => "span",
+            TraceEvent::Task { .. } => "task",
             TraceEvent::Client { .. } => "client",
             TraceEvent::RoundClose { .. } => "round_close",
             TraceEvent::Eval { .. } => "eval",

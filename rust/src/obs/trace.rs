@@ -4,8 +4,10 @@
 //!
 //! Line 1 is the header `{"schema":"fedselect-trace-v1","t":"header"}`;
 //! every following line is one event object whose `"t"` field names the
-//! [`TraceEvent`] variant (`run_start`, `round_start`, `span`, `client`,
-//! `round_close`, `eval`, `tick`, `log`, `run_end`). Keys are emitted in
+//! [`TraceEvent`] variant (`run_start`, `round_start`, `span`, `task`,
+//! `client`, `round_close`, `eval`, `tick`, `log`, `run_end`; `task` is a
+//! v1-additive family — one line per surviving cohort slot's fetch→train
+//! task under the pipelined executor). Keys are emitted in
 //! sorted order and numbers use the crate's deterministic formatter, so
 //! the sim-clock content of two same-seed traces is byte-identical; the
 //! only nondeterministic fields are named `wall_ms`, which
@@ -71,6 +73,15 @@ pub fn encode_event(ev: &TraceEvent) -> Json {
             ("ns", uint(*ns as u64)),
             ("round", uint(*round as u64)),
             ("phase", Json::Str(phase.name().to_string())),
+            ("wall_ms", num(*wall_ms)),
+            ("sim_s", num(*sim_s)),
+        ]),
+        TraceEvent::Task { ns, round, client, tier, wall_ms, sim_s } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("client", uint(*client as u64)),
+            ("tier", uint(*tier as u64)),
             ("wall_ms", num(*wall_ms)),
             ("sim_s", num(*sim_s)),
         ]),
@@ -254,12 +265,27 @@ impl Recorder for ChromeRecorder {
             | TraceEvent::RunEnd { ns, .. } => (*ns, 0),
             TraceEvent::RoundStart { ns, round, .. }
             | TraceEvent::Span { ns, round, .. }
+            | TraceEvent::Task { ns, round, .. }
             | TraceEvent::Client { ns, round, .. }
             | TraceEvent::RoundClose { ns, round, .. }
             | TraceEvent::Eval { ns, round, .. } => (*ns, *round),
             TraceEvent::Tick { .. } | TraceEvent::Log { .. } => (0, 0),
         };
         let record = match ev {
+            // per-slot tasks render as overlapping complete events on the
+            // round's row, named by client — the executor waterfall
+            TraceEvent::Task { client, wall_ms, sim_s, .. } => {
+                let dur_us = (wall_ms * 1e3).max(0.0) as u64;
+                obj(vec![
+                    ("name", Json::Str(format!("task c{client}"))),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", uint(ns as u64)),
+                    ("tid", uint(round as u64)),
+                    ("ts", uint(now_us.saturating_sub(dur_us))),
+                    ("dur", uint(dur_us)),
+                    ("args", obj(vec![("sim_s", num(*sim_s))])),
+                ])
+            }
             TraceEvent::Span { phase, wall_ms, sim_s, .. } => {
                 let dur_us = (wall_ms * 1e3).max(0.0) as u64;
                 obj(vec![
@@ -299,6 +325,7 @@ fn required_keys(tag: &str) -> Option<&'static [&'static str]> {
         "run_start" => &["ns", "seed", "rounds", "cohort", "mode"],
         "round_start" => &["ns", "round", "sim_start_s"],
         "span" => &["ns", "round", "phase", "wall_ms", "sim_s"],
+        "task" => &["ns", "round", "client", "tier", "wall_ms", "sim_s"],
         "client" => &["ns", "round", "client", "tier", "stage"],
         "round_close" => &[
             "ns",
@@ -437,6 +464,14 @@ mod tests {
                 round: 1,
                 phase: Phase::Fetch,
                 wall_ms: 1.25,
+                sim_s: 3.5,
+            },
+            TraceEvent::Task {
+                ns: 0,
+                round: 1,
+                client: 3,
+                tier: 1,
+                wall_ms: 0.75,
                 sim_s: 3.5,
             },
             TraceEvent::RoundClose {

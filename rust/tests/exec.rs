@@ -1,0 +1,240 @@
+//! Pipelined round-executor contracts, end to end through the trainer:
+//!
+//! 1. `--exec strict` is **byte-identical** to the legacy sequential round
+//!    — model bits and every deterministic `RoundRecord` field — at worker
+//!    counts {1, 4, 8}, across all three slice implementations, with the
+//!    cross-round cache on;
+//! 2. the same identity holds under the over-select and buffered
+//!    aggregation modes (and with the cache off);
+//! 3. `--exec fast` is run-to-run deterministic: two same-seed runs agree
+//!    bit for bit;
+//! 4. `--exec fast` preserves the ledger: every byte/count/sim field of
+//!    every round matches the strict run (merge *order* is the only
+//!    difference), and the final loss lands within float-reassociation
+//!    distance of strict;
+//! 5. `wall_ms` is the span *union*: once fetch and compute overlap under
+//!    the pooled executor, each round's `wall_ms` is bounded by the sum of
+//!    its four traced phase spans.
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{AggregationMode, RoundRecord, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::exec::ExecMode;
+use fedselect::fedselect::SliceImpl;
+use fedselect::model::ParamStore;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+use fedselect::util::json::Json;
+
+/// Small tiered workload with hazards (dropped slots), cache commits, and
+/// staleness-fair cycling — every side effect the executor must replay.
+fn exec_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(512, 64);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+    cfg.rounds = 5;
+    cfg.cohort = 6;
+    cfg.eval.every = 5;
+    cfg.eval.max_examples = 128;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::StalenessFair;
+    cfg.dropout_rate = 0.3;
+    cfg.cache = true;
+    cfg.seed = seed;
+    cfg
+}
+
+fn tmp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("fedselect_exec_{name}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .to_string()
+}
+
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
+    assert_eq!(a.segments.len(), b.segments.len(), "{label}");
+    for (sa, sb) in a.segments.iter().zip(b.segments.iter()) {
+        assert_eq!(sa.data.len(), sb.data.len(), "{label} {}", sa.name);
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: segment {} diverges at {i}",
+                sa.name
+            );
+        }
+    }
+}
+
+/// Every `RoundRecord` field except the host-clock trio (`wall_ms`,
+/// `merge_stall_ms`, `exec_util`).
+fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
+    assert_eq!(a.round, b.round, "{label}");
+    assert_eq!(a.completed, b.completed, "{label}");
+    assert_eq!(a.dropped, b.dropped, "{label}");
+    assert_eq!(a.mode, b.mode, "{label}");
+    assert_eq!(a.discarded_clients, b.discarded_clients, "{label}");
+    assert_eq!(a.mean_staleness.to_bits(), b.mean_staleness.to_bits(), "{label}");
+    assert_eq!(a.committees, b.committees, "{label}");
+    assert_eq!(
+        a.mean_committee_size.to_bits(),
+        b.mean_committee_size.to_bits(),
+        "{label}"
+    );
+    assert_eq!(a.min_committee_size, b.min_committee_size, "{label}");
+    assert_eq!(a.comm, b.comm, "{label}");
+    assert_eq!(a.up_bytes, b.up_bytes, "{label}");
+    assert_eq!(a.max_client_mem, b.max_client_mem, "{label}");
+    assert_eq!(a.sim_round_s.to_bits(), b.sim_round_s.to_bits(), "{label}");
+    assert_eq!(a.tier_completed, b.tier_completed, "{label}");
+    assert_eq!(a.tier_dropped, b.tier_dropped, "{label}");
+    assert_eq!(a.tier_discarded, b.tier_discarded, "{label}");
+    assert_eq!(a.tier_down_bytes, b.tier_down_bytes, "{label}");
+    assert_eq!(a.tier_cache_hits, b.tier_cache_hits, "{label}");
+    assert_eq!(a.tier_cache_lookups, b.tier_cache_lookups, "{label}");
+    assert_eq!(a.cache_evictions, b.cache_evictions, "{label}");
+    assert_eq!(a.cache_stale_refreshes, b.cache_stale_refreshes, "{label}");
+    assert_eq!(a.deferrals, b.deferrals, "{label}");
+    assert_eq!(a.eligible, b.eligible, "{label}");
+    assert_eq!(a.arrivals, b.arrivals, "{label}");
+    assert_eq!(a.departures, b.departures, "{label}");
+    assert_eq!(a.outage_excluded, b.outage_excluded, "{label}");
+    assert_eq!(a.clients_touched, b.clients_touched, "{label}");
+    assert_eq!(a.resident_bytes, b.resident_bytes, "{label}");
+}
+
+fn run(cfg: TrainConfig) -> (Trainer, fedselect::coordinator::TrainReport) {
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr.run().unwrap();
+    (tr, report)
+}
+
+fn assert_runs_identical(base_cfg: TrainConfig, var_cfg: TrainConfig, label: &str) {
+    let (t_base, base) = run(base_cfg);
+    let (t_var, var) = run(var_cfg);
+    assert_eq!(base.rounds.len(), var.rounds.len(), "{label}");
+    for (a, b) in base.rounds.iter().zip(var.rounds.iter()) {
+        assert_records_identical(a, b, &format!("{label} round {}", a.round));
+    }
+    assert_eq!(base.evals.len(), var.evals.len(), "{label}");
+    for (a, b) in base.evals.iter().zip(var.evals.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} eval {}", a.round);
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "{label} eval {}", a.round);
+    }
+    assert_stores_bit_identical(t_base.store(), t_var.store(), label);
+}
+
+#[test]
+fn strict_is_byte_identical_to_sequential_across_impls_and_workers() {
+    for impl_ in [SliceImpl::Broadcast, SliceImpl::OnDemand, SliceImpl::PregenCdn] {
+        let mut base_cfg = exec_cfg(4040);
+        base_cfg.slice_impl = impl_;
+        for workers in [1usize, 4, 8] {
+            let mut cfg = base_cfg.clone();
+            cfg.exec = ExecMode::Strict;
+            cfg.exec_workers = workers;
+            assert_runs_identical(
+                base_cfg.clone(),
+                cfg,
+                &format!("{impl_:?} workers={workers}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn strict_identity_holds_under_over_select_and_buffered_closes() {
+    let modes = [
+        AggregationMode::OverSelect { extra_frac: 0.5 },
+        AggregationMode::Buffered { goal_count: 4, max_staleness: 2 },
+    ];
+    for mode in modes {
+        let mut base_cfg = exec_cfg(4141);
+        base_cfg.agg_mode = mode;
+        base_cfg.cache = false; // also covers the no-version-clock path
+        let mut cfg = base_cfg.clone();
+        cfg.exec_workers = 4;
+        assert_runs_identical(base_cfg, cfg, &format!("{mode:?} workers=4"));
+    }
+}
+
+#[test]
+fn fast_is_run_to_run_deterministic() {
+    let mut cfg = exec_cfg(4242);
+    cfg.exec = ExecMode::Fast;
+    cfg.exec_workers = 4;
+    assert_runs_identical(cfg.clone(), cfg, "fast workers=4 repeat");
+}
+
+#[test]
+fn fast_preserves_the_ledger_and_stays_near_strict_loss() {
+    // cache off: with the version clock disabled the ledger is a pure
+    // function of plans and timing, so merge *order* (the one thing fast
+    // changes) cannot move a single byte of it
+    let mut strict_cfg = exec_cfg(4343);
+    strict_cfg.cache = false;
+    strict_cfg.exec_workers = 4;
+    let mut fast_cfg = strict_cfg.clone();
+    fast_cfg.exec = ExecMode::Fast;
+
+    let (_, strict) = run(strict_cfg);
+    let (_, fast) = run(fast_cfg);
+    assert_eq!(strict.rounds.len(), fast.rounds.len());
+    for (a, b) in strict.rounds.iter().zip(fast.rounds.iter()) {
+        // everything but the float-order-sensitive staleness means must
+        // match exactly; under sync they are identical too
+        assert_records_identical(a, b, &format!("fast-vs-strict round {}", a.round));
+    }
+    let (a, b) = (
+        strict.evals.last().expect("eval ran").loss as f64,
+        fast.evals.last().expect("eval ran").loss as f64,
+    );
+    assert!(
+        (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+        "fast loss {b} strayed from strict {a}"
+    );
+}
+
+#[test]
+fn wall_ms_is_bounded_by_the_sum_of_phase_spans_under_fast() {
+    let path = tmp_path("spans");
+    let mut cfg = exec_cfg(4444);
+    cfg.exec = ExecMode::Fast;
+    cfg.exec_workers = 4;
+    cfg.obs.trace_out = Some(path.clone());
+    let (_, report) = run(cfg);
+
+    // sum the four phase spans per round from the trace
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut span_sum = vec![0.0f64; report.rounds.len() + 1];
+    let mut task_count = 0usize;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let ev = Json::parse(line).unwrap();
+        match ev.get("t").and_then(Json::as_str) {
+            Some("span") => {
+                let phase = ev.get("phase").and_then(Json::as_str).unwrap();
+                if phase == "eval" {
+                    continue;
+                }
+                let round = ev.get("round").and_then(Json::as_f64).unwrap() as usize;
+                span_sum[round] += ev.get("wall_ms").and_then(Json::as_f64).unwrap();
+            }
+            Some("task") => task_count += 1,
+            _ => {}
+        }
+    }
+    for rec in &report.rounds {
+        // tiny epsilon for the clock reads between span boundaries
+        assert!(
+            rec.wall_ms <= span_sum[rec.round] * (1.0 + 1e-6) + 0.5,
+            "round {}: wall_ms {} exceeds span sum {}",
+            rec.round,
+            rec.wall_ms,
+            span_sum[rec.round]
+        );
+        assert!(rec.exec_util > 0.0 && rec.exec_util <= 1.0, "round {}", rec.round);
+        assert!(rec.merge_stall_ms >= 0.0, "round {}", rec.round);
+    }
+    // one task span per surviving (non-dropped) slot
+    let survived: usize = report.rounds.iter().map(|r| r.completed + r.discarded_clients).sum();
+    assert_eq!(task_count, survived, "task spans cover every surviving slot");
+    std::fs::remove_file(&path).unwrap();
+}

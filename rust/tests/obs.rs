@@ -2,8 +2,10 @@
 //!
 //! 1. telemetry is **trajectory-neutral**: a run tracing every event to a
 //!    JSONL sink is byte-identical — model bits and every deterministic
-//!    `RoundRecord` field (host `wall_ms` is the only exclusion) — to the
-//!    default `NullRecorder` run, at fetch thread counts {1, 4};
+//!    `RoundRecord` field (the host-clock `wall_ms`/`merge_stall_ms`/
+//!    `exec_util` trio is the only exclusion) — to the default
+//!    `NullRecorder` run, at fetch thread counts {1, 4} and under the
+//!    pipelined executor at 8 workers;
 //! 2. the emitted trace validates line by line against the versioned
 //!    schema (`fedselect-trace-v1`);
 //! 3. two same-seed traces agree on their sim-time content
@@ -58,7 +60,8 @@ fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, label: &str) {
     }
 }
 
-/// Every `RoundRecord` field except the host-clock `wall_ms`.
+/// Every `RoundRecord` field except the host-clock trio (`wall_ms`,
+/// `merge_stall_ms`, `exec_util`).
 fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
     assert_eq!(a.round, b.round, "{label}");
     assert_eq!(a.completed, b.completed, "{label}");
@@ -98,12 +101,15 @@ fn assert_records_identical(a: &RoundRecord, b: &RoundRecord, label: &str) {
 
 #[test]
 fn tracing_is_byte_identical_to_null_recorder() {
-    for threads in [1usize, 4] {
-        let label = format!("threads={threads}");
+    // (fetch_threads, exec_workers): serial, threaded batch fetch, and the
+    // pipelined executor (which replaces the batch fetch phase entirely)
+    for (threads, workers) in [(1usize, 1usize), (4, 1), (1, 8)] {
+        let label = format!("threads={threads} workers={workers}");
         let mut off_cfg = obs_cfg(5050);
         off_cfg.fetch_threads = threads;
+        off_cfg.exec_workers = workers;
         let mut on_cfg = off_cfg.clone();
-        let path = tmp_path(&format!("identity_{threads}"));
+        let path = tmp_path(&format!("identity_{threads}_{workers}"));
         on_cfg.obs.trace_out = Some(path.clone());
 
         let mut t_off = Trainer::new(off_cfg).unwrap();
@@ -152,9 +158,35 @@ fn trace_validates_against_schema_and_covers_event_families() {
     assert_eq!(count("round_close"), report.rounds.len());
     // 4 phase spans per round + 1 eval span per evaluation
     assert_eq!(count("span"), 4 * report.rounds.len() + report.evals.len());
+    // one executor task span per surviving (non-dropped) slot
+    let survived: usize = report.rounds.iter().map(|r| r.completed).sum();
+    assert_eq!(count("task"), survived);
     assert_eq!(count("eval"), report.evals.len());
     assert!(count("client") > 0, "client lifecycle events present");
     std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn same_seed_fast_exec_traces_diff_clean() {
+    // completion-order merging must still be run-to-run deterministic on
+    // the sim clock: two same-seed `--exec fast` pooled runs diff clean
+    let (path_a, path_b) = (tmp_path("fast_a"), tmp_path("fast_b"));
+    for path in [&path_a, &path_b] {
+        let mut cfg = obs_cfg(9090);
+        cfg.exec = fedselect::exec::ExecMode::Fast;
+        cfg.exec_workers = 4;
+        cfg.obs.trace_out = Some(path.clone());
+        Trainer::new(cfg).unwrap().run().unwrap();
+    }
+    let a = std::fs::read_to_string(&path_a).unwrap();
+    let b = std::fs::read_to_string(&path_b).unwrap();
+    assert!(
+        diff_traces(&a, &b).is_none(),
+        "same-seed fast traces diverged: {:?}",
+        diff_traces(&a, &b)
+    );
+    std::fs::remove_file(&path_a).unwrap();
+    std::fs::remove_file(&path_b).unwrap();
 }
 
 #[test]
