@@ -11,8 +11,13 @@ mod harness;
 
 use std::time::Instant;
 
+use fedselect::coordinator::{AggregationMode, RoundRecord};
+use fedselect::fedselect::RoundComm;
 use fedselect::obs::trace::JsonlRecorder;
-use fedselect::obs::{ClientStage, MetricsRegistry, NullRecorder, Phase, Recorder, TraceEvent};
+use fedselect::obs::{
+    ClientStage, HealthConfig, HealthMonitor, MetricsRegistry, NullRecorder, Phase, Recorder,
+    SloRule, TraceEvent,
+};
 
 /// Emit a representative round's event mix: 1 round_start, 4 spans, 4
 /// client lifecycle events, 1 round_close — 10 events per call.
@@ -93,6 +98,47 @@ fn pump_round(rec: &dyn Recorder, round: usize) {
 
 const EVENTS_PER_ROUND: usize = 10;
 
+/// Synthetic round ledger for the health-monitor overhead measurement:
+/// deterministic per-round jitter plus a level step at `round >= 64` so
+/// both detector paths (EWMA update + window shift) do real work.
+fn synth_record(round: usize) -> RoundRecord {
+    let jitter = (round % 7) as f64 * 0.01;
+    let eligible = if round >= 64 { 500 } else { 950 + round % 13 };
+    RoundRecord {
+        round,
+        completed: 9 + round % 2,
+        dropped: round % 2,
+        mode: AggregationMode::Synchronous,
+        discarded_clients: 0,
+        mean_staleness: 0.0,
+        committees: 0,
+        mean_committee_size: 0.0,
+        min_committee_size: 0,
+        comm: RoundComm::default(),
+        up_bytes: 2048,
+        max_client_mem: 0,
+        wall_ms: 0.0,
+        merge_stall_ms: 0.0,
+        exec_util: 1.0,
+        sim_round_s: 1.5 + jitter,
+        tier_completed: vec![10],
+        tier_dropped: vec![0],
+        tier_discarded: vec![0],
+        tier_down_bytes: vec![4096],
+        tier_cache_hits: vec![3],
+        tier_cache_lookups: vec![4],
+        cache_evictions: 0,
+        cache_stale_refreshes: 0,
+        deferrals: 0,
+        eligible,
+        arrivals: 0,
+        departures: 0,
+        outage_excluded: 0,
+        clients_touched: 10,
+        resident_bytes: 1024,
+    }
+}
+
 fn main() {
     let mut b = harness::Bench::new();
     let rounds = if b.quick { 2_000 } else { 20_000 };
@@ -163,8 +209,49 @@ fn main() {
     // (informational: dotted names sit outside the gated metric families)
     b.record_registry("obs/registry_snapshot", &reg);
 
+    // health-monitor overhead: the same synthetic round stream folded
+    // through 2 SLO rules + both anomaly detectors, vs the monitor-free
+    // baseline (reading the same fields the monitor samples)
+    let health_rounds = if b.quick { 20_000 } else { 200_000 };
+    let records: Vec<RoundRecord> = (0..health_rounds).map(synth_record).collect();
+    let cfg = HealthConfig {
+        slos: SloRule::parse_list("eligible_frac:ge:0.7,dropped_frac:le:0.5").unwrap(),
+        detectors: true,
+        ..HealthConfig::default()
+    };
+    b.run("obs/health_monitor", 5, || {
+        let mut mon = HealthMonitor::new(&cfg, 1_000, 10).unwrap();
+        for rec in &records {
+            let _ = mon.observe_round(rec);
+        }
+        let _ = mon.finish();
+    });
+    let mut mon = HealthMonitor::new(&cfg, 1_000, 10).unwrap();
+    let t0 = Instant::now();
+    for rec in &records {
+        let _ = mon.observe_round(rec);
+    }
+    let ledger = mon.finish();
+    b.metric(
+        "obs",
+        "monitor_on_rounds_per_s",
+        health_rounds as f64 / t0.elapsed().as_secs_f64(),
+    );
+    let t0 = Instant::now();
+    let mut acc = 0.0f64;
+    for rec in &records {
+        acc += rec.sim_round_s + rec.eligible as f64 + rec.dropped as f64;
+    }
+    b.metric(
+        "obs",
+        "monitor_off_rounds_per_s",
+        health_rounds as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+    );
+    assert!(acc > 0.0 && ledger.total() > 0, "monitor bench must do real work");
+
     b.note(&format!(
-        "{rounds} rounds x {EVENTS_PER_ROUND} events; registry ops x{ops}"
+        "{rounds} rounds x {EVENTS_PER_ROUND} events; registry ops x{ops}; \
+         monitor x{health_rounds} rounds"
     ));
     b.write_json("BENCH_obs.json");
 }

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! trace_report <trace.jsonl>            validate + per-phase/per-tier report
+//! trace_report --incidents <trace.jsonl>    health-incident timeline + drill-down
 //! trace_report --diff <a.jsonl> <b.jsonl>   compare sim-time content
 //! ```
 //!
@@ -12,6 +13,12 @@
 //! (count, total/mean/max host wall, mean completion sim-time), and the
 //! per-tier client lifecycle rollup (selected → fetched → computed →
 //! merged/dropped/discarded/deferred, with wire bytes and cache hits).
+//!
+//! Incidents mode lists the health monitor's `incident` lifecycle events
+//! (open/update/resolve) as a timeline, then drills each incident down
+//! into its covered round window, correlating against the `round_close`
+//! ledger (drops, deferrals, mean eligibility, simulated time) so a
+//! burning SLO can be read next to what the fleet was doing.
 //!
 //! Diff mode strips the nondeterministic `wall_ms` fields and `log`
 //! events, then compares the remaining (sim-clock) content line by line:
@@ -177,6 +184,77 @@ fn report(path: &str) -> Result<(), String> {
     Ok(())
 }
 
+fn s<'a>(ev: &'a Json, key: &str) -> &'a str {
+    ev.get(key).and_then(Json::as_str).unwrap_or("?")
+}
+
+/// Health-incident timeline plus per-incident drill-down into the
+/// covered round window of the `round_close` ledger.
+fn incidents(path: &str) -> Result<(), String> {
+    let events = load(path)?;
+    let incs: Vec<&Json> = events.iter().filter(|e| tag(e) == "incident").collect();
+    if incs.is_empty() {
+        obs_info!("{path}: no incident events (health monitor off, or the fleet stayed healthy)");
+        return Ok(());
+    }
+    let mut timeline = Table::new(
+        "Incident timeline",
+        &["round", "id", "action", "severity", "rule", "observed", "expected", "sim_s"],
+    );
+    for ev in &incs {
+        timeline.push(vec![
+            u(ev, "round").to_string(),
+            u(ev, "id").to_string(),
+            s(ev, "action").to_string(),
+            s(ev, "severity").to_string(),
+            s(ev, "rule").to_string(),
+            format!("{:.4}", f(ev, "observed")),
+            format!("{:.4}", f(ev, "expected")),
+            format!("{:.2}", f(ev, "sim_s")),
+        ]);
+    }
+    obs_info!("{}", timeline.to_pretty());
+
+    // drill-down: per incident id, the covered rounds correlated with the
+    // round_close ledger — what the fleet was doing while the rule burned
+    let ids: BTreeSet<u64> = incs.iter().map(|e| u(e, "id")).collect();
+    let mut drill = Table::new(
+        "Incident drill-down",
+        &[
+            "id", "severity", "rule", "window", "rounds", "dropped", "deferred",
+            "eligible_mean", "sim_s",
+        ],
+    );
+    for id in &ids {
+        let of_id: Vec<&&Json> = incs.iter().filter(|e| u(e, "id") == *id).collect();
+        let lo = of_id.iter().map(|e| u(e, "round")).min().unwrap_or(0);
+        let hi = of_id.iter().map(|e| u(e, "round")).max().unwrap_or(0);
+        let resolved = of_id.iter().any(|e| s(e, "action") == "resolve");
+        let closes: Vec<&Json> = events
+            .iter()
+            .filter(|e| tag(e) == "round_close" && u(e, "round") >= lo && u(e, "round") <= hi)
+            .collect();
+        let dropped: u64 = closes.iter().map(|e| u(e, "dropped")).sum();
+        let deferred: u64 = closes.iter().map(|e| u(e, "deferred")).sum();
+        let eligible: u64 = closes.iter().map(|e| u(e, "eligible")).sum();
+        let sim: f64 = closes.iter().map(|e| f(e, "sim_round_s")).sum();
+        let n = closes.len().max(1) as f64;
+        drill.push(vec![
+            id.to_string(),
+            s(of_id[0], "severity").to_string(),
+            s(of_id[0], "rule").to_string(),
+            format!("r{lo}..r{hi}{}", if resolved { "" } else { " (open)" }),
+            closes.len().to_string(),
+            dropped.to_string(),
+            deferred.to_string(),
+            format!("{:.1}", eligible as f64 / n),
+            format!("{sim:.2}"),
+        ]);
+    }
+    obs_info!("{}", drill.to_pretty());
+    Ok(())
+}
+
 fn diff(a_path: &str, b_path: &str) -> Result<bool, String> {
     let a = std::fs::read_to_string(a_path).map_err(|e| format!("cannot read {a_path}: {e}"))?;
     let b = std::fs::read_to_string(b_path).map_err(|e| format!("cannot read {b_path}: {e}"))?;
@@ -197,8 +275,13 @@ fn main() -> ExitCode {
     let refs: Vec<&str> = args.iter().map(|s| s.as_str()).collect();
     let result = match refs.as_slice() {
         ["--diff", a, b] => diff(a, b).map(|diverged| diverged as u8),
+        ["--incidents", path] => incidents(path).map(|()| 0),
         [path] if !path.starts_with("--") => report(path).map(|()| 0),
-        _ => Err("usage: trace_report <trace.jsonl> | trace_report --diff <a> <b>".to_string()),
+        _ => Err(
+            "usage: trace_report <trace.jsonl> | trace_report --incidents <trace.jsonl> | \
+             trace_report --diff <a> <b>"
+                .to_string(),
+        ),
     };
     match result {
         Ok(code) => ExitCode::from(code),

@@ -492,6 +492,7 @@ impl TrainConfig {
             )));
         }
         self.scenario.validate()?;
+        self.obs.health.validate()?;
         if self.sched_policy == SchedPolicy::MemoryCapped {
             // AllKeys (BROADCAST identity) and FixedPerRound (one shared
             // cohort-wide slice) have no per-client budget to clamp —

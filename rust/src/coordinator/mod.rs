@@ -75,10 +75,13 @@ use crate::exec::{self, ExecMode};
 use crate::fedselect::{
     ClientKeys, DeltaPlan, FetchOutcome, RoundComm, RoundSession, SliceImpl, SliceService,
 };
-use crate::metrics::{human_bytes, record_round};
+use crate::metrics::{human_bytes, keys, record_round};
 use crate::model::{Binding, ModelArch, ParamStore, SelectSpec};
 use crate::native::{self, Buf};
-use crate::obs::{self, ClientStage, MetricsRegistry, Phase, Recorder, TraceEvent};
+use crate::obs::{
+    self, ClientStage, HealthMonitor, HealthReport, IncidentAction, MetricsRegistry, Phase,
+    Recorder, Severity, TraceEvent,
+};
 use crate::optim::Optimizer;
 use crate::runtime::PjrtRuntime;
 use crate::scheduler::{ClientRoundStats, CompletionEvent, Scheduler, SliceGeometry};
@@ -208,6 +211,9 @@ pub struct TrainReport {
     /// stragglers, staleness-bound discards, plus any buffered updates
     /// still in flight when training ended.
     pub total_discarded: usize,
+    /// The health monitor's incident ledger (empty/default when no SLOs
+    /// or detectors were configured — the monitor is then fully off).
+    pub health: HealthReport,
 }
 
 impl TrainReport {
@@ -289,6 +295,10 @@ pub struct Trainer {
     /// Tenancy namespace tag stamped on every trace event (0 =
     /// single-tenant).
     ns: u32,
+    /// Health monitor ([`crate::obs::health`]): `None` unless SLO rules
+    /// or anomaly detectors are configured, so the default round loop
+    /// carries no monitoring code at all.
+    health: Option<HealthMonitor>,
 }
 
 impl Trainer {
@@ -388,6 +398,7 @@ impl Trainer {
             metrics.register_hist(key, &FETCH_LATENCY_BOUNDS);
         }
         metrics.register_hist(STALENESS_HIST, &STALENESS_BOUNDS);
+        let health = HealthMonitor::new(&cfg.obs.health, scheduler.fleet().len(), cfg.cohort);
         Ok(Trainer {
             cfg,
             arch,
@@ -408,6 +419,7 @@ impl Trainer {
             metrics,
             fetch_hist_keys,
             ns: 0,
+            health,
         })
     }
 
@@ -1206,6 +1218,37 @@ impl Trainer {
             resident_bytes: self.scheduler.resident_state_bytes(),
         };
         record_round(&mut self.metrics, &rec);
+        // Health monitor: observes the finished record, never steers it.
+        // All sampled series are sim-clock quantities, so the resulting
+        // incident stream is byte-identical across same-seed runs.
+        let health_events = match self.health.as_mut() {
+            Some(mon) => {
+                let evs = mon.observe_round(&rec);
+                let mut violating = 0u64;
+                for ev in &evs {
+                    match ev.action {
+                        IncidentAction::Open => {
+                            self.metrics.counter_add(keys::HEALTH_INCIDENTS, 1);
+                            if ev.severity == Severity::Critical {
+                                self.metrics.counter_add(keys::HEALTH_CRITICAL, 1);
+                            }
+                            violating += 1;
+                        }
+                        IncidentAction::Update => violating += 1,
+                        IncidentAction::Resolve => {
+                            self.metrics.counter_add(keys::HEALTH_RESOLVED, 1)
+                        }
+                    }
+                }
+                if violating > 0 {
+                    self.metrics.counter_add(keys::HEALTH_VIOLATION_ROUNDS, violating);
+                }
+                self.metrics
+                    .gauge_set(keys::HEALTH_OPEN, mon.open_incidents() as f64);
+                evs
+            }
+            None => Vec::new(),
+        };
         if obs_on {
             // per-phase sim spans: fetch/compute take the slowest client's
             // leg (phases overlap per client on the simulated timeline, so
@@ -1252,6 +1295,21 @@ impl Trainer {
                 clients_touched: rec.clients_touched,
                 resident_bytes: rec.resident_bytes,
             });
+            let sim_total_s = self.scheduler.sim_total_s();
+            for ev in &health_events {
+                self.recorder.record(&TraceEvent::Incident {
+                    ns: self.ns,
+                    round: ev.round,
+                    id: ev.id,
+                    action: ev.action,
+                    severity: ev.severity,
+                    rule: ev.rule.clone(),
+                    series: ev.series.name().to_string(),
+                    observed: ev.observed,
+                    expected: ev.expected,
+                    sim_s: sim_total_s,
+                });
+            }
         }
         Ok((rec, tick))
     }
@@ -1338,6 +1396,11 @@ impl Trainer {
             rounds,
             evals,
             final_eval,
+            health: self
+                .health
+                .as_mut()
+                .map(|m| m.finish())
+                .unwrap_or_default(),
         };
         if self.recorder.enabled() {
             self.recorder.record(&TraceEvent::RunEnd {

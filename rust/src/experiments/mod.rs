@@ -23,10 +23,12 @@
 //! | `cache`  | (beyond the paper) slice-cache eviction policy × budget × fleet sweep |
 //! | `multitenant` | (beyond the paper) N concurrent jobs on one shared fleet vs isolated runs |
 //! | `scale`  | (beyond the paper) lazy-fleet scale sweep 10k -> 10M clients + churn/outage tie-in |
+//! | `health` | (beyond the paper) SLO/anomaly monitor vs injected outage/churn/flaky faults |
 
 mod async_agg;
 mod cache;
 mod emnist;
+mod health;
 mod logreg;
 mod multitenant;
 mod scale;
@@ -63,7 +65,7 @@ impl ExpOptions {
 /// All known experiment ids.
 pub const ALL_IDS: &[&str] = &[
     "table1", "fig2", "fig3", "fig4", "fig5", "table2", "table3", "fig6", "fig7", "sched",
-    "async", "secagg", "cache", "multitenant", "scale",
+    "async", "secagg", "cache", "multitenant", "scale", "health",
 ];
 
 /// Run one experiment by id; returns the rendered tables (already written
@@ -85,6 +87,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
         "cache" => cache::sweep(opts)?,
         "multitenant" => multitenant::run(opts)?,
         "scale" => scale::run(opts)?,
+        "health" => health::run(opts)?,
         other => {
             return Err(Error::Config(format!(
                 "unknown experiment {other:?}; known: {}",

@@ -83,8 +83,8 @@ pub mod prelude {
     };
     pub use crate::model::{ModelArch, ParamStore, SelectSpec};
     pub use crate::obs::{
-        LogLevel, MetricsRegistry, NullRecorder, ObsConfig, Recorder, TraceEvent,
-        TraceFormat,
+        HealthConfig, HealthMonitor, HealthReport, Incident, LogLevel, MetricsRegistry,
+        NullRecorder, ObsConfig, Recorder, SloRule, TraceEvent, TraceFormat,
     };
     pub use crate::optim::ServerOpt;
     pub use crate::scheduler::{

@@ -28,8 +28,9 @@
 //!                       [--engine native|pjrt]
 //!                       [--artifacts-dir DIR] [--seed S] [--eval-every K]
 //!                       [--trace-out PATH] [--trace-format jsonl|chrome]
+//!                       [--slo RULE[,RULE..]] [--detect] [--detect-warmup N]
 //! fedselect experiment  --id table1|fig2..fig7|table2|table3|sched|async|
-//!                            secagg|cache|multitenant|scale|all|list
+//!                            secagg|cache|multitenant|scale|health|all|list
 //!                       [--quick] [--engine native|pjrt] [--trials T]
 //!                       [--out-dir results] [--artifacts-dir DIR]
 //! fedselect artifacts   [--dir artifacts]
@@ -70,8 +71,8 @@ use fedselect::exec::ExecMode;
 use fedselect::experiments::{self, ExpOptions};
 use fedselect::fedselect::{KeyPolicy, SliceImpl};
 use fedselect::fleet::{ChurnSpec, OutageSpec, WaveSpec};
-use fedselect::metrics::{fleet_summary_from, human_bytes};
-use fedselect::obs::{self, LogLevel, TraceFormat};
+use fedselect::metrics::{fleet_summary_from, human_bytes, latency_summary_from};
+use fedselect::obs::{self, LogLevel, SloRule, TraceFormat};
 use fedselect::optim::ServerOpt;
 use fedselect::runtime::PjrtRuntime;
 use fedselect::scheduler::{FleetKind, SchedPolicy};
@@ -341,6 +342,16 @@ fn cmd_train(a: &Args) -> Result<()> {
         .str_or("trace-format", "jsonl")
         .parse::<TraceFormat>()
         .map_err(Error::Config)?;
+    // fleet health monitor: declarative SLO rules (comma-separated
+    // KEY:OP:VALUE[:FOR_ROUNDS]) and/or statistical anomaly detectors.
+    // Off by default — the round loop then carries no monitoring code.
+    if let Some(rules) = a.get("slo") {
+        cfg.obs.health.slos = SloRule::parse_list(rules)?;
+    }
+    cfg.obs.health.detectors = a.flag("detect") || a.get("detect-warmup").is_some();
+    cfg.obs.health.warmup = a
+        .parse_or("detect-warmup", cfg.obs.health.warmup)
+        .map_err(Error::Config)?;
     a.reject_unknown().map_err(Error::Config)?;
 
     let mut tr = Trainer::new(cfg)?;
@@ -441,6 +452,14 @@ fn cmd_train(a: &Args) -> Result<()> {
             // bytes as the ledger-walking fleet_summary over report.rounds
             fleet_summary_from(tr.scheduler().fleet(), tr.metrics()).to_pretty()
         );
+    }
+    // health monitor output only when the monitor is on, so legacy
+    // invocations keep their historical stdout bytes
+    if tr.cfg.obs.health.is_active() {
+        if let Some(t) = latency_summary_from(tr.metrics()) {
+            obs_info!("{}", t.to_pretty());
+        }
+        obs_info!("{}", report.health.summary());
     }
     obs_info!("{}", report.summary());
     Ok(())

@@ -116,6 +116,19 @@ pub mod keys {
     pub const JOB_CACHE_HITS: &str = "job.cache_hits";
     /// Counter vec (index = job): client-cache piece lookups.
     pub const JOB_CACHE_LOOKUPS: &str = "job.cache_lookups";
+    /// Counter: health-monitor incidents opened.
+    pub const HEALTH_INCIDENTS: &str = "health.incidents";
+    /// Counter: health-monitor incidents opened at `critical` severity
+    /// (SLO breaches).
+    pub const HEALTH_CRITICAL: &str = "health.critical";
+    /// Counter: health-monitor incidents resolved (a clean round closed
+    /// them).
+    pub const HEALTH_RESOLVED: &str = "health.resolved";
+    /// Counter: (incident, round) pairs in violation — every open/update
+    /// lifecycle step.
+    pub const HEALTH_VIOLATION_ROUNDS: &str = "health.violation_rounds";
+    /// Gauge: incidents currently open after the latest round.
+    pub const HEALTH_OPEN: &str = "health.open";
 
     /// Gauge vec (index = job): simulated device-seconds consumed on fleet
     /// tier `tier`.
@@ -243,6 +256,39 @@ pub fn fleet_summary_from(fleet: &Fleet, reg: &MetricsRegistry) -> Table {
         ]);
     }
     table
+}
+
+/// Quantile companion to [`fleet_summary_from`]: one row per populated
+/// histogram (the per-tier `fetch_latency_s.t*` family and
+/// `staleness_rounds`) with p50/p95/p99 from
+/// [`crate::obs::Histogram::quantile`]. Returns `None` when no histogram
+/// holds observations — in particular for ledger-rebuilt registries
+/// ([`fleet_registry`] — `RoundRecord`s carry no per-client latencies),
+/// so the existing `fleet_summary` ⇔ `fleet_summary_from` byte-identity
+/// is untouched: quantiles render only beside a *live* registry.
+pub fn latency_summary_from(reg: &MetricsRegistry) -> Option<Table> {
+    let mut table = Table::new(
+        "Latency quantiles (simulated)",
+        &["series", "n", "mean", "p50", "p95", "p99"],
+    );
+    for (name, hist) in reg.hists() {
+        if hist.count() == 0 {
+            continue;
+        }
+        table.push(vec![
+            name.to_string(),
+            hist.count().to_string(),
+            format!("{:.3}", hist.mean()),
+            format!("{:.3}", hist.quantile(0.50)),
+            format!("{:.3}", hist.quantile(0.95)),
+            format!("{:.3}", hist.quantile(0.99)),
+        ]);
+    }
+    if table.rows.is_empty() {
+        None
+    } else {
+        Some(table)
+    }
 }
 
 /// Fold a multi-tenant report's per-job usage into a registry under the
@@ -558,6 +604,27 @@ mod tests {
         let b = fleet_summary(&fleet, &[rec]);
         assert_eq!(a.to_pretty(), b.to_pretty());
         assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn latency_summary_renders_only_populated_histograms() {
+        let mut reg = MetricsRegistry::new();
+        assert!(latency_summary_from(&reg).is_none());
+        reg.register_hist("fetch_latency_s.t0", &[1.0, 2.0]);
+        // Registered but empty histograms render nothing.
+        assert!(latency_summary_from(&reg).is_none());
+        reg.observe("fetch_latency_s.t0", 0.5);
+        reg.observe("fetch_latency_s.t0", 1.5);
+        let t = latency_summary_from(&reg).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], "fetch_latency_s.t0");
+        assert_eq!(t.rows[0][1], "2");
+        assert_eq!(t.rows[0][3], "1.000"); // p50 at the first bucket edge
+        // Ledger-rebuilt registries carry no histograms (RoundRecords have
+        // no per-client latencies), so the fleet_summary byte-identity
+        // with the ledger path is untouched by the quantile table.
+        let ledger_reg = fleet_registry(&[sample_record()]);
+        assert!(latency_summary_from(&ledger_reg).is_none());
     }
 
     fn sample_multireport() -> crate::tenancy::MultiReport {

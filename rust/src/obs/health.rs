@@ -1,0 +1,996 @@
+//! Deterministic fleet-health monitor: SLO evaluation + anomaly
+//! detection over the per-round ledger, with a first-class incident
+//! ledger.
+//!
+//! The [`HealthMonitor`] consumes each [`RoundRecord`] right after the
+//! trainer folds it into the metrics registry and evaluates two rule
+//! families:
+//!
+//! - **SLOs** ([`SloRule`]): declarative thresholds with `FOR_ROUNDS`
+//!   hysteresis — an incident opens only after the rule has been violated
+//!   for that many *consecutive* rounds, so one-round blips never page.
+//!   SLO incidents are `critical`.
+//! - **Anomaly detectors** (`--detect`): per-series EWMA mean/variance
+//!   z-score and a windowed level-shift test, both gated behind a warm-up
+//!   of `--detect-warmup` rounds (no incident can open before the window
+//!   fills). Detector incidents are `warn`.
+//!
+//! Everything is computed from sim-clock quantities (detectors skip the
+//! host-wall series entirely; see [`Series::sim_side`]), with fixed
+//! constants and no RNG — two same-seed runs produce byte-identical
+//! incident ledgers, and the ledger rides the trace as the additive
+//! `incident` event family. The monitor *observes* the round ledger and
+//! never steers the trajectory: with no SLOs and detectors off,
+//! [`HealthMonitor::new`] returns `None` and the trainer carries no
+//! monitor at all (byte-identity test-enforced in `tests/obs.rs`).
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::coordinator::RoundRecord;
+use crate::error::{Error, Result};
+use crate::obs::slo::{Series, SloOp, SloRule, ALL_SERIES};
+
+/// EWMA smoothing factor for the z-score detector.
+const EWMA_LAMBDA: f64 = 0.25;
+/// Std-deviation floor as a fraction of |mean|: a near-constant series
+/// must move by at least `z_thresh × this × |mean|` to fire.
+const STD_FLOOR_FRAC: f64 = 0.05;
+
+/// Health-monitor configuration, carried by
+/// [`crate::obs::ObsConfig::health`] (so every `TrainConfig` constructor
+/// inherits the fully-off default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Declarative threshold rules (`--slo KEY:OP:VALUE[:FOR_ROUNDS]`,
+    /// comma-separated; per-job via `JobSpec::with_slos`).
+    pub slos: Vec<SloRule>,
+    /// Enable the EWMA z-score + level-shift anomaly detectors over all
+    /// sim-side series (`--detect`).
+    pub detectors: bool,
+    /// Rounds of history a detector needs before it may open an incident
+    /// (`--detect-warmup`, default 8).
+    pub warmup: usize,
+    /// |z| threshold for the EWMA detector (also scales the level-shift
+    /// noise band).
+    pub z_thresh: f64,
+    /// Minimum level shift as a fraction of the old window mean.
+    pub shift_frac: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            slos: Vec::new(),
+            detectors: false,
+            warmup: 8,
+            z_thresh: 4.0,
+            shift_frac: 0.2,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Whether any monitoring is configured at all; when false the
+    /// trainer does not construct a monitor (the fully-off contract).
+    pub fn is_active(&self) -> bool {
+        !self.slos.is_empty() || self.detectors
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.detectors && self.warmup == 0 {
+            return Err(Error::Config(
+                "--detect-warmup must be >= 1 when detectors are on".into(),
+            ));
+        }
+        if !(self.z_thresh.is_finite() && self.z_thresh > 0.0) {
+            return Err(Error::Config("health z_thresh must be > 0".into()));
+        }
+        if !(self.shift_frac.is_finite() && self.shift_frac > 0.0) {
+            return Err(Error::Config("health shift_frac must be > 0".into()));
+        }
+        for rule in &self.slos {
+            if rule.for_rounds == 0 {
+                return Err(Error::Config(format!(
+                    "SLO rule {rule} has FOR_ROUNDS == 0"
+                )));
+            }
+            if !rule.value.is_finite() {
+                return Err(Error::Config(format!(
+                    "SLO rule {rule} has a non-finite threshold"
+                )));
+            }
+            // host-clock series would make the incident ledger vary run to
+            // run, breaking the byte-identical same-seed contract
+            if !rule.series.sim_side() {
+                return Err(Error::Config(format!(
+                    "SLO rule {rule} targets host-clock series {}; pick a \
+                     sim-side series to keep the incident ledger deterministic",
+                    rule.series
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incident severity: SLO breaches are `critical` (an explicit contract
+/// was broken), detector anomalies are `warn` (statistically unusual).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warn,
+    Critical,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Critical => "critical",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Lifecycle step an [`IncidentEvent`] reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IncidentAction {
+    Open,
+    Update,
+    Resolve,
+}
+
+impl IncidentAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IncidentAction::Open => "open",
+            IncidentAction::Update => "update",
+            IncidentAction::Resolve => "resolve",
+        }
+    }
+}
+
+impl fmt::Display for IncidentAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One entry of the incident ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Incident {
+    /// Sequential per-run id (deterministic: rules are evaluated in
+    /// declaration order, detectors in series order).
+    pub id: u32,
+    pub severity: Severity,
+    /// Canonical rule label: `slo:<series>:<op>:<value>[:<for>]`,
+    /// `ewma_z:<series>`, or `level_shift:<series>`.
+    pub rule: String,
+    pub series: Series,
+    /// Round at which the incident opened (for SLOs with hysteresis this
+    /// is the round the streak reached `FOR_ROUNDS`).
+    pub opened_round: usize,
+    /// Round of the first clean sample, `None` while still open at run
+    /// end.
+    pub resolved_round: Option<usize>,
+    /// Last round observed in violation.
+    pub last_round: usize,
+    /// Violating rounds covered (for SLOs this includes the pre-open
+    /// hysteresis streak).
+    pub rounds: usize,
+    /// Observed value when the incident opened.
+    pub observed: f64,
+    /// What the rule expected: the SLO threshold, or the detector
+    /// baseline (EWMA mean / old-window mean) at open.
+    pub expected: f64,
+    /// Most deviant observed value over the incident's lifetime.
+    pub worst: f64,
+}
+
+impl Incident {
+    pub fn is_open(&self) -> bool {
+        self.resolved_round.is_none()
+    }
+}
+
+/// One incident lifecycle step, returned by
+/// [`HealthMonitor::observe_round`] so the trainer can mirror it into
+/// the metrics registry (`health.*`) and the trace (`incident` events).
+#[derive(Clone, Debug)]
+pub struct IncidentEvent {
+    pub action: IncidentAction,
+    pub id: u32,
+    pub severity: Severity,
+    pub rule: String,
+    pub series: Series,
+    pub round: usize,
+    pub observed: f64,
+    pub expected: f64,
+}
+
+/// End-of-run health rollup, carried by
+/// [`crate::coordinator::TrainReport::health`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthReport {
+    /// The full incident ledger, in open order.
+    pub incidents: Vec<Incident>,
+    /// Rounds the monitor observed (0 when the monitor was off).
+    pub rounds_observed: usize,
+    /// SLO rules that were active.
+    pub rules: usize,
+    /// Whether the anomaly detectors were on.
+    pub detectors: bool,
+}
+
+impl HealthReport {
+    pub fn total(&self) -> usize {
+        self.incidents.len()
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.incidents.iter().filter(|i| i.is_open()).count()
+    }
+
+    pub fn critical_count(&self) -> usize {
+        self.incidents
+            .iter()
+            .filter(|i| i.severity == Severity::Critical)
+            .count()
+    }
+
+    /// Rounds covered by at least one incident (for precision/recall
+    /// against scenario ground truth): every round in
+    /// `[opened_round - pre_open_streak, last_round]` per incident.
+    pub fn flagged_rounds(&self) -> Vec<usize> {
+        let mut flagged: Vec<usize> = Vec::new();
+        for inc in &self.incidents {
+            let pre = inc.rounds.saturating_sub(
+                inc.last_round.saturating_sub(inc.opened_round) + 1,
+            );
+            let start = inc.opened_round.saturating_sub(pre);
+            for r in start..=inc.last_round {
+                flagged.push(r);
+            }
+        }
+        flagged.sort_unstable();
+        flagged.dedup();
+        flagged
+    }
+
+    /// One-line exit summary (printed by the CLI only when the monitor
+    /// is active, preserving legacy stdout byte-for-byte otherwise).
+    pub fn summary(&self) -> String {
+        if self.incidents.is_empty() {
+            return format!(
+                "health: 0 incidents over {} round(s) ({} SLO rule(s), detectors {})",
+                self.rounds_observed,
+                self.rules,
+                if self.detectors { "on" } else { "off" },
+            );
+        }
+        format!(
+            "health: {} incident(s) ({} critical, {} still open) over {} round(s)",
+            self.total(),
+            self.critical_count(),
+            self.open_count(),
+            self.rounds_observed,
+        )
+    }
+}
+
+/// Aggregate over per-job [`HealthReport`]s (multi-tenant rollup).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthRollup {
+    pub incidents: usize,
+    pub critical: usize,
+    pub open: usize,
+}
+
+impl HealthRollup {
+    pub fn fold<'a>(reports: impl Iterator<Item = &'a HealthReport>) -> HealthRollup {
+        let mut out = HealthRollup::default();
+        for r in reports {
+            out.incidents += r.total();
+            out.critical += r.critical_count();
+            out.open += r.open_count();
+        }
+        out
+    }
+}
+
+/// Extract one series sample from a round ledger entry; `None` means the
+/// series is absent this round (no cache lookups, no keyed committee, or
+/// a zero denominator).
+pub fn sample(series: Series, rec: &RoundRecord, fleet_n: usize, cohort: usize) -> Option<f64> {
+    let frac = |num: usize| {
+        if cohort == 0 {
+            None
+        } else {
+            Some(num as f64 / cohort as f64)
+        }
+    };
+    match series {
+        Series::SimRoundS => Some(rec.sim_round_s),
+        Series::EligibleFrac => {
+            if fleet_n == 0 {
+                None
+            } else {
+                Some(rec.eligible as f64 / fleet_n as f64)
+            }
+        }
+        Series::CompletedFrac => frac(rec.completed),
+        Series::DroppedFrac => frac(rec.dropped),
+        Series::DiscardedFrac => frac(rec.discarded_clients),
+        Series::DeferredFrac => frac(rec.deferrals),
+        Series::CacheHitRate => {
+            let lookups: u64 = rec.tier_cache_lookups.iter().sum();
+            if lookups == 0 {
+                None
+            } else {
+                let hits: u64 = rec.tier_cache_hits.iter().sum();
+                Some(hits as f64 / lookups as f64)
+            }
+        }
+        Series::MeanStaleness => Some(rec.mean_staleness),
+        Series::MinCommitteeSize => {
+            if rec.committees == 0 {
+                None
+            } else {
+                Some(rec.min_committee_size as f64)
+            }
+        }
+        Series::MergeStallMs => Some(rec.merge_stall_ms),
+        Series::ExecUtil => Some(rec.exec_util),
+    }
+}
+
+/// Per-SLO-rule evaluation state.
+struct SloState {
+    rule: SloRule,
+    label: String,
+    /// Consecutive violating rounds so far (resets on any clean or
+    /// absent sample — the hysteresis counter).
+    streak: usize,
+    /// Index into `HealthMonitor::incidents` while open.
+    open: Option<usize>,
+}
+
+/// Which detector a [`DetectorState`] incident slot belongs to.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum DetectorKind {
+    EwmaZ,
+    LevelShift,
+}
+
+impl DetectorKind {
+    fn label(&self, series: Series) -> String {
+        match self {
+            DetectorKind::EwmaZ => format!("ewma_z:{series}"),
+            DetectorKind::LevelShift => format!("level_shift:{series}"),
+        }
+    }
+}
+
+/// Per-series anomaly-detector state (EWMA + level-shift window).
+struct DetectorState {
+    series: Series,
+    /// Samples folded into the EWMA so far (warm-up gate).
+    n: usize,
+    mean: f64,
+    var: f64,
+    /// Trailing window for the level-shift test; capacity
+    /// `2 × half_window`.
+    window: VecDeque<f64>,
+    open_z: Option<usize>,
+    open_shift: Option<usize>,
+}
+
+/// The monitor itself: owned by the trainer, fed every round, drained
+/// into a [`HealthReport`] by [`HealthMonitor::finish`].
+pub struct HealthMonitor {
+    warmup: usize,
+    z_thresh: f64,
+    shift_frac: f64,
+    fleet_n: usize,
+    cohort: usize,
+    slos: Vec<SloState>,
+    detectors: Vec<DetectorState>,
+    incidents: Vec<Incident>,
+    rounds: usize,
+    next_id: u32,
+}
+
+/// Which direction makes an observed value "worse" for a given rule
+/// (tracked into [`Incident::worst`]).
+#[derive(Clone, Copy)]
+enum WorstDir {
+    /// Lower is worse (ge/gt requirements: violations sit below the
+    /// threshold).
+    Low,
+    /// Higher is worse (le/lt requirements).
+    High,
+    /// Farther from the expected baseline is worse (detectors).
+    Far,
+}
+
+impl HealthMonitor {
+    /// `None` when the config enables nothing — the trainer then carries
+    /// no monitor and the round loop is exactly the pre-monitor code.
+    pub fn new(cfg: &HealthConfig, fleet_n: usize, cohort: usize) -> Option<HealthMonitor> {
+        if !cfg.is_active() {
+            return None;
+        }
+        let slos = cfg
+            .slos
+            .iter()
+            .map(|rule| SloState {
+                label: rule.label(),
+                rule: rule.clone(),
+                streak: 0,
+                open: None,
+            })
+            .collect();
+        let detectors = if cfg.detectors {
+            ALL_SERIES
+                .iter()
+                .filter(|s| s.sim_side())
+                .map(|&series| DetectorState {
+                    series,
+                    n: 0,
+                    mean: 0.0,
+                    var: 0.0,
+                    window: VecDeque::new(),
+                    open_z: None,
+                    open_shift: None,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Some(HealthMonitor {
+            warmup: cfg.warmup.max(1),
+            z_thresh: cfg.z_thresh,
+            shift_frac: cfg.shift_frac,
+            fleet_n,
+            cohort,
+            slos,
+            detectors,
+            incidents: Vec::new(),
+            rounds: 0,
+            next_id: 0,
+        })
+    }
+
+    /// Currently-open incidents (the `health.open` gauge).
+    pub fn open_incidents(&self) -> usize {
+        self.incidents.iter().filter(|i| i.is_open()).count()
+    }
+
+    /// Half-width of the level-shift window (the full window is
+    /// `2 × half`, so the test cannot fire before ~`warmup` rounds).
+    fn half_window(&self) -> usize {
+        ((self.warmup + 1) / 2).max(2)
+    }
+
+    /// Append a freshly-built incident (its `id` already assigned) and
+    /// return its index plus the `open` lifecycle event.
+    fn push_incident(incidents: &mut Vec<Incident>, inc: Incident) -> (usize, IncidentEvent) {
+        let ev = IncidentEvent {
+            action: IncidentAction::Open,
+            id: inc.id,
+            severity: inc.severity,
+            rule: inc.rule.clone(),
+            series: inc.series,
+            round: inc.opened_round,
+            observed: inc.observed,
+            expected: inc.expected,
+        };
+        incidents.push(inc);
+        (incidents.len() - 1, ev)
+    }
+
+    fn touch_incident(
+        incidents: &mut [Incident],
+        idx: usize,
+        round: usize,
+        observed: f64,
+        dir: WorstDir,
+    ) -> IncidentEvent {
+        let inc = &mut incidents[idx];
+        inc.last_round = round;
+        inc.rounds += 1;
+        let worse = match dir {
+            WorstDir::Low => observed < inc.worst,
+            WorstDir::High => observed > inc.worst,
+            WorstDir::Far => {
+                (observed - inc.expected).abs() > (inc.worst - inc.expected).abs()
+            }
+        };
+        if worse {
+            inc.worst = observed;
+        }
+        IncidentEvent {
+            action: IncidentAction::Update,
+            id: inc.id,
+            severity: inc.severity,
+            rule: inc.rule.clone(),
+            series: inc.series,
+            round,
+            observed,
+            expected: inc.expected,
+        }
+    }
+
+    fn resolve_incident(
+        incidents: &mut [Incident],
+        idx: usize,
+        round: usize,
+        observed: f64,
+    ) -> IncidentEvent {
+        let inc = &mut incidents[idx];
+        inc.resolved_round = Some(round);
+        IncidentEvent {
+            action: IncidentAction::Resolve,
+            id: inc.id,
+            severity: inc.severity,
+            rule: inc.rule.clone(),
+            series: inc.series,
+            round,
+            observed,
+            expected: inc.expected,
+        }
+    }
+
+    /// Feed one round ledger entry; returns the incident lifecycle steps
+    /// it produced, in deterministic (rule order, then series order)
+    /// order.
+    pub fn observe_round(&mut self, rec: &RoundRecord) -> Vec<IncidentEvent> {
+        self.rounds += 1;
+        let round = rec.round;
+        let mut events = Vec::new();
+
+        // SLO rules, in declaration order.
+        for st in &mut self.slos {
+            let sampled = sample(st.rule.series, rec, self.fleet_n, self.cohort);
+            match sampled {
+                Some(x) if st.rule.violated(x) => {
+                    st.streak += 1;
+                    if let Some(idx) = st.open {
+                        let dir = match st.rule.op {
+                            SloOp::Ge | SloOp::Gt => WorstDir::Low,
+                            SloOp::Le | SloOp::Lt => WorstDir::High,
+                        };
+                        events.push(Self::touch_incident(
+                            &mut self.incidents,
+                            idx,
+                            round,
+                            x,
+                            dir,
+                        ));
+                    } else if st.streak >= st.rule.for_rounds {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        let (idx, ev) = Self::push_incident(
+                            &mut self.incidents,
+                            Incident {
+                                id,
+                                severity: Severity::Critical,
+                                rule: st.label.clone(),
+                                series: st.rule.series,
+                                opened_round: round,
+                                resolved_round: None,
+                                last_round: round,
+                                rounds: st.streak,
+                                observed: x,
+                                expected: st.rule.value,
+                                worst: x,
+                            },
+                        );
+                        st.open = Some(idx);
+                        events.push(ev);
+                    }
+                }
+                other => {
+                    // Clean sample, or series absent this round: the
+                    // streak resets and any open incident resolves.
+                    // Absent samples report the threshold itself as the
+                    // "observed" value (never NaN — it must serialize).
+                    st.streak = 0;
+                    if let Some(idx) = st.open.take() {
+                        let observed = other.unwrap_or(st.rule.value);
+                        events.push(Self::resolve_incident(
+                            &mut self.incidents,
+                            idx,
+                            round,
+                            observed,
+                        ));
+                    }
+                }
+            }
+        }
+
+        // Anomaly detectors, in series order. Absent samples are skipped
+        // entirely (no state update, open incidents held).
+        let warmup = self.warmup;
+        let z_thresh = self.z_thresh;
+        let shift_frac = self.shift_frac;
+        let half = self.half_window();
+        for det in &mut self.detectors {
+            let Some(x) = sample(det.series, rec, self.fleet_n, self.cohort) else {
+                continue;
+            };
+
+            // EWMA z-score against the pre-update baseline.
+            if det.n >= warmup {
+                let std = det.var.max(0.0).sqrt();
+                let denom = std.max(STD_FLOOR_FRAC * det.mean.abs()).max(1e-9);
+                let z = (x - det.mean) / denom;
+                if z.abs() > z_thresh {
+                    match det.open_z {
+                        Some(idx) => events.push(Self::touch_incident(
+                            &mut self.incidents,
+                            idx,
+                            round,
+                            x,
+                            WorstDir::Far,
+                        )),
+                        None => {
+                            let id = self.next_id;
+                            self.next_id += 1;
+                            let (idx, ev) = Self::push_incident(
+                                &mut self.incidents,
+                                Incident {
+                                    id,
+                                    severity: Severity::Warn,
+                                    rule: DetectorKind::EwmaZ.label(det.series),
+                                    series: det.series,
+                                    opened_round: round,
+                                    resolved_round: None,
+                                    last_round: round,
+                                    rounds: 1,
+                                    observed: x,
+                                    expected: det.mean,
+                                    worst: x,
+                                },
+                            );
+                            det.open_z = Some(idx);
+                            events.push(ev);
+                        }
+                    }
+                } else if let Some(idx) = det.open_z.take() {
+                    events.push(Self::resolve_incident(&mut self.incidents, idx, round, x));
+                }
+            }
+            let diff = x - det.mean;
+            let incr = if det.n == 0 { diff } else { EWMA_LAMBDA * diff };
+            det.mean += incr;
+            if det.n > 0 {
+                det.var = (1.0 - EWMA_LAMBDA) * (det.var + diff * incr);
+            }
+            det.n += 1;
+
+            // Windowed level shift: mean of the newest half vs the
+            // oldest half, against the old half's noise band.
+            det.window.push_back(x);
+            if det.window.len() > 2 * half {
+                det.window.pop_front();
+            }
+            if det.window.len() == 2 * half {
+                let mean_old = det.window.iter().take(half).sum::<f64>() / half as f64;
+                let mean_new = det.window.iter().skip(half).sum::<f64>() / half as f64;
+                let var_old = det
+                    .window
+                    .iter()
+                    .take(half)
+                    .map(|v| (v - mean_old) * (v - mean_old))
+                    .sum::<f64>()
+                    / half as f64;
+                let delta = (mean_new - mean_old).abs();
+                let band =
+                    2.0 * var_old.max(0.0).sqrt() + shift_frac * mean_old.abs() + 1e-9;
+                if delta > band {
+                    match det.open_shift {
+                        Some(idx) => events.push(Self::touch_incident(
+                            &mut self.incidents,
+                            idx,
+                            round,
+                            mean_new,
+                            WorstDir::Far,
+                        )),
+                        None => {
+                            let id = self.next_id;
+                            self.next_id += 1;
+                            let (idx, ev) = Self::push_incident(
+                                &mut self.incidents,
+                                Incident {
+                                    id,
+                                    severity: Severity::Warn,
+                                    rule: DetectorKind::LevelShift.label(det.series),
+                                    series: det.series,
+                                    opened_round: round,
+                                    resolved_round: None,
+                                    last_round: round,
+                                    rounds: 1,
+                                    observed: mean_new,
+                                    expected: mean_old,
+                                    worst: mean_new,
+                                },
+                            );
+                            det.open_shift = Some(idx);
+                            events.push(ev);
+                        }
+                    }
+                } else if let Some(idx) = det.open_shift.take() {
+                    events.push(Self::resolve_incident(
+                        &mut self.incidents,
+                        idx,
+                        round,
+                        mean_new,
+                    ));
+                }
+            }
+        }
+
+        events
+    }
+
+    /// Drain the ledger into the end-of-run report (incidents still open
+    /// stay open — `resolved_round == None`).
+    pub fn finish(&mut self) -> HealthReport {
+        HealthReport {
+            incidents: std::mem::take(&mut self.incidents),
+            rounds_observed: self.rounds,
+            rules: self.slos.len(),
+            detectors: !self.detectors.is_empty(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AggregationMode;
+    use crate::fedselect::RoundComm;
+
+    fn rec(round: usize, eligible: usize, sim_round_s: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            completed: 10,
+            dropped: 0,
+            mode: AggregationMode::Synchronous,
+            discarded_clients: 0,
+            mean_staleness: 0.0,
+            committees: 0,
+            mean_committee_size: 0.0,
+            min_committee_size: 0,
+            comm: RoundComm::default(),
+            up_bytes: 0,
+            max_client_mem: 0,
+            wall_ms: 0.0,
+            merge_stall_ms: 0.0,
+            exec_util: 1.0,
+            sim_round_s,
+            tier_completed: vec![10],
+            tier_dropped: vec![0],
+            tier_discarded: vec![0],
+            tier_down_bytes: vec![0],
+            tier_cache_hits: vec![0],
+            tier_cache_lookups: vec![0],
+            cache_evictions: 0,
+            cache_stale_refreshes: 0,
+            deferrals: 0,
+            eligible,
+            arrivals: 0,
+            departures: 0,
+            outage_excluded: 0,
+            clients_touched: 0,
+            resident_bytes: 0,
+        }
+    }
+
+    fn slo_cfg(rules: &str) -> HealthConfig {
+        HealthConfig {
+            slos: SloRule::parse_list(rules).unwrap(),
+            ..HealthConfig::default()
+        }
+    }
+
+    #[test]
+    fn inactive_config_builds_no_monitor() {
+        assert!(HealthMonitor::new(&HealthConfig::default(), 100, 10).is_none());
+        assert!(HealthMonitor::new(&slo_cfg("eligible_frac:ge:0.8"), 100, 10).is_some());
+    }
+
+    #[test]
+    fn slo_opens_updates_and_resolves() {
+        let mut mon = HealthMonitor::new(&slo_cfg("eligible_frac:ge:0.8"), 100, 10).unwrap();
+        assert!(mon.observe_round(&rec(1, 90, 1.0)).is_empty());
+        let evs = mon.observe_round(&rec(2, 50, 1.0));
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].action, IncidentAction::Open);
+        assert_eq!(evs[0].severity, Severity::Critical);
+        assert_eq!(evs[0].rule, "slo:eligible_frac:ge:0.8");
+        assert_eq!(evs[0].observed, 0.5);
+        assert_eq!(evs[0].expected, 0.8);
+        let evs = mon.observe_round(&rec(3, 40, 1.0));
+        assert_eq!(evs[0].action, IncidentAction::Update);
+        let evs = mon.observe_round(&rec(4, 95, 1.0));
+        assert_eq!(evs[0].action, IncidentAction::Resolve);
+        let report = mon.finish();
+        assert_eq!(report.total(), 1);
+        let inc = &report.incidents[0];
+        assert_eq!(inc.opened_round, 2);
+        assert_eq!(inc.resolved_round, Some(4));
+        assert_eq!(inc.last_round, 3);
+        assert_eq!(inc.rounds, 2);
+        assert_eq!(inc.worst, 0.4); // lowest eligible_frac seen
+        assert_eq!(report.flagged_rounds(), vec![2, 3]);
+    }
+
+    #[test]
+    fn for_rounds_hysteresis_ignores_one_round_blips() {
+        let mut mon =
+            HealthMonitor::new(&slo_cfg("eligible_frac:ge:0.8:3"), 100, 10).unwrap();
+        // One- and two-round blips: streak never reaches 3.
+        assert!(mon.observe_round(&rec(1, 50, 1.0)).is_empty());
+        assert!(mon.observe_round(&rec(2, 90, 1.0)).is_empty());
+        assert!(mon.observe_round(&rec(3, 50, 1.0)).is_empty());
+        assert!(mon.observe_round(&rec(4, 50, 1.0)).is_empty());
+        assert!(mon.observe_round(&rec(5, 90, 1.0)).is_empty());
+        // Sustained breach opens on the third consecutive violation and
+        // the ledger back-dates the streak into `rounds`.
+        assert!(mon.observe_round(&rec(6, 50, 1.0)).is_empty());
+        assert!(mon.observe_round(&rec(7, 50, 1.0)).is_empty());
+        let evs = mon.observe_round(&rec(8, 50, 1.0));
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].action, IncidentAction::Open);
+        let report = mon.finish();
+        assert_eq!(report.total(), 1);
+        assert_eq!(report.incidents[0].opened_round, 8);
+        assert_eq!(report.incidents[0].rounds, 3);
+        assert!(report.incidents[0].is_open());
+        assert_eq!(report.flagged_rounds(), vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn detector_warmup_gates_incidents() {
+        let det_cfg = HealthConfig {
+            detectors: true,
+            warmup: 8,
+            ..HealthConfig::default()
+        };
+        let mut mon = HealthMonitor::new(&det_cfg, 100, 10).unwrap();
+        // A massive spike inside the warm-up window: no incident.
+        for r in 1..=4 {
+            assert!(mon.observe_round(&rec(r, 100, 10.0)).is_empty());
+        }
+        assert!(mon.observe_round(&rec(5, 100, 500.0)).is_empty());
+        assert_eq!(mon.finish().total(), 0);
+
+        // Same spike after the window fills: EWMA z fires.
+        let mut mon = HealthMonitor::new(&det_cfg, 100, 10).unwrap();
+        for r in 1..=10 {
+            assert!(mon.observe_round(&rec(r, 100, 10.0)).is_empty());
+        }
+        let evs = mon.observe_round(&rec(11, 100, 500.0));
+        assert!(evs
+            .iter()
+            .any(|e| e.action == IncidentAction::Open && e.rule == "ewma_z:sim_round_s"));
+        assert!(evs.iter().all(|e| e.severity == Severity::Warn));
+    }
+
+    #[test]
+    fn level_shift_detects_sustained_step_and_resolves() {
+        let det_cfg = HealthConfig {
+            detectors: true,
+            warmup: 8,
+            ..HealthConfig::default()
+        };
+        let mut mon = HealthMonitor::new(&det_cfg, 100, 10).unwrap();
+        for r in 1..=10 {
+            mon.observe_round(&rec(r, 100, 10.0));
+        }
+        // Eligibility halves and stays there (an outage): some detector
+        // opens, and once the EWMA/window adapt to the new level the
+        // incident resolves.
+        let mut opened = false;
+        let mut resolved = false;
+        for r in 11..=40 {
+            for e in mon.observe_round(&rec(r, 50, 10.0)) {
+                if e.series == Series::EligibleFrac {
+                    opened |= e.action == IncidentAction::Open;
+                    resolved |= e.action == IncidentAction::Resolve;
+                }
+            }
+        }
+        assert!(opened, "eligibility collapse never detected");
+        assert!(resolved, "detector never adapted to the new level");
+        let report = mon.finish();
+        assert!(report.total() >= 1);
+        // Constant series elsewhere: no incidents outside eligibility.
+        assert!(report
+            .incidents
+            .iter()
+            .all(|i| i.series == Series::EligibleFrac));
+    }
+
+    #[test]
+    fn absent_series_resets_slo_streaks() {
+        // min_committee_size is absent when no committee was keyed; the
+        // rule must not fire on absent rounds.
+        let mut mon =
+            HealthMonitor::new(&slo_cfg("min_committee_size:ge:3"), 100, 10).unwrap();
+        for r in 1..=5 {
+            assert!(mon.observe_round(&rec(r, 100, 1.0)).is_empty());
+        }
+        assert_eq!(mon.finish().total(), 0);
+    }
+
+    #[test]
+    fn quiet_constant_fleet_produces_zero_incidents() {
+        let cfg = HealthConfig {
+            slos: SloRule::parse_list("eligible_frac:ge:0.5,sim_round_s:le:100").unwrap(),
+            detectors: true,
+            warmup: 8,
+            ..HealthConfig::default()
+        };
+        let mut mon = HealthMonitor::new(&cfg, 100, 10).unwrap();
+        for r in 1..=50 {
+            // Mild noise well inside every band.
+            let jitter = 1.0 + 0.01 * ((r % 3) as f64);
+            assert!(mon.observe_round(&rec(r, 98 + (r % 3), jitter)).is_empty());
+        }
+        let report = mon.finish();
+        assert_eq!(report.total(), 0);
+        assert_eq!(report.rounds_observed, 50);
+    }
+
+    #[test]
+    fn rollup_folds_reports() {
+        let mut a = HealthReport::default();
+        a.incidents.push(Incident {
+            id: 0,
+            severity: Severity::Critical,
+            rule: "slo:x".into(),
+            series: Series::SimRoundS,
+            opened_round: 1,
+            resolved_round: None,
+            last_round: 2,
+            rounds: 2,
+            observed: 1.0,
+            expected: 0.5,
+            worst: 1.5,
+        });
+        let b = HealthReport::default();
+        let roll = HealthRollup::fold([&a, &b].into_iter());
+        assert_eq!(roll.incidents, 1);
+        assert_eq!(roll.critical, 1);
+        assert_eq!(roll.open, 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut cfg = HealthConfig {
+            detectors: true,
+            ..HealthConfig::default()
+        };
+        cfg.warmup = 0;
+        assert!(cfg.validate().is_err());
+        cfg.warmup = 8;
+        assert!(cfg.validate().is_ok());
+        cfg.z_thresh = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.z_thresh = 4.0;
+        // host-clock series parse but cannot back an SLO: the incident
+        // ledger must stay deterministic
+        cfg.slos = SloRule::parse_list("merge_stall_ms:le:100").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.slos = SloRule::parse_list("sim_round_s:le:100").unwrap();
+        assert!(cfg.validate().is_ok());
+    }
+}

@@ -32,12 +32,19 @@
 //! threads, and that two same-seed JSONL traces are byte-identical after
 //! stripping `wall_ms` fields ([`trace::diff_traces`]).
 
+pub mod health;
 pub mod log;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
+pub use health::{
+    HealthConfig, HealthMonitor, HealthReport, HealthRollup, Incident, IncidentAction,
+    IncidentEvent, Severity,
+};
 pub use log::{set_level, LogLevel};
 pub use registry::{Histogram, MetricsRegistry};
+pub use slo::{Series, SloOp, SloRule};
 pub use trace::{
     diff_traces, validate_trace_line, ChromeRecorder, JsonlRecorder, TRACE_SCHEMA,
 };
@@ -202,6 +209,23 @@ pub enum TraceEvent {
         examples: usize,
         wall_ms: f64,
     },
+    /// Health-monitor incident lifecycle step (`fedselect-trace-v1`,
+    /// additive). Emitted after `round_close`, in deterministic rule/series
+    /// order; all fields are sim-side for sim-side rules, so same-seed
+    /// incident ledgers are byte-identical (and `trace_report --diff`
+    /// compares them as content, unlike `log` lines).
+    Incident {
+        ns: u32,
+        round: usize,
+        id: u32,
+        action: IncidentAction,
+        severity: Severity,
+        rule: String,
+        series: String,
+        observed: f64,
+        expected: f64,
+        sim_s: f64,
+    },
     /// Multi-tenant arbiter tick: which job namespaces were granted.
     Tick { tick: u64, granted: Vec<u32> },
     /// A leveled log line routed through the recorder sink.
@@ -221,6 +245,7 @@ impl TraceEvent {
             TraceEvent::Client { .. } => "client",
             TraceEvent::RoundClose { .. } => "round_close",
             TraceEvent::Eval { .. } => "eval",
+            TraceEvent::Incident { .. } => "incident",
             TraceEvent::Tick { .. } => "tick",
             TraceEvent::Log { .. } => "log",
             TraceEvent::RunEnd { .. } => "run_end",
@@ -296,6 +321,10 @@ pub struct ObsConfig {
     pub trace_out: Option<String>,
     /// Trace encoding (`--trace-format`).
     pub trace_format: TraceFormat,
+    /// Health monitor: SLO rules (`--slo`) + anomaly detectors
+    /// (`--detect`, `--detect-warmup`). The default is fully off — the
+    /// trainer then builds no [`HealthMonitor`] at all.
+    pub health: HealthConfig,
 }
 
 impl Default for ObsConfig {
@@ -304,6 +333,7 @@ impl Default for ObsConfig {
             log_level: LogLevel::Info,
             trace_out: None,
             trace_format: TraceFormat::Jsonl,
+            health: HealthConfig::default(),
         }
     }
 }

@@ -67,6 +67,36 @@ impl Histogram {
         }
     }
 
+    /// Quantile estimate by linear interpolation within the fixed
+    /// buckets (Prometheus `histogram_quantile` semantics): the target
+    /// rank `q × n` is located in the cumulative bucket counts, then
+    /// placed proportionally between that bucket's bounds. The first
+    /// bucket interpolates from 0, and ranks landing in the overflow
+    /// bucket clamp to the last bound (there is no upper edge to
+    /// interpolate toward). Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.n as f64;
+        let mut cum = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let prev = cum;
+            cum += c as f64;
+            if cum >= rank && c > 0 {
+                if i >= self.bounds.len() {
+                    // Overflow bucket: clamp to the last finite bound.
+                    return self.bounds.last().copied().unwrap_or(self.mean());
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = ((rank - prev) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+        }
+        self.bounds.last().copied().unwrap_or(self.mean())
+    }
+
     /// Bucket upper bounds (the overflow bucket is implicit).
     pub fn bounds(&self) -> &[f64] {
         &self.bounds
@@ -95,12 +125,18 @@ impl MetricsRegistry {
         Self::default()
     }
 
+    // Mutators do one `get_mut` lookup on the hot (existing-key) path —
+    // never the old `contains_key` + `get_mut` double walk — and fall
+    // back to `entry` only on first use: `entry` must own its key, so
+    // taking it unconditionally would allocate a `String` per update.
+
     /// Add `v` to the counter `name` (created at 0 on first use).
     pub fn counter_add(&mut self, name: &str, v: u64) {
-        if !self.counters.contains_key(name) {
-            self.counters.insert(name.to_string(), 0);
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += v;
+            return;
         }
-        *self.counters.get_mut(name).expect("just inserted") += v;
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
     }
 
     /// Current value of counter `name` (0 when absent).
@@ -115,18 +151,20 @@ impl MetricsRegistry {
 
     /// Set gauge `name` to `v`.
     pub fn gauge_set(&mut self, name: &str, v: f64) {
-        if !self.gauges.contains_key(name) {
-            self.gauges.insert(name.to_string(), 0.0);
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = v;
+            return;
         }
-        *self.gauges.get_mut(name).expect("just inserted") = v;
+        *self.gauges.entry(name.to_string()).or_insert(0.0) = v;
     }
 
     /// Add `v` to gauge `name` (created at 0 on first use).
     pub fn gauge_add(&mut self, name: &str, v: f64) {
-        if !self.gauges.contains_key(name) {
-            self.gauges.insert(name.to_string(), 0.0);
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g += v;
+            return;
         }
-        *self.gauges.get_mut(name).expect("just inserted") += v;
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
     }
 
     /// Current value of gauge `name` (0 when absent).
@@ -142,13 +180,15 @@ impl MetricsRegistry {
     /// Add `v` at index `idx` of counter vector `name`, growing the vector
     /// with zeros as needed (index = tier or job ordinal).
     pub fn counter_vec_add(&mut self, name: &str, idx: usize, v: u64) {
-        if !self.counter_vecs.contains_key(name) {
-            self.counter_vecs.insert(name.to_string(), Vec::new());
+        if let Some(vec) = self.counter_vecs.get_mut(name) {
+            if vec.len() <= idx {
+                vec.resize(idx + 1, 0);
+            }
+            vec[idx] += v;
+            return;
         }
-        let vec = self.counter_vecs.get_mut(name).expect("just inserted");
-        if vec.len() <= idx {
-            vec.resize(idx + 1, 0);
-        }
+        let vec = self.counter_vecs.entry(name.to_string()).or_default();
+        vec.resize(idx + 1, 0);
         vec[idx] += v;
     }
 
@@ -159,13 +199,15 @@ impl MetricsRegistry {
 
     /// Add `v` at index `idx` of gauge vector `name`.
     pub fn gauge_vec_add(&mut self, name: &str, idx: usize, v: f64) {
-        if !self.gauge_vecs.contains_key(name) {
-            self.gauge_vecs.insert(name.to_string(), Vec::new());
+        if let Some(vec) = self.gauge_vecs.get_mut(name) {
+            if vec.len() <= idx {
+                vec.resize(idx + 1, 0.0);
+            }
+            vec[idx] += v;
+            return;
         }
-        let vec = self.gauge_vecs.get_mut(name).expect("just inserted");
-        if vec.len() <= idx {
-            vec.resize(idx + 1, 0.0);
-        }
+        let vec = self.gauge_vecs.entry(name.to_string()).or_default();
+        vec.resize(idx + 1, 0.0);
         vec[idx] += v;
     }
 
@@ -186,11 +228,14 @@ impl MetricsRegistry {
     /// Count one observation into histogram `name`, creating it with
     /// [`DEFAULT_HIST_BOUNDS`] when absent.
     pub fn observe(&mut self, name: &str, v: f64) {
-        if !self.hists.contains_key(name) {
-            self.hists
-                .insert(name.to_string(), Histogram::new(&DEFAULT_HIST_BOUNDS));
+        if let Some(h) = self.hists.get_mut(name) {
+            h.observe(v);
+            return;
         }
-        self.hists.get_mut(name).expect("just inserted").observe(v);
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(&DEFAULT_HIST_BOUNDS))
+            .observe(v);
     }
 
     /// Histogram `name`, if registered.
@@ -247,6 +292,29 @@ mod tests {
         assert_eq!(h.bucket_counts(), &[2, 1, 1]);
         assert_eq!(h.count(), 4);
         assert!((h.mean() - 56.5 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let mut h = Histogram::new(&[1.0, 2.0, 4.0]);
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        for _ in 0..10 {
+            h.observe(0.5); // 10 obs in (0, 1]
+        }
+        for _ in 0..10 {
+            h.observe(1.5); // 10 obs in (1, 2]
+        }
+        // p50: rank 10 lands exactly at the end of the first bucket.
+        assert!((h.quantile(0.5) - 1.0).abs() < 1e-12);
+        // p75: rank 15 is halfway through the (1, 2] bucket.
+        assert!((h.quantile(0.75) - 1.5).abs() < 1e-12);
+        // p100 clamps to the top of the last occupied bucket.
+        assert!((h.quantile(1.0) - 2.0).abs() < 1e-12);
+        // Overflow observations clamp to the last bound.
+        h.observe(100.0);
+        assert!((h.quantile(1.0) - 4.0).abs() < 1e-12);
+        // q is clamped into [0, 1].
+        assert!((h.quantile(-1.0) - h.quantile(0.0)).abs() < 1e-12);
     }
 
     #[test]

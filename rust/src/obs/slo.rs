@@ -1,0 +1,322 @@
+//! Declarative SLO rules over per-round health series.
+//!
+//! A rule states a *requirement* on one sim-side series of the per-round
+//! ledger (`KEY:OP:VALUE[:FOR_ROUNDS]`, e.g. `eligible_frac:ge:0.8:3`):
+//! the round is *in violation* when the requirement does not hold, and an
+//! incident opens only after `FOR_ROUNDS` consecutive violating rounds
+//! (hysteresis, default 1). Host-wall series (`merge_stall_ms`,
+//! `exec_util`) parse but are rejected by
+//! [`HealthConfig::validate`](crate::obs::HealthConfig::validate) —
+//! same-seed ledger byte-identity only holds for sim-side rules (see
+//! [`Series::sim_side`]).
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// A per-round health series an SLO rule or anomaly detector can watch.
+///
+/// All values are derived from [`crate::coordinator::RoundRecord`] fields;
+/// fractions are normalized against the fleet size (`eligible_frac`) or
+/// the configured cohort (the other `*_frac` series). A series can be
+/// *absent* for a round (e.g. `cache_hit_rate` with no cache lookups,
+/// `min_committee_size` when no committee was keyed) — absent samples
+/// reset SLO violation streaks and are skipped by detectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Series {
+    /// Simulated round duration, seconds (`sim_round_s`).
+    SimRoundS,
+    /// Eligible clients / fleet size.
+    EligibleFrac,
+    /// Merged updates / configured cohort.
+    CompletedFrac,
+    /// Post-fetch dropouts / configured cohort.
+    DroppedFrac,
+    /// Discarded (computed-but-never-merged) updates / configured cohort.
+    DiscardedFrac,
+    /// Committee-defer pushbacks / configured cohort.
+    DeferredFrac,
+    /// Client-cache piece hits / lookups this round (absent when no
+    /// lookups happened).
+    CacheHitRate,
+    /// Mean rounds-of-staleness over merged updates.
+    MeanStaleness,
+    /// Smallest keyed-committee submitter count (absent when no committee
+    /// was keyed this round).
+    MinCommitteeSize,
+    /// Host wall time serialized in the merge (**non-deterministic**).
+    MergeStallMs,
+    /// Executor pool utilization in [0, 1] (**non-deterministic**).
+    ExecUtil,
+}
+
+/// All series, in declaration order (error messages, detector loops).
+pub const ALL_SERIES: [Series; 11] = [
+    Series::SimRoundS,
+    Series::EligibleFrac,
+    Series::CompletedFrac,
+    Series::DroppedFrac,
+    Series::DiscardedFrac,
+    Series::DeferredFrac,
+    Series::CacheHitRate,
+    Series::MeanStaleness,
+    Series::MinCommitteeSize,
+    Series::MergeStallMs,
+    Series::ExecUtil,
+];
+
+impl Series {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Series::SimRoundS => "sim_round_s",
+            Series::EligibleFrac => "eligible_frac",
+            Series::CompletedFrac => "completed_frac",
+            Series::DroppedFrac => "dropped_frac",
+            Series::DiscardedFrac => "discarded_frac",
+            Series::DeferredFrac => "deferred_frac",
+            Series::CacheHitRate => "cache_hit_rate",
+            Series::MeanStaleness => "mean_staleness",
+            Series::MinCommitteeSize => "min_committee_size",
+            Series::MergeStallMs => "merge_stall_ms",
+            Series::ExecUtil => "exec_util",
+        }
+    }
+
+    /// Whether the series is computed purely from sim-clock quantities.
+    /// Same-seed incident-ledger byte-identity only covers sim-side
+    /// series; detectors skip host-wall ones entirely.
+    pub fn sim_side(&self) -> bool {
+        !matches!(self, Series::MergeStallMs | Series::ExecUtil)
+    }
+
+    pub fn parse(s: &str) -> Result<Series> {
+        for series in ALL_SERIES {
+            if series.name() == s {
+                return Ok(series);
+            }
+        }
+        let names: Vec<&str> = ALL_SERIES.iter().map(|s| s.name()).collect();
+        Err(Error::Config(format!(
+            "unknown SLO series {s:?}; one of: {}",
+            names.join(", ")
+        )))
+    }
+}
+
+impl fmt::Display for Series {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Comparison the *requirement* asserts (violation = requirement false).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl SloOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloOp::Lt => "lt",
+            SloOp::Le => "le",
+            SloOp::Gt => "gt",
+            SloOp::Ge => "ge",
+        }
+    }
+
+    fn parse(s: &str) -> Result<SloOp> {
+        match s {
+            "lt" | "<" => Ok(SloOp::Lt),
+            "le" | "<=" => Ok(SloOp::Le),
+            "gt" | ">" => Ok(SloOp::Gt),
+            "ge" | ">=" => Ok(SloOp::Ge),
+            _ => Err(Error::Config(format!(
+                "unknown SLO op {s:?}; one of: lt, le, gt, ge"
+            ))),
+        }
+    }
+
+    pub fn holds(&self, observed: f64, threshold: f64) -> bool {
+        match self {
+            SloOp::Lt => observed < threshold,
+            SloOp::Le => observed <= threshold,
+            SloOp::Gt => observed > threshold,
+            SloOp::Ge => observed >= threshold,
+        }
+    }
+}
+
+impl fmt::Display for SloOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One declarative threshold rule: `SERIES:OP:VALUE[:FOR_ROUNDS]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloRule {
+    pub series: Series,
+    pub op: SloOp,
+    pub value: f64,
+    /// Consecutive violating rounds required before an incident opens
+    /// (hysteresis); a shorter blip never opens one. Always ≥ 1.
+    pub for_rounds: usize,
+}
+
+impl SloRule {
+    pub fn new(series: Series, op: SloOp, value: f64) -> SloRule {
+        SloRule {
+            series,
+            op,
+            value,
+            for_rounds: 1,
+        }
+    }
+
+    pub fn for_rounds(mut self, rounds: usize) -> SloRule {
+        self.for_rounds = rounds.max(1);
+        self
+    }
+
+    /// Parse one `KEY:OP:VALUE[:FOR_ROUNDS]` rule.
+    pub fn parse(s: &str) -> Result<SloRule> {
+        let bad = |m: &str| Error::Config(format!("bad --slo rule {s:?}: {m}"));
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 && parts.len() != 4 {
+            return Err(bad("want KEY:OP:VALUE[:FOR_ROUNDS]"));
+        }
+        let series = Series::parse(parts[0])?;
+        let op = SloOp::parse(parts[1])?;
+        let value: f64 = parts[2]
+            .parse()
+            .map_err(|_| bad("VALUE must be a number"))?;
+        if !value.is_finite() {
+            return Err(bad("VALUE must be finite"));
+        }
+        let for_rounds = match parts.get(3) {
+            None => 1,
+            Some(fr) => {
+                let n: usize = fr
+                    .parse()
+                    .map_err(|_| bad("FOR_ROUNDS must be a positive integer"))?;
+                if n == 0 {
+                    return Err(bad("FOR_ROUNDS must be >= 1"));
+                }
+                n
+            }
+        };
+        Ok(SloRule {
+            series,
+            op,
+            value,
+            for_rounds,
+        })
+    }
+
+    /// Parse a comma-separated rule list (the `--slo` flag takes one
+    /// occurrence; repeated flags would overwrite each other).
+    pub fn parse_list(s: &str) -> Result<Vec<SloRule>> {
+        let mut rules = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            rules.push(SloRule::parse(part)?);
+        }
+        if rules.is_empty() {
+            return Err(Error::Config(format!("bad --slo {s:?}: no rules")));
+        }
+        Ok(rules)
+    }
+
+    /// True when this round's sample *violates* the requirement.
+    pub fn violated(&self, observed: f64) -> bool {
+        !self.op.holds(observed, self.value)
+    }
+
+    /// Canonical rule label used in incident ledgers and trace events.
+    pub fn label(&self) -> String {
+        if self.for_rounds > 1 {
+            format!(
+                "slo:{}:{}:{}:{}",
+                self.series, self.op, self.value, self.for_rounds
+            )
+        } else {
+            format!("slo:{}:{}:{}", self.series, self.op, self.value)
+        }
+    }
+}
+
+impl fmt::Display for SloRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_and_short_rules() {
+        let r = SloRule::parse("eligible_frac:ge:0.8:3").unwrap();
+        assert_eq!(r.series, Series::EligibleFrac);
+        assert_eq!(r.op, SloOp::Ge);
+        assert_eq!(r.value, 0.8);
+        assert_eq!(r.for_rounds, 3);
+
+        let r = SloRule::parse("sim_round_s:le:120").unwrap();
+        assert_eq!(r.series, Series::SimRoundS);
+        assert_eq!(r.for_rounds, 1);
+        assert_eq!(r.label(), "slo:sim_round_s:le:120");
+    }
+
+    #[test]
+    fn parses_comma_separated_lists() {
+        let rules =
+            SloRule::parse_list("eligible_frac:ge:0.8, dropped_frac:le:0.3:2").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[1].series, Series::DroppedFrac);
+        assert_eq!(rules[1].for_rounds, 2);
+    }
+
+    #[test]
+    fn rejects_malformed_rules() {
+        assert!(SloRule::parse("eligible_frac").is_err());
+        assert!(SloRule::parse("bogus_series:ge:0.5").is_err());
+        assert!(SloRule::parse("eligible_frac:between:0.5").is_err());
+        assert!(SloRule::parse("eligible_frac:ge:lots").is_err());
+        assert!(SloRule::parse("eligible_frac:ge:0.5:0").is_err());
+        assert!(SloRule::parse("eligible_frac:ge:inf").is_err());
+        assert!(SloRule::parse_list(" , ").is_err());
+    }
+
+    #[test]
+    fn violation_is_requirement_negated() {
+        let r = SloRule::parse("eligible_frac:ge:0.8").unwrap();
+        assert!(!r.violated(0.8));
+        assert!(!r.violated(0.9));
+        assert!(r.violated(0.79));
+
+        let r = SloRule::parse("sim_round_s:lt:100").unwrap();
+        assert!(!r.violated(99.0));
+        assert!(r.violated(100.0));
+    }
+
+    #[test]
+    fn sim_side_split_matches_docs() {
+        assert!(Series::SimRoundS.sim_side());
+        assert!(Series::CacheHitRate.sim_side());
+        assert!(!Series::MergeStallMs.sim_side());
+        assert!(!Series::ExecUtil.sim_side());
+        // Every series name round-trips through the parser.
+        for s in ALL_SERIES {
+            assert_eq!(Series::parse(s.name()).unwrap(), s);
+        }
+    }
+}

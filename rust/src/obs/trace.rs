@@ -5,9 +5,10 @@
 //! Line 1 is the header `{"schema":"fedselect-trace-v1","t":"header"}`;
 //! every following line is one event object whose `"t"` field names the
 //! [`TraceEvent`] variant (`run_start`, `round_start`, `span`, `task`,
-//! `client`, `round_close`, `eval`, `tick`, `log`, `run_end`; `task` is a
-//! v1-additive family — one line per surviving cohort slot's fetch→train
-//! task under the pipelined executor). Keys are emitted in
+//! `client`, `round_close`, `eval`, `incident`, `tick`, `log`, `run_end`;
+//! `task` and `incident` are v1-additive families — per-slot executor
+//! tasks, and health-monitor incident open/update/resolve steps). Keys
+//! are emitted in
 //! sorted order and numbers use the crate's deterministic formatter, so
 //! the sim-clock content of two same-seed traces is byte-identical; the
 //! only nondeterministic fields are named `wall_ms`, which
@@ -169,6 +170,30 @@ pub fn encode_event(ev: &TraceEvent) -> Json {
             ("examples", uint(*examples as u64)),
             ("wall_ms", num(*wall_ms)),
         ]),
+        TraceEvent::Incident {
+            ns,
+            round,
+            id,
+            action,
+            severity,
+            rule,
+            series,
+            observed,
+            expected,
+            sim_s,
+        } => obj(vec![
+            ("t", tag),
+            ("ns", uint(*ns as u64)),
+            ("round", uint(*round as u64)),
+            ("id", uint(*id as u64)),
+            ("action", Json::Str(action.name().to_string())),
+            ("severity", Json::Str(severity.name().to_string())),
+            ("rule", Json::Str(rule.clone())),
+            ("series", Json::Str(series.clone())),
+            ("observed", num(*observed)),
+            ("expected", num(*expected)),
+            ("sim_s", num(*sim_s)),
+        ]),
         TraceEvent::Tick { tick, granted } => obj(vec![
             ("t", tag),
             ("tick", uint(*tick)),
@@ -268,7 +293,8 @@ impl Recorder for ChromeRecorder {
             | TraceEvent::Task { ns, round, .. }
             | TraceEvent::Client { ns, round, .. }
             | TraceEvent::RoundClose { ns, round, .. }
-            | TraceEvent::Eval { ns, round, .. } => (*ns, *round),
+            | TraceEvent::Eval { ns, round, .. }
+            | TraceEvent::Incident { ns, round, .. } => (*ns, *round),
             TraceEvent::Tick { .. } | TraceEvent::Log { .. } => (0, 0),
         };
         let record = match ev {
@@ -348,6 +374,10 @@ fn required_keys(tag: &str) -> Option<&'static [&'static str]> {
             "resident_bytes",
         ],
         "eval" => &["ns", "round", "loss", "metric", "examples", "wall_ms"],
+        "incident" => &[
+            "ns", "round", "id", "action", "severity", "rule", "series", "observed",
+            "expected", "sim_s",
+        ],
         "tick" => &["tick", "granted"],
         "log" => &["level", "msg"],
         "run_end" => &["ns", "rounds", "sim_total_s"],
@@ -494,6 +524,18 @@ mod tests {
                 clients_touched: 6,
                 resident_bytes: 512,
             },
+            TraceEvent::Incident {
+                ns: 0,
+                round: 1,
+                id: 0,
+                action: crate::obs::IncidentAction::Open,
+                severity: crate::obs::Severity::Critical,
+                rule: "slo:eligible_frac:ge:0.8".to_string(),
+                series: "eligible_frac".to_string(),
+                observed: 0.5,
+                expected: 0.8,
+                sim_s: 13.0,
+            },
             TraceEvent::Log { level: LogLevel::Info, msg: "hello".to_string() },
             TraceEvent::RunEnd { ns: 0, rounds: 2, sim_total_s: 26.0 },
         ]
@@ -539,6 +581,18 @@ mod tests {
         assert!(msg.contains("divergence"));
         let d = format!("{a}{{\"t\":\"run_end\",\"ns\":0,\"rounds\":1,\"sim_total_s\":2.0}}\n");
         assert!(diff_traces(a, &d).unwrap().contains("length"));
+    }
+
+    #[test]
+    fn diff_treats_incident_lines_as_content_not_log_noise() {
+        let inc = "{\"t\":\"incident\",\"ns\":0,\"round\":2,\"id\":0,\"action\":\"open\",\"severity\":\"critical\",\"rule\":\"slo:eligible_frac:ge:0.8\",\"series\":\"eligible_frac\",\"observed\":0.5,\"expected\":0.8,\"sim_s\":26.0}\n";
+        assert_eq!(diff_traces(inc, inc), None);
+        let mutated = inc.replace("\"observed\":0.5", "\"observed\":0.25");
+        let msg = diff_traces(inc, &mutated).expect("incident divergence must be flagged");
+        assert!(msg.contains("divergence"));
+        // Dropping the incident line entirely is a length divergence —
+        // unlike `log` lines, incidents are never skipped.
+        assert!(diff_traces(inc, "").unwrap().contains("length"));
     }
 
     #[test]

@@ -48,7 +48,7 @@ use std::sync::Arc;
 use crate::cache::{CacheShare, FleetCaches};
 use crate::coordinator::{EvalRecord, RoundRecord, TrainReport, Trainer};
 use crate::error::{Error, Result};
-use crate::obs::{NullRecorder, Recorder, TraceEvent};
+use crate::obs::{HealthRollup, NullRecorder, Recorder, TraceEvent};
 use crate::scheduler::ROUND_OVERHEAD_S;
 
 /// One tenant's live state inside the coordinator.
@@ -95,6 +95,15 @@ pub struct MultiReport {
     pub fleet_utilization: f64,
     /// Tier names of the shared fleet, for reporting.
     pub tier_names: Vec<String>,
+}
+
+impl MultiReport {
+    /// Fleet-wide health rollup across every job's incident ledger. A
+    /// method (not a stored field) so it is always consistent with the
+    /// per-job reports.
+    pub fn health_rollup(&self) -> HealthRollup {
+        HealthRollup::fold(self.reports.iter().map(|r| &r.health))
+    }
 }
 
 /// N concurrent jobs over one shared fleet.

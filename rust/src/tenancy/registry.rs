@@ -54,6 +54,14 @@ impl JobSpec {
         self.priority = priority;
         self
     }
+
+    /// Attach per-job SLO rules — each job's trainer runs its own health
+    /// monitor over its own round stream, so incident ledgers stay
+    /// per-tenant.
+    pub fn with_slos(mut self, slos: Vec<crate::obs::SloRule>) -> Self {
+        self.cfg.obs.health.slos = slos;
+        self
+    }
 }
 
 /// A validated set of jobs plus the fleet-wide cache-share mode.

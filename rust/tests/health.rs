@@ -1,0 +1,165 @@
+//! Fleet-health-monitor contracts, end to end through the trainer:
+//!
+//! 1. the monitor is **trajectory-neutral**: a run with SLOs + detectors
+//!    enabled produces byte-identical model bits and round ledgers
+//!    (host-clock fields excluded) to the monitor-off run — and with the
+//!    monitor off, the report's ledger is exactly the default;
+//! 2. two same-seed monitored runs emit byte-identical incident streams
+//!    (`diff_traces` → clean), and a mutated incident field is flagged —
+//!    incident lines are sim-time *content*, not log noise;
+//! 3. the end-of-run [`HealthReport`] agrees with the trace's incident
+//!    lifecycle events.
+
+use fedselect::config::{DatasetConfig, TrainConfig};
+use fedselect::coordinator::{RoundRecord, Trainer};
+use fedselect::data::bow::BowConfig;
+use fedselect::metrics::keys;
+use fedselect::obs::trace::diff_traces;
+use fedselect::obs::SloRule;
+use fedselect::scheduler::{FleetKind, SchedPolicy};
+
+/// Same tiered workload as `tests/obs.rs`: hazards, cache traffic,
+/// staleness-fair cycling — plenty of series for the monitor to watch.
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::logreg_default(512, 64);
+    cfg.dataset = DatasetConfig::Bow(BowConfig::new(512, 50).with_clients(24, 4, 8));
+    cfg.rounds = 6;
+    cfg.cohort = 6;
+    cfg.eval.every = 3;
+    cfg.eval.max_examples = 128;
+    cfg.fleet = FleetKind::Tiered3;
+    cfg.sched_policy = SchedPolicy::StalenessFair;
+    cfg.dropout_rate = 0.3;
+    cfg.cache = true;
+    cfg.seed = seed;
+    cfg
+}
+
+/// An SLO set the 30%-hazard workload violates from round one (dropped
+/// ceiling) alongside one it satisfies (round-time ceiling), plus the
+/// anomaly detectors.
+fn monitored_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = base_cfg(seed);
+    cfg.obs.health.slos =
+        SloRule::parse_list("dropped_frac:le:0.05,sim_round_s:le:1e9").unwrap();
+    cfg.obs.health.detectors = true;
+    cfg.obs.health.warmup = 3;
+    cfg
+}
+
+fn tmp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("fedselect_health_{name}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .to_string()
+}
+
+/// A round ledger with its host-clock fields zeroed: everything left must
+/// be byte-identical across same-seed runs.
+fn sim_only(rec: &RoundRecord) -> String {
+    let mut r = rec.clone();
+    r.merge_stall_ms = 0.0;
+    r.exec_util = 0.0;
+    format!("{r:?}")
+}
+
+#[test]
+fn monitor_is_trajectory_neutral_and_off_means_off() {
+    let mut t_off = Trainer::new(base_cfg(4242)).unwrap();
+    let mut t_on = Trainer::new(monitored_cfg(4242)).unwrap();
+    let off = t_off.run().unwrap();
+    let on = t_on.run().unwrap();
+
+    // off = fully off: no monitor ran, the report carries the default
+    assert_eq!(off.health.total(), 0);
+    assert_eq!(off.health.rules, 0);
+    assert!(!off.health.detectors);
+    assert_eq!(t_off.metrics().counter(keys::HEALTH_INCIDENTS), 0);
+
+    // on: the dropped_frac ceiling burns, but the trajectory is untouched
+    assert!(on.health.total() > 0, "30% hazard must violate dropped_frac:le:0.05");
+    assert!(on.health.critical_count() > 0, "SLO incidents are critical");
+    assert_eq!(on.health.rules, 2);
+    assert!(on.health.detectors);
+    assert!(t_on.metrics().counter(keys::HEALTH_INCIDENTS) > 0);
+
+    assert_eq!(off.rounds.len(), on.rounds.len());
+    for (a, b) in off.rounds.iter().zip(on.rounds.iter()) {
+        assert_eq!(sim_only(a), sim_only(b), "round {} diverged", a.round);
+    }
+    for (a, b) in off.evals.iter().zip(on.evals.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "eval {}", a.round);
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits(), "eval {}", a.round);
+    }
+    // model bits
+    for (sa, sb) in t_off.store().segments.iter().zip(t_on.store().segments.iter()) {
+        for (i, (x, y)) in sa.data.iter().zip(sb.data.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "segment {} diverges at {i}", sa.name);
+        }
+    }
+}
+
+#[test]
+fn same_seed_incident_ledgers_are_byte_identical_and_mutations_flagged() {
+    let (path_a, path_b) = (tmp_path("ledger_a"), tmp_path("ledger_b"));
+    let mut reports = Vec::new();
+    for path in [&path_a, &path_b] {
+        let mut cfg = monitored_cfg(1717);
+        cfg.obs.trace_out = Some(path.clone());
+        let mut tr = Trainer::new(cfg).unwrap();
+        reports.push(tr.run().unwrap());
+    }
+    assert_eq!(reports[0].health, reports[1].health, "in-memory ledgers agree");
+    assert!(reports[0].health.total() > 0, "workload must open incidents");
+
+    let a = std::fs::read_to_string(&path_a).unwrap();
+    let b = std::fs::read_to_string(&path_b).unwrap();
+    let opens = a
+        .lines()
+        .filter(|l| l.contains("\"t\":\"incident\"") && l.contains("\"action\":\"open\""))
+        .count();
+    assert_eq!(opens, reports[0].health.total(), "one open line per ledger incident");
+    assert!(diff_traces(&a, &b).is_none(), "same-seed incident streams diverged");
+
+    // incident lines are content: mutate one observed value → flagged
+    let needle = "\"t\":\"incident\"";
+    let line_start = b.find(needle).expect("incident line present");
+    let obs_pos = b[line_start..].find("\"observed\":").unwrap() + line_start + 11;
+    let mut mutated = b.clone();
+    mutated.insert(obs_pos, '9');
+    let msg = diff_traces(&a, &mutated).expect("mutated incident must be flagged");
+    assert!(msg.contains("line"), "diff names the diverging line: {msg}");
+
+    std::fs::remove_file(&path_a).unwrap();
+    std::fs::remove_file(&path_b).unwrap();
+}
+
+#[test]
+fn trace_lifecycle_agrees_with_the_final_report() {
+    let path = tmp_path("lifecycle");
+    let mut cfg = monitored_cfg(2525);
+    cfg.obs.trace_out = Some(path.clone());
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr.run().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let count = |frag: &str| {
+        text.lines()
+            .filter(|l| l.contains("\"t\":\"incident\"") && l.contains(frag))
+            .count()
+    };
+    assert_eq!(count("\"action\":\"open\""), report.health.total());
+    let resolved = report
+        .health
+        .incidents
+        .iter()
+        .filter(|i| i.resolved_round.is_some())
+        .count();
+    assert_eq!(count("\"action\":\"resolve\""), resolved);
+    assert_eq!(
+        tr.metrics().counter(keys::HEALTH_RESOLVED) as usize,
+        resolved,
+        "registry resolve counter tracks the ledger"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
